@@ -1,0 +1,64 @@
+//! Production-cluster analyses that need no PJRT: failure-trace survival
+//! analysis (Fig. 3), fleet overhead breakdown (Fig. 4), and the
+//! scalability projection (Fig. 13).
+//!
+//!     cargo run --release --example cluster_sim
+
+use anyhow::Result;
+
+use cpr::analysis::{fit_survival, hazard_curve, scalability_sweep, FailureModel};
+use cpr::config::preset;
+use cpr::failure::NodeHazard;
+use cpr::sim::{simulate_fleet, FleetSimConfig};
+use cpr::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let mut rng = Rng::new(2026);
+
+    // ---- Fig. 3: survival + hazard of 20k synthetic jobs ----
+    println!("== Fig. 3 — failure-trace analysis (20k jobs) ==");
+    let hazard = NodeHazard::default();
+    for nodes in [16, 32, 64] {
+        let ttfs = hazard.fleet_ttfs(&mut rng, 20_000, nodes, 500.0);
+        let fit = fit_survival(&ttfs, 120.0, 48);
+        println!("nodes={nodes:<3} MTBF={:>5.1} h  median={:>5.1} h  \
+                  gamma(k={:.2}, θ={:.1})  fit RMSE={:.1}%",
+                 fit.mtbf_h, fit.median_ttf_h, fit.shape, fit.scale,
+                 100.0 * fit.rmse);
+    }
+    let ttfs = hazard.fleet_ttfs(&mut rng, 20_000, 16, 500.0);
+    let hc = hazard_curve(&ttfs, 60.0, 12);
+    println!("hazard (failures/h among survivors):");
+    for (t, h) in hc {
+        println!("  t={t:>5.1} h   {:.4}", h);
+    }
+
+    // ---- Fig. 4: fleet overhead breakdown ----
+    println!("\n== Fig. 4 — checkpoint overhead breakdown (17k jobs) ==");
+    let fleet = simulate_fleet(&mut rng, &FleetSimConfig::default());
+    println!("mean overhead {:.1}% | machine-years wasted {:.0}",
+             100.0 * fleet.mean_overhead_frac, fleet.machine_years_wasted);
+    println!("{:>5} {:>8} {:>8} {:>8} {:>10} {:>8}",
+             "pct", "save", "load", "lost", "reschedule", "total");
+    for (p, s, l, lost, res, tot) in &fleet.breakdown {
+        println!("{:>4.0}% {:>7.1}% {:>7.1}% {:>7.1}% {:>9.1}% {:>7.1}%",
+                 p, 100.0 * s, 100.0 * l, 100.0 * lost, 100.0 * res,
+                 100.0 * tot);
+    }
+
+    // ---- Fig. 13: scalability projection ----
+    println!("\n== Fig. 13 — overhead vs. cluster size ==");
+    let base = preset("mini")?.cluster;
+    for (name, model) in [("linear-MTBF", FailureModel::LinearMtbf),
+                          ("independent-p", FailureModel::IndependentP)] {
+        println!("failure model: {name}");
+        println!("{:>7} {:>10} {:>10}", "nodes", "full", "cpr");
+        for p in scalability_sweep(&base, 0.1, model, 0.002,
+                                   &[4, 8, 16, 32, 64, 128, 256]) {
+            println!("{:>7} {:>9.2}% {:>9.2}%", p.n_nodes,
+                     100.0 * p.full_overhead_frac,
+                     100.0 * p.cpr_overhead_frac);
+        }
+    }
+    Ok(())
+}

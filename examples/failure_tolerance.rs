@@ -1,0 +1,59 @@
+//! Failure-tolerance comparison: every recovery strategy on the same
+//! failure schedule (a miniature of the paper's Fig. 7).
+//!
+//!     cargo run --release --example failure_tolerance [-- --preset mini]
+//!
+//! Prints one row per strategy: checkpoint overhead, final AUC, PLS, and
+//! whether CPR decided to fall back.
+
+use anyhow::Result;
+
+use cpr::config::{preset, Strategy};
+use cpr::coordinator::{run_training, RunOptions};
+use cpr::failure::uniform_schedule;
+use cpr::runtime::Runtime;
+use cpr::util::cli::Cli;
+use cpr::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::new("failure_tolerance", "strategy comparison (mini Fig. 7)")
+        .opt("preset", "mini", "model preset")
+        .opt("failures", "2", "failures to inject")
+        .opt("fail-frac", "0.125", "fraction of Emb PS lost per failure")
+        .opt("seed", "21", "schedule seed")
+        .parse(&args)?;
+
+    let base = preset(cli.get("preset"))?;
+    let victims = ((base.cluster.n_emb_ps as f64 * cli.get_f64("fail-frac")?)
+        .round() as usize).clamp(1, base.cluster.n_emb_ps);
+    let mut rng = Rng::new(cli.get_u64("seed")?);
+    let schedule = uniform_schedule(&mut rng, cli.get_usize("failures")?,
+                                    base.cluster.t_total_h,
+                                    base.cluster.n_emb_ps, victims);
+
+    let rt = Runtime::cpu()?;
+    let model = rt.load_model(&base.artifacts_dir, &base.model.preset)?;
+
+    // no-failure reference first
+    let clean = run_training(&model, &base, &RunOptions::default())?;
+    println!("no-failure reference AUC: {:.5}\n", clean.final_auc);
+    println!("{:<14} {:>10} {:>10} {:>9} {:>9} {:>6}",
+             "strategy", "overhead%", "AUC", "dAUC", "PLS", "note");
+
+    for strategy in [Strategy::Full, Strategy::PartialNaive,
+                     Strategy::CprVanilla, Strategy::CprScar,
+                     Strategy::CprMfu, Strategy::CprSsu] {
+        let mut cfg = base.clone();
+        cfg.checkpoint.strategy = strategy;
+        let r = run_training(&model, &cfg, &RunOptions {
+            schedule: schedule.clone(),
+            ..Default::default()
+        })?;
+        println!("{:<14} {:>9.2}% {:>10.5} {:>9.5} {:>9.4} {:>6}",
+                 r.strategy, 100.0 * r.overhead_frac, r.final_auc,
+                 clean.final_auc - r.final_auc, r.pls,
+                 if r.fell_back { "FB" } else { "" });
+    }
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: the smallest end-to-end use of the CPR library.
+//!
+//! Loads the AOT-compiled DLRM (L2/L1 artifacts), trains it for a short
+//! single-epoch job on the synthetic click log with CPR-SSU checkpointing
+//! and two injected Emb PS failures, and prints the loss curve + final AUC.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use cpr::config::{preset, Strategy};
+use cpr::coordinator::{run_training, RunOptions};
+use cpr::failure::uniform_schedule;
+use cpr::runtime::Runtime;
+use cpr::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // 1. a job config: model architecture + synthetic dataset + emulated
+    //    cluster constants. Presets mirror the paper's setups.
+    let mut cfg = preset("mini")?;
+    cfg.data.train_samples = 64_000; // 500 steps — keep the demo snappy
+    cfg.data.eval_samples = 16_000;
+    cfg.checkpoint.strategy = Strategy::CprSsu;
+    cfg.checkpoint.target_pls = 0.1;
+
+    // 2. the PJRT runtime executes the Python-free AOT artifacts.
+    let rt = Runtime::cpu()?;
+    let model = rt.load_model(&cfg.artifacts_dir, &cfg.model.preset)?;
+    println!("platform: {} | MLP params: {} | embedding rows: {}",
+             rt.platform(), model.manifest.mlp_params(),
+             cfg.data.total_rows());
+
+    // 3. a failure schedule: 2 failures, each killing 1 of the 8 Emb PS
+    //    nodes, at uniform random emulated times (the paper's setup).
+    let mut rng = Rng::new(42);
+    let schedule = uniform_schedule(&mut rng, 2, cfg.cluster.t_total_h,
+                                    cfg.cluster.n_emb_ps, 1);
+    for ev in &schedule {
+        println!("scheduled failure at {:5.1} h, victims {:?}",
+                 ev.time_h, ev.victims);
+    }
+
+    // 4. run and report.
+    let report = run_training(&model, &cfg, &RunOptions {
+        schedule,
+        eval_every: 100,
+        ..Default::default()
+    })?;
+
+    println!("\ntrain loss:");
+    for (step, loss) in &report.train_loss.points {
+        if step % 100 == 0 {
+            println!("  step {step:>5}  loss {loss:.4}");
+        }
+    }
+    println!("\neval AUC:");
+    for (step, a) in &report.eval_auc.points {
+        println!("  step {step:>5}  auc {a:.4}");
+    }
+    if let Some(p) = &report.plan {
+        println!("\nCPR plan: interval {:.1} h (expected PLS {:.3})",
+                 p.t_save_h, p.expected_pls);
+    }
+    println!("\nfinal AUC {:.4} | overhead {:.2}% | PLS {:.4} | wall {:.1}s",
+             report.final_auc, 100.0 * report.overhead_frac, report.pls,
+             report.wall_secs);
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! End-to-end validation driver: train a ≈100M-parameter DLRM
+//! (6.2M embedding rows × dim 16 + MLPs, the `large_100m` preset) for a
+//! few hundred steps on the synthetic click log, with CPR-SSU
+//! checkpointing and one injected Emb PS failure, logging the loss curve.
+//!
+//! This is the run recorded in EXPERIMENTS.md §End-to-end.
+//!
+//!     cargo run --release --example train_100m [-- --steps 500]
+
+use anyhow::Result;
+
+use cpr::config::{preset, Strategy};
+use cpr::coordinator::{run_training, RunOptions};
+use cpr::failure::uniform_schedule;
+use cpr::runtime::Runtime;
+use cpr::util::cli::Cli;
+use cpr::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::new("train_100m", "~100M-param end-to-end training run")
+        .opt("steps", "500", "training steps (batch 128)")
+        .opt("eval-every", "100", "AUC eval cadence")
+        .parse(&args)?;
+    let steps = cli.get_usize("steps")?;
+
+    let mut cfg = preset("large_100m")?;
+    cfg.data.train_samples = steps * cfg.model.batch;
+    cfg.data.eval_samples = 16_000 - (16_000 % cfg.model.batch);
+    cfg.checkpoint.strategy = Strategy::CprSsu;
+
+    let total_params = cfg.data.total_rows() * cfg.model.emb_dim;
+    println!("embedding parameters: {:.1} M rows x {} dim = {:.1} M params",
+             cfg.data.total_rows() as f64 / 1e6, cfg.model.emb_dim,
+             total_params as f64 / 1e6);
+
+    let rt = Runtime::cpu()?;
+    let model = rt.load_model(&cfg.artifacts_dir, &cfg.model.preset)?;
+    println!("+ {} MLP params -> total {:.1} M",
+             model.manifest.mlp_params(),
+             (total_params + model.manifest.mlp_params()) as f64 / 1e6);
+
+    let mut rng = Rng::new(100);
+    let schedule = uniform_schedule(&mut rng, 1, cfg.cluster.t_total_h,
+                                    cfg.cluster.n_emb_ps, 1);
+    println!("failure scheduled at {:.1} h (node {:?})",
+             schedule[0].time_h, schedule[0].victims);
+
+    let t0 = std::time::Instant::now();
+    let report = run_training(&model, &cfg, &RunOptions {
+        schedule,
+        eval_every: cli.get_usize("eval-every")?,
+        log_every: 25,
+        ..Default::default()
+    })?;
+
+    println!("\nloss curve:");
+    for (step, loss) in &report.train_loss.points {
+        println!("  step {step:>5}  loss {loss:.4}");
+    }
+    println!("\neval AUC curve:");
+    for (step, a) in &report.eval_auc.points {
+        println!("  step {step:>5}  auc {a:.4}");
+    }
+    println!("\nfinal AUC {:.4} | logloss {:.4} | PLS {:.4} | overhead {:.2}%",
+             report.final_auc, report.final_logloss, report.pls,
+             100.0 * report.overhead_frac);
+    let secs = t0.elapsed().as_secs_f64();
+    println!("wall {:.1}s | {:.0} samples/s",
+             secs, (report.steps_executed * cfg.model.batch as u64) as f64 / secs);
+    Ok(())
+}

@@ -1,0 +1,166 @@
+"""AOT compile path: lower the DLRM train/predict graphs to HLO **text**.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--preset mini kaggle_like ...]
+
+Emits, per preset:
+    artifacts/<preset>/train_step.hlo.txt
+    artifacts/<preset>/predict.hlo.txt
+    artifacts/<preset>/manifest.json      # the artifact ABI for Rust
+
+This runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (PRESETS, ModelConfig, init_params, make_predict,
+                    make_train_step)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    `as_hlo_text(True)` = print_large_constants: without it the printer
+    elides big constant literals as `{...}`, which the consuming text
+    parser silently materializes as ZEROS — the interaction backward's
+    triu-unpack matrix came back all-zero and killed every embedding
+    gradient before this flag was set.
+
+    `return_tuple=False` keeps the entry's outputs untupled: PJRT then
+    returns one device buffer per output, so the Rust hot path can keep
+    the updated MLP parameters resident on device between steps (and use
+    `execute_b`, whose literal-input sibling `execute` leaks the temporary
+    device buffers in xla 0.1.6 — ~240 KB/step before this change).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False)
+    return comp.as_hlo_text(True)
+
+
+def specs_for(cfg: ModelConfig):
+    """ShapeDtypeStructs for (dense, emb, labels, lr, *params)."""
+    f32 = jnp.float32
+    dense = jax.ShapeDtypeStruct((cfg.batch, cfg.num_dense), f32)
+    emb = jax.ShapeDtypeStruct((cfg.batch, cfg.num_sparse, cfg.emb_dim), f32)
+    labels = jax.ShapeDtypeStruct((cfg.batch,), f32)
+    lr = jax.ShapeDtypeStruct((), f32)
+    params = []
+    for name, fan_in, fan_out in cfg.layer_dims():
+        params.append((f"{name}.w", jax.ShapeDtypeStruct((fan_in, fan_out), f32)))
+        params.append((f"{name}.b", jax.ShapeDtypeStruct((fan_out,), f32)))
+    return dense, emb, labels, lr, params
+
+
+def manifest_for(cfg: ModelConfig, params) -> dict:
+    return {
+        "name": cfg.name,
+        "batch": cfg.batch,
+        "num_dense": cfg.num_dense,
+        "num_sparse": cfg.num_sparse,
+        "emb_dim": cfg.emb_dim,
+        "num_pairs": cfg.num_pairs,
+        "params": [{"name": n, "shape": list(s.shape)} for n, s in params],
+        "train_step": {
+            "file": "train_step.hlo.txt",
+            "inputs": ["dense", "emb", "labels", "lr"] + [n for n, _ in params],
+            "outputs": ["loss", "emb_grad"] + [n for n, _ in params],
+        },
+        "predict": {
+            "file": "predict.hlo.txt",
+            "inputs": ["dense", "emb"] + [n for n, _ in params],
+            "outputs": ["logits"],
+        },
+    }
+
+
+def write_golden(cfg: ModelConfig, out_dir: str) -> None:
+    """Golden numerics for the Rust runtime: fixed inputs + the jax-computed
+    outputs of train_step and predict. The Rust integration test replays
+    the AOT artifact on the same inputs and asserts allclose — this is the
+    end-to-end guard against silent HLO round-trip corruption (e.g. the
+    elided-large-constants bug this repo hit: see to_hlo_text).
+
+    Binary format: u32 section count; per section u32 name_len, name,
+    u32 f32_count, f32 LE data.
+    """
+    rng = np.random.default_rng(20200701)
+    b, nd, ns, d = cfg.batch, cfg.num_dense, cfg.num_sparse, cfg.emb_dim
+    dense = rng.standard_normal((b, nd)).astype(np.float32)
+    emb = (0.05 * rng.standard_normal((b, ns, d))).astype(np.float32)
+    labels = rng.integers(0, 2, (b,)).astype(np.float32)
+    lr = np.float32(0.05)
+    params = init_params(cfg, seed=77)
+
+    step = jax.jit(make_train_step(cfg))
+    out = step(jnp.asarray(dense), jnp.asarray(emb), jnp.asarray(labels),
+               jnp.asarray(lr), *params)
+    loss, emb_grad = np.asarray(out[0]), np.asarray(out[1])
+    pred = jax.jit(make_predict(cfg))
+    (logits,) = pred(jnp.asarray(dense), jnp.asarray(emb), *params)
+
+    sections = [("dense", dense), ("emb", emb), ("labels", labels),
+                ("lr", np.asarray([lr])), ("loss", np.asarray([loss])),
+                ("emb_grad", emb_grad), ("logits", np.asarray(logits))]
+    sections += [(f"param{i}", np.asarray(p)) for i, p in enumerate(params)]
+    sections += [(f"new_param{i}", np.asarray(p))
+                 for i, p in enumerate(out[2:])]
+    with open(os.path.join(out_dir, "golden.bin"), "wb") as f:
+        f.write(struct.pack("<I", len(sections)))
+        for name, arr in sections:
+            data = arr.astype(np.float32).ravel()
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", data.size))
+            f.write(data.tobytes())
+
+
+def build_preset(cfg: ModelConfig, out_dir: str) -> None:
+    cfg.validate()
+    os.makedirs(out_dir, exist_ok=True)
+    dense, emb, labels, lr, params = specs_for(cfg)
+    pspecs = [s for _, s in params]
+
+    lowered = jax.jit(make_train_step(cfg)).lower(
+        dense, emb, labels, lr, *pspecs)
+    with open(os.path.join(out_dir, "train_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    lowered = jax.jit(make_predict(cfg)).lower(dense, emb, *pspecs)
+    with open(os.path.join(out_dir, "predict.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest_for(cfg, params), f, indent=2)
+    write_golden(cfg, out_dir)
+    print(f"[aot] {cfg.name}: wrote train_step/predict/manifest/golden to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts root directory")
+    ap.add_argument("--preset", nargs="*", default=list(PRESETS),
+                    help=f"presets to build (default: all of {list(PRESETS)})")
+    args = ap.parse_args()
+    for name in args.preset:
+        build_preset(PRESETS[name], os.path.join(args.out, name))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the DLRM compute hot-spots.
+
+All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); BlockSpecs are written for real-TPU VMEM/MXU shapes, see
+DESIGN.md §Hardware-Adaptation.
+"""
+
+from .embedding_bag import embedding_bag
+from .interaction import interaction
+from .mlp import mlp_layer
+
+__all__ = ["embedding_bag", "interaction", "mlp_layer"]

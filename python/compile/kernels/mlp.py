@@ -1,0 +1,78 @@
+"""Pallas fused MLP-layer kernel: y = relu?(x @ w + b).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the GPU version of this
+hot-spot is a cuBLAS GEMM with a fused epilogue; on TPU we tile the GEMM
+for the 128x128 MXU and fuse bias+activation into the final k-step so the
+activation tile never round-trips through HBM.
+
+Grid is (batch blocks, out blocks, in blocks); the in (k) axis is the
+innermost, sequential axis and accumulates into the output VMEM tile.
+VMEM footprint per step = bB*bK + bK*bO + bB*bO floats; with the default
+128/128/128 blocks that is 3 * 64 KiB = 192 KiB << 4 MiB budget.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; the BlockSpec structure is still what a real TPU would get.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...]
+        o_ref[...] = jnp.maximum(y, 0.0) if relu else y
+
+
+def _block(dim: int, want: int) -> int:
+    """Largest divisor of `dim` that is <= want (keeps grids exact)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "block_b", "block_o",
+                                             "block_k"))
+def mlp_layer(x, w, b, relu: bool = True, block_b: int = 128,
+              block_o: int = 512, block_k: int = 512):
+    # Default blocks cover the full GEMM for every DLRM layer width in
+    # this repo (<= 512): one grid step per pallas_call. interpret=True
+    # lowers each grid step into an XLA while-loop iteration with dynamic
+    # slicing, so extra grid steps are pure overhead on the CPU artifacts
+    # (measured 215 ms -> 5 ms per train step on kaggle_like; see
+    # EXPERIMENTS.md §Perf). On a real TPU the same kernel would be built
+    # with 128x128x128 blocks to fit VMEM/MXU — the BlockSpec machinery is
+    # exercised by the kernel tests at many block shapes.
+    """Fused linear layer. x:[B,I] w:[I,O] b:[O] -> [B,O] (f32)."""
+    bsz, i = x.shape
+    i2, o = w.shape
+    assert i == i2 and b.shape == (o,)
+    bb, bo, bk = _block(bsz, block_b), _block(o, block_o), _block(i, block_k)
+    nk = i // bk
+    grid = (bsz // bb, o // bo, nk)
+    return pl.pallas_call(
+        functools.partial(_mlp_kernel, relu=relu, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda ib, io, ik: (ib, ik)),
+            pl.BlockSpec((bk, bo), lambda ib, io, ik: (ik, io)),
+            pl.BlockSpec((bo,), lambda ib, io, ik: (io,)),
+        ],
+        out_specs=pl.BlockSpec((bb, bo), lambda ib, io, ik: (ib, io)),
+        out_shape=jax.ShapeDtypeStruct((bsz, o), jnp.float32),
+        interpret=True,
+    )(x, w, b)

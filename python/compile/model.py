@@ -1,0 +1,255 @@
+"""L2: DLRM forward/backward in JAX, calling the Pallas kernels.
+
+The model follows Naumov et al. (2019) as configured by MLPerf for the
+Criteo datasets (paper §5.1): bottom MLP over 13 dense features, 26
+embedding lookups, dot-product feature interaction, top MLP to a CTR
+logit, BCE loss, plain SGD.
+
+Split of responsibilities with the Rust coordinator (L3):
+  * the embedding *tables* live in Rust, sharded across emulated Emb PS
+    nodes — that is where CPR's checkpointing/partial-recovery happens;
+  * this graph receives the already-gathered embedding rows
+    `emb:[B, S, D]` and returns `d(loss)/d(emb)` so Rust can apply the
+    sparse SGD update to the owning shard rows.
+
+Forward hot-spots run as Pallas kernels via jax.custom_vjp: Pallas calls
+are not differentiable by themselves, so each wrapper pairs the Pallas
+forward with an analytic jnp backward (fused by XLA into the same
+train-step HLO — Python is never on the request path).
+
+Everything here is lowered ONCE by aot.py to HLO text; the Rust runtime
+loads and executes the artifacts.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import interaction as pallas_interaction
+from .kernels import mlp_layer as pallas_mlp_layer
+from .kernels.ref import triu_indices
+
+
+# ---------------------------------------------------------------------------
+# Model configuration (mirrored by rust/src/config presets)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one DLRM variant.
+
+    bottom_mlp[-1] must equal emb_dim (the bottom output joins the
+    interaction as the 27th feature vector).
+    """
+    name: str
+    num_dense: int = 13
+    num_sparse: int = 26
+    emb_dim: int = 16
+    bottom_mlp: Tuple[int, ...] = (512, 256, 64, 16)
+    top_mlp: Tuple[int, ...] = (512, 256, 1)
+    batch: int = 128
+
+    @property
+    def num_feats(self) -> int:
+        return self.num_sparse + 1
+
+    @property
+    def num_pairs(self) -> int:
+        f = self.num_feats
+        return f * (f - 1) // 2
+
+    @property
+    def top_in(self) -> int:
+        return self.emb_dim + self.num_pairs
+
+    def layer_dims(self) -> List[Tuple[str, int, int]]:
+        """(name, fan_in, fan_out) for every linear layer, in param order."""
+        dims = []
+        fan_in = self.num_dense
+        for i, width in enumerate(self.bottom_mlp):
+            dims.append((f"bot{i}", fan_in, width))
+            fan_in = width
+        fan_in = self.top_in
+        for i, width in enumerate(self.top_mlp):
+            dims.append((f"top{i}", fan_in, width))
+            fan_in = width
+        return dims
+
+    def validate(self):
+        assert self.bottom_mlp[-1] == self.emb_dim, (
+            "bottom MLP output must match emb_dim for the interaction concat")
+        assert self.top_mlp[-1] == 1, "top MLP must end in a single logit"
+
+
+# Presets mirrored by rust/src/config/presets.rs. `mini` is the fast config
+# used by the many-run accuracy experiments (Figs 2/9/10/11/12 at default
+# scale); kaggle_like / terabyte_like follow the paper's §5.1 layer sizes.
+PRESETS = {
+    "mini": ModelConfig(name="mini", emb_dim=8,
+                        bottom_mlp=(64, 32, 8), top_mlp=(64, 1), batch=128),
+    "kaggle_like": ModelConfig(name="kaggle_like", emb_dim=16,
+                               bottom_mlp=(512, 256, 64, 16),
+                               top_mlp=(512, 256, 1), batch=128),
+    "terabyte_like": ModelConfig(name="terabyte_like", emb_dim=64,
+                                 bottom_mlp=(512, 256, 64),
+                                 top_mlp=(512, 512, 256, 1), batch=128),
+}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """Xavier-uniform weights + zero biases, flattened [w0, b0, w1, b1, ...].
+
+    The flat ordering is the artifact ABI: aot.py records it in
+    manifest.json and the Rust runtime feeds/receives params in this order.
+    """
+    rng = np.random.RandomState(seed)
+    params = []
+    for _, fan_in, fan_out in cfg.layer_dims():
+        bound = np.sqrt(6.0 / (fan_in + fan_out))
+        params.append(jnp.asarray(
+            rng.uniform(-bound, bound, (fan_in, fan_out)), jnp.float32))
+        params.append(jnp.zeros((fan_out,), jnp.float32))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrappers: Pallas forward, analytic jnp backward
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _linear_relu(x, w, b):
+    return pallas_mlp_layer(x, w, b, relu=True)
+
+
+def _linear_relu_fwd(x, w, b):
+    y = pallas_mlp_layer(x, w, b, relu=True)
+    return y, (x, w, y)
+
+
+def _linear_relu_bwd(res, dy):
+    x, w, y = res
+    dz = dy * (y > 0.0)                 # ReLU mask from the saved output
+    return (dz @ w.T, x.T @ dz, jnp.sum(dz, axis=0))
+
+
+_linear_relu.defvjp(_linear_relu_fwd, _linear_relu_bwd)
+
+
+@jax.custom_vjp
+def _linear(x, w, b):
+    return pallas_mlp_layer(x, w, b, relu=False)
+
+
+def _linear_fwd(x, w, b):
+    return pallas_mlp_layer(x, w, b, relu=False), (x, w)
+
+
+def _linear_bwd(res, dy):
+    x, w = res
+    return (dy @ w.T, x.T @ dy, jnp.sum(dy, axis=0))
+
+
+_linear.defvjp(_linear_fwd, _linear_bwd)
+
+
+@jax.custom_vjp
+def _interact(feats):
+    return pallas_interaction(feats)
+
+
+def _interact_fwd(feats):
+    return pallas_interaction(feats), (feats,)
+
+
+def _unpack_matrix(f: int) -> np.ndarray:
+    """Constant [P, F*F] 0/1 matrix: packed-triu index k -> flat (i, j).
+
+    Used to express the triu scatter/gather as a dense matmul: the
+    `scatter` HLO op produced by `.at[...].set()` silently evaluates to
+    zeros after the HLO-text round-trip through xla_extension 0.5.1, so the
+    backward pass avoids it entirely (P and F are tiny; the matmul is
+    negligible and XLA folds the constant).
+    """
+    iu0, iu1 = triu_indices(f)
+    p = len(iu0)
+    m = np.zeros((p, f * f), np.float32)
+    m[np.arange(p), iu0 * f + iu1] = 1.0
+    return m
+
+
+def _interact_bwd(res, dz):
+    # Z = triu(X X^T)  =>  dX = (dG + dG^T) X with dG the triu unpack of dz.
+    (feats,) = res
+    b, f, _ = feats.shape
+    m = jnp.asarray(_unpack_matrix(f))
+    dg = (dz @ m).reshape(b, f, f)
+    return (jnp.einsum("bfg,bgd->bfd", dg + jnp.swapaxes(dg, 1, 2), feats),)
+
+
+_interact.defvjp(_interact_fwd, _interact_bwd)
+
+
+# ---------------------------------------------------------------------------
+# DLRM forward / loss / train step
+# ---------------------------------------------------------------------------
+
+def _split_params(cfg: ModelConfig, params: List[jnp.ndarray]):
+    nb = len(cfg.bottom_mlp)
+    bottom = [(params[2 * i], params[2 * i + 1]) for i in range(nb)]
+    top = [(params[2 * (nb + i)], params[2 * (nb + i) + 1])
+           for i in range(len(cfg.top_mlp))]
+    return bottom, top
+
+
+def forward(cfg: ModelConfig, params: List[jnp.ndarray],
+            dense: jnp.ndarray, emb: jnp.ndarray) -> jnp.ndarray:
+    """DLRM forward. dense:[B,num_dense] emb:[B,num_sparse,D] -> logits:[B]."""
+    bottom, top = _split_params(cfg, params)
+    x = dense
+    for w, b in bottom:                  # all bottom layers ReLU (DLRM ref)
+        x = _linear_relu(x, w, b)
+    feats = jnp.concatenate([x[:, None, :], emb], axis=1)   # [B, F, D]
+    z = _interact(feats)                                    # [B, P]
+    t = jnp.concatenate([x, z], axis=1)                     # [B, D+P]
+    for w, b in top[:-1]:
+        t = _linear_relu(t, w, b)
+    w, b = top[-1]
+    return _linear(t, w, b)[:, 0]                           # [B]
+
+
+def bce_with_logits(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Numerically stable mean binary cross-entropy from logits."""
+    return jnp.mean(jnp.maximum(logits, 0.0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def make_train_step(cfg: ModelConfig):
+    """(dense, emb, labels, lr, *params) -> (loss, emb_grad, *new_params).
+
+    MLP params are SGD-updated in-graph; the embedding gradient is returned
+    for the Rust Emb PS cluster to apply (and for the CPR trackers to see).
+    """
+
+    def loss_fn(params, emb, dense, labels):
+        return bce_with_logits(forward(cfg, params, dense, emb), labels)
+
+    grad_fn = jax.value_and_grad(loss_fn, argnums=(0, 1))
+
+    def train_step(dense, emb, labels, lr, *params):
+        loss, (gp, gemb) = grad_fn(list(params), emb, dense, labels)
+        new_params = [p - lr * g for p, g in zip(params, gp)]
+        return (loss, gemb, *new_params)
+
+    return train_step
+
+
+def make_predict(cfg: ModelConfig):
+    """(dense, emb, *params) -> (logits,). Eval-only forward pass."""
+
+    def predict(dense, emb, *params):
+        return (forward(cfg, list(params), dense, emb),)
+
+    return predict

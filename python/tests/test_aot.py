@@ -1,0 +1,103 @@
+"""AOT artifact emission tests: manifest ABI, HLO text hygiene, golden."""
+
+import json
+import os
+import struct
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from compile.aot import build_preset, manifest_for, specs_for, to_hlo_text
+from compile.model import PRESETS, make_predict, make_train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def mini_dir():
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "mini")
+        build_preset(PRESETS["mini"], out)
+        yield out
+
+
+def test_emits_all_artifacts(mini_dir):
+    for f in ["train_step.hlo.txt", "predict.hlo.txt", "manifest.json",
+              "golden.bin"]:
+        assert os.path.exists(os.path.join(mini_dir, f)), f
+
+
+def test_manifest_matches_config(mini_dir):
+    cfg = PRESETS["mini"]
+    m = json.load(open(os.path.join(mini_dir, "manifest.json")))
+    assert m["batch"] == cfg.batch
+    assert m["num_sparse"] == cfg.num_sparse
+    assert m["emb_dim"] == cfg.emb_dim
+    assert m["num_pairs"] == cfg.num_pairs
+    # params: (w, b) per layer, ordered bottom then top
+    dims = cfg.layer_dims()
+    assert len(m["params"]) == 2 * len(dims)
+    for i, (name, fan_in, fan_out) in enumerate(dims):
+        assert m["params"][2 * i]["name"] == f"{name}.w"
+        assert m["params"][2 * i]["shape"] == [fan_in, fan_out]
+        assert m["params"][2 * i + 1]["shape"] == [fan_out]
+    # the IO lists must line up with the ABI the Rust runtime assumes
+    assert m["train_step"]["inputs"][:4] == ["dense", "emb", "labels", "lr"]
+    assert m["train_step"]["outputs"][:2] == ["loss", "emb_grad"]
+
+
+def test_hlo_text_has_no_elided_constants(mini_dir):
+    """`{...}` in HLO text re-parses as ZEROS downstream — never emit it."""
+    for f in ["train_step.hlo.txt", "predict.hlo.txt"]:
+        text = open(os.path.join(mini_dir, f)).read()
+        assert "{...}" not in text, f"{f} contains elided constants"
+        assert "ENTRY" in text
+
+
+def test_hlo_entry_parameter_count(mini_dir):
+    cfg = PRESETS["mini"]
+    text = open(os.path.join(mini_dir, "train_step.hlo.txt")).read()
+    entry = text[text.index("ENTRY"):]
+    n_params = entry.count(" parameter(")
+    assert n_params == 4 + 2 * len(cfg.layer_dims())
+
+
+def test_golden_sections_complete(mini_dir):
+    cfg = PRESETS["mini"]
+    with open(os.path.join(mini_dir, "golden.bin"), "rb") as f:
+        (n,) = struct.unpack("<I", f.read(4))
+        names = []
+        for _ in range(n):
+            (ln,) = struct.unpack("<I", f.read(4))
+            names.append(f.read(ln).decode())
+            (cnt,) = struct.unpack("<I", f.read(4))
+            data = np.frombuffer(f.read(4 * cnt), np.float32)
+            assert data.size == cnt
+            assert np.isfinite(data).all(), names[-1]
+        assert f.read() == b""  # no trailing bytes
+    for want in ["dense", "emb", "labels", "lr", "loss", "emb_grad", "logits"]:
+        assert want in names
+    n_params = 2 * len(cfg.layer_dims())
+    assert sum(1 for x in names if x.startswith("param")) == n_params
+    assert sum(1 for x in names if x.startswith("new_param")) == n_params
+
+
+def test_hlo_text_roundtrip_is_stable():
+    """Lowering the same config twice gives identical HLO text (the
+    artifact build is reproducible)."""
+    cfg = PRESETS["mini"]
+    dense, emb, labels, lr, params = specs_for(cfg)
+    pspecs = [s for _, s in params]
+    a = to_hlo_text(jax.jit(make_predict(cfg)).lower(dense, emb, *pspecs))
+    b = to_hlo_text(jax.jit(make_predict(cfg)).lower(dense, emb, *pspecs))
+    assert a == b
+
+
+def test_manifest_for_is_json_serializable():
+    cfg = PRESETS["kaggle_like"]
+    _, _, _, _, params = specs_for(cfg)
+    m = manifest_for(cfg, params)
+    text = json.dumps(m)
+    assert json.loads(text)["name"] == "kaggle_like"

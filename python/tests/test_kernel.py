@@ -1,0 +1,113 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes (batch/feature/dim and block sizes); every case
+asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import embedding_bag, interaction, mlp_layer
+from compile.kernels.ref import (embedding_bag_ref, interaction_ref,
+                                 mlp_layer_ref, triu_indices)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rnd(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# mlp_layer
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 64), i=st.integers(1, 96), o=st.integers(1, 96),
+       relu=st.booleans(), seed=st.integers(0, 2**31 - 1))
+def test_mlp_layer_matches_ref(b, i, o, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rnd(rng, b, i), rnd(rng, i, o)
+    bias = rnd(rng, o)
+    got = mlp_layer(x, w, bias, relu=relu)
+    want = mlp_layer_ref(x, w, bias, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (16, 32, 64), (128, 128, 128),
+                                    (1, 1, 1), (37, 13, 7)])
+def test_mlp_layer_block_shape_invariance(blocks):
+    """The k-accumulation grid must not change the numerics."""
+    rng = np.random.default_rng(0)
+    x, w, bias = rnd(rng, 48, 56), rnd(rng, 56, 40), rnd(rng, 40)
+    bb, bo, bk = blocks
+    got = mlp_layer(x, w, bias, relu=True, block_b=bb, block_o=bo, block_k=bk)
+    np.testing.assert_allclose(got, mlp_layer_ref(x, w, bias, True),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mlp_layer_relu_clamps():
+    x = jnp.asarray([[-1.0, 2.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros((2,), jnp.float32)
+    assert mlp_layer(x, w, b, relu=True).min() >= 0.0
+    assert mlp_layer(x, w, b, relu=False)[0, 0] == -1.0
+
+
+# ---------------------------------------------------------------------------
+# interaction
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 64), f=st.integers(2, 32), d=st.integers(1, 64),
+       seed=st.integers(0, 2**31 - 1))
+def test_interaction_matches_ref(b, f, d, seed):
+    rng = np.random.default_rng(seed)
+    feats = rnd(rng, b, f, d)
+    np.testing.assert_allclose(interaction(feats), interaction_ref(feats),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_interaction_output_is_pairwise_dots():
+    """Spot-check packing order against explicit per-pair dot products."""
+    rng = np.random.default_rng(3)
+    feats = rnd(rng, 4, 5, 7)
+    z = np.asarray(interaction(feats))
+    iu0, iu1 = triu_indices(5)
+    for s in range(4):
+        for k, (i, j) in enumerate(zip(iu0, iu1)):
+            want = float(np.dot(np.asarray(feats)[s, i],
+                                np.asarray(feats)[s, j]))
+            np.testing.assert_allclose(z[s, k], want, rtol=1e-4, atol=1e-4)
+
+
+def test_interaction_batch_blocking_invariance():
+    rng = np.random.default_rng(1)
+    feats = rnd(rng, 60, 27, 16)
+    a = interaction(feats, block_b=128)   # single block
+    b = interaction(feats, block_b=4)     # 15 blocks
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 64), p=st.integers(1, 16), d=st.integers(1, 64),
+       seed=st.integers(0, 2**31 - 1))
+def test_embedding_bag_matches_ref(b, p, d, seed):
+    rng = np.random.default_rng(seed)
+    bag = rnd(rng, b, p, d)
+    np.testing.assert_allclose(embedding_bag(bag), embedding_bag_ref(bag),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_bag_single_hot_is_identity():
+    rng = np.random.default_rng(2)
+    bag = rnd(rng, 8, 1, 16)
+    np.testing.assert_allclose(embedding_bag(bag), bag[:, 0, :], rtol=0,
+                               atol=0)

@@ -1,0 +1,204 @@
+//! Analytic models and trace analysis: the gamma survival fit of Fig. 3
+//! and the scalability projection of Fig. 13.
+
+use crate::config::ClusterConfig;
+use crate::pls;
+use crate::util::dist::gamma_survival;
+use crate::util::stats;
+
+/// Fig. 3a: fit observed times-to-failure with a gamma distribution and
+/// report the RMSE between fitted and empirical survival curves (the paper
+/// reports 4.4%).
+#[derive(Clone, Debug)]
+pub struct SurvivalFit {
+    pub shape: f64,
+    pub scale: f64,
+    pub mtbf_h: f64,
+    pub median_ttf_h: f64,
+    pub rmse: f64,
+    /// (t, empirical S(t), fitted S(t))
+    pub curve: Vec<(f64, f64, f64)>,
+}
+
+pub fn fit_survival(ttfs: &[f64], t_max: f64, points: usize) -> SurvivalFit {
+    assert!(ttfs.len() > 10, "need data to fit");
+    let (shape, scale) = stats::gamma_fit_moments(ttfs);
+    let emp = crate::failure::survival_curve(ttfs, t_max, points);
+    let curve: Vec<(f64, f64, f64)> = emp
+        .iter()
+        .map(|&(t, s)| (t, s, gamma_survival(t, shape, scale)))
+        .collect();
+    let rmse = stats::rmse(
+        &curve.iter().map(|c| c.1).collect::<Vec<_>>(),
+        &curve.iter().map(|c| c.2).collect::<Vec<_>>(),
+    );
+    let mut sorted = ttfs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    SurvivalFit {
+        shape,
+        scale,
+        mtbf_h: stats::mean(ttfs),
+        median_ttf_h: sorted[sorted.len() / 2],
+        rmse,
+        curve,
+    }
+}
+
+/// Fig. 3b: empirical hazard (failure probability per unit time among
+/// survivors) on a time grid.
+pub fn hazard_curve(ttfs: &[f64], t_max: f64, points: usize) -> Vec<(f64, f64)> {
+    let dt = t_max / points as f64;
+    (0..points)
+        .map(|i| {
+            let lo = i as f64 * dt;
+            let hi = lo + dt;
+            let at_risk = ttfs.iter().filter(|&&x| x > lo).count() as f64;
+            let died = ttfs.iter().filter(|&&x| x > lo && x <= hi).count() as f64;
+            let hz = if at_risk > 0.0 { died / (at_risk * dt) } else { 0.0 };
+            (lo + 0.5 * dt, hz)
+        })
+        .collect()
+}
+
+/// Failure-rate scaling models for Fig. 13.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureModel {
+    /// MTBF ∝ 1/n (the behaviour observed in production, §3.1)
+    LinearMtbf,
+    /// each node fails independently with probability p per unit time:
+    /// MTBF = 1 / (1 - (1-p)^n)
+    IndependentP,
+}
+
+/// One point of the Fig. 13 scalability projection.
+#[derive(Clone, Debug)]
+pub struct ScalePoint {
+    pub n_nodes: usize,
+    pub full_overhead_frac: f64,
+    pub cpr_overhead_frac: f64,
+}
+
+/// Project full-recovery vs CPR overhead over a node-count sweep
+/// (Eq. 1 vs Eq. 2 with the PLS-chosen interval). `base` holds the
+/// per-reference-size constants; `t_fail_at_base` is the MTBF at
+/// `base.n_emb_ps` nodes; `p_per_hour` parameterizes the second model.
+/// Scaling assumptions (made explicit here; paper §6.6 reaches the same
+/// qualitative shape): checkpoints are sharded, so save/load parallelize —
+/// O_save, O_load ∝ 1/n at fixed model size. Rescheduling blocks the whole
+/// job under full recovery (O_res constant) but is off the critical path
+/// under partial recovery — survivors keep training while 1/n of the model
+/// waits — so its effective cost also scales 1/n there. This is exactly the
+/// paper's argument that "the portion of the updates lost decreases with
+/// the number of nodes."
+pub fn scalability_sweep(
+    base: &ClusterConfig,
+    target_pls: f64,
+    model: FailureModel,
+    p_per_hour: f64,
+    node_counts: &[usize],
+) -> Vec<ScalePoint> {
+    node_counts
+        .iter()
+        .map(|&n| {
+            let t_fail = match model {
+                FailureModel::LinearMtbf => {
+                    base.t_fail_h * base.n_emb_ps as f64 / n as f64
+                }
+                FailureModel::IndependentP => {
+                    1.0 / (1.0 - (1.0 - p_per_hour).powi(n as i32))
+                }
+            };
+            let scale = base.n_emb_ps as f64 / n as f64;
+            let c_full = ClusterConfig {
+                n_emb_ps: n,
+                t_fail_h: t_fail,
+                o_save_h: base.o_save_h * scale,
+                o_load_h: base.o_load_h * scale,
+                o_res_h: base.o_res_h, // whole job stalls on full recovery
+                ..base.clone()
+            };
+            let c_part = ClusterConfig {
+                o_res_h: base.o_res_h * scale, // off critical path
+                ..c_full.clone()
+            };
+            let full =
+                pls::overhead_full_h(&c_full, c_full.t_save_full_h()) / c_full.t_total_h;
+            let plan = pls::plan(&c_part, target_pls);
+            let cpr = plan.est_overhead_h / c_part.t_total_h;
+            ScalePoint { n_nodes: n, full_overhead_frac: full, cpr_overhead_frac: cpr }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::failure::NodeHazard;
+    use crate::util::dist;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fit_recovers_synthetic_gamma() {
+        let mut rng = Rng::new(1);
+        let ttfs: Vec<f64> =
+            (0..30_000).map(|_| dist::gamma(&mut rng, 2.0, 14.0)).collect();
+        let fit = fit_survival(&ttfs, 120.0, 60);
+        assert!((fit.shape - 2.0).abs() < 0.1, "shape {}", fit.shape);
+        assert!((fit.scale - 14.0).abs() < 0.7, "scale {}", fit.scale);
+        assert!(fit.rmse < 0.01, "rmse {}", fit.rmse);
+        assert!((fit.mtbf_h - 28.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn fleet_fit_matches_paper_quality() {
+        // gamma fit of the hazard-model fleet: paper reports RMSE 4.4%;
+        // ours must be in single digits too
+        let hz = NodeHazard::default();
+        let mut rng = Rng::new(2);
+        let ttfs = hz.fleet_ttfs(&mut rng, 20_000, 16, 500.0);
+        let fit = fit_survival(&ttfs, 150.0, 60);
+        assert!(fit.rmse < 0.08, "rmse {}", fit.rmse);
+        assert!((8.0..35.0).contains(&fit.mtbf_h), "mtbf {}", fit.mtbf_h);
+    }
+
+    #[test]
+    fn hazard_is_elevated_early_then_flat() {
+        let hz = NodeHazard::default();
+        let mut rng = Rng::new(3);
+        let ttfs = hz.fleet_ttfs(&mut rng, 30_000, 16, 1e9);
+        // fine bins: infant mortality concentrates in the first half-hour
+        let hc = hazard_curve(&ttfs, 30.0, 60);
+        let early = hc[0].1;
+        let later: f64 = hc[20..40].iter().map(|x| x.1).sum::<f64>() / 20.0;
+        assert!(early > 3.0 * later,
+                "no infant mortality: early {early} vs later {later}");
+        // flat tail: adjacent late bins within 3x of each other
+        for w in hc[20..50].windows(2) {
+            if w[0].1 > 0.0 && w[1].1 > 0.0 {
+                let r = w[0].1 / w[1].1;
+                assert!((0.33..3.0).contains(&r), "hazard jumps: {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig13_cpr_scales_better_than_full() {
+        let base = crate::config::preset("mini").unwrap().cluster;
+        for model in [FailureModel::LinearMtbf, FailureModel::IndependentP] {
+            let pts = scalability_sweep(&base, 0.1, model, 0.002,
+                                        &[8, 16, 32, 64, 128]);
+            // full overhead grows with nodes; CPR stays below full everywhere
+            assert!(pts.last().unwrap().full_overhead_frac
+                    > pts.first().unwrap().full_overhead_frac,
+                    "{model:?}: full not increasing");
+            for p in &pts {
+                assert!(p.cpr_overhead_frac <= p.full_overhead_frac + 1e-9,
+                        "{model:?}: CPR worse at n={}", p.n_nodes);
+            }
+            // paper: CPR overhead *decreases* with more nodes
+            assert!(pts.last().unwrap().cpr_overhead_frac
+                    <= pts.first().unwrap().cpr_overhead_frac + 1e-9,
+                    "{model:?}: CPR not improving with scale");
+        }
+    }
+}

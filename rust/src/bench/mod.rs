@@ -1,0 +1,166 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` binaries built on this:
+//! warmup, fixed-duration sampling, mean/p50/p99 reporting, and optional
+//! throughput. Output is one aligned line per benchmark plus an optional
+//! machine-readable JSON dump.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+
+    pub fn p99_s(&self) -> f64 {
+        stats::percentile(&self.samples, 99.0)
+    }
+
+    /// elements/second, if an element count was attached.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / self.mean_s())
+    }
+
+    pub fn report_line(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) => format!("  {:>12}/s", human(t)),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} mean {:>12}  p50 {:>12}  p99 {:>12}  ({} samples){tp}",
+            self.name,
+            human_time(self.mean_s()),
+            human_time(self.p50_s()),
+            human_time(self.p99_s()),
+            self.samples.len(),
+        )
+    }
+}
+
+fn human_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+fn human(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Benchmark builder.
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    measure: Duration,
+    max_samples: usize,
+    elements: Option<u64>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(900),
+            max_samples: 2_000,
+            elements: None,
+        }
+    }
+
+    /// Attach an element count for throughput reporting.
+    pub fn throughput(mut self, elements: u64) -> Self {
+        self.elements = Some(elements);
+        self
+    }
+
+    pub fn warmup_ms(mut self, ms: u64) -> Self {
+        self.warmup = Duration::from_millis(ms);
+        self
+    }
+
+    pub fn measure_ms(mut self, ms: u64) -> Self {
+        self.measure = Duration::from_millis(ms);
+        self
+    }
+
+    /// Run `f` repeatedly; returns timing stats. `f`'s return value is
+    /// black-boxed to stop the optimizer from deleting the work.
+    pub fn run<T, F: FnMut() -> T>(self, mut f: F) -> BenchResult {
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let mstart = Instant::now();
+        while mstart.elapsed() < self.measure && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let r = BenchResult { name: self.name, samples, elements: self.elements };
+        println!("{}", r.report_line());
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let r = Bench::new("noop")
+            .warmup_ms(5)
+            .measure_ms(20)
+            .run(|| std::hint::black_box(1 + 1));
+        assert!(!r.samples.is_empty());
+        assert!(r.mean_s() >= 0.0);
+        assert!(r.p99_s() >= r.p50_s());
+    }
+
+    #[test]
+    fn throughput_attached() {
+        let r = Bench::new("tp")
+            .warmup_ms(1)
+            .measure_ms(5)
+            .throughput(1000)
+            .run(|| std::hint::black_box((0..100).sum::<u64>()));
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2e-9).contains("ns"));
+        assert!(human_time(2e-6).contains("µs"));
+        assert!(human_time(2e-3).contains("ms"));
+        assert!(human_time(2.0).contains(" s"));
+    }
+}

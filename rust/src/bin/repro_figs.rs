@@ -1,0 +1,587 @@
+//! `repro_figs` — regenerate every table and figure of the CPR paper's
+//! evaluation on the emulation framework (DESIGN.md experiment index).
+//!
+//!     cargo run --release --bin repro_figs -- <exp> [--scale 1.0] [--out results]
+//!
+//! <exp> ∈ fig2 fig3 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13
+//!         table1 all
+//!
+//! Each experiment prints the paper-comparable rows/series to stdout and
+//! writes CSV into --out. `--scale` multiplies training-sample counts
+//! (accuracy experiments only; the overhead math is in emulated hours and
+//! does not depend on it).
+
+use anyhow::{bail, Result};
+
+use cpr::analysis::{fit_survival, hazard_curve, scalability_sweep, FailureModel};
+use cpr::config::{preset, JobConfig, Strategy};
+use cpr::coordinator::{run_training, RunOptions};
+use cpr::failure::{uniform_schedule, FailureEvent, NodeHazard};
+use cpr::runtime::{ModelExe, Runtime};
+use cpr::sim::{simulate_fleet, FleetSimConfig};
+use cpr::util::cli::Cli;
+use cpr::util::rng::Rng;
+use cpr::util::stats;
+
+struct Ctx {
+    rt: Runtime,
+    scale: f64,
+    out_dir: String,
+}
+
+impl Ctx {
+    fn model(&self, preset_name: &str) -> Result<ModelExe> {
+        self.rt.load_model("artifacts", preset_name)
+    }
+
+    fn cfg(&self, preset_name: &str) -> Result<JobConfig> {
+        let mut cfg = preset(preset_name)?;
+        let b = cfg.model.batch;
+        let scale = |n: usize| ((n as f64 * self.scale) as usize / b).max(1) * b;
+        cfg.data.train_samples = scale(cfg.data.train_samples);
+        cfg.data.eval_samples = scale(cfg.data.eval_samples);
+        Ok(cfg)
+    }
+
+    fn write_csv(&self, name: &str, content: &str) -> Result<()> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = format!("{}/{}", self.out_dir, name);
+        std::fs::write(&path, content)?;
+        eprintln!("[repro] wrote {path}");
+        Ok(())
+    }
+}
+
+fn sched(seed: u64, n: usize, t_total: f64, n_nodes: usize, victims: usize)
+         -> Vec<FailureEvent> {
+    let mut rng = Rng::new(seed);
+    uniform_schedule(&mut rng, n, t_total, n_nodes, victims)
+}
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::new("repro_figs", "regenerate the paper's tables and figures")
+        .opt("scale", "1.0", "training-sample multiplier for accuracy runs")
+        .opt("out", "results", "output directory for CSV")
+        .parse(&args)?;
+    let Some(exp) = cli.positionals().first().cloned() else {
+        bail!("usage: repro_figs <fig2|fig3|fig4|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|table1|all>");
+    };
+    let ctx = Ctx {
+        rt: Runtime::cpu()?,
+        scale: cli.get_f64("scale")?,
+        out_dir: cli.get("out").to_string(),
+    };
+    match exp.as_str() {
+        "fig2" => fig2(&ctx)?,
+        "fig3" => fig3(&ctx)?,
+        "fig4" => fig4(&ctx)?,
+        "fig6" => fig6(&ctx)?,
+        "fig7" => fig7(&ctx)?,
+        "fig8" => fig8(&ctx)?,
+        "fig9" => fig9(&ctx)?,
+        "fig10" => fig10(&ctx)?,
+        "fig11" => fig11(&ctx, Strategy::PartialNaive, "fig11")?,
+        "fig12" => fig12(&ctx)?,
+        "fig13" => fig13(&ctx)?,
+        "table1" => table1(&ctx)?,
+        "ablate" => ablate(&ctx)?,
+        "all" => {
+            fig2(&ctx)?;
+            fig3(&ctx)?;
+            fig4(&ctx)?;
+            fig6(&ctx)?;
+            fig7(&ctx)?;
+            fig8(&ctx)?;
+            fig9(&ctx)?;
+            fig10(&ctx)?;
+            fig11(&ctx, Strategy::PartialNaive, "fig11")?;
+            fig12(&ctx)?;
+            fig13(&ctx)?;
+            table1(&ctx)?;
+            ablate(&ctx)?;
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 — motivation: naive partial recovery never reaches the no-failure AUC
+// ---------------------------------------------------------------------------
+
+fn fig2(ctx: &Ctx) -> Result<()> {
+    println!("\n== Fig. 2 — naive partial recovery vs no-failure (AUC over time) ==");
+    let model = ctx.model("mini")?;
+    let mut cfg = ctx.cfg("mini")?;
+    cfg.data.eval_samples *= 2; // tighter AUC error bars for the motivation plot
+    let eval_every = (cfg.data.train_samples / cfg.model.batch / 12).max(1);
+    let clean = run_training(&model, &cfg, &RunOptions {
+        eval_every, ..Default::default() })?;
+    cfg.checkpoint.strategy = Strategy::PartialNaive;
+    // the motivating scenario: infrequent checkpoints (an 8-hour cadence,
+    // typical when saving is expensive) + repeated failures through the
+    // second half of the job — the lost updates can no longer be relearned
+    // and the best-ever AUC stays below the no-failure run (paper Fig. 2)
+    cfg.checkpoint.t_save_override_h = Some(8.0);
+    let n = cfg.cluster.n_emb_ps;
+    let mut rng = Rng::new(2020);
+    let schedule: Vec<FailureEvent> = [0.45, 0.62, 0.77, 0.93]
+        .iter()
+        .map(|&f| FailureEvent {
+            time_h: f * cfg.cluster.t_total_h,
+            victims: rng.sample_distinct(n, n / 2),
+        })
+        .collect();
+    let failed = run_training(&model, &cfg, &RunOptions {
+        schedule: schedule.clone(), eval_every, ..Default::default() })?;
+
+    println!("{:>7} {:>12} {:>14}", "step", "no-failure", "partial(naive)");
+    let mut csv = String::from("step,auc_clean,auc_partial\n");
+    for ((s, a), (_, b)) in clean.eval_auc.points.iter()
+        .zip(failed.eval_auc.points.iter()) {
+        println!("{s:>7} {a:>12.5} {b:>14.5}");
+        csv.push_str(&format!("{s},{a},{b}\n"));
+    }
+    for ev in &schedule {
+        println!("   (failure at {:.1} h, victims {:?})", ev.time_h, ev.victims);
+    }
+    println!("best AUC: clean {:.5} vs partial {:.5} (gap {:+.5})",
+             clean.eval_auc.best_max().unwrap(),
+             failed.eval_auc.best_max().unwrap(),
+             clean.eval_auc.best_max().unwrap()
+                 - failed.eval_auc.best_max().unwrap());
+    ctx.write_csv("fig2.csv", &csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3 — failure-trace survival analysis
+// ---------------------------------------------------------------------------
+
+fn fig3(ctx: &Ctx) -> Result<()> {
+    println!("\n== Fig. 3 — survival distribution + gamma fit (20k jobs) ==");
+    let hz = NodeHazard::default();
+    let mut rng = Rng::new(3);
+    let mut csv = String::from("nodes,t_h,survival_emp,survival_fit\n");
+    for nodes in [16, 32, 64, 128] {
+        let ttfs = hz.fleet_ttfs(&mut rng, 20_000, nodes, 500.0);
+        let fit = fit_survival(&ttfs, 120.0, 48);
+        println!("nodes={nodes:<4} MTBF={:>6.1} h  median={:>5.1} h  \
+                  gamma(k={:.2}, θ={:.1})  fit RMSE={:.1}%",
+                 fit.mtbf_h, fit.median_ttf_h, fit.shape, fit.scale,
+                 100.0 * fit.rmse);
+        for (t, emp, fitted) in &fit.curve {
+            csv.push_str(&format!("{nodes},{t},{emp},{fitted}\n"));
+        }
+    }
+    println!("(paper: MTBF 14–30 h, median 8–17 h, gamma fit RMSE 4.4%, \
+              MTBF linear in nodes)");
+    let ttfs = hz.fleet_ttfs(&mut rng, 20_000, 16, 500.0);
+    let hc = hazard_curve(&ttfs, 60.0, 24);
+    let mut csv2 = String::from("t_h,hazard\n");
+    for (t, h) in hc {
+        csv2.push_str(&format!("{t},{h}\n"));
+    }
+    ctx.write_csv("fig3a_survival.csv", &csv)?;
+    ctx.write_csv("fig3b_hazard.csv", &csv2)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — checkpoint overhead breakdown in the fleet
+// ---------------------------------------------------------------------------
+
+fn fig4(ctx: &Ctx) -> Result<()> {
+    println!("\n== Fig. 4 — overhead breakdown over 17k jobs ==");
+    let mut rng = Rng::new(4);
+    let rep = simulate_fleet(&mut rng, &FleetSimConfig::default());
+    println!("mean overhead {:.1}% (paper: 12%) | machine-years {:.0} \
+              (paper: 1,156)",
+             100.0 * rep.mean_overhead_frac, rep.machine_years_wasted);
+    println!("{:>5} {:>8} {:>8} {:>8} {:>10} {:>8}",
+             "pct", "save", "load", "lost", "reschedule", "total");
+    let mut csv = String::from("pct,save,load,lost,reschedule,total\n");
+    for (p, s, l, lost, res, tot) in &rep.breakdown {
+        println!("{:>4.0}% {:>7.1}% {:>7.1}% {:>7.1}% {:>9.1}% {:>7.1}%",
+                 p, 100.0 * s, 100.0 * l, 100.0 * lost, 100.0 * res,
+                 100.0 * tot);
+        csv.push_str(&format!("{p},{s},{l},{lost},{res},{tot}\n"));
+    }
+    println!("(paper: save-dominated at p75 ≈ 8.8%, lost at p90 ≈ 13.2%, \
+              rescheduling at p95 ≈ 23.3%)");
+    ctx.write_csv("fig4.csv", &csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6 — access frequency vs update magnitude correlation
+// ---------------------------------------------------------------------------
+
+fn fig6(ctx: &Ctx) -> Result<()> {
+    println!("\n== Fig. 6 — access count vs update-L2 correlation ==");
+    let model = ctx.model("mini")?;
+    let mut cfg = ctx.cfg("mini")?;
+    // The paper measures after 4096 iterations — *early* training, where
+    // per-access updates have near-constant magnitude so total change
+    // accumulates ∝ access count. Late in training rows converge and the
+    // relationship saturates. Match the early-training regime: a short
+    // prefix and a pre-convergence embedding learning rate.
+    cfg.data.train_samples = (256.0 * ctx.scale) as usize * cfg.model.batch;
+    cfg.train.emb_lr = 0.1;
+    let r = run_training(&model, &cfg, &RunOptions {
+        collect_row_stats: true, ..Default::default() })?;
+    let stats_rows = r.row_stats.unwrap().rows;
+    // correlate over accessed rows (paper measures after 4096 iterations)
+    let accessed: Vec<&(usize, u32, u32, f64)> =
+        stats_rows.iter().filter(|r| r.2 > 0).collect();
+    let counts: Vec<f64> = accessed.iter().map(|r| r.2 as f64).collect();
+    let changes: Vec<f64> = accessed.iter().map(|r| r.3).collect();
+    let corr = stats::pearson(&counts, &changes);
+    println!("rows (priority tables) = {}, accessed = {}",
+             stats_rows.len(), accessed.len());
+    println!("Pearson corr(access count, update L2) = {corr:.4} \
+              (paper: 0.9832)");
+    let mut csv = String::from("table,row,count,update_l2\n");
+    for (t, row, c, l2) in accessed.iter().take(50_000) {
+        csv.push_str(&format!("{t},{row},{c},{l2}\n"));
+    }
+    ctx.write_csv("fig6.csv", &csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7 — the headline: overhead + AUC across strategies, both datasets
+// ---------------------------------------------------------------------------
+
+fn fig7(ctx: &Ctx) -> Result<()> {
+    println!("\n== Fig. 7 — overhead + AUC, all strategies ==");
+    let mut csv = String::from("dataset,strategy,overhead_pct,auc,dauc,pls\n");
+    for preset_name in ["kaggle_like", "terabyte_like"] {
+        let model = ctx.model(preset_name)?;
+        let mut cfg = ctx.cfg(preset_name)?;
+        if preset_name == "terabyte_like" {
+            // bound wall-clock: terabyte-like steps are ~4x kaggle cost
+            cfg.data.train_samples = (cfg.data.train_samples / 2
+                / cfg.model.batch).max(1) * cfg.model.batch;
+        }
+        let n = cfg.cluster.n_emb_ps;
+        let schedule = sched(7, 2, cfg.cluster.t_total_h, n, 1); // 12.5%
+        let clean = run_training(&model, &cfg, &RunOptions::default())?;
+        println!("[{preset_name}] no-failure AUC {:.5}", clean.final_auc);
+        println!("{:<14} {:>10} {:>10} {:>9} {:>8}",
+                 "strategy", "overhead%", "AUC", "dAUC", "PLS");
+        for strategy in [Strategy::Full, Strategy::PartialNaive,
+                         Strategy::CprVanilla, Strategy::CprScar,
+                         Strategy::CprMfu, Strategy::CprSsu] {
+            cfg.checkpoint.strategy = strategy;
+            let r = run_training(&model, &cfg, &RunOptions {
+                schedule: schedule.clone(), ..Default::default() })?;
+            println!("{:<14} {:>9.2}% {:>10.5} {:>9.5} {:>8.4}",
+                     r.strategy, 100.0 * r.overhead_frac, r.final_auc,
+                     clean.final_auc - r.final_auc, r.pls);
+            csv.push_str(&format!("{preset_name},{},{},{},{},{}\n",
+                                  r.strategy, 100.0 * r.overhead_frac,
+                                  r.final_auc, clean.final_auc - r.final_auc,
+                                  r.pls));
+        }
+        println!("(paper {preset_name}: full 8.5/8.2% → CPR 0.53/0.68%, \
+                  AUC parity with priority schemes)");
+    }
+    ctx.write_csv("fig7.csv", &csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8 — production-scale cluster emulation (18 Emb PS, 10 h, 1 failure)
+// ---------------------------------------------------------------------------
+
+fn fig8(ctx: &Ctx) -> Result<()> {
+    println!("\n== Fig. 8 — production-scale setup (18 Emb PS, 10 h) ==");
+    let model = ctx.model("mini")?;
+    let mut cfg = ctx.cfg("mini")?;
+    // the paper's production run: 20 trainers + 18 Emb PS, 10 h job,
+    // full saves every 2 h, CPR-vanilla target PLS 0.05; one failure near
+    // the end killing 25% of the Emb PS.
+    cfg.cluster.n_emb_ps = 18;
+    cfg.cluster.n_trainers = 20;
+    cfg.cluster.t_total_h = 10.0;
+    cfg.cluster.t_fail_h = 10.0;
+    // paper's decomposition of the 12.5%: ~10% lost computation, ~2%
+    // saving (2-h cadence), ~0.5% load+reschedule
+    cfg.cluster.o_save_h = 0.04;
+    cfg.cluster.o_load_h = 0.015;
+    cfg.cluster.o_res_h = 0.015;
+    cfg.checkpoint.target_pls = 0.05;
+    let schedule = vec![FailureEvent {
+        time_h: 9.0, // just before the 10-h mark; last full ckpt at 8 h
+        victims: (0..18).step_by(4).take(4).collect(), // ~25% of 18
+    }];
+    let log_every = (cfg.data.train_samples / cfg.model.batch / 20).max(1);
+    let mut csv = String::from("strategy,step,loss\n");
+    for strategy in [Strategy::Full, Strategy::CprVanilla] {
+        cfg.checkpoint.strategy = strategy.clone();
+        // full saves every 2 h (the paper's production cadence); the CPR
+        // plan resolved to a 4-h interval in the paper's run
+        cfg.checkpoint.t_save_override_h =
+            Some(if strategy == Strategy::Full { 2.0 } else { 4.0 });
+        let r = run_training(&model, &cfg, &RunOptions {
+            schedule: schedule.clone(), log_every, ..Default::default() })?;
+        println!("{:<12} overhead {:>5.2}% (save {:.2} load {:.2} lost {:.2} \
+                  res {:.2} h) final loss {:.5}",
+                 r.strategy, 100.0 * r.overhead_frac, r.ledger.save_h,
+                 r.ledger.load_h, r.ledger.lost_h, r.ledger.reschedule_h,
+                 r.final_logloss);
+        for (s, l) in &r.train_loss.points {
+            csv.push_str(&format!("{},{s},{l}\n", r.strategy));
+        }
+    }
+    println!("(paper: 12.5% → 1% overhead, loss parity)");
+    ctx.write_csv("fig8.csv", &csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 9 — target-PLS sensitivity
+// ---------------------------------------------------------------------------
+
+fn fig9(ctx: &Ctx) -> Result<()> {
+    println!("\n== Fig. 9 — target PLS sensitivity (Kaggle-like emulation) ==");
+    let model = ctx.model("mini")?;
+    let mut cfg = ctx.cfg("mini")?;
+    let n = cfg.cluster.n_emb_ps;
+    let schedule = sched(9, 2, cfg.cluster.t_total_h, n, n / 4);
+    let mut csv = String::from("strategy,target_pls,overhead_pct,auc\n");
+    println!("{:<12} {:>10} {:>10} {:>10}", "strategy", "targetPLS",
+             "overhead%", "AUC");
+    for strategy in [Strategy::CprVanilla, Strategy::CprSsu] {
+        for target in [0.02, 0.1, 0.2] {
+            cfg.checkpoint.strategy = strategy.clone();
+            cfg.checkpoint.target_pls = target;
+            let r = run_training(&model, &cfg, &RunOptions {
+                schedule: schedule.clone(), ..Default::default() })?;
+            println!("{:<12} {:>10.2} {:>9.2}% {:>10.5}",
+                     r.strategy, target, 100.0 * r.overhead_frac, r.final_auc);
+            csv.push_str(&format!("{},{target},{},{}\n", r.strategy,
+                                  100.0 * r.overhead_frac, r.final_auc));
+        }
+    }
+    println!("(paper: vanilla 2.9%→0.3% overhead, AUC .8028→.8021; \
+              SSU AUC .8028→.8027)");
+    ctx.write_csv("fig9.csv", &csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 10 — sensitivity to failure count / failed fraction
+// ---------------------------------------------------------------------------
+
+fn fig10(ctx: &Ctx) -> Result<()> {
+    println!("\n== Fig. 10 — failures sensitivity (overhead normalized to full) ==");
+    let model = ctx.model("mini")?;
+    let base = ctx.cfg("mini")?;
+    let n = base.cluster.n_emb_ps;
+    let mut csv = String::from(
+        "failures,fail_frac,full_overhead,ssu_overhead,normalized,beneficial\n");
+    println!("{:>9} {:>7} {:>11} {:>11} {:>11} {:>11}",
+             "failures", "frac", "full%", "cpr-ssu%", "normalized", "hatch");
+    for n_failures in [2usize, 20, 40] {
+        for frac in [0.125, 0.25, 0.5] {
+            let mut cfg = base.clone();
+            // more failures = proportionally lower MTBF (off-peak training
+            // scenario, paper §6.4); target PLS fixed at 0.02
+            cfg.cluster.t_fail_h = cfg.cluster.t_total_h / n_failures as f64;
+            cfg.checkpoint.target_pls = 0.02;
+            let victims = ((n as f64 * frac).round() as usize).clamp(1, n);
+            let schedule = sched(10 + n_failures as u64, n_failures,
+                                 cfg.cluster.t_total_h, n, victims);
+            cfg.checkpoint.strategy = Strategy::Full;
+            let full = run_training(&model, &cfg, &RunOptions {
+                schedule: schedule.clone(), ..Default::default() })?;
+            cfg.checkpoint.strategy = Strategy::CprSsu;
+            let ssu = run_training(&model, &cfg, &RunOptions {
+                schedule, ..Default::default() })?;
+            let norm = ssu.overhead_frac / full.overhead_frac;
+            let hatch = if ssu.fell_back { "RED(fb)" } else { "" };
+            println!("{:>9} {:>7.3} {:>10.2}% {:>10.2}% {:>11.3} {:>11}",
+                     n_failures, frac, 100.0 * full.overhead_frac,
+                     100.0 * ssu.overhead_frac, norm, hatch);
+            csv.push_str(&format!("{n_failures},{frac},{},{},{norm},{}\n",
+                                  full.overhead_frac, ssu.overhead_frac,
+                                  !ssu.fell_back));
+        }
+    }
+    println!("(paper: CPR speedup shrinks with more failures; non-beneficial \
+              configs correctly predicted — red hatch)");
+    ctx.write_csv("fig10.csv", &csv)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 11/12 — PLS ↔ accuracy-degradation linearity
+// ---------------------------------------------------------------------------
+
+fn fig11(ctx: &Ctx, strategy: Strategy, name: &str) -> Result<()> {
+    println!("\n== {} — PLS vs accuracy degradation ({}) ==",
+             if name == "fig11" { "Fig. 11" } else { "Fig. 12" },
+             strategy.name());
+    let model = ctx.model("mini")?;
+    let base = ctx.cfg("mini")?;
+    let clean = run_training(&model, &base, &RunOptions::default())?;
+    println!("no-failure AUC {:.5}", clean.final_auc);
+    let n = base.cluster.n_emb_ps;
+    let mut rng = Rng::new(1111);
+    let mut pls_v = Vec::new();
+    let mut dauc_v = Vec::new();
+    let mut csv = String::from("run,failures,frac,t_save_h,pls,dauc\n");
+    let runs = (16.0 * ctx.scale).ceil().max(8.0) as usize;
+    for run_i in 0..runs {
+        let n_failures = 1 + rng.usize_below(32);
+        let frac = [0.0625, 0.125, 0.25, 0.5][rng.usize_below(4)];
+        let victims = ((n as f64 * frac).round() as usize).clamp(1, n);
+        let t_save = rng.range_f64(1.0, base.cluster.t_total_h);
+        let mut cfg = base.clone();
+        cfg.checkpoint.strategy = strategy.clone();
+        cfg.checkpoint.t_save_override_h = Some(t_save);
+        cfg.cluster.t_fail_h = cfg.cluster.t_total_h / n_failures as f64;
+        let schedule = sched(rng.next_u64(), n_failures,
+                             cfg.cluster.t_total_h, n, victims);
+        let r = run_training(&model, &cfg, &RunOptions {
+            schedule, ..Default::default() })?;
+        let dauc = clean.final_auc - r.final_auc;
+        println!("run {run_i:>2}: failures={n_failures:>2} frac={frac:.3} \
+                  T_save={t_save:>5.1}h  PLS={:.4}  dAUC={dauc:+.5}", r.pls);
+        csv.push_str(&format!("{run_i},{n_failures},{frac},{t_save},{},{dauc}\n",
+                              r.pls));
+        pls_v.push(r.pls);
+        dauc_v.push(dauc);
+    }
+    let corr = stats::pearson(&pls_v, &dauc_v);
+    let (a, b) = stats::linreg(&pls_v, &dauc_v);
+    println!("corr(PLS, dAUC) = {corr:.4} (paper: 0.8764 Kaggle / 0.8175 TB)");
+    println!("linear fit: dAUC = {a:.5} + {b:.5} * PLS");
+    ctx.write_csv(&format!("{name}.csv"), &csv)?;
+    Ok(())
+}
+
+fn fig12(ctx: &Ctx) -> Result<()> {
+    // Fig. 12 = Fig. 11's sweep under CPR-SSU: the slope must flatten.
+    fig11(ctx, Strategy::CprSsu, "fig12")?;
+    println!("(paper: SSU reduces the PLS-accuracy slope vs vanilla, \
+              expanding the useful PLS range)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 13 — scalability projection
+// ---------------------------------------------------------------------------
+
+fn fig13(ctx: &Ctx) -> Result<()> {
+    println!("\n== Fig. 13 — overhead vs cluster size (analytic) ==");
+    let base = preset("mini")?.cluster;
+    let mut csv = String::from("model,nodes,full,cpr\n");
+    for (name, model) in [("linear", FailureModel::LinearMtbf),
+                          ("independent", FailureModel::IndependentP)] {
+        println!("failure model: {name}");
+        println!("{:>7} {:>10} {:>10}", "nodes", "full", "cpr");
+        for p in scalability_sweep(&base, 0.1, model, 0.002,
+                                   &[4, 8, 16, 32, 64, 128, 256]) {
+            println!("{:>7} {:>9.2}% {:>9.2}%", p.n_nodes,
+                     100.0 * p.full_overhead_frac, 100.0 * p.cpr_overhead_frac);
+            csv.push_str(&format!("{name},{},{},{}\n", p.n_nodes,
+                                  p.full_overhead_frac, p.cpr_overhead_frac));
+        }
+    }
+    println!("(paper: full recovery overhead grows with nodes, CPR's shrinks)");
+    ctx.write_csv("fig13.csv", &csv)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — tracker memory overhead (time overhead: `cargo bench`)
+// ---------------------------------------------------------------------------
+
+fn table1(ctx: &Ctx) -> Result<()> {
+    use cpr::checkpoint::tracker::{MfuTracker, ScarTracker, SsuTracker};
+    use cpr::embedding::{PsCluster, TableInfo};
+    println!("\n== Table 1 — tracker memory overhead (r = 0.125) ==");
+    let mut csv = String::from("emb_bytes,scar_pct,mfu_pct,ssu_pct\n");
+    println!("{:>10} {:>10} {:>10} {:>10}",
+             "vec bytes", "SCAR", "MFU", "SSU");
+    for dim in [16usize, 64, 128] {
+        let rows = 100_000usize;
+        let cluster = PsCluster::new(vec![TableInfo { rows, dim }], 4, 1);
+        let mask = vec![true];
+        let scar = ScarTracker::new(&cluster, &mask);
+        let mfu = MfuTracker::new(&[rows], &mask);
+        let ssu = SsuTracker::new(&[rows / 8], &mask, 2, 0);
+        let table_bytes = rows * dim * 4;
+        let pct = |b: usize| 100.0 * b as f64 / table_bytes as f64;
+        println!("{:>10} {:>9.2}% {:>9.3}% {:>9.3}%",
+                 dim * 4, pct(scar.memory_bytes()), pct(mfu.memory_bytes()),
+                 pct(ssu.memory_bytes()));
+        csv.push_str(&format!("{},{},{},{}\n", dim * 4,
+                              pct(scar.memory_bytes()), pct(mfu.memory_bytes()),
+                              pct(ssu.memory_bytes())));
+    }
+    println!("(paper: SCAR 100%, MFU 0.78–6.25%, SSU 0.097–0.78%; \
+              time overhead: `cargo bench` table1_* rows)");
+    ctx.write_csv("table1.csv", &csv)
+}
+
+// ---------------------------------------------------------------------------
+// Ablations — design choices DESIGN.md calls out (not in the paper's
+// evaluation, but the knobs it fixes: r, SSU period, #priority tables)
+// ---------------------------------------------------------------------------
+
+fn ablate(ctx: &Ctx) -> Result<()> {
+    println!("\n== Ablations — CPR design knobs (CPR-SSU unless noted) ==");
+    let model = ctx.model("mini")?;
+    let base = ctx.cfg("mini")?;
+    let n = base.cluster.n_emb_ps;
+    let schedule = sched(77, 2, base.cluster.t_total_h, n, n / 4);
+    let mut csv = String::from("knob,value,overhead_pct,auc,pls\n");
+
+    let mut run_one = |cfg: &JobConfig, knob: &str, value: String,
+                       csv: &mut String| -> Result<()> {
+        let r = run_training(&model, cfg, &RunOptions {
+            schedule: schedule.clone(), ..Default::default() })?;
+        println!("{knob:<18} {value:>8}  overhead {:>5.2}%  AUC {:.5}  PLS {:.4}",
+                 100.0 * r.overhead_frac, r.final_auc, r.pls);
+        csv.push_str(&format!("{knob},{value},{},{},{}\n",
+                              100.0 * r.overhead_frac, r.final_auc, r.pls));
+        Ok(())
+    };
+
+    // r: the priority fraction (paper fixes 0.125)
+    for r in [0.0625, 0.125, 0.25, 0.5] {
+        let mut cfg = base.clone();
+        cfg.checkpoint.strategy = Strategy::CprSsu;
+        cfg.checkpoint.r = r;
+        run_one(&cfg, "r", format!("{r}"), &mut csv)?;
+    }
+    // SSU sampling period (paper fixes 2)
+    for period in [1usize, 2, 4, 8] {
+        let mut cfg = base.clone();
+        cfg.checkpoint.strategy = Strategy::CprSsu;
+        cfg.checkpoint.ssu_period = period;
+        run_one(&cfg, "ssu_period", format!("{period}"), &mut csv)?;
+    }
+    // number of priority tables (paper fixes 7)
+    for tables in [1usize, 3, 7, 26] {
+        let mut cfg = base.clone();
+        cfg.checkpoint.strategy = Strategy::CprMfu;
+        cfg.checkpoint.priority_tables = tables;
+        run_one(&cfg, "priority_tables", format!("{tables}"), &mut csv)?;
+    }
+    // embedding optimizer: checkpointed state consistency (sgd vs adagrad)
+    for opt in ["sgd", "adagrad"] {
+        let mut cfg = base.clone();
+        cfg.checkpoint.strategy = Strategy::CprSsu;
+        cfg.train.emb_optimizer =
+            cpr::embedding::EmbOptimizer::parse(opt).unwrap();
+        if opt == "adagrad" {
+            cfg.train.emb_lr = 1.0; // adagrad normalizes per-row scale
+        }
+        run_one(&cfg, "emb_optimizer", opt.to_string(), &mut csv)?;
+    }
+    ctx.write_csv("ablations.csv", &csv)
+}

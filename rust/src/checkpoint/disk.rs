@@ -1,0 +1,198 @@
+//! Asynchronous on-disk checkpoint writer.
+//!
+//! Production checkpointing overlaps serialization/IO with training
+//! (DeepFreeze, ai-ckpt — paper §7.1); the emulated O_save constant models
+//! that cost, but the system should also *really* persist. A
+//! [`DiskCheckpointer`] owns a writer thread: `submit` hands it a cloned
+//! [`CheckpointStore`] snapshot and returns immediately; the trainer never
+//! blocks on IO. Files rotate as `ckpt-<step>.bin` with a `latest` symlink
+//! equivalent (a `LATEST` text file — symlinks are not portable), keeping
+//! the most recent `keep` checkpoints.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::CheckpointStore;
+
+enum Msg {
+    Write(Box<CheckpointStore>),
+    Stop,
+}
+
+/// Background checkpoint-to-disk writer.
+pub struct DiskCheckpointer {
+    dir: PathBuf,
+    tx: mpsc::Sender<Msg>,
+    worker: Option<JoinHandle<Result<()>>>,
+    keep: usize,
+}
+
+impl DiskCheckpointer {
+    pub fn new(dir: &str, keep: usize) -> Result<Self> {
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let wdir = dir.clone();
+        let keep_n = keep.max(1);
+        let worker = std::thread::spawn(move || -> Result<()> {
+            while let Ok(Msg::Write(store)) = rx.recv() {
+                let path = wdir.join(format!("ckpt-{}.bin", store.step));
+                let tmp = wdir.join(format!(".ckpt-{}.tmp", store.step));
+                store.write_file(&tmp)?;
+                std::fs::rename(&tmp, &path)?; // atomic publish
+                std::fs::write(wdir.join("LATEST"),
+                               format!("ckpt-{}.bin\n", store.step))?;
+                Self::gc(&wdir, keep_n)?;
+            }
+            Ok(())
+        });
+        Ok(Self { dir, tx, worker: Some(worker), keep: keep_n })
+    }
+
+    /// Enqueue a snapshot for writing; returns immediately.
+    pub fn submit(&self, snapshot: CheckpointStore) -> Result<()> {
+        self.tx
+            .send(Msg::Write(Box::new(snapshot)))
+            .map_err(|_| anyhow::anyhow!("checkpoint writer thread died"))
+    }
+
+    /// Wait for all queued writes to land (checkpoint barrier).
+    pub fn flush(&mut self) -> Result<()> {
+        // drain by restarting the worker: send Stop, join, respawn
+        self.tx.send(Msg::Stop).ok();
+        if let Some(w) = self.worker.take() {
+            w.join().map_err(|_| anyhow::anyhow!("writer panicked"))??;
+        }
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let wdir = self.dir.clone();
+        let keep_n = self.keep;
+        self.worker = Some(std::thread::spawn(move || -> Result<()> {
+            while let Ok(Msg::Write(store)) = rx.recv() {
+                let path = wdir.join(format!("ckpt-{}.bin", store.step));
+                let tmp = wdir.join(format!(".ckpt-{}.tmp", store.step));
+                store.write_file(&tmp)?;
+                std::fs::rename(&tmp, &path)?;
+                std::fs::write(wdir.join("LATEST"),
+                               format!("ckpt-{}.bin\n", store.step))?;
+                Self::gc(&wdir, keep_n)?;
+            }
+            Ok(())
+        }));
+        self.tx = tx;
+        Ok(())
+    }
+
+    /// Load the most recent checkpoint in `dir`, if any.
+    pub fn load_latest(dir: &str) -> Result<Option<CheckpointStore>> {
+        let latest = Path::new(dir).join("LATEST");
+        if !latest.exists() {
+            return Ok(None);
+        }
+        let name = std::fs::read_to_string(&latest)?;
+        let path = Path::new(dir).join(name.trim());
+        Ok(Some(CheckpointStore::read_file(&path)?))
+    }
+
+    fn gc(dir: &Path, keep: usize) -> Result<()> {
+        let mut ckpts: Vec<(u64, PathBuf)> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name().into_string().ok()?;
+                let step: u64 = name.strip_prefix("ckpt-")?
+                    .strip_suffix(".bin")?.parse().ok()?;
+                Some((step, e.path()))
+            })
+            .collect();
+        ckpts.sort_by_key(|(s, _)| std::cmp::Reverse(*s));
+        for (_, path) in ckpts.into_iter().skip(keep) {
+            std::fs::remove_file(path).ok();
+        }
+        Ok(())
+    }
+}
+
+impl Drop for DiskCheckpointer {
+    fn drop(&mut self) {
+        self.tx.send(Msg::Stop).ok();
+        if let Some(w) = self.worker.take() {
+            w.join().ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::{PsCluster, TableInfo};
+
+    fn tmpdir(tag: &str) -> String {
+        let d = std::env::temp_dir().join(format!("cpr_disk_{tag}"));
+        std::fs::remove_dir_all(&d).ok();
+        d.to_str().unwrap().to_string()
+    }
+
+    fn store(step: u64) -> CheckpointStore {
+        let c = PsCluster::new(vec![TableInfo { rows: 12, dim: 4 }], 2, 1);
+        let mut s = CheckpointStore::initial(&c, vec![vec![step as f32]]);
+        s.mark_position(vec![vec![step as f32]], step, step * 128);
+        s
+    }
+
+    #[test]
+    fn writes_and_loads_latest() {
+        let dir = tmpdir("a");
+        let mut w = DiskCheckpointer::new(&dir, 3).unwrap();
+        w.submit(store(10)).unwrap();
+        w.submit(store(20)).unwrap();
+        w.flush().unwrap();
+        let latest = DiskCheckpointer::load_latest(&dir).unwrap().unwrap();
+        assert_eq!(latest.step, 20);
+        assert_eq!(latest.mlp, vec![vec![20.0]]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rotation_keeps_only_newest() {
+        let dir = tmpdir("b");
+        let mut w = DiskCheckpointer::new(&dir, 2).unwrap();
+        for step in [1, 2, 3, 4, 5] {
+            w.submit(store(step)).unwrap();
+        }
+        w.flush().unwrap();
+        let files: Vec<String> = std::fs::read_dir(&dir).unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().into_string().unwrap())
+            .filter(|n| n.starts_with("ckpt-"))
+            .collect();
+        assert_eq!(files.len(), 2, "{files:?}");
+        assert!(files.contains(&"ckpt-4.bin".to_string()));
+        assert!(files.contains(&"ckpt-5.bin".to_string()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_latest_empty_dir_is_none() {
+        let dir = tmpdir("c");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(DiskCheckpointer::load_latest(&dir).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn submit_does_not_block_on_io() {
+        let dir = tmpdir("d");
+        let w = DiskCheckpointer::new(&dir, 2).unwrap();
+        let t0 = std::time::Instant::now();
+        for step in 0..20 {
+            w.submit(store(step)).unwrap();
+        }
+        // 20 submits must return near-instantly (writes happen behind)
+        assert!(t0.elapsed().as_millis() < 200);
+        drop(w); // drains on drop
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

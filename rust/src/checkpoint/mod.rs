@@ -1,0 +1,422 @@
+//! Checkpoint storage + save/restore for full and partial recovery.
+//!
+//! [`CheckpointStore`] is the emulated persistent store: a mirror of every
+//! Emb PS shard plus the MLP parameters and the training position (step /
+//! sample count). Full recovery restores everything and rewinds the data
+//! iterator; partial recovery restores only the failed nodes' shards and
+//! keeps everyone else's progress (paper §2.3).
+//!
+//! Priority checkpointing (CPR-SCAR/MFU/SSU) saves selected *rows* into the
+//! mirror at a higher cadence instead of whole tables, so after a failure
+//! the hot rows come back much fresher than T_save-old (paper §4.2).
+//! On-disk persistence round-trips the store through a flat binary format.
+
+pub mod disk;
+pub mod tracker;
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::embedding::PsCluster;
+
+/// Snapshot store (the emulated persistent checkpoint target).
+#[derive(Clone, Debug)]
+pub struct CheckpointStore {
+    /// mirror[node][table], identical layout to the cluster shards
+    shards: Vec<Vec<Vec<f32>>>,
+    /// optimizer-state mirror[node][table] (row-wise accumulators);
+    /// paper §2.2: checkpoints include the optimizer state
+    opt: Vec<Vec<Vec<f32>>>,
+    /// MLP parameters at the last save
+    pub mlp: Vec<Vec<f32>>,
+    /// training position at the last save that updated the PLS marker
+    pub step: u64,
+    pub samples: u64,
+}
+
+impl CheckpointStore {
+    /// Initial checkpoint = the cluster's initial state (epoch 0).
+    pub fn initial(cluster: &PsCluster, mlp: Vec<Vec<f32>>) -> Self {
+        let shards = (0..cluster.n_nodes)
+            .map(|n| {
+                (0..cluster.tables.len())
+                    .map(|t| cluster.shard(n, t).to_vec())
+                    .collect()
+            })
+            .collect();
+        let opt = (0..cluster.n_nodes)
+            .map(|n| {
+                (0..cluster.tables.len())
+                    .map(|t| cluster.opt_shard(n, t).to_vec())
+                    .collect()
+            })
+            .collect();
+        Self { shards, opt, mlp, step: 0, samples: 0 }
+    }
+
+    /// Full checkpoint: mirror every shard + MLP params + position.
+    pub fn full_save(
+        &mut self,
+        cluster: &PsCluster,
+        mlp: Vec<Vec<f32>>,
+        step: u64,
+        samples: u64,
+    ) {
+        for n in 0..cluster.n_nodes {
+            for t in 0..cluster.tables.len() {
+                self.shards[n][t].copy_from_slice(cluster.shard(n, t));
+                self.opt[n][t].copy_from_slice(cluster.opt_shard(n, t));
+            }
+        }
+        self.mlp = mlp;
+        self.step = step;
+        self.samples = samples;
+    }
+
+    /// Priority (partial-content) save: copy only `rows` of `table` into
+    /// the mirror. Does NOT move the PLS position marker.
+    pub fn save_rows(&mut self, cluster: &PsCluster, table: usize, rows: &[u32]) {
+        let dim = cluster.tables[table].dim;
+        for &row in rows {
+            let (node, local) = cluster.route(row as usize);
+            let src = &cluster.shard(node, table)[local * dim..(local + 1) * dim];
+            self.shards[node][table][local * dim..(local + 1) * dim]
+                .copy_from_slice(src);
+            self.opt[node][table][local] = cluster.opt_shard(node, table)[local];
+        }
+    }
+
+    /// Save one whole table (the small non-priority tables).
+    pub fn save_table(&mut self, cluster: &PsCluster, table: usize) {
+        for n in 0..cluster.n_nodes {
+            self.shards[n][table].copy_from_slice(cluster.shard(n, table));
+            self.opt[n][table].copy_from_slice(cluster.opt_shard(n, table));
+        }
+    }
+
+    /// Record MLP params + advance the PLS position marker (done at every
+    /// interval boundary, for all strategies).
+    pub fn mark_position(&mut self, mlp: Vec<Vec<f32>>, step: u64, samples: u64) {
+        self.mlp = mlp;
+        self.step = step;
+        self.samples = samples;
+    }
+
+    /// PARTIAL recovery: restore only `node`'s shards; everyone else keeps
+    /// their progress.
+    pub fn restore_node(&self, cluster: &mut PsCluster, node: usize) {
+        for t in 0..cluster.tables.len() {
+            cluster.shard_mut(node, t).copy_from_slice(&self.shards[node][t]);
+            cluster.opt_shard_mut(node, t).copy_from_slice(&self.opt[node][t]);
+        }
+    }
+
+    /// FULL recovery: restore every shard; returns (mlp, step, samples) for
+    /// the trainer to rewind to.
+    pub fn restore_all(&self, cluster: &mut PsCluster) -> (Vec<Vec<f32>>, u64, u64) {
+        for n in 0..cluster.n_nodes {
+            for t in 0..cluster.tables.len() {
+                cluster.shard_mut(n, t).copy_from_slice(&self.shards[n][t]);
+                cluster.opt_shard_mut(n, t).copy_from_slice(&self.opt[n][t]);
+            }
+        }
+        (self.mlp.clone(), self.step, self.samples)
+    }
+
+    /// Bytes a full checkpoint occupies (tables + MLP).
+    pub fn size_bytes(&self) -> usize {
+        let t: usize = self.shards.iter()
+            .flat_map(|n| n.iter().map(|s| s.len() * 4)).sum();
+        t + self.mlp.iter().map(|p| p.len() * 4).sum::<usize>()
+    }
+
+    // -- on-disk persistence ------------------------------------------------
+
+    const MAGIC: u32 = 0x4350_5232; // "CPR2"
+
+    pub fn write_file(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        w32(&mut f, Self::MAGIC)?;
+        w64(&mut f, self.step)?;
+        w64(&mut f, self.samples)?;
+        w32(&mut f, self.shards.len() as u32)?;
+        w32(&mut f, self.shards.first().map_or(0, |n| n.len()) as u32)?;
+        for node in &self.shards {
+            for shard in node {
+                w32(&mut f, shard.len() as u32)?;
+                wf32s(&mut f, shard)?;
+            }
+        }
+        for node in &self.opt {
+            for st in node {
+                w32(&mut f, st.len() as u32)?;
+                wf32s(&mut f, st)?;
+            }
+        }
+        w32(&mut f, self.mlp.len() as u32)?;
+        for p in &self.mlp {
+            w32(&mut f, p.len() as u32)?;
+            wf32s(&mut f, p)?;
+        }
+        Ok(())
+    }
+
+    pub fn read_file(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?,
+        );
+        if r32(&mut f)? != Self::MAGIC {
+            bail!("{} is not a CPR checkpoint", path.display());
+        }
+        let step = r64(&mut f)?;
+        let samples = r64(&mut f)?;
+        let n_nodes = r32(&mut f)? as usize;
+        let n_tables = r32(&mut f)? as usize;
+        let mut shards = Vec::with_capacity(n_nodes);
+        for _ in 0..n_nodes {
+            let mut node = Vec::with_capacity(n_tables);
+            for _ in 0..n_tables {
+                let len = r32(&mut f)? as usize;
+                node.push(rf32s(&mut f, len)?);
+            }
+            shards.push(node);
+        }
+        let mut opt = Vec::with_capacity(n_nodes);
+        for _ in 0..n_nodes {
+            let mut node = Vec::with_capacity(n_tables);
+            for _ in 0..n_tables {
+                let len = r32(&mut f)? as usize;
+                node.push(rf32s(&mut f, len)?);
+            }
+            opt.push(node);
+        }
+        let n_mlp = r32(&mut f)? as usize;
+        let mut mlp = Vec::with_capacity(n_mlp);
+        for _ in 0..n_mlp {
+            let len = r32(&mut f)? as usize;
+            mlp.push(rf32s(&mut f, len)?);
+        }
+        Ok(Self { shards, opt, mlp, step, samples })
+    }
+}
+
+fn w32<W: Write>(w: &mut W, v: u32) -> Result<()> {
+    Ok(w.write_all(&v.to_le_bytes())?)
+}
+
+fn w64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    Ok(w.write_all(&v.to_le_bytes())?)
+}
+
+fn wf32s<W: Write>(w: &mut W, v: &[f32]) -> Result<()> {
+    // SAFETY: f32 slice reinterpreted as bytes (little-endian hosts only,
+    // which is all this image targets)
+    let bytes = unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+    };
+    Ok(w.write_all(bytes)?)
+}
+
+fn r32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn rf32s<R: Read>(r: &mut R, len: usize) -> Result<Vec<f32>> {
+    let mut v = vec![0f32; len];
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, len * 4)
+    };
+    r.read_exact(bytes)?;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::TableInfo;
+    use crate::prop_assert;
+    use crate::testing::{forall, gen};
+
+    fn cluster() -> PsCluster {
+        PsCluster::new(
+            vec![TableInfo { rows: 50, dim: 4 }, TableInfo { rows: 11, dim: 4 }],
+            3,
+            9,
+        )
+    }
+
+    fn perturb(c: &mut PsCluster, seed: u64) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let idx: Vec<u32> = (0..20)
+            .flat_map(|_| vec![rng.below(50) as u32, rng.below(11) as u32])
+            .collect();
+        let grads: Vec<f32> = (0..20 * 2 * 4).map(|_| rng.f32() - 0.5).collect();
+        c.sgd_update(&idx, &grads, 0.5);
+    }
+
+    #[test]
+    fn full_save_restore_roundtrip() {
+        let mut c = cluster();
+        let mut store = CheckpointStore::initial(&c, vec![vec![1.0, 2.0]]);
+        perturb(&mut c, 1);
+        store.full_save(&c, vec![vec![3.0, 4.0]], 10, 1280);
+        let golden: Vec<f32> = c.shard(0, 0).to_vec();
+        perturb(&mut c, 2);
+        assert_ne!(c.shard(0, 0), &golden[..]);
+        let (mlp, step, samples) = store.restore_all(&mut c);
+        assert_eq!(c.shard(0, 0), &golden[..]);
+        assert_eq!(mlp, vec![vec![3.0, 4.0]]);
+        assert_eq!((step, samples), (10, 1280));
+    }
+
+    #[test]
+    fn partial_restore_touches_only_failed_node() {
+        let mut c = cluster();
+        let store = CheckpointStore::initial(&c, vec![]);
+        perturb(&mut c, 3);
+        let survivor: Vec<f32> = c.shard(1, 0).to_vec();
+        store.restore_node(&mut c, 0);
+        // node 0 back to init, node 1 untouched
+        let fresh = cluster();
+        assert_eq!(c.shard(0, 0), fresh.shard(0, 0));
+        assert_eq!(c.shard(1, 0), &survivor[..]);
+    }
+
+    #[test]
+    fn save_rows_updates_only_those_rows() {
+        let mut c = cluster();
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        perturb(&mut c, 4);
+        let trained_row5: Vec<f32> = {
+            let mut v = vec![0.0; 4];
+            c.read_row(0, 5, &mut v);
+            v
+        };
+        store.save_rows(&c, 0, &[5]);
+        perturb(&mut c, 5);
+        // restore the node that owns row 5 (5 % 3 == 2)
+        store.restore_node(&mut c, 2);
+        let mut after = vec![0.0; 4];
+        c.read_row(0, 5, &mut after);
+        assert_eq!(after, trained_row5, "saved row must come back fresh");
+        // a different row on the same node must come back as INIT (stale)
+        let fresh = cluster();
+        let mut got = vec![0.0; 4];
+        let mut want = vec![0.0; 4];
+        c.read_row(0, 8, &mut got); // 8 % 3 == 2, same node, not saved
+        fresh.read_row(0, 8, &mut want);
+        assert_eq!(got, want, "unsaved row must be stale");
+    }
+
+    #[test]
+    fn save_table_saves_all_its_rows() {
+        let mut c = cluster();
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        perturb(&mut c, 6);
+        store.save_table(&c, 1);
+        let golden: Vec<Vec<f32>> =
+            (0..3).map(|n| c.shard(n, 1).to_vec()).collect();
+        perturb(&mut c, 7);
+        for n in 0..3 {
+            store.restore_node(&mut c, n);
+        }
+        for n in 0..3 {
+            assert_eq!(c.shard(n, 1), &golden[n][..]);
+        }
+    }
+
+    #[test]
+    fn disk_roundtrip_preserves_everything() {
+        let mut c = cluster();
+        perturb(&mut c, 8);
+        let mut store = CheckpointStore::initial(&c, vec![vec![1.5; 7]]);
+        store.full_save(&c, vec![vec![2.5; 7]], 42, 5376);
+        let dir = std::env::temp_dir().join("cpr_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("store.bin");
+        store.write_file(&path).unwrap();
+        let back = CheckpointStore::read_file(&path).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.samples, 5376);
+        assert_eq!(back.mlp, store.mlp);
+        assert_eq!(back.shards, store.shards);
+        assert_eq!(back.opt, store.opt);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn read_rejects_garbage() {
+        let dir = std::env::temp_dir().join("cpr_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(CheckpointStore::read_file(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn optimizer_state_rides_with_rows() {
+        use crate::embedding::EmbOptimizer;
+        let mut c = cluster();
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        let opt = EmbOptimizer::RowAdagrad { eps: 1e-8 };
+        // accumulate state on row 5 (node 5 % 3 == 2), checkpoint it
+        c.apply_grads(&[5, 2], 1, &vec![1.0f32; 8], 1.0, opt);
+        store.full_save(&c, vec![], 1, 128);
+        let (node, local) = c.route(5);
+        let saved_acc = c.opt_shard(node, 0)[local];
+        // more training, then fail the node and restore
+        c.apply_grads(&[5, 2], 1, &vec![1.0f32; 8], 1.0, opt);
+        assert!(c.opt_shard(node, 0)[local] > saved_acc);
+        store.restore_node(&mut c, node);
+        assert_eq!(c.opt_shard(node, 0)[local], saved_acc,
+                   "optimizer state must revert with the rows");
+    }
+
+    #[test]
+    fn property_partial_restore_preserves_survivors() {
+        forall(41, 30, |rng| {
+            let n_nodes = gen::usize_in(rng, 2, 6);
+            let mut c = PsCluster::new(
+                vec![TableInfo { rows: gen::usize_in(rng, 8, 40), dim: 4 }],
+                n_nodes,
+                rng.next_u64(),
+            );
+            let mut store = CheckpointStore::initial(&c, vec![]);
+            // train a bit, checkpoint, train more, fail a random node
+            let rows = c.tables[0].rows;
+            let idx: Vec<u32> =
+                (0..16).map(|_| rng.below(rows as u64) as u32).collect();
+            let grads: Vec<f32> = (0..16 * 4).map(|_| rng.f32()).collect();
+            c.sgd_update(&idx, &grads, 0.1);
+            store.full_save(&c, vec![], 1, 128);
+            c.sgd_update(&idx, &grads, 0.1);
+            let victim = rng.usize_below(n_nodes);
+            let survivors: Vec<Vec<f32>> = (0..n_nodes)
+                .filter(|&n| n != victim)
+                .map(|n| c.shard(n, 0).to_vec())
+                .collect();
+            store.restore_node(&mut c, victim);
+            let after: Vec<Vec<f32>> = (0..n_nodes)
+                .filter(|&n| n != victim)
+                .map(|n| c.shard(n, 0).to_vec())
+                .collect();
+            prop_assert!(survivors == after, "survivor state changed");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,430 @@
+//! Priority trackers: decide *which* embedding rows deserve checkpoint
+//! bandwidth (paper §4.2).
+//!
+//! * [`ScarTracker`] — prior work's heuristic (Qiao et al. 2019): rank rows
+//!   by the L2 norm of their accumulated change since last save. Faithful
+//!   implementation: keeps a full mirror of the last-saved values of every
+//!   priority table — the 100% memory overhead the paper criticizes
+//!   (Table 1).
+//! * [`MfuTracker`] — CPR-MFU: a 4-byte access counter per row (0.78–6.25%
+//!   of table memory), cleared when a row is saved. Access frequency is an
+//!   excellent proxy for update magnitude (corr ≈ 0.983, Fig. 6).
+//! * [`SsuTracker`] — CPR-SSU: sub-sample every `period`-th access into a
+//!   bounded candidate list with random eviction (memory r× MFU's, time
+//!   O(N)); the subsampling acts as a high-pass filter on access frequency.
+//!
+//! Top-k selection uses `select_nth_unstable` — O(N) rather than the
+//! O(N log N) the paper budgets for SCAR/MFU (a free improvement, see
+//! EXPERIMENTS.md §Perf).
+
+use std::collections::HashSet;
+
+use crate::embedding::PsCluster;
+use crate::util::rng::Rng;
+
+/// Which tables a tracker prioritizes: the `priority_tables` largest ones
+/// (paper: 7 of 26, ≈99.6% of rows). Returns a mask over table ids.
+pub fn priority_mask(table_rows: &[usize], priority_tables: usize) -> Vec<bool> {
+    let mut order: Vec<usize> = (0..table_rows.len()).collect();
+    order.sort_by_key(|&t| std::cmp::Reverse(table_rows[t]));
+    let mut mask = vec![false; table_rows.len()];
+    for &t in order.iter().take(priority_tables.min(order.len())) {
+        mask[t] = true;
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------------
+// MFU
+// ---------------------------------------------------------------------------
+
+/// CPR-MFU: per-row u32 access counters on priority tables.
+pub struct MfuTracker {
+    /// counters[table] — empty vec for non-priority tables
+    counters: Vec<Vec<u32>>,
+    mask: Vec<bool>,
+}
+
+impl MfuTracker {
+    pub fn new(table_rows: &[usize], mask: &[bool]) -> Self {
+        let counters = table_rows
+            .iter()
+            .zip(mask)
+            .map(|(&rows, &on)| if on { vec![0u32; rows] } else { Vec::new() })
+            .collect();
+        Self { counters, mask: mask.to_vec() }
+    }
+
+    /// Record one minibatch of accesses. `indices` is [B, T] row-major.
+    pub fn record_batch(&mut self, indices: &[u32], num_tables: usize) {
+        self.record_batch_hot(indices, num_tables, 1);
+    }
+
+    /// Multi-hot variant: `indices` is [B, T, H] row-major.
+    pub fn record_batch_hot(&mut self, indices: &[u32], num_tables: usize,
+                            hotness: usize) {
+        for chunk in indices.chunks_exact(num_tables * hotness) {
+            for (slot, &row) in chunk.iter().enumerate() {
+                let t = slot / hotness;
+                if self.mask[t] {
+                    self.counters[t][row as usize] += 1;
+                }
+            }
+        }
+    }
+
+    /// The `k` most-frequently-used rows of `table` (arbitrary order).
+    pub fn top_k(&self, table: usize, k: usize) -> Vec<u32> {
+        debug_assert!(self.mask[table]);
+        let c = &self.counters[table];
+        let mut rows: Vec<u32> = (0..c.len() as u32).collect();
+        if k >= rows.len() {
+            return rows;
+        }
+        // O(N) selection of the k largest by count
+        rows.select_nth_unstable_by_key(k, |&r| {
+            std::cmp::Reverse(c[r as usize])
+        });
+        rows.truncate(k);
+        rows
+    }
+
+    /// Paper: "when an embedding vector is saved, its counter is cleared."
+    pub fn clear_rows(&mut self, table: usize, rows: &[u32]) {
+        for &r in rows {
+            self.counters[table][r as usize] = 0;
+        }
+    }
+
+    pub fn count(&self, table: usize, row: u32) -> u32 {
+        self.counters[table][row as usize]
+    }
+
+    /// Tracker memory (Table 1): 4 bytes per priority-table row.
+    pub fn memory_bytes(&self) -> usize {
+        self.counters.iter().map(|c| c.len() * 4).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SSU
+// ---------------------------------------------------------------------------
+
+/// CPR-SSU: bounded candidate list per priority table.
+pub struct SsuTracker {
+    lists: Vec<SsuList>,
+    mask: Vec<bool>,
+    period: usize,
+    tick: usize,
+    rng: Rng,
+}
+
+struct SsuList {
+    set: HashSet<u32>,
+    vec: Vec<u32>,
+    cap: usize,
+}
+
+impl SsuList {
+    fn insert(&mut self, row: u32, rng: &mut Rng) {
+        if self.cap == 0 || !self.set.insert(row) {
+            return;
+        }
+        if self.vec.len() < self.cap {
+            self.vec.push(row);
+        } else {
+            // random eviction of an existing entry (paper: "randomly
+            // discards the overflowing entries")
+            let slot = rng.usize_below(self.vec.len());
+            let evicted = self.vec[slot];
+            self.set.remove(&evicted);
+            self.vec[slot] = row;
+        }
+    }
+}
+
+impl SsuTracker {
+    /// `caps[t]` = list capacity for table t (≈ r·rows); `period` = the
+    /// access subsampling period (paper uses 2).
+    pub fn new(caps: &[usize], mask: &[bool], period: usize, seed: u64) -> Self {
+        assert!(period >= 1);
+        let lists = caps
+            .iter()
+            .zip(mask)
+            .map(|(&cap, &on)| SsuList {
+                set: HashSet::new(),
+                vec: Vec::new(),
+                cap: if on { cap } else { 0 },
+            })
+            .collect();
+        Self { lists, mask: mask.to_vec(), period, tick: 0, rng: Rng::new(seed) }
+    }
+
+    pub fn record_batch(&mut self, indices: &[u32], num_tables: usize) {
+        self.record_batch_hot(indices, num_tables, 1);
+    }
+
+    /// Multi-hot variant: `indices` is [B, T, H] row-major.
+    pub fn record_batch_hot(&mut self, indices: &[u32], num_tables: usize,
+                            hotness: usize) {
+        for chunk in indices.chunks_exact(num_tables * hotness) {
+            for (slot, &row) in chunk.iter().enumerate() {
+                let t = slot / hotness;
+                if !self.mask[t] {
+                    continue;
+                }
+                self.tick += 1;
+                if self.tick % self.period == 0 {
+                    let list = &mut self.lists[t];
+                    // borrow dance: rng and lists are disjoint fields
+                    let rng = &mut self.rng;
+                    list.insert(row, rng);
+                }
+            }
+        }
+    }
+
+    /// Take the current candidate list for `table`, clearing it.
+    pub fn drain(&mut self, table: usize) -> Vec<u32> {
+        let list = &mut self.lists[table];
+        list.set.clear();
+        std::mem::take(&mut list.vec)
+    }
+
+    pub fn len(&self, table: usize) -> usize {
+        self.lists[table].vec.len()
+    }
+
+    /// Tracker memory (Table 1): 4 bytes per list slot (+ set, counted at
+    /// 4 bytes too for the analytic table).
+    pub fn memory_bytes(&self) -> usize {
+        self.lists.iter().map(|l| l.cap * 4).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SCAR
+// ---------------------------------------------------------------------------
+
+/// SCAR (prior work): rank rows by L2 change since their last save.
+/// Holds a full mirror of priority tables — 100% memory overhead.
+pub struct ScarTracker {
+    /// last_saved[table] — full row-major mirror, empty for non-priority
+    last_saved: Vec<Vec<f32>>,
+    mask: Vec<bool>,
+    dims: Vec<usize>,
+}
+
+impl ScarTracker {
+    pub fn new(cluster: &PsCluster, mask: &[bool]) -> Self {
+        let mut last_saved = Vec::with_capacity(cluster.tables.len());
+        let dims: Vec<usize> = cluster.tables.iter().map(|t| t.dim).collect();
+        for (t, info) in cluster.tables.iter().enumerate() {
+            if mask[t] {
+                let mut mirror = vec![0.0f32; info.rows * info.dim];
+                let mut row = vec![0.0f32; info.dim];
+                for r in 0..info.rows {
+                    cluster.read_row(t, r, &mut row);
+                    mirror[r * info.dim..(r + 1) * info.dim].copy_from_slice(&row);
+                }
+                last_saved.push(mirror);
+            } else {
+                last_saved.push(Vec::new());
+            }
+        }
+        Self { last_saved, mask: mask.to_vec(), dims }
+    }
+
+    /// The `k` rows of `table` with the largest change-L2 since last save.
+    pub fn top_k(&self, cluster: &PsCluster, table: usize, k: usize) -> Vec<u32> {
+        debug_assert!(self.mask[table]);
+        let dim = self.dims[table];
+        let mirror = &self.last_saved[table];
+        let rows = mirror.len() / dim;
+        let mut cur = vec![0.0f32; dim];
+        let mut scored: Vec<(f32, u32)> = (0..rows)
+            .map(|r| {
+                cluster.read_row(table, r, &mut cur);
+                let base = &mirror[r * dim..(r + 1) * dim];
+                let norm2: f32 = cur.iter().zip(base)
+                    .map(|(a, b)| (a - b) * (a - b)).sum();
+                (norm2, r as u32)
+            })
+            .collect();
+        if k >= scored.len() {
+            return scored.into_iter().map(|(_, r)| r).collect();
+        }
+        scored.select_nth_unstable_by(k, |a, b| b.0.partial_cmp(&a.0).unwrap());
+        scored.truncate(k);
+        scored.into_iter().map(|(_, r)| r).collect()
+    }
+
+    /// After saving `rows` of `table`, refresh their mirror entries.
+    pub fn mark_saved(&mut self, cluster: &PsCluster, table: usize, rows: &[u32]) {
+        let dim = self.dims[table];
+        let mirror = &mut self.last_saved[table];
+        let mut cur = vec![0.0f32; dim];
+        for &r in rows {
+            cluster.read_row(table, r as usize, &mut cur);
+            mirror[r as usize * dim..(r as usize + 1) * dim].copy_from_slice(&cur);
+        }
+    }
+
+    /// Table 1: full mirror = 100% of priority-table memory.
+    pub fn memory_bytes(&self) -> usize {
+        self.last_saved.iter().map(|m| m.len() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::TableInfo;
+    use crate::prop_assert;
+    use crate::testing::{forall, gen};
+
+    fn cluster2() -> PsCluster {
+        PsCluster::new(
+            vec![TableInfo { rows: 100, dim: 4 }, TableInfo { rows: 10, dim: 4 }],
+            4,
+            7,
+        )
+    }
+
+    #[test]
+    fn priority_mask_picks_largest() {
+        let mask = priority_mask(&[10, 500, 20, 400, 5], 2);
+        assert_eq!(mask, vec![false, true, false, true, false]);
+    }
+
+    #[test]
+    fn mfu_counts_and_selects() {
+        let mask = vec![true, false];
+        let mut t = MfuTracker::new(&[100, 10], &mask);
+        // batch of 3 samples, 2 tables; table-0 rows 5,5,9
+        t.record_batch(&[5, 0, 5, 1, 9, 2], 2);
+        assert_eq!(t.count(0, 5), 2);
+        assert_eq!(t.count(0, 9), 1);
+        let top = t.top_k(0, 1);
+        assert_eq!(top, vec![5]);
+        let top2 = t.top_k(0, 2);
+        assert!(top2.contains(&5) && top2.contains(&9));
+        t.clear_rows(0, &[5]);
+        assert_eq!(t.count(0, 5), 0);
+        assert_eq!(t.top_k(0, 1), vec![9]);
+    }
+
+    #[test]
+    fn mfu_memory_is_4_bytes_per_priority_row() {
+        let t = MfuTracker::new(&[100, 10], &[true, false]);
+        assert_eq!(t.memory_bytes(), 400);
+    }
+
+    #[test]
+    fn mfu_top_k_is_truly_the_top() {
+        forall(31, 50, |rng| {
+            let rows = gen::usize_in(rng, 10, 200);
+            let mut t = MfuTracker::new(&[rows], &[true]);
+            let accesses: Vec<u32> =
+                (0..500).map(|_| rng.below(rows as u64) as u32).collect();
+            t.record_batch(&accesses, 1);
+            let k = gen::usize_in(rng, 1, rows);
+            let top = t.top_k(0, k);
+            prop_assert!(top.len() == k.min(rows));
+            let min_top = top.iter().map(|&r| t.count(0, r)).min().unwrap();
+            // every non-selected row must not beat the weakest selected
+            let sel: std::collections::HashSet<u32> = top.iter().copied().collect();
+            for r in 0..rows as u32 {
+                if !sel.contains(&r) {
+                    prop_assert!(t.count(0, r) <= min_top,
+                                 "row {r} beat the selection");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ssu_subsamples_and_bounds() {
+        let mask = vec![true];
+        let mut t = SsuTracker::new(&[5], &mask, 2, 1);
+        // 20 accesses to distinct rows; period 2 → ~10 inserts; cap 5
+        let idx: Vec<u32> = (0..20).collect();
+        t.record_batch(&idx, 1);
+        assert!(t.len(0) <= 5);
+        let drained = t.drain(0);
+        assert!(drained.len() <= 5);
+        assert_eq!(t.len(0), 0);
+        // no duplicates
+        let set: std::collections::HashSet<_> = drained.iter().collect();
+        assert_eq!(set.len(), drained.len());
+    }
+
+    #[test]
+    fn ssu_prefers_frequent_rows() {
+        // row 0 is accessed 50% of the time; it should essentially always
+        // be present in the drained list
+        let mut present = 0;
+        for seed in 0..20 {
+            let mut t = SsuTracker::new(&[8], &[true], 2, seed);
+            let mut rng = Rng::new(seed ^ 0xABC);
+            let idx: Vec<u32> = (0..400)
+                .map(|_| if rng.bool_with(0.5) { 0 } else { 1 + rng.below(200) as u32 })
+                .collect();
+            t.record_batch(&idx, 1);
+            if t.drain(0).contains(&0) {
+                present += 1;
+            }
+        }
+        assert!(present >= 18, "hot row present in only {present}/20 runs");
+    }
+
+    #[test]
+    fn ssu_ignores_non_priority_tables() {
+        let mut t = SsuTracker::new(&[5, 5], &[false, true], 1, 1);
+        t.record_batch(&[1, 2], 2);
+        assert_eq!(t.len(0), 0);
+        assert_eq!(t.len(1), 1);
+    }
+
+    #[test]
+    fn scar_ranks_by_change_magnitude() {
+        let mut c = cluster2();
+        let mask = vec![true, false];
+        let mut scar = ScarTracker::new(&c, &mask);
+        // change row 42 a lot, row 7 a little
+        let idx = vec![42, 0, 7, 0];
+        let mut grads = vec![0.0f32; 2 * 2 * 4];
+        grads[0..4].copy_from_slice(&[10.0, 10.0, 10.0, 10.0]); // row 42
+        grads[8..12].copy_from_slice(&[0.1, 0.1, 0.1, 0.1]); // row 7
+        c.sgd_update(&idx, &grads, 1.0);
+        let top = scar.top_k(&c, 0, 1);
+        assert_eq!(top, vec![42]);
+        let top2 = scar.top_k(&c, 0, 2);
+        assert!(top2.contains(&42) && top2.contains(&7));
+        // after saving row 42, its change resets; row 7 should rank first
+        scar.mark_saved(&c, 0, &[42]);
+        assert_eq!(scar.top_k(&c, 0, 1), vec![7]);
+    }
+
+    #[test]
+    fn scar_memory_is_full_mirror() {
+        let c = cluster2();
+        let scar = ScarTracker::new(&c, &[true, false]);
+        assert_eq!(scar.memory_bytes(), 100 * 4 * 4); // rows*dim*sizeof(f32)
+    }
+
+    #[test]
+    fn tracker_memory_ordering_matches_table1() {
+        // SCAR (100%) > MFU (1/dim) > SSU (r/dim)
+        let c = PsCluster::new(vec![TableInfo { rows: 1000, dim: 16 }], 2, 1);
+        let mask = vec![true];
+        let scar = ScarTracker::new(&c, &mask);
+        let mfu = MfuTracker::new(&[1000], &mask);
+        let ssu = SsuTracker::new(&[125], &mask, 2, 0);
+        let table_bytes = 1000 * 16 * 4;
+        assert_eq!(scar.memory_bytes(), table_bytes);
+        assert_eq!(mfu.memory_bytes() * 16, table_bytes); // 6.25% at dim 16
+        assert!(ssu.memory_bytes() * 8 == mfu.memory_bytes()); // r = 0.125
+    }
+}

@@ -1,0 +1,472 @@
+//! Typed configuration for the whole system: model architecture (must match
+//! the AOT artifact ABI), synthetic dataset, emulated cluster constants,
+//! and checkpoint/recovery policy. Presets mirror `python/compile/model.py`
+//! PRESETS; users can override any field from a TOML file via
+//! [`JobConfig::from_toml_file`].
+
+pub mod toml;
+
+use anyhow::{bail, Context, Result};
+
+use self::toml::{get, Doc, Value};
+use crate::embedding::EmbOptimizer;
+
+/// DLRM architecture — MUST agree with the AOT artifact for `preset`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub preset: String,
+    pub num_dense: usize,
+    pub num_sparse: usize,
+    pub emb_dim: usize,
+    pub bottom_mlp: Vec<usize>,
+    pub top_mlp: Vec<usize>,
+    pub batch: usize,
+}
+
+impl ModelConfig {
+    pub fn num_feats(&self) -> usize {
+        self.num_sparse + 1
+    }
+
+    pub fn num_pairs(&self) -> usize {
+        let f = self.num_feats();
+        f * (f - 1) / 2
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if *self.bottom_mlp.last().unwrap() != self.emb_dim {
+            bail!("bottom MLP output must equal emb_dim");
+        }
+        if *self.top_mlp.last().unwrap() != 1 {
+            bail!("top MLP must end in one logit");
+        }
+        Ok(())
+    }
+}
+
+/// Synthetic click-log generator parameters (see `data::SyntheticDataset`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataConfig {
+    /// rows per embedding table (len == model.num_sparse)
+    pub table_rows: Vec<usize>,
+    /// Zipf exponent per table (same length)
+    pub zipf_s: Vec<f64>,
+    pub train_samples: usize,
+    pub eval_samples: usize,
+    /// lookups per sparse feature (1 = single-hot Criteo-style; > 1
+    /// exercises the sum-pooling path of the L1 embedding_bag kernel)
+    pub hotness: usize,
+    pub seed: u64,
+    /// scale of the hidden teacher's embedding contribution
+    pub teacher_emb_scale: f64,
+    /// label noise: logit noise stddev
+    pub label_noise: f64,
+}
+
+impl DataConfig {
+    pub fn total_rows(&self) -> usize {
+        self.table_rows.iter().sum()
+    }
+}
+
+/// Emulated production-cluster constants (paper §3 / §5.1). All times in
+/// *hours of emulated wall-clock*; each training step advances the clock by
+/// `t_total / total_steps` so overhead percentages match the paper's frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// number of embedding parameter-server nodes (paper: N_emb)
+    pub n_emb_ps: usize,
+    /// number of MLP trainer nodes (data parallel; emulated only for
+    /// overhead accounting — the math is synchronous so 1 physical trainer
+    /// is exact, paper §5.1)
+    pub n_trainers: usize,
+    /// emulated total training time, hours (paper: 56 h)
+    pub t_total_h: f64,
+    /// mean time between failures, hours (paper: 28 h for the 56-h job)
+    pub t_fail_h: f64,
+    /// checkpoint save cost, hours (derived so full recovery ≈ 8.5%)
+    pub o_save_h: f64,
+    /// checkpoint load cost, hours
+    pub o_load_h: f64,
+    /// rescheduling cost, hours
+    pub o_res_h: f64,
+}
+
+impl ClusterConfig {
+    /// Optimal full-recovery interval √(2·O_save·T_fail) (paper §2.2).
+    pub fn t_save_full_h(&self) -> f64 {
+        (2.0 * self.o_save_h * self.t_fail_h).sqrt()
+    }
+}
+
+/// Recovery strategy + checkpoint policy (paper §4).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Strategy {
+    /// full recovery at the optimal interval √(2 O_save T_fail)
+    Full,
+    /// partial recovery, naively reusing the full-recovery interval
+    PartialNaive,
+    /// CPR with PLS-chosen interval, no priority saving
+    CprVanilla,
+    /// CPR + SCAR update-magnitude priority (100% memory overhead)
+    CprScar,
+    /// CPR + most-frequently-used counters (paper's CPR-MFU)
+    CprMfu,
+    /// CPR + sub-sampled-used list (paper's CPR-SSU)
+    CprSsu,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy> {
+        Ok(match s {
+            "full" => Strategy::Full,
+            "partial" => Strategy::PartialNaive,
+            "cpr" | "cpr-vanilla" => Strategy::CprVanilla,
+            "cpr-scar" => Strategy::CprScar,
+            "cpr-mfu" => Strategy::CprMfu,
+            "cpr-ssu" => Strategy::CprSsu,
+            _ => bail!("unknown strategy {s:?} (full|partial|cpr|cpr-scar|cpr-mfu|cpr-ssu)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Full => "full",
+            Strategy::PartialNaive => "partial",
+            Strategy::CprVanilla => "cpr-vanilla",
+            Strategy::CprScar => "cpr-scar",
+            Strategy::CprMfu => "cpr-mfu",
+            Strategy::CprSsu => "cpr-ssu",
+        }
+    }
+
+    pub fn is_partial(&self) -> bool {
+        !matches!(self, Strategy::Full)
+    }
+
+    pub fn priority(&self) -> bool {
+        matches!(self, Strategy::CprScar | Strategy::CprMfu | Strategy::CprSsu)
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointConfig {
+    pub strategy: Strategy,
+    /// user-specified target PLS (paper default 0.1)
+    pub target_pls: f64,
+    /// priority fraction r (paper: 0.125)
+    pub r: f64,
+    /// SSU sampling period (paper: 2)
+    pub ssu_period: usize,
+    /// number of largest tables the priority schemes apply to (paper: 7)
+    pub priority_tables: usize,
+    /// directory for on-disk snapshots (None = in-memory only)
+    pub dir: Option<String>,
+    /// force a checkpoint interval (hours), bypassing the strategy's
+    /// default — used by the Fig. 11/12 sweeps that explore the PLS range
+    pub t_save_override_h: Option<f64>,
+}
+
+/// Training hyper-parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    pub lr: f32,
+    /// embedding-row learning rate (sparse update)
+    pub emb_lr: f32,
+    /// embedding update rule (sgd | rowwise-adagrad)
+    pub emb_optimizer: EmbOptimizer,
+    pub seed: u64,
+    /// evaluate AUC every n steps (0 = only at the end)
+    pub eval_every: usize,
+}
+
+/// Everything a training job needs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobConfig {
+    pub model: ModelConfig,
+    pub data: DataConfig,
+    pub cluster: ClusterConfig,
+    pub checkpoint: CheckpointConfig,
+    pub train: TrainConfig,
+    /// root dir holding AOT artifacts (default "artifacts")
+    pub artifacts_dir: String,
+}
+
+// ---------------------------------------------------------------------------
+// presets
+// ---------------------------------------------------------------------------
+
+/// Kaggle-skew table layout: 7 large tables carrying ~99.6% of all rows
+/// (paper §5.1), the remaining 19 small. `unit` scales the whole layout.
+pub fn skewed_tables(num_sparse: usize, unit: usize) -> (Vec<usize>, Vec<f64>) {
+    assert!(num_sparse >= 8);
+    let large = [50 * unit, 40 * unit, 30 * unit, 25 * unit, 20 * unit,
+                 15 * unit, 12 * unit];
+    let mut rows = Vec::with_capacity(num_sparse);
+    let mut zipf = Vec::with_capacity(num_sparse);
+    for (i, r) in large.iter().enumerate() {
+        rows.push((*r).max(4));
+        zipf.push(1.05 + 0.02 * i as f64);
+    }
+    for i in 7..num_sparse {
+        rows.push(4 + (i * 13) % 60); // tiny tables, 4..64 rows
+        zipf.push(1.1);
+    }
+    (rows, zipf)
+}
+
+fn cluster_emulation(n_emb_ps: usize) -> ClusterConfig {
+    // Constants chosen so the full-recovery overhead decomposes exactly as
+    // the paper's emulation (§6.1): T_fail = 28 h (2 failures / 56 h),
+    // O_save = T_save²/(2 T_fail) at T_save ≈ 2.3 h → save ≈ lost ≈ 4.1%,
+    // load + reschedule ≈ 0.3%, total ≈ 8.5%.
+    ClusterConfig {
+        n_emb_ps,
+        n_trainers: 8,
+        t_total_h: 56.0,
+        t_fail_h: 28.0,
+        o_save_h: 0.094,
+        o_load_h: 0.042,
+        o_res_h: 0.042,
+    }
+}
+
+fn base_checkpoint() -> CheckpointConfig {
+    CheckpointConfig {
+        strategy: Strategy::Full,
+        target_pls: 0.1,
+        r: 0.125,
+        ssu_period: 2,
+        priority_tables: 7,
+        dir: None,
+        t_save_override_h: None,
+    }
+}
+
+/// Named presets. `mini` is the fast config used by many-run experiments;
+/// `kaggle_like`/`terabyte_like` follow the paper's §5.1 architecture;
+/// `large_100m` is the ≈100M-parameter end-to-end validation config.
+pub fn preset(name: &str) -> Result<JobConfig> {
+    let (model, unit, train_samples, eval_samples) = match name {
+        "mini" => (ModelConfig {
+            preset: "mini".into(),
+            num_dense: 13,
+            num_sparse: 26,
+            emb_dim: 8,
+            bottom_mlp: vec![64, 32, 8],
+            top_mlp: vec![64, 1],
+            batch: 128,
+        }, 400, 96_000, 16_000),
+        "kaggle_like" => (ModelConfig {
+            preset: "kaggle_like".into(),
+            num_dense: 13,
+            num_sparse: 26,
+            emb_dim: 16,
+            bottom_mlp: vec![512, 256, 64, 16],
+            top_mlp: vec![512, 256, 1],
+            batch: 128,
+        }, 1000, 192_000, 32_000),
+        "terabyte_like" => (ModelConfig {
+            preset: "terabyte_like".into(),
+            num_dense: 13,
+            num_sparse: 26,
+            emb_dim: 64,
+            bottom_mlp: vec![512, 256, 64],
+            top_mlp: vec![512, 512, 256, 1],
+            batch: 128,
+        }, 2000, 192_000, 32_000),
+        // ~100M params: 6.25M embedding rows × dim 16 ≈ 100M + MLPs
+        "large_100m" => (ModelConfig {
+            preset: "kaggle_like".into(), // reuses the kaggle_like artifact
+            num_dense: 13,
+            num_sparse: 26,
+            emb_dim: 16,
+            bottom_mlp: vec![512, 256, 64, 16],
+            top_mlp: vec![512, 256, 1],
+            batch: 128,
+        }, 32_500, 64_000, 16_000),
+        _ => bail!("unknown preset {name:?} (mini|kaggle_like|terabyte_like|large_100m)"),
+    };
+    model.validate()?;
+    let (table_rows, zipf_s) = skewed_tables(model.num_sparse, unit);
+    Ok(JobConfig {
+        data: DataConfig {
+            table_rows,
+            zipf_s,
+            train_samples,
+            eval_samples,
+            hotness: 1,
+            seed: 1234,
+            teacher_emb_scale: 3.0,
+            label_noise: 0.4,
+        },
+        cluster: cluster_emulation(8),
+        checkpoint: base_checkpoint(),
+        train: TrainConfig {
+            lr: 0.05,
+            emb_lr: 8.0,
+            emb_optimizer: EmbOptimizer::Sgd,
+            seed: 99,
+            eval_every: 0,
+        },
+        artifacts_dir: "artifacts".into(),
+        model,
+    })
+}
+
+impl JobConfig {
+    /// Load a preset then apply TOML overrides:
+    /// `preset = "mini"` at top level, then `[model]`, `[data]`,
+    /// `[cluster]`, `[checkpoint]`, `[train]` sections.
+    pub fn from_toml(text: &str) -> Result<JobConfig> {
+        let doc: Doc = toml::parse(text)?;
+        let preset_name = get(&doc, "", "preset")
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?
+            .unwrap_or_else(|| "mini".to_string());
+        let mut cfg = preset(&preset_name)?;
+        cfg.apply_overrides(&doc)?;
+        cfg.model.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_toml_file(path: &str) -> Result<JobConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::from_toml(&text)
+    }
+
+    fn apply_overrides(&mut self, doc: &Doc) -> Result<()> {
+        macro_rules! set {
+            ($sec:literal, $key:literal, $dst:expr, $conv:ident) => {
+                if let Some(v) = get(doc, $sec, $key) {
+                    $dst = v.$conv()?;
+                }
+            };
+        }
+        set!("model", "batch", self.model.batch, as_usize);
+        set!("model", "emb_dim", self.model.emb_dim, as_usize);
+        set!("model", "bottom_mlp", self.model.bottom_mlp, as_usize_vec);
+        set!("model", "top_mlp", self.model.top_mlp, as_usize_vec);
+        set!("data", "train_samples", self.data.train_samples, as_usize);
+        set!("data", "eval_samples", self.data.eval_samples, as_usize);
+        set!("data", "table_rows", self.data.table_rows, as_usize_vec);
+        set!("data", "hotness", self.data.hotness, as_usize);
+        set!("data", "seed", self.data.seed, as_usize_u64);
+        set!("data", "label_noise", self.data.label_noise, as_f64);
+        set!("cluster", "n_emb_ps", self.cluster.n_emb_ps, as_usize);
+        set!("cluster", "n_trainers", self.cluster.n_trainers, as_usize);
+        set!("cluster", "t_total_h", self.cluster.t_total_h, as_f64);
+        set!("cluster", "t_fail_h", self.cluster.t_fail_h, as_f64);
+        set!("cluster", "o_save_h", self.cluster.o_save_h, as_f64);
+        set!("cluster", "o_load_h", self.cluster.o_load_h, as_f64);
+        set!("cluster", "o_res_h", self.cluster.o_res_h, as_f64);
+        set!("checkpoint", "target_pls", self.checkpoint.target_pls, as_f64);
+        set!("checkpoint", "r", self.checkpoint.r, as_f64);
+        set!("checkpoint", "ssu_period", self.checkpoint.ssu_period, as_usize);
+        set!("checkpoint", "priority_tables", self.checkpoint.priority_tables, as_usize);
+        if let Some(v) = get(doc, "checkpoint", "strategy") {
+            self.checkpoint.strategy = Strategy::parse(v.as_str()?)?;
+        }
+        if let Some(v) = get(doc, "train", "lr") {
+            self.train.lr = v.as_f64()? as f32;
+        }
+        if let Some(v) = get(doc, "train", "emb_lr") {
+            self.train.emb_lr = v.as_f64()? as f32;
+        }
+        if let Some(v) = get(doc, "train", "emb_optimizer") {
+            self.train.emb_optimizer = EmbOptimizer::parse(v.as_str()?)?;
+        }
+        set!("train", "eval_every", self.train.eval_every, as_usize);
+        Ok(())
+    }
+}
+
+// small helper so the macro can read u64 from toml ints
+trait AsU64 {
+    fn as_usize_u64(&self) -> Result<u64>;
+}
+
+impl AsU64 for Value {
+    fn as_usize_u64(&self) -> Result<u64> {
+        Ok(self.as_i64()? as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for name in ["mini", "kaggle_like", "terabyte_like", "large_100m"] {
+            let cfg = preset(name).unwrap();
+            cfg.model.validate().unwrap();
+            assert_eq!(cfg.data.table_rows.len(), cfg.model.num_sparse);
+            assert_eq!(cfg.data.zipf_s.len(), cfg.model.num_sparse);
+        }
+        assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn skew_concentrates_rows_in_seven_tables() {
+        let (rows, _) = skewed_tables(26, 1000);
+        let total: usize = rows.iter().sum();
+        let top7: usize = rows[..7].iter().sum();
+        assert!(top7 as f64 / total as f64 > 0.99,
+                "top-7 share {}", top7 as f64 / total as f64);
+    }
+
+    #[test]
+    fn large_preset_is_about_100m_params() {
+        let cfg = preset("large_100m").unwrap();
+        let emb_params = cfg.data.total_rows() * cfg.model.emb_dim;
+        assert!(emb_params > 80_000_000 && emb_params < 130_000_000,
+                "emb params = {emb_params}");
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let cfg = JobConfig::from_toml(r#"
+            preset = "mini"
+            [cluster]
+            n_emb_ps = 4
+            t_fail_h = 14.0
+            [checkpoint]
+            strategy = "cpr-ssu"
+            target_pls = 0.05
+            [train]
+            lr = 0.1
+        "#).unwrap();
+        assert_eq!(cfg.cluster.n_emb_ps, 4);
+        assert_eq!(cfg.cluster.t_fail_h, 14.0);
+        assert_eq!(cfg.checkpoint.strategy, Strategy::CprSsu);
+        assert_eq!(cfg.checkpoint.target_pls, 0.05);
+        assert_eq!(cfg.train.lr, 0.1);
+    }
+
+    #[test]
+    fn invalid_override_fails_validation() {
+        // emb_dim mismatch with bottom MLP output must be rejected
+        assert!(JobConfig::from_toml(r#"
+            preset = "mini"
+            [model]
+            emb_dim = 12
+        "#).is_err());
+    }
+
+    #[test]
+    fn optimal_full_interval_formula() {
+        let c = cluster_emulation(8);
+        let t = c.t_save_full_h();
+        assert!((t * t - 2.0 * c.o_save_h * c.t_fail_h).abs() < 1e-9);
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in ["full", "partial", "cpr-vanilla", "cpr-scar", "cpr-mfu", "cpr-ssu"] {
+            assert_eq!(Strategy::parse(s).unwrap().name(), s);
+        }
+        assert!(Strategy::parse("bogus").is_err());
+    }
+}

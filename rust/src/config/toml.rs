@@ -1,0 +1,210 @@
+//! TOML-subset parser for user config files (the real `toml` crate is not
+//! in the offline image). Supported: `[section]` headers, `key = value`
+//! with string / integer / float / bool / homogeneous array values, `#`
+//! comments, and bare or quoted keys. This covers every config file the
+//! launcher accepts; anything fancier fails loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let i = self.as_i64()?;
+        if i < 0 {
+            bail!("expected non-negative integer, got {i}");
+        }
+        Ok(i as usize)
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
+        match self {
+            Value::Arr(v) => v.iter().map(|x| x.as_usize()).collect(),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+}
+
+/// section name -> key -> value; keys before any `[section]` live in "".
+pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
+
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    doc.insert(section.clone(), BTreeMap::new());
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']')
+                .with_context(|| format!("line {}: bad section header", lineno + 1))?
+                .trim();
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line.split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim().trim_matches('"').to_string();
+        let value = parse_value(val.trim())
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        doc.get_mut(&section).unwrap().insert(key, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: '#' inside quoted strings is not supported
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '[' => depth += 1,
+            ']' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+/// Fetch `doc[section][key]`, if present.
+pub fn get<'a>(doc: &'a Doc, section: &str, key: &str) -> Option<&'a Value> {
+    doc.get(section).and_then(|m| m.get(key))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_scalars_arrays() {
+        let doc = parse(r#"
+            # top comment
+            seed = 42
+            [model]
+            preset = "mini"
+            emb_dim = 8
+            bottom_mlp = [64, 32, 8]
+            lr = 0.05          # inline comment
+            [checkpoint]
+            enabled = true
+        "#).unwrap();
+        assert_eq!(get(&doc, "", "seed").unwrap().as_i64().unwrap(), 42);
+        assert_eq!(get(&doc, "model", "preset").unwrap().as_str().unwrap(), "mini");
+        assert_eq!(get(&doc, "model", "bottom_mlp").unwrap()
+                   .as_usize_vec().unwrap(), vec![64, 32, 8]);
+        assert_eq!(get(&doc, "model", "lr").unwrap().as_f64().unwrap(), 0.05);
+        assert!(get(&doc, "checkpoint", "enabled").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn int_coerces_to_f64_but_not_reverse() {
+        let doc = parse("x = 3\ny = 3.5").unwrap();
+        assert_eq!(get(&doc, "", "x").unwrap().as_f64().unwrap(), 3.0);
+        assert!(get(&doc, "", "y").unwrap().as_i64().is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = [1, 2").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn empty_array_and_nested_not_needed_but_safe() {
+        let doc = parse("k = []").unwrap();
+        assert_eq!(get(&doc, "", "k").unwrap(), &Value::Arr(vec![]));
+    }
+}

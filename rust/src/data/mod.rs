@@ -1,0 +1,284 @@
+//! Synthetic Criteo-style click log (substitution for the Kaggle/Terabyte
+//! datasets — DESIGN.md §Substitutions #2).
+//!
+//! Requirements the generator satisfies:
+//!  * **deterministic random access**: sample `i` is a pure function of
+//!    `(seed, i)`, so a full-recovery rollback replays exactly the same
+//!    samples it lost;
+//!  * **Zipf-skewed categorical features**: production embedding access is
+//!    heavily skewed — the property CPR-MFU/SSU exploit (paper Fig. 6);
+//!  * **learnable labels**: a hidden teacher assigns every embedding row a
+//!    latent score; the label is Bernoulli(sigmoid(dense term + sum of row
+//!    scores + noise)), so frequent rows carry real, learnable signal and
+//!    test AUC meaningfully degrades when their updates are lost.
+
+use crate::config::DataConfig;
+use crate::util::dist::{normal, Zipf};
+use crate::util::rng::{Rng, SplitMix64};
+
+/// One minibatch, layout matching the AOT artifact ABI:
+/// dense row-major [B, num_dense], indices [B, num_sparse, hotness]
+/// (global row ids per table), labels [B]. The PS pools the hotness axis
+/// before the dense compute sees it.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub dense: Vec<f32>,
+    pub indices: Vec<u32>,
+    pub labels: Vec<f32>,
+    pub batch: usize,
+    pub hotness: usize,
+}
+
+impl Batch {
+    pub fn zeros(batch: usize, num_dense: usize, num_sparse: usize) -> Self {
+        Self::zeros_hot(batch, num_dense, num_sparse, 1)
+    }
+
+    pub fn zeros_hot(batch: usize, num_dense: usize, num_sparse: usize,
+                     hotness: usize) -> Self {
+        Self {
+            dense: vec![0.0; batch * num_dense],
+            indices: vec![0; batch * num_sparse * hotness],
+            labels: vec![0.0; batch],
+            batch,
+            hotness,
+        }
+    }
+}
+
+/// The generator. Cheap to clone; all sampling state is per-call.
+#[derive(Clone)]
+pub struct SyntheticDataset {
+    cfg: DataConfig,
+    num_dense: usize,
+    zipf: Vec<Zipf>,
+    /// teacher weights for the dense features
+    teacher_dense: Vec<f64>,
+    /// per-table hash salt for row scores
+    table_salt: Vec<u64>,
+    emb_scale: f64,
+}
+
+impl SyntheticDataset {
+    pub fn new(num_dense: usize, cfg: &DataConfig) -> Self {
+        assert_eq!(cfg.table_rows.len(), cfg.zipf_s.len());
+        let mut seeder = Rng::new(cfg.seed ^ 0xD1CE_BA5E);
+        // Dense weights deliberately weak relative to the embedding score
+        // sum: model quality must *depend* on the embedding state, or
+        // partial-recovery damage would be invisible (the whole point of
+        // Figs 2/7/11 is that lost embedding updates cost AUC).
+        let teacher_dense: Vec<f64> =
+            (0..num_dense).map(|_| normal(&mut seeder) * 0.12).collect();
+        let table_salt: Vec<u64> =
+            (0..cfg.table_rows.len()).map(|_| seeder.next_u64()).collect();
+        let zipf = cfg
+            .table_rows
+            .iter()
+            .zip(&cfg.zipf_s)
+            .map(|(&n, &s)| Zipf::new(n, s))
+            .collect();
+        let emb_scale = cfg.teacher_emb_scale / (cfg.table_rows.len() as f64).sqrt();
+        Self { cfg: cfg.clone(), num_dense, zipf, teacher_dense, table_salt, emb_scale }
+    }
+
+    pub fn num_tables(&self) -> usize {
+        self.cfg.table_rows.len()
+    }
+
+    pub fn train_samples(&self) -> usize {
+        self.cfg.train_samples
+    }
+
+    pub fn eval_samples(&self) -> usize {
+        self.cfg.eval_samples
+    }
+
+    /// The hidden teacher's latent score for (table, row) — deterministic,
+    /// in [-1, 1], independent of row frequency.
+    pub fn row_score(&self, table: usize, row: u32) -> f64 {
+        let mut h = SplitMix64::new(self.table_salt[table] ^ (row as u64));
+        (h.next_u64() >> 11) as f64 * (2.0 / (1u64 << 53) as f64) - 1.0
+    }
+
+    /// Generate sample `id` (train ids: 0..train_samples; eval ids are
+    /// offset internally so the eval split never overlaps train).
+    fn gen(&self, id: u64, dense: &mut [f32], idx: &mut [u32]) -> f32 {
+        let mut rng = Rng::new(self.cfg.seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let h = self.cfg.hotness;
+        let mut logit = 0.0f64;
+        for (d, w) in dense.iter_mut().zip(&self.teacher_dense) {
+            let x = normal(&mut rng);
+            *d = x as f32;
+            logit += w * x;
+        }
+        for t in 0..self.num_tables() {
+            // H lookups per feature; the teacher sees the mean row score,
+            // matching the sum-pooled representation the model learns on
+            let mut score = 0.0;
+            for slot in 0..h {
+                let row = self.zipf[t].sample(&mut rng) as u32;
+                idx[t * h + slot] = row;
+                score += self.row_score(t, row);
+            }
+            logit += self.emb_scale * score / h as f64;
+        }
+        logit += normal(&mut rng) * self.cfg.label_noise;
+        let p = 1.0 / (1.0 + (-logit).exp());
+        (rng.f64() < p) as u32 as f32
+    }
+
+    /// Fill `batch` with consecutive train samples starting at `start`
+    /// (wrapping at train_samples — single-epoch training never wraps).
+    pub fn fill_train_batch(&self, start: u64, out: &mut Batch) {
+        self.fill(start, 0, out);
+    }
+
+    /// Fill with eval samples (disjoint id space).
+    pub fn fill_eval_batch(&self, start: u64, out: &mut Batch) {
+        self.fill(start, 1 << 62, out);
+    }
+
+    fn fill(&self, start: u64, offset: u64, out: &mut Batch) {
+        let nd = self.num_dense;
+        let ns = self.num_tables();
+        let h = self.cfg.hotness;
+        debug_assert_eq!(out.hotness, h, "batch hotness mismatch");
+        for b in 0..out.batch {
+            let id = offset + start + b as u64;
+            let dense = &mut out.dense[b * nd..(b + 1) * nd];
+            let idx = &mut out.indices[b * ns * h..(b + 1) * ns * h];
+            out.labels[b] = self.gen(id, dense, idx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::util::stats;
+
+    fn mini_ds() -> SyntheticDataset {
+        let cfg = preset("mini").unwrap();
+        SyntheticDataset::new(cfg.model.num_dense, &cfg.data)
+    }
+
+    #[test]
+    fn deterministic_by_sample_id() {
+        let ds = mini_ds();
+        let mut a = Batch::zeros(64, 13, 26);
+        let mut b = Batch::zeros(64, 13, 26);
+        ds.fill_train_batch(1000, &mut a);
+        ds.fill_train_batch(1000, &mut b);
+        assert_eq!(a.dense, b.dense);
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn overlapping_windows_agree_per_sample() {
+        // sample id k must be identical no matter which batch start reads it
+        let ds = mini_ds();
+        let mut a = Batch::zeros(8, 13, 26);
+        let mut b = Batch::zeros(8, 13, 26);
+        ds.fill_train_batch(100, &mut a);
+        ds.fill_train_batch(104, &mut b);
+        assert_eq!(a.indices[4 * 26..8 * 26], b.indices[0..4 * 26]);
+        assert_eq!(a.labels[4..8], b.labels[0..4]);
+    }
+
+    #[test]
+    fn eval_split_disjoint_from_train() {
+        let ds = mini_ds();
+        let mut tr = Batch::zeros(32, 13, 26);
+        let mut ev = Batch::zeros(32, 13, 26);
+        ds.fill_train_batch(0, &mut tr);
+        ds.fill_eval_batch(0, &mut ev);
+        assert_ne!(tr.labels, ev.labels); // astronomically unlikely to match
+    }
+
+    #[test]
+    fn indices_within_table_bounds() {
+        let ds = mini_ds();
+        let rows = ds.cfg.table_rows.clone();
+        let mut b = Batch::zeros(256, 13, 26);
+        ds.fill_train_batch(0, &mut b);
+        for s in 0..256 {
+            for t in 0..26 {
+                assert!((b.indices[s * 26 + t] as usize) < rows[t],
+                        "table {t} idx {} rows {}", b.indices[s * 26 + t], rows[t]);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_balanced_ish_and_binary() {
+        let ds = mini_ds();
+        let mut b = Batch::zeros(4096, 13, 26);
+        ds.fill_train_batch(0, &mut b);
+        let pos: f64 = b.labels.iter().map(|&x| x as f64).sum::<f64>() / 4096.0;
+        assert!(b.labels.iter().all(|&l| l == 0.0 || l == 1.0));
+        assert!(pos > 0.25 && pos < 0.75, "positive rate {pos}");
+    }
+
+    #[test]
+    fn access_frequency_is_zipf_skewed() {
+        let ds = mini_ds();
+        let mut b = Batch::zeros(4096, 13, 26);
+        ds.fill_train_batch(0, &mut b);
+        // table 0 is large; rank-0 row should dominate uniform share
+        let rows0 = ds.cfg.table_rows[0];
+        let mut counts = vec![0u32; rows0];
+        for s in 0..4096 {
+            counts[b.indices[s * 26] as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        assert!(max / 4096.0 > 20.0 / rows0 as f64, "no skew detected");
+    }
+
+    #[test]
+    fn multi_hot_batches_fill_all_slots_in_bounds() {
+        let mut cfg = preset("mini").unwrap();
+        cfg.data.hotness = 4;
+        let ds = SyntheticDataset::new(13, &cfg.data);
+        let mut b = Batch::zeros_hot(64, 13, 26, 4);
+        ds.fill_train_batch(0, &mut b);
+        assert_eq!(b.indices.len(), 64 * 26 * 4);
+        for s in 0..64 {
+            for t in 0..26 {
+                for h in 0..4 {
+                    let idx = b.indices[(s * 26 + t) * 4 + h] as usize;
+                    assert!(idx < cfg.data.table_rows[t]);
+                }
+            }
+        }
+        // deterministic under hotness too
+        let mut c = Batch::zeros_hot(64, 13, 26, 4);
+        ds.fill_train_batch(0, &mut c);
+        assert_eq!(b.indices, c.indices);
+        assert_eq!(b.labels, c.labels);
+    }
+
+    #[test]
+    fn labels_correlate_with_teacher_logit() {
+        // sanity: the teacher signal must be recoverable (AUC of the
+        // *oracle* predictor well above 0.5)
+        let ds = mini_ds();
+        let mut b = Batch::zeros(8192, 13, 26);
+        ds.fill_train_batch(0, &mut b);
+        let mut logits = Vec::with_capacity(8192);
+        for s in 0..8192 {
+            let mut l = 0.0;
+            for d in 0..13 {
+                l += ds.teacher_dense[d] * b.dense[s * 13 + d] as f64;
+            }
+            for t in 0..26 {
+                l += ds.emb_scale * ds.row_score(t, b.indices[s * 26 + t]);
+            }
+            logits.push(l);
+        }
+        let labels: Vec<f64> = b.labels.iter().map(|&x| x as f64).collect();
+        let corr = stats::pearson(&logits, &labels);
+        assert!(corr > 0.3, "teacher signal too weak: corr={corr}");
+    }
+}

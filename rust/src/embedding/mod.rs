@@ -1,0 +1,500 @@
+//! Emulated embedding parameter-server (Emb PS) cluster.
+//!
+//! Production DLRM shards its embedding tables across many Emb PS nodes
+//! (paper §2.1, model parallelism). We emulate the same topology inside one
+//! process: every table is row-sharded round-robin across `n_nodes`
+//! [`EmbPsNode`]s — global row `r` of any table lives on node `r % n_nodes`
+//! at local row `r / n_nodes`. A node failure therefore wipes a ~1/n slice
+//! of EVERY table, exactly the paper's failure unit.
+//!
+//! The trainer gathers rows for a minibatch, runs the AOT train-step (L2),
+//! and scatters the returned embedding gradient back as a sparse SGD
+//! update. CPR's checkpoint trackers observe the same access stream.
+
+pub mod optim;
+
+pub use optim::EmbOptimizer;
+
+use crate::util::rng::SplitMix64;
+use crate::util::threads::parallel_chunks;
+
+/// Row-count + vector width of one logical embedding table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TableInfo {
+    pub rows: usize,
+    pub dim: usize,
+}
+
+/// One emulated Emb PS node: the local shard of every table plus the
+/// per-row optimizer state (row-wise AdaGrad accumulator).
+#[derive(Clone, Debug)]
+pub struct EmbPsNode {
+    /// per-table storage, local_row-major [local_rows * dim]
+    shards: Vec<Vec<f32>>,
+    /// per-table optimizer accumulators, one f32 per local row
+    opt_state: Vec<Vec<f32>>,
+}
+
+/// The sharded Emb PS cluster.
+#[derive(Clone, Debug)]
+pub struct PsCluster {
+    pub tables: Vec<TableInfo>,
+    pub n_nodes: usize,
+    nodes: Vec<EmbPsNode>,
+    seed: u64,
+}
+
+/// Deterministic init value for (table, global_row, d): uniform in
+/// [-0.05, 0.05]. Pure function so failure recovery "from scratch" and
+/// golden tests agree without storing the init.
+#[inline]
+pub fn init_value(seed: u64, table: usize, row: usize, d: usize) -> f32 {
+    let mut h = SplitMix64::new(
+        seed ^ ((table as u64) << 48) ^ ((row as u64) << 16) ^ d as u64,
+    );
+    ((h.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64) * 0.1 - 0.05) as f32
+}
+
+impl PsCluster {
+    pub fn new(tables: Vec<TableInfo>, n_nodes: usize, seed: u64) -> Self {
+        assert!(n_nodes >= 1);
+        let mut nodes = Vec::with_capacity(n_nodes);
+        for node_id in 0..n_nodes {
+            let mut shards = Vec::with_capacity(tables.len());
+            for (t, info) in tables.iter().enumerate() {
+                let local_rows = Self::local_rows_static(info.rows, n_nodes, node_id);
+                let mut shard = vec![0.0f32; local_rows * info.dim];
+                for lr in 0..local_rows {
+                    let global = node_id + lr * n_nodes;
+                    for d in 0..info.dim {
+                        shard[lr * info.dim + d] = init_value(seed, t, global, d);
+                    }
+                }
+                shards.push(shard);
+            }
+            let opt_state = tables
+                .iter()
+                .enumerate()
+                .map(|(_, info)| {
+                    vec![0.0f32; Self::local_rows_static(info.rows, n_nodes, node_id)]
+                })
+                .collect();
+            nodes.push(EmbPsNode { shards, opt_state });
+        }
+        Self { tables, n_nodes, nodes, seed }
+    }
+
+    #[inline]
+    fn local_rows_static(rows: usize, n_nodes: usize, node_id: usize) -> usize {
+        // rows with global % n_nodes == node_id
+        rows / n_nodes + usize::from(rows % n_nodes > node_id)
+    }
+
+    /// (owner node, local row) of a global row.
+    #[inline]
+    pub fn route(&self, global_row: usize) -> (usize, usize) {
+        (global_row % self.n_nodes, global_row / self.n_nodes)
+    }
+
+    pub fn local_rows(&self, table: usize, node_id: usize) -> usize {
+        Self::local_rows_static(self.tables[table].rows, self.n_nodes, node_id)
+    }
+
+    /// Read one row into `out` (len == dim).
+    #[inline]
+    pub fn read_row(&self, table: usize, global_row: usize, out: &mut [f32]) {
+        let (node, local) = self.route(global_row);
+        let dim = self.tables[table].dim;
+        let shard = &self.nodes[node].shards[table];
+        out.copy_from_slice(&shard[local * dim..(local + 1) * dim]);
+    }
+
+    /// Raw shard access (checkpoint save path).
+    pub fn shard(&self, node: usize, table: usize) -> &[f32] {
+        &self.nodes[node].shards[table]
+    }
+
+    /// Mutable shard access (checkpoint restore path).
+    pub fn shard_mut(&mut self, node: usize, table: usize) -> &mut [f32] {
+        &mut self.nodes[node].shards[table]
+    }
+
+    /// Optimizer-state shard access (one f32 per local row).
+    pub fn opt_shard(&self, node: usize, table: usize) -> &[f32] {
+        &self.nodes[node].opt_state[table]
+    }
+
+    pub fn opt_shard_mut(&mut self, node: usize, table: usize) -> &mut [f32] {
+        &mut self.nodes[node].opt_state[table]
+    }
+
+    /// Gather a minibatch: `indices` is [B, T] row-major (T = #tables);
+    /// `out` is filled as [B, T, dim] row-major. All tables share `dim`.
+    pub fn gather(&self, indices: &[u32], out: &mut [f32]) {
+        self.gather_pooled(indices, 1, out);
+    }
+
+    /// Multi-hot gather with sum pooling: `indices` is [B, T, H] row-major
+    /// (H = hotness); `out` is [B, T, dim] with out[b,t] = Σ_h row(idx_h).
+    /// This is the Rust-side counterpart of the L1 `embedding_bag` kernel
+    /// (the pooled vector is what the L2 graph receives).
+    pub fn gather_pooled(&self, indices: &[u32], hotness: usize, out: &mut [f32]) {
+        let t = self.tables.len();
+        let dim = self.tables[0].dim;
+        debug_assert!(self.tables.iter().all(|i| i.dim == dim));
+        let b = indices.len() / (t * hotness);
+        debug_assert_eq!(out.len(), b * t * dim);
+        // Thread spawn costs ~50 µs; below ~2k samples a serial gather is
+        // faster than fanning out (measured: 18 µs serial vs 55 µs across
+        // 2 threads at B=128) — see EXPERIMENTS.md §Perf #5.
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        if hotness == 1 {
+            // specialized single-hot path: a straight row copy per slot
+            // (the generic loop costs 2× at Criteo shapes — §Perf #5)
+            parallel_chunks(b, 8, 2048, |lo, hi| {
+                let out_ptr = &out_ptr;
+                for (off, &row) in indices[lo * t..hi * t].iter().enumerate() {
+                    let slot = lo * t + off;
+                    let tab = slot % t;
+                    let row = row as usize;
+                    let shard = &self.nodes[row % self.n_nodes].shards[tab];
+                    let local = row / self.n_nodes;
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            shard.as_ptr().add(local * dim),
+                            out_ptr.0.add(slot * dim),
+                            dim,
+                        );
+                    }
+                }
+            });
+            return;
+        }
+        parallel_chunks(b, 8, 2048, |lo, hi| {
+            let out_ptr = &out_ptr;
+            for s in lo..hi {
+                for tab in 0..t {
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            out_ptr.0.add((s * t + tab) * dim), dim)
+                    };
+                    for h in 0..hotness {
+                        let row = indices[(s * t + tab) * hotness + h] as usize;
+                        let (node, local) = self.route(row);
+                        let shard = &self.nodes[node].shards[tab];
+                        let src = &shard[local * dim..(local + 1) * dim];
+                        if h == 0 {
+                            dst.copy_from_slice(src);
+                        } else {
+                            for (d, v) in dst.iter_mut().zip(src) {
+                                *d += v;
+                            }
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    /// Sparse SGD convenience wrapper (hotness 1).
+    pub fn sgd_update(&mut self, indices: &[u32], grads: &[f32], lr: f32) {
+        self.apply_grads(indices, 1, grads, lr, EmbOptimizer::Sgd);
+    }
+
+    /// Sparse update: apply `opt` to every (sample, table, hot) slot's row
+    /// with the slot's pooled gradient (sum-pool backward broadcasts the
+    /// [B, T, dim] gradient to each of the H contributing rows).
+    /// Duplicate rows accumulate, matching a dense scatter-add.
+    /// Parallelized over *nodes* so all writes are owner-local.
+    pub fn apply_grads(
+        &mut self,
+        indices: &[u32],
+        hotness: usize,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    ) {
+        let t = self.tables.len();
+        let dim = self.tables[0].dim;
+        let b = indices.len() / (t * hotness);
+        debug_assert_eq!(grads.len(), b * t * dim);
+        let n_nodes = self.n_nodes;
+        // Small batches: one thread applying updates directly beats the
+        // per-node fan-out (each parallel worker must scan the whole
+        // index list; at B=128 that costs 285 µs vs 30 µs serial —
+        // EXPERIMENTS.md §Perf #5). Large batches amortize the scan.
+        if b * t * hotness < 16_384 {
+            for s in 0..b {
+                for tab in 0..t {
+                    let g = &grads[(s * t + tab) * dim..(s * t + tab + 1) * dim];
+                    for h in 0..hotness {
+                        let row = indices[(s * t + tab) * hotness + h] as usize;
+                        let node_id = row % n_nodes;
+                        let local = row / n_nodes;
+                        let node = &mut self.nodes[node_id];
+                        let dst =
+                            &mut node.shards[tab][local * dim..(local + 1) * dim];
+                        let acc = &mut node.opt_state[tab][local];
+                        opt.apply(dst, g, acc, lr);
+                    }
+                }
+            }
+            return;
+        }
+        let nodes = &mut self.nodes;
+        // Each thread owns a disjoint set of nodes → disjoint storage.
+        let node_refs: Vec<std::sync::Mutex<&mut EmbPsNode>> =
+            nodes.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_chunks(n_nodes, 8, 1, |nlo, nhi| {
+            for node_id in nlo..nhi {
+                let mut node = node_refs[node_id].lock().unwrap();
+                for s in 0..b {
+                    for tab in 0..t {
+                        let g = &grads[(s * t + tab) * dim..(s * t + tab + 1) * dim];
+                        for h in 0..hotness {
+                            let row =
+                                indices[(s * t + tab) * hotness + h] as usize;
+                            if row % n_nodes != node_id {
+                                continue;
+                            }
+                            let local = row / n_nodes;
+                            let node = &mut *node;
+                            let dst = &mut node.shards[tab]
+                                [local * dim..(local + 1) * dim];
+                            let acc = &mut node.opt_state[tab][local];
+                            opt.apply(dst, g, acc, lr);
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    /// Reset a node's shards to their deterministic initial values
+    /// (recovery when no checkpoint exists yet).
+    pub fn reset_node_to_init(&mut self, node_id: usize) {
+        let tables = self.tables.clone();
+        let n_nodes = self.n_nodes;
+        let seed = self.seed;
+        for (t, info) in tables.iter().enumerate() {
+            let local_rows = Self::local_rows_static(info.rows, n_nodes, node_id);
+            let shard = &mut self.nodes[node_id].shards[t];
+            for lr in 0..local_rows {
+                let global = node_id + lr * n_nodes;
+                for d in 0..info.dim {
+                    shard[lr * info.dim + d] = init_value(seed, t, global, d);
+                }
+            }
+            for a in self.nodes[node_id].opt_state[t].iter_mut() {
+                *a = 0.0;
+            }
+        }
+    }
+
+    /// Total parameter count across all tables.
+    pub fn total_params(&self) -> usize {
+        self.tables.iter().map(|t| t.rows * t.dim).sum()
+    }
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Sync for SendPtr {}
+unsafe impl Send for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cluster(n_nodes: usize) -> PsCluster {
+        PsCluster::new(
+            vec![TableInfo { rows: 10, dim: 4 }, TableInfo { rows: 7, dim: 4 }],
+            n_nodes,
+            42,
+        )
+    }
+
+    #[test]
+    fn routing_is_a_bijection() {
+        let c = small_cluster(3);
+        for table in 0..2 {
+            let rows = c.tables[table].rows;
+            let mut seen = std::collections::HashSet::new();
+            for r in 0..rows {
+                let (node, local) = c.route(r);
+                assert!(node < 3);
+                assert!(local < c.local_rows(table, node));
+                assert!(seen.insert((node, local)));
+            }
+            // every local slot is hit
+            let total: usize = (0..3).map(|n| c.local_rows(table, n)).sum();
+            assert_eq!(total, rows);
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_node_count_invariant() {
+        // The same (table,row) must hold the same vector regardless of how
+        // many PS nodes shard it — failure experiments vary n_nodes.
+        let a = small_cluster(2);
+        let b = small_cluster(5);
+        let mut ra = vec![0.0; 4];
+        let mut rb = vec![0.0; 4];
+        for t in 0..2 {
+            for r in 0..a.tables[t].rows {
+                a.read_row(t, r, &mut ra);
+                b.read_row(t, r, &mut rb);
+                assert_eq!(ra, rb, "table {t} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_matches_read_row() {
+        let c = small_cluster(3);
+        let indices: Vec<u32> = vec![0, 1, 9, 6, 3, 2]; // 3 samples x 2 tables
+        let mut out = vec![0.0; 3 * 2 * 4];
+        c.gather(&indices, &mut out);
+        let mut row = vec![0.0; 4];
+        for s in 0..3 {
+            for t in 0..2 {
+                c.read_row(t, indices[s * 2 + t] as usize, &mut row);
+                assert_eq!(&out[(s * 2 + t) * 4..(s * 2 + t + 1) * 4], &row[..]);
+            }
+        }
+    }
+
+    #[test]
+    fn sgd_update_applies_lr_times_grad() {
+        let mut c = small_cluster(2);
+        let indices = vec![5, 2]; // 1 sample, 2 tables
+        let mut before = vec![0.0; 4];
+        c.read_row(0, 5, &mut before);
+        let grads = vec![1.0f32; 8];
+        c.sgd_update(&indices, &grads, 0.1);
+        let mut after = vec![0.0; 4];
+        c.read_row(0, 5, &mut after);
+        for d in 0..4 {
+            assert!((after[d] - (before[d] - 0.1)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn duplicate_rows_accumulate() {
+        let mut c = small_cluster(2);
+        // two samples hitting the SAME row of table 0
+        let indices = vec![4, 0, 4, 1];
+        let mut before = vec![0.0; 4];
+        c.read_row(0, 4, &mut before);
+        let grads = vec![0.5f32; 16];
+        c.sgd_update(&indices, &grads, 1.0);
+        let mut after = vec![0.0; 4];
+        c.read_row(0, 4, &mut after);
+        for d in 0..4 {
+            assert!((after[d] - (before[d] - 1.0)).abs() < 1e-6, "{d}");
+        }
+    }
+
+    #[test]
+    fn reset_node_restores_init() {
+        let mut c = small_cluster(3);
+        let indices = vec![3, 3];
+        let grads = vec![1.0f32; 8];
+        c.sgd_update(&indices, &grads, 1.0);
+        // row 3 lives on node 0 (3 % 3)
+        c.reset_node_to_init(0);
+        let fresh = small_cluster(3);
+        let mut a = vec![0.0; 4];
+        let mut b = vec![0.0; 4];
+        c.read_row(0, 3, &mut a);
+        fresh.read_row(0, 3, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reset_does_not_touch_other_nodes() {
+        let mut c = small_cluster(3);
+        let indices = vec![4, 4]; // node 1
+        let grads = vec![1.0f32; 8];
+        c.sgd_update(&indices, &grads, 1.0);
+        let mut before = vec![0.0; 4];
+        c.read_row(0, 4, &mut before);
+        c.reset_node_to_init(0);
+        let mut after = vec![0.0; 4];
+        c.read_row(0, 4, &mut after);
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn total_params() {
+        let c = small_cluster(2);
+        assert_eq!(c.total_params(), (10 + 7) * 4);
+    }
+
+    #[test]
+    fn gather_pooled_sums_hot_rows() {
+        let c = small_cluster(2);
+        // 1 sample, 2 tables, hotness 2
+        let indices = vec![1, 3, 0, 2];
+        let mut pooled = vec![0.0; 2 * 4];
+        c.gather_pooled(&indices, 2, &mut pooled);
+        let mut a = vec![0.0; 4];
+        let mut b = vec![0.0; 4];
+        c.read_row(0, 1, &mut a);
+        c.read_row(0, 3, &mut b);
+        for d in 0..4 {
+            assert!((pooled[d] - (a[d] + b[d])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn multi_hot_grad_broadcasts_to_all_rows() {
+        let mut c = small_cluster(2);
+        let indices = vec![1, 3, 0, 2]; // table0: rows 1,3; table1: rows 0,2
+        let mut r1 = vec![0.0; 4];
+        let mut r3 = vec![0.0; 4];
+        c.read_row(0, 1, &mut r1);
+        c.read_row(0, 3, &mut r3);
+        let grads = vec![1.0f32; 2 * 4]; // [B=1, T=2, dim=4]
+        c.apply_grads(&indices, 2, &grads, 0.5, EmbOptimizer::Sgd);
+        let mut a1 = vec![0.0; 4];
+        let mut a3 = vec![0.0; 4];
+        c.read_row(0, 1, &mut a1);
+        c.read_row(0, 3, &mut a3);
+        for d in 0..4 {
+            assert!((a1[d] - (r1[d] - 0.5)).abs() < 1e-6);
+            assert!((a3[d] - (r3[d] - 0.5)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn adagrad_state_accumulates_and_damps() {
+        let mut c = small_cluster(2);
+        let opt = EmbOptimizer::RowAdagrad { eps: 1e-8 };
+        let indices = vec![5, 2];
+        let grads = vec![1.0f32; 8];
+        let mut before = vec![0.0; 4];
+        c.read_row(0, 5, &mut before);
+        c.apply_grads(&indices, 1, &grads, 1.0, opt);
+        let (node, local) = c.route(5);
+        assert!(c.opt_shard(node, 0)[local] > 0.0, "accumulator untouched");
+        let mut after1 = vec![0.0; 4];
+        c.read_row(0, 5, &mut after1);
+        let step1 = (before[0] - after1[0]).abs();
+        c.apply_grads(&indices, 1, &grads, 1.0, opt);
+        let mut after2 = vec![0.0; 4];
+        c.read_row(0, 5, &mut after2);
+        let step2 = (after1[0] - after2[0]).abs();
+        assert!(step2 < step1, "adagrad must damp: {step1} -> {step2}");
+    }
+
+    #[test]
+    fn reset_node_clears_optimizer_state() {
+        let mut c = small_cluster(3);
+        let opt = EmbOptimizer::RowAdagrad { eps: 1e-8 };
+        c.apply_grads(&[3, 3], 1, &vec![1.0f32; 8], 1.0, opt);
+        let (node, local) = c.route(3);
+        assert!(c.opt_shard(node, 0)[local] > 0.0);
+        c.reset_node_to_init(node);
+        assert_eq!(c.opt_shard(node, 0)[local], 0.0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Sparse-embedding optimizers.
+//!
+//! Production DLRM trains embeddings with row-wise AdaGrad (Naumov et al.
+//! 2019); checkpoints must then include the optimizer state (paper §2.2:
+//! "checkpoints usually include the model parameters, iteration/epoch
+//! counts, and the state of the optimizer"), which partial recovery must
+//! restore consistently with the rows. [`EmbOptimizer`] selects the rule;
+//! the per-row accumulator lives next to the shard in
+//! [`crate::embedding::PsCluster`] and rides through
+//! [`crate::checkpoint::CheckpointStore`] with the rows.
+
+/// Update rule for embedding rows.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EmbOptimizer {
+    /// plain SGD: w -= lr * g
+    Sgd,
+    /// row-wise AdaGrad: a += mean(g²); w -= lr / sqrt(a + eps) * g
+    /// (one f32 accumulator per row — the DLRM production choice)
+    RowAdagrad { eps: f32 },
+}
+
+impl EmbOptimizer {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "sgd" => Ok(EmbOptimizer::Sgd),
+            "adagrad" | "rowwise-adagrad" => {
+                Ok(EmbOptimizer::RowAdagrad { eps: 1e-8 })
+            }
+            _ => anyhow::bail!("unknown embedding optimizer {s:?} (sgd|adagrad)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EmbOptimizer::Sgd => "sgd",
+            EmbOptimizer::RowAdagrad { .. } => "rowwise-adagrad",
+        }
+    }
+
+    /// Does this optimizer carry per-row state that checkpoints must save?
+    pub fn has_state(&self) -> bool {
+        matches!(self, EmbOptimizer::RowAdagrad { .. })
+    }
+
+    /// Apply the update for one row. `w` is the row slice, `g` the gradient
+    /// slice, `a` the row's accumulator cell (ignored for SGD). Returns the
+    /// effective step scale used (for tests/diagnostics).
+    #[inline]
+    pub fn apply(&self, w: &mut [f32], g: &[f32], a: &mut f32, lr: f32) -> f32 {
+        match *self {
+            EmbOptimizer::Sgd => {
+                for (wi, gi) in w.iter_mut().zip(g) {
+                    *wi -= lr * gi;
+                }
+                lr
+            }
+            EmbOptimizer::RowAdagrad { eps } => {
+                let mean_sq: f32 =
+                    g.iter().map(|x| x * x).sum::<f32>() / g.len() as f32;
+                *a += mean_sq;
+                let scale = lr / (a.sqrt() + eps);
+                for (wi, gi) in w.iter_mut().zip(g) {
+                    *wi -= scale * gi;
+                }
+                scale
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_applies_plain_step() {
+        let mut w = vec![1.0f32, 2.0];
+        let mut a = 0.0;
+        EmbOptimizer::Sgd.apply(&mut w, &[0.5, -0.5], &mut a, 0.1);
+        assert_eq!(w, vec![0.95, 2.05]);
+        assert_eq!(a, 0.0, "SGD must not touch the accumulator");
+    }
+
+    #[test]
+    fn adagrad_shrinks_effective_lr_over_hits() {
+        let opt = EmbOptimizer::RowAdagrad { eps: 1e-8 };
+        let mut w = vec![0.0f32; 4];
+        let mut a = 0.0;
+        let g = vec![1.0f32; 4];
+        let s1 = opt.apply(&mut w, &g, &mut a, 1.0);
+        let s2 = opt.apply(&mut w, &g, &mut a, 1.0);
+        let s3 = opt.apply(&mut w, &g, &mut a, 1.0);
+        assert!(s1 > s2 && s2 > s3, "{s1} {s2} {s3}");
+        assert!((s1 - 1.0).abs() < 1e-4); // first step ≈ lr/sqrt(1)
+    }
+
+    #[test]
+    fn adagrad_accumulates_mean_square() {
+        let opt = EmbOptimizer::RowAdagrad { eps: 1e-8 };
+        let mut w = vec![0.0f32; 2];
+        let mut a = 0.0;
+        opt.apply(&mut w, &[3.0, 4.0], &mut a, 0.0); // lr 0: state only
+        assert!((a - 12.5).abs() < 1e-6); // (9+16)/2
+        assert_eq!(w, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(EmbOptimizer::parse("sgd").unwrap(), EmbOptimizer::Sgd);
+        assert!(EmbOptimizer::parse("adagrad").unwrap().has_state());
+        assert!(EmbOptimizer::parse("momentum").is_err());
+    }
+}

@@ -1,0 +1,34 @@
+//! # CPR: failure-tolerant training for deep-learning recommendation
+//!
+//! Reproduction of *"CPR: Understanding and Improving Failure Tolerant
+//! Training for Deep Learning Recommendation with Partial Recovery"*
+//! (Maeng et al., 2020) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordination contribution: an emulated
+//!   distributed DLRM training job (sharded Emb PS cluster, synchronous
+//!   trainer), checkpoint manager with full/partial recovery and the
+//!   SCAR/MFU/SSU priority schemes, PLS-driven interval selection, failure
+//!   injection, and the paper's full evaluation harness.
+//! * **L2** — the DLRM forward/backward as a JAX graph, AOT-lowered to HLO
+//!   text at build time (`python/compile/`), executed here via PJRT.
+//! * **L1** — Pallas kernels for the compute hot-spots, lowered into the
+//!   same HLO.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod analysis;
+pub mod bench;
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod embedding;
+pub mod failure;
+pub mod metrics;
+pub mod pls;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod trace;
+pub mod util;

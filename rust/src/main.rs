@@ -1,0 +1,212 @@
+//! `cpr` — launcher CLI for the CPR training system.
+//!
+//! Subcommands:
+//!   train   run one emulated training job under a recovery strategy
+//!   plan    print the CPR controller's decision for a cluster config
+//!   fleet   run the production-fleet overhead simulation (Fig. 4)
+//!   scale   print the scalability projection (Fig. 13)
+//!
+//! Examples:
+//!   cpr train --preset mini --strategy cpr-ssu --failures 2 --fail-frac 0.25
+//!   cpr train --config job.toml
+//!   cpr plan --preset kaggle_like --target-pls 0.1
+//!   cpr fleet --jobs 17000
+//!   cpr scale --model linear
+
+use anyhow::{bail, Result};
+
+use cpr::config::{preset, JobConfig, Strategy};
+use cpr::coordinator::{run_training, RunOptions, TrainReport};
+use cpr::failure::uniform_schedule;
+use cpr::runtime::Runtime;
+use cpr::util::cli::Cli;
+use cpr::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().map(String::as_str) else {
+        bail!("usage: cpr <train|plan|fleet|scale> [options]  (--help per command)");
+    };
+    let rest = &args[1..];
+    match cmd {
+        "train" => cmd_train(rest),
+        "plan" => cmd_plan(rest),
+        "fleet" => cmd_fleet(rest),
+        "scale" => cmd_scale(rest),
+        other => bail!("unknown command {other:?} (train|plan|fleet|scale)"),
+    }
+}
+
+fn job_config_from(cli: &Cli) -> Result<JobConfig> {
+    let mut cfg = if cli.get("config").is_empty() {
+        preset(cli.get("preset"))?
+    } else {
+        JobConfig::from_toml_file(cli.get("config"))?
+    };
+    if !cli.get("strategy").is_empty() {
+        cfg.checkpoint.strategy = Strategy::parse(cli.get("strategy"))?;
+    }
+    if !cli.get("target-pls").is_empty() {
+        cfg.checkpoint.target_pls = cli.get_f64("target-pls")?;
+    }
+    if !cli.get("n-emb").is_empty() {
+        cfg.cluster.n_emb_ps = cli.get_usize("n-emb")?;
+    }
+    if !cli.get("train-samples").is_empty() {
+        cfg.data.train_samples = cli.get_usize("train-samples")?;
+    }
+    if !cli.get("eval-samples").is_empty() {
+        cfg.data.eval_samples = cli.get_usize("eval-samples")?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let cli = Cli::new("cpr train", "run one emulated training job")
+        .opt("preset", "mini", "model preset (mini|kaggle_like|terabyte_like|large_100m)")
+        .opt("config", "", "TOML job config (overrides preset)")
+        .opt("strategy", "", "full|partial|cpr-vanilla|cpr-scar|cpr-mfu|cpr-ssu")
+        .opt("target-pls", "", "CPR target PLS (default from config: 0.1)")
+        .opt("n-emb", "", "number of Emb PS nodes")
+        .opt("train-samples", "", "override training samples")
+        .opt("eval-samples", "", "override eval samples")
+        .opt("failures", "0", "number of injected failures")
+        .opt("fail-frac", "0.125", "fraction of Emb PS nodes lost per failure")
+        .opt("seed", "7", "failure schedule seed")
+        .opt("eval-every", "0", "eval AUC every n steps (0 = final only)")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .parse(args)?;
+    let mut cfg = job_config_from(&cli)?;
+    cfg.artifacts_dir = cli.get("artifacts").to_string();
+
+    let n_failures = cli.get_usize("failures")?;
+    let frac = cli.get_f64("fail-frac")?;
+    let victims = ((cfg.cluster.n_emb_ps as f64 * frac).round() as usize)
+        .clamp(1, cfg.cluster.n_emb_ps);
+    let mut rng = Rng::new(cli.get_u64("seed")?);
+    let schedule = uniform_schedule(&mut rng, n_failures, cfg.cluster.t_total_h,
+                                    cfg.cluster.n_emb_ps, victims);
+
+    let rt = Runtime::cpu()?;
+    eprintln!("[cpr] PJRT platform: {}", rt.platform());
+    let model = rt.load_model(&cfg.artifacts_dir, &cfg.model.preset)?;
+    eprintln!("[cpr] model {} loaded: {} MLP params, {} embedding rows",
+              cfg.model.preset, model.manifest.mlp_params(),
+              cfg.data.total_rows());
+
+    let opts = RunOptions {
+        schedule,
+        eval_every: cli.get_usize("eval-every")?,
+        ..Default::default()
+    };
+    let report = run_training(&model, &cfg, &opts)?;
+    print_report(&report, cfg.cluster.t_total_h);
+    Ok(())
+}
+
+fn print_report(r: &TrainReport, t_total_h: f64) {
+    println!("strategy            {}", r.strategy);
+    if let Some(p) = &r.plan {
+        println!("cpr plan            t_save={:.2}h use_partial={} E[PLS]={:.4} \
+                  est_overhead={:.2}% (full-recovery optimum: {:.2}%)",
+                 p.t_save_h, p.use_partial, p.expected_pls,
+                 100.0 * p.est_overhead_h / t_total_h,
+                 100.0 * p.est_full_overhead_h / t_total_h);
+    }
+    if r.fell_back {
+        println!("NOTE: CPR fell back to full recovery (no expected benefit)");
+    }
+    println!("failures seen       {}", r.failures_seen);
+    println!("final PLS           {:.5}", r.pls);
+    println!("final test AUC      {:.5}", r.final_auc);
+    println!("final test logloss  {:.5}", r.final_logloss);
+    println!("steps executed      {}", r.steps_executed);
+    println!("overhead            {:.3}% of training time", 100.0 * r.overhead_frac);
+    println!("  save              {:.3} h ({} saves)", r.ledger.save_h, r.ledger.n_saves);
+    println!("  load              {:.3} h", r.ledger.load_h);
+    println!("  lost computation  {:.3} h", r.ledger.lost_h);
+    println!("  reschedule        {:.3} h", r.ledger.reschedule_h);
+    println!("wall time           {:.1} s", r.wall_secs);
+}
+
+fn cmd_plan(args: &[String]) -> Result<()> {
+    let cli = Cli::new("cpr plan", "print the CPR controller decision")
+        .opt("preset", "mini", "config preset")
+        .opt("config", "", "TOML job config")
+        .opt("strategy", "", "(accepted for symmetry; unused)")
+        .opt("target-pls", "", "target PLS")
+        .opt("n-emb", "", "number of Emb PS nodes")
+        .opt("train-samples", "", "")
+        .opt("eval-samples", "", "")
+        .parse(args)?;
+    let cfg = job_config_from(&cli)?;
+    let p = cpr::pls::plan(&cfg.cluster, cfg.checkpoint.target_pls);
+    let t = cfg.cluster.t_total_h;
+    println!("cluster: N_emb={} T_total={:.0}h T_fail={:.1}h O_save={:.3}h \
+              O_load={:.3}h O_res={:.3}h",
+             cfg.cluster.n_emb_ps, t, cfg.cluster.t_fail_h,
+             cfg.cluster.o_save_h, cfg.cluster.o_load_h, cfg.cluster.o_res_h);
+    println!("target PLS          {:.3}", cfg.checkpoint.target_pls);
+    println!("full-recovery opt   T_save={:.2}h overhead={:.2}%",
+             cfg.cluster.t_save_full_h(), 100.0 * p.est_full_overhead_h / t);
+    println!("decision            {}",
+             if p.use_partial { "PARTIAL (CPR)" } else { "FULL (fallback)" });
+    println!("chosen interval     {:.2} h", p.t_save_h);
+    println!("expected PLS        {:.4}", p.expected_pls);
+    println!("expected overhead   {:.2}%", 100.0 * p.est_overhead_h / t);
+    Ok(())
+}
+
+fn cmd_fleet(args: &[String]) -> Result<()> {
+    let cli = Cli::new("cpr fleet", "production fleet overhead simulation (Fig. 4)")
+        .opt("jobs", "17000", "number of jobs to simulate")
+        .opt("seed", "4", "rng seed")
+        .parse(args)?;
+    let cfg = cpr::sim::FleetSimConfig {
+        jobs: cli.get_usize("jobs")?,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(cli.get_u64("seed")?);
+    let rep = cpr::sim::simulate_fleet(&mut rng, &cfg);
+    println!("jobs                 {}", cfg.jobs);
+    println!("mean overhead        {:.1}%", 100.0 * rep.mean_overhead_frac);
+    println!("machine-years wasted {:.0}", rep.machine_years_wasted);
+    println!("{:>5} {:>8} {:>8} {:>8} {:>10} {:>8}",
+             "pct", "save", "load", "lost", "reschedule", "total");
+    for (p, s, l, lost, res, tot) in &rep.breakdown {
+        println!("{:>4.0}% {:>7.1}% {:>7.1}% {:>7.1}% {:>9.1}% {:>7.1}%",
+                 p, 100.0 * s, 100.0 * l, 100.0 * lost, 100.0 * res, 100.0 * tot);
+    }
+    Ok(())
+}
+
+fn cmd_scale(args: &[String]) -> Result<()> {
+    let cli = Cli::new("cpr scale", "scalability projection (Fig. 13)")
+        .opt("preset", "mini", "base cluster preset")
+        .opt("model", "linear", "failure model: linear|independent")
+        .opt("target-pls", "0.1", "target PLS")
+        .opt("p", "0.002", "per-node hourly failure prob (independent model)")
+        .parse(args)?;
+    let base = preset(cli.get("preset"))?.cluster;
+    let model = match cli.get("model") {
+        "linear" => cpr::analysis::FailureModel::LinearMtbf,
+        "independent" => cpr::analysis::FailureModel::IndependentP,
+        m => bail!("unknown failure model {m:?}"),
+    };
+    let pts = cpr::analysis::scalability_sweep(
+        &base, cli.get_f64("target-pls")?, model, cli.get_f64("p")?,
+        &[4, 8, 16, 32, 64, 128, 256]);
+    println!("{:>7} {:>12} {:>12}", "nodes", "full", "cpr");
+    for p in pts {
+        println!("{:>7} {:>11.2}% {:>11.2}%", p.n_nodes,
+                 100.0 * p.full_overhead_frac, 100.0 * p.cpr_overhead_frac);
+    }
+    Ok(())
+}

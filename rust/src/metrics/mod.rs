@@ -1,0 +1,196 @@
+//! Evaluation metrics and training-time accounting.
+//!
+//! * exact ROC-AUC (Mann-Whitney U with tie correction) — the paper's model
+//!   quality metric (§5.1);
+//! * binary-cross-entropy log-loss;
+//! * `OverheadLedger`: the four checkpoint-related overheads of §2.2
+//!   (save / load / lost computation / reschedule) accumulated in emulated
+//!   hours and reported as a fraction of total training time.
+
+/// Exact ROC-AUC. `scores` need not be probabilities (any monotone score).
+/// Ties receive the standard midrank treatment. Returns 0.5 when one class
+/// is absent.
+pub fn auc(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n = scores.len();
+    let npos = labels.iter().filter(|&&l| l > 0.5).count();
+    let nneg = n - npos;
+    if npos == 0 || nneg == 0 {
+        return 0.5;
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // midranks over tied groups
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let midrank = (i + j) as f64 / 2.0 + 1.0; // 1-based
+        for &k in &order[i..=j] {
+            if labels[k] > 0.5 {
+                rank_sum_pos += midrank;
+            }
+        }
+        i = j + 1;
+    }
+    let u = rank_sum_pos - (npos as f64) * (npos as f64 + 1.0) / 2.0;
+    u / (npos as f64 * nneg as f64)
+}
+
+/// Mean binary cross-entropy from logits (matches the L2 graph's loss).
+pub fn logloss_from_logits(logits: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(logits.len(), labels.len());
+    let mut s = 0.0f64;
+    for (&l, &y) in logits.iter().zip(labels) {
+        let l = l as f64;
+        let y = y as f64;
+        s += l.max(0.0) - l * y + (-l.abs()).exp().ln_1p();
+    }
+    s / logits.len() as f64
+}
+
+/// The four overheads of paper §2.2, in emulated hours.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OverheadLedger {
+    pub save_h: f64,
+    pub load_h: f64,
+    pub lost_h: f64,
+    pub reschedule_h: f64,
+    /// count of checkpoint saves / failures, for reporting
+    pub n_saves: u64,
+    pub n_failures: u64,
+}
+
+impl OverheadLedger {
+    pub fn total_h(&self) -> f64 {
+        self.save_h + self.load_h + self.lost_h + self.reschedule_h
+    }
+
+    /// Overhead as a fraction of useful training time `t_total_h`
+    /// (the paper reports overhead / total training time).
+    pub fn fraction_of(&self, t_total_h: f64) -> f64 {
+        self.total_h() / t_total_h
+    }
+
+    pub fn add(&mut self, other: &OverheadLedger) {
+        self.save_h += other.save_h;
+        self.load_h += other.load_h;
+        self.lost_h += other.lost_h;
+        self.reschedule_h += other.reschedule_h;
+        self.n_saves += other.n_saves;
+        self.n_failures += other.n_failures;
+    }
+}
+
+/// A recorded (step, value) training curve.
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub points: Vec<(u64, f64)>,
+}
+
+impl Curve {
+    pub fn push(&mut self, step: u64, value: f64) {
+        self.points.push((step, value));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    pub fn best_max(&self) -> Option<f64> {
+        self.points.iter().map(|&(_, v)| v).fold(None, |acc, v| {
+            Some(acc.map_or(v, |a: f64| a.max(v)))
+        })
+    }
+
+    pub fn to_csv(&self, header: &str) -> String {
+        let mut s = format!("step,{header}\n");
+        for (step, v) in &self.points {
+            s.push_str(&format!("{step},{v}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auc_perfect_ranking_is_one() {
+        let scores = [0.1, 0.4, 0.35, 0.8f32];
+        let labels = [0.0, 0.0, 0.0, 1.0f32];
+        assert_eq!(auc(&scores, &labels), 1.0);
+    }
+
+    #[test]
+    fn auc_reversed_is_zero() {
+        let scores = [0.9, 0.1f32];
+        let labels = [0.0, 1.0f32];
+        assert_eq!(auc(&scores, &labels), 0.0);
+    }
+
+    #[test]
+    fn auc_random_is_half() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let labels: Vec<f32> = (0..n).map(|_| (rng.f64() < 0.5) as u32 as f32).collect();
+        let a = auc(&scores, &labels);
+        assert!((a - 0.5).abs() < 0.02, "auc={a}");
+    }
+
+    #[test]
+    fn auc_known_value_with_ties() {
+        // scores: pos {0.5, 0.5}, neg {0.5, 0.2}
+        // pairs: (0.5>0.2)x2 correct, (0.5 vs 0.5)x2 ties → (2 + 2*0.5)/4 = 0.75
+        let scores = [0.5, 0.5, 0.5, 0.2f32];
+        let labels = [1.0, 1.0, 0.0, 0.0f32];
+        assert!((auc(&scores, &labels) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_invariant_to_monotone_transform() {
+        let scores = [0.1, 0.7, 0.3, 0.9, 0.5f32];
+        let labels = [0.0, 1.0, 0.0, 1.0, 1.0f32];
+        let transformed: Vec<f32> = scores.iter().map(|s| s * 100.0 - 3.0).collect();
+        assert_eq!(auc(&scores, &labels), auc(&transformed, &labels));
+    }
+
+    #[test]
+    fn auc_single_class_is_half() {
+        assert_eq!(auc(&[0.3, 0.6], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn logloss_matches_manual() {
+        let logits = [0.0f32];
+        let labels = [1.0f32];
+        assert!((logloss_from_logits(&logits, &labels) - 2f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut a = OverheadLedger { save_h: 1.0, n_saves: 2, ..Default::default() };
+        let b = OverheadLedger { lost_h: 3.0, n_failures: 1, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.total_h(), 4.0);
+        assert_eq!(a.fraction_of(40.0), 0.1);
+        assert_eq!((a.n_saves, a.n_failures), (2, 1));
+    }
+
+    #[test]
+    fn curve_csv_and_best() {
+        let mut c = Curve::default();
+        c.push(0, 0.5);
+        c.push(10, 0.8);
+        c.push(20, 0.7);
+        assert_eq!(c.best_max(), Some(0.8));
+        assert_eq!(c.last(), Some(0.7));
+        assert!(c.to_csv("auc").starts_with("step,auc\n0,0.5\n"));
+    }
+}

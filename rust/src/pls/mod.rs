@@ -1,0 +1,239 @@
+//! PLS — *portion of lost samples* (paper §4.1) — and the CPR controller
+//! built on it: expected-PLS interval selection (Eq. 4), the overhead
+//! models for full (Eq. 1) and partial (Eq. 2) recovery, and the benefit
+//! analysis that decides when CPR falls back to full recovery.
+
+use crate::config::ClusterConfig;
+
+/// Running PLS accumulator (Eq. 3). Track `samples` processed; on a failure
+/// of `victims` Emb PS nodes, the effect of the samples since the last
+/// checkpoint is lost on a 1/N_emb slice of the model per victim.
+#[derive(Clone, Debug, Default)]
+pub struct PlsAccumulator {
+    pls: f64,
+}
+
+impl PlsAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a failure at `samples_now`, with the last checkpoint taken at
+    /// `samples_last_ckpt`, out of `total_samples` planned, on a cluster of
+    /// `n_emb` Emb PS nodes, killing `victims` of them.
+    pub fn on_failure(
+        &mut self,
+        samples_now: u64,
+        samples_last_ckpt: u64,
+        total_samples: u64,
+        n_emb: usize,
+        victims: usize,
+    ) {
+        debug_assert!(samples_now >= samples_last_ckpt);
+        let lost = (samples_now - samples_last_ckpt) as f64;
+        self.pls +=
+            victims as f64 * lost / (total_samples as f64 * n_emb as f64);
+    }
+
+    pub fn value(&self) -> f64 {
+        self.pls
+    }
+}
+
+/// Expected PLS for a checkpoint interval (Eq. 4):
+/// E[PLS] = 0.5 T_save / (T_fail · N_emb).
+pub fn expected_pls(t_save_h: f64, t_fail_h: f64, n_emb: usize) -> f64 {
+    0.5 * t_save_h / (t_fail_h * n_emb as f64)
+}
+
+/// Interval that achieves a target PLS (inverse of Eq. 4):
+/// T_save = 2 · PLS · N_emb · T_fail.
+pub fn t_save_for_target_pls(target_pls: f64, t_fail_h: f64, n_emb: usize) -> f64 {
+    2.0 * target_pls * n_emb as f64 * t_fail_h
+}
+
+/// Eq. 1 — total overhead (hours) of FULL recovery over a run of
+/// `t_total_h`, saving every `t_save_h`.
+pub fn overhead_full_h(c: &ClusterConfig, t_save_h: f64) -> f64 {
+    c.o_save_h * (c.t_total_h / t_save_h)
+        + (c.o_load_h + t_save_h / 2.0 + c.o_res_h) * (c.t_total_h / c.t_fail_h)
+}
+
+/// Eq. 2 — total overhead (hours) of PARTIAL recovery (no lost
+/// computation term).
+pub fn overhead_partial_h(c: &ClusterConfig, t_save_h: f64) -> f64 {
+    c.o_save_h * (c.t_total_h / t_save_h)
+        + (c.o_load_h + c.o_res_h) * (c.t_total_h / c.t_fail_h)
+}
+
+/// What the CPR controller decided for this job.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CprPlan {
+    /// chosen checkpoint interval, hours
+    pub t_save_h: f64,
+    /// estimated overhead of the chosen scheme, hours
+    pub est_overhead_h: f64,
+    /// estimated overhead had we used full recovery at its optimum, hours
+    pub est_full_overhead_h: f64,
+    /// true = run partial recovery; false = fall back to full recovery
+    pub use_partial: bool,
+    /// expected PLS under the plan (0 for full recovery)
+    pub expected_pls: f64,
+}
+
+/// The CPR decision procedure (paper §4.2, Fig. 5):
+/// 1. compute T_save,part from the target PLS;
+/// 2. estimate partial-recovery overhead at that interval (Eq. 2);
+/// 3. compare against full recovery at its optimal interval (Eq. 1);
+/// 4. fall back to full recovery when partial shows no benefit.
+///
+/// The partial interval is clamped to the job length (saving less often
+/// than once per job is just "save once").
+pub fn plan(c: &ClusterConfig, target_pls: f64) -> CprPlan {
+    let t_save_full = c.t_save_full_h();
+    let full_h = overhead_full_h(c, t_save_full);
+    let t_save_part =
+        t_save_for_target_pls(target_pls, c.t_fail_h, c.n_emb_ps).min(c.t_total_h);
+    let part_h = overhead_partial_h(c, t_save_part);
+    let use_partial = part_h < full_h;
+    CprPlan {
+        t_save_h: if use_partial { t_save_part } else { t_save_full },
+        est_overhead_h: if use_partial { part_h } else { full_h },
+        est_full_overhead_h: full_h,
+        use_partial,
+        expected_pls: if use_partial {
+            expected_pls(t_save_part, c.t_fail_h, c.n_emb_ps)
+        } else {
+            0.0
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::{forall, gen};
+
+    fn cluster(n_emb: usize, t_fail: f64) -> ClusterConfig {
+        ClusterConfig {
+            n_emb_ps: n_emb,
+            n_trainers: 8,
+            t_total_h: 56.0,
+            t_fail_h: t_fail,
+            o_save_h: 0.094,
+            o_load_h: 0.042,
+            o_res_h: 0.042,
+        }
+    }
+
+    #[test]
+    fn eq4_and_inverse_are_consistent() {
+        forall(10, 200, |rng| {
+            let target = gen::f64_in(rng, 0.001, 0.5);
+            let t_fail = gen::f64_in(rng, 1.0, 100.0);
+            let n_emb = gen::usize_in(rng, 1, 64);
+            let t_save = t_save_for_target_pls(target, t_fail, n_emb);
+            let back = expected_pls(t_save, t_fail, n_emb);
+            prop_assert!((back - target).abs() < 1e-12,
+                         "target {target} came back as {back}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn accumulator_matches_eq3() {
+        let mut a = PlsAccumulator::new();
+        // 1 victim, lost 1000 of 10_000 samples, 8 nodes
+        a.on_failure(5_000, 4_000, 10_000, 8, 1);
+        assert!((a.value() - 1000.0 / (10_000.0 * 8.0)).abs() < 1e-15);
+        // second failure with 2 victims accumulates
+        a.on_failure(8_000, 8_000, 10_000, 8, 2);
+        assert!((a.value() - 1000.0 / 80_000.0).abs() < 1e-15); // no new loss
+        a.on_failure(9_000, 8_000, 10_000, 8, 2);
+        let want = 1000.0 / 80_000.0 + 2.0 * 1000.0 / 80_000.0;
+        assert!((a.value() - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn pls_nonnegative_and_monotone() {
+        forall(11, 200, |rng| {
+            let mut a = PlsAccumulator::new();
+            let total = 100_000u64;
+            let n_emb = gen::usize_in(rng, 1, 32);
+            let mut prev = 0.0;
+            let mut last_ckpt = 0u64;
+            let mut now = 0u64;
+            for _ in 0..20 {
+                now += rng.below(5_000);
+                if rng.bool_with(0.3) {
+                    last_ckpt = now;
+                }
+                a.on_failure(now, last_ckpt, total, n_emb,
+                             gen::usize_in(rng, 1, n_emb));
+                prop_assert!(a.value() >= prev, "PLS decreased");
+                prev = a.value();
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn full_overhead_minimized_at_optimal_interval() {
+        let c = cluster(8, 28.0);
+        let opt = c.t_save_full_h();
+        let at_opt = overhead_full_h(&c, opt);
+        for mult in [0.25, 0.5, 0.8, 1.25, 2.0, 4.0] {
+            assert!(overhead_full_h(&c, opt * mult) >= at_opt - 1e-9,
+                    "interval {} beats optimum", opt * mult);
+        }
+    }
+
+    #[test]
+    fn partial_overhead_decreases_with_interval() {
+        let c = cluster(8, 28.0);
+        assert!(overhead_partial_h(&c, 10.0) < overhead_partial_h(&c, 5.0));
+    }
+
+    #[test]
+    fn emulation_constants_match_paper_headline() {
+        // Fig. 7 bars: full ≈ 8.5%, partial-naive ≈ 4.4%, CPR ≈ 0.53%
+        let c = cluster(8, 28.0);
+        let full = overhead_full_h(&c, c.t_save_full_h()) / c.t_total_h;
+        assert!((full - 0.085).abs() < 0.01, "full {full}");
+        let naive = overhead_partial_h(&c, c.t_save_full_h()) / c.t_total_h;
+        assert!((naive - 0.044).abs() < 0.006, "naive {naive}");
+        let p = plan(&c, 0.1);
+        assert!(p.use_partial);
+        let cpr = p.est_overhead_h / c.t_total_h;
+        assert!((cpr - 0.0055).abs() < 0.003, "cpr {cpr}");
+    }
+
+    #[test]
+    fn falls_back_to_full_when_failures_frequent() {
+        // T_fail tiny → partial interval shrinks → save overhead explodes
+        let c = cluster(2, 0.05);
+        let p = plan(&c, 0.02);
+        assert!(!p.use_partial, "should fall back: {p:?}");
+        assert_eq!(p.expected_pls, 0.0);
+    }
+
+    #[test]
+    fn plan_interval_clamped_to_job_length() {
+        let c = cluster(64, 28.0); // huge N_emb → enormous raw interval
+        let p = plan(&c, 0.2);
+        assert!(p.t_save_h <= c.t_total_h + 1e-9);
+    }
+
+    #[test]
+    fn plan_monotone_in_target_pls() {
+        // looser PLS target → larger interval → no more overhead
+        let c = cluster(8, 28.0);
+        let mut prev = f64::INFINITY;
+        for target in [0.02, 0.05, 0.1, 0.2] {
+            let p = plan(&c, target);
+            assert!(p.est_overhead_h <= prev + 1e-12);
+            prev = p.est_overhead_h;
+        }
+    }
+}

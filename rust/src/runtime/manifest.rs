@@ -1,0 +1,102 @@
+//! The artifact ABI: parsed form of `manifest.json` written by aot.py.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Name + shape of one MLP parameter, in artifact input order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Everything Rust needs to marshal literals for one compiled model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub name: String,
+    pub batch: usize,
+    pub num_dense: usize,
+    pub num_sparse: usize,
+    pub emb_dim: usize,
+    pub num_pairs: usize,
+    pub params: Vec<ParamSpec>,
+    pub train_file: String,
+    pub predict_file: String,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p.get("shape")?.as_arr()?
+                        .iter().map(|d| d.as_usize()).collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if params.is_empty() {
+            bail!("manifest has no params");
+        }
+        Ok(Manifest {
+            params,
+            name: j.get("name")?.as_str()?.to_string(),
+            batch: j.get("batch")?.as_usize()?,
+            num_dense: j.get("num_dense")?.as_usize()?,
+            num_sparse: j.get("num_sparse")?.as_usize()?,
+            emb_dim: j.get("emb_dim")?.as_usize()?,
+            num_pairs: j.get("num_pairs")?.as_usize()?,
+            train_file: j.get("train_step")?.get("file")?.as_str()?.to_string(),
+            predict_file: j.get("predict")?.get("file")?.as_str()?.to_string(),
+        })
+    }
+
+    /// Total MLP parameter count.
+    pub fn mlp_params(&self) -> usize {
+        self.params.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "mini", "batch": 128, "num_dense": 13, "num_sparse": 26,
+      "emb_dim": 8, "num_pairs": 351,
+      "params": [
+        {"name": "bot0.w", "shape": [13, 64]},
+        {"name": "bot0.b", "shape": [64]}
+      ],
+      "train_step": {"file": "train_step.hlo.txt", "inputs": [], "outputs": []},
+      "predict": {"file": "predict.hlo.txt", "inputs": [], "outputs": []}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "mini");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].shape, vec![13, 64]);
+        assert_eq!(m.mlp_params(), 13 * 64 + 64);
+        assert_eq!(m.train_file, "train_step.hlo.txt");
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

@@ -1,0 +1,243 @@
+//! Production-cluster overhead simulator (paper §3.2, Fig. 4).
+//!
+//! Simulates a population of training jobs against the checkpoint-overhead
+//! model of §2.2: each job draws a duration and a sequence of failures; the
+//! simulator charges O_save per checkpoint, and O_load + lost-computation +
+//! rescheduling per failure, then reports the per-job overhead breakdown
+//! distribution (the paper's Fig. 4 percentiles) and the total
+//! machine-time wasted (the "1,156 machine-years" estimate).
+
+use crate::metrics::OverheadLedger;
+use crate::util::dist::{exponential, gamma};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Population-level simulation parameters.
+#[derive(Clone, Debug)]
+pub struct FleetSimConfig {
+    pub jobs: usize,
+    /// job duration: gamma(shape, scale) hours, clamped to >= min_duration
+    pub duration_shape: f64,
+    pub duration_scale_h: f64,
+    pub min_duration_h: f64,
+    /// per-job MTBF, hours (failures are memoryless within a job)
+    pub t_fail_h: f64,
+    /// checkpoint constants, hours
+    pub o_save_h: f64,
+    pub o_load_h: f64,
+    /// rescheduling: exponential with this mean, heavy tail via queueing
+    /// spikes (prob `res_spike_p` of multiplying by `res_spike_x`) —
+    /// reproduces the paper's p95 being rescheduling-dominated
+    pub o_res_mean_h: f64,
+    pub res_spike_p: f64,
+    pub res_spike_x: f64,
+    /// checkpoint interval policy: optimal full-recovery interval
+    pub nodes_per_job: usize,
+}
+
+impl Default for FleetSimConfig {
+    fn default() -> Self {
+        // tuned so the population statistics land on the paper's §3.2
+        // aggregates: mean overhead ≈ 12%, save-dominated at p75,
+        // lost-computation at p90, rescheduling at p95.
+        Self {
+            jobs: 17_000,
+            duration_shape: 2.0,
+            duration_scale_h: 30.0,
+            min_duration_h: 10.0,
+            t_fail_h: 22.0,
+            o_save_h: 0.1,
+            o_load_h: 0.15,
+            o_res_mean_h: 0.3,
+            res_spike_p: 0.08,
+            res_spike_x: 12.0,
+            nodes_per_job: 38, // 20 trainers + 18 Emb PS
+        }
+    }
+}
+
+/// Per-job simulation output.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub duration_h: f64,
+    pub ledger: OverheadLedger,
+}
+
+impl JobOutcome {
+    pub fn overhead_frac(&self) -> f64 {
+        self.ledger.fraction_of(self.duration_h)
+    }
+}
+
+/// Simulate one job under FULL recovery at interval `t_save_h`.
+pub fn simulate_job_full(
+    rng: &mut Rng,
+    duration_h: f64,
+    t_save_h: f64,
+    cfg: &FleetSimConfig,
+) -> JobOutcome {
+    let mut ledger = OverheadLedger::default();
+    // checkpoint saves over the job
+    let n_saves = (duration_h / t_save_h).floor();
+    ledger.save_h = cfg.o_save_h * n_saves;
+    ledger.n_saves = n_saves as u64;
+    // failures: Poisson with rate duration/t_fail
+    let mut t = exponential(rng, cfg.t_fail_h);
+    let mut last_ckpt = 0.0f64;
+    while t < duration_h {
+        let since_ckpt = t - (t / t_save_h).floor() * t_save_h;
+        let _ = last_ckpt;
+        last_ckpt = t;
+        ledger.lost_h += since_ckpt;
+        ledger.load_h += cfg.o_load_h;
+        let mut res = exponential(rng, cfg.o_res_mean_h);
+        if rng.bool_with(cfg.res_spike_p) {
+            res *= cfg.res_spike_x;
+        }
+        ledger.reschedule_h += res;
+        ledger.n_failures += 1;
+        t += exponential(rng, cfg.t_fail_h);
+    }
+    JobOutcome { duration_h, ledger }
+}
+
+/// Simulate one job under PARTIAL recovery at interval `t_save_h`
+/// (no lost-computation term; paper Eq. 2).
+pub fn simulate_job_partial(
+    rng: &mut Rng,
+    duration_h: f64,
+    t_save_h: f64,
+    cfg: &FleetSimConfig,
+) -> JobOutcome {
+    let mut ledger = OverheadLedger::default();
+    let n_saves = (duration_h / t_save_h).floor();
+    ledger.save_h = cfg.o_save_h * n_saves;
+    ledger.n_saves = n_saves as u64;
+    let mut t = exponential(rng, cfg.t_fail_h);
+    while t < duration_h {
+        ledger.load_h += cfg.o_load_h;
+        let mut res = exponential(rng, cfg.o_res_mean_h);
+        if rng.bool_with(cfg.res_spike_p) {
+            res *= cfg.res_spike_x;
+        }
+        ledger.reschedule_h += res;
+        ledger.n_failures += 1;
+        t += exponential(rng, cfg.t_fail_h);
+    }
+    JobOutcome { duration_h, ledger }
+}
+
+/// Fleet-level aggregates for Fig. 4.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub mean_overhead_frac: f64,
+    /// (percentile, save, load, lost, reschedule, total) as fractions
+    pub breakdown: Vec<(f64, f64, f64, f64, f64, f64)>,
+    pub machine_years_wasted: f64,
+}
+
+/// Run the fleet simulation under full recovery at each job's optimal
+/// interval √(2 O_save T_fail).
+pub fn simulate_fleet(rng: &mut Rng, cfg: &FleetSimConfig) -> FleetReport {
+    let t_save = (2.0 * cfg.o_save_h * cfg.t_fail_h).sqrt();
+    let mut fracs = Vec::with_capacity(cfg.jobs);
+    let mut outcomes = Vec::with_capacity(cfg.jobs);
+    let mut machine_hours = 0.0;
+    for _ in 0..cfg.jobs {
+        let duration = gamma(rng, cfg.duration_shape, cfg.duration_scale_h)
+            .max(cfg.min_duration_h);
+        let out = simulate_job_full(rng, duration, t_save, cfg);
+        machine_hours += out.ledger.total_h() * cfg.nodes_per_job as f64;
+        fracs.push(out.overhead_frac());
+        outcomes.push(out);
+    }
+    // percentile breakdown: order jobs by total overhead fraction, then
+    // report the component split of the job at each percentile
+    let mut order: Vec<usize> = (0..outcomes.len()).collect();
+    order.sort_by(|&a, &b| fracs[a].partial_cmp(&fracs[b]).unwrap());
+    let pick = |p: f64| -> (f64, f64, f64, f64, f64, f64) {
+        let i = order[((p / 100.0) * (order.len() - 1) as f64).round() as usize];
+        let o = &outcomes[i];
+        let d = o.duration_h;
+        (
+            p,
+            o.ledger.save_h / d,
+            o.ledger.load_h / d,
+            o.ledger.lost_h / d,
+            o.ledger.reschedule_h / d,
+            o.overhead_frac(),
+        )
+    };
+    FleetReport {
+        mean_overhead_frac: stats::mean(&fracs),
+        breakdown: vec![pick(50.0), pick(75.0), pick(90.0), pick(95.0)],
+        machine_years_wasted: machine_hours / (24.0 * 365.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_job_charges_all_four_overheads() {
+        let cfg = FleetSimConfig { t_fail_h: 5.0, ..Default::default() };
+        let mut rng = Rng::new(1);
+        // long job so failures certainly occur
+        let out = simulate_job_full(&mut rng, 200.0, 2.0, &cfg);
+        assert!(out.ledger.n_saves == 100);
+        assert!(out.ledger.n_failures > 10);
+        assert!(out.ledger.save_h > 0.0 && out.ledger.load_h > 0.0);
+        assert!(out.ledger.lost_h > 0.0 && out.ledger.reschedule_h > 0.0);
+    }
+
+    #[test]
+    fn partial_job_has_no_lost_computation() {
+        let cfg = FleetSimConfig { t_fail_h: 5.0, ..Default::default() };
+        let mut rng = Rng::new(2);
+        let out = simulate_job_partial(&mut rng, 200.0, 2.0, &cfg);
+        assert_eq!(out.ledger.lost_h, 0.0);
+        assert!(out.ledger.n_failures > 10);
+    }
+
+    #[test]
+    fn lost_computation_bounded_by_interval() {
+        let cfg = FleetSimConfig::default();
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let out = simulate_job_full(&mut rng, 100.0, 3.0, &cfg);
+            assert!(out.ledger.lost_h <= 3.0 * out.ledger.n_failures as f64 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn fleet_statistics_land_in_paper_band() {
+        // paper §3.2: average overhead ≈ 12%, ~1,156 machine-years over
+        // 17k jobs; we assert the same order of magnitude
+        let cfg = FleetSimConfig { jobs: 4000, ..Default::default() };
+        let mut rng = Rng::new(4);
+        let rep = simulate_fleet(&mut rng, &cfg);
+        assert!((0.06..0.20).contains(&rep.mean_overhead_frac),
+                "mean overhead {}", rep.mean_overhead_frac);
+        // percentiles monotone in total
+        for w in rep.breakdown.windows(2) {
+            assert!(w[1].5 >= w[0].5);
+        }
+        let scaled_years = rep.machine_years_wasted * (17_000.0 / 4000.0);
+        assert!((300.0..4000.0).contains(&scaled_years),
+                "machine-years {scaled_years}");
+    }
+
+    #[test]
+    fn partial_beats_full_on_average_at_same_interval() {
+        let cfg = FleetSimConfig::default();
+        let mut rng = Rng::new(5);
+        let (mut full, mut part) = (0.0, 0.0);
+        for _ in 0..300 {
+            let d = 80.0;
+            full += simulate_job_full(&mut rng, d, 3.0, &cfg).ledger.total_h();
+            part += simulate_job_partial(&mut rng, d, 3.0, &cfg).ledger.total_h();
+        }
+        assert!(part < full, "partial {part} !< full {full}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! [`forall`] runs a predicate over `cases` seeded random inputs; on the
+//! first failure it panics with the *case seed*, so `forall_case(seed, f)`
+//! reproduces it exactly. Generators are plain closures over [`Rng`].
+
+use crate::util::rng::Rng;
+
+/// Run `f` for `cases` randomized cases. `f` gets a per-case RNG and
+/// returns `Err(msg)` to fail the property.
+pub fn forall<F>(root_seed: u64, cases: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = root_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case);
+        if let Err(msg) = f(&mut Rng::new(case_seed)) {
+            panic!(
+                "property failed (case {case}/{cases}, case_seed={case_seed:#x}): {msg}\n\
+                 reproduce with testing::forall_case({case_seed:#x}, f)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn forall_case<F>(case_seed: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    if let Err(msg) = f(&mut Rng::new(case_seed)) {
+        panic!("case {case_seed:#x} failed: {msg}");
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Common generators.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// usize in [lo, hi] inclusive.
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.usize_below(hi - lo + 1)
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        rng.range_f64(lo, hi)
+    }
+
+    /// Vec of f32 in [-1, 1).
+    pub fn f32_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    /// Random 0/1 labels.
+    pub fn labels(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| (rng.f64() < 0.5) as u32 as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicU64::new(0);
+        forall(1, 50, |rng| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let x = rng.f64();
+            prop_assert!((0.0..1.0).contains(&x), "x={x}");
+            Ok(())
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        forall(2, 100, |rng| {
+            let x = rng.f64();
+            prop_assert!(x < 0.9, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall(3, 100, |rng| {
+            let n = gen::usize_in(rng, 5, 10);
+            prop_assert!((5..=10).contains(&n));
+            let v = gen::f32_vec(rng, n);
+            prop_assert!(v.len() == n);
+            prop_assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,133 @@
+//! Failure-trace import/export and trace-driven schedules.
+//!
+//! The paper's analysis starts from production logs of 17k–20k jobs
+//! (§3.1). Users with their own cluster logs can replay them here: a
+//! trace is a CSV of failure events (`time_h,victims`), loadable into the
+//! coordinator's schedule, and job-level time-to-failure series round-trip
+//! for the Fig. 3 fitting pipeline. The synthetic [`NodeHazard`] fleet can
+//! be exported in the same format, so the analysis code paths are
+//! identical for real and synthetic data.
+
+use anyhow::{bail, Context, Result};
+
+use crate::failure::{FailureEvent, NodeHazard};
+use crate::util::rng::Rng;
+
+/// Serialize a failure schedule as CSV (`time_h,victims` with victims
+/// separated by `;`).
+pub fn schedule_to_csv(events: &[FailureEvent]) -> String {
+    let mut s = String::from("time_h,victims\n");
+    for ev in events {
+        let victims: Vec<String> =
+            ev.victims.iter().map(|v| v.to_string()).collect();
+        s.push_str(&format!("{},{}\n", ev.time_h, victims.join(";")));
+    }
+    s
+}
+
+/// Parse a schedule CSV produced by [`schedule_to_csv`] (or by hand).
+pub fn schedule_from_csv(text: &str) -> Result<Vec<FailureEvent>> {
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || (i == 0 && line.starts_with("time_h")) {
+            continue;
+        }
+        let (time, victims) = line.split_once(',')
+            .with_context(|| format!("line {}: expected time,victims", i + 1))?;
+        let time_h: f64 = time.trim().parse()
+            .with_context(|| format!("line {}: bad time", i + 1))?;
+        if time_h < 0.0 {
+            bail!("line {}: negative time", i + 1);
+        }
+        let victims = victims
+            .split(';')
+            .filter(|v| !v.trim().is_empty())
+            .map(|v| v.trim().parse::<usize>()
+                 .with_context(|| format!("line {}: bad victim id", i + 1)))
+            .collect::<Result<Vec<_>>>()?;
+        if victims.is_empty() {
+            bail!("line {}: no victims", i + 1);
+        }
+        events.push(FailureEvent { time_h, victims });
+    }
+    events.sort_by(|a, b| a.time_h.partial_cmp(&b.time_h).unwrap());
+    Ok(events)
+}
+
+/// Job-level time-to-failure series (one float per job, hours) — the
+/// Fig. 3 input format.
+pub fn ttfs_to_csv(ttfs: &[f64]) -> String {
+    let mut s = String::from("ttf_h\n");
+    for t in ttfs {
+        s.push_str(&format!("{t}\n"));
+    }
+    s
+}
+
+pub fn ttfs_from_csv(text: &str) -> Result<Vec<f64>> {
+    text.lines()
+        .skip(1)
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| l.trim().parse::<f64>().context("bad ttf value"))
+        .collect()
+}
+
+/// Generate and export a synthetic fleet trace (the shipped stand-in for
+/// production logs; same consumer code paths as a real trace).
+pub fn synthesize_fleet_trace(
+    seed: u64,
+    jobs: usize,
+    n_nodes: usize,
+    horizon_h: f64,
+) -> Vec<f64> {
+    let hz = NodeHazard::default();
+    let mut rng = Rng::new(seed);
+    hz.fleet_ttfs(&mut rng, jobs, n_nodes, horizon_h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_roundtrip() {
+        let events = vec![
+            FailureEvent { time_h: 7.25, victims: vec![3] },
+            FailureEvent { time_h: 41.0, victims: vec![0, 5, 2] },
+        ];
+        let csv = schedule_to_csv(&events);
+        let back = schedule_from_csv(&csv).unwrap();
+        assert_eq!(events, back);
+    }
+
+    #[test]
+    fn schedule_sorts_by_time() {
+        let back = schedule_from_csv("time_h,victims\n40,1\n7,0\n").unwrap();
+        assert!(back[0].time_h < back[1].time_h);
+    }
+
+    #[test]
+    fn schedule_rejects_garbage() {
+        assert!(schedule_from_csv("time_h,victims\nxx,1\n").is_err());
+        assert!(schedule_from_csv("time_h,victims\n5,\n").is_err());
+        assert!(schedule_from_csv("time_h,victims\n-3,1\n").is_err());
+        assert!(schedule_from_csv("time_h,victims\n5,a;b\n").is_err());
+    }
+
+    #[test]
+    fn ttfs_roundtrip() {
+        let ttfs = vec![1.5, 28.0, 0.25];
+        let back = ttfs_from_csv(&ttfs_to_csv(&ttfs)).unwrap();
+        assert_eq!(ttfs, back);
+    }
+
+    #[test]
+    fn synthetic_trace_is_deterministic_and_plausible() {
+        let a = synthesize_fleet_trace(9, 2000, 16, 500.0);
+        let b = synthesize_fleet_trace(9, 2000, 16, 500.0);
+        assert_eq!(a, b);
+        let mean = a.iter().sum::<f64>() / a.len() as f64;
+        assert!((5.0..60.0).contains(&mean), "mean ttf {mean}");
+    }
+}

@@ -1,0 +1,200 @@
+//! Tiny CLI argument parser (clap is unavailable in the offline image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative option set + parsed values.
+#[derive(Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: String,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self { program: program.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// Register `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: true,
+            default: Some(default.into()),
+        });
+        self
+    }
+
+    /// Register a boolean `--name` flag (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut u = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for s in &self.specs {
+            let lhs = if s.takes_value {
+                format!("--{} <v>", s.name)
+            } else {
+                format!("--{}", s.name)
+            };
+            let def = s.default.as_deref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            u.push_str(&format!("  {lhs:<24} {}{def}\n", s.help));
+        }
+        u
+    }
+
+    /// Parse the given args (exclusive of argv[0]).
+    pub fn parse(mut self, args: &[String]) -> Result<Self> {
+        for s in &self.specs {
+            if let Some(d) = &s.default {
+                self.values.insert(s.name.clone(), d.clone());
+            }
+            if !s.takes_value {
+                self.flags.insert(s.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self.specs.iter().find(|s| s.name == key);
+                match spec {
+                    Some(s) if s.takes_value => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                if i >= args.len() {
+                                    bail!("--{key} expects a value");
+                                }
+                                args[i].clone()
+                            }
+                        };
+                        self.values.insert(key, v);
+                    }
+                    Some(_) => {
+                        if inline.is_some() {
+                            bail!("--{key} is a flag, no value allowed");
+                        }
+                        self.flags.insert(key, true);
+                    }
+                    None => bail!("unknown option --{key}\n\n{}", self.usage()),
+                }
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    pub fn parse_env(self) -> Result<Self> {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        self.parse(&args)
+    }
+
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name)
+            .unwrap_or_else(|| panic!("option --{name} not registered"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self.flags.get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not registered"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let c = Cli::new("t", "test")
+            .opt("steps", "100", "")
+            .opt("preset", "mini", "")
+            .flag("verbose", "")
+            .parse(&args(&["--steps", "500", "--verbose"]))
+            .unwrap();
+        assert_eq!(c.get_usize("steps").unwrap(), 500);
+        assert_eq!(c.get("preset"), "mini");
+        assert!(c.get_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_positionals() {
+        let c = Cli::new("t", "test")
+            .opt("k", "1", "")
+            .parse(&args(&["fig7", "--k=9", "extra"]))
+            .unwrap();
+        assert_eq!(c.get_usize("k").unwrap(), 9);
+        assert_eq!(c.positionals(), &["fig7".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(Cli::new("t", "")
+            .parse(&args(&["--nope"]))
+            .is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Cli::new("t", "").opt("k", "1", "")
+            .parse(&args(&["--k"]))
+            .is_err());
+    }
+}

@@ -1,0 +1,299 @@
+//! Probability distributions, built on [`crate::util::rng::Rng`].
+//!
+//! The failure model of the paper (§3.1) is a gamma distribution over
+//! inter-failure times; embedding accesses follow a Zipf power law; the
+//! synthetic teacher uses normals. All implemented from scratch (no `rand`
+//! crates in the offline image).
+
+use super::rng::Rng;
+
+/// Standard normal via Marsaglia polar (no trig, no tables).
+pub fn normal(rng: &mut Rng) -> f64 {
+    loop {
+        let u = 2.0 * rng.f64() - 1.0;
+        let v = 2.0 * rng.f64() - 1.0;
+        let s = u * u + v * v;
+        if s > 0.0 && s < 1.0 {
+            return u * (-2.0 * s.ln() / s).sqrt();
+        }
+    }
+}
+
+pub fn normal_with(rng: &mut Rng, mean: f64, std: f64) -> f64 {
+    mean + std * normal(rng)
+}
+
+/// Exponential with given mean (inverse-CDF).
+pub fn exponential(rng: &mut Rng, mean: f64) -> f64 {
+    let u = 1.0 - rng.f64(); // avoid ln(0)
+    -mean * u.ln()
+}
+
+/// Gamma(shape k, scale theta) via Marsaglia–Tsang (2000); the k < 1 case
+/// uses the standard boost `U^{1/k}` trick.
+pub fn gamma(rng: &mut Rng, shape: f64, scale: f64) -> f64 {
+    assert!(shape > 0.0 && scale > 0.0);
+    if shape < 1.0 {
+        let u = 1.0 - rng.f64();
+        return gamma(rng, shape + 1.0, scale) * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = normal(rng);
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v3 = v * v * v;
+        let u = 1.0 - rng.f64();
+        if u < 1.0 - 0.0331 * x.powi(4)
+            || u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln())
+        {
+            return d * v3 * scale;
+        }
+    }
+}
+
+/// Gamma survival function S(t) = 1 - CDF(t), via the regularized lower
+/// incomplete gamma function P(k, t/theta) (series + continued fraction,
+/// Numerical Recipes style).
+pub fn gamma_survival(t: f64, shape: f64, scale: f64) -> f64 {
+    1.0 - reg_lower_gamma(shape, t / scale)
+}
+
+/// Regularized lower incomplete gamma P(a, x).
+pub fn reg_lower_gamma(a: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        // series
+        let mut ap = a;
+        let mut sum = 1.0 / a;
+        let mut del = sum;
+        for _ in 0..500 {
+            ap += 1.0;
+            del *= x / ap;
+            sum += del;
+            if del.abs() < sum.abs() * 1e-14 {
+                break;
+            }
+        }
+        sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+    } else {
+        // continued fraction for Q, then P = 1 - Q
+        let mut b = x + 1.0 - a;
+        let mut c = 1.0 / 1e-300;
+        let mut d = 1.0 / b;
+        let mut h = d;
+        for i in 1..500 {
+            let an = -(i as f64) * (i as f64 - a);
+            b += 2.0;
+            d = an * d + b;
+            if d.abs() < 1e-300 {
+                d = 1e-300;
+            }
+            c = b + an / c;
+            if c.abs() < 1e-300 {
+                c = 1e-300;
+            }
+            d = 1.0 / d;
+            let del = d * c;
+            h *= del;
+            if (del - 1.0).abs() < 1e-14 {
+                break;
+            }
+        }
+        1.0 - (-x + a * x.ln() - ln_gamma(a)).exp() * h
+    }
+}
+
+/// Lanczos ln(Gamma(x)).
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 6] = [
+        76.18009172947146,
+        -86.50532032941677,
+        24.01409824083091,
+        -1.231739572450155,
+        0.1208650973866179e-2,
+        -0.5395239384953e-5,
+    ];
+    let mut y = x;
+    let tmp = x + 5.5;
+    let tmp = tmp - (x + 0.5) * tmp.ln();
+    let mut ser = 1.000000000190015;
+    for g in G {
+        y += 1.0;
+        ser += g / y;
+    }
+    -tmp + (2.5066282746310005 * ser / x).ln()
+}
+
+/// Zipf sampler over {0, .., n-1} with exponent s (rank-frequency
+/// p(rank) ∝ 1/rank^s), by rejection-inversion (W. Hörmann / G. Derflinger),
+/// O(1) per sample after O(1) setup; exact for all n and s > 0, s != 1 or
+/// s == 1 both handled through the generalized harmonic integral.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: f64,
+    s: f64,
+    h_x1: f64,
+    h_n: f64,
+    cutoff: f64,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n >= 1 && s > 0.0);
+        let nf = n as f64;
+        let h_x1 = Self::h_integral(1.5, s) - 1.0;
+        let h_n = Self::h_integral(nf + 0.5, s);
+        let cutoff =
+            2.0 - Self::h_integral_inverse(Self::h_integral(2.5, s) - Self::h(2.0, s), s);
+        Self { n: nf, s, h_x1, h_n, cutoff }
+    }
+
+    /// H(x) = ((x^(1-s)) - 1) / (1 - s)   (→ ln x as s → 1), increasing.
+    fn h_integral(x: f64, s: f64) -> f64 {
+        let log_x = x.ln();
+        helper2((1.0 - s) * log_x) * log_x
+    }
+
+    /// h(x) = x^-s (the unnormalized pmf).
+    fn h(x: f64, s: f64) -> f64 {
+        (-s * x.ln()).exp()
+    }
+
+    /// H^-1(x)
+    fn h_integral_inverse(x: f64, s: f64) -> f64 {
+        let mut t = x * (1.0 - s);
+        if t < -1.0 {
+            t = -1.0; // numerical guard, as in Commons
+        }
+        (helper1(t) * x).exp()
+    }
+
+    /// Sample a rank in [0, n) (rank 0 is the most frequent).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        loop {
+            let u = self.h_n + rng.f64() * (self.h_x1 - self.h_n);
+            let x = Self::h_integral_inverse(u, self.s);
+            let mut k = (x + 0.5).floor();
+            if k < 1.0 {
+                k = 1.0;
+            } else if k > self.n {
+                k = self.n;
+            }
+            if k - x <= self.cutoff
+                || u >= Self::h_integral(k + 0.5, self.s) - Self::h(k, self.s)
+            {
+                return (k as usize) - 1;
+            }
+        }
+    }
+}
+
+/// helper1(x) = log1p(x)/x, stable near 0.
+fn helper1(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.ln_1p() / x
+    } else {
+        1.0 - x * (0.5 - x * (1.0 / 3.0 - 0.25 * x))
+    }
+}
+
+/// helper2(x) = expm1(x)/x, stable near 0.
+fn helper2(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.exp_m1() / x
+    } else {
+        1.0 + x * 0.5 * (1.0 + x / 3.0 * (1.0 + 0.25 * x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(1);
+        let xs: Vec<f64> = (0..200_000).map(|_| normal(&mut rng)).collect();
+        let m = stats::mean(&xs);
+        let v = stats::variance(&xs);
+        assert!(m.abs() < 0.01, "mean {m}");
+        assert!((v - 1.0).abs() < 0.02, "var {v}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Rng::new(2);
+        let xs: Vec<f64> = (0..100_000).map(|_| exponential(&mut rng, 3.0)).collect();
+        assert!((stats::mean(&xs) - 3.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn gamma_moments() {
+        // mean = k*theta, var = k*theta^2
+        for (k, th) in [(0.5, 2.0), (2.0, 3.0), (7.5, 0.5)] {
+            let mut rng = Rng::new(3);
+            let xs: Vec<f64> = (0..200_000).map(|_| gamma(&mut rng, k, th)).collect();
+            let m = stats::mean(&xs);
+            let v = stats::variance(&xs);
+            assert!((m - k * th).abs() / (k * th) < 0.02, "k={k} mean {m}");
+            assert!((v - k * th * th).abs() / (k * th * th) < 0.06, "k={k} var {v}");
+        }
+    }
+
+    #[test]
+    fn gamma_survival_matches_empirical() {
+        let (k, th) = (2.0, 14.0);
+        let mut rng = Rng::new(4);
+        let xs: Vec<f64> = (0..100_000).map(|_| gamma(&mut rng, k, th)).collect();
+        for t in [5.0, 14.0, 28.0, 56.0] {
+            let emp = xs.iter().filter(|&&x| x > t).count() as f64 / xs.len() as f64;
+            let ana = gamma_survival(t, k, th);
+            assert!((emp - ana).abs() < 0.01, "t={t} emp={emp} ana={ana}");
+        }
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Gamma(5) = 24, Gamma(0.5) = sqrt(pi)
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn zipf_rank_frequencies_follow_power_law() {
+        let n = 1000;
+        let s = 1.1;
+        let z = Zipf::new(n, s);
+        let mut rng = Rng::new(5);
+        let mut counts = vec![0u64; n];
+        let draws = 500_000;
+        for _ in 0..draws {
+            let k = z.sample(&mut rng);
+            assert!(k < n);
+            counts[k] += 1;
+        }
+        // rank-0 must dominate; check ratio of rank0/rank9 ≈ 10^s
+        let r = counts[0] as f64 / counts[9] as f64;
+        let want = 10f64.powf(s);
+        assert!((r / want - 1.0).abs() < 0.15, "ratio {r} want {want}");
+        // heavy skew: top 1% of rows take a large share
+        let top: u64 = counts[..n / 100].iter().sum();
+        assert!(top as f64 / draws as f64 > 0.3);
+    }
+
+    #[test]
+    fn zipf_n1_always_zero() {
+        let z = Zipf::new(1, 1.2);
+        let mut rng = Rng::new(6);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut rng), 0);
+        }
+    }
+}

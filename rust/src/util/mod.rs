@@ -1,0 +1,10 @@
+//! Self-contained substrates the offline image forced us to build:
+//! RNG, probability distributions, statistics, JSON, CLI parsing, and a
+//! scoped thread-pool helper. See DESIGN.md §Offline-dependency note.
+
+pub mod cli;
+pub mod dist;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threads;

@@ -1,0 +1,100 @@
+//! Scoped parallel-for over index ranges (no rayon in the offline image).
+//!
+//! The Emb PS cluster fans gather/scatter work out across emulated nodes;
+//! `parallel_chunks` runs a closure per contiguous chunk on std scoped
+//! threads. Falls back to inline execution for small inputs where thread
+//! spawn cost would dominate.
+
+/// Run `f(chunk_start, chunk_end)` over `[0, n)` split into up to
+/// `max_threads` contiguous chunks. `f` must be Sync; chunks are disjoint.
+pub fn parallel_chunks<F>(n: usize, max_threads: usize, min_per_thread: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    // available_parallelism() is a syscall — cache it (it cost ~30 µs per
+    // gather on the hot path before this; EXPERIMENTS.md §Perf #5)
+    static HW: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    let hw = *HW.get_or_init(|| {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    });
+    let threads = max_threads.min(hw).min(n / min_per_thread.max(1)).max(1);
+    if threads == 1 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let fref = &f;
+            scope.spawn(move || fref(lo, hi));
+        }
+    });
+}
+
+/// Map `f(i)` over `[0, n)` in parallel, collecting results in order.
+pub fn parallel_map<T, F>(n: usize, max_threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    let slots: Vec<std::sync::Mutex<&mut T>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+    parallel_chunks(n, max_threads, 1, |lo, hi| {
+        for i in lo..hi {
+            **slots[i].lock().unwrap() = f(i);
+        }
+    });
+    drop(slots);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let n = 10_000;
+        let counters: Vec<AtomicUsize> =
+            (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_chunks(n, 8, 1, |lo, hi| {
+            for i in lo..hi {
+                counters[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(counters.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        parallel_chunks(0, 4, 1, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn single_thread_fallback_for_small_n() {
+        let hits = AtomicUsize::new(0);
+        parallel_chunks(3, 8, 100, |lo, hi| {
+            assert_eq!((lo, hi), (0, 3));
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let v = parallel_map(100, 8, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+}

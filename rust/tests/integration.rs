@@ -1,0 +1,311 @@
+//! End-to-end integration tests: artifact numerics vs the Python golden,
+//! and full training-system behaviour (learning, recovery semantics,
+//! overhead accounting) across strategies.
+//!
+//! Requires `make artifacts` to have run (the Makefile `test` target does).
+
+use std::collections::HashMap;
+use std::io::Read;
+
+use cpr::config::{preset, JobConfig, Strategy};
+use cpr::coordinator::{run_training, RunOptions, TrainReport};
+use cpr::failure::{uniform_schedule, FailureEvent};
+use cpr::runtime::{ModelExe, Runtime};
+use cpr::util::rng::Rng;
+
+// PjRtClient is Rc-based (not Sync), so each test thread builds its own
+// runtime + compiled model. The executables keep the client alive.
+fn load_model(preset_name: &str) -> ModelExe {
+    Runtime::cpu()
+        .expect("PJRT CPU client")
+        .load_model("artifacts", preset_name)
+        .expect("artifacts missing — run `make artifacts` first")
+}
+
+thread_local! {
+    static MINI: std::cell::OnceCell<ModelExe> = const { std::cell::OnceCell::new() };
+}
+
+fn with_mini<R>(f: impl FnOnce(&ModelExe) -> R) -> R {
+    MINI.with(|cell| f(cell.get_or_init(|| load_model("mini"))))
+}
+
+/// Small-but-learnable job config for tests (runs in a few seconds).
+fn test_cfg(strategy: Strategy) -> JobConfig {
+    let mut cfg = preset("mini").unwrap();
+    cfg.data.train_samples = 38_400; // 300 steps
+    cfg.data.eval_samples = 12_800;
+    cfg.checkpoint.strategy = strategy;
+    cfg
+}
+
+fn sched(seed: u64, n: usize, victims: usize, t_total: f64, n_nodes: usize)
+         -> Vec<FailureEvent> {
+    let mut rng = Rng::new(seed);
+    uniform_schedule(&mut rng, n, t_total, n_nodes, victims)
+}
+
+fn run(cfg: &JobConfig, schedule: Vec<FailureEvent>) -> TrainReport {
+    with_mini(|model| {
+        run_training(model, cfg, &RunOptions { schedule, ..Default::default() })
+    })
+    .expect("training run")
+}
+
+// ---------------------------------------------------------------------------
+// golden numerics
+// ---------------------------------------------------------------------------
+
+fn read_golden(path: &str) -> HashMap<String, Vec<f32>> {
+    let mut f = std::fs::File::open(path).expect("golden.bin");
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf).unwrap();
+    let mut pos = 0usize;
+    let ru32 = |b: &[u8], p: &mut usize| -> u32 {
+        let v = u32::from_le_bytes(b[*p..*p + 4].try_into().unwrap());
+        *p += 4;
+        v
+    };
+    let n = ru32(&buf, &mut pos);
+    let mut out = HashMap::new();
+    for _ in 0..n {
+        let name_len = ru32(&buf, &mut pos) as usize;
+        let name = String::from_utf8(buf[pos..pos + name_len].to_vec()).unwrap();
+        pos += name_len;
+        let count = ru32(&buf, &mut pos) as usize;
+        let mut data = vec![0f32; count];
+        for (i, d) in data.iter_mut().enumerate() {
+            *d = f32::from_le_bytes(
+                buf[pos + i * 4..pos + i * 4 + 4].try_into().unwrap());
+        }
+        pos += count * 4;
+        out.insert(name, data);
+    }
+    out
+}
+
+fn assert_close(name: &str, got: &[f32], want: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(got.len(), want.len(), "{name}: length mismatch");
+    let mut worst = 0.0f32;
+    for (g, w) in got.iter().zip(want) {
+        let err = (g - w).abs();
+        let bound = atol + rtol * w.abs();
+        if err > bound {
+            worst = worst.max(err);
+        }
+    }
+    assert!(worst == 0.0, "{name}: max violation {worst}");
+}
+
+/// THE critical test: the AOT artifact, executed from Rust through PJRT,
+/// must reproduce jax's own numbers. Catches HLO round-trip corruption
+/// (e.g. silently-elided large constants) that shape checks cannot see.
+#[test]
+fn golden_numerics_match_python() {
+    for preset_name in ["mini", "kaggle_like"] {
+        let model = load_model(preset_name);
+        let g = read_golden(&format!("artifacts/{preset_name}/golden.bin"));
+        let n_params = model.manifest.params.len();
+        let mut params: Vec<cpr::runtime::PjRtBuffer> = (0..n_params)
+            .map(|i| {
+                let spec = &model.manifest.params[i];
+                model.buffer(&g[&format!("param{i}")], &spec.shape).unwrap()
+            })
+            .collect();
+
+        // predict first (params unchanged)
+        let logits = model
+            .predict(&g["dense"], &g["emb"], &params)
+            .unwrap();
+        assert_close(&format!("{preset_name}/logits"), &logits, &g["logits"],
+                     1e-4, 1e-3);
+
+        let out = model
+            .train_step(&g["dense"], &g["emb"], &g["labels"], g["lr"][0],
+                        &mut params)
+            .unwrap();
+        assert_close(&format!("{preset_name}/loss"), &[out.loss], &g["loss"],
+                     1e-5, 1e-4);
+        assert_close(&format!("{preset_name}/emb_grad"), &out.emb_grad,
+                     &g["emb_grad"], 1e-6, 1e-3);
+        let new_params = model.params_to_host(&params).unwrap();
+        for (i, p) in new_params.iter().enumerate() {
+            assert_close(&format!("{preset_name}/new_param{i}"), p,
+                         &g[&format!("new_param{i}")], 1e-5, 1e-3);
+        }
+        // sanity: the embedding gradient must not be degenerate
+        let gmax = out.emb_grad.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        assert!(gmax > 1e-6, "{preset_name}: embedding gradient ~ zero");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// training-system behaviour
+// ---------------------------------------------------------------------------
+
+#[test]
+fn training_learns_without_failures() {
+    let cfg = test_cfg(Strategy::Full);
+    let r = run(&cfg, vec![]);
+    assert!(r.final_auc > 0.70, "AUC {}", r.final_auc);
+    assert!(r.final_logloss < 0.67, "logloss {}", r.final_logloss);
+    assert_eq!(r.failures_seen, 0);
+    assert_eq!(r.pls, 0.0);
+    // loss curve actually descends
+    let first = r.train_loss.points.first().unwrap().1;
+    let last = r.train_loss.points.last().unwrap().1;
+    assert!(last < first - 0.01, "loss {first} -> {last}");
+}
+
+#[test]
+fn full_recovery_reproduces_no_failure_model_exactly() {
+    // full recovery rewinds and replays deterministically → same final AUC
+    let cfg = test_cfg(Strategy::Full);
+    let clean = run(&cfg, vec![]);
+    let n = cfg.cluster.n_emb_ps;
+    let failed = run(&cfg, sched(3, 2, n / 2, cfg.cluster.t_total_h, n));
+    assert_eq!(failed.failures_seen, 2);
+    assert!(failed.ledger.lost_h > 0.0);
+    assert_eq!(clean.final_auc, failed.final_auc,
+               "full recovery must be bit-identical to the clean run");
+    // but it must re-execute extra steps
+    assert!(failed.steps_executed > clean.steps_executed);
+}
+
+#[test]
+fn partial_recovery_damages_accuracy_but_saves_time() {
+    let cfg_clean = test_cfg(Strategy::Full);
+    let clean = run(&cfg_clean, vec![]);
+    let cfg = test_cfg(Strategy::PartialNaive);
+    let n = cfg.cluster.n_emb_ps;
+    // heavy damage: many failures, half the PS each
+    let r = run(&cfg, sched(5, 8, n / 2, cfg.cluster.t_total_h, n));
+    assert_eq!(r.failures_seen, 8);
+    assert_eq!(r.steps_executed, 300, "partial must not re-execute steps");
+    assert_eq!(r.ledger.lost_h, 0.0);
+    assert!(r.pls > 0.0);
+    assert!(r.final_auc < clean.final_auc,
+            "heavy partial damage must cost AUC: {} !< {}",
+            r.final_auc, clean.final_auc);
+}
+
+#[test]
+fn cpr_reduces_overhead_vs_full() {
+    let n = 8;
+    let t_total = 56.0;
+    let schedule = sched(7, 2, 1, t_total, n);
+    let full = run(&test_cfg(Strategy::Full), schedule.clone());
+    let cpr = run(&test_cfg(Strategy::CprVanilla), schedule.clone());
+    let ssu = run(&test_cfg(Strategy::CprSsu), schedule);
+    assert!(cpr.overhead_frac < 0.3 * full.overhead_frac,
+            "CPR {} vs full {}", cpr.overhead_frac, full.overhead_frac);
+    assert!(ssu.overhead_frac < 0.3 * full.overhead_frac);
+    assert!(!cpr.fell_back);
+    // CPR accuracy within a reasonable band of full recovery
+    assert!((full.final_auc - cpr.final_auc).abs() < 0.02,
+            "full {} cpr {}", full.final_auc, cpr.final_auc);
+    assert!(ssu.final_auc >= cpr.final_auc - 0.01,
+            "SSU should not be much worse than vanilla");
+}
+
+#[test]
+fn cpr_falls_back_when_not_beneficial() {
+    let mut cfg = test_cfg(Strategy::CprVanilla);
+    cfg.cluster.t_fail_h = 0.05; // absurd failure rate
+    cfg.checkpoint.target_pls = 0.01;
+    let r = run(&cfg, vec![]);
+    assert!(r.fell_back);
+    assert_eq!(r.pls, 0.0, "fallback = full recovery = zero PLS");
+}
+
+#[test]
+fn priority_strategies_save_partial_rows_and_stay_partial() {
+    let n = 8;
+    let schedule = sched(9, 2, 2, 56.0, n);
+    for strategy in [Strategy::CprScar, Strategy::CprMfu, Strategy::CprSsu] {
+        let r = run(&test_cfg(strategy.clone()), schedule.clone());
+        assert!(!r.fell_back, "{strategy:?} fell back unexpectedly");
+        assert_eq!(r.steps_executed, 300, "{strategy:?} re-executed steps");
+        assert!(r.pls > 0.0, "{strategy:?} recorded no PLS");
+        assert!(r.final_auc > 0.65, "{strategy:?} AUC {}", r.final_auc);
+    }
+}
+
+#[test]
+fn pls_accumulates_with_failure_count() {
+    let cfg = test_cfg(Strategy::CprVanilla);
+    let n = cfg.cluster.n_emb_ps;
+    let few = run(&cfg, sched(11, 1, 1, cfg.cluster.t_total_h, n));
+    let many = run(&cfg, sched(11, 6, 1, cfg.cluster.t_total_h, n));
+    assert!(many.pls > few.pls,
+            "more failures must accumulate more PLS: {} !> {}",
+            many.pls, few.pls);
+}
+
+#[test]
+fn overhead_ledger_matches_analytic_model() {
+    // with k failures and s saves the ledger must equal the closed form
+    let cfg = test_cfg(Strategy::PartialNaive);
+    let n = cfg.cluster.n_emb_ps;
+    let r = run(&cfg, sched(13, 3, 1, cfg.cluster.t_total_h, n));
+    let c = &cfg.cluster;
+    let expect_save = r.ledger.n_saves as f64 * c.o_save_h;
+    assert!((r.ledger.save_h - expect_save).abs() < 1e-9);
+    let expect_fail = 3.0 * (c.o_load_h + c.o_res_h);
+    assert!((r.ledger.load_h + r.ledger.reschedule_h - expect_fail).abs() < 1e-9);
+    assert_eq!(r.ledger.lost_h, 0.0);
+}
+
+#[test]
+fn config_strategy_changes_are_honored() {
+    // same schedule, different strategies → different overhead profiles
+    let n = 8;
+    let schedule = sched(15, 2, 1, 56.0, n);
+    let full = run(&test_cfg(Strategy::Full), schedule.clone());
+    let naive = run(&test_cfg(Strategy::PartialNaive), schedule);
+    assert!(full.ledger.lost_h > 0.0);
+    assert_eq!(naive.ledger.lost_h, 0.0);
+    assert_eq!(full.ledger.n_saves, naive.ledger.n_saves,
+               "same interval → same save count");
+}
+
+#[test]
+fn durable_checkpoints_written_and_loadable() {
+    use cpr::checkpoint::disk::DiskCheckpointer;
+    let dir = std::env::temp_dir().join("cpr_durable_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut cfg = test_cfg(Strategy::Full);
+    cfg.checkpoint.dir = Some(dir.to_str().unwrap().to_string());
+    let r = run(&cfg, vec![]);
+    assert!(r.ledger.n_saves > 0);
+    // the async writer persisted snapshots; the latest one must load and
+    // carry a plausible position
+    let latest = DiskCheckpointer::load_latest(dir.to_str().unwrap())
+        .unwrap()
+        .expect("no checkpoint written");
+    assert!(latest.step > 0 && latest.step <= 300);
+    assert_eq!(latest.samples, latest.step * 128);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn adagrad_training_learns_too() {
+    let mut cfg = test_cfg(Strategy::CprSsu);
+    cfg.train.emb_optimizer =
+        cpr::embedding::EmbOptimizer::parse("adagrad").unwrap();
+    cfg.train.emb_lr = 1.0;
+    let n = cfg.cluster.n_emb_ps;
+    let r = run(&cfg, sched(31, 2, 1, cfg.cluster.t_total_h, n));
+    assert!(r.final_auc > 0.60, "adagrad AUC {}", r.final_auc);
+    assert!(!r.fell_back);
+}
+
+#[test]
+fn multi_hot_training_runs_and_learns() {
+    let mut cfg = test_cfg(Strategy::CprSsu);
+    cfg.data.hotness = 3;
+    let n = cfg.cluster.n_emb_ps;
+    let r = run(&cfg, sched(33, 2, 1, cfg.cluster.t_total_h, n));
+    assert!(r.final_auc > 0.60, "multi-hot AUC {}", r.final_auc);
+    assert_eq!(r.steps_executed, 300);
+}

@@ -14,6 +14,7 @@
 use cpr::bench::Bench;
 use cpr::checkpoint::tracker::{MfuTracker, ScarTracker, SsuTracker};
 use cpr::checkpoint::CheckpointStore;
+use cpr::cluster::{PsBackend, ThreadedCluster};
 use cpr::config::preset;
 use cpr::data::{Batch, SyntheticDataset};
 use cpr::embedding::{PsCluster, TableInfo};
@@ -25,7 +26,49 @@ use cpr::util::rng::Rng;
 fn main() {
     table1();
     hotpath();
+    backend_comparison();
     pjrt();
+}
+
+// ---------------------------------------------------------------------------
+// PsBackend comparison — inproc vs threaded
+// ---------------------------------------------------------------------------
+
+/// Gather / apply_grads throughput of the two cluster runtimes at several
+/// batch sizes (mini-preset tables, 8 nodes, single-hot). The threaded
+/// backend pays per-request channel + routing cost; this quantifies it.
+fn backend_comparison() {
+    println!("\n-- backend: inproc vs threaded PS runtimes (8 nodes, dim 16) --");
+    let cfg = preset("mini").unwrap();
+    let dim = 16usize;
+    let t = cfg.model.num_sparse;
+    let tables: Vec<TableInfo> = cfg.data.table_rows.iter()
+        .map(|&rows| TableInfo { rows, dim }).collect();
+    let mut inproc = PsCluster::new(tables.clone(), 8, 7);
+    let mut threaded = ThreadedCluster::new(tables.clone(), 8, 7);
+    let mut rng = Rng::new(9);
+    for batch in [128usize, 512, 2048] {
+        let indices: Vec<u32> = (0..batch * t)
+            .map(|i| rng.below(cfg.data.table_rows[i % t] as u64) as u32)
+            .collect();
+        let mut out = vec![0.0f32; batch * t * dim];
+        let grads = vec![0.001f32; batch * t * dim];
+        let slots = (batch * t) as u64;
+        Bench::new(&format!("backend_gather[inproc,B={batch}]"))
+            .throughput(slots)
+            .run(|| PsBackend::gather(&inproc, &indices, &mut out));
+        Bench::new(&format!("backend_gather[threaded,B={batch}]"))
+            .throughput(slots)
+            .run(|| threaded.gather(&indices, &mut out));
+        Bench::new(&format!("backend_apply_grads[inproc,B={batch}]"))
+            .throughput(slots)
+            .run(|| PsBackend::apply_grads(&mut inproc, &indices, 1, &grads, 0.01,
+                                           cpr::embedding::EmbOptimizer::Sgd));
+        Bench::new(&format!("backend_apply_grads[threaded,B={batch}]"))
+            .throughput(slots)
+            .run(|| threaded.apply_grads(&indices, 1, &grads, 0.01,
+                                         cpr::embedding::EmbOptimizer::Sgd));
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,403 @@
+//! Asynchronous checkpoint pipeline: saves overlap training.
+//!
+//! The inline `full_save` of the original coordinator stalled the step loop
+//! for the whole mirror copy + disk write. Production systems decouple
+//! these (Check-N-Run): a snapshot is *captured* at the consistency point
+//! and *persisted* in the background. [`CheckpointPipeline`] does exactly
+//! that:
+//!
+//! * capture is synchronous and cheap — node snapshots / priority-row reads
+//!   taken from the live backend at the save step;
+//! * a writer thread owns the [`CheckpointStore`] mirror, applies captured
+//!   data, and publishes durable files, while the trainer keeps stepping;
+//! * full-node snapshot captures are **double-buffered**: at most two are
+//!   in flight, so a slow writer exerts backpressure instead of letting
+//!   snapshots pile up in memory;
+//! * restores are request/reply over the same FIFO channel, so a restore
+//!   observes every save submitted before it — the recovery protocol needs
+//!   no extra synchronization.
+//!
+//! Crash-consistency rule (see [`super::disk`]): a checkpoint is only
+//! *published* after the writer thread fsyncs the data file and then the
+//! `LATEST` manifest; an interrupted save can never be observed.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::{disk, CheckpointStore};
+use crate::cluster::{NodeSnapshot, PsBackend};
+
+/// How many full-cluster snapshot captures may be in flight at once.
+const FULL_BUFFERS: usize = 2;
+
+enum Msg {
+    /// full-content save: captured snapshots of every node
+    Nodes(Vec<NodeSnapshot>),
+    /// priority-row save: captured rows of one table
+    Rows { table: usize, rows: Vec<u32>, dim: usize, data: Vec<f32>, opt: Vec<f32> },
+    /// advance the PLS position marker; publishes to disk when configured
+    Mark { mlp: Vec<Vec<f32>>, step: u64, samples: u64 },
+    GetNode { node: usize, reply: mpsc::Sender<NodeSnapshot> },
+    GetStore { reply: mpsc::Sender<CheckpointStore> },
+    Flush { ack: mpsc::Sender<()> },
+}
+
+/// Background checkpoint writer (see module docs).
+pub struct CheckpointPipeline {
+    tx: Option<SyncSender<Msg>>,
+    worker: Option<JoinHandle<()>>,
+    /// content saves submitted but not yet applied by the writer
+    in_flight: Arc<AtomicUsize>,
+    /// free full-snapshot buffers (double buffering)
+    full_slots: Arc<(Mutex<usize>, Condvar)>,
+    /// first IO error hit by the writer, surfaced by `flush`
+    io_error: Arc<Mutex<Option<String>>>,
+}
+
+struct WriterCtx {
+    store: CheckpointStore,
+    dir: Option<PathBuf>,
+    keep: usize,
+    write_delay: Duration,
+    in_flight: Arc<AtomicUsize>,
+    full_slots: Arc<(Mutex<usize>, Condvar)>,
+    io_error: Arc<Mutex<Option<String>>>,
+}
+
+fn writer_loop(mut ctx: WriterCtx, rx: Receiver<Msg>) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Nodes(snaps) => {
+                if !ctx.write_delay.is_zero() {
+                    std::thread::sleep(ctx.write_delay);
+                }
+                for snap in snaps {
+                    ctx.store.apply_node(snap);
+                }
+                ctx.in_flight.fetch_sub(1, Ordering::SeqCst);
+                let (lock, cvar) = &*ctx.full_slots;
+                *lock.lock().unwrap() += 1;
+                cvar.notify_one();
+            }
+            Msg::Rows { table, rows, dim, data, opt } => {
+                if !ctx.write_delay.is_zero() {
+                    std::thread::sleep(ctx.write_delay);
+                }
+                ctx.store.apply_rows(table, &rows, dim, &data, &opt);
+                ctx.in_flight.fetch_sub(1, Ordering::SeqCst);
+            }
+            Msg::Mark { mlp, step, samples } => {
+                ctx.store.mark_position(mlp, step, samples);
+                if let Some(dir) = &ctx.dir {
+                    if let Err(e) = disk::publish(dir, &ctx.store, ctx.keep) {
+                        ctx.io_error
+                            .lock()
+                            .unwrap()
+                            .get_or_insert_with(|| format!("{e:#}"));
+                    }
+                }
+            }
+            Msg::GetNode { node, reply } => {
+                let _ = reply.send(NodeSnapshot {
+                    node,
+                    shards: ctx.store.node_shards(node).to_vec(),
+                    opt: ctx.store.node_opt(node).to_vec(),
+                });
+            }
+            Msg::GetStore { reply } => {
+                let _ = reply.send(ctx.store.clone());
+            }
+            Msg::Flush { ack } => {
+                let _ = ack.send(());
+            }
+        }
+    }
+}
+
+impl CheckpointPipeline {
+    /// `store` is the initial mirror (epoch-0 state). `dir` enables durable
+    /// publication of every position-marking save, rotating to the newest
+    /// `keep` files. `write_delay` is an artificial per-save writer cost —
+    /// zero in production, nonzero in tests that assert overlap.
+    pub fn new(
+        store: CheckpointStore,
+        dir: Option<&str>,
+        keep: usize,
+        write_delay: Duration,
+    ) -> Result<Self> {
+        let dir = match dir {
+            Some(d) => {
+                let p = PathBuf::from(d);
+                std::fs::create_dir_all(&p)?;
+                Some(p)
+            }
+            None => None,
+        };
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let full_slots = Arc::new((Mutex::new(FULL_BUFFERS), Condvar::new()));
+        let io_error = Arc::new(Mutex::new(None));
+        let ctx = WriterCtx {
+            store,
+            dir,
+            keep: keep.max(1),
+            write_delay,
+            in_flight: Arc::clone(&in_flight),
+            full_slots: Arc::clone(&full_slots),
+            io_error: Arc::clone(&io_error),
+        };
+        let (tx, rx) = mpsc::sync_channel(64);
+        let worker = std::thread::Builder::new()
+            .name("ckpt-writer".into())
+            .spawn(move || writer_loop(ctx, rx))
+            .expect("spawning checkpoint writer");
+        Ok(Self { tx: Some(tx), worker: Some(worker), in_flight, full_slots, io_error })
+    }
+
+    fn tx(&self) -> &SyncSender<Msg> {
+        self.tx.as_ref().expect("pipeline already shut down")
+    }
+
+    fn send(&self, msg: Msg) {
+        self.tx().send(msg).expect("checkpoint writer thread died");
+    }
+
+    /// Capture every node + the position marker and hand both to the
+    /// writer. Blocks only if both snapshot buffers are still in flight
+    /// (backpressure), never on the disk write itself.
+    pub fn full_save<B: PsBackend>(
+        &self,
+        backend: &B,
+        mlp: Vec<Vec<f32>>,
+        step: u64,
+        samples: u64,
+    ) {
+        let (lock, cvar) = &*self.full_slots;
+        {
+            let mut slots = lock.lock().unwrap();
+            while *slots == 0 {
+                slots = cvar.wait(slots).unwrap();
+            }
+            *slots -= 1;
+        }
+        let snaps: Vec<NodeSnapshot> =
+            (0..backend.n_nodes()).map(|n| backend.snapshot_node(n)).collect();
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.send(Msg::Nodes(snaps));
+        self.send(Msg::Mark { mlp, step, samples });
+    }
+
+    /// Capture `rows` of `table` (priority save) and hand them to the
+    /// writer. Does not move the position marker.
+    pub fn save_rows<B: PsBackend>(&self, backend: &B, table: usize, rows: &[u32]) {
+        let dim = backend.tables()[table].dim;
+        let (data, opt) = backend.read_rows(table, rows);
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.send(Msg::Rows { table, rows: rows.to_vec(), dim, data, opt });
+    }
+
+    /// Capture one whole (small) table.
+    pub fn save_table<B: PsBackend>(&self, backend: &B, table: usize) {
+        let rows: Vec<u32> = (0..backend.tables()[table].rows as u32).collect();
+        self.save_rows(backend, table, &rows);
+    }
+
+    /// Advance the position marker (and publish, when a dir is configured).
+    pub fn mark_position(&self, mlp: Vec<Vec<f32>>, step: u64, samples: u64) {
+        self.send(Msg::Mark { mlp, step, samples });
+    }
+
+    /// Partial recovery: fetch `node`'s mirror state (after all previously
+    /// submitted saves have been applied — FIFO) and load it into the
+    /// backend.
+    pub fn restore_node<B: PsBackend>(&self, backend: &mut B, node: usize) {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.send(Msg::GetNode { node, reply: reply_tx });
+        let snap = reply_rx.recv().expect("checkpoint writer died");
+        backend.load_node(node, &snap.shards, &snap.opt);
+    }
+
+    /// Full recovery: restore every node from the mirror; returns
+    /// (mlp, step, samples) for the trainer to rewind to.
+    pub fn restore_all<B: PsBackend>(&self, backend: &mut B) -> (Vec<Vec<f32>>, u64, u64) {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.send(Msg::GetStore { reply: reply_tx });
+        let store = reply_rx.recv().expect("checkpoint writer died");
+        store.restore_all(backend)
+    }
+
+    /// Content saves submitted but not yet applied by the writer.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Barrier: wait until every queued save is applied and published;
+    /// surfaces the first writer IO error, if any.
+    pub fn flush(&self) -> Result<()> {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.send(Msg::Flush { ack: ack_tx });
+        ack_rx.recv().map_err(|_| anyhow!("checkpoint writer died"))?;
+        match self.io_error.lock().unwrap().take() {
+            Some(e) => Err(anyhow!("checkpoint writer IO error: {e}")),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for CheckpointPipeline {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel; the writer drains and exits
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl CheckpointStore {
+    /// Writer-thread accessors for request/reply restores.
+    pub(crate) fn node_shards(&self, node: usize) -> &[Vec<f32>] {
+        &self.shards[node]
+    }
+
+    pub(crate) fn node_opt(&self, node: usize) -> &[Vec<f32>] {
+        &self.opt[node]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::{EmbOptimizer, PsCluster, TableInfo};
+
+    fn cluster() -> PsCluster {
+        PsCluster::new(
+            vec![TableInfo { rows: 24, dim: 4 }, TableInfo { rows: 9, dim: 4 }],
+            3,
+            21,
+        )
+    }
+
+    fn perturb(c: &mut PsCluster, seed: u64) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let idx: Vec<u32> = (0..12)
+            .flat_map(|_| vec![rng.below(24) as u32, rng.below(9) as u32])
+            .collect();
+        let grads: Vec<f32> = (0..12 * 2 * 4).map(|_| rng.f32() - 0.5).collect();
+        PsBackend::apply_grads(&mut *c, &idx, 1, &grads, 0.5, EmbOptimizer::Sgd);
+    }
+
+    fn pipeline(c: &PsCluster, delay_ms: u64) -> CheckpointPipeline {
+        CheckpointPipeline::new(
+            CheckpointStore::initial(c, vec![]),
+            None,
+            2,
+            Duration::from_millis(delay_ms),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn restore_sees_state_at_capture_time_not_later_mutations() {
+        let mut c = cluster();
+        let p = pipeline(&c, 0);
+        perturb(&mut c, 1);
+        let at_capture = c.snapshot_node(0);
+        p.full_save(&c, vec![], 1, 128);
+        perturb(&mut c, 2); // training continues while the save is applied
+        assert_ne!(c.snapshot_node(0).shards, at_capture.shards);
+        p.restore_node(&mut c, 0);
+        assert_eq!(c.snapshot_node(0).shards, at_capture.shards,
+                   "restore must return the captured state");
+    }
+
+    #[test]
+    fn row_saves_apply_in_submission_order() {
+        let mut c = cluster();
+        let p = pipeline(&c, 0);
+        perturb(&mut c, 3);
+        let older = c.snapshot_node(0);
+        p.save_rows(&c, 0, &[0, 3, 6]); // rows on node 0
+        perturb(&mut c, 4);
+        p.save_rows(&c, 0, &[0]); // fresher save of row 0 queued after
+        let fresh_row0 = {
+            let (data, _) = c.read_rows(0, &[0]);
+            data
+        };
+        perturb(&mut c, 5);
+        p.restore_node(&mut c, 0);
+        let (got0, _) = c.read_rows(0, &[0]);
+        assert_eq!(got0, fresh_row0, "later save must win");
+        let (got3, _) = c.read_rows(0, &[3]);
+        assert_eq!(&got3[..], &older.shards[0][4..8], "row 3 from older save");
+    }
+
+    #[test]
+    fn restore_all_returns_marked_position() {
+        let mut c = cluster();
+        let p = pipeline(&c, 0);
+        perturb(&mut c, 6);
+        p.full_save(&c, vec![vec![7.0, 8.0]], 40, 5120);
+        perturb(&mut c, 7);
+        let golden = c.snapshot_node(1);
+        p.full_save(&c, vec![vec![9.0]], 80, 10240);
+        perturb(&mut c, 8);
+        let (mlp, step, samples) = p.restore_all(&mut c);
+        assert_eq!(mlp, vec![vec![9.0]]);
+        assert_eq!((step, samples), (80, 10240));
+        assert_eq!(c.snapshot_node(1).shards, golden.shards);
+    }
+
+    #[test]
+    fn save_overlaps_other_work_without_blocking() {
+        let c = cluster();
+        let p = pipeline(&c, 300);
+        let t0 = std::time::Instant::now();
+        p.full_save(&c, vec![], 1, 128);
+        assert!(t0.elapsed() < Duration::from_millis(250),
+                "submit must not block on the write");
+        assert!(p.in_flight() > 0, "save should still be in flight");
+        p.flush().unwrap();
+        assert_eq!(p.in_flight(), 0);
+    }
+
+    #[test]
+    fn third_full_save_backpressures_on_double_buffer() {
+        let c = cluster();
+        let p = pipeline(&c, 120);
+        let t0 = std::time::Instant::now();
+        p.full_save(&c, vec![], 1, 128);
+        p.full_save(&c, vec![], 2, 256);
+        p.full_save(&c, vec![], 3, 384); // must wait for a free buffer
+        assert!(t0.elapsed() >= Duration::from_millis(100),
+                "third capture should have waited for the writer");
+        p.flush().unwrap();
+    }
+
+    #[test]
+    fn publishes_durable_checkpoint_on_mark() {
+        let dir = std::env::temp_dir().join("cpr_pipeline_pub");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut c = cluster();
+        let p = CheckpointPipeline::new(
+            CheckpointStore::initial(&c, vec![]),
+            Some(dir.to_str().unwrap()),
+            2,
+            Duration::ZERO,
+        )
+        .unwrap();
+        perturb(&mut c, 9);
+        p.full_save(&c, vec![vec![1.0]], 10, 1280);
+        p.flush().unwrap();
+        let latest = super::disk::DiskCheckpointer::load_latest(dir.to_str().unwrap())
+            .unwrap()
+            .expect("published checkpoint missing");
+        assert_eq!(latest.step, 10);
+        assert_eq!(latest.mlp, vec![vec![1.0]]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,12 +1,22 @@
-//! Asynchronous on-disk checkpoint writer.
+//! Durable on-disk checkpoint publication.
 //!
-//! Production checkpointing overlaps serialization/IO with training
-//! (DeepFreeze, ai-ckpt — paper §7.1); the emulated O_save constant models
-//! that cost, but the system should also *really* persist. A
-//! [`DiskCheckpointer`] owns a writer thread: `submit` hands it a cloned
-//! [`CheckpointStore`] snapshot and returns immediately; the trainer never
-//! blocks on IO. Files rotate as `ckpt-<step>.bin` with a `latest` symlink
-//! equivalent (a `LATEST` text file — symlinks are not portable), keeping
+//! [`publish`] is the single write path (used by the asynchronous
+//! [`super::async_pipeline::CheckpointPipeline`] writer and by the
+//! standalone [`DiskCheckpointer`]). It enforces the crash-consistency
+//! rule: **a checkpoint is only published after the writer thread fsyncs
+//! the manifest** —
+//!
+//! 1. data is written to a temp file and fsynced
+//!    ([`CheckpointStore::write_file`] syncs before returning);
+//! 2. the temp file is atomically renamed to `ckpt-<step>.bin` and the
+//!    directory is fsynced (renames are directory metadata — without this
+//!    the manifest rename could survive a crash that loses the data one);
+//! 3. the `LATEST` manifest (a text pointer; symlinks are not portable) is
+//!    written to a temp file, fsynced, atomically renamed over the old
+//!    manifest, and the directory is fsynced again.
+//!
+//! A crash at any point leaves the previously published checkpoint intact
+//! and observable; readers never see a torn file. Files rotate, keeping
 //! the most recent `keep` checkpoints.
 
 use std::path::{Path, PathBuf};
@@ -17,12 +27,46 @@ use anyhow::{Context, Result};
 
 use super::CheckpointStore;
 
+/// Durably publish `store` into `dir` (see module docs for the ordering
+/// guarantees), then rotate old checkpoints down to `keep`.
+pub fn publish(dir: &Path, store: &CheckpointStore, keep: usize) -> Result<()> {
+    let path = dir.join(format!("ckpt-{}.bin", store.step));
+    let tmp = dir.join(format!(".ckpt-{}.tmp", store.step));
+    store.write_file(&tmp)?; // writes + fsyncs the data
+    std::fs::rename(&tmp, &path)?; // atomic data publish
+    // renames are directory-metadata updates: without a directory fsync
+    // the LATEST rename below could become durable while the data rename
+    // is lost, leaving a manifest pointing at nothing
+    fsync_dir(dir)?;
+    // manifest: write-fsync-rename so LATEST is never torn and only ever
+    // points at fully durable data
+    let latest_tmp = dir.join(".LATEST.tmp");
+    {
+        let mut f = std::fs::File::create(&latest_tmp)
+            .with_context(|| format!("creating {}", latest_tmp.display()))?;
+        use std::io::Write;
+        f.write_all(format!("ckpt-{}.bin\n", store.step).as_bytes())?;
+        f.sync_all().context("fsync LATEST manifest")?;
+    }
+    std::fs::rename(&latest_tmp, dir.join("LATEST"))?;
+    fsync_dir(dir)?;
+    gc(dir, keep.max(1))
+}
+
+fn fsync_dir(dir: &Path) -> Result<()> {
+    std::fs::File::open(dir)
+        .and_then(|d| d.sync_all())
+        .with_context(|| format!("fsync checkpoint dir {}", dir.display()))
+}
+
 enum Msg {
     Write(Box<CheckpointStore>),
     Stop,
 }
 
-/// Background checkpoint-to-disk writer.
+/// Standalone background checkpoint-to-disk writer (the coordinator now
+/// uses the richer `CheckpointPipeline`; this stays as the minimal
+/// submit-a-snapshot API and the `load_latest` reader).
 pub struct DiskCheckpointer {
     dir: PathBuf,
     tx: mpsc::Sender<Msg>,
@@ -35,22 +79,23 @@ impl DiskCheckpointer {
         let dir = PathBuf::from(dir);
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let wdir = dir.clone();
         let keep_n = keep.max(1);
+        let (tx, worker) = Self::spawn_worker(dir.clone(), keep_n);
+        Ok(Self { dir, tx, worker: Some(worker), keep: keep_n })
+    }
+
+    fn spawn_worker(
+        dir: PathBuf,
+        keep: usize,
+    ) -> (mpsc::Sender<Msg>, JoinHandle<Result<()>>) {
+        let (tx, rx) = mpsc::channel::<Msg>();
         let worker = std::thread::spawn(move || -> Result<()> {
             while let Ok(Msg::Write(store)) = rx.recv() {
-                let path = wdir.join(format!("ckpt-{}.bin", store.step));
-                let tmp = wdir.join(format!(".ckpt-{}.tmp", store.step));
-                store.write_file(&tmp)?;
-                std::fs::rename(&tmp, &path)?; // atomic publish
-                std::fs::write(wdir.join("LATEST"),
-                               format!("ckpt-{}.bin\n", store.step))?;
-                Self::gc(&wdir, keep_n)?;
+                publish(&dir, &store, keep)?;
             }
             Ok(())
         });
-        Ok(Self { dir, tx, worker: Some(worker), keep: keep_n })
+        (tx, worker)
     }
 
     /// Enqueue a snapshot for writing; returns immediately.
@@ -67,21 +112,8 @@ impl DiskCheckpointer {
         if let Some(w) = self.worker.take() {
             w.join().map_err(|_| anyhow::anyhow!("writer panicked"))??;
         }
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let wdir = self.dir.clone();
-        let keep_n = self.keep;
-        self.worker = Some(std::thread::spawn(move || -> Result<()> {
-            while let Ok(Msg::Write(store)) = rx.recv() {
-                let path = wdir.join(format!("ckpt-{}.bin", store.step));
-                let tmp = wdir.join(format!(".ckpt-{}.tmp", store.step));
-                store.write_file(&tmp)?;
-                std::fs::rename(&tmp, &path)?;
-                std::fs::write(wdir.join("LATEST"),
-                               format!("ckpt-{}.bin\n", store.step))?;
-                Self::gc(&wdir, keep_n)?;
-            }
-            Ok(())
-        }));
+        let (tx, worker) = Self::spawn_worker(self.dir.clone(), self.keep);
+        self.worker = Some(worker);
         self.tx = tx;
         Ok(())
     }
@@ -96,23 +128,23 @@ impl DiskCheckpointer {
         let path = Path::new(dir).join(name.trim());
         Ok(Some(CheckpointStore::read_file(&path)?))
     }
+}
 
-    fn gc(dir: &Path, keep: usize) -> Result<()> {
-        let mut ckpts: Vec<(u64, PathBuf)> = std::fs::read_dir(dir)?
-            .filter_map(|e| e.ok())
-            .filter_map(|e| {
-                let name = e.file_name().into_string().ok()?;
-                let step: u64 = name.strip_prefix("ckpt-")?
-                    .strip_suffix(".bin")?.parse().ok()?;
-                Some((step, e.path()))
-            })
-            .collect();
-        ckpts.sort_by_key(|(s, _)| std::cmp::Reverse(*s));
-        for (_, path) in ckpts.into_iter().skip(keep) {
-            std::fs::remove_file(path).ok();
-        }
-        Ok(())
+fn gc(dir: &Path, keep: usize) -> Result<()> {
+    let mut ckpts: Vec<(u64, PathBuf)> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| {
+            let name = e.file_name().into_string().ok()?;
+            let step: u64 = name.strip_prefix("ckpt-")?
+                .strip_suffix(".bin")?.parse().ok()?;
+            Some((step, e.path()))
+        })
+        .collect();
+    ckpts.sort_by_key(|(s, _)| std::cmp::Reverse(*s));
+    for (_, path) in ckpts.into_iter().skip(keep) {
+        std::fs::remove_file(path).ok();
     }
+    Ok(())
 }
 
 impl Drop for DiskCheckpointer {
@@ -193,6 +225,21 @@ mod tests {
         // 20 submits must return near-instantly (writes happen behind)
         assert!(t0.elapsed().as_millis() < 200);
         drop(w); // drains on drop
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn publish_leaves_no_temp_files() {
+        let dir = tmpdir("e");
+        std::fs::create_dir_all(&dir).unwrap();
+        publish(Path::new(&dir), &store(7), 2).unwrap();
+        let names: Vec<String> = std::fs::read_dir(&dir).unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().into_string().unwrap())
+            .collect();
+        assert!(names.contains(&"ckpt-7.bin".to_string()), "{names:?}");
+        assert!(names.contains(&"LATEST".to_string()));
+        assert!(!names.iter().any(|n| n.ends_with(".tmp")), "{names:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

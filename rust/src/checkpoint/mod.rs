@@ -9,8 +9,29 @@
 //! Priority checkpointing (CPR-SCAR/MFU/SSU) saves selected *rows* into the
 //! mirror at a higher cadence instead of whole tables, so after a failure
 //! the hot rows come back much fresher than T_save-old (paper §4.2).
-//! On-disk persistence round-trips the store through a flat binary format.
+//!
+//! All save/restore paths are generic over [`crate::cluster::PsBackend`],
+//! so the same store serves the in-process and the threaded cluster
+//! runtimes (checkpoints taken on one restore onto the other — row routing
+//! is part of the trait contract).
+//!
+//! ## Asynchronous pipeline
+//!
+//! The coordinator no longer applies saves to the mirror inline. Row and
+//! node snapshots are *captured* synchronously at the save point (cheap
+//! memcpy — this is the consistency point) and handed to
+//! [`async_pipeline::CheckpointPipeline`], whose writer thread applies
+//! them to the mirror and persists to disk while training proceeds
+//! (Check-N-Run-style decoupled checkpointing). Restores go through the
+//! same FIFO channel, so a restore always observes every save submitted
+//! before it.
+//!
+//! **Crash-consistency rule:** a durable checkpoint is only *published*
+//! after the writer thread has fsynced the data file and then the `LATEST`
+//! manifest (see [`disk`]); a crash mid-write leaves the previous
+//! checkpoint as the published one, never a torn file.
 
+pub mod async_pipeline;
 pub mod disk;
 pub mod tracker;
 
@@ -19,7 +40,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::embedding::PsCluster;
+use crate::cluster::PsBackend;
 
 /// Snapshot store (the emulated persistent checkpoint target).
 #[derive(Clone, Debug)]
@@ -38,62 +59,76 @@ pub struct CheckpointStore {
 
 impl CheckpointStore {
     /// Initial checkpoint = the cluster's initial state (epoch 0).
-    pub fn initial(cluster: &PsCluster, mlp: Vec<Vec<f32>>) -> Self {
-        let shards = (0..cluster.n_nodes)
-            .map(|n| {
-                (0..cluster.tables.len())
-                    .map(|t| cluster.shard(n, t).to_vec())
-                    .collect()
-            })
-            .collect();
-        let opt = (0..cluster.n_nodes)
-            .map(|n| {
-                (0..cluster.tables.len())
-                    .map(|t| cluster.opt_shard(n, t).to_vec())
-                    .collect()
-            })
-            .collect();
+    pub fn initial<B: PsBackend>(cluster: &B, mlp: Vec<Vec<f32>>) -> Self {
+        let mut shards = Vec::with_capacity(cluster.n_nodes());
+        let mut opt = Vec::with_capacity(cluster.n_nodes());
+        for n in 0..cluster.n_nodes() {
+            let snap = cluster.snapshot_node(n);
+            shards.push(snap.shards);
+            opt.push(snap.opt);
+        }
         Self { shards, opt, mlp, step: 0, samples: 0 }
     }
 
     /// Full checkpoint: mirror every shard + MLP params + position.
-    pub fn full_save(
+    /// (Synchronous path — the coordinator's async equivalent is
+    /// [`async_pipeline::CheckpointPipeline::full_save`].)
+    pub fn full_save<B: PsBackend>(
         &mut self,
-        cluster: &PsCluster,
+        cluster: &B,
         mlp: Vec<Vec<f32>>,
         step: u64,
         samples: u64,
     ) {
-        for n in 0..cluster.n_nodes {
-            for t in 0..cluster.tables.len() {
-                self.shards[n][t].copy_from_slice(cluster.shard(n, t));
-                self.opt[n][t].copy_from_slice(cluster.opt_shard(n, t));
-            }
+        for n in 0..cluster.n_nodes() {
+            let snap = cluster.snapshot_node(n);
+            self.shards[n] = snap.shards;
+            self.opt[n] = snap.opt;
         }
         self.mlp = mlp;
         self.step = step;
         self.samples = samples;
     }
 
+    /// Apply one captured node snapshot to the mirror (writer-thread path).
+    pub fn apply_node(&mut self, snap: crate::cluster::NodeSnapshot) {
+        self.shards[snap.node] = snap.shards;
+        self.opt[snap.node] = snap.opt;
+    }
+
     /// Priority (partial-content) save: copy only `rows` of `table` into
     /// the mirror. Does NOT move the PLS position marker.
-    pub fn save_rows(&mut self, cluster: &PsCluster, table: usize, rows: &[u32]) {
-        let dim = cluster.tables[table].dim;
-        for &row in rows {
-            let (node, local) = cluster.route(row as usize);
-            let src = &cluster.shard(node, table)[local * dim..(local + 1) * dim];
+    pub fn save_rows<B: PsBackend>(&mut self, cluster: &B, table: usize, rows: &[u32]) {
+        let dim = cluster.tables()[table].dim;
+        let (data, opt) = cluster.read_rows(table, rows);
+        self.apply_rows(table, rows, dim, &data, &opt);
+    }
+
+    /// Apply captured row data (`data` in `rows` order, [rows.len() * dim])
+    /// to the mirror (writer-thread path).
+    pub fn apply_rows(
+        &mut self,
+        table: usize,
+        rows: &[u32],
+        dim: usize,
+        data: &[f32],
+        opt: &[f32],
+    ) {
+        let n_nodes = self.shards.len();
+        for (i, &row) in rows.iter().enumerate() {
+            let (node, local) = crate::cluster::route_row(row as usize, n_nodes);
             self.shards[node][table][local * dim..(local + 1) * dim]
-                .copy_from_slice(src);
-            self.opt[node][table][local] = cluster.opt_shard(node, table)[local];
+                .copy_from_slice(&data[i * dim..(i + 1) * dim]);
+            self.opt[node][table][local] = opt[i];
         }
     }
 
-    /// Save one whole table (the small non-priority tables).
-    pub fn save_table(&mut self, cluster: &PsCluster, table: usize) {
-        for n in 0..cluster.n_nodes {
-            self.shards[n][table].copy_from_slice(cluster.shard(n, table));
-            self.opt[n][table].copy_from_slice(cluster.opt_shard(n, table));
-        }
+    /// Save one whole table. Row-at-a-time through `read_rows`, which is
+    /// fine for its only callers — the tiny (≤64-row) non-priority tables
+    /// of the skewed layout; large tables go through `snapshot_node`.
+    pub fn save_table<B: PsBackend>(&mut self, cluster: &B, table: usize) {
+        let rows: Vec<u32> = (0..cluster.tables()[table].rows as u32).collect();
+        self.save_rows(cluster, table, &rows);
     }
 
     /// Record MLP params + advance the PLS position marker (done at every
@@ -106,21 +141,15 @@ impl CheckpointStore {
 
     /// PARTIAL recovery: restore only `node`'s shards; everyone else keeps
     /// their progress.
-    pub fn restore_node(&self, cluster: &mut PsCluster, node: usize) {
-        for t in 0..cluster.tables.len() {
-            cluster.shard_mut(node, t).copy_from_slice(&self.shards[node][t]);
-            cluster.opt_shard_mut(node, t).copy_from_slice(&self.opt[node][t]);
-        }
+    pub fn restore_node<B: PsBackend>(&self, cluster: &mut B, node: usize) {
+        cluster.load_node(node, &self.shards[node], &self.opt[node]);
     }
 
     /// FULL recovery: restore every shard; returns (mlp, step, samples) for
     /// the trainer to rewind to.
-    pub fn restore_all(&self, cluster: &mut PsCluster) -> (Vec<Vec<f32>>, u64, u64) {
-        for n in 0..cluster.n_nodes {
-            for t in 0..cluster.tables.len() {
-                cluster.shard_mut(n, t).copy_from_slice(&self.shards[n][t]);
-                cluster.opt_shard_mut(n, t).copy_from_slice(&self.opt[n][t]);
-            }
+    pub fn restore_all<B: PsBackend>(&self, cluster: &mut B) -> (Vec<Vec<f32>>, u64, u64) {
+        for n in 0..cluster.n_nodes() {
+            cluster.load_node(n, &self.shards[n], &self.opt[n]);
         }
         (self.mlp.clone(), self.step, self.samples)
     }
@@ -137,10 +166,9 @@ impl CheckpointStore {
     const MAGIC: u32 = 0x4350_5232; // "CPR2"
 
     pub fn write_file(&self, path: &Path) -> Result<()> {
-        let mut f = std::io::BufWriter::new(
-            std::fs::File::create(path)
-                .with_context(|| format!("creating {}", path.display()))?,
-        );
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut f = std::io::BufWriter::new(file);
         w32(&mut f, Self::MAGIC)?;
         w64(&mut f, self.step)?;
         w64(&mut f, self.samples)?;
@@ -163,6 +191,10 @@ impl CheckpointStore {
             w32(&mut f, p.len() as u32)?;
             wf32s(&mut f, p)?;
         }
+        // crash-consistency: the data must be durable BEFORE the caller
+        // publishes a manifest pointing at it
+        f.flush()?;
+        f.get_ref().sync_all().context("fsync checkpoint data")?;
         Ok(())
     }
 
@@ -247,7 +279,7 @@ fn rf32s<R: Read>(r: &mut R, len: usize) -> Result<Vec<f32>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::embedding::TableInfo;
+    use crate::embedding::{PsCluster, TableInfo};
     use crate::prop_assert;
     use crate::testing::{forall, gen};
 
@@ -385,6 +417,32 @@ mod tests {
         store.restore_node(&mut c, node);
         assert_eq!(c.opt_shard(node, 0)[local], saved_acc,
                    "optimizer state must revert with the rows");
+    }
+
+    #[test]
+    fn store_restores_across_backends() {
+        // a checkpoint taken on the in-process backend restores onto the
+        // threaded backend (and vice versa): routing is part of the trait
+        use crate::cluster::ThreadedCluster;
+        let mut c = cluster();
+        perturb(&mut c, 12);
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        store.full_save(&c, vec![], 5, 640);
+        let mut t = ThreadedCluster::new(
+            vec![TableInfo { rows: 50, dim: 4 }, TableInfo { rows: 11, dim: 4 }],
+            3,
+            999, // different seed: state must come fully from the store
+        );
+        store.restore_all(&mut t);
+        let mut a = vec![0.0; 4];
+        let mut b = vec![0.0; 4];
+        for table in 0..2 {
+            for row in 0..c.tables[table].rows {
+                c.read_row(table, row, &mut a);
+                PsBackend::read_row(&t, table, row, &mut b);
+                assert_eq!(a, b, "table {table} row {row}");
+            }
+        }
     }
 
     #[test]

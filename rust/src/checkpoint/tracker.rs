@@ -19,7 +19,7 @@
 
 use std::collections::HashSet;
 
-use crate::embedding::PsCluster;
+use crate::cluster::PsBackend;
 use crate::util::rng::Rng;
 
 /// Which tables a tracker prioritizes: the `priority_tables` largest ones
@@ -216,18 +216,17 @@ pub struct ScarTracker {
 }
 
 impl ScarTracker {
-    pub fn new(cluster: &PsCluster, mask: &[bool]) -> Self {
-        let mut last_saved = Vec::with_capacity(cluster.tables.len());
-        let dims: Vec<usize> = cluster.tables.iter().map(|t| t.dim).collect();
-        for (t, info) in cluster.tables.iter().enumerate() {
+    // Reads go through the batched `PsBackend::read_rows` (one message per
+    // PS node), never per-row `read_row` — on the threaded backend the
+    // latter would be a channel round trip per row of every priority table.
+
+    pub fn new<B: PsBackend>(cluster: &B, mask: &[bool]) -> Self {
+        let tables = cluster.tables();
+        let mut last_saved = Vec::with_capacity(tables.len());
+        let dims: Vec<usize> = tables.iter().map(|t| t.dim).collect();
+        for (t, info) in tables.iter().enumerate() {
             if mask[t] {
-                let mut mirror = vec![0.0f32; info.rows * info.dim];
-                let mut row = vec![0.0f32; info.dim];
-                for r in 0..info.rows {
-                    cluster.read_row(t, r, &mut row);
-                    mirror[r * info.dim..(r + 1) * info.dim].copy_from_slice(&row);
-                }
-                last_saved.push(mirror);
+                last_saved.push(read_full_table(cluster, t, info.rows));
             } else {
                 last_saved.push(Vec::new());
             }
@@ -236,17 +235,17 @@ impl ScarTracker {
     }
 
     /// The `k` rows of `table` with the largest change-L2 since last save.
-    pub fn top_k(&self, cluster: &PsCluster, table: usize, k: usize) -> Vec<u32> {
+    pub fn top_k<B: PsBackend>(&self, cluster: &B, table: usize, k: usize) -> Vec<u32> {
         debug_assert!(self.mask[table]);
         let dim = self.dims[table];
         let mirror = &self.last_saved[table];
         let rows = mirror.len() / dim;
-        let mut cur = vec![0.0f32; dim];
+        let cur = read_full_table(cluster, table, rows);
         let mut scored: Vec<(f32, u32)> = (0..rows)
             .map(|r| {
-                cluster.read_row(table, r, &mut cur);
+                let now = &cur[r * dim..(r + 1) * dim];
                 let base = &mirror[r * dim..(r + 1) * dim];
-                let norm2: f32 = cur.iter().zip(base)
+                let norm2: f32 = now.iter().zip(base)
                     .map(|(a, b)| (a - b) * (a - b)).sum();
                 (norm2, r as u32)
             })
@@ -260,13 +259,13 @@ impl ScarTracker {
     }
 
     /// After saving `rows` of `table`, refresh their mirror entries.
-    pub fn mark_saved(&mut self, cluster: &PsCluster, table: usize, rows: &[u32]) {
+    pub fn mark_saved<B: PsBackend>(&mut self, cluster: &B, table: usize, rows: &[u32]) {
         let dim = self.dims[table];
         let mirror = &mut self.last_saved[table];
-        let mut cur = vec![0.0f32; dim];
-        for &r in rows {
-            cluster.read_row(table, r as usize, &mut cur);
-            mirror[r as usize * dim..(r as usize + 1) * dim].copy_from_slice(&cur);
+        let (data, _) = cluster.read_rows(table, rows);
+        for (i, &r) in rows.iter().enumerate() {
+            mirror[r as usize * dim..(r as usize + 1) * dim]
+                .copy_from_slice(&data[i * dim..(i + 1) * dim]);
         }
     }
 
@@ -276,10 +275,16 @@ impl ScarTracker {
     }
 }
 
+/// All of `table`'s rows in row-major order via one batched read.
+fn read_full_table<B: PsBackend>(cluster: &B, table: usize, rows: usize) -> Vec<f32> {
+    let ids: Vec<u32> = (0..rows as u32).collect();
+    cluster.read_rows(table, &ids).0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::embedding::TableInfo;
+    use crate::embedding::{PsCluster, TableInfo};
     use crate::prop_assert;
     use crate::testing::{forall, gen};
 

@@ -1,0 +1,383 @@
+//! The Emb PS cluster runtime seam: a [`PsBackend`] trait over *how* the
+//! sharded embedding parameter servers execute, with two implementations:
+//!
+//! * [`crate::embedding::PsCluster`] — the original in-process, synchronous
+//!   emulation: every gather/scatter runs inline on the coordinator thread.
+//!   Fast, simple, and the reference for numerical equivalence.
+//! * [`ThreadedCluster`] — a concurrent message-passing runtime: every Emb
+//!   PS node is its own worker thread owning its shards, served over mpsc
+//!   request/reply channels behind a sharded router. Nodes can *actually*
+//!   die (worker joined) and respawn while the survivors keep serving —
+//!   the systems behaviour the paper emulates (ECRM-style concurrent
+//!   recovery, Check-N-Run-style decoupled checkpointing) becomes real.
+//!
+//! Both backends are **bit-identical**: requests are reassembled in
+//! deterministic slot order and per-row updates are applied in sample
+//! order, so a training run produces the same floats on either backend
+//! (the integration suite asserts identical final AUC/logloss). The
+//! coordinator is generic over the trait and selects the backend from
+//! `JobConfig` / `--backend inproc|threaded`.
+
+pub mod threaded;
+
+pub use threaded::ThreadedCluster;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::embedding::{init_value, shard_rows, EmbOptimizer, PsCluster, TableInfo};
+
+/// A full copy of one node's state: per-table shards plus the per-row
+/// optimizer accumulators. The unit of checkpoint capture and restore.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeSnapshot {
+    pub node: usize,
+    /// shards[table], local_row-major [local_rows * dim]
+    pub shards: Vec<Vec<f32>>,
+    /// opt[table], one f32 per local row
+    pub opt: Vec<Vec<f32>>,
+}
+
+/// Point-in-time operation counters of a backend (monotone).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BackendStats {
+    pub gathers: u64,
+    pub applies: u64,
+    pub snapshots: u64,
+    pub kills: u64,
+    pub respawns: u64,
+}
+
+/// The ONE routing definition: global row `r` of any table lives on node
+/// `r % n_nodes` at local slot `r / n_nodes`. Every backend, the
+/// checkpoint mirror, and the threaded router all call this — checkpoint
+/// portability across backends depends on there being no second copy, so
+/// implementors must not override [`PsBackend::route`].
+#[inline]
+pub fn route_row(global_row: usize, n_nodes: usize) -> (usize, usize) {
+    (global_row % n_nodes, global_row / n_nodes)
+}
+
+/// Interior-mutable counters behind `&self` methods; `Clone` snapshots the
+/// current values (so `PsCluster` stays `Clone`).
+#[derive(Debug, Default)]
+pub struct StatCounters {
+    gathers: AtomicU64,
+    applies: AtomicU64,
+    snapshots: AtomicU64,
+    kills: AtomicU64,
+    respawns: AtomicU64,
+}
+
+impl Clone for StatCounters {
+    fn clone(&self) -> Self {
+        let s = self.read();
+        Self {
+            gathers: AtomicU64::new(s.gathers),
+            applies: AtomicU64::new(s.applies),
+            snapshots: AtomicU64::new(s.snapshots),
+            kills: AtomicU64::new(s.kills),
+            respawns: AtomicU64::new(s.respawns),
+        }
+    }
+}
+
+impl StatCounters {
+    pub fn bump_gather(&self) {
+        self.gathers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bump_apply(&self) {
+        self.applies.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bump_snapshot(&self) {
+        self.snapshots.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bump_kill(&self) {
+        self.kills.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bump_respawn(&self) {
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn read(&self) -> BackendStats {
+        BackendStats {
+            gathers: self.gathers.load(Ordering::Relaxed),
+            applies: self.applies.load(Ordering::Relaxed),
+            snapshots: self.snapshots.load(Ordering::Relaxed),
+            kills: self.kills.load(Ordering::Relaxed),
+            respawns: self.respawns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// What the coordinator, checkpoint store, and priority trackers need from
+/// an Emb PS cluster runtime. Row routing is fixed (global row `r` lives on
+/// node `r % n_nodes` at local row `r / n_nodes`) so checkpoints taken on
+/// one backend restore onto the other.
+pub trait PsBackend: Send {
+    /// Short identifier for reports ("inproc" | "threaded").
+    fn name(&self) -> &'static str;
+
+    fn tables(&self) -> &[TableInfo];
+
+    fn n_nodes(&self) -> usize;
+
+    /// (owner node, local row) of a global row. Fixed for every backend
+    /// (see [`route_row`]); do not override.
+    #[inline]
+    fn route(&self, global_row: usize) -> (usize, usize) {
+        route_row(global_row, self.n_nodes())
+    }
+
+    /// Single-hot gather: `indices` is [B, T] row-major, `out` [B, T, dim].
+    fn gather(&self, indices: &[u32], out: &mut [f32]) {
+        self.gather_pooled(indices, 1, out);
+    }
+
+    /// Multi-hot gather with sum pooling: `indices` is [B, T, H] row-major,
+    /// `out` is [B, T, dim] with out[b,t] = Σ_h row(idx_h).
+    fn gather_pooled(&self, indices: &[u32], hotness: usize, out: &mut [f32]);
+
+    /// Sparse update; duplicate rows accumulate in sample order.
+    fn apply_grads(
+        &mut self,
+        indices: &[u32],
+        hotness: usize,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    );
+
+    /// Read one row into `out` (len == dim).
+    fn read_row(&self, table: usize, global_row: usize, out: &mut [f32]);
+
+    /// Batched row fetch for priority checkpointing: returns the rows'
+    /// embedding data ([rows.len() * dim], in `rows` order) and their
+    /// optimizer accumulators ([rows.len()]).
+    fn read_rows(&self, table: usize, rows: &[u32]) -> (Vec<f32>, Vec<f32>);
+
+    /// Capture one node's full state (checkpoint save path).
+    fn snapshot_node(&self, node: usize) -> NodeSnapshot;
+
+    /// Overwrite one node's full state (checkpoint restore path).
+    fn load_node(&mut self, node: usize, shards: &[Vec<f32>], opt: &[Vec<f32>]);
+
+    /// Reset a node to its deterministic initial values (recovery when no
+    /// checkpoint covers it).
+    fn reset_node_to_init(&mut self, node: usize);
+
+    /// A failure event hits this node: its state is lost. On the threaded
+    /// backend the worker thread really dies; survivors keep serving.
+    fn kill_node(&mut self, node: usize);
+
+    /// Bring a blank replacement for a killed node back online (state at
+    /// deterministic init; the recovery protocol then restores it).
+    fn respawn_node(&mut self, node: usize);
+
+    fn total_params(&self) -> usize {
+        self.tables().iter().map(|t| t.rows * t.dim).sum()
+    }
+
+    fn stats(&self) -> BackendStats;
+}
+
+// ---------------------------------------------------------------------------
+// the original in-process cluster as a backend
+// ---------------------------------------------------------------------------
+
+impl PsBackend for PsCluster {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn tables(&self) -> &[TableInfo] {
+        &self.tables
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    fn gather_pooled(&self, indices: &[u32], hotness: usize, out: &mut [f32]) {
+        self.stats.bump_gather();
+        PsCluster::gather_pooled(self, indices, hotness, out);
+    }
+
+    fn apply_grads(
+        &mut self,
+        indices: &[u32],
+        hotness: usize,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    ) {
+        self.stats.bump_apply();
+        PsCluster::apply_grads(self, indices, hotness, grads, lr, opt);
+    }
+
+    fn read_row(&self, table: usize, global_row: usize, out: &mut [f32]) {
+        PsCluster::read_row(self, table, global_row, out);
+    }
+
+    fn read_rows(&self, table: usize, rows: &[u32]) -> (Vec<f32>, Vec<f32>) {
+        let dim = self.tables[table].dim;
+        let mut data = vec![0.0f32; rows.len() * dim];
+        let mut opt = vec![0.0f32; rows.len()];
+        for (i, &row) in rows.iter().enumerate() {
+            let (node, local) = PsCluster::route(self, row as usize);
+            data[i * dim..(i + 1) * dim]
+                .copy_from_slice(&self.shard(node, table)[local * dim..(local + 1) * dim]);
+            opt[i] = self.opt_shard(node, table)[local];
+        }
+        (data, opt)
+    }
+
+    fn snapshot_node(&self, node: usize) -> NodeSnapshot {
+        self.stats.bump_snapshot();
+        NodeSnapshot {
+            node,
+            shards: (0..self.tables.len()).map(|t| self.shard(node, t).to_vec()).collect(),
+            opt: (0..self.tables.len()).map(|t| self.opt_shard(node, t).to_vec()).collect(),
+        }
+    }
+
+    fn load_node(&mut self, node: usize, shards: &[Vec<f32>], opt: &[Vec<f32>]) {
+        for t in 0..self.tables.len() {
+            self.shard_mut(node, t).copy_from_slice(&shards[t]);
+            self.opt_shard_mut(node, t).copy_from_slice(&opt[t]);
+        }
+    }
+
+    fn reset_node_to_init(&mut self, node: usize) {
+        PsCluster::reset_node_to_init(self, node);
+    }
+
+    fn kill_node(&mut self, node: usize) {
+        // in-process emulation of a node death: its state is wiped
+        self.stats.bump_kill();
+        PsCluster::reset_node_to_init(self, node);
+    }
+
+    fn respawn_node(&mut self, _node: usize) {
+        self.stats.bump_respawn();
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats.read()
+    }
+}
+
+/// Initial state of one node, shared by both backends so a fresh
+/// `ThreadedCluster` worker is bit-identical to a fresh `PsCluster` node.
+pub(crate) fn init_node_state(
+    tables: &[TableInfo],
+    n_nodes: usize,
+    node_id: usize,
+    seed: u64,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut shards = Vec::with_capacity(tables.len());
+    let mut opt = Vec::with_capacity(tables.len());
+    for (t, info) in tables.iter().enumerate() {
+        let local_rows = shard_rows(info.rows, n_nodes, node_id);
+        let mut shard = vec![0.0f32; local_rows * info.dim];
+        for lr in 0..local_rows {
+            let global = node_id + lr * n_nodes;
+            for d in 0..info.dim {
+                shard[lr * info.dim + d] = init_value(seed, t, global, d);
+            }
+        }
+        shards.push(shard);
+        opt.push(vec![0.0f32; local_rows]);
+    }
+    (shards, opt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> PsCluster {
+        PsCluster::new(
+            vec![TableInfo { rows: 11, dim: 4 }, TableInfo { rows: 6, dim: 4 }],
+            3,
+            5,
+        )
+    }
+
+    #[test]
+    fn trait_gather_matches_inherent() {
+        let c = cluster();
+        let idx = vec![0u32, 1, 10, 5, 3, 2];
+        let mut a = vec![0.0; 3 * 2 * 4];
+        let mut b = vec![0.0; 3 * 2 * 4];
+        PsCluster::gather(&c, &idx, &mut a);
+        PsBackend::gather(&c, &idx, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn read_rows_matches_read_row() {
+        let mut c = cluster();
+        PsBackend::apply_grads(&mut c, &[4, 2], 1, &vec![0.3f32; 8], 1.0,
+                               EmbOptimizer::RowAdagrad { eps: 1e-8 });
+        let rows = vec![4u32, 0, 7];
+        let (data, opt) = c.read_rows(0, &rows);
+        let mut want = vec![0.0; 4];
+        for (i, &r) in rows.iter().enumerate() {
+            c.read_row(0, r as usize, &mut want);
+            assert_eq!(&data[i * 4..(i + 1) * 4], &want[..]);
+            let (node, local) = PsCluster::route(&c, r as usize);
+            assert_eq!(opt[i], c.opt_shard(node, 0)[local]);
+        }
+    }
+
+    #[test]
+    fn snapshot_load_roundtrip() {
+        let mut c = cluster();
+        PsBackend::apply_grads(&mut c, &[3, 1], 1, &vec![1.0f32; 8], 0.5,
+                               EmbOptimizer::Sgd);
+        let snap = c.snapshot_node(0);
+        assert_eq!(snap.node, 0);
+        PsBackend::apply_grads(&mut c, &[3, 1], 1, &vec![1.0f32; 8], 0.5,
+                               EmbOptimizer::Sgd);
+        let after = c.snapshot_node(0);
+        assert_ne!(snap, after);
+        c.load_node(0, &snap.shards, &snap.opt);
+        assert_eq!(c.snapshot_node(0).shards, snap.shards);
+    }
+
+    #[test]
+    fn kill_wipes_to_init_and_stats_count() {
+        let mut c = cluster();
+        PsBackend::apply_grads(&mut c, &[3, 1], 1, &vec![1.0f32; 8], 0.5,
+                               EmbOptimizer::Sgd);
+        c.kill_node(0); // row 3 lives on node 0 (3 % 3)
+        c.respawn_node(0);
+        let fresh = cluster();
+        let mut a = vec![0.0; 4];
+        let mut b = vec![0.0; 4];
+        c.read_row(0, 3, &mut a);
+        fresh.read_row(0, 3, &mut b);
+        assert_eq!(a, b);
+        let s = PsBackend::stats(&c);
+        assert_eq!((s.kills, s.respawns, s.applies), (1, 1, 1));
+    }
+
+    #[test]
+    fn init_node_state_matches_pscluster() {
+        let c = PsCluster::new(
+            vec![TableInfo { rows: 13, dim: 3 }],
+            4,
+            77,
+        );
+        for node in 0..4 {
+            let (shards, opt) = init_node_state(c.tables(), 4, node, 77);
+            let snap = c.snapshot_node(node);
+            assert_eq!(shards, snap.shards, "node {node}");
+            assert_eq!(opt, snap.opt);
+        }
+    }
+}

@@ -1,0 +1,511 @@
+//! [`ThreadedCluster`] — the concurrent Emb PS runtime.
+//!
+//! Every node is a worker thread owning its shards (per-table row slices +
+//! optimizer accumulators), served over an mpsc request/reply channel. The
+//! router (the `PsBackend` methods on [`ThreadedCluster`]) shards each
+//! batched request by row ownership, fans the per-node slices out to all
+//! live workers, and reassembles the replies **in slot order** so results
+//! are bit-identical to the in-process backend regardless of which worker
+//! answers first.
+//!
+//! Failure injection is real here: [`PsBackend::kill_node`] sends `Kill`
+//! and joins the worker — its state is gone, exactly like a production PS
+//! node loss — while the other workers keep serving gathers. `respawn_node`
+//! brings up a blank replacement at deterministic init, and the partial
+//! recovery protocol (coordinator + checkpoint pipeline) restores its rows
+//! from the last checkpoint.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::{init_node_state, route_row, BackendStats, NodeSnapshot, PsBackend, StatCounters};
+use crate::embedding::{EmbOptimizer, TableInfo};
+
+/// One routed gather slot: read `local` of `table`.
+struct SlotReq {
+    table: u32,
+    local: u32,
+}
+
+/// One routed update: apply grad slice `grad_slot` to `local` of `table`.
+struct UpdateReq {
+    table: u32,
+    local: u32,
+    grad_slot: u32,
+}
+
+enum NodeMsg {
+    Gather { reqs: Vec<SlotReq>, reply: Sender<(usize, Vec<f32>)> },
+    Apply {
+        reqs: Vec<UpdateReq>,
+        grads: Arc<Vec<f32>>,
+        lr: f32,
+        opt: EmbOptimizer,
+        ack: Sender<usize>,
+    },
+    ReadRows { table: u32, locals: Vec<u32>, reply: Sender<(usize, Vec<f32>, Vec<f32>)> },
+    Snapshot { reply: Sender<NodeSnapshot> },
+    Load { shards: Vec<Vec<f32>>, opt: Vec<Vec<f32>>, ack: Sender<()> },
+    Reset { ack: Sender<()> },
+    Kill,
+}
+
+struct Worker {
+    tx: Sender<NodeMsg>,
+    join: JoinHandle<()>,
+}
+
+/// Concurrent message-passing Emb PS cluster (see module docs).
+pub struct ThreadedCluster {
+    tables: Vec<TableInfo>,
+    n_nodes: usize,
+    seed: u64,
+    /// `None` = the node is dead (killed, not yet respawned)
+    workers: Vec<Option<Worker>>,
+    stats: StatCounters,
+}
+
+fn worker_loop(
+    node_id: usize,
+    tables: Vec<TableInfo>,
+    n_nodes: usize,
+    seed: u64,
+    rx: Receiver<NodeMsg>,
+) {
+    let (mut shards, mut opt_state) = init_node_state(&tables, n_nodes, node_id, seed);
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            NodeMsg::Gather { reqs, reply } => {
+                let dim = tables[0].dim; // gather path: uniform dim
+                let mut vals = vec![0.0f32; reqs.len() * dim];
+                for (i, r) in reqs.iter().enumerate() {
+                    let local = r.local as usize;
+                    vals[i * dim..(i + 1) * dim].copy_from_slice(
+                        &shards[r.table as usize][local * dim..(local + 1) * dim],
+                    );
+                }
+                let _ = reply.send((node_id, vals));
+            }
+            NodeMsg::Apply { reqs, grads, lr, opt, ack } => {
+                let dim = tables[0].dim;
+                for r in &reqs {
+                    let t = r.table as usize;
+                    let local = r.local as usize;
+                    let g = &grads[r.grad_slot as usize * dim..(r.grad_slot as usize + 1) * dim];
+                    let dst = &mut shards[t][local * dim..(local + 1) * dim];
+                    opt.apply(dst, g, &mut opt_state[t][local], lr);
+                }
+                let _ = ack.send(node_id);
+            }
+            NodeMsg::ReadRows { table, locals, reply } => {
+                let t = table as usize;
+                let dim = tables[t].dim;
+                let mut data = vec![0.0f32; locals.len() * dim];
+                let mut acc = vec![0.0f32; locals.len()];
+                for (i, &l) in locals.iter().enumerate() {
+                    let l = l as usize;
+                    data[i * dim..(i + 1) * dim]
+                        .copy_from_slice(&shards[t][l * dim..(l + 1) * dim]);
+                    acc[i] = opt_state[t][l];
+                }
+                let _ = reply.send((node_id, data, acc));
+            }
+            NodeMsg::Snapshot { reply } => {
+                let _ = reply.send(NodeSnapshot {
+                    node: node_id,
+                    shards: shards.clone(),
+                    opt: opt_state.clone(),
+                });
+            }
+            NodeMsg::Load { shards: s, opt: o, ack } => {
+                shards = s;
+                opt_state = o;
+                let _ = ack.send(());
+            }
+            NodeMsg::Reset { ack } => {
+                let (s, o) = init_node_state(&tables, n_nodes, node_id, seed);
+                shards = s;
+                opt_state = o;
+                let _ = ack.send(());
+            }
+            NodeMsg::Kill => break,
+        }
+    }
+}
+
+impl ThreadedCluster {
+    pub fn new(tables: Vec<TableInfo>, n_nodes: usize, seed: u64) -> Self {
+        assert!(n_nodes >= 1);
+        let workers = (0..n_nodes)
+            .map(|node_id| Some(Self::spawn(&tables, n_nodes, node_id, seed)))
+            .collect();
+        Self { tables, n_nodes, seed, workers, stats: StatCounters::default() }
+    }
+
+    fn spawn(tables: &[TableInfo], n_nodes: usize, node_id: usize, seed: u64) -> Worker {
+        let (tx, rx) = mpsc::channel();
+        let tables = tables.to_vec();
+        let join = std::thread::Builder::new()
+            .name(format!("emb-ps-{node_id}"))
+            .spawn(move || worker_loop(node_id, tables, n_nodes, seed, rx))
+            .expect("spawning Emb PS worker");
+        Worker { tx, join }
+    }
+
+    pub fn alive(&self, node: usize) -> bool {
+        self.workers[node].is_some()
+    }
+
+    fn sender(&self, node: usize) -> &Sender<NodeMsg> {
+        match &self.workers[node] {
+            Some(w) => &w.tx,
+            None => panic!("Emb PS node {node} is dead (killed, not respawned)"),
+        }
+    }
+}
+
+impl PsBackend for ThreadedCluster {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn tables(&self) -> &[TableInfo] {
+        &self.tables
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    fn gather_pooled(&self, indices: &[u32], hotness: usize, out: &mut [f32]) {
+        self.stats.bump_gather();
+        let t = self.tables.len();
+        let dim = self.tables[0].dim;
+        debug_assert!(self.tables.iter().all(|i| i.dim == dim));
+        debug_assert_eq!(out.len() * hotness, indices.len() * dim);
+        // route: per-node request lists + where each flat slot's value lands
+        let mut per_node: Vec<Vec<SlotReq>> = (0..self.n_nodes).map(|_| Vec::new()).collect();
+        let mut place: Vec<(u32, u32)> = Vec::with_capacity(indices.len());
+        for (slot, &row) in indices.iter().enumerate() {
+            let (node, local) = route_row(row as usize, self.n_nodes);
+            place.push((node as u32, per_node[node].len() as u32));
+            per_node[node].push(SlotReq {
+                table: ((slot / hotness) % t) as u32,
+                local: local as u32,
+            });
+        }
+        // fan out to live nodes, collect replies (any order)
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let mut expected = 0usize;
+        for (node, reqs) in per_node.into_iter().enumerate() {
+            if reqs.is_empty() {
+                continue;
+            }
+            expected += 1;
+            self.sender(node)
+                .send(NodeMsg::Gather { reqs, reply: reply_tx.clone() })
+                .expect("Emb PS worker hung up");
+        }
+        drop(reply_tx);
+        let mut replies: Vec<Vec<f32>> = (0..self.n_nodes).map(|_| Vec::new()).collect();
+        for _ in 0..expected {
+            let (node, vals) = reply_rx.recv().expect("Emb PS worker died mid-gather");
+            replies[node] = vals;
+        }
+        // reassemble in slot order: identical pooling order to the
+        // in-process backend (copy at h == 0, add for h = 1..H), so the
+        // floats are bit-identical
+        for (slot, &(node, off)) in place.iter().enumerate() {
+            let src = &replies[node as usize][off as usize * dim..(off as usize + 1) * dim];
+            let dst = &mut out[(slot / hotness) * dim..(slot / hotness + 1) * dim];
+            if slot % hotness == 0 {
+                dst.copy_from_slice(src);
+            } else {
+                for (d, v) in dst.iter_mut().zip(src) {
+                    *d += v;
+                }
+            }
+        }
+    }
+
+    fn apply_grads(
+        &mut self,
+        indices: &[u32],
+        hotness: usize,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    ) {
+        self.stats.bump_apply();
+        let t = self.tables.len();
+        let dim = self.tables[0].dim;
+        debug_assert_eq!(grads.len() * hotness, indices.len() * dim);
+        // slot order is (sample, table, hot) ascending → each node applies
+        // its updates in sample order, matching the in-process backend
+        let mut per_node: Vec<Vec<UpdateReq>> = (0..self.n_nodes).map(|_| Vec::new()).collect();
+        for (slot, &row) in indices.iter().enumerate() {
+            let (node, local) = route_row(row as usize, self.n_nodes);
+            per_node[node].push(UpdateReq {
+                table: ((slot / hotness) % t) as u32,
+                local: local as u32,
+                grad_slot: (slot / hotness) as u32,
+            });
+        }
+        let grads = Arc::new(grads.to_vec());
+        let (ack_tx, ack_rx) = mpsc::channel();
+        let mut expected = 0usize;
+        for (node, reqs) in per_node.into_iter().enumerate() {
+            if reqs.is_empty() {
+                continue;
+            }
+            expected += 1;
+            self.sender(node)
+                .send(NodeMsg::Apply {
+                    reqs,
+                    grads: Arc::clone(&grads),
+                    lr,
+                    opt,
+                    ack: ack_tx.clone(),
+                })
+                .expect("Emb PS worker hung up");
+        }
+        drop(ack_tx);
+        for _ in 0..expected {
+            ack_rx.recv().expect("Emb PS worker died mid-update");
+        }
+    }
+
+    fn read_row(&self, table: usize, global_row: usize, out: &mut [f32]) {
+        let (data, _) = self.read_rows(table, &[global_row as u32]);
+        out.copy_from_slice(&data);
+    }
+
+    fn read_rows(&self, table: usize, rows: &[u32]) -> (Vec<f32>, Vec<f32>) {
+        let dim = self.tables[table].dim;
+        let mut per_node: Vec<Vec<u32>> = (0..self.n_nodes).map(|_| Vec::new()).collect();
+        let mut place: Vec<(u32, u32)> = Vec::with_capacity(rows.len());
+        for &row in rows {
+            let (node, local) = route_row(row as usize, self.n_nodes);
+            place.push((node as u32, per_node[node].len() as u32));
+            per_node[node].push(local as u32);
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let mut expected = 0usize;
+        for (node, locals) in per_node.into_iter().enumerate() {
+            if locals.is_empty() {
+                continue;
+            }
+            expected += 1;
+            self.sender(node)
+                .send(NodeMsg::ReadRows { table: table as u32, locals, reply: reply_tx.clone() })
+                .expect("Emb PS worker hung up");
+        }
+        drop(reply_tx);
+        let mut parts: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..self.n_nodes).map(|_| (Vec::new(), Vec::new())).collect();
+        for _ in 0..expected {
+            let (node, data, acc) = reply_rx.recv().expect("Emb PS worker died mid-read");
+            parts[node] = (data, acc);
+        }
+        let mut data = vec![0.0f32; rows.len() * dim];
+        let mut opt = vec![0.0f32; rows.len()];
+        for (i, &(node, off)) in place.iter().enumerate() {
+            let (d, a) = &parts[node as usize];
+            data[i * dim..(i + 1) * dim]
+                .copy_from_slice(&d[off as usize * dim..(off as usize + 1) * dim]);
+            opt[i] = a[off as usize];
+        }
+        (data, opt)
+    }
+
+    fn snapshot_node(&self, node: usize) -> NodeSnapshot {
+        self.stats.bump_snapshot();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.sender(node)
+            .send(NodeMsg::Snapshot { reply: reply_tx })
+            .expect("Emb PS worker hung up");
+        reply_rx.recv().expect("Emb PS worker died mid-snapshot")
+    }
+
+    fn load_node(&mut self, node: usize, shards: &[Vec<f32>], opt: &[Vec<f32>]) {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.sender(node)
+            .send(NodeMsg::Load { shards: shards.to_vec(), opt: opt.to_vec(), ack: ack_tx })
+            .expect("Emb PS worker hung up");
+        ack_rx.recv().expect("Emb PS worker died mid-restore");
+    }
+
+    fn reset_node_to_init(&mut self, node: usize) {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.sender(node)
+            .send(NodeMsg::Reset { ack: ack_tx })
+            .expect("Emb PS worker hung up");
+        ack_rx.recv().expect("Emb PS worker died mid-reset");
+    }
+
+    fn kill_node(&mut self, node: usize) {
+        self.stats.bump_kill();
+        if let Some(w) = self.workers[node].take() {
+            let _ = w.tx.send(NodeMsg::Kill);
+            let _ = w.join.join();
+        }
+    }
+
+    fn respawn_node(&mut self, node: usize) {
+        assert!(self.workers[node].is_none(), "node {node} is already alive");
+        self.stats.bump_respawn();
+        self.workers[node] = Some(Self::spawn(&self.tables, self.n_nodes, node, self.seed));
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats.read()
+    }
+}
+
+impl Drop for ThreadedCluster {
+    fn drop(&mut self) {
+        for w in self.workers.iter_mut().filter_map(Option::take) {
+            let _ = w.tx.send(NodeMsg::Kill);
+            let _ = w.join.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::PsCluster;
+    use crate::util::rng::Rng;
+
+    const TABLES: [TableInfo; 2] =
+        [TableInfo { rows: 40, dim: 4 }, TableInfo { rows: 17, dim: 4 }];
+
+    fn both(n_nodes: usize, seed: u64) -> (PsCluster, ThreadedCluster) {
+        (
+            PsCluster::new(TABLES.to_vec(), n_nodes, seed),
+            ThreadedCluster::new(TABLES.to_vec(), n_nodes, seed),
+        )
+    }
+
+    fn rand_indices(rng: &mut Rng, b: usize, hotness: usize) -> Vec<u32> {
+        let mut idx = Vec::with_capacity(b * 2 * hotness);
+        for _ in 0..b {
+            for t in 0..2 {
+                for _ in 0..hotness {
+                    idx.push(rng.below(TABLES[t].rows as u64) as u32);
+                }
+            }
+        }
+        idx
+    }
+
+    #[test]
+    fn gather_is_bit_identical_to_inproc() {
+        let (a, b) = both(3, 11);
+        let mut rng = Rng::new(1);
+        for hotness in [1usize, 3] {
+            let idx = rand_indices(&mut rng, 16, hotness);
+            let mut out_a = vec![0.0f32; 16 * 2 * 4];
+            let mut out_b = vec![0.0f32; 16 * 2 * 4];
+            PsBackend::gather_pooled(&a, &idx, hotness, &mut out_a);
+            b.gather_pooled(&idx, hotness, &mut out_b);
+            assert_eq!(out_a, out_b, "hotness {hotness}");
+        }
+    }
+
+    #[test]
+    fn apply_grads_is_bit_identical_to_inproc() {
+        let (mut a, mut b) = both(4, 9);
+        let mut rng = Rng::new(2);
+        for (step, opt) in [(0usize, EmbOptimizer::Sgd),
+                            (1, EmbOptimizer::RowAdagrad { eps: 1e-8 }),
+                            (2, EmbOptimizer::RowAdagrad { eps: 1e-8 })] {
+            let hotness = 1 + step % 2;
+            let idx = rand_indices(&mut rng, 8, hotness);
+            let grads: Vec<f32> = (0..8 * 2 * 4).map(|_| rng.f32() - 0.5).collect();
+            PsBackend::apply_grads(&mut a, &idx, hotness, &grads, 0.7, opt);
+            b.apply_grads(&idx, hotness, &grads, 0.7, opt);
+        }
+        for node in 0..4 {
+            let sa = a.snapshot_node(node);
+            let sb = b.snapshot_node(node);
+            assert_eq!(sa.shards, sb.shards, "node {node} shards diverged");
+            assert_eq!(sa.opt, sb.opt, "node {node} optimizer state diverged");
+        }
+    }
+
+    #[test]
+    fn read_rows_matches_read_row() {
+        let mut c = ThreadedCluster::new(TABLES.to_vec(), 3, 5);
+        let mut rng = Rng::new(3);
+        let idx = rand_indices(&mut rng, 8, 1);
+        let grads: Vec<f32> = (0..8 * 2 * 4).map(|_| rng.f32()).collect();
+        c.apply_grads(&idx, 1, &grads, 0.5, EmbOptimizer::RowAdagrad { eps: 1e-8 });
+        let rows = vec![0u32, 5, 39, 7];
+        let (data, _opt) = c.read_rows(0, &rows);
+        let mut row = vec![0.0f32; 4];
+        for (i, &r) in rows.iter().enumerate() {
+            c.read_row(0, r as usize, &mut row);
+            assert_eq!(&data[i * 4..(i + 1) * 4], &row[..]);
+        }
+    }
+
+    #[test]
+    fn survivors_serve_while_a_node_is_dead() {
+        let mut c = ThreadedCluster::new(TABLES.to_vec(), 3, 7);
+        c.kill_node(1);
+        assert!(!c.alive(1));
+        // every row routes to node 0 (all ids ≡ 0 mod 3) — dead node 1 is
+        // never touched
+        let idx = vec![0u32, 3, 9, 6]; // 2 samples x 2 tables
+        let mut out = vec![0.0f32; 2 * 2 * 4];
+        c.gather_pooled(&idx, 1, &mut out); // must not panic or hang
+        let reference = PsCluster::new(TABLES.to_vec(), 3, 7);
+        let mut want = vec![0.0f32; 2 * 2 * 4];
+        PsBackend::gather_pooled(&reference, &idx, 1, &mut want);
+        assert_eq!(out, want);
+        c.respawn_node(1);
+        assert!(c.alive(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "is dead")]
+    fn routing_to_a_dead_node_panics() {
+        let mut c = ThreadedCluster::new(TABLES.to_vec(), 3, 7);
+        c.kill_node(1);
+        let mut out = vec![0.0f32; 4 * 2];
+        c.gather_pooled(&[1, 1], 1, &mut out); // row 1 lives on dead node 1
+    }
+
+    #[test]
+    fn kill_respawn_load_runs_full_recovery_protocol() {
+        let mut c = ThreadedCluster::new(TABLES.to_vec(), 3, 7);
+        let mut rng = Rng::new(4);
+        let idx = rand_indices(&mut rng, 8, 1);
+        let grads: Vec<f32> = (0..8 * 2 * 4).map(|_| rng.f32()).collect();
+        c.apply_grads(&idx, 1, &grads, 1.0, EmbOptimizer::Sgd);
+        let checkpoint = c.snapshot_node(2);
+        // more training, then the node dies
+        c.apply_grads(&idx, 1, &grads, 1.0, EmbOptimizer::Sgd);
+        c.kill_node(2);
+        c.respawn_node(2);
+        // blank replacement is at init
+        let fresh = ThreadedCluster::new(TABLES.to_vec(), 3, 7);
+        assert_eq!(c.snapshot_node(2).shards, fresh.snapshot_node(2).shards);
+        // restore from the checkpoint
+        c.load_node(2, &checkpoint.shards, &checkpoint.opt);
+        assert_eq!(c.snapshot_node(2).shards, checkpoint.shards);
+        let s = c.stats();
+        assert_eq!((s.kills, s.respawns), (1, 1));
+    }
+
+    #[test]
+    fn reset_restores_init_values() {
+        let mut c = ThreadedCluster::new(TABLES.to_vec(), 2, 13);
+        c.apply_grads(&[2, 2], 1, &vec![1.0f32; 8], 1.0, EmbOptimizer::Sgd);
+        c.reset_node_to_init(0); // row 2 lives on node 0
+        let fresh = ThreadedCluster::new(TABLES.to_vec(), 2, 13);
+        assert_eq!(c.snapshot_node(0), fresh.snapshot_node(0));
+    }
+}

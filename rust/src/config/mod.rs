@@ -69,11 +69,41 @@ impl DataConfig {
     }
 }
 
+/// Which Emb PS cluster runtime executes the job (see `crate::cluster`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PsBackendKind {
+    /// in-process synchronous emulation (the reference backend)
+    #[default]
+    InProc,
+    /// one worker thread per PS node behind mpsc channels; failures
+    /// really kill workers while survivors keep serving
+    Threaded,
+}
+
+impl PsBackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "inproc" => PsBackendKind::InProc,
+            "threaded" => PsBackendKind::Threaded,
+            _ => bail!("unknown PS backend {s:?} (inproc|threaded)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PsBackendKind::InProc => "inproc",
+            PsBackendKind::Threaded => "threaded",
+        }
+    }
+}
+
 /// Emulated production-cluster constants (paper §3 / §5.1). All times in
 /// *hours of emulated wall-clock*; each training step advances the clock by
 /// `t_total / total_steps` so overhead percentages match the paper's frame.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterConfig {
+    /// Emb PS cluster runtime (`inproc` | `threaded`)
+    pub backend: PsBackendKind,
     /// number of embedding parameter-server nodes (paper: N_emb)
     pub n_emb_ps: usize,
     /// number of MLP trainer nodes (data parallel; emulated only for
@@ -221,6 +251,7 @@ fn cluster_emulation(n_emb_ps: usize) -> ClusterConfig {
     // O_save = T_save²/(2 T_fail) at T_save ≈ 2.3 h → save ≈ lost ≈ 4.1%,
     // load + reschedule ≈ 0.3%, total ≈ 8.5%.
     ClusterConfig {
+        backend: PsBackendKind::InProc,
         n_emb_ps,
         n_trainers: 8,
         t_total_h: 56.0,
@@ -354,6 +385,9 @@ impl JobConfig {
         set!("data", "hotness", self.data.hotness, as_usize);
         set!("data", "seed", self.data.seed, as_usize_u64);
         set!("data", "label_noise", self.data.label_noise, as_f64);
+        if let Some(v) = get(doc, "cluster", "backend") {
+            self.cluster.backend = PsBackendKind::parse(v.as_str()?)?;
+        }
         set!("cluster", "n_emb_ps", self.cluster.n_emb_ps, as_usize);
         set!("cluster", "n_trainers", self.cluster.n_trainers, as_usize);
         set!("cluster", "t_total_h", self.cluster.t_total_h, as_f64);
@@ -460,6 +494,20 @@ mod tests {
         let c = cluster_emulation(8);
         let t = c.t_save_full_h();
         assert!((t * t - 2.0 * c.o_save_h * c.t_fail_h).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backend_parse_and_toml_override() {
+        assert_eq!(PsBackendKind::parse("inproc").unwrap(), PsBackendKind::InProc);
+        assert_eq!(PsBackendKind::parse("threaded").unwrap().name(), "threaded");
+        assert!(PsBackendKind::parse("rpc").is_err());
+        let cfg = JobConfig::from_toml(r#"
+            preset = "mini"
+            [cluster]
+            backend = "threaded"
+        "#).unwrap();
+        assert_eq!(cfg.cluster.backend, PsBackendKind::Threaded);
+        assert_eq!(preset("mini").unwrap().cluster.backend, PsBackendKind::InProc);
     }
 
     #[test]

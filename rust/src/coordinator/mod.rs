@@ -1,11 +1,32 @@
 //! The training coordinator — CPR's L3 contribution.
 //!
-//! Owns the whole emulated job: the PJRT train-step/predict executables
-//! (L2/L1 artifacts), the sharded Emb PS cluster, the synthetic dataset,
-//! the checkpoint manager with its priority trackers, the failure schedule,
-//! and the PLS controller. One call to [`run_training`] executes a full
-//! single-epoch job under a chosen [`Strategy`] and returns a
-//! [`TrainReport`] with model quality + the overhead ledger.
+//! Owns the whole emulated job: the train-step/predict executables (L2/L1
+//! artifacts or the native reference executor), the sharded Emb PS cluster,
+//! the synthetic dataset, the checkpoint manager with its priority
+//! trackers, the failure schedule, and the PLS controller. One call to
+//! [`run_training`] executes a full single-epoch job under a chosen
+//! [`Strategy`] and returns a [`TrainReport`] with model quality + the
+//! overhead ledger.
+//!
+//! ## Cluster backends
+//! The step loop is generic over [`PsBackend`]: `JobConfig.cluster.backend`
+//! selects the in-process emulation or the concurrent [`ThreadedCluster`]
+//! (one worker thread per Emb PS node behind mpsc channels). Failure
+//! events are injected *live*: the victim node is killed (on the threaded
+//! backend its worker really dies and is joined), a blank replacement is
+//! respawned, and partial recovery restores its rows from the checkpoint
+//! mirror while the surviving nodes keep serving. Both backends produce
+//! bit-identical training trajectories.
+//!
+//! ## Asynchronous checkpointing
+//! Saves no longer stall the step loop: node/row snapshots are captured at
+//! the save step (the consistency point) and handed to the
+//! [`CheckpointPipeline`] writer thread, which applies them to the mirror
+//! and publishes durable files while training proceeds. A durable
+//! checkpoint is only *published* once the writer has fsynced the data
+//! file and then the `LATEST` manifest (crash-consistency rule — see
+//! `checkpoint::disk`). Restores flow through the same FIFO channel, so
+//! they always observe every save submitted before the failure.
 //!
 //! ## Emulated clock
 //! Real training here takes minutes; the paper's jobs take days. Following
@@ -14,14 +35,15 @@
 //! emulated times, and checkpoint overheads are charged to an
 //! [`OverheadLedger`] from the production-calibrated constants — while the
 //! model/state effects of failures and recoveries are executed **for
-//! real** (shards cleared, checkpoints restored, steps re-run).
+//! real** (workers killed, checkpoints restored, steps re-run).
 
 use anyhow::{ensure, Result};
 
-use crate::checkpoint::disk::DiskCheckpointer;
+use crate::checkpoint::async_pipeline::CheckpointPipeline;
 use crate::checkpoint::tracker::{priority_mask, MfuTracker, ScarTracker, SsuTracker};
 use crate::checkpoint::CheckpointStore;
-use crate::config::{JobConfig, Strategy};
+use crate::cluster::{PsBackend, ThreadedCluster};
+use crate::config::{JobConfig, PsBackendKind, Strategy};
 use crate::data::{Batch, SyntheticDataset};
 use crate::embedding::{init_value, PsCluster, TableInfo};
 use crate::failure::FailureEvent;
@@ -40,6 +62,8 @@ pub struct RowStats {
 #[derive(Clone, Debug)]
 pub struct TrainReport {
     pub strategy: String,
+    /// which PS backend executed the job ("inproc" | "threaded")
+    pub backend: String,
     pub final_auc: f64,
     pub final_logloss: f64,
     pub train_loss: Curve,
@@ -73,11 +97,36 @@ pub struct RunOptions {
 }
 
 /// Run one emulated training job. `model` must be the compiled artifact
-/// whose manifest matches `cfg.model`.
+/// whose manifest matches `cfg.model`. The Emb PS backend is selected by
+/// `cfg.cluster.backend`.
 pub fn run_training(
     model: &ModelExe,
     cfg: &JobConfig,
     opts: &RunOptions,
+) -> Result<TrainReport> {
+    let tables: Vec<TableInfo> = cfg
+        .data
+        .table_rows
+        .iter()
+        .map(|&rows| TableInfo { rows, dim: model.manifest.emb_dim })
+        .collect();
+    let n_emb = cfg.cluster.n_emb_ps;
+    let seed = cfg.data.seed ^ 0xEB;
+    match cfg.cluster.backend {
+        PsBackendKind::InProc => {
+            run_training_core(model, cfg, opts, PsCluster::new(tables, n_emb, seed))
+        }
+        PsBackendKind::Threaded => {
+            run_training_core(model, cfg, opts, ThreadedCluster::new(tables, n_emb, seed))
+        }
+    }
+}
+
+fn run_training_core<B: PsBackend>(
+    model: &ModelExe,
+    cfg: &JobConfig,
+    opts: &RunOptions,
+    mut cluster: B,
 ) -> Result<TrainReport> {
     let m = &model.manifest;
     ensure!(m.batch == cfg.model.batch, "artifact batch mismatch");
@@ -98,22 +147,19 @@ pub fn run_training(
 
     // --- build the job state ------------------------------------------------
     let dataset = SyntheticDataset::new(m.num_dense, &cfg.data);
-    let tables: Vec<TableInfo> = cfg
-        .data
-        .table_rows
-        .iter()
-        .map(|&rows| TableInfo { rows, dim: m.emb_dim })
-        .collect();
-    let mut cluster = PsCluster::new(tables, n_emb, cfg.data.seed ^ 0xEB);
     let mut params: Vec<PjRtBuffer> = model.init_params(cfg.train.seed);
-    let mut store =
-        CheckpointStore::initial(&cluster, model.params_to_host(&params)?);
-    // optional durable checkpoints: an async writer thread persists every
-    // position-marking save without blocking the step loop
-    let disk = match &cfg.checkpoint.dir {
-        Some(dir) => Some(DiskCheckpointer::new(dir, 2)?),
-        None => None,
-    };
+    // the async checkpoint pipeline owns the mirror store on its writer
+    // thread; durable publication is enabled when a dir is configured
+    let pipeline = CheckpointPipeline::new(
+        CheckpointStore::initial(&cluster, model.params_to_host(&params)?),
+        cfg.checkpoint.dir.as_deref(),
+        2,
+        std::time::Duration::ZERO,
+    )?;
+    // the coordinator's view of the last position-marking save (the
+    // pipeline applies it asynchronously; these are the submitted values)
+    let mut marked_step: u64 = 0;
+    let mut marked_samples: u64 = 0;
 
     // --- the CPR controller decides the plan --------------------------------
     let (plan, use_partial, mut t_save_h) = match strategy {
@@ -235,13 +281,15 @@ pub fn run_training(
         }
 
         // ---- checkpoint saves up to the current clock ----
+        // (captures happen here — the consistency point; the pipeline's
+        // writer thread applies and persists them while training goes on)
         while clock_h >= next_save_h && next_save_h <= cfg.cluster.t_total_h {
             minor_count += 1;
             if priority {
                 ledger.save_h += r * cfg.cluster.o_save_h;
-                for t in 0..cluster.tables.len() {
+                for t in 0..cluster.tables().len() {
                     if mask[t] {
-                        let rows_in_table = cluster.tables[t].rows;
+                        let rows_in_table = cluster.tables()[t].rows;
                         let k = ((rows_in_table as f64 * r).ceil() as usize).max(1);
                         let rows: Vec<u32> = if let Some(tr) = mfu.as_mut() {
                             let sel = tr.top_k(t, k);
@@ -254,30 +302,28 @@ pub fn run_training(
                         } else {
                             unreachable!()
                         };
-                        store.save_rows(&cluster, t, &rows);
+                        pipeline.save_rows(&cluster, t, &rows);
                         if let Some(tr) = scar.as_mut() {
                             tr.mark_saved(&cluster, t, &rows);
                         }
                     } else {
-                        store.save_table(&cluster, t);
+                        pipeline.save_table(&cluster, t);
                     }
                 }
                 if minor_count % minors_per_major == 0 {
-                    store.mark_position(model.params_to_host(&params)?,
-                                        step, step * batch as u64);
+                    pipeline.mark_position(model.params_to_host(&params)?,
+                                           step, step * batch as u64);
+                    marked_step = step;
+                    marked_samples = step * batch as u64;
                     ledger.n_saves += 1;
-                    if let Some(d) = &disk {
-                        d.submit(store.clone())?;
-                    }
                 }
             } else {
                 ledger.save_h += cfg.cluster.o_save_h;
                 ledger.n_saves += 1;
-                store.full_save(&cluster, model.params_to_host(&params)?,
-                                step, step * batch as u64);
-                if let Some(d) = &disk {
-                    d.submit(store.clone())?;
-                }
+                pipeline.full_save(&cluster, model.params_to_host(&params)?,
+                                   step, step * batch as u64);
+                marked_step = step;
+                marked_samples = step * batch as u64;
             }
             next_save_h += save_interval_h;
         }
@@ -292,24 +338,34 @@ pub fn run_training(
             if use_partial {
                 pls_acc.on_failure(
                     step * batch as u64,
-                    store.samples,
+                    marked_samples,
                     cfg.data.train_samples as u64,
                     n_emb,
                     ev.victims.len(),
                 );
+                // live partial recovery: the victim dies (on the threaded
+                // backend its worker is joined), a blank node respawns,
+                // and the checkpoint mirror repopulates it — survivors
+                // keep their progress and keep serving throughout
                 for &v in &ev.victims {
-                    store.restore_node(&mut cluster, v);
+                    cluster.kill_node(v);
+                    cluster.respawn_node(v);
+                    pipeline.restore_node(&mut cluster, v);
                 }
             } else {
                 // full recovery: everyone reloads, training rewinds
-                let t_last = store.step as f64 * dt_h;
+                let t_last = marked_step as f64 * dt_h;
                 ledger.lost_h += (clock_h - t_last).max(0.0);
-                let (mlp, ckpt_step, _samples) = store.restore_all(&mut cluster);
+                let (mlp, ckpt_step, _samples) = pipeline.restore_all(&mut cluster);
                 params = model.params_from_host(&mlp);
                 step = ckpt_step;
             }
         }
     }
+
+    // drain the pipeline: every capture applied + published (surfaces any
+    // writer IO error, like the old synchronous path did)
+    pipeline.flush()?;
 
     // --- final evaluation --------------------------------------------------------
     let (final_auc, final_logloss) =
@@ -319,14 +375,18 @@ pub fn run_training(
     // --- Fig. 6 stats ---------------------------------------------------------------
     let row_stats = stat_counts.map(|counts| {
         let mut rows = Vec::new();
-        let mut cur = vec![0.0f32; m.emb_dim];
-        for t in 0..cluster.tables.len() {
+        let dim = m.emb_dim;
+        for t in 0..cluster.tables().len() {
             if !mask[t] {
                 continue; // report the large tables, like the paper
             }
-            let info = cluster.tables[t];
+            let info = cluster.tables()[t];
+            // one batched read per table (a per-row read_row would be a
+            // channel round trip per row on the threaded backend)
+            let ids: Vec<u32> = (0..info.rows as u32).collect();
+            let (data, _) = cluster.read_rows(t, &ids);
             for rrow in 0..info.rows {
-                cluster.read_row(t, rrow, &mut cur);
+                let cur = &data[rrow * dim..(rrow + 1) * dim];
                 let mut change = 0.0f64;
                 for (d, &c) in cur.iter().enumerate() {
                     let init = init_value(cfg.data.seed ^ 0xEB, t, rrow, d);
@@ -341,6 +401,7 @@ pub fn run_training(
 
     Ok(TrainReport {
         strategy: strategy.name().to_string(),
+        backend: cluster.name().to_string(),
         final_auc,
         final_logloss,
         train_loss,
@@ -358,11 +419,11 @@ pub fn run_training(
 }
 
 /// AUC + logloss over the held-out eval split.
-pub fn evaluate(
+pub fn evaluate<B: PsBackend>(
     model: &ModelExe,
     cfg: &JobConfig,
     dataset: &SyntheticDataset,
-    cluster: &PsCluster,
+    cluster: &B,
     params: &[PjRtBuffer],
 ) -> Result<(f64, f64)> {
     let m = &model.manifest;

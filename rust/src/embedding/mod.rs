@@ -15,6 +15,7 @@ pub mod optim;
 
 pub use optim::EmbOptimizer;
 
+use crate::cluster::StatCounters;
 use crate::util::rng::SplitMix64;
 use crate::util::threads::parallel_chunks;
 
@@ -42,6 +43,15 @@ pub struct PsCluster {
     pub n_nodes: usize,
     nodes: Vec<EmbPsNode>,
     seed: u64,
+    /// operation counters for the `PsBackend` trait view
+    pub(crate) stats: StatCounters,
+}
+
+/// Rows of a table owned by `node_id` under the fixed round-robin sharding
+/// (global % n_nodes == node_id). Shared with the threaded backend.
+#[inline]
+pub fn shard_rows(rows: usize, n_nodes: usize, node_id: usize) -> usize {
+    rows / n_nodes + usize::from(rows % n_nodes > node_id)
 }
 
 /// Deterministic init value for (table, global_row, d): uniform in
@@ -81,19 +91,18 @@ impl PsCluster {
                 .collect();
             nodes.push(EmbPsNode { shards, opt_state });
         }
-        Self { tables, n_nodes, nodes, seed }
+        Self { tables, n_nodes, nodes, seed, stats: StatCounters::default() }
     }
 
     #[inline]
     fn local_rows_static(rows: usize, n_nodes: usize, node_id: usize) -> usize {
-        // rows with global % n_nodes == node_id
-        rows / n_nodes + usize::from(rows % n_nodes > node_id)
+        shard_rows(rows, n_nodes, node_id)
     }
 
     /// (owner node, local row) of a global row.
     #[inline]
     pub fn route(&self, global_row: usize) -> (usize, usize) {
-        (global_row % self.n_nodes, global_row / self.n_nodes)
+        crate::cluster::route_row(global_row, self.n_nodes)
     }
 
     pub fn local_rows(&self, table: usize, node_id: usize) -> usize {

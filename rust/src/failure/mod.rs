@@ -160,6 +160,34 @@ mod tests {
     }
 
     #[test]
+    fn uniform_schedule_is_deterministic_under_fixed_seed() {
+        for seed in [1u64, 99, 0xBEEF] {
+            let a = uniform_schedule(&mut Rng::new(seed), 6, 56.0, 8, 2);
+            let b = uniform_schedule(&mut Rng::new(seed), 6, 56.0, 8, 2);
+            assert_eq!(a, b, "seed {seed}");
+        }
+        let a = uniform_schedule(&mut Rng::new(1), 6, 56.0, 8, 2);
+        let b = uniform_schedule(&mut Rng::new(2), 6, 56.0, 8, 2);
+        assert_ne!(a, b, "different seeds must give different schedules");
+    }
+
+    #[test]
+    fn uniform_schedule_times_within_bounds_and_sorted() {
+        let ev = uniform_schedule(&mut Rng::new(5), 50, 10.0, 4, 4);
+        assert_eq!(ev.len(), 50);
+        let mut prev = 0.0;
+        for e in &ev {
+            assert!(e.time_h >= 0.0 && e.time_h <= 10.0);
+            assert!(e.time_h >= prev, "not sorted");
+            prev = e.time_h;
+            // killing all 4 of 4 nodes: victims must be exactly {0,1,2,3}
+            let mut v = e.victims.clone();
+            v.sort_unstable();
+            assert_eq!(v, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
     fn hazard_schedule_rate_is_roughly_poisson() {
         let mut rng = Rng::new(1);
         let mut total = 0usize;

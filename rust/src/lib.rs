@@ -20,6 +20,7 @@
 pub mod analysis;
 pub mod bench;
 pub mod checkpoint;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

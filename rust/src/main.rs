@@ -15,7 +15,7 @@
 
 use anyhow::{bail, Result};
 
-use cpr::config::{preset, JobConfig, Strategy};
+use cpr::config::{preset, JobConfig, PsBackendKind, Strategy};
 use cpr::coordinator::{run_training, RunOptions, TrainReport};
 use cpr::failure::uniform_schedule;
 use cpr::runtime::Runtime;
@@ -73,6 +73,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .opt("preset", "mini", "model preset (mini|kaggle_like|terabyte_like|large_100m)")
         .opt("config", "", "TOML job config (overrides preset)")
         .opt("strategy", "", "full|partial|cpr-vanilla|cpr-scar|cpr-mfu|cpr-ssu")
+        .opt("backend", "", "Emb PS cluster runtime: inproc|threaded")
         .opt("target-pls", "", "CPR target PLS (default from config: 0.1)")
         .opt("n-emb", "", "number of Emb PS nodes")
         .opt("train-samples", "", "override training samples")
@@ -85,6 +86,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .parse(args)?;
     let mut cfg = job_config_from(&cli)?;
     cfg.artifacts_dir = cli.get("artifacts").to_string();
+    if !cli.get("backend").is_empty() {
+        cfg.cluster.backend = PsBackendKind::parse(cli.get("backend"))?;
+    }
 
     let n_failures = cli.get_usize("failures")?;
     let frac = cli.get_f64("fail-frac")?;
@@ -113,6 +117,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
 
 fn print_report(r: &TrainReport, t_total_h: f64) {
     println!("strategy            {}", r.strategy);
+    println!("ps backend          {}", r.backend);
     if let Some(p) = &r.plan {
         println!("cpr plan            t_save={:.2}h use_partial={} E[PLS]={:.4} \
                   est_overhead={:.2}% (full-recovery optimum: {:.2}%)",

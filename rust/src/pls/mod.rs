@@ -117,6 +117,7 @@ mod tests {
 
     fn cluster(n_emb: usize, t_fail: f64) -> ClusterConfig {
         ClusterConfig {
+            backend: crate::config::PsBackendKind::InProc,
             n_emb_ps: n_emb,
             n_trainers: 8,
             t_total_h: 56.0,

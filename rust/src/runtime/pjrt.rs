@@ -1,0 +1,263 @@
+//! PJRT runtime: load the AOT artifacts (HLO text + manifest ABI) emitted
+//! by `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+//! HLO **text** is the interchange format (xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos). Python never runs at training time.
+//!
+//! Hot-path design (see EXPERIMENTS.md §Perf):
+//!  * artifacts are lowered with untupled outputs, so PJRT hands back one
+//!    device buffer per output — the updated MLP parameters stay resident
+//!    on device between steps and are never copied to the host except for
+//!    checkpointing;
+//!  * `execute_b` (buffer inputs) is used exclusively: the literal-input
+//!    `execute` in xla 0.1.6 leaks the temporary device buffers it creates
+//!    (~240 KB per call, an OOM after a few thousand steps).
+
+use super::manifest::Manifest;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Shared PJRT client (CPU). One per process.
+pub struct Runtime {
+    client: PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, hlo_path: &std::path::Path) -> Result<PjRtLoadedExecutable> {
+        let proto = HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", hlo_path.display()))
+    }
+
+    /// Load one model preset's artifacts from `<artifacts_dir>/<preset>/`.
+    pub fn load_model(&self, artifacts_dir: &str, preset: &str) -> Result<ModelExe> {
+        let dir = std::path::Path::new(artifacts_dir).join(preset);
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let train_step = self.compile(&dir.join(&manifest.train_file))?;
+        let predict = self.compile(&dir.join(&manifest.predict_file))?;
+        Ok(ModelExe { manifest, train_step, predict, client: self.client.clone() })
+    }
+}
+
+/// Compiled train-step + predict executables for one model preset, plus the
+/// ABI metadata needed to marshal literals.
+pub struct ModelExe {
+    pub manifest: Manifest,
+    train_step: PjRtLoadedExecutable,
+    predict: PjRtLoadedExecutable,
+    client: PjRtClient,
+}
+
+/// The output of one training step.
+pub struct StepOutput {
+    pub loss: f32,
+    /// d(loss)/d(gathered embeddings), [B, num_sparse, emb_dim] row-major
+    pub emb_grad: Vec<f32>,
+}
+
+impl ModelExe {
+    /// Upload host data as a device buffer.
+    pub fn buffer(&self, data: &[f32], shape: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+    }
+
+    /// Initialize MLP parameters (Xavier-uniform weights, zero biases)
+    /// as device-resident buffers, per the manifest shapes.
+    pub fn init_params(&self, seed: u64) -> Vec<PjRtBuffer> {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        self.manifest
+            .params
+            .iter()
+            .map(|p| {
+                let n: usize = p.shape.iter().product();
+                let data: Vec<f32> = if p.shape.len() == 2 {
+                    let bound =
+                        (6.0 / (p.shape[0] + p.shape[1]) as f64).sqrt() as f32;
+                    (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * bound).collect()
+                } else {
+                    vec![0.0; n] // biases
+                };
+                self.buffer(&data, &p.shape).expect("param upload")
+            })
+            .collect()
+    }
+
+    /// Execute one train step. `dense` [B*num_dense], `emb` [B*S*D],
+    /// `labels` [B]; `params` is replaced in place by the device-resident
+    /// updated MLP weights (no host round-trip).
+    pub fn train_step(
+        &self,
+        dense: &[f32],
+        emb: &[f32],
+        labels: &[f32],
+        lr: f32,
+        params: &mut Vec<PjRtBuffer>,
+    ) -> Result<StepOutput> {
+        let m = &self.manifest;
+        debug_assert_eq!(dense.len(), m.batch * m.num_dense);
+        debug_assert_eq!(emb.len(), m.batch * m.num_sparse * m.emb_dim);
+        debug_assert_eq!(labels.len(), m.batch);
+        let d = self.buffer(dense, &[m.batch, m.num_dense])?;
+        let e = self.buffer(emb, &[m.batch, m.num_sparse, m.emb_dim])?;
+        let l = self.buffer(labels, &[m.batch])?;
+        let lrb = self.buffer(&[lr], &[])?;
+        let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(4 + params.len());
+        inputs.push(&d);
+        inputs.push(&e);
+        inputs.push(&l);
+        inputs.push(&lrb);
+        inputs.extend(params.iter());
+
+        let mut result = self.train_step.execute_b::<&PjRtBuffer>(&inputs)?;
+        let mut outs = result.pop().context("no replica outputs")?;
+        let expected = 2 + self.manifest.params.len();
+        if outs.len() == expected {
+            // untupled outputs: params stay device-resident
+            let new_params = outs.split_off(2);
+            let emb_grad =
+                outs.pop().unwrap().to_literal_sync()?.to_vec::<f32>()?;
+            let loss =
+                outs.pop().unwrap().to_literal_sync()?.to_vec::<f32>()?[0];
+            *params = new_params;
+            return Ok(StepOutput { loss, emb_grad });
+        }
+        if outs.len() != 1 {
+            bail!("train_step returned {} outputs, expected {expected} or 1",
+                  outs.len());
+        }
+        // XLA tuples multi-output roots: download once, decompose, and
+        // re-upload the params (leak-free paths only — see module docs)
+        let mut parts = outs.pop().unwrap().to_literal_sync()?.to_tuple()?;
+        if parts.len() != expected {
+            bail!("train_step tuple has {} parts, expected {expected}",
+                  parts.len());
+        }
+        let new_params = parts
+            .split_off(2)
+            .iter()
+            .zip(&self.manifest.params)
+            .map(|(l, spec)| self.buffer(&l.to_vec::<f32>()?, &spec.shape))
+            .collect::<Result<Vec<_>>>()?;
+        let emb_grad = parts.pop().unwrap().to_vec::<f32>()?;
+        let loss = parts.pop().unwrap().to_vec::<f32>()?[0];
+        *params = new_params;
+        Ok(StepOutput { loss, emb_grad })
+    }
+
+    /// Forward-only logits for an eval batch.
+    pub fn predict(
+        &self,
+        dense: &[f32],
+        emb: &[f32],
+        params: &[PjRtBuffer],
+    ) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        let d = self.buffer(dense, &[m.batch, m.num_dense])?;
+        let e = self.buffer(emb, &[m.batch, m.num_sparse, m.emb_dim])?;
+        let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(2 + params.len());
+        inputs.push(&d);
+        inputs.push(&e);
+        inputs.extend(params.iter());
+        let mut result = self.predict.execute_b::<&PjRtBuffer>(&inputs)?;
+        let mut outs = result.pop().context("no replica outputs")?;
+        let logits = outs.pop().context("predict returned no outputs")?;
+        Ok(logits.to_literal_sync()?.to_vec::<f32>()?)
+    }
+
+    /// Copy MLP params to the host (checkpointing path only).
+    pub fn params_to_host(&self, params: &[PjRtBuffer]) -> Result<Vec<Vec<f32>>> {
+        params.iter()
+            .map(|p| Ok(p.to_literal_sync()?.to_vec::<f32>()?))
+            .collect()
+    }
+
+    /// Re-upload host copies as device buffers (restore path).
+    pub fn params_from_host(&self, host: &[Vec<f32>]) -> Vec<PjRtBuffer> {
+        host.iter()
+            .zip(&self.manifest.params)
+            .map(|(data, spec)| self.buffer(data, &spec.shape).expect("upload"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        std::path::Path::new("artifacts/mini/manifest.json").exists()
+    }
+
+    #[test]
+    fn mini_train_step_runs_and_learns_a_batch() -> Result<()> {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return Ok(());
+        }
+        let rt = Runtime::cpu()?;
+        let model = rt.load_model("artifacts", "mini")?;
+        let m = &model.manifest;
+        assert_eq!((m.batch, m.num_dense, m.num_sparse, m.emb_dim),
+                   (128, 13, 26, 8));
+
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        let dense: Vec<f32> = (0..m.batch * m.num_dense)
+            .map(|_| rng.f32() - 0.5).collect();
+        let emb: Vec<f32> = (0..m.batch * m.num_sparse * m.emb_dim)
+            .map(|_| 0.1 * (rng.f32() - 0.5)).collect();
+        let labels: Vec<f32> = (0..m.batch)
+            .map(|_| (rng.f64() < 0.5) as u32 as f32).collect();
+
+        let mut params = model.init_params(1);
+        let out1 = model.train_step(&dense, &emb, &labels, 0.1, &mut params)?;
+        assert!(out1.loss.is_finite());
+        assert_eq!(out1.emb_grad.len(), emb.len());
+
+        // apply the embedding SGD like the PS would, retrain same batch:
+        // loss must drop (params + embeddings both moved downhill)
+        let emb2: Vec<f32> = emb.iter().zip(&out1.emb_grad)
+            .map(|(e, g)| e - 0.1 * g).collect();
+        let out2 = model.train_step(&dense, &emb2, &labels, 0.1, &mut params)?;
+        assert!(out2.loss < out1.loss, "{} !< {}", out2.loss, out1.loss);
+        Ok(())
+    }
+
+    #[test]
+    fn predict_matches_across_param_roundtrip() -> Result<()> {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return Ok(());
+        }
+        let rt = Runtime::cpu()?;
+        let model = rt.load_model("artifacts", "mini")?;
+        let m = &model.manifest;
+        let params = model.init_params(3);
+        let dense = vec![0.25f32; m.batch * m.num_dense];
+        let emb = vec![0.01f32; m.batch * m.num_sparse * m.emb_dim];
+        let a = model.predict(&dense, &emb, &params)?;
+        // round-trip params through host copies (checkpoint path)
+        let host = model.params_to_host(&params)?;
+        let params2 = model.params_from_host(&host);
+        let b = model.predict(&dense, &emb, &params2)?;
+        assert_eq!(a, b);
+        assert_eq!(a.len(), m.batch);
+        Ok(())
+    }
+}

@@ -228,10 +228,49 @@ mod tests {
     }
 
     #[test]
-    fn exponential_mean() {
+    fn exponential_mean_and_variance() {
+        // Exp(mean m): E[X] = m, Var[X] = m²
         let mut rng = Rng::new(2);
         let xs: Vec<f64> = (0..100_000).map(|_| exponential(&mut rng, 3.0)).collect();
         assert!((stats::mean(&xs) - 3.0).abs() < 0.05);
+        let v = stats::variance(&xs);
+        assert!((v - 9.0).abs() / 9.0 < 0.05, "var {v} want 9");
+    }
+
+    #[test]
+    fn samplers_are_deterministic_under_fixed_seed() {
+        // the whole evaluation depends on seeded reproducibility: the same
+        // seed must give the same draw sequence for every sampler
+        for seed in [1u64, 42, 0xDEAD] {
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            let z = Zipf::new(1000, 1.1);
+            for _ in 0..200 {
+                assert_eq!(normal(&mut a), normal(&mut b));
+                assert_eq!(exponential(&mut a, 3.0), exponential(&mut b, 3.0));
+                assert_eq!(gamma(&mut a, 2.0, 14.0), gamma(&mut b, 2.0, 14.0));
+                assert_eq!(z.sample(&mut a), z.sample(&mut b));
+            }
+        }
+        // and different seeds diverge
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(8);
+        let same = (0..100)
+            .filter(|_| gamma(&mut a, 2.0, 14.0) == gamma(&mut b, 2.0, 14.0))
+            .count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn gamma_shape1_matches_exponential_moments() {
+        // shape 1 gamma IS the exponential (the memoryless hazard used for
+        // failure schedules): mean = scale, var = scale²
+        let mut rng = Rng::new(12);
+        let xs: Vec<f64> = (0..200_000).map(|_| gamma(&mut rng, 1.0, 28.0)).collect();
+        let m = stats::mean(&xs);
+        let v = stats::variance(&xs);
+        assert!((m - 28.0).abs() / 28.0 < 0.02, "mean {m}");
+        assert!((v - 28.0 * 28.0).abs() / (28.0 * 28.0) < 0.06, "var {v}");
     }
 
     #[test]

@@ -1,25 +1,28 @@
 //! End-to-end integration tests: artifact numerics vs the Python golden,
 //! and full training-system behaviour (learning, recovery semantics,
-//! overhead accounting) across strategies.
+//! overhead accounting) across strategies and cluster backends.
 //!
-//! Requires `make artifacts` to have run (the Makefile `test` target does).
+//! Runs hermetically on the native executor; the golden-numerics test
+//! additionally compares against the AOT artifacts when `make artifacts`
+//! has produced them (it skips otherwise).
 
 use std::collections::HashMap;
 use std::io::Read;
 
-use cpr::config::{preset, JobConfig, Strategy};
+use cpr::config::{preset, JobConfig, PsBackendKind, Strategy};
 use cpr::coordinator::{run_training, RunOptions, TrainReport};
 use cpr::failure::{uniform_schedule, FailureEvent};
 use cpr::runtime::{ModelExe, Runtime};
 use cpr::util::rng::Rng;
 
-// PjRtClient is Rc-based (not Sync), so each test thread builds its own
-// runtime + compiled model. The executables keep the client alive.
+// The pjrt runtime's client is Rc-based (not Sync), so each test thread
+// builds its own runtime + model. The native runtime synthesizes the model
+// ABI from the preset when no artifacts are on disk.
 fn load_model(preset_name: &str) -> ModelExe {
     Runtime::cpu()
-        .expect("PJRT CPU client")
+        .expect("runtime")
         .load_model("artifacts", preset_name)
-        .expect("artifacts missing — run `make artifacts` first")
+        .expect("loading model")
 }
 
 thread_local! {
@@ -102,6 +105,11 @@ fn assert_close(name: &str, got: &[f32], want: &[f32], atol: f32, rtol: f32) {
 /// (e.g. silently-elided large constants) that shape checks cannot see.
 #[test]
 fn golden_numerics_match_python() {
+    if !std::path::Path::new("artifacts/mini/golden.bin").exists() {
+        eprintln!("skipping: no AOT artifacts (run `make artifacts` to compare \
+                   against the Python golden)");
+        return;
+    }
     for preset_name in ["mini", "kaggle_like"] {
         let model = load_model(preset_name);
         let g = read_golden(&format!("artifacts/{preset_name}/golden.bin"));
@@ -298,6 +306,92 @@ fn adagrad_training_learns_too() {
     let r = run(&cfg, sched(31, 2, 1, cfg.cluster.t_total_h, n));
     assert!(r.final_auc > 0.60, "adagrad AUC {}", r.final_auc);
     assert!(!r.fell_back);
+}
+
+// ---------------------------------------------------------------------------
+// cluster backends + async checkpointing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn threaded_backend_matches_inproc_bit_exactly() {
+    // the acceptance bar for the threaded runtime: the same job, same
+    // seed, same failure schedule must produce IDENTICAL results —
+    // requests are reassembled in slot order and updates applied in
+    // sample order, so there is no nondeterminism to hide behind
+    let mut cfg = test_cfg(Strategy::CprSsu);
+    let n = cfg.cluster.n_emb_ps;
+    let schedule = sched(17, 3, 2, cfg.cluster.t_total_h, n);
+    let a = run(&cfg, schedule.clone());
+    cfg.cluster.backend = PsBackendKind::Threaded;
+    let b = run(&cfg, schedule);
+    assert_eq!(a.backend, "inproc");
+    assert_eq!(b.backend, "threaded");
+    assert_eq!(b.failures_seen, 3);
+    assert_eq!(a.final_auc, b.final_auc,
+               "final AUC diverged across backends");
+    assert_eq!(a.final_logloss, b.final_logloss,
+               "final logloss diverged across backends");
+    assert_eq!(a.pls, b.pls);
+    assert_eq!(a.steps_executed, b.steps_executed);
+}
+
+#[test]
+fn threaded_backend_full_recovery_rewind_is_equivalent() {
+    // exercises restore_all + step rewind through the pipeline on the
+    // threaded runtime: must still reproduce the clean model exactly
+    let mut cfg = test_cfg(Strategy::Full);
+    cfg.cluster.backend = PsBackendKind::Threaded;
+    let clean = run(&cfg, vec![]);
+    let n = cfg.cluster.n_emb_ps;
+    let failed = run(&cfg, sched(3, 2, n / 2, cfg.cluster.t_total_h, n));
+    assert_eq!(failed.failures_seen, 2);
+    assert_eq!(clean.final_auc, failed.final_auc,
+               "threaded full recovery must be bit-identical to clean");
+    // and the threaded clean run matches the inproc clean run too
+    let inproc_clean = run(&test_cfg(Strategy::Full), vec![]);
+    assert_eq!(clean.final_auc, inproc_clean.final_auc);
+}
+
+#[test]
+fn async_checkpoint_save_overlaps_a_training_step() {
+    use cpr::checkpoint::async_pipeline::CheckpointPipeline;
+    use cpr::checkpoint::CheckpointStore;
+    use cpr::data::{Batch, SyntheticDataset};
+    use cpr::embedding::{PsCluster, TableInfo};
+
+    with_mini(|model| {
+        let cfg = test_cfg(Strategy::Full);
+        let m = &model.manifest;
+        let tables: Vec<TableInfo> = cfg.data.table_rows.iter()
+            .map(|&rows| TableInfo { rows, dim: m.emb_dim }).collect();
+        let mut cluster = PsCluster::new(tables, cfg.cluster.n_emb_ps,
+                                         cfg.data.seed ^ 0xEB);
+        let dataset = SyntheticDataset::new(m.num_dense, &cfg.data);
+        let mut params = model.init_params(1);
+        // writer is artificially slow (400 ms per save): plenty of window
+        // for a real training step to land while the save is in flight
+        let pipeline = CheckpointPipeline::new(
+            CheckpointStore::initial(&cluster, vec![]),
+            None,
+            2,
+            std::time::Duration::from_millis(400),
+        ).unwrap();
+        pipeline.full_save(&cluster, vec![], 1, 128);
+        assert!(pipeline.in_flight() > 0, "save should be queued");
+        // one full gather → train_step → scatter, start to finish
+        let mut batch = Batch::zeros(m.batch, m.num_dense, m.num_sparse);
+        dataset.fill_train_batch(0, &mut batch);
+        let mut emb = vec![0.0f32; m.batch * m.num_sparse * m.emb_dim];
+        cluster.gather(&batch.indices, &mut emb);
+        let out = model.train_step(&batch.dense, &emb, &batch.labels, 0.05,
+                                   &mut params).unwrap();
+        cluster.sgd_update(&batch.indices, &out.emb_grad, 0.05);
+        assert!(pipeline.in_flight() > 0,
+                "the save must still be in flight after a full training \
+                 step — it overlapped without blocking");
+        pipeline.flush().unwrap();
+        assert_eq!(pipeline.in_flight(), 0);
+    });
 }
 
 #[test]

@@ -2,20 +2,26 @@
 //! (`cpr::bench`; criterion is unavailable in the offline image).
 //!
 //! Sections:
-//!   table1_*   — tracker time overheads (paper Table 1): SCAR vs MFU vs
-//!                SSU selection + record on a 1M-row table, r = 0.125
-//!   hotpath_*  — L3 coordinator primitives: PS gather/scatter, checkpoint
-//!                save/restore, AUC, synthetic data generation
-//!   pjrt_*     — L2 executables from Rust: train_step / predict latency,
-//!                and the full e2e step (gather + step + scatter)
+//!   table1_*          — tracker time overheads (paper Table 1): SCAR vs
+//!                       MFU vs SSU selection + record on a 1M-row table
+//!   hotpath_*         — L3 coordinator primitives: PS gather/scatter,
+//!                       checkpoint save/restore, AUC, data generation
+//!   backend_*         — inproc vs threaded PS runtimes at B=128/512/2048
+//!   trainer_scaling[] — end-to-end steps/sec at 1/2/4/8 data-parallel
+//!                       trainers on both backends
+//!   pjrt_*            — L2 executables from Rust: train_step / predict
+//!                       latency, and the full e2e step
 //!
+//! `cargo bench -- --test` runs every section in quick mode (tiny warmup
+//! and sampling budgets, shrunk training runs) — the CI bench-smoke step.
 //! Results are recorded in EXPERIMENTS.md §Perf.
 
 use cpr::bench::Bench;
 use cpr::checkpoint::tracker::{MfuTracker, ScarTracker, SsuTracker};
 use cpr::checkpoint::CheckpointStore;
 use cpr::cluster::{PsBackend, ThreadedCluster};
-use cpr::config::preset;
+use cpr::config::{preset, PsBackendKind};
+use cpr::coordinator::{run_training, RunOptions};
 use cpr::data::{Batch, SyntheticDataset};
 use cpr::embedding::{PsCluster, TableInfo};
 use cpr::metrics::auc;
@@ -24,10 +30,25 @@ use cpr::util::dist::Zipf;
 use cpr::util::rng::Rng;
 
 fn main() {
-    table1();
-    hotpath();
-    backend_comparison();
-    pjrt();
+    let quick = std::env::args().any(|a| a == "--test" || a == "--quick");
+    if quick {
+        println!("(quick mode: tiny budgets — numbers are smoke, not perf)");
+    }
+    table1(quick);
+    hotpath(quick);
+    backend_comparison(quick);
+    trainer_scaling(quick);
+    pjrt(quick);
+}
+
+/// A Bench with the section-appropriate budget.
+fn bench(name: &str, quick: bool) -> Bench {
+    let b = Bench::new(name);
+    if quick {
+        b.warmup_ms(5).measure_ms(20)
+    } else {
+        b
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -37,7 +58,7 @@ fn main() {
 /// Gather / apply_grads throughput of the two cluster runtimes at several
 /// batch sizes (mini-preset tables, 8 nodes, single-hot). The threaded
 /// backend pays per-request channel + routing cost; this quantifies it.
-fn backend_comparison() {
+fn backend_comparison(quick: bool) {
     println!("\n-- backend: inproc vs threaded PS runtimes (8 nodes, dim 16) --");
     let cfg = preset("mini").unwrap();
     let dim = 16usize;
@@ -47,24 +68,25 @@ fn backend_comparison() {
     let mut inproc = PsCluster::new(tables.clone(), 8, 7);
     let mut threaded = ThreadedCluster::new(tables.clone(), 8, 7);
     let mut rng = Rng::new(9);
-    for batch in [128usize, 512, 2048] {
+    let batches: &[usize] = if quick { &[128] } else { &[128, 512, 2048] };
+    for &batch in batches {
         let indices: Vec<u32> = (0..batch * t)
             .map(|i| rng.below(cfg.data.table_rows[i % t] as u64) as u32)
             .collect();
         let mut out = vec![0.0f32; batch * t * dim];
         let grads = vec![0.001f32; batch * t * dim];
         let slots = (batch * t) as u64;
-        Bench::new(&format!("backend_gather[inproc,B={batch}]"))
+        bench(&format!("backend_gather[inproc,B={batch}]"), quick)
             .throughput(slots)
             .run(|| PsBackend::gather(&inproc, &indices, &mut out));
-        Bench::new(&format!("backend_gather[threaded,B={batch}]"))
+        bench(&format!("backend_gather[threaded,B={batch}]"), quick)
             .throughput(slots)
             .run(|| threaded.gather(&indices, &mut out));
-        Bench::new(&format!("backend_apply_grads[inproc,B={batch}]"))
+        bench(&format!("backend_apply_grads[inproc,B={batch}]"), quick)
             .throughput(slots)
             .run(|| PsBackend::apply_grads(&mut inproc, &indices, 1, &grads, 0.01,
                                            cpr::embedding::EmbOptimizer::Sgd));
-        Bench::new(&format!("backend_apply_grads[threaded,B={batch}]"))
+        bench(&format!("backend_apply_grads[threaded,B={batch}]"), quick)
             .throughput(slots)
             .run(|| threaded.apply_grads(&indices, 1, &grads, 0.01,
                                          cpr::embedding::EmbOptimizer::Sgd));
@@ -72,12 +94,54 @@ fn backend_comparison() {
 }
 
 // ---------------------------------------------------------------------------
+// Trainer scaling — end-to-end steps/sec vs data-parallel trainer count
+// ---------------------------------------------------------------------------
+
+/// One full (tiny) training run per (backend, n_trainers) point: N trainer
+/// threads gathering concurrently from the shared PS, rank-ordered sparse
+/// updates, replica allreduce at every step barrier. Reported as global
+/// steps/sec and samples/sec (one global step = batch × N samples).
+fn trainer_scaling(quick: bool) {
+    println!("\n-- trainer_scaling: data-parallel steps/sec (mini-shaped job) --");
+    let base = preset("mini").unwrap();
+    let batch = base.model.batch;
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load_model("artifacts", "mini").unwrap();
+    for backend in [PsBackendKind::InProc, PsBackendKind::Threaded] {
+        for n in [1usize, 2, 4, 8] {
+            let mut cfg = base.clone();
+            cfg.cluster.backend = backend;
+            cfg.cluster.n_trainers = n;
+            // a multiple of batch × 8 divides every trainer count here;
+            // the eval split stays tiny so steps/sec reflects training,
+            // not the (n-independent) final evaluation
+            cfg.data.train_samples = batch * 8 * if quick { 1 } else { 8 };
+            cfg.data.eval_samples = batch * 2;
+            let t0 = std::time::Instant::now();
+            let r = run_training(&model, &cfg, &RunOptions::default())
+                .expect("trainer_scaling run");
+            let secs = t0.elapsed().as_secs_f64();
+            let samples = r.steps_executed * (batch * n) as u64;
+            println!(
+                "trainer_scaling[{},n={n}]  {} global steps in {:.3} s  \
+                 ({:.1} steps/s, {:.0} samples/s)",
+                r.backend,
+                r.steps_executed,
+                secs,
+                r.steps_executed as f64 / secs,
+                samples as f64 / secs,
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Table 1 — tracker time overhead
 // ---------------------------------------------------------------------------
 
-fn table1() {
+fn table1(quick: bool) {
     println!("\n-- table1: tracker time overhead (1M rows, dim 16, r=0.125) --");
-    let rows = 1_000_000usize;
+    let rows = if quick { 100_000usize } else { 1_000_000usize };
     let dim = 16usize;
     let k = rows / 8;
     let mask = vec![true];
@@ -89,25 +153,25 @@ fn table1() {
         (0..128 * 26).map(|_| zipf.sample(&mut rng) as u32).collect();
 
     let mut mfu = MfuTracker::new(&[rows], &mask);
-    Bench::new("table1_mfu_record_batch(3328 accesses)")
+    bench("table1_mfu_record_batch(3328 accesses)", quick)
         .throughput(accesses.len() as u64)
         .run(|| mfu.record_batch(&accesses, 1));
-    Bench::new("table1_mfu_top_k(select 125k of 1M)")
+    bench("table1_mfu_top_k(select r*N of N)", quick)
         .run(|| mfu.top_k(0, k));
 
     let mut ssu = SsuTracker::new(&[k], &mask, 2, 3);
-    Bench::new("table1_ssu_record_batch(3328 accesses)")
+    bench("table1_ssu_record_batch(3328 accesses)", quick)
         .throughput(accesses.len() as u64)
         .run(|| ssu.record_batch(&accesses, 1));
     ssu.record_batch(&accesses, 1);
-    Bench::new("table1_ssu_drain")
+    bench("table1_ssu_drain", quick)
         .run(|| {
             ssu.record_batch(&accesses, 1);
             ssu.drain(0)
         });
 
     let scar = ScarTracker::new(&cluster, &mask);
-    Bench::new("table1_scar_top_k(select 125k of 1M, scans 16 f32/row)")
+    bench("table1_scar_top_k(select r*N of N, scans 16 f32/row)", quick)
         .run(|| scar.top_k(&cluster, 0, k));
     println!("(paper Table 1: SCAR ≈ O(N log N), MFU ≈ O(N log N), SSU ≈ O(N);\n \
               this impl uses O(N) select_nth for SCAR/MFU — see §Perf)");
@@ -117,7 +181,7 @@ fn table1() {
 // L3 hot paths
 // ---------------------------------------------------------------------------
 
-fn hotpath() {
+fn hotpath(quick: bool) {
     println!("\n-- hotpath: coordinator primitives (mini preset shapes) --");
     let cfg = preset("mini").unwrap();
     let dim = cfg.model.emb_dim;
@@ -131,33 +195,33 @@ fn hotpath() {
     let mut emb = vec![0.0f32; cfg.model.batch * cfg.model.num_sparse * dim];
     let grads = vec![0.001f32; emb.len()];
 
-    Bench::new("hotpath_data_fill_batch(128x(13+26))")
+    bench("hotpath_data_fill_batch(128x(13+26))", quick)
         .throughput(cfg.model.batch as u64)
         .run(|| ds.fill_train_batch(12800, &mut batch));
-    Bench::new("hotpath_ps_gather(128x26xd16)")
+    bench("hotpath_ps_gather(128x26xd16)", quick)
         .throughput((cfg.model.batch * cfg.model.num_sparse) as u64)
         .run(|| cluster.gather(&batch.indices, &mut emb));
-    Bench::new("hotpath_ps_sgd_update(128x26xd16)")
+    bench("hotpath_ps_sgd_update(128x26xd16)", quick)
         .throughput((cfg.model.batch * cfg.model.num_sparse) as u64)
         .run(|| cluster.sgd_update(&batch.indices, &grads, 0.01));
 
     let mut store = CheckpointStore::initial(&cluster, vec![]);
-    Bench::new("hotpath_checkpoint_full_save(77k rows)")
+    bench("hotpath_checkpoint_full_save(77k rows)", quick)
         .throughput(cluster.total_params() as u64)
         .run(|| store.full_save(&cluster, vec![], 1, 128));
-    Bench::new("hotpath_checkpoint_restore_node")
+    bench("hotpath_checkpoint_restore_node", quick)
         .run(|| store.restore_node(&mut cluster, 3));
 
     let mut rng = Rng::new(5);
     let scores: Vec<f32> = (0..50_000).map(|_| rng.f32()).collect();
     let labels: Vec<f32> = (0..50_000)
         .map(|_| (rng.f64() < 0.5) as u32 as f32).collect();
-    Bench::new("hotpath_auc(50k samples)")
+    bench("hotpath_auc(50k samples)", quick)
         .throughput(50_000)
         .run(|| auc(&scores, &labels));
 
     let zipf = Zipf::new(1_000_000, 1.1);
-    Bench::new("hotpath_zipf_sample")
+    bench("hotpath_zipf_sample", quick)
         .run(|| zipf.sample(&mut rng));
 }
 
@@ -165,7 +229,7 @@ fn hotpath() {
 // PJRT executables (requires `make artifacts`)
 // ---------------------------------------------------------------------------
 
-fn pjrt() {
+fn pjrt(quick: bool) {
     if !std::path::Path::new("artifacts/mini/manifest.json").exists() {
         println!("\n-- pjrt: SKIPPED (run `make artifacts`) --");
         return;
@@ -187,17 +251,17 @@ fn pjrt() {
         cluster.gather(&batch.indices, &mut emb);
         let mut params = model.init_params(1);
 
-        Bench::new(&format!("pjrt_train_step[{preset_name}]"))
+        bench(&format!("pjrt_train_step[{preset_name}]"), quick)
             .throughput(m.batch as u64)
             .run(|| {
                 model.train_step(&batch.dense, &emb, &batch.labels, 0.05,
                                  &mut params).unwrap()
             });
-        Bench::new(&format!("pjrt_predict[{preset_name}]"))
+        bench(&format!("pjrt_predict[{preset_name}]"), quick)
             .throughput(m.batch as u64)
             .run(|| model.predict(&batch.dense, &emb, &params).unwrap());
         let mut step_id = 0u64;
-        Bench::new(&format!("pjrt_e2e_step[{preset_name}] gather+step+scatter"))
+        bench(&format!("pjrt_e2e_step[{preset_name}] gather+step+scatter"), quick)
             .throughput(m.batch as u64)
             .run(|| {
                 ds.fill_train_batch(step_id * m.batch as u64, &mut batch);

@@ -1,10 +1,17 @@
 //! Quickstart: the smallest end-to-end use of the CPR library.
 //!
 //! Loads the AOT-compiled DLRM (L2/L1 artifacts), trains it for a short
-//! single-epoch job on the synthetic click log with CPR-SSU checkpointing
-//! and two injected Emb PS failures, and prints the loss curve + final AUC.
+//! single-epoch job on the synthetic click log with CPR-SSU checkpointing,
+//! two data-parallel trainers, and two injected Emb PS failures, then
+//! prints the loss curve + final AUC.
 //!
 //!     make artifacts && cargo run --release --example quickstart
+//!
+//! The equivalent CLI run (the `--trainers N` flag picks the data-parallel
+//! trainer count; `train_samples` must divide by `batch × N`):
+//!
+//!     cargo run --release --bin cpr -- train --preset mini \
+//!         --strategy cpr-ssu --trainers 2 --backend threaded --failures 2
 
 use anyhow::Result;
 
@@ -18,8 +25,9 @@ fn main() -> Result<()> {
     // 1. a job config: model architecture + synthetic dataset + emulated
     //    cluster constants. Presets mirror the paper's setups.
     let mut cfg = preset("mini")?;
-    cfg.data.train_samples = 64_000; // 500 steps — keep the demo snappy
+    cfg.data.train_samples = 64_000; // 250 global steps at 2 trainers
     cfg.data.eval_samples = 16_000;
+    cfg.cluster.n_trainers = 2; // two data-parallel trainer threads
     cfg.checkpoint.strategy = Strategy::CprSsu;
     cfg.checkpoint.target_pls = 0.1;
 

@@ -90,6 +90,11 @@ pub struct ScalePoint {
 /// waits — so its effective cost also scales 1/n there. This is exactly the
 /// paper's argument that "the portion of the updates lost decreases with
 /// the number of nodes."
+///
+/// The job's `n_trainers` (from `base`) rides along at every sweep point:
+/// trainers join the failure pool (MTBF scales with N_emb + N_tr total
+/// machines) and the PLS-chosen interval carries the trainer share (see
+/// `pls::plan`), so Fig. 13 projections reflect trainer count.
 pub fn scalability_sweep(
     base: &ClusterConfig,
     target_pls: f64,
@@ -97,15 +102,17 @@ pub fn scalability_sweep(
     p_per_hour: f64,
     node_counts: &[usize],
 ) -> Vec<ScalePoint> {
+    let n_tr = base.n_trainers;
     node_counts
         .iter()
         .map(|&n| {
             let t_fail = match model {
                 FailureModel::LinearMtbf => {
-                    base.t_fail_h * base.n_emb_ps as f64 / n as f64
+                    base.t_fail_h * (base.n_emb_ps + n_tr) as f64
+                        / (n + n_tr) as f64
                 }
                 FailureModel::IndependentP => {
-                    1.0 / (1.0 - (1.0 - p_per_hour).powi(n as i32))
+                    1.0 / (1.0 - (1.0 - p_per_hour).powi((n + n_tr) as i32))
                 }
             };
             let scale = base.n_emb_ps as f64 / n as f64;

@@ -43,13 +43,55 @@ impl Ctx {
         Ok(cfg)
     }
 
+    /// Write the CSV and a JSON mirror (`<name>.json`) of the same table —
+    /// CI uploads the JSON files as per-PR workflow artifacts.
     fn write_csv(&self, name: &str, content: &str) -> Result<()> {
         std::fs::create_dir_all(&self.out_dir)?;
         let path = format!("{}/{}", self.out_dir, name);
         std::fs::write(&path, content)?;
         eprintln!("[repro] wrote {path}");
+        let json_name = name.strip_suffix(".csv").unwrap_or(name);
+        let json_path = format!("{}/{json_name}.json", self.out_dir);
+        std::fs::write(&json_path, csv_to_json(content))?;
+        eprintln!("[repro] wrote {json_path}");
         Ok(())
     }
+}
+
+/// Minimal CSV → JSON table conversion: `{"columns": [...], "rows": [[...]]}`.
+/// Numeric cells become JSON numbers, everything else a string (our CSVs
+/// contain no quotes/commas inside cells).
+fn csv_to_json(csv: &str) -> String {
+    let mut lines = csv.lines();
+    let columns: Vec<&str> = lines.next().unwrap_or("").split(',').collect();
+    let mut out = String::from("{\"columns\":[");
+    for (i, c) in columns.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{c}\""));
+    }
+    out.push_str("],\"rows\":[");
+    let mut first_row = true;
+    for line in lines.filter(|l| !l.is_empty()) {
+        if !first_row {
+            out.push(',');
+        }
+        first_row = false;
+        out.push('[');
+        for (i, cell) in line.split(',').enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            match cell.parse::<f64>() {
+                Ok(v) if v.is_finite() => out.push_str(cell),
+                _ => out.push_str(&format!("\"{cell}\"")),
+            }
+        }
+        out.push(']');
+    }
+    out.push_str("]}");
+    out
 }
 
 fn sched(seed: u64, n: usize, t_total: f64, n_nodes: usize, victims: usize)
@@ -72,7 +114,7 @@ fn real_main() -> Result<()> {
         .opt("out", "results", "output directory for CSV")
         .parse(&args)?;
     let Some(exp) = cli.positionals().first().cloned() else {
-        bail!("usage: repro_figs <fig2|fig3|fig4|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|table1|all>");
+        bail!("usage: repro_figs <fig2|fig3|fig4|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|table1|trainers|all>");
     };
     let ctx = Ctx {
         rt: Runtime::cpu()?,
@@ -92,6 +134,7 @@ fn real_main() -> Result<()> {
         "fig12" => fig12(&ctx)?,
         "fig13" => fig13(&ctx)?,
         "table1" => table1(&ctx)?,
+        "trainers" => trainers(&ctx)?,
         "ablate" => ablate(&ctx)?,
         "all" => {
             fig2(&ctx)?;
@@ -106,6 +149,7 @@ fn real_main() -> Result<()> {
             fig12(&ctx)?;
             fig13(&ctx)?;
             table1(&ctx)?;
+            trainers(&ctx)?;
             ablate(&ctx)?;
         }
         other => bail!("unknown experiment {other:?}"),
@@ -138,6 +182,7 @@ fn fig2(ctx: &Ctx) -> Result<()> {
         .map(|&f| FailureEvent {
             time_h: f * cfg.cluster.t_total_h,
             victims: rng.sample_distinct(n, n / 2),
+            trainer_victims: vec![],
         })
         .collect();
     let failed = run_training(&model, &cfg, &RunOptions {
@@ -299,14 +344,19 @@ fn fig7(ctx: &Ctx) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 fn fig8(ctx: &Ctx) -> Result<()> {
-    println!("\n== Fig. 8 — production-scale setup (18 Emb PS, 10 h) ==");
+    println!("\n== Fig. 8 — production-scale setup (20 trainers + 18 Emb PS, 10 h) ==");
     let model = ctx.model("mini")?;
     let mut cfg = ctx.cfg("mini")?;
     // the paper's production run: 20 trainers + 18 Emb PS, 10 h job,
     // full saves every 2 h, CPR-vanilla target PLS 0.05; one failure near
-    // the end killing 25% of the Emb PS.
+    // the end killing 25% of the Emb PS. The 20 trainers are REAL here —
+    // 20 data-parallel worker threads hammering the shared PS.
     cfg.cluster.n_emb_ps = 18;
     cfg.cluster.n_trainers = 20;
+    // one global step consumes batch × 20 samples; round the epoch down
+    // to a whole number of global steps
+    let global = cfg.model.batch * cfg.cluster.n_trainers;
+    cfg.data.train_samples = (cfg.data.train_samples / global).max(1) * global;
     cfg.cluster.t_total_h = 10.0;
     cfg.cluster.t_fail_h = 10.0;
     // paper's decomposition of the 12.5%: ~10% lost computation, ~2%
@@ -318,8 +368,9 @@ fn fig8(ctx: &Ctx) -> Result<()> {
     let schedule = vec![FailureEvent {
         time_h: 9.0, // just before the 10-h mark; last full ckpt at 8 h
         victims: (0..18).step_by(4).take(4).collect(), // ~25% of 18
+        trainer_victims: vec![],
     }];
-    let log_every = (cfg.data.train_samples / cfg.model.batch / 20).max(1);
+    let log_every = (cfg.data.train_samples / global / 20).max(1);
     let mut csv = String::from("strategy,step,loss\n");
     for strategy in [Strategy::Full, Strategy::CprVanilla] {
         cfg.checkpoint.strategy = strategy.clone();
@@ -493,6 +544,53 @@ fn fig13(ctx: &Ctx) -> Result<()> {
     }
     println!("(paper: full recovery overhead grows with nodes, CPR's shrinks)");
     ctx.write_csv("fig13.csv", &csv)
+}
+
+// ---------------------------------------------------------------------------
+// Trainer scaling — steps/sec vs trainer count on both PS backends
+// ---------------------------------------------------------------------------
+
+/// Data-parallel trainer scaling: the same (scaled) mini job at 1/2/4
+/// trainers on the inproc and threaded backends, reporting global
+/// steps/sec and samples/sec. This is the run CI uploads per-PR
+/// (`trainer_scaling.json`); `cargo bench` has the denser
+/// `trainer_scaling[...]` rows at 1/2/4/8.
+fn trainers(ctx: &Ctx) -> Result<()> {
+    use cpr::config::PsBackendKind;
+    println!("\n== trainers — data-parallel scaling (mini, both backends) ==");
+    let model = ctx.model("mini")?;
+    let base = ctx.cfg("mini")?;
+    let mut csv = String::from(
+        "backend,n_trainers,global_steps,samples,steps_per_sec,samples_per_sec,auc\n");
+    println!("{:<9} {:>9} {:>7} {:>9} {:>11} {:>13} {:>8}",
+             "backend", "trainers", "steps", "samples", "steps/s", "samples/s", "AUC");
+    for backend in [PsBackendKind::InProc, PsBackendKind::Threaded] {
+        for n in [1usize, 2, 4] {
+            let mut cfg = base.clone();
+            cfg.cluster.backend = backend;
+            cfg.cluster.n_trainers = n;
+            // every trainer count must divide the stream: round to a
+            // multiple of batch × 4 (covers 1/2/4)
+            let unit = cfg.model.batch * 4;
+            cfg.data.train_samples = (cfg.data.train_samples / unit).max(1) * unit;
+            // keep the run training-dominated: wall_secs includes the
+            // final evaluation, which is constant in n and would compress
+            // the scaling curve if it were comparable to the train phase
+            cfg.data.eval_samples = cfg.model.batch * 2;
+            let r = run_training(&model, &cfg, &RunOptions::default())?;
+            let steps_per_sec = r.steps_executed as f64 / r.wall_secs;
+            let samples = r.steps_executed * (cfg.model.batch * n) as u64;
+            let samples_per_sec = samples as f64 / r.wall_secs;
+            println!("{:<9} {:>9} {:>7} {:>9} {:>11.2} {:>13.0} {:>8.5}",
+                     r.backend, n, r.steps_executed, samples, steps_per_sec,
+                     samples_per_sec, r.final_auc);
+            csv.push_str(&format!("{},{n},{},{samples},{steps_per_sec},{samples_per_sec},{}\n",
+                                  r.backend, r.steps_executed, r.final_auc));
+        }
+    }
+    println!("(the N = 1 rows are bit-identical to the pre-refactor \
+              single-trainer path; see tests/integration.rs)");
+    ctx.write_csv("trainer_scaling.csv", &csv)
 }
 
 // ---------------------------------------------------------------------------

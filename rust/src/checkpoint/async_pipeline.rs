@@ -45,6 +45,8 @@ enum Msg {
     Mark { mlp: Vec<Vec<f32>>, step: u64, samples: u64 },
     GetNode { node: usize, reply: mpsc::Sender<NodeSnapshot> },
     GetStore { reply: mpsc::Sender<CheckpointStore> },
+    /// position marker + dense params only — no mirror clone
+    GetMark { reply: mpsc::Sender<(Vec<Vec<f32>>, u64, u64)> },
     Flush { ack: mpsc::Sender<()> },
 }
 
@@ -112,6 +114,10 @@ fn writer_loop(mut ctx: WriterCtx, rx: Receiver<Msg>) {
             }
             Msg::GetStore { reply } => {
                 let _ = reply.send(ctx.store.clone());
+            }
+            Msg::GetMark { reply } => {
+                let _ = reply.send((ctx.store.mlp.clone(), ctx.store.step,
+                                    ctx.store.samples));
             }
             Msg::Flush { ack } => {
                 let _ = ack.send(());
@@ -229,6 +235,17 @@ impl CheckpointPipeline {
         self.send(Msg::GetStore { reply: reply_tx });
         let store = reply_rx.recv().expect("checkpoint writer died");
         store.restore_all(backend)
+    }
+
+    /// The last marked position (mlp, step, samples) — read from the
+    /// writer's mirror without touching the cluster and without cloning
+    /// the (potentially huge) embedding mirror. Used by trainer-loss
+    /// recovery when only the dense replica must reload (the Emb PS keeps
+    /// its progress).
+    pub fn marked_state(&self) -> (Vec<Vec<f32>>, u64, u64) {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.send(Msg::GetMark { reply: reply_tx });
+        reply_rx.recv().expect("checkpoint writer died")
     }
 
     /// Content saves submitted but not yet applied by the writer.
@@ -350,6 +367,20 @@ mod tests {
         assert_eq!(mlp, vec![vec![9.0]]);
         assert_eq!((step, samples), (80, 10240));
         assert_eq!(c.snapshot_node(1).shards, golden.shards);
+    }
+
+    #[test]
+    fn marked_state_reads_position_without_touching_cluster() {
+        let mut c = cluster();
+        let p = pipeline(&c, 0);
+        perturb(&mut c, 10);
+        let live = c.snapshot_node(0);
+        p.full_save(&c, vec![vec![4.25]], 7, 896);
+        let (mlp, step, samples) = p.marked_state();
+        assert_eq!(mlp, vec![vec![4.25]]);
+        assert_eq!((step, samples), (7, 896));
+        assert_eq!(c.snapshot_node(0).shards, live.shards,
+                   "marked_state must not mutate the cluster");
     }
 
     #[test]

@@ -407,12 +407,12 @@ mod tests {
         let mut store = CheckpointStore::initial(&c, vec![]);
         let opt = EmbOptimizer::RowAdagrad { eps: 1e-8 };
         // accumulate state on row 5 (node 5 % 3 == 2), checkpoint it
-        c.apply_grads(&[5, 2], 1, &vec![1.0f32; 8], 1.0, opt);
+        c.apply_grads(&[5, 2], 1, &[1.0f32; 8], 1.0, opt);
         store.full_save(&c, vec![], 1, 128);
         let (node, local) = c.route(5);
         let saved_acc = c.opt_shard(node, 0)[local];
         // more training, then fail the node and restore
-        c.apply_grads(&[5, 2], 1, &vec![1.0f32; 8], 1.0, opt);
+        c.apply_grads(&[5, 2], 1, &[1.0f32; 8], 1.0, opt);
         assert!(c.opt_shard(node, 0)[local] > saved_acc);
         store.restore_node(&mut c, node);
         assert_eq!(c.opt_shard(node, 0)[local], saved_acc,

@@ -23,6 +23,7 @@ pub mod threaded;
 pub use threaded::ThreadedCluster;
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 use crate::embedding::{init_value, shard_rows, EmbOptimizer, PsCluster, TableInfo};
 
@@ -117,7 +118,12 @@ impl StatCounters {
 /// an Emb PS cluster runtime. Row routing is fixed (global row `r` lives on
 /// node `r % n_nodes` at local row `r / n_nodes`) so checkpoints taken on
 /// one backend restore onto the other.
-pub trait PsBackend: Send {
+///
+/// `Send + Sync` because the data-parallel trainer runtime serves N
+/// trainer threads from one backend through [`SharedPs`]: read-path
+/// methods (`gather*`, `read_rows`, `snapshot_node`) take `&self` and run
+/// under concurrent read locks, mutating methods behind a write lock.
+pub trait PsBackend: Send + Sync {
     /// Short identifier for reports ("inproc" | "threaded").
     fn name(&self) -> &'static str;
 
@@ -182,6 +188,43 @@ pub trait PsBackend: Send {
     }
 
     fn stats(&self) -> BackendStats;
+}
+
+// ---------------------------------------------------------------------------
+// shared backend handle for concurrent trainers
+// ---------------------------------------------------------------------------
+
+/// A cloneable handle that lets many trainer threads drive one
+/// [`PsBackend`] concurrently: gathers (and every other `&self` method)
+/// run under a shared read lock — on the threaded backend the per-node
+/// workers genuinely interleave requests from different trainers — while
+/// sparse updates and control-plane operations (kill / respawn / restore)
+/// take the write lock. Determinism is the *caller's* contract: the
+/// trainer runtime orders `apply_grads` calls by trainer rank (see
+/// `crate::trainer::Turnstile`), so a run is reproducible even though the
+/// load is concurrent.
+pub struct SharedPs<B: PsBackend>(Arc<RwLock<B>>);
+
+impl<B: PsBackend> Clone for SharedPs<B> {
+    fn clone(&self) -> Self {
+        Self(Arc::clone(&self.0))
+    }
+}
+
+impl<B: PsBackend> SharedPs<B> {
+    pub fn new(backend: B) -> Self {
+        Self(Arc::new(RwLock::new(backend)))
+    }
+
+    /// Shared (read) access: gathers, row reads, snapshots.
+    pub fn read(&self) -> RwLockReadGuard<'_, B> {
+        self.0.read().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Exclusive (write) access: sparse updates, kill/respawn, restores.
+    pub fn write(&self) -> RwLockWriteGuard<'_, B> {
+        self.0.write().unwrap_or_else(PoisonError::into_inner)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -321,7 +364,7 @@ mod tests {
     #[test]
     fn read_rows_matches_read_row() {
         let mut c = cluster();
-        PsBackend::apply_grads(&mut c, &[4, 2], 1, &vec![0.3f32; 8], 1.0,
+        PsBackend::apply_grads(&mut c, &[4, 2], 1, &[0.3f32; 8], 1.0,
                                EmbOptimizer::RowAdagrad { eps: 1e-8 });
         let rows = vec![4u32, 0, 7];
         let (data, opt) = c.read_rows(0, &rows);
@@ -337,11 +380,11 @@ mod tests {
     #[test]
     fn snapshot_load_roundtrip() {
         let mut c = cluster();
-        PsBackend::apply_grads(&mut c, &[3, 1], 1, &vec![1.0f32; 8], 0.5,
+        PsBackend::apply_grads(&mut c, &[3, 1], 1, &[1.0f32; 8], 0.5,
                                EmbOptimizer::Sgd);
         let snap = c.snapshot_node(0);
         assert_eq!(snap.node, 0);
-        PsBackend::apply_grads(&mut c, &[3, 1], 1, &vec![1.0f32; 8], 0.5,
+        PsBackend::apply_grads(&mut c, &[3, 1], 1, &[1.0f32; 8], 0.5,
                                EmbOptimizer::Sgd);
         let after = c.snapshot_node(0);
         assert_ne!(snap, after);
@@ -352,7 +395,7 @@ mod tests {
     #[test]
     fn kill_wipes_to_init_and_stats_count() {
         let mut c = cluster();
-        PsBackend::apply_grads(&mut c, &[3, 1], 1, &vec![1.0f32; 8], 0.5,
+        PsBackend::apply_grads(&mut c, &[3, 1], 1, &[1.0f32; 8], 0.5,
                                EmbOptimizer::Sgd);
         c.kill_node(0); // row 3 lives on node 0 (3 % 3)
         c.respawn_node(0);
@@ -364,6 +407,35 @@ mod tests {
         assert_eq!(a, b);
         let s = PsBackend::stats(&c);
         assert_eq!((s.kills, s.respawns, s.applies), (1, 1, 1));
+    }
+
+    #[test]
+    fn shared_handle_serves_concurrent_gathers() {
+        // 4 threads gather through one SharedPs handle at once; every
+        // result must match the single-threaded reference, and a write
+        // (sparse update) afterwards must still go through.
+        let reference = cluster();
+        let idx = vec![0u32, 1, 10, 5, 3, 2];
+        let mut want = vec![0.0f32; 3 * 2 * 4];
+        PsBackend::gather(&reference, &idx, &mut want);
+        let shared = SharedPs::new(cluster());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let shared = shared.clone();
+                let idx = idx.clone();
+                let want = want.clone();
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let mut out = vec![0.0f32; 3 * 2 * 4];
+                        PsBackend::gather(&*shared.read(), &idx, &mut out);
+                        assert_eq!(out, want);
+                    }
+                });
+            }
+        });
+        PsBackend::apply_grads(&mut *shared.write(), &idx[..2], 1,
+                               &[0.1f32; 8], 1.0, EmbOptimizer::Sgd);
+        assert_eq!(PsBackend::stats(&*shared.read()).applies, 1);
     }
 
     #[test]

@@ -503,7 +503,7 @@ mod tests {
     #[test]
     fn reset_restores_init_values() {
         let mut c = ThreadedCluster::new(TABLES.to_vec(), 2, 13);
-        c.apply_grads(&[2, 2], 1, &vec![1.0f32; 8], 1.0, EmbOptimizer::Sgd);
+        c.apply_grads(&[2, 2], 1, &[1.0f32; 8], 1.0, EmbOptimizer::Sgd);
         c.reset_node_to_init(0); // row 2 lives on node 0
         let fresh = ThreadedCluster::new(TABLES.to_vec(), 2, 13);
         assert_eq!(c.snapshot_node(0), fresh.snapshot_node(0));

@@ -106,9 +106,12 @@ pub struct ClusterConfig {
     pub backend: PsBackendKind,
     /// number of embedding parameter-server nodes (paper: N_emb)
     pub n_emb_ps: usize,
-    /// number of MLP trainer nodes (data parallel; emulated only for
-    /// overhead accounting — the math is synchronous so 1 physical trainer
-    /// is exact, paper §5.1)
+    /// number of data-parallel MLP trainers (paper: N_tr; the production
+    /// job runs 20). This is the REAL trainer-thread count of the runtime
+    /// (`crate::trainer::TrainerPool`) — each trainer owns a model replica
+    /// and a disjoint stream shard — and also the trainer term in the PLS
+    /// controller's failure-share math. `train_samples` must divide by
+    /// `batch × n_trainers`.
     pub n_trainers: usize,
     /// emulated total training time, hours (paper: 56 h)
     pub t_total_h: f64,
@@ -253,7 +256,12 @@ fn cluster_emulation(n_emb_ps: usize) -> ClusterConfig {
     ClusterConfig {
         backend: PsBackendKind::InProc,
         n_emb_ps,
-        n_trainers: 8,
+        // presets default to one trainer so the out-of-the-box run is the
+        // paper's single-trainer emulation; the N = 1 driver path is
+        // bit-identical to the preserved reference loop (note the CPR
+        // controller's interval now carries this n_trainers term — see
+        // pls::plan). Scale with --trainers / [cluster] n_trainers.
+        n_trainers: 1,
         t_total_h: 56.0,
         t_fail_h: 28.0,
         o_save_h: 0.094,
@@ -465,6 +473,7 @@ mod tests {
             preset = "mini"
             [cluster]
             n_emb_ps = 4
+            n_trainers = 4
             t_fail_h = 14.0
             [checkpoint]
             strategy = "cpr-ssu"
@@ -473,10 +482,22 @@ mod tests {
             lr = 0.1
         "#).unwrap();
         assert_eq!(cfg.cluster.n_emb_ps, 4);
+        assert_eq!(cfg.cluster.n_trainers, 4);
         assert_eq!(cfg.cluster.t_fail_h, 14.0);
         assert_eq!(cfg.checkpoint.strategy, Strategy::CprSsu);
         assert_eq!(cfg.checkpoint.target_pls, 0.05);
         assert_eq!(cfg.train.lr, 0.1);
+    }
+
+    #[test]
+    fn presets_default_to_one_trainer() {
+        // the single-trainer default keeps preset runs bit-identical to
+        // the pre-refactor coordinator and divisibility trivially satisfied
+        for name in ["mini", "kaggle_like", "terabyte_like", "large_100m"] {
+            let cfg = preset(name).unwrap();
+            assert_eq!(cfg.cluster.n_trainers, 1, "{name}");
+            assert_eq!(cfg.data.train_samples % cfg.model.batch, 0, "{name}");
+        }
     }
 
     #[test]

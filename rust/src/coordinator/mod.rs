@@ -1,12 +1,24 @@
 //! The training coordinator — CPR's L3 contribution.
 //!
-//! Owns the whole emulated job: the train-step/predict executables (L2/L1
-//! artifacts or the native reference executor), the sharded Emb PS cluster,
-//! the synthetic dataset, the checkpoint manager with its priority
-//! trackers, the failure schedule, and the PLS controller. One call to
-//! [`run_training`] executes a full single-epoch job under a chosen
-//! [`Strategy`] and returns a [`TrainReport`] with model quality + the
-//! overhead ledger.
+//! Owns the whole emulated job: the N data-parallel trainer replicas
+//! (each a [`crate::trainer::TrainerPool`] worker thread with its own
+//! `ModelExe`), the sharded Emb PS cluster, the synthetic dataset, the
+//! checkpoint manager with its priority trackers, the failure schedule,
+//! and the PLS controller. One call to [`run_training`] executes a full
+//! single-epoch job under a chosen [`Strategy`] and returns a
+//! [`TrainReport`] with model quality + the overhead ledger.
+//!
+//! ## Multi-trainer driver
+//! `run_training` is a *driver* over the trainer pool: each global step,
+//! the N trainers gather concurrently from the shared [`PsBackend`]
+//! (behind a [`SharedPs`] read lock), hit a gather barrier, compute their
+//! local train step, apply sparse updates in rank order, and report back.
+//! The driver then performs the emulated allreduce (replica parameter
+//! averaging — exactly gradient averaging, and the identity at N = 1),
+//! feeds the access streams to the priority trackers in rank order, and
+//! handles saves and failures. The N = 1 path is bit-identical to the
+//! pre-refactor single-trainer loop, which is preserved in
+//! [`reference`] and asserted equal by the integration suite.
 //!
 //! ## Cluster backends
 //! The step loop is generic over [`PsBackend`]: `JobConfig.cluster.backend`
@@ -16,13 +28,30 @@
 //! backend its worker really dies and is joined), a blank replacement is
 //! respawned, and partial recovery restores its rows from the checkpoint
 //! mirror while the surviving nodes keep serving. Both backends produce
-//! bit-identical training trajectories.
+//! bit-identical training trajectories at any trainer count.
+//!
+//! ## Trainer failures
+//! `FailureEvent::trainer_victims` kills trainer worker threads (the
+//! thread really exits and is joined). Recovery matrix:
+//!
+//! * **partial, N > 1** — dense params are replicated, so the respawned
+//!   trainer re-joins from the survivors' replica at the next step
+//!   barrier; nothing is lost beyond the load/reschedule overheads.
+//! * **partial, N = 1** — no surviving replica: dense params reload
+//!   (stale) from the last checkpoint marker while the Emb PS keeps its
+//!   progress; no rewind, no PLS accrual (PLS counts lost *embedding*
+//!   updates).
+//! * **full** — everyone reloads from the checkpoint and training
+//!   rewinds, exactly like an Emb PS loss under full recovery.
 //!
 //! ## Asynchronous checkpointing
 //! Saves no longer stall the step loop: node/row snapshots are captured at
-//! the save step (the consistency point) and handed to the
-//! [`CheckpointPipeline`] writer thread, which applies them to the mirror
-//! and publishes durable files while training proceeds. A durable
+//! the save step and handed to the [`CheckpointPipeline`] writer thread,
+//! which applies them to the mirror and publishes durable files while
+//! training proceeds. Capture is a **cross-trainer consistency point**:
+//! it happens between global steps, when every trainer is quiesced at the
+//! step barrier (idle, waiting for the next step command), so a snapshot
+//! never interleaves with a half-applied sparse update. A durable
 //! checkpoint is only *published* once the writer has fsynced the data
 //! file and then the `LATEST` manifest (crash-consistency rule — see
 //! `checkpoint::disk`). Restores flow through the same FIFO channel, so
@@ -30,19 +59,24 @@
 //!
 //! ## Emulated clock
 //! Real training here takes minutes; the paper's jobs take days. Following
-//! the paper's emulation methodology (§5.1), each step advances an
-//! *emulated* clock by `t_total_h / total_steps`, failure events fire at
-//! emulated times, and checkpoint overheads are charged to an
-//! [`OverheadLedger`] from the production-calibrated constants — while the
-//! model/state effects of failures and recoveries are executed **for
-//! real** (workers killed, checkpoints restored, steps re-run).
+//! the paper's emulation methodology (§5.1), each global step advances an
+//! *emulated* clock by `t_total_h / total_steps` (one global step consumes
+//! `batch × n_trainers` samples), failure events fire at emulated times,
+//! and checkpoint overheads are charged to an [`OverheadLedger`] from the
+//! production-calibrated constants — while the model/state effects of
+//! failures and recoveries are executed **for real** (workers killed,
+//! checkpoints restored, steps re-run).
+
+pub mod reference;
+
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
 use crate::checkpoint::async_pipeline::CheckpointPipeline;
 use crate::checkpoint::tracker::{priority_mask, MfuTracker, ScarTracker, SsuTracker};
 use crate::checkpoint::CheckpointStore;
-use crate::cluster::{PsBackend, ThreadedCluster};
+use crate::cluster::{PsBackend, SharedPs, ThreadedCluster};
 use crate::config::{JobConfig, PsBackendKind, Strategy};
 use crate::data::{Batch, SyntheticDataset};
 use crate::embedding::{init_value, PsCluster, TableInfo};
@@ -50,6 +84,7 @@ use crate::failure::FailureEvent;
 use crate::metrics::{auc, logloss_from_logits, Curve, OverheadLedger};
 use crate::pls::{self, CprPlan, PlsAccumulator};
 use crate::runtime::{ModelExe, PjRtBuffer};
+use crate::trainer::{TrainerPool, TrainerStep};
 
 /// Per-row statistics for Fig. 6 (access count vs. update magnitude).
 #[derive(Clone, Debug)]
@@ -64,6 +99,8 @@ pub struct TrainReport {
     pub strategy: String,
     /// which PS backend executed the job ("inproc" | "threaded")
     pub backend: String,
+    /// data-parallel trainer count the job ran with
+    pub n_trainers: usize,
     pub final_auc: f64,
     pub final_logloss: f64,
     pub train_loss: Curve,
@@ -98,7 +135,14 @@ pub struct RunOptions {
 
 /// Run one emulated training job. `model` must be the compiled artifact
 /// whose manifest matches `cfg.model`. The Emb PS backend is selected by
-/// `cfg.cluster.backend`.
+/// `cfg.cluster.backend`, the data-parallel trainer count by
+/// `cfg.cluster.n_trainers`.
+///
+/// Contract: `cfg.artifacts_dir` + `cfg.model.preset` must name the SAME
+/// artifact as `model` — each trainer thread loads its own replica from
+/// there (the pjrt client is not `Sync`, so replicas cannot be cloned
+/// from the passed handle), while `model` itself performs evaluation.
+/// Every in-repo caller loads `model` from exactly those cfg fields.
 pub fn run_training(
     model: &ModelExe,
     cfg: &JobConfig,
@@ -122,40 +166,79 @@ pub fn run_training(
     }
 }
 
-fn run_training_core<B: PsBackend>(
+/// Emulated allreduce: elementwise mean over the N dense replicas. Every
+/// replica started the step from the same params, so averaging after one
+/// local SGD step equals gradient-averaged SGD; at N = 1 it is the
+/// identity, keeping the single-trainer path bit-exact.
+fn allreduce_mean(mut results: Vec<TrainerStep>) -> Vec<Vec<f32>> {
+    if results.len() == 1 {
+        return results.pop().unwrap().params; // N = 1: a true move, no copy
+    }
+    let n = results.len() as f64;
+    results[0]
+        .params
+        .iter()
+        .enumerate()
+        .map(|(p, p0)| {
+            p0.iter()
+                .enumerate()
+                .map(|(i, &v)| {
+                    let mut s = v as f64;
+                    for r in &results[1..] {
+                        s += r.params[p][i] as f64;
+                    }
+                    (s / n) as f32
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn run_training_core<B: PsBackend + 'static>(
     model: &ModelExe,
     cfg: &JobConfig,
     opts: &RunOptions,
-    mut cluster: B,
+    cluster: B,
 ) -> Result<TrainReport> {
     let m = &model.manifest;
     ensure!(m.batch == cfg.model.batch, "artifact batch mismatch");
     ensure!(m.num_sparse == cfg.model.num_sparse, "artifact num_sparse mismatch");
     ensure!(m.emb_dim == cfg.model.emb_dim, "artifact emb_dim mismatch");
+    let n_trainers = cfg.cluster.n_trainers.max(1);
     ensure!(
-        cfg.data.train_samples % m.batch == 0
-            && cfg.data.eval_samples % m.batch == 0,
-        "sample counts must be batch multiples"
+        cfg.data.train_samples % (m.batch * n_trainers) == 0,
+        "train samples must be a multiple of batch × n_trainers"
+    );
+    ensure!(
+        cfg.data.eval_samples % m.batch == 0,
+        "eval samples must be a batch multiple"
     );
 
     let wall_start = std::time::Instant::now();
     let strategy = cfg.checkpoint.strategy.clone();
     let n_emb = cfg.cluster.n_emb_ps;
     let batch = m.batch;
-    let total_steps = (cfg.data.train_samples / batch) as u64;
+    // one global step = one batch per trainer
+    let samples_per_step = (batch * n_trainers) as u64;
+    let total_steps = cfg.data.train_samples as u64 / samples_per_step;
     let dt_h = cfg.cluster.t_total_h / total_steps as f64;
 
     // --- build the job state ------------------------------------------------
     let dataset = SyntheticDataset::new(m.num_dense, &cfg.data);
-    let mut params: Vec<PjRtBuffer> = model.init_params(cfg.train.seed);
+    // the driver's host-side master copy of the dense params (what the
+    // emulated allreduce produces; trainers receive it as the step input)
+    let mut host_params: Vec<Vec<f32>> =
+        model.params_to_host(&model.init_params(cfg.train.seed))?;
+    let shared = SharedPs::new(cluster);
     // the async checkpoint pipeline owns the mirror store on its writer
     // thread; durable publication is enabled when a dir is configured
     let pipeline = CheckpointPipeline::new(
-        CheckpointStore::initial(&cluster, model.params_to_host(&params)?),
+        CheckpointStore::initial(&*shared.read(), host_params.clone()),
         cfg.checkpoint.dir.as_deref(),
         2,
         std::time::Duration::ZERO,
     )?;
+    let mut pool = TrainerPool::new(cfg, shared.clone());
     // the coordinator's view of the last position-marking save (the
     // pipeline applies it asynchronously; these are the submitted values)
     let mut marked_step: u64 = 0;
@@ -204,7 +287,9 @@ fn run_training_core<B: PsBackend>(
         _ => None,
     };
     let mut scar = match strategy {
-        Strategy::CprScar if priority => Some(ScarTracker::new(&cluster, &mask)),
+        Strategy::CprScar if priority => {
+            Some(ScarTracker::new(&*shared.read(), &mask))
+        }
         _ => None,
     };
     // Fig. 6 instrumentation: full access counters over every table
@@ -225,6 +310,20 @@ fn run_training_core<B: PsBackend>(
     let mut minor_count: u64 = 0;
 
     // --- failure schedule (consumed in order of useful-progress time) --------
+    // validate victim ids up front: schedules can come from hand-written
+    // trace CSVs, and an out-of-range rank would otherwise panic mid-run
+    for ev in &opts.schedule {
+        ensure!(
+            ev.victims.iter().all(|&v| v < n_emb),
+            "failure event at {:.2} h targets Emb PS node out of range (n_emb = {n_emb})",
+            ev.time_h
+        );
+        ensure!(
+            ev.trainer_victims.iter().all(|&t| t < n_trainers),
+            "failure event at {:.2} h targets trainer rank out of range (n_trainers = {n_trainers})",
+            ev.time_h
+        );
+    }
     let mut schedule = opts.schedule.clone();
     schedule.sort_by(|a, b| a.time_h.partial_cmp(&b.time_h).unwrap());
     let mut next_event = 0usize;
@@ -237,93 +336,93 @@ fn run_training_core<B: PsBackend>(
     let log_every = if opts.log_every == 0 { 50 } else { opts.log_every };
 
     let hotness = cfg.data.hotness;
-    let mut batch_buf =
-        Batch::zeros_hot(batch, m.num_dense, m.num_sparse, hotness);
-    let mut emb_buf = vec![0.0f32; batch * m.num_sparse * m.emb_dim];
     let mut step: u64 = 0;
     let mut steps_executed: u64 = 0;
 
     while step < total_steps {
-        // gather (pooled over hotness) → train step → scatter
-        dataset.fill_train_batch(step * batch as u64, &mut batch_buf);
-        cluster.gather_pooled(&batch_buf.indices, hotness, &mut emb_buf);
-        let out = model.train_step(
-            &batch_buf.dense,
-            &emb_buf,
-            &batch_buf.labels,
-            cfg.train.lr,
-            &mut params,
-        )?;
-        cluster.apply_grads(&batch_buf.indices, hotness, &out.emb_grad,
-                            cfg.train.emb_lr, cfg.train.emb_optimizer);
-
-        // trackers observe the access stream
-        if let Some(t) = mfu.as_mut() {
-            t.record_batch_hot(&batch_buf.indices, m.num_sparse, hotness);
+        // one global step: every trainer gathers concurrently, hits the
+        // gather barrier, computes on its replica, then applies its sparse
+        // update in rank order (see the trainer module)
+        let step_params = Arc::new(std::mem::take(&mut host_params));
+        let results = pool.step(step, step_params)?;
+        let mean_loss =
+            results.iter().map(|t| t.loss as f64).sum::<f64>() / n_trainers as f64;
+        // trackers observe the concatenated access stream in rank order
+        for res in &results {
+            if let Some(t) = mfu.as_mut() {
+                t.record_batch_hot(&res.indices, m.num_sparse, hotness);
+            }
+            if let Some(t) = ssu.as_mut() {
+                t.record_batch_hot(&res.indices, m.num_sparse, hotness);
+            }
+            if let Some(t) = stat_counts.as_mut() {
+                t.record_batch_hot(&res.indices, m.num_sparse, hotness);
+            }
         }
-        if let Some(t) = ssu.as_mut() {
-            t.record_batch_hot(&batch_buf.indices, m.num_sparse, hotness);
-        }
-        if let Some(t) = stat_counts.as_mut() {
-            t.record_batch_hot(&batch_buf.indices, m.num_sparse, hotness);
-        }
+        host_params = allreduce_mean(results);
 
         step += 1;
         steps_executed += 1;
         let clock_h = step as f64 * dt_h;
 
         if step % log_every as u64 == 0 || step == total_steps {
-            train_loss.push(step, out.loss as f64);
+            train_loss.push(step, mean_loss);
         }
         if opts.eval_every > 0 && step % opts.eval_every as u64 == 0 {
-            let (a, _) = evaluate(model, cfg, &dataset, &cluster, &params)?;
+            let params = model.params_from_host(&host_params);
+            let (a, _) = evaluate(model, cfg, &dataset, &*shared.read(), &params)?;
             eval_auc_curve.push(step, a);
         }
 
         // ---- checkpoint saves up to the current clock ----
-        // (captures happen here — the consistency point; the pipeline's
-        // writer thread applies and persists them while training goes on)
+        // (captures happen here — the cross-trainer consistency point:
+        // every trainer is quiesced at the step barrier, so no sparse
+        // update can interleave with the snapshot; the pipeline's writer
+        // thread applies and persists them while training goes on)
         while clock_h >= next_save_h && next_save_h <= cfg.cluster.t_total_h {
             minor_count += 1;
             if priority {
                 ledger.save_h += r * cfg.cluster.o_save_h;
-                for t in 0..cluster.tables().len() {
-                    if mask[t] {
-                        let rows_in_table = cluster.tables()[t].rows;
-                        let k = ((rows_in_table as f64 * r).ceil() as usize).max(1);
-                        let rows: Vec<u32> = if let Some(tr) = mfu.as_mut() {
-                            let sel = tr.top_k(t, k);
-                            tr.clear_rows(t, &sel);
-                            sel
-                        } else if let Some(tr) = ssu.as_mut() {
-                            tr.drain(t)
-                        } else if let Some(tr) = scar.as_mut() {
-                            tr.top_k(&cluster, t, k)
+                {
+                    let c = shared.read();
+                    for t in 0..c.tables().len() {
+                        if mask[t] {
+                            let rows_in_table = c.tables()[t].rows;
+                            let k = ((rows_in_table as f64 * r).ceil() as usize).max(1);
+                            let rows: Vec<u32> = if let Some(tr) = mfu.as_mut() {
+                                let sel = tr.top_k(t, k);
+                                tr.clear_rows(t, &sel);
+                                sel
+                            } else if let Some(tr) = ssu.as_mut() {
+                                tr.drain(t)
+                            } else if let Some(tr) = scar.as_mut() {
+                                tr.top_k(&*c, t, k)
+                            } else {
+                                unreachable!()
+                            };
+                            pipeline.save_rows(&*c, t, &rows);
+                            if let Some(tr) = scar.as_mut() {
+                                tr.mark_saved(&*c, t, &rows);
+                            }
                         } else {
-                            unreachable!()
-                        };
-                        pipeline.save_rows(&cluster, t, &rows);
-                        if let Some(tr) = scar.as_mut() {
-                            tr.mark_saved(&cluster, t, &rows);
+                            pipeline.save_table(&*c, t);
                         }
-                    } else {
-                        pipeline.save_table(&cluster, t);
                     }
                 }
                 if minor_count % minors_per_major == 0 {
-                    pipeline.mark_position(model.params_to_host(&params)?,
-                                           step, step * batch as u64);
+                    pipeline.mark_position(host_params.clone(), step,
+                                           step * samples_per_step);
                     marked_step = step;
-                    marked_samples = step * batch as u64;
+                    marked_samples = step * samples_per_step;
                     ledger.n_saves += 1;
                 }
             } else {
                 ledger.save_h += cfg.cluster.o_save_h;
                 ledger.n_saves += 1;
-                pipeline.full_save(&cluster, model.params_to_host(&params)?,
-                                   step, step * batch as u64);
+                pipeline.full_save(&*shared.read(), host_params.clone(), step,
+                                   step * samples_per_step);
                 marked_step = step;
-                marked_samples = step * batch as u64;
+                marked_samples = step * samples_per_step;
             }
             next_save_h += save_interval_h;
         }
@@ -336,61 +435,90 @@ fn run_training_core<B: PsBackend>(
             ledger.load_h += cfg.cluster.o_load_h;
             ledger.reschedule_h += cfg.cluster.o_res_h;
             if use_partial {
-                pls_acc.on_failure(
-                    step * batch as u64,
-                    marked_samples,
-                    cfg.data.train_samples as u64,
-                    n_emb,
-                    ev.victims.len(),
-                );
-                // live partial recovery: the victim dies (on the threaded
-                // backend its worker is joined), a blank node respawns,
-                // and the checkpoint mirror repopulates it — survivors
-                // keep their progress and keep serving throughout
-                for &v in &ev.victims {
-                    cluster.kill_node(v);
-                    cluster.respawn_node(v);
-                    pipeline.restore_node(&mut cluster, v);
+                if !ev.victims.is_empty() {
+                    pls_acc.on_failure(
+                        step * samples_per_step,
+                        marked_samples,
+                        cfg.data.train_samples as u64,
+                        n_emb,
+                        ev.victims.len(),
+                    );
+                    // live partial recovery: the victim dies (on the
+                    // threaded backend its worker is joined), a blank node
+                    // respawns, and the checkpoint mirror repopulates it —
+                    // survivors keep their progress and keep serving
+                    for &v in &ev.victims {
+                        {
+                            let mut c = shared.write();
+                            c.kill_node(v);
+                            c.respawn_node(v);
+                        }
+                        pipeline.restore_node(&mut *shared.write(), v);
+                    }
+                }
+                // trainer loss under partial recovery: the worker thread
+                // really dies; dense params are replicated, so the
+                // replacement re-joins from the survivors' replica at the
+                // next step barrier. With a single trainer there is no
+                // survivor: dense params reload (stale) from the last
+                // checkpoint marker while the Emb PS keeps its progress.
+                for &t in &ev.trainer_victims {
+                    pool.kill_trainer(t);
+                    pool.respawn_trainer(t);
+                }
+                if !ev.trainer_victims.is_empty() && n_trainers == 1 {
+                    let (mlp, _step, _samples) = pipeline.marked_state();
+                    host_params = mlp;
                 }
             } else {
                 // full recovery: everyone reloads, training rewinds
                 let t_last = marked_step as f64 * dt_h;
                 ledger.lost_h += (clock_h - t_last).max(0.0);
-                let (mlp, ckpt_step, _samples) = pipeline.restore_all(&mut cluster);
-                params = model.params_from_host(&mlp);
+                let (mlp, ckpt_step, _samples) =
+                    pipeline.restore_all(&mut *shared.write());
+                host_params = mlp;
                 step = ckpt_step;
+                for &t in &ev.trainer_victims {
+                    pool.kill_trainer(t);
+                    pool.respawn_trainer(t);
+                }
             }
         }
     }
+
+    // quiesce the pool before the final drain/eval
+    pool.stop();
 
     // drain the pipeline: every capture applied + published (surfaces any
     // writer IO error, like the old synchronous path did)
     pipeline.flush()?;
 
     // --- final evaluation --------------------------------------------------------
+    let params = model.params_from_host(&host_params);
     let (final_auc, final_logloss) =
-        evaluate(model, cfg, &dataset, &cluster, &params)?;
+        evaluate(model, cfg, &dataset, &*shared.read(), &params)?;
     eval_auc_curve.push(total_steps, final_auc);
 
     // --- Fig. 6 stats ---------------------------------------------------------------
     let row_stats = stat_counts.map(|counts| {
+        let c = shared.read();
         let mut rows = Vec::new();
         let dim = m.emb_dim;
-        for t in 0..cluster.tables().len() {
+        for t in 0..c.tables().len() {
             if !mask[t] {
                 continue; // report the large tables, like the paper
             }
-            let info = cluster.tables()[t];
+            let info = c.tables()[t];
             // one batched read per table (a per-row read_row would be a
             // channel round trip per row on the threaded backend)
             let ids: Vec<u32> = (0..info.rows as u32).collect();
-            let (data, _) = cluster.read_rows(t, &ids);
+            let (data, _) = c.read_rows(t, &ids);
             for rrow in 0..info.rows {
                 let cur = &data[rrow * dim..(rrow + 1) * dim];
                 let mut change = 0.0f64;
-                for (d, &c) in cur.iter().enumerate() {
+                for (d, &cv) in cur.iter().enumerate() {
                     let init = init_value(cfg.data.seed ^ 0xEB, t, rrow, d);
-                    change += ((c - init) as f64).powi(2);
+                    change += ((cv - init) as f64).powi(2);
                 }
                 rows.push((t, rrow as u32, counts.count(t, rrow as u32),
                            change.sqrt()));
@@ -399,9 +527,11 @@ fn run_training_core<B: PsBackend>(
         RowStats { rows }
     });
 
+    let backend = shared.read().name().to_string();
     Ok(TrainReport {
         strategy: strategy.name().to_string(),
-        backend: cluster.name().to_string(),
+        backend,
+        n_trainers,
         final_auc,
         final_logloss,
         train_loss,

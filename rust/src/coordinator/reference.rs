@@ -1,0 +1,335 @@
+//! The pre-refactor single-trainer step loop, preserved verbatim.
+//!
+//! When the coordinator was refactored into a driver over the
+//! data-parallel [`crate::trainer::TrainerPool`], this module kept the
+//! original inline loop (one trainer, one batch per step, no pool, no
+//! allreduce) as an executable specification: the integration suite runs
+//! the same job through both paths and asserts the N = 1 multi-trainer
+//! run is **bit-identical** (final AUC / logloss / PLS / loss curve) on
+//! both cluster backends. If the driver ever diverges from this loop at
+//! N = 1, that test fails.
+//!
+//! Differences from the driver are intentional and minimal:
+//! * exactly one trainer: params live in device buffers across steps,
+//!   there is no replica averaging;
+//! * [`crate::failure::FailureEvent::trainer_victims`] predates this
+//!   loop and is ignored (events still charge load/reschedule, exactly
+//!   as the pre-refactor code charged every event).
+
+use anyhow::{ensure, Result};
+
+use crate::checkpoint::async_pipeline::CheckpointPipeline;
+use crate::checkpoint::tracker::{priority_mask, MfuTracker, ScarTracker, SsuTracker};
+use crate::checkpoint::CheckpointStore;
+use crate::cluster::{PsBackend, ThreadedCluster};
+use crate::config::{JobConfig, PsBackendKind, Strategy};
+use crate::data::{Batch, SyntheticDataset};
+use crate::embedding::{init_value, PsCluster, TableInfo};
+use crate::metrics::{Curve, OverheadLedger};
+use crate::pls::{self, PlsAccumulator};
+use crate::runtime::{ModelExe, PjRtBuffer};
+
+use super::{evaluate, RowStats, RunOptions, TrainReport};
+
+/// Run one emulated training job through the preserved single-trainer
+/// loop. `cfg.cluster.n_trainers` is ignored (always 1).
+pub fn run_training_reference(
+    model: &ModelExe,
+    cfg: &JobConfig,
+    opts: &RunOptions,
+) -> Result<TrainReport> {
+    let tables: Vec<TableInfo> = cfg
+        .data
+        .table_rows
+        .iter()
+        .map(|&rows| TableInfo { rows, dim: model.manifest.emb_dim })
+        .collect();
+    let n_emb = cfg.cluster.n_emb_ps;
+    let seed = cfg.data.seed ^ 0xEB;
+    match cfg.cluster.backend {
+        PsBackendKind::InProc => {
+            run_reference_core(model, cfg, opts, PsCluster::new(tables, n_emb, seed))
+        }
+        PsBackendKind::Threaded => {
+            run_reference_core(model, cfg, opts, ThreadedCluster::new(tables, n_emb, seed))
+        }
+    }
+}
+
+fn run_reference_core<B: PsBackend>(
+    model: &ModelExe,
+    cfg: &JobConfig,
+    opts: &RunOptions,
+    mut cluster: B,
+) -> Result<TrainReport> {
+    let m = &model.manifest;
+    ensure!(m.batch == cfg.model.batch, "artifact batch mismatch");
+    ensure!(m.num_sparse == cfg.model.num_sparse, "artifact num_sparse mismatch");
+    ensure!(m.emb_dim == cfg.model.emb_dim, "artifact emb_dim mismatch");
+    ensure!(
+        cfg.data.train_samples % m.batch == 0
+            && cfg.data.eval_samples % m.batch == 0,
+        "sample counts must be batch multiples"
+    );
+
+    let wall_start = std::time::Instant::now();
+    let strategy = cfg.checkpoint.strategy.clone();
+    let n_emb = cfg.cluster.n_emb_ps;
+    let batch = m.batch;
+    let total_steps = (cfg.data.train_samples / batch) as u64;
+    let dt_h = cfg.cluster.t_total_h / total_steps as f64;
+
+    // --- build the job state ------------------------------------------------
+    let dataset = SyntheticDataset::new(m.num_dense, &cfg.data);
+    let mut params: Vec<PjRtBuffer> = model.init_params(cfg.train.seed);
+    let pipeline = CheckpointPipeline::new(
+        CheckpointStore::initial(&cluster, model.params_to_host(&params)?),
+        cfg.checkpoint.dir.as_deref(),
+        2,
+        std::time::Duration::ZERO,
+    )?;
+    let mut marked_step: u64 = 0;
+    let mut marked_samples: u64 = 0;
+
+    // --- the CPR controller decides the plan --------------------------------
+    let (plan, use_partial, mut t_save_h) = match strategy {
+        Strategy::Full => (None, false, cfg.cluster.t_save_full_h()),
+        Strategy::PartialNaive => (None, true, cfg.cluster.t_save_full_h()),
+        _ => {
+            let p = pls::plan(&cfg.cluster, cfg.checkpoint.target_pls);
+            let partial = p.use_partial;
+            let t = p.t_save_h;
+            (Some(p), partial, t)
+        }
+    };
+    if let Some(t) = cfg.checkpoint.t_save_override_h {
+        t_save_h = t;
+    }
+    let fell_back = matches!(
+        strategy,
+        Strategy::CprVanilla | Strategy::CprScar | Strategy::CprMfu | Strategy::CprSsu
+    ) && !use_partial;
+
+    // --- priority trackers ----------------------------------------------------
+    let priority = strategy.priority() && use_partial;
+    let mask = priority_mask(&cfg.data.table_rows, cfg.checkpoint.priority_tables);
+    let r = cfg.checkpoint.r;
+    let mut mfu = match strategy {
+        Strategy::CprMfu if priority => {
+            Some(MfuTracker::new(&cfg.data.table_rows, &mask))
+        }
+        _ => None,
+    };
+    let mut ssu = match strategy {
+        Strategy::CprSsu if priority => {
+            let caps: Vec<usize> = cfg
+                .data
+                .table_rows
+                .iter()
+                .map(|&n| ((n as f64 * r).ceil() as usize).max(1))
+                .collect();
+            Some(SsuTracker::new(&caps, &mask, cfg.checkpoint.ssu_period,
+                                 cfg.data.seed ^ 0x55))
+        }
+        _ => None,
+    };
+    let mut scar = match strategy {
+        Strategy::CprScar if priority => Some(ScarTracker::new(&cluster, &mask)),
+        _ => None,
+    };
+    let mut stat_counts = if opts.collect_row_stats {
+        Some(MfuTracker::new(&cfg.data.table_rows,
+                             &vec![true; cfg.data.table_rows.len()]))
+    } else {
+        None
+    };
+
+    // --- save cadence -----------------------------------------------------------
+    let save_interval_h = if priority { r * t_save_h } else { t_save_h };
+    let minors_per_major = if priority { (1.0 / r).round() as u64 } else { 1 };
+    let mut next_save_h = save_interval_h;
+    let mut minor_count: u64 = 0;
+
+    // --- failure schedule (consumed in order of useful-progress time) --------
+    let mut schedule = opts.schedule.clone();
+    schedule.sort_by(|a, b| a.time_h.partial_cmp(&b.time_h).unwrap());
+    let mut next_event = 0usize;
+
+    // --- main loop ----------------------------------------------------------------
+    let mut ledger = OverheadLedger::default();
+    let mut pls_acc = PlsAccumulator::new();
+    let mut train_loss = Curve::default();
+    let mut eval_auc_curve = Curve::default();
+    let log_every = if opts.log_every == 0 { 50 } else { opts.log_every };
+
+    let hotness = cfg.data.hotness;
+    let mut batch_buf =
+        Batch::zeros_hot(batch, m.num_dense, m.num_sparse, hotness);
+    let mut emb_buf = vec![0.0f32; batch * m.num_sparse * m.emb_dim];
+    let mut step: u64 = 0;
+    let mut steps_executed: u64 = 0;
+
+    while step < total_steps {
+        // gather (pooled over hotness) → train step → scatter
+        dataset.fill_train_batch(step * batch as u64, &mut batch_buf);
+        cluster.gather_pooled(&batch_buf.indices, hotness, &mut emb_buf);
+        let out = model.train_step(
+            &batch_buf.dense,
+            &emb_buf,
+            &batch_buf.labels,
+            cfg.train.lr,
+            &mut params,
+        )?;
+        cluster.apply_grads(&batch_buf.indices, hotness, &out.emb_grad,
+                            cfg.train.emb_lr, cfg.train.emb_optimizer);
+
+        // trackers observe the access stream
+        if let Some(t) = mfu.as_mut() {
+            t.record_batch_hot(&batch_buf.indices, m.num_sparse, hotness);
+        }
+        if let Some(t) = ssu.as_mut() {
+            t.record_batch_hot(&batch_buf.indices, m.num_sparse, hotness);
+        }
+        if let Some(t) = stat_counts.as_mut() {
+            t.record_batch_hot(&batch_buf.indices, m.num_sparse, hotness);
+        }
+
+        step += 1;
+        steps_executed += 1;
+        let clock_h = step as f64 * dt_h;
+
+        if step % log_every as u64 == 0 || step == total_steps {
+            train_loss.push(step, out.loss as f64);
+        }
+        if opts.eval_every > 0 && step % opts.eval_every as u64 == 0 {
+            let (a, _) = evaluate(model, cfg, &dataset, &cluster, &params)?;
+            eval_auc_curve.push(step, a);
+        }
+
+        // ---- checkpoint saves up to the current clock ----
+        while clock_h >= next_save_h && next_save_h <= cfg.cluster.t_total_h {
+            minor_count += 1;
+            if priority {
+                ledger.save_h += r * cfg.cluster.o_save_h;
+                for t in 0..cluster.tables().len() {
+                    if mask[t] {
+                        let rows_in_table = cluster.tables()[t].rows;
+                        let k = ((rows_in_table as f64 * r).ceil() as usize).max(1);
+                        let rows: Vec<u32> = if let Some(tr) = mfu.as_mut() {
+                            let sel = tr.top_k(t, k);
+                            tr.clear_rows(t, &sel);
+                            sel
+                        } else if let Some(tr) = ssu.as_mut() {
+                            tr.drain(t)
+                        } else if let Some(tr) = scar.as_mut() {
+                            tr.top_k(&cluster, t, k)
+                        } else {
+                            unreachable!()
+                        };
+                        pipeline.save_rows(&cluster, t, &rows);
+                        if let Some(tr) = scar.as_mut() {
+                            tr.mark_saved(&cluster, t, &rows);
+                        }
+                    } else {
+                        pipeline.save_table(&cluster, t);
+                    }
+                }
+                if minor_count % minors_per_major == 0 {
+                    pipeline.mark_position(model.params_to_host(&params)?,
+                                           step, step * batch as u64);
+                    marked_step = step;
+                    marked_samples = step * batch as u64;
+                    ledger.n_saves += 1;
+                }
+            } else {
+                ledger.save_h += cfg.cluster.o_save_h;
+                ledger.n_saves += 1;
+                pipeline.full_save(&cluster, model.params_to_host(&params)?,
+                                   step, step * batch as u64);
+                marked_step = step;
+                marked_samples = step * batch as u64;
+            }
+            next_save_h += save_interval_h;
+        }
+
+        // ---- failures that fire at/before the current clock ----
+        while next_event < schedule.len() && schedule[next_event].time_h <= clock_h {
+            let ev = schedule[next_event].clone();
+            next_event += 1;
+            ledger.n_failures += 1;
+            ledger.load_h += cfg.cluster.o_load_h;
+            ledger.reschedule_h += cfg.cluster.o_res_h;
+            if use_partial {
+                pls_acc.on_failure(
+                    step * batch as u64,
+                    marked_samples,
+                    cfg.data.train_samples as u64,
+                    n_emb,
+                    ev.victims.len(),
+                );
+                for &v in &ev.victims {
+                    cluster.kill_node(v);
+                    cluster.respawn_node(v);
+                    pipeline.restore_node(&mut cluster, v);
+                }
+            } else {
+                let t_last = marked_step as f64 * dt_h;
+                ledger.lost_h += (clock_h - t_last).max(0.0);
+                let (mlp, ckpt_step, _samples) = pipeline.restore_all(&mut cluster);
+                params = model.params_from_host(&mlp);
+                step = ckpt_step;
+            }
+        }
+    }
+
+    pipeline.flush()?;
+
+    // --- final evaluation --------------------------------------------------------
+    let (final_auc, final_logloss) =
+        evaluate(model, cfg, &dataset, &cluster, &params)?;
+    eval_auc_curve.push(total_steps, final_auc);
+
+    // --- Fig. 6 stats ---------------------------------------------------------------
+    let row_stats = stat_counts.map(|counts| {
+        let mut rows = Vec::new();
+        let dim = m.emb_dim;
+        for t in 0..cluster.tables().len() {
+            if !mask[t] {
+                continue;
+            }
+            let info = cluster.tables()[t];
+            let ids: Vec<u32> = (0..info.rows as u32).collect();
+            let (data, _) = cluster.read_rows(t, &ids);
+            for rrow in 0..info.rows {
+                let cur = &data[rrow * dim..(rrow + 1) * dim];
+                let mut change = 0.0f64;
+                for (d, &c) in cur.iter().enumerate() {
+                    let init = init_value(cfg.data.seed ^ 0xEB, t, rrow, d);
+                    change += ((c - init) as f64).powi(2);
+                }
+                rows.push((t, rrow as u32, counts.count(t, rrow as u32),
+                           change.sqrt()));
+            }
+        }
+        RowStats { rows }
+    });
+
+    Ok(TrainReport {
+        strategy: strategy.name().to_string(),
+        backend: cluster.name().to_string(),
+        n_trainers: 1,
+        final_auc,
+        final_logloss,
+        train_loss,
+        eval_auc: eval_auc_curve,
+        overhead_frac: ledger.fraction_of(cfg.cluster.t_total_h),
+        ledger,
+        pls: pls_acc.value(),
+        plan,
+        fell_back,
+        steps_executed,
+        failures_seen: next_event as u64,
+        wall_secs: wall_start.elapsed().as_secs_f64(),
+        row_stats,
+    })
+}

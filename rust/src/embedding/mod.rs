@@ -500,7 +500,7 @@ mod tests {
     fn reset_node_clears_optimizer_state() {
         let mut c = small_cluster(3);
         let opt = EmbOptimizer::RowAdagrad { eps: 1e-8 };
-        c.apply_grads(&[3, 3], 1, &vec![1.0f32; 8], 1.0, opt);
+        c.apply_grads(&[3, 3], 1, &[1.0f32; 8], 1.0, opt);
         let (node, local) = c.route(3);
         assert!(c.opt_shard(node, 0)[local] > 0.0);
         c.reset_node_to_init(node);

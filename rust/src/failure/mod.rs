@@ -11,13 +11,18 @@
 use crate::util::dist::{exponential, gamma};
 use crate::util::rng::Rng;
 
-/// One failure event inside an emulated training job.
+/// One failure event inside an emulated training job. A single event can
+/// strike Emb PS nodes, trainer replicas, or both (the paper's fleet
+/// analysis counts trainer failures alongside PS node loss).
 #[derive(Clone, Debug, PartialEq)]
 pub struct FailureEvent {
     /// emulated wall-clock time, hours from job start
     pub time_h: f64,
     /// Emb PS node ids cleared by this failure
     pub victims: Vec<usize>,
+    /// trainer ranks killed by this failure (their dense replicas are
+    /// lost; see the coordinator's trainer-failure recovery matrix)
+    pub trainer_victims: Vec<usize>,
 }
 
 /// Paper-style emulation schedule: `n_failures` failures at uniform random
@@ -35,6 +40,29 @@ pub fn uniform_schedule(
         .map(|_| FailureEvent {
             time_h: rng.f64() * t_total_h,
             victims: rng.sample_distinct(n_nodes, victims_per_failure),
+            trainer_victims: vec![],
+        })
+        .collect();
+    events.sort_by(|a, b| a.time_h.partial_cmp(&b.time_h).unwrap());
+    events
+}
+
+/// Trainer-loss schedule: `n_failures` events at uniform random times,
+/// each killing one uniformly-chosen trainer rank. Combine with
+/// [`uniform_schedule`] (concat + let the coordinator sort) to emulate a
+/// mixed PS + trainer failure mix.
+pub fn trainer_schedule(
+    rng: &mut Rng,
+    n_failures: usize,
+    t_total_h: f64,
+    n_trainers: usize,
+) -> Vec<FailureEvent> {
+    assert!(n_trainers >= 1);
+    let mut events: Vec<FailureEvent> = (0..n_failures)
+        .map(|_| FailureEvent {
+            time_h: rng.f64() * t_total_h,
+            victims: vec![],
+            trainer_victims: vec![rng.usize_below(n_trainers)],
         })
         .collect();
     events.sort_by(|a, b| a.time_h.partial_cmp(&b.time_h).unwrap());
@@ -53,7 +81,11 @@ pub fn hazard_schedule(
     let mut events = Vec::new();
     let mut t = exponential(rng, t_fail_h);
     while t < t_total_h {
-        events.push(FailureEvent { time_h: t, victims: vec![rng.usize_below(n_nodes)] });
+        events.push(FailureEvent {
+            time_h: t,
+            victims: vec![rng.usize_below(n_nodes)],
+            trainer_victims: vec![],
+        });
         t += exponential(rng, t_fail_h);
     }
     events
@@ -185,6 +217,28 @@ mod tests {
             v.sort_unstable();
             assert_eq!(v, vec![0, 1, 2, 3]);
         }
+    }
+
+    #[test]
+    fn trainer_schedule_shapes_and_determinism() {
+        forall(23, 100, |rng| {
+            let n_trainers = gen::usize_in(rng, 1, 16);
+            let k = gen::usize_in(rng, 0, 8);
+            let ev = trainer_schedule(rng, k, 56.0, n_trainers);
+            prop_assert!(ev.len() == k);
+            let mut prev = 0.0;
+            for e in &ev {
+                prop_assert!(e.time_h >= prev && e.time_h <= 56.0, "not sorted");
+                prev = e.time_h;
+                prop_assert!(e.victims.is_empty(), "PS victims on a trainer event");
+                prop_assert!(e.trainer_victims.len() == 1);
+                prop_assert!(e.trainer_victims[0] < n_trainers);
+            }
+            Ok(())
+        });
+        let a = trainer_schedule(&mut Rng::new(9), 5, 56.0, 4);
+        let b = trainer_schedule(&mut Rng::new(9), 5, 56.0, 4);
+        assert_eq!(a, b, "trainer schedules must be seed-deterministic");
     }
 
     #[test]

@@ -5,8 +5,8 @@
 //! (Maeng et al., 2020) as a three-layer Rust + JAX + Pallas system:
 //!
 //! * **L3 (this crate)** — the coordination contribution: an emulated
-//!   distributed DLRM training job (sharded Emb PS cluster, synchronous
-//!   trainer), checkpoint manager with full/partial recovery and the
+//!   distributed DLRM training job (sharded Emb PS cluster, N synchronous
+//!   data-parallel trainers), checkpoint manager with full/partial recovery and the
 //!   SCAR/MFU/SSU priority schemes, PLS-driven interval selection, failure
 //!   injection, and the paper's full evaluation harness.
 //! * **L2** — the DLRM forward/backward as a JAX graph, AOT-lowered to HLO
@@ -32,4 +32,5 @@ pub mod runtime;
 pub mod sim;
 pub mod testing;
 pub mod trace;
+pub mod trainer;
 pub mod util;

@@ -17,7 +17,7 @@ use anyhow::{bail, Result};
 
 use cpr::config::{preset, JobConfig, PsBackendKind, Strategy};
 use cpr::coordinator::{run_training, RunOptions, TrainReport};
-use cpr::failure::uniform_schedule;
+use cpr::failure::{trainer_schedule, uniform_schedule};
 use cpr::runtime::Runtime;
 use cpr::util::cli::Cli;
 use cpr::util::rng::Rng;
@@ -59,6 +59,9 @@ fn job_config_from(cli: &Cli) -> Result<JobConfig> {
     if !cli.get("n-emb").is_empty() {
         cfg.cluster.n_emb_ps = cli.get_usize("n-emb")?;
     }
+    if !cli.get("trainers").is_empty() {
+        cfg.cluster.n_trainers = cli.get_usize("trainers")?.max(1);
+    }
     if !cli.get("train-samples").is_empty() {
         cfg.data.train_samples = cli.get_usize("train-samples")?;
     }
@@ -76,10 +79,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .opt("backend", "", "Emb PS cluster runtime: inproc|threaded")
         .opt("target-pls", "", "CPR target PLS (default from config: 0.1)")
         .opt("n-emb", "", "number of Emb PS nodes")
+        .opt("trainers", "", "data-parallel trainer count (default from config: 1)")
         .opt("train-samples", "", "override training samples")
         .opt("eval-samples", "", "override eval samples")
-        .opt("failures", "0", "number of injected failures")
+        .opt("failures", "0", "number of injected Emb PS failures")
         .opt("fail-frac", "0.125", "fraction of Emb PS nodes lost per failure")
+        .opt("trainer-failures", "0", "number of injected trainer failures")
         .opt("seed", "7", "failure schedule seed")
         .opt("eval-every", "0", "eval AUC every n steps (0 = final only)")
         .opt("artifacts", "artifacts", "artifacts directory")
@@ -95,8 +100,10 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let victims = ((cfg.cluster.n_emb_ps as f64 * frac).round() as usize)
         .clamp(1, cfg.cluster.n_emb_ps);
     let mut rng = Rng::new(cli.get_u64("seed")?);
-    let schedule = uniform_schedule(&mut rng, n_failures, cfg.cluster.t_total_h,
-                                    cfg.cluster.n_emb_ps, victims);
+    let mut schedule = uniform_schedule(&mut rng, n_failures, cfg.cluster.t_total_h,
+                                        cfg.cluster.n_emb_ps, victims);
+    schedule.extend(trainer_schedule(&mut rng, cli.get_usize("trainer-failures")?,
+                                     cfg.cluster.t_total_h, cfg.cluster.n_trainers));
 
     let rt = Runtime::cpu()?;
     eprintln!("[cpr] PJRT platform: {}", rt.platform());
@@ -118,6 +125,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
 fn print_report(r: &TrainReport, t_total_h: f64) {
     println!("strategy            {}", r.strategy);
     println!("ps backend          {}", r.backend);
+    println!("trainers            {}", r.n_trainers);
     if let Some(p) = &r.plan {
         println!("cpr plan            t_save={:.2}h use_partial={} E[PLS]={:.4} \
                   est_overhead={:.2}% (full-recovery optimum: {:.2}%)",
@@ -148,15 +156,16 @@ fn cmd_plan(args: &[String]) -> Result<()> {
         .opt("strategy", "", "(accepted for symmetry; unused)")
         .opt("target-pls", "", "target PLS")
         .opt("n-emb", "", "number of Emb PS nodes")
+        .opt("trainers", "", "data-parallel trainer count (failure-share term)")
         .opt("train-samples", "", "")
         .opt("eval-samples", "", "")
         .parse(args)?;
     let cfg = job_config_from(&cli)?;
     let p = cpr::pls::plan(&cfg.cluster, cfg.checkpoint.target_pls);
     let t = cfg.cluster.t_total_h;
-    println!("cluster: N_emb={} T_total={:.0}h T_fail={:.1}h O_save={:.3}h \
+    println!("cluster: N_emb={} N_tr={} T_total={:.0}h T_fail={:.1}h O_save={:.3}h \
               O_load={:.3}h O_res={:.3}h",
-             cfg.cluster.n_emb_ps, t, cfg.cluster.t_fail_h,
+             cfg.cluster.n_emb_ps, cfg.cluster.n_trainers, t, cfg.cluster.t_fail_h,
              cfg.cluster.o_save_h, cfg.cluster.o_load_h, cfg.cluster.o_res_h);
     println!("target PLS          {:.3}", cfg.checkpoint.target_pls);
     println!("full-recovery opt   T_save={:.2}h overhead={:.2}%",

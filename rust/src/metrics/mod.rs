@@ -75,6 +75,13 @@ impl OverheadLedger {
         self.total_h() / t_total_h
     }
 
+    /// Machine-hours wasted: checkpoint overhead stalls the whole
+    /// synchronous job, so every overhead hour idles all `n_emb + n_trainers`
+    /// machines (the paper's "1,156 machine-years" accounting, §3.2).
+    pub fn machine_hours(&self, n_emb: usize, n_trainers: usize) -> f64 {
+        self.total_h() * (n_emb + n_trainers) as f64
+    }
+
     pub fn add(&mut self, other: &OverheadLedger) {
         self.save_h += other.save_h;
         self.load_h += other.load_h;
@@ -181,6 +188,16 @@ mod tests {
         assert_eq!(a.total_h(), 4.0);
         assert_eq!(a.fraction_of(40.0), 0.1);
         assert_eq!((a.n_saves, a.n_failures), (2, 1));
+    }
+
+    #[test]
+    fn machine_hours_scale_with_trainer_count() {
+        let l = OverheadLedger { save_h: 1.5, load_h: 0.5, ..Default::default() };
+        // the paper's production shape: 18 Emb PS + 20 trainers
+        assert_eq!(l.machine_hours(18, 20), 2.0 * 38.0);
+        assert_eq!(l.machine_hours(8, 0), 16.0);
+        assert!(l.machine_hours(8, 8) > l.machine_hours(8, 0),
+                "trainers must add to the idle pool");
     }
 
     #[test]

@@ -43,27 +43,80 @@ impl PlsAccumulator {
 /// Expected PLS for a checkpoint interval (Eq. 4):
 /// E[PLS] = 0.5 T_save / (T_fail · N_emb).
 pub fn expected_pls(t_save_h: f64, t_fail_h: f64, n_emb: usize) -> f64 {
-    0.5 * t_save_h / (t_fail_h * n_emb as f64)
+    expected_pls_with_trainers(t_save_h, t_fail_h, n_emb, 0)
 }
 
 /// Interval that achieves a target PLS (inverse of Eq. 4):
 /// T_save = 2 · PLS · N_emb · T_fail.
 pub fn t_save_for_target_pls(target_pls: f64, t_fail_h: f64, n_emb: usize) -> f64 {
-    2.0 * target_pls * n_emb as f64 * t_fail_h
+    t_save_for_target_pls_with_trainers(target_pls, t_fail_h, n_emb, 0)
+}
+
+/// Fraction of job failures that strike an Emb PS node rather than a
+/// trainer, assuming a uniform per-node hazard over the N_emb + N_tr
+/// machines of the job (paper §3.1: the fleet MTBF counts both
+/// populations). 1.0 when there are no trainers in the pool.
+pub fn emb_failure_share(n_emb: usize, n_trainers: usize) -> f64 {
+    if n_emb == 0 {
+        return 0.0;
+    }
+    n_emb as f64 / (n_emb + n_trainers) as f64
+}
+
+/// Eq. 4 extended with the trainer term: only Emb PS failures lose
+/// embedding updates, so E[PLS] = share · 0.5 · T_save / (T_fail · N_emb)
+/// with share = N_emb / (N_emb + N_tr). Returns 0 for a failure-free
+/// cluster (`t_fail_h` infinite) or a cluster without Emb PS nodes.
+pub fn expected_pls_with_trainers(
+    t_save_h: f64,
+    t_fail_h: f64,
+    n_emb: usize,
+    n_trainers: usize,
+) -> f64 {
+    if n_emb == 0 || !t_fail_h.is_finite() {
+        return 0.0;
+    }
+    emb_failure_share(n_emb, n_trainers) * 0.5 * t_save_h / (t_fail_h * n_emb as f64)
+}
+
+/// Inverse of the extended Eq. 4. The trainer share cancels neatly:
+/// T_save = 2 · PLS · T_fail · N_emb / share = 2 · PLS · T_fail · (N_emb + N_tr).
+pub fn t_save_for_target_pls_with_trainers(
+    target_pls: f64,
+    t_fail_h: f64,
+    n_emb: usize,
+    n_trainers: usize,
+) -> f64 {
+    2.0 * target_pls * (n_emb + n_trainers) as f64 * t_fail_h
+}
+
+/// `events per job` = T_total / T_fail, with the zero-failure-rate edge
+/// handled explicitly (an infinite MTBF means no failure terms, not NaN).
+fn failure_rate(c: &ClusterConfig) -> f64 {
+    if c.t_fail_h.is_finite() && c.t_fail_h > 0.0 {
+        c.t_total_h / c.t_fail_h
+    } else {
+        0.0
+    }
 }
 
 /// Eq. 1 — total overhead (hours) of FULL recovery over a run of
 /// `t_total_h`, saving every `t_save_h`.
 pub fn overhead_full_h(c: &ClusterConfig, t_save_h: f64) -> f64 {
-    c.o_save_h * (c.t_total_h / t_save_h)
-        + (c.o_load_h + t_save_h / 2.0 + c.o_res_h) * (c.t_total_h / c.t_fail_h)
+    let rate = failure_rate(c);
+    let per_failure = if rate > 0.0 {
+        (c.o_load_h + t_save_h / 2.0 + c.o_res_h) * rate
+    } else {
+        0.0
+    };
+    c.o_save_h * (c.t_total_h / t_save_h) + per_failure
 }
 
 /// Eq. 2 — total overhead (hours) of PARTIAL recovery (no lost
 /// computation term).
 pub fn overhead_partial_h(c: &ClusterConfig, t_save_h: f64) -> f64 {
     c.o_save_h * (c.t_total_h / t_save_h)
-        + (c.o_load_h + c.o_res_h) * (c.t_total_h / c.t_fail_h)
+        + (c.o_load_h + c.o_res_h) * failure_rate(c)
 }
 
 /// What the CPR controller decided for this job.
@@ -87,13 +140,29 @@ pub struct CprPlan {
 /// 3. compare against full recovery at its optimal interval (Eq. 1);
 /// 4. fall back to full recovery when partial shows no benefit.
 ///
+/// The interval selection carries the cluster's `n_trainers` term: with
+/// N_tr trainers in the failure pool, only N_emb/(N_emb + N_tr) of
+/// failures lose embedding updates, so the interval that achieves a
+/// target PLS stretches to 2 · PLS · T_fail · (N_emb + N_tr) — Fig. 4/13
+/// projections therefore reflect trainer count.
+///
+/// NOTE on emulation coherence: `t_fail_h` is the *job-level* MTBF and
+/// the share assumes failures strike the N_emb + N_tr machine pool
+/// uniformly. An injected schedule should therefore mix PS and trainer
+/// events in the n_emb : n_trainers ratio (`--failures` +
+/// `--trainer-failures`); a PS-only schedule at the same event rate
+/// makes measured PLS overshoot the target by (N_emb + N_tr)/N_emb.
+/// At the preset default (n_trainers = 1) that bias is 1/N_emb.
+///
 /// The partial interval is clamped to the job length (saving less often
 /// than once per job is just "save once").
 pub fn plan(c: &ClusterConfig, target_pls: f64) -> CprPlan {
     let t_save_full = c.t_save_full_h();
     let full_h = overhead_full_h(c, t_save_full);
-    let t_save_part =
-        t_save_for_target_pls(target_pls, c.t_fail_h, c.n_emb_ps).min(c.t_total_h);
+    let t_save_part = t_save_for_target_pls_with_trainers(
+        target_pls, c.t_fail_h, c.n_emb_ps, c.n_trainers,
+    )
+    .min(c.t_total_h);
     let part_h = overhead_partial_h(c, t_save_part);
     let use_partial = part_h < full_h;
     CprPlan {
@@ -102,7 +171,8 @@ pub fn plan(c: &ClusterConfig, target_pls: f64) -> CprPlan {
         est_full_overhead_h: full_h,
         use_partial,
         expected_pls: if use_partial {
-            expected_pls(t_save_part, c.t_fail_h, c.n_emb_ps)
+            expected_pls_with_trainers(t_save_part, c.t_fail_h, c.n_emb_ps,
+                                       c.n_trainers)
         } else {
             0.0
         },
@@ -224,6 +294,86 @@ mod tests {
         let c = cluster(64, 28.0); // huge N_emb → enormous raw interval
         let p = plan(&c, 0.2);
         assert!(p.t_save_h <= c.t_total_h + 1e-9);
+    }
+
+    #[test]
+    fn plan_interval_round_trips_to_target_pls() {
+        // property: whenever the plan chooses partial recovery and its
+        // interval is not clamped by the job length, the planned interval
+        // must achieve the requested PLS exactly (within fp tolerance) —
+        // including the n_trainers term.
+        forall(12, 300, |rng| {
+            let mut c = cluster(gen::usize_in(rng, 1, 32),
+                                gen::f64_in(rng, 5.0, 100.0));
+            c.n_trainers = gen::usize_in(rng, 0, 32);
+            let target = gen::f64_in(rng, 0.001, 0.3);
+            let p = plan(&c, target);
+            if p.use_partial && p.t_save_h < c.t_total_h - 1e-9 {
+                prop_assert!((p.expected_pls - target).abs() < 1e-9,
+                             "target {target} planned as {}", p.expected_pls);
+                let back = expected_pls_with_trainers(
+                    p.t_save_h, c.t_fail_h, c.n_emb_ps, c.n_trainers);
+                prop_assert!((back - target).abs() < 1e-9,
+                             "interval {} gives PLS {back}", p.t_save_h);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_failure_rate_plans_full_with_zero_overhead() {
+        // T_fail = ∞ (a job that never fails): no failure terms, no NaN;
+        // partial shows no benefit so the plan falls back to full with
+        // zero estimated overhead.
+        let c = cluster(8, f64::INFINITY);
+        assert_eq!(overhead_full_h(&c, c.t_save_full_h()), 0.0);
+        assert_eq!(overhead_partial_h(&c, c.t_total_h), c.o_save_h);
+        let p = plan(&c, 0.1);
+        assert!(!p.use_partial, "never-failing job must not pick partial");
+        assert_eq!(p.est_overhead_h, 0.0);
+        assert_eq!(p.est_full_overhead_h, 0.0);
+        assert_eq!(p.expected_pls, 0.0);
+        assert_eq!(expected_pls(10.0, f64::INFINITY, 8), 0.0);
+    }
+
+    #[test]
+    fn n_emb_zero_is_finite_and_loses_nothing() {
+        // a degenerate cluster without Emb PS nodes: nothing to lose, so
+        // every PLS quantity is 0 and the plan stays finite (no div0/NaN)
+        assert_eq!(emb_failure_share(0, 8), 0.0);
+        assert_eq!(expected_pls_with_trainers(10.0, 28.0, 0, 8), 0.0);
+        let mut c = cluster(0, 28.0);
+        c.n_trainers = 8;
+        let p = plan(&c, 0.1);
+        assert!(p.est_overhead_h.is_finite());
+        assert!(p.est_full_overhead_h.is_finite());
+        assert!(p.t_save_h > 0.0);
+        assert_eq!(p.expected_pls, 0.0);
+        let mut acc = PlsAccumulator::new();
+        acc.on_failure(100, 50, 1000, 8, 0); // zero victims: no loss
+        assert_eq!(acc.value(), 0.0);
+    }
+
+    #[test]
+    fn trainer_term_stretches_interval_at_same_pls() {
+        // more trainers in the failure pool → fewer failures hit the Emb
+        // PS → the same target PLS tolerates a longer save interval, at
+        // identical expected PLS (the share cancels).
+        let base = cluster(8, 28.0);
+        let mut with_tr = base.clone();
+        with_tr.n_trainers = 24;
+        let target = 0.01; // small enough that neither plan clamps
+        let p0 = plan(&base, target);
+        let p1 = plan(&with_tr, target);
+        assert!(p0.use_partial && p1.use_partial);
+        assert!(p1.t_save_h > p0.t_save_h,
+                "trainers must stretch the interval: {} !> {}",
+                p1.t_save_h, p0.t_save_h);
+        assert!((p1.t_save_h / p0.t_save_h - 32.0 / 16.0).abs() < 1e-9);
+        assert!((p0.expected_pls - target).abs() < 1e-12);
+        assert!((p1.expected_pls - target).abs() < 1e-12);
+        // and the cheaper save cadence shows up as lower overhead
+        assert!(p1.est_overhead_h <= p0.est_overhead_h + 1e-12);
     }
 
     #[test]

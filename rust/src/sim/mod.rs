@@ -31,8 +31,10 @@ pub struct FleetSimConfig {
     pub o_res_mean_h: f64,
     pub res_spike_p: f64,
     pub res_spike_x: f64,
-    /// checkpoint interval policy: optimal full-recovery interval
-    pub nodes_per_job: usize,
+    /// job shape for machine-hour accounting: overhead idles the Emb PS
+    /// fleet AND the data-parallel trainers (paper: 18 + 20)
+    pub emb_ps_per_job: usize,
+    pub trainers_per_job: usize,
 }
 
 impl Default for FleetSimConfig {
@@ -51,7 +53,8 @@ impl Default for FleetSimConfig {
             o_res_mean_h: 0.3,
             res_spike_p: 0.08,
             res_spike_x: 12.0,
-            nodes_per_job: 38, // 20 trainers + 18 Emb PS
+            emb_ps_per_job: 18,
+            trainers_per_job: 20,
         }
     }
 }
@@ -147,7 +150,8 @@ pub fn simulate_fleet(rng: &mut Rng, cfg: &FleetSimConfig) -> FleetReport {
         let duration = gamma(rng, cfg.duration_shape, cfg.duration_scale_h)
             .max(cfg.min_duration_h);
         let out = simulate_job_full(rng, duration, t_save, cfg);
-        machine_hours += out.ledger.total_h() * cfg.nodes_per_job as f64;
+        machine_hours +=
+            out.ledger.machine_hours(cfg.emb_ps_per_job, cfg.trainers_per_job);
         fracs.push(out.overhead_frac());
         outcomes.push(out);
     }

@@ -13,19 +13,43 @@ use anyhow::{bail, Context, Result};
 use crate::failure::{FailureEvent, NodeHazard};
 use crate::util::rng::Rng;
 
-/// Serialize a failure schedule as CSV (`time_h,victims` with victims
-/// separated by `;`).
+/// Serialize a failure schedule as CSV
+/// (`time_h,victims,trainer_victims` with ids separated by `;`; the
+/// third column is omitted for schedules without trainer failures, which
+/// keeps pre-trainer-layer traces byte-identical).
 pub fn schedule_to_csv(events: &[FailureEvent]) -> String {
-    let mut s = String::from("time_h,victims\n");
+    let any_trainers = events.iter().any(|e| !e.trainer_victims.is_empty());
+    let mut s = if any_trainers {
+        String::from("time_h,victims,trainer_victims\n")
+    } else {
+        String::from("time_h,victims\n")
+    };
     for ev in events {
         let victims: Vec<String> =
             ev.victims.iter().map(|v| v.to_string()).collect();
-        s.push_str(&format!("{},{}\n", ev.time_h, victims.join(";")));
+        s.push_str(&format!("{},{}", ev.time_h, victims.join(";")));
+        if any_trainers {
+            let tv: Vec<String> =
+                ev.trainer_victims.iter().map(|v| v.to_string()).collect();
+            s.push_str(&format!(",{}", tv.join(";")));
+        }
+        s.push('\n');
     }
     s
 }
 
+fn parse_ids(field: &str, line_no: usize) -> Result<Vec<usize>> {
+    field
+        .split(';')
+        .filter(|v| !v.trim().is_empty())
+        .map(|v| v.trim().parse::<usize>()
+             .with_context(|| format!("line {line_no}: bad victim id")))
+        .collect()
+}
+
 /// Parse a schedule CSV produced by [`schedule_to_csv`] (or by hand).
+/// Both the 2-column (Emb PS only) and 3-column (with trainer victims)
+/// formats are accepted.
 pub fn schedule_from_csv(text: &str) -> Result<Vec<FailureEvent>> {
     let mut events = Vec::new();
     for (i, line) in text.lines().enumerate() {
@@ -33,23 +57,23 @@ pub fn schedule_from_csv(text: &str) -> Result<Vec<FailureEvent>> {
         if line.is_empty() || (i == 0 && line.starts_with("time_h")) {
             continue;
         }
-        let (time, victims) = line.split_once(',')
+        let (time, rest) = line.split_once(',')
             .with_context(|| format!("line {}: expected time,victims", i + 1))?;
         let time_h: f64 = time.trim().parse()
             .with_context(|| format!("line {}: bad time", i + 1))?;
         if time_h < 0.0 {
             bail!("line {}: negative time", i + 1);
         }
-        let victims = victims
-            .split(';')
-            .filter(|v| !v.trim().is_empty())
-            .map(|v| v.trim().parse::<usize>()
-                 .with_context(|| format!("line {}: bad victim id", i + 1)))
-            .collect::<Result<Vec<_>>>()?;
-        if victims.is_empty() {
+        let (ps_field, trainer_field) = match rest.split_once(',') {
+            Some((a, b)) => (a, b),
+            None => (rest, ""),
+        };
+        let victims = parse_ids(ps_field, i + 1)?;
+        let trainer_victims = parse_ids(trainer_field, i + 1)?;
+        if victims.is_empty() && trainer_victims.is_empty() {
             bail!("line {}: no victims", i + 1);
         }
-        events.push(FailureEvent { time_h, victims });
+        events.push(FailureEvent { time_h, victims, trainer_victims });
     }
     events.sort_by(|a, b| a.time_h.partial_cmp(&b.time_h).unwrap());
     Ok(events)
@@ -93,12 +117,29 @@ mod tests {
     #[test]
     fn schedule_roundtrip() {
         let events = vec![
-            FailureEvent { time_h: 7.25, victims: vec![3] },
-            FailureEvent { time_h: 41.0, victims: vec![0, 5, 2] },
+            FailureEvent { time_h: 7.25, victims: vec![3], trainer_victims: vec![] },
+            FailureEvent { time_h: 41.0, victims: vec![0, 5, 2], trainer_victims: vec![] },
         ];
         let csv = schedule_to_csv(&events);
+        assert!(csv.starts_with("time_h,victims\n"),
+                "PS-only schedules keep the legacy 2-column format");
         let back = schedule_from_csv(&csv).unwrap();
         assert_eq!(events, back);
+    }
+
+    #[test]
+    fn schedule_roundtrip_with_trainer_victims() {
+        let events = vec![
+            FailureEvent { time_h: 3.5, victims: vec![1], trainer_victims: vec![0, 2] },
+            FailureEvent { time_h: 20.0, victims: vec![], trainer_victims: vec![7] },
+        ];
+        let csv = schedule_to_csv(&events);
+        assert!(csv.starts_with("time_h,victims,trainer_victims\n"));
+        let back = schedule_from_csv(&csv).unwrap();
+        assert_eq!(events, back);
+        // 2-column legacy input still parses (no trainer victims)
+        let legacy = schedule_from_csv("time_h,victims\n5,1;2\n").unwrap();
+        assert_eq!(legacy[0].trainer_victims, Vec::<usize>::new());
     }
 
     #[test]

@@ -1,0 +1,485 @@
+//! The data-parallel trainer layer: N trainer threads driving one shared
+//! Emb PS cluster (paper §2.1 — many synchronous MLP trainers hammer the
+//! sharded Emb PS fleet; ECRM and Check-N-Run both evaluate fault
+//! tolerance under exactly this concurrent-trainer load).
+//!
+//! Each trainer thread owns a full [`crate::runtime::ModelExe`] replica
+//! (and its own runtime handle — the pjrt client is not `Sync`) plus a
+//! disjoint round-robin shard of the synthetic click-log stream: at
+//! global step `s`, trainer `r` of `N` consumes samples
+//! `[(s·N + r)·B, (s·N + r + 1)·B)`. One global step is:
+//!
+//! 1. **gather** — every trainer gathers its batch's embedding rows
+//!    through the [`SharedPs`] read lock (true concurrent load on both
+//!    backends);
+//! 2. **gather barrier** — nobody applies until everyone has gathered, so
+//!    all replicas observe the *pre-step* PS state;
+//! 3. **compute** — each replica runs its local train step (in-graph SGD
+//!    on its dense params);
+//! 4. **ordered scatter** — sparse updates are applied through the write
+//!    lock in trainer-rank order, sequenced by a [`Turnstile`] ticket, so
+//!    the PS floats are reproducible run-to-run and identical across the
+//!    inproc and threaded backends;
+//! 5. **allreduce (driver)** — the coordinator averages the N dense
+//!    replicas at the step barrier. Since every replica started the step
+//!    from the same params, parameter averaging after one local SGD step
+//!    *is* gradient averaging; at N = 1 it degenerates to the identity,
+//!    keeping the single-trainer path bit-identical to the pre-refactor
+//!    coordinator (asserted against `coordinator::reference` by the
+//!    integration suite).
+//!
+//! Trainer failures are real here: [`TrainerPool::kill_trainer`] joins
+//! the worker thread (its dense replica is gone), and
+//! [`TrainerPool::respawn_trainer`] brings a fresh one up — which re-joins
+//! at the next step barrier with whatever dense params the driver hands
+//! out (a survivor's replica under partial recovery, the checkpoint's
+//! under full recovery). See `coordinator` for the recovery matrix.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::cluster::{PsBackend, SharedPs};
+use crate::config::JobConfig;
+use crate::data::{Batch, SyntheticDataset};
+use crate::runtime::Runtime;
+
+/// A monotone ticket sequencer: thread `wait_for(t)` blocks until every
+/// ticket `< t` has been consumed via [`Turnstile::advance`]. The trainer
+/// pool hands each step's sparse update a globally unique ticket in rank
+/// order, which makes concurrent `apply_grads` deterministic.
+pub struct Turnstile {
+    next: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Default for Turnstile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Turnstile {
+    pub fn new() -> Self {
+        Self { next: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    /// Block until `ticket` is the next to be served.
+    pub fn wait_for(&self, ticket: u64) {
+        let mut g = self.next.lock().unwrap();
+        while *g != ticket {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Consume the current ticket, releasing the next waiter.
+    pub fn advance(&self) {
+        let mut g = self.next.lock().unwrap();
+        *g += 1;
+        self.cv.notify_all();
+    }
+}
+
+/// What one trainer hands back at the step barrier.
+pub struct TrainerStep {
+    pub rank: usize,
+    /// mean BCE loss of this trainer's local batch
+    pub loss: f32,
+    /// locally updated dense params (host layout), pre-allreduce
+    pub params: Vec<Vec<f32>>,
+    /// the batch's embedding access stream [B, T, H] — the driver feeds it
+    /// to the priority trackers in rank order
+    pub indices: Vec<u32>,
+}
+
+enum TrainerCmd {
+    /// run global step `step`, applying the sparse update at turnstile
+    /// order `ticket`, starting from the broadcast dense `params`
+    Step { step: u64, ticket: u64, params: Arc<Vec<Vec<f32>>> },
+    Stop,
+}
+
+type StepReply = Result<TrainerStep, String>;
+
+/// Upper bound on one trainer's step. The pool keeps a clone of the reply
+/// sender (needed for respawns), so a worker that dies *without replying*
+/// (a panic) would never close the channel — the timeout turns that
+/// silent hang into an error. Generous: a real step is sub-second.
+const STEP_TIMEOUT: Duration = Duration::from_secs(600);
+
+struct TrainerHandle {
+    tx: Sender<TrainerCmd>,
+    join: JoinHandle<()>,
+}
+
+struct WorkerCtx<B: PsBackend> {
+    rank: usize,
+    cfg: JobConfig,
+    shared: SharedPs<B>,
+    turnstile: Arc<Turnstile>,
+    gather_barrier: Arc<Barrier>,
+    rx: Receiver<TrainerCmd>,
+    done: Sender<StepReply>,
+}
+
+fn worker_loop<B: PsBackend>(ctx: WorkerCtx<B>) {
+    let WorkerCtx { rank, cfg, shared, turnstile, gather_barrier, rx, done } = ctx;
+    let n = cfg.cluster.n_trainers.max(1) as u64;
+    let hotness = cfg.data.hotness;
+    // the replica: this trainer's own executor + dataset view + reusable
+    // step buffers (allocated once, not per step)
+    let mut state = match Runtime::cpu()
+        .and_then(|rt| rt.load_model(&cfg.artifacts_dir, &cfg.model.preset))
+    {
+        Ok(model) => {
+            let m = &model.manifest;
+            let dataset = SyntheticDataset::new(m.num_dense, &cfg.data);
+            let batch_buf =
+                Batch::zeros_hot(m.batch, m.num_dense, m.num_sparse, hotness);
+            let emb_buf = vec![0.0f32; m.batch * m.num_sparse * m.emb_dim];
+            Ok((model, dataset, batch_buf, emb_buf))
+        }
+        Err(e) => Err(format!("trainer {rank}: loading model replica: {e:#}")),
+    };
+    while let Ok(cmd) = rx.recv() {
+        let (step, ticket, params) = match cmd {
+            TrainerCmd::Step { step, ticket, params } => (step, ticket, params),
+            TrainerCmd::Stop => break,
+        };
+        let reply = match state.as_mut() {
+            Err(e) => {
+                // keep the barrier/ticket protocol alive so the other
+                // trainers don't deadlock, then surface the error
+                gather_barrier.wait();
+                turnstile.wait_for(ticket);
+                turnstile.advance();
+                Err(e.clone())
+            }
+            Ok((model, dataset, batch_buf, emb_buf)) => {
+                // Stateless-replica protocol: dense params arrive by
+                // broadcast and leave by reply every step. The two host
+                // conversions this costs (cheap next to the train step's
+                // matmuls) buy trivially correct allreduce, rewind, and
+                // trainer respawn — a replica never holds cross-step
+                // state that recovery would have to reconstruct.
+                let mut bufs = model.params_from_host(&params);
+                // this trainer's stream shard: round-robin interleaved
+                dataset.fill_train_batch(
+                    (step * n + rank as u64) * model.manifest.batch as u64,
+                    batch_buf,
+                );
+                shared.read().gather_pooled(&batch_buf.indices, hotness, emb_buf);
+                // every replica must observe the PRE-step PS state: nobody
+                // applies until everyone has gathered
+                gather_barrier.wait();
+                let out = model.train_step(
+                    &batch_buf.dense,
+                    emb_buf,
+                    &batch_buf.labels,
+                    cfg.train.lr,
+                    &mut bufs,
+                );
+                // rank-ordered sparse update → deterministic PS floats
+                turnstile.wait_for(ticket);
+                if let Ok(o) = &out {
+                    shared.write().apply_grads(
+                        &batch_buf.indices,
+                        hotness,
+                        &o.emb_grad,
+                        cfg.train.emb_lr,
+                        cfg.train.emb_optimizer,
+                    );
+                }
+                turnstile.advance();
+                match out {
+                    Ok(o) => match model.params_to_host(&bufs) {
+                        Ok(host) => Ok(TrainerStep {
+                            rank,
+                            loss: o.loss,
+                            params: host,
+                            indices: batch_buf.indices.clone(),
+                        }),
+                        Err(e) => Err(format!("trainer {rank}: params_to_host: {e:#}")),
+                    },
+                    Err(e) => Err(format!("trainer {rank}: train_step: {e:#}")),
+                }
+            }
+        };
+        if done.send(reply).is_err() {
+            break; // driver went away
+        }
+    }
+}
+
+/// N trainer worker threads behind a step/reply protocol (see module
+/// docs). The driver broadcasts one global step at a time and blocks for
+/// all N replies — the natural quiesce point for checkpoint capture and
+/// failure injection.
+pub struct TrainerPool<B: PsBackend + 'static> {
+    cfg: JobConfig,
+    shared: SharedPs<B>,
+    turnstile: Arc<Turnstile>,
+    gather_barrier: Arc<Barrier>,
+    /// `None` = the trainer is dead (killed, not yet respawned)
+    workers: Vec<Option<TrainerHandle>>,
+    done_tx: Sender<StepReply>,
+    done_rx: Receiver<StepReply>,
+    next_ticket: u64,
+    kills: u64,
+    respawns: u64,
+    /// a step timed out: some worker is presumed dead/stuck (likely at
+    /// the gather barrier) — joining on stop() would hang forever, so
+    /// the pool detaches instead
+    wedged: bool,
+}
+
+impl<B: PsBackend + 'static> TrainerPool<B> {
+    pub fn new(cfg: &JobConfig, shared: SharedPs<B>) -> Self {
+        let n = cfg.cluster.n_trainers.max(1);
+        let (done_tx, done_rx) = mpsc::channel();
+        let mut pool = Self {
+            cfg: cfg.clone(),
+            shared,
+            turnstile: Arc::new(Turnstile::new()),
+            gather_barrier: Arc::new(Barrier::new(n)),
+            workers: (0..n).map(|_| None).collect(),
+            done_tx,
+            done_rx,
+            next_ticket: 0,
+            kills: 0,
+            respawns: 0,
+            wedged: false,
+        };
+        for rank in 0..n {
+            let w = pool.spawn(rank);
+            pool.workers[rank] = Some(w);
+        }
+        pool
+    }
+
+    fn spawn(&self, rank: usize) -> TrainerHandle {
+        let (tx, rx) = mpsc::channel();
+        let ctx = WorkerCtx {
+            rank,
+            cfg: self.cfg.clone(),
+            shared: self.shared.clone(),
+            turnstile: Arc::clone(&self.turnstile),
+            gather_barrier: Arc::clone(&self.gather_barrier),
+            rx,
+            done: self.done_tx.clone(),
+        };
+        let join = std::thread::Builder::new()
+            .name(format!("trainer-{rank}"))
+            .spawn(move || worker_loop(ctx))
+            .expect("spawning trainer worker");
+        TrainerHandle { tx, join }
+    }
+
+    pub fn n_trainers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn alive(&self, rank: usize) -> bool {
+        self.workers[rank].is_some()
+    }
+
+    /// Trainer-loss failures injected so far.
+    pub fn kills(&self) -> u64 {
+        self.kills
+    }
+
+    pub fn respawns(&self) -> u64 {
+        self.respawns
+    }
+
+    /// Run one global data-parallel step from the broadcast dense params.
+    /// Blocks until every trainer has gathered, computed, and applied its
+    /// sparse update; returns the per-trainer results sorted by rank.
+    /// Every trainer must be alive (respawn after a kill before stepping).
+    pub fn step(&mut self, step: u64, params: Arc<Vec<Vec<f32>>>) -> Result<Vec<TrainerStep>> {
+        ensure!(
+            self.workers.iter().all(Option::is_some),
+            "cannot step: a trainer is dead (respawn it first)"
+        );
+        let n = self.workers.len();
+        for (rank, w) in self.workers.iter().enumerate() {
+            let w = w.as_ref().unwrap();
+            w.tx.send(TrainerCmd::Step {
+                step,
+                ticket: self.next_ticket + rank as u64,
+                params: Arc::clone(&params),
+            })
+            .map_err(|_| anyhow!("trainer {rank} hung up"))?;
+        }
+        self.next_ticket += n as u64;
+        // collect ALL n replies before propagating any error — a partial
+        // drain would leave this step's remaining replies queued and
+        // mis-pair them with the next step's results
+        let mut out = Vec::with_capacity(n);
+        let mut first_err: Option<String> = None;
+        for _ in 0..n {
+            match self.done_rx.recv_timeout(STEP_TIMEOUT) {
+                Ok(Ok(step_result)) => out.push(step_result),
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e); // keep the first error only
+                    }
+                }
+                Err(_) => {
+                    // timeout (a worker died without replying — likely a
+                    // panic) or a closed channel: no more replies coming.
+                    // Survivors may be stuck at the gather barrier, so
+                    // mark the pool wedged — stop() must not join them.
+                    self.wedged = true;
+                    if first_err.is_none() {
+                        first_err = Some(format!(
+                            "trainer step produced no reply within {STEP_TIMEOUT:?} \
+                             (worker thread died?)"
+                        ));
+                    }
+                    break;
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(anyhow!(e));
+        }
+        out.sort_by_key(|r| r.rank);
+        Ok(out)
+    }
+
+    /// A trainer-loss failure event: the worker thread really exits and is
+    /// joined; its dense replica is gone.
+    pub fn kill_trainer(&mut self, rank: usize) {
+        self.kills += 1;
+        if let Some(w) = self.workers[rank].take() {
+            let _ = w.tx.send(TrainerCmd::Stop);
+            let _ = w.join.join();
+        }
+    }
+
+    /// Bring a fresh replacement up; it re-joins at the next step barrier
+    /// with whatever dense params the driver broadcasts.
+    pub fn respawn_trainer(&mut self, rank: usize) {
+        assert!(self.workers[rank].is_none(), "trainer {rank} is already alive");
+        self.respawns += 1;
+        self.workers[rank] = Some(self.spawn(rank));
+    }
+
+    /// Join every worker (end of training). If a step previously timed
+    /// out, surviving workers may be blocked forever at the gather
+    /// barrier — then the pool detaches them (the process will reap the
+    /// threads) instead of hanging in `join`.
+    pub fn stop(&mut self) {
+        let wedged = self.wedged;
+        for w in self.workers.iter_mut().filter_map(Option::take) {
+            let _ = w.tx.send(TrainerCmd::Stop);
+            if !wedged {
+                let _ = w.join.join();
+            }
+        }
+    }
+}
+
+impl<B: PsBackend + 'static> Drop for TrainerPool<B> {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::embedding::{PsCluster, TableInfo};
+
+    fn small_cfg(n_trainers: usize) -> JobConfig {
+        let mut cfg = preset("mini").unwrap();
+        cfg.cluster.n_trainers = n_trainers;
+        cfg.data.train_samples = 128 * 8;
+        cfg.data.eval_samples = 128;
+        cfg
+    }
+
+    fn shared_for(cfg: &JobConfig) -> SharedPs<PsCluster> {
+        let tables: Vec<TableInfo> = cfg
+            .data
+            .table_rows
+            .iter()
+            .map(|&rows| TableInfo { rows, dim: cfg.model.emb_dim })
+            .collect();
+        SharedPs::new(PsCluster::new(tables, cfg.cluster.n_emb_ps, cfg.data.seed ^ 0xEB))
+    }
+
+    fn init_host(cfg: &JobConfig) -> Vec<Vec<f32>> {
+        let rt = Runtime::cpu().unwrap();
+        let model = rt.load_model(&cfg.artifacts_dir, &cfg.model.preset).unwrap();
+        model.params_to_host(&model.init_params(cfg.train.seed)).unwrap()
+    }
+
+    #[test]
+    fn turnstile_serves_tickets_in_order() {
+        let t = Arc::new(Turnstile::new());
+        let order = Arc::new(Mutex::new(Vec::new()));
+        std::thread::scope(|s| {
+            for ticket in (0..8u64).rev() {
+                let t = Arc::clone(&t);
+                let order = Arc::clone(&order);
+                s.spawn(move || {
+                    t.wait_for(ticket);
+                    order.lock().unwrap().push(ticket);
+                    t.advance();
+                });
+            }
+        });
+        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn pool_runs_a_step_on_every_rank() {
+        let cfg = small_cfg(2);
+        let shared = shared_for(&cfg);
+        let mut pool = TrainerPool::new(&cfg, shared.clone());
+        let results = pool.step(0, Arc::new(init_host(&cfg))).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!((results[0].rank, results[1].rank), (0, 1));
+        assert!(results.iter().all(|r| r.loss.is_finite()));
+        assert!(results.iter().all(|r| !r.params.is_empty()));
+        // both trainers issued a gather and applied their sparse update
+        let stats = PsBackend::stats(&*shared.read());
+        assert_eq!((stats.gathers, stats.applies), (2, 2));
+        pool.stop();
+    }
+
+    #[test]
+    fn kill_and_respawn_keep_the_pool_stepping() {
+        let cfg = small_cfg(2);
+        let shared = shared_for(&cfg);
+        let mut pool = TrainerPool::new(&cfg, shared);
+        let host = init_host(&cfg);
+        pool.step(0, Arc::new(host.clone())).unwrap();
+        pool.kill_trainer(1);
+        assert!(!pool.alive(1));
+        pool.respawn_trainer(1);
+        assert!(pool.alive(1));
+        let r2 = pool.step(1, Arc::new(host)).unwrap();
+        assert_eq!(r2.len(), 2);
+        assert_eq!((pool.kills(), pool.respawns()), (1, 1));
+        pool.stop();
+    }
+
+    #[test]
+    fn stepping_with_a_dead_trainer_errors() {
+        let cfg = small_cfg(2);
+        let shared = shared_for(&cfg);
+        let mut pool = TrainerPool::new(&cfg, shared);
+        pool.kill_trainer(0);
+        let err = pool.step(0, Arc::new(init_host(&cfg)));
+        assert!(err.is_err(), "step with a dead trainer must fail");
+        pool.respawn_trainer(0);
+        pool.stop();
+    }
+}

@@ -403,3 +403,146 @@ fn multi_hot_training_runs_and_learns() {
     assert!(r.final_auc > 0.60, "multi-hot AUC {}", r.final_auc);
     assert_eq!(r.steps_executed, 300);
 }
+
+// ---------------------------------------------------------------------------
+// the data-parallel trainer runtime
+// ---------------------------------------------------------------------------
+
+#[test]
+fn multi_trainer_n1_is_bit_identical_to_reference_path() {
+    // THE acceptance bar for the trainer-runtime refactor: an N = 1 run
+    // through the TrainerPool driver must be bit-identical — final AUC,
+    // logloss, PLS, loss curve, ledger — to the pre-refactor
+    // single-trainer loop (preserved verbatim in coordinator::reference),
+    // on BOTH cluster backends.
+    use cpr::coordinator::reference::run_training_reference;
+    for backend in [PsBackendKind::InProc, PsBackendKind::Threaded] {
+        let mut cfg = test_cfg(Strategy::CprSsu);
+        cfg.cluster.backend = backend;
+        cfg.cluster.n_trainers = 1;
+        let schedule = sched(17, 3, 2, cfg.cluster.t_total_h, cfg.cluster.n_emb_ps);
+        let opts = RunOptions { schedule, ..Default::default() };
+        let a = with_mini(|m| run_training(m, &cfg, &opts)).expect("driver run");
+        let b = with_mini(|m| run_training_reference(m, &cfg, &opts))
+            .expect("reference run");
+        let name = backend.name();
+        assert_eq!(a.n_trainers, 1);
+        assert_eq!(a.backend, b.backend, "{name}");
+        assert_eq!(a.final_auc, b.final_auc, "{name}: AUC diverged");
+        assert_eq!(a.final_logloss, b.final_logloss, "{name}: logloss diverged");
+        assert_eq!(a.pls, b.pls, "{name}: PLS diverged");
+        assert_eq!(a.steps_executed, b.steps_executed, "{name}");
+        assert_eq!(a.failures_seen, b.failures_seen, "{name}");
+        assert_eq!(a.ledger, b.ledger, "{name}: overhead ledger diverged");
+        assert_eq!(a.train_loss.points, b.train_loss.points,
+                   "{name}: loss curve diverged");
+    }
+}
+
+#[test]
+fn multi_trainer_runs_are_deterministic_and_backend_identical() {
+    // N = 2: gathers are genuinely concurrent, yet the rank-ordered
+    // turnstile + gather barrier make the whole run reproducible and
+    // identical across the inproc and threaded backends.
+    let mut cfg = test_cfg(Strategy::CprSsu);
+    cfg.cluster.n_trainers = 2;
+    let schedule = sched(19, 2, 1, cfg.cluster.t_total_h, cfg.cluster.n_emb_ps);
+    let opts = RunOptions { schedule, ..Default::default() };
+    let a = with_mini(|m| run_training(m, &cfg, &opts)).unwrap();
+    let b = with_mini(|m| run_training(m, &cfg, &opts)).unwrap();
+    assert_eq!(a.final_auc, b.final_auc, "same config must reproduce exactly");
+    assert_eq!(a.final_logloss, b.final_logloss);
+    assert_eq!(a.pls, b.pls);
+    cfg.cluster.backend = PsBackendKind::Threaded;
+    let c = with_mini(|m| run_training(m, &cfg, &opts)).unwrap();
+    assert_eq!(c.backend, "threaded");
+    assert_eq!(a.final_auc, c.final_auc, "N=2 diverged across backends");
+    assert_eq!(a.final_logloss, c.final_logloss);
+    assert_eq!(a.train_loss.points, c.train_loss.points);
+}
+
+#[test]
+fn n4_run_with_trainer_and_ps_failure_partial_recovers() {
+    // the mixed-failure acceptance scenario: 4 trainers, one trainer loss
+    // and one Emb PS loss, partial recovery — the run completes with no
+    // step re-execution and finite metrics on both backends.
+    for backend in [PsBackendKind::InProc, PsBackendKind::Threaded] {
+        let mut cfg = test_cfg(Strategy::CprSsu);
+        cfg.cluster.backend = backend;
+        cfg.cluster.n_trainers = 4; // 38400 / (128·4) = 75 global steps
+        let schedule = vec![
+            FailureEvent {
+                time_h: 20.0,
+                victims: vec![],
+                trainer_victims: vec![2],
+            },
+            FailureEvent {
+                time_h: 35.0,
+                victims: vec![3],
+                trainer_victims: vec![],
+            },
+        ];
+        let r = run(&cfg, schedule);
+        let name = backend.name();
+        assert_eq!(r.n_trainers, 4, "{name}");
+        assert_eq!(r.failures_seen, 2, "{name}");
+        assert_eq!(r.steps_executed, 75,
+                   "{name}: partial recovery must not re-execute steps");
+        assert_eq!(r.ledger.lost_h, 0.0, "{name}");
+        assert!(r.pls > 0.0, "{name}: the PS loss must accrue PLS");
+        assert!(r.final_auc.is_finite() && r.final_auc > 0.5 && r.final_auc < 1.0,
+                "{name}: AUC {}", r.final_auc);
+        assert!(r.final_logloss.is_finite() && r.final_logloss > 0.0,
+                "{name}: logloss {}", r.final_logloss);
+        assert!(r.overhead_frac.is_finite() && r.overhead_frac > 0.0, "{name}");
+        assert!(!r.fell_back, "{name}");
+    }
+}
+
+#[test]
+fn multi_trainer_full_recovery_with_trainer_loss_rewinds_exactly() {
+    // full recovery treats a trainer loss like any failure: reload +
+    // rewind. The replay is deterministic, so the final model matches the
+    // clean multi-trainer run exactly, at the cost of re-executed steps.
+    let mut cfg = test_cfg(Strategy::Full);
+    cfg.cluster.n_trainers = 2;
+    let clean = run(&cfg, vec![]);
+    let schedule = vec![FailureEvent {
+        time_h: 30.0,
+        victims: vec![],
+        trainer_victims: vec![1],
+    }];
+    let failed = run(&cfg, schedule);
+    assert_eq!(failed.failures_seen, 1);
+    assert!(failed.ledger.lost_h > 0.0);
+    assert!(failed.steps_executed > clean.steps_executed,
+            "full recovery must re-execute steps");
+    assert_eq!(clean.final_auc, failed.final_auc,
+               "trainer-loss full recovery must replay to the same model");
+    assert_eq!(clean.final_logloss, failed.final_logloss);
+}
+
+#[test]
+fn single_trainer_partial_trainer_loss_reloads_dense_only() {
+    // N = 1 partial recovery of a trainer loss: no surviving replica, so
+    // the dense params reload (stale) from the checkpoint marker while
+    // the Emb PS keeps its progress — no rewind, no PLS.
+    let mut cfg = test_cfg(Strategy::PartialNaive);
+    let clean = run(&cfg, vec![]);
+    cfg.checkpoint.t_save_override_h = Some(8.0);
+    let schedule = vec![FailureEvent {
+        time_h: 45.0, // well past several marks; dense rolls back to 40 h
+        victims: vec![],
+        trainer_victims: vec![0],
+    }];
+    let r = run(&cfg, schedule);
+    assert_eq!(r.failures_seen, 1);
+    assert_eq!(r.steps_executed, 300, "no rewind under partial recovery");
+    assert_eq!(r.ledger.lost_h, 0.0);
+    assert_eq!(r.pls, 0.0, "trainer loss must not accrue embedding PLS");
+    assert!(r.final_auc.is_finite() && r.final_auc > 0.5);
+    // dense staleness is real damage, but embeddings kept their progress:
+    // the run should stay in the same quality ballpark as the clean one
+    assert!((clean.final_auc - r.final_auc).abs() < 0.1,
+            "clean {} vs trainer-loss {}", clean.final_auc, r.final_auc);
+}

@@ -7,6 +7,11 @@
 //!   hotpath_*         — L3 coordinator primitives: PS gather/scatter,
 //!                       checkpoint save/restore, AUC, data generation
 //!   backend_*         — inproc vs threaded PS runtimes at B=128/512/2048
+//!   scatter_contention[] — cross-node apply_grads throughput of the
+//!                       sharded handle (per-node turnstiles) vs the
+//!                       pre-refactor global-write-lock baseline, at
+//!                       n=1/2/4/8 concurrent appliers on both backends
+//!                       (disjoint-node batches — pure contention signal)
 //!   trainer_scaling[] — end-to-end steps/sec at 1/2/4/8 data-parallel
 //!                       trainers on both backends
 //!   pjrt_*            — L2 executables from Rust: train_step / predict
@@ -14,12 +19,15 @@
 //!
 //! `cargo bench -- --test` runs every section in quick mode (tiny warmup
 //! and sampling budgets, shrunk training runs) — the CI bench-smoke step.
+//! `--json <path>` dumps every row (including the scatter_contention
+//! sharded-vs-global pair the acceptance numbers come from) to a
+//! machine-readable file; CI uploads it as the bench artifact.
 //! Results are recorded in EXPERIMENTS.md §Perf.
 
-use cpr::bench::Bench;
+use cpr::bench::{record_external, write_json, Bench};
 use cpr::checkpoint::tracker::{MfuTracker, ScarTracker, SsuTracker};
 use cpr::checkpoint::CheckpointStore;
-use cpr::cluster::{PsBackend, ThreadedCluster};
+use cpr::cluster::{PsBackend, PsDataPlane, ShardedPs, ThreadedCluster};
 use cpr::config::{preset, PsBackendKind};
 use cpr::coordinator::{run_training, RunOptions};
 use cpr::data::{Batch, SyntheticDataset};
@@ -30,15 +38,46 @@ use cpr::util::dist::Zipf;
 use cpr::util::rng::Rng;
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--test" || a == "--quick");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--test" || a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    // `--section <name>` runs one section at full budget (the CI
+    // contention job uses `--section scatter_contention`)
+    let section = args
+        .iter()
+        .position(|a| a == "--section")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let want = |name: &str| section.as_deref().map_or(true, |s| s == name);
     if quick {
         println!("(quick mode: tiny budgets — numbers are smoke, not perf)");
     }
-    table1(quick);
-    hotpath(quick);
-    backend_comparison(quick);
-    trainer_scaling(quick);
-    pjrt(quick);
+    if want("table1") {
+        table1(quick);
+    }
+    if want("hotpath") {
+        hotpath(quick);
+    }
+    if want("backend") {
+        backend_comparison(quick);
+    }
+    if want("scatter_contention") {
+        scatter_contention(quick);
+    }
+    if want("trainer_scaling") {
+        trainer_scaling(quick);
+    }
+    if want("pjrt") {
+        pjrt(quick);
+    }
+    if let Some(path) = json_path {
+        write_json(&path).expect("writing bench JSON");
+        println!("\n(bench JSON written to {path})");
+    }
 }
 
 /// A Bench with the section-appropriate budget.
@@ -65,8 +104,8 @@ fn backend_comparison(quick: bool) {
     let t = cfg.model.num_sparse;
     let tables: Vec<TableInfo> = cfg.data.table_rows.iter()
         .map(|&rows| TableInfo { rows, dim }).collect();
-    let mut inproc = PsCluster::new(tables.clone(), 8, 7);
-    let mut threaded = ThreadedCluster::new(tables.clone(), 8, 7);
+    let inproc = PsCluster::new(tables.clone(), 8, 7);
+    let threaded = ThreadedCluster::new(tables.clone(), 8, 7);
     let mut rng = Rng::new(9);
     let batches: &[usize] = if quick { &[128] } else { &[128, 512, 2048] };
     for &batch in batches {
@@ -78,18 +117,135 @@ fn backend_comparison(quick: bool) {
         let slots = (batch * t) as u64;
         bench(&format!("backend_gather[inproc,B={batch}]"), quick)
             .throughput(slots)
-            .run(|| PsBackend::gather(&inproc, &indices, &mut out));
+            .run(|| PsDataPlane::gather(&inproc, &indices, &mut out));
         bench(&format!("backend_gather[threaded,B={batch}]"), quick)
             .throughput(slots)
             .run(|| threaded.gather(&indices, &mut out));
         bench(&format!("backend_apply_grads[inproc,B={batch}]"), quick)
             .throughput(slots)
-            .run(|| PsBackend::apply_grads(&mut inproc, &indices, 1, &grads, 0.01,
-                                           cpr::embedding::EmbOptimizer::Sgd));
+            .run(|| PsDataPlane::apply_grads(&inproc, &indices, 1, &grads, 0.01,
+                                             cpr::embedding::EmbOptimizer::Sgd));
         bench(&format!("backend_apply_grads[threaded,B={batch}]"), quick)
             .throughput(slots)
             .run(|| threaded.apply_grads(&indices, 1, &grads, 0.01,
                                          cpr::embedding::EmbOptimizer::Sgd));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scatter contention — sharded handle vs the pre-refactor global lock
+// ---------------------------------------------------------------------------
+
+/// Drive `n` appliers through the sharded handle's ordered scatter; each
+/// applier `i` owns ticket stream `it·n + i`. Returns wall seconds.
+fn run_contention_sharded<B: PsBackend + 'static>(
+    shared: &ShardedPs<B>,
+    batches: &[Vec<u32>],
+    grads: &[f32],
+    iters: usize,
+) -> f64 {
+    let n = batches.len();
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for (rank, idx) in batches.iter().enumerate() {
+            let shared = shared.clone();
+            s.spawn(move || {
+                for it in 0..iters {
+                    shared.apply_grads_ordered(
+                        (it * n + rank) as u64,
+                        idx,
+                        1,
+                        grads,
+                        0.01,
+                        cpr::embedding::EmbOptimizer::Sgd,
+                    );
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+/// The pre-refactor baseline: every apply behind one global write lock
+/// (the exact shape of the retired `SharedPs(Arc<RwLock<B>>)` handle).
+fn run_contention_global<B: PsBackend>(
+    backend: &B,
+    batches: &[Vec<u32>],
+    grads: &[f32],
+    iters: usize,
+) -> f64 {
+    let lock = std::sync::RwLock::new(backend);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for idx in batches {
+            let lock = &lock;
+            s.spawn(move || {
+                for _ in 0..iters {
+                    let g = lock.write().unwrap();
+                    g.apply_grads(idx, 1, grads, 0.01,
+                                  cpr::embedding::EmbOptimizer::Sgd);
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+/// Cross-node `apply_grads` throughput under contention: n appliers with
+/// *disjoint-node* batches (applier i only touches node i), so any
+/// serialization measured is pure locking, not row conflicts. Emits a
+/// `scatter_contention[backend,n=N]` row for the sharded handle and a
+/// `[...,global-lock]` row for the retired global-lock design — the
+/// acceptance criterion reads both from the bench JSON.
+fn scatter_contention(quick: bool) {
+    println!("\n-- scatter_contention: sharded per-node locks vs global write lock --");
+    let n_nodes = 8usize;
+    let rows_per_node = 4096usize;
+    let dim = 16usize;
+    let tables = vec![TableInfo { rows: n_nodes * rows_per_node, dim }];
+    let b = 2048usize; // slots per apply (1 table, single-hot)
+    let iters = if quick { 4 } else { 96 };
+    let grads = vec![0.001f32; b * dim];
+    for backend in [PsBackendKind::InProc, PsBackendKind::Threaded] {
+        let kind = backend.name();
+        for n in [1usize, 2, 4, 8] {
+            // applier i touches only node i: rows ≡ i (mod n_nodes)
+            let batches: Vec<Vec<u32>> = (0..n)
+                .map(|i| {
+                    (0..b)
+                        .map(|j| (i % n_nodes + (j % rows_per_node) * n_nodes) as u32)
+                        .collect()
+                })
+                .collect();
+            let slots = (n * iters * b) as u64;
+            let (sharded_s, global_s) = match backend {
+                PsBackendKind::InProc => {
+                    let shared = ShardedPs::new(
+                        PsCluster::new(tables.clone(), n_nodes, 7));
+                    let sh = run_contention_sharded(&shared, &batches, &grads, iters);
+                    let baseline = PsCluster::new(tables.clone(), n_nodes, 7);
+                    let gl = run_contention_global(&baseline, &batches, &grads, iters);
+                    (sh, gl)
+                }
+                PsBackendKind::Threaded => {
+                    let shared = ShardedPs::new(
+                        ThreadedCluster::new(tables.clone(), n_nodes, 7));
+                    let sh = run_contention_sharded(&shared, &batches, &grads, iters);
+                    let baseline = ThreadedCluster::new(tables.clone(), n_nodes, 7);
+                    let gl = run_contention_global(&baseline, &batches, &grads, iters);
+                    (sh, gl)
+                }
+            };
+            let a = record_external(
+                &format!("scatter_contention[{kind},n={n}]"), sharded_s, slots);
+            let g = record_external(
+                &format!("scatter_contention[{kind},n={n},global-lock]"),
+                global_s, slots);
+            println!(
+                "  -> sharded/global speedup at {kind},n={n}: {:.2}x",
+                g.mean_s() / a.mean_s().max(1e-12)
+            );
+        }
     }
 }
 
@@ -187,7 +343,7 @@ fn hotpath(quick: bool) {
     let dim = cfg.model.emb_dim;
     let tables: Vec<TableInfo> = cfg.data.table_rows.iter()
         .map(|&rows| TableInfo { rows, dim }).collect();
-    let mut cluster = PsCluster::new(tables, cfg.cluster.n_emb_ps, 7);
+    let cluster = PsCluster::new(tables, cfg.cluster.n_emb_ps, 7);
     let ds = SyntheticDataset::new(cfg.model.num_dense, &cfg.data);
     let mut batch = Batch::zeros(cfg.model.batch, cfg.model.num_dense,
                                  cfg.model.num_sparse);
@@ -210,7 +366,7 @@ fn hotpath(quick: bool) {
         .throughput(cluster.total_params() as u64)
         .run(|| store.full_save(&cluster, vec![], 1, 128));
     bench("hotpath_checkpoint_restore_node", quick)
-        .run(|| store.restore_node(&mut cluster, 3));
+        .run(|| store.restore_node(&cluster, 3));
 
     let mut rng = Rng::new(5);
     let scores: Vec<f32> = (0..50_000).map(|_| rng.f32()).collect();
@@ -243,7 +399,7 @@ fn pjrt(quick: bool) {
         let dim = m.emb_dim;
         let tables: Vec<TableInfo> = cfg.data.table_rows.iter()
             .map(|&rows| TableInfo { rows, dim }).collect();
-        let mut cluster = PsCluster::new(tables, cfg.cluster.n_emb_ps, 7);
+        let cluster = PsCluster::new(tables, cfg.cluster.n_emb_ps, 7);
         let ds = SyntheticDataset::new(m.num_dense, &cfg.data);
         let mut batch = Batch::zeros(m.batch, m.num_dense, m.num_sparse);
         ds.fill_train_batch(0, &mut batch);

@@ -5,9 +5,73 @@
 //! throughput. Output is one aligned line per benchmark plus an optional
 //! machine-readable JSON dump.
 
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::util::json::{arr, num, obj, s, Json, JsonWriter};
 use crate::util::stats;
+
+/// Every [`Bench::run`] (and [`record_external`]) registers its result
+/// here so a bench binary can dump one machine-readable file at exit via
+/// [`write_json`] — the CI bench artifact the acceptance numbers (e.g.
+/// the `scatter_contention` sharded-vs-global rows) are read from.
+static REGISTRY: Mutex<Vec<JsonRow>> = Mutex::new(Vec::new());
+
+struct JsonRow {
+    name: String,
+    mean_s: f64,
+    p50_s: f64,
+    p99_s: f64,
+    samples: usize,
+    throughput_per_s: Option<f64>,
+}
+
+fn register(r: &BenchResult) {
+    REGISTRY.lock().unwrap().push(JsonRow {
+        name: r.name.clone(),
+        mean_s: r.mean_s(),
+        p50_s: r.p50_s(),
+        p99_s: r.p99_s(),
+        samples: r.samples.len(),
+        throughput_per_s: r.throughput(),
+    });
+}
+
+/// Record an externally-timed measurement (e.g. a multi-threaded
+/// contention run the closure-based harness cannot express): one sample
+/// of `total_secs`, with throughput = `elements / total_secs`. Prints the
+/// standard report line and registers the row for [`write_json`].
+pub fn record_external(name: &str, total_secs: f64, elements: u64) -> BenchResult {
+    let r = BenchResult {
+        name: name.to_string(),
+        samples: vec![total_secs],
+        elements: Some(elements),
+    };
+    println!("{}", r.report_line());
+    register(&r);
+    r
+}
+
+/// Dump every benchmark recorded so far to `path` as JSON.
+pub fn write_json(path: &str) -> std::io::Result<()> {
+    let rows = REGISTRY.lock().unwrap();
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("name", s(&r.name)),
+                ("mean_s", num(r.mean_s)),
+                ("p50_s", num(r.p50_s)),
+                ("p99_s", num(r.p99_s)),
+                ("samples", num(r.samples as f64)),
+                ("throughput_per_s",
+                 r.throughput_per_s.map_or(Json::Null, num)),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![("results", arr(results))]);
+    std::fs::write(path, JsonWriter::write(&doc))
+}
 
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
@@ -127,6 +191,7 @@ impl Bench {
         }
         let r = BenchResult { name: self.name, samples, elements: self.elements };
         println!("{}", r.report_line());
+        register(&r);
         r
     }
 }
@@ -154,6 +219,32 @@ mod tests {
             .throughput(1000)
             .run(|| std::hint::black_box((0..100).sum::<u64>()));
         assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_dump_roundtrips() {
+        Bench::new("json_dump_probe")
+            .warmup_ms(1)
+            .measure_ms(5)
+            .throughput(10)
+            .run(|| std::hint::black_box(2 * 2));
+        record_external("json_dump_external", 0.5, 100);
+        let path = std::env::temp_dir().join("cpr_bench_dump.json");
+        write_json(path.to_str().unwrap()).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        let names: Vec<&str> = results
+            .iter()
+            .map(|r| r.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert!(names.contains(&"json_dump_probe"));
+        assert!(names.contains(&"json_dump_external"));
+        let ext = results
+            .iter()
+            .find(|r| r.get("name").unwrap().as_str().unwrap() == "json_dump_external")
+            .unwrap();
+        assert_eq!(ext.get("throughput_per_s").unwrap().as_f64().unwrap(), 200.0);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

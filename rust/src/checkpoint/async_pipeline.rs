@@ -31,7 +31,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use super::{disk, CheckpointStore};
-use crate::cluster::{NodeSnapshot, PsBackend};
+use crate::cluster::{NodeSnapshot, PsControlPlane, PsDataPlane};
 
 /// How many full-cluster snapshot captures may be in flight at once.
 const FULL_BUFFERS: usize = 2;
@@ -176,7 +176,7 @@ impl CheckpointPipeline {
     /// Capture every node + the position marker and hand both to the
     /// writer. Blocks only if both snapshot buffers are still in flight
     /// (backpressure), never on the disk write itself.
-    pub fn full_save<B: PsBackend>(
+    pub fn full_save<B: PsControlPlane>(
         &self,
         backend: &B,
         mlp: Vec<Vec<f32>>,
@@ -200,7 +200,7 @@ impl CheckpointPipeline {
 
     /// Capture `rows` of `table` (priority save) and hand them to the
     /// writer. Does not move the position marker.
-    pub fn save_rows<B: PsBackend>(&self, backend: &B, table: usize, rows: &[u32]) {
+    pub fn save_rows<B: PsDataPlane>(&self, backend: &B, table: usize, rows: &[u32]) {
         let dim = backend.tables()[table].dim;
         let (data, opt) = backend.read_rows(table, rows);
         self.in_flight.fetch_add(1, Ordering::SeqCst);
@@ -208,7 +208,7 @@ impl CheckpointPipeline {
     }
 
     /// Capture one whole (small) table.
-    pub fn save_table<B: PsBackend>(&self, backend: &B, table: usize) {
+    pub fn save_table<B: PsDataPlane>(&self, backend: &B, table: usize) {
         let rows: Vec<u32> = (0..backend.tables()[table].rows as u32).collect();
         self.save_rows(backend, table, &rows);
     }
@@ -221,7 +221,7 @@ impl CheckpointPipeline {
     /// Partial recovery: fetch `node`'s mirror state (after all previously
     /// submitted saves have been applied — FIFO) and load it into the
     /// backend.
-    pub fn restore_node<B: PsBackend>(&self, backend: &mut B, node: usize) {
+    pub fn restore_node<B: PsControlPlane>(&self, backend: &B, node: usize) {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.send(Msg::GetNode { node, reply: reply_tx });
         let snap = reply_rx.recv().expect("checkpoint writer died");
@@ -230,7 +230,7 @@ impl CheckpointPipeline {
 
     /// Full recovery: restore every node from the mirror; returns
     /// (mlp, step, samples) for the trainer to rewind to.
-    pub fn restore_all<B: PsBackend>(&self, backend: &mut B) -> (Vec<Vec<f32>>, u64, u64) {
+    pub fn restore_all<B: PsControlPlane>(&self, backend: &B) -> (Vec<Vec<f32>>, u64, u64) {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.send(Msg::GetStore { reply: reply_tx });
         let store = reply_rx.recv().expect("checkpoint writer died");
@@ -299,13 +299,13 @@ mod tests {
         )
     }
 
-    fn perturb(c: &mut PsCluster, seed: u64) {
+    fn perturb(c: &PsCluster, seed: u64) {
         let mut rng = crate::util::rng::Rng::new(seed);
         let idx: Vec<u32> = (0..12)
             .flat_map(|_| vec![rng.below(24) as u32, rng.below(9) as u32])
             .collect();
         let grads: Vec<f32> = (0..12 * 2 * 4).map(|_| rng.f32() - 0.5).collect();
-        PsBackend::apply_grads(&mut *c, &idx, 1, &grads, 0.5, EmbOptimizer::Sgd);
+        PsDataPlane::apply_grads(c, &idx, 1, &grads, 0.5, EmbOptimizer::Sgd);
     }
 
     fn pipeline(c: &PsCluster, delay_ms: u64) -> CheckpointPipeline {
@@ -320,33 +320,33 @@ mod tests {
 
     #[test]
     fn restore_sees_state_at_capture_time_not_later_mutations() {
-        let mut c = cluster();
+        let c = cluster();
         let p = pipeline(&c, 0);
-        perturb(&mut c, 1);
+        perturb(&c, 1);
         let at_capture = c.snapshot_node(0);
         p.full_save(&c, vec![], 1, 128);
-        perturb(&mut c, 2); // training continues while the save is applied
+        perturb(&c, 2); // training continues while the save is applied
         assert_ne!(c.snapshot_node(0).shards, at_capture.shards);
-        p.restore_node(&mut c, 0);
+        p.restore_node(&c, 0);
         assert_eq!(c.snapshot_node(0).shards, at_capture.shards,
                    "restore must return the captured state");
     }
 
     #[test]
     fn row_saves_apply_in_submission_order() {
-        let mut c = cluster();
+        let c = cluster();
         let p = pipeline(&c, 0);
-        perturb(&mut c, 3);
+        perturb(&c, 3);
         let older = c.snapshot_node(0);
         p.save_rows(&c, 0, &[0, 3, 6]); // rows on node 0
-        perturb(&mut c, 4);
+        perturb(&c, 4);
         p.save_rows(&c, 0, &[0]); // fresher save of row 0 queued after
         let fresh_row0 = {
             let (data, _) = c.read_rows(0, &[0]);
             data
         };
-        perturb(&mut c, 5);
-        p.restore_node(&mut c, 0);
+        perturb(&c, 5);
+        p.restore_node(&c, 0);
         let (got0, _) = c.read_rows(0, &[0]);
         assert_eq!(got0, fresh_row0, "later save must win");
         let (got3, _) = c.read_rows(0, &[3]);
@@ -355,15 +355,15 @@ mod tests {
 
     #[test]
     fn restore_all_returns_marked_position() {
-        let mut c = cluster();
+        let c = cluster();
         let p = pipeline(&c, 0);
-        perturb(&mut c, 6);
+        perturb(&c, 6);
         p.full_save(&c, vec![vec![7.0, 8.0]], 40, 5120);
-        perturb(&mut c, 7);
+        perturb(&c, 7);
         let golden = c.snapshot_node(1);
         p.full_save(&c, vec![vec![9.0]], 80, 10240);
-        perturb(&mut c, 8);
-        let (mlp, step, samples) = p.restore_all(&mut c);
+        perturb(&c, 8);
+        let (mlp, step, samples) = p.restore_all(&c);
         assert_eq!(mlp, vec![vec![9.0]]);
         assert_eq!((step, samples), (80, 10240));
         assert_eq!(c.snapshot_node(1).shards, golden.shards);
@@ -371,9 +371,9 @@ mod tests {
 
     #[test]
     fn marked_state_reads_position_without_touching_cluster() {
-        let mut c = cluster();
+        let c = cluster();
         let p = pipeline(&c, 0);
-        perturb(&mut c, 10);
+        perturb(&c, 10);
         let live = c.snapshot_node(0);
         p.full_save(&c, vec![vec![4.25]], 7, 896);
         let (mlp, step, samples) = p.marked_state();
@@ -413,7 +413,7 @@ mod tests {
     fn publishes_durable_checkpoint_on_mark() {
         let dir = std::env::temp_dir().join("cpr_pipeline_pub");
         std::fs::remove_dir_all(&dir).ok();
-        let mut c = cluster();
+        let c = cluster();
         let p = CheckpointPipeline::new(
             CheckpointStore::initial(&c, vec![]),
             Some(dir.to_str().unwrap()),
@@ -421,7 +421,7 @@ mod tests {
             Duration::ZERO,
         )
         .unwrap();
-        perturb(&mut c, 9);
+        perturb(&c, 9);
         p.full_save(&c, vec![vec![1.0]], 10, 1280);
         p.flush().unwrap();
         let latest = super::disk::DiskCheckpointer::load_latest(dir.to_str().unwrap())

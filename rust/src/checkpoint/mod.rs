@@ -40,7 +40,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::cluster::PsBackend;
+use crate::cluster::{PsControlPlane, PsDataPlane};
 
 /// Snapshot store (the emulated persistent checkpoint target).
 #[derive(Clone, Debug)]
@@ -59,7 +59,7 @@ pub struct CheckpointStore {
 
 impl CheckpointStore {
     /// Initial checkpoint = the cluster's initial state (epoch 0).
-    pub fn initial<B: PsBackend>(cluster: &B, mlp: Vec<Vec<f32>>) -> Self {
+    pub fn initial<B: PsControlPlane>(cluster: &B, mlp: Vec<Vec<f32>>) -> Self {
         let mut shards = Vec::with_capacity(cluster.n_nodes());
         let mut opt = Vec::with_capacity(cluster.n_nodes());
         for n in 0..cluster.n_nodes() {
@@ -73,7 +73,7 @@ impl CheckpointStore {
     /// Full checkpoint: mirror every shard + MLP params + position.
     /// (Synchronous path — the coordinator's async equivalent is
     /// [`async_pipeline::CheckpointPipeline::full_save`].)
-    pub fn full_save<B: PsBackend>(
+    pub fn full_save<B: PsControlPlane>(
         &mut self,
         cluster: &B,
         mlp: Vec<Vec<f32>>,
@@ -98,7 +98,7 @@ impl CheckpointStore {
 
     /// Priority (partial-content) save: copy only `rows` of `table` into
     /// the mirror. Does NOT move the PLS position marker.
-    pub fn save_rows<B: PsBackend>(&mut self, cluster: &B, table: usize, rows: &[u32]) {
+    pub fn save_rows<B: PsDataPlane>(&mut self, cluster: &B, table: usize, rows: &[u32]) {
         let dim = cluster.tables()[table].dim;
         let (data, opt) = cluster.read_rows(table, rows);
         self.apply_rows(table, rows, dim, &data, &opt);
@@ -126,7 +126,7 @@ impl CheckpointStore {
     /// Save one whole table. Row-at-a-time through `read_rows`, which is
     /// fine for its only callers — the tiny (≤64-row) non-priority tables
     /// of the skewed layout; large tables go through `snapshot_node`.
-    pub fn save_table<B: PsBackend>(&mut self, cluster: &B, table: usize) {
+    pub fn save_table<B: PsDataPlane>(&mut self, cluster: &B, table: usize) {
         let rows: Vec<u32> = (0..cluster.tables()[table].rows as u32).collect();
         self.save_rows(cluster, table, &rows);
     }
@@ -141,13 +141,13 @@ impl CheckpointStore {
 
     /// PARTIAL recovery: restore only `node`'s shards; everyone else keeps
     /// their progress.
-    pub fn restore_node<B: PsBackend>(&self, cluster: &mut B, node: usize) {
+    pub fn restore_node<B: PsControlPlane>(&self, cluster: &B, node: usize) {
         cluster.load_node(node, &self.shards[node], &self.opt[node]);
     }
 
     /// FULL recovery: restore every shard; returns (mlp, step, samples) for
     /// the trainer to rewind to.
-    pub fn restore_all<B: PsBackend>(&self, cluster: &mut B) -> (Vec<Vec<f32>>, u64, u64) {
+    pub fn restore_all<B: PsControlPlane>(&self, cluster: &B) -> (Vec<Vec<f32>>, u64, u64) {
         for n in 0..cluster.n_nodes() {
             cluster.load_node(n, &self.shards[n], &self.opt[n]);
         }
@@ -279,6 +279,7 @@ fn rf32s<R: Read>(r: &mut R, len: usize) -> Result<Vec<f32>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::ThreadedCluster;
     use crate::embedding::{PsCluster, TableInfo};
     use crate::prop_assert;
     use crate::testing::{forall, gen};
@@ -291,7 +292,7 @@ mod tests {
         )
     }
 
-    fn perturb(c: &mut PsCluster, seed: u64) {
+    fn perturb(c: &PsCluster, seed: u64) {
         let mut rng = crate::util::rng::Rng::new(seed);
         let idx: Vec<u32> = (0..20)
             .flat_map(|_| vec![rng.below(50) as u32, rng.below(11) as u32])
@@ -302,46 +303,46 @@ mod tests {
 
     #[test]
     fn full_save_restore_roundtrip() {
-        let mut c = cluster();
+        let c = cluster();
         let mut store = CheckpointStore::initial(&c, vec![vec![1.0, 2.0]]);
-        perturb(&mut c, 1);
+        perturb(&c, 1);
         store.full_save(&c, vec![vec![3.0, 4.0]], 10, 1280);
-        let golden: Vec<f32> = c.shard(0, 0).to_vec();
-        perturb(&mut c, 2);
-        assert_ne!(c.shard(0, 0), &golden[..]);
-        let (mlp, step, samples) = store.restore_all(&mut c);
-        assert_eq!(c.shard(0, 0), &golden[..]);
+        let golden: Vec<f32> = c.shard(0, 0);
+        perturb(&c, 2);
+        assert_ne!(c.shard(0, 0), golden);
+        let (mlp, step, samples) = store.restore_all(&c);
+        assert_eq!(c.shard(0, 0), golden);
         assert_eq!(mlp, vec![vec![3.0, 4.0]]);
         assert_eq!((step, samples), (10, 1280));
     }
 
     #[test]
     fn partial_restore_touches_only_failed_node() {
-        let mut c = cluster();
+        let c = cluster();
         let store = CheckpointStore::initial(&c, vec![]);
-        perturb(&mut c, 3);
-        let survivor: Vec<f32> = c.shard(1, 0).to_vec();
-        store.restore_node(&mut c, 0);
+        perturb(&c, 3);
+        let survivor: Vec<f32> = c.shard(1, 0);
+        store.restore_node(&c, 0);
         // node 0 back to init, node 1 untouched
         let fresh = cluster();
         assert_eq!(c.shard(0, 0), fresh.shard(0, 0));
-        assert_eq!(c.shard(1, 0), &survivor[..]);
+        assert_eq!(c.shard(1, 0), survivor);
     }
 
     #[test]
     fn save_rows_updates_only_those_rows() {
-        let mut c = cluster();
+        let c = cluster();
         let mut store = CheckpointStore::initial(&c, vec![]);
-        perturb(&mut c, 4);
+        perturb(&c, 4);
         let trained_row5: Vec<f32> = {
             let mut v = vec![0.0; 4];
             c.read_row(0, 5, &mut v);
             v
         };
         store.save_rows(&c, 0, &[5]);
-        perturb(&mut c, 5);
+        perturb(&c, 5);
         // restore the node that owns row 5 (5 % 3 == 2)
-        store.restore_node(&mut c, 2);
+        store.restore_node(&c, 2);
         let mut after = vec![0.0; 4];
         c.read_row(0, 5, &mut after);
         assert_eq!(after, trained_row5, "saved row must come back fresh");
@@ -356,25 +357,25 @@ mod tests {
 
     #[test]
     fn save_table_saves_all_its_rows() {
-        let mut c = cluster();
+        let c = cluster();
         let mut store = CheckpointStore::initial(&c, vec![]);
-        perturb(&mut c, 6);
+        perturb(&c, 6);
         store.save_table(&c, 1);
         let golden: Vec<Vec<f32>> =
-            (0..3).map(|n| c.shard(n, 1).to_vec()).collect();
-        perturb(&mut c, 7);
+            (0..3).map(|n| c.shard(n, 1)).collect();
+        perturb(&c, 7);
         for n in 0..3 {
-            store.restore_node(&mut c, n);
+            store.restore_node(&c, n);
         }
         for n in 0..3 {
-            assert_eq!(c.shard(n, 1), &golden[n][..]);
+            assert_eq!(c.shard(n, 1), golden[n]);
         }
     }
 
     #[test]
     fn disk_roundtrip_preserves_everything() {
-        let mut c = cluster();
-        perturb(&mut c, 8);
+        let c = cluster();
+        perturb(&c, 8);
         let mut store = CheckpointStore::initial(&c, vec![vec![1.5; 7]]);
         store.full_save(&c, vec![vec![2.5; 7]], 42, 5376);
         let dir = std::env::temp_dir().join("cpr_ckpt_test");
@@ -403,7 +404,7 @@ mod tests {
     #[test]
     fn optimizer_state_rides_with_rows() {
         use crate::embedding::EmbOptimizer;
-        let mut c = cluster();
+        let c = cluster();
         let mut store = CheckpointStore::initial(&c, vec![]);
         let opt = EmbOptimizer::RowAdagrad { eps: 1e-8 };
         // accumulate state on row 5 (node 5 % 3 == 2), checkpoint it
@@ -414,7 +415,7 @@ mod tests {
         // more training, then fail the node and restore
         c.apply_grads(&[5, 2], 1, &[1.0f32; 8], 1.0, opt);
         assert!(c.opt_shard(node, 0)[local] > saved_acc);
-        store.restore_node(&mut c, node);
+        store.restore_node(&c, node);
         assert_eq!(c.opt_shard(node, 0)[local], saved_acc,
                    "optimizer state must revert with the rows");
     }
@@ -423,23 +424,22 @@ mod tests {
     fn store_restores_across_backends() {
         // a checkpoint taken on the in-process backend restores onto the
         // threaded backend (and vice versa): routing is part of the trait
-        use crate::cluster::ThreadedCluster;
-        let mut c = cluster();
-        perturb(&mut c, 12);
+        let c = cluster();
+        perturb(&c, 12);
         let mut store = CheckpointStore::initial(&c, vec![]);
         store.full_save(&c, vec![], 5, 640);
-        let mut t = ThreadedCluster::new(
+        let t = ThreadedCluster::new(
             vec![TableInfo { rows: 50, dim: 4 }, TableInfo { rows: 11, dim: 4 }],
             3,
             999, // different seed: state must come fully from the store
         );
-        store.restore_all(&mut t);
+        store.restore_all(&t);
         let mut a = vec![0.0; 4];
         let mut b = vec![0.0; 4];
         for table in 0..2 {
             for row in 0..c.tables[table].rows {
                 c.read_row(table, row, &mut a);
-                PsBackend::read_row(&t, table, row, &mut b);
+                PsDataPlane::read_row(&t, table, row, &mut b);
                 assert_eq!(a, b, "table {table} row {row}");
             }
         }
@@ -449,7 +449,7 @@ mod tests {
     fn property_partial_restore_preserves_survivors() {
         forall(41, 30, |rng| {
             let n_nodes = gen::usize_in(rng, 2, 6);
-            let mut c = PsCluster::new(
+            let c = PsCluster::new(
                 vec![TableInfo { rows: gen::usize_in(rng, 8, 40), dim: 4 }],
                 n_nodes,
                 rng.next_u64(),
@@ -466,12 +466,12 @@ mod tests {
             let victim = rng.usize_below(n_nodes);
             let survivors: Vec<Vec<f32>> = (0..n_nodes)
                 .filter(|&n| n != victim)
-                .map(|n| c.shard(n, 0).to_vec())
+                .map(|n| c.shard(n, 0))
                 .collect();
-            store.restore_node(&mut c, victim);
+            store.restore_node(&c, victim);
             let after: Vec<Vec<f32>> = (0..n_nodes)
                 .filter(|&n| n != victim)
-                .map(|n| c.shard(n, 0).to_vec())
+                .map(|n| c.shard(n, 0))
                 .collect();
             prop_assert!(survivors == after, "survivor state changed");
             Ok(())

@@ -19,7 +19,7 @@
 
 use std::collections::HashSet;
 
-use crate::cluster::PsBackend;
+use crate::cluster::PsDataPlane;
 use crate::util::rng::Rng;
 
 /// Which tables a tracker prioritizes: the `priority_tables` largest ones
@@ -216,11 +216,11 @@ pub struct ScarTracker {
 }
 
 impl ScarTracker {
-    // Reads go through the batched `PsBackend::read_rows` (one message per
+    // Reads go through the batched `PsDataPlane::read_rows` (one message per
     // PS node), never per-row `read_row` — on the threaded backend the
     // latter would be a channel round trip per row of every priority table.
 
-    pub fn new<B: PsBackend>(cluster: &B, mask: &[bool]) -> Self {
+    pub fn new<B: PsDataPlane>(cluster: &B, mask: &[bool]) -> Self {
         let tables = cluster.tables();
         let mut last_saved = Vec::with_capacity(tables.len());
         let dims: Vec<usize> = tables.iter().map(|t| t.dim).collect();
@@ -235,7 +235,7 @@ impl ScarTracker {
     }
 
     /// The `k` rows of `table` with the largest change-L2 since last save.
-    pub fn top_k<B: PsBackend>(&self, cluster: &B, table: usize, k: usize) -> Vec<u32> {
+    pub fn top_k<B: PsDataPlane>(&self, cluster: &B, table: usize, k: usize) -> Vec<u32> {
         debug_assert!(self.mask[table]);
         let dim = self.dims[table];
         let mirror = &self.last_saved[table];
@@ -259,7 +259,7 @@ impl ScarTracker {
     }
 
     /// After saving `rows` of `table`, refresh their mirror entries.
-    pub fn mark_saved<B: PsBackend>(&mut self, cluster: &B, table: usize, rows: &[u32]) {
+    pub fn mark_saved<B: PsDataPlane>(&mut self, cluster: &B, table: usize, rows: &[u32]) {
         let dim = self.dims[table];
         let mirror = &mut self.last_saved[table];
         let (data, _) = cluster.read_rows(table, rows);
@@ -276,7 +276,7 @@ impl ScarTracker {
 }
 
 /// All of `table`'s rows in row-major order via one batched read.
-fn read_full_table<B: PsBackend>(cluster: &B, table: usize, rows: usize) -> Vec<f32> {
+fn read_full_table<B: PsDataPlane>(cluster: &B, table: usize, rows: usize) -> Vec<f32> {
     let ids: Vec<u32> = (0..rows as u32).collect();
     cluster.read_rows(table, &ids).0
 }
@@ -394,7 +394,7 @@ mod tests {
 
     #[test]
     fn scar_ranks_by_change_magnitude() {
-        let mut c = cluster2();
+        let c = cluster2();
         let mask = vec![true, false];
         let mut scar = ScarTracker::new(&c, &mask);
         // change row 42 a lot, row 7 a little

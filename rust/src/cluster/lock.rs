@@ -1,0 +1,300 @@
+//! [`NodeLock`] — the per-node reader/writer lock of the sharded data
+//! plane, with *failure-aware* poisoning.
+//!
+//! `std::sync::RwLock` poisoning is the wrong failure model for a PS
+//! node: when a trainer panics mid-`apply_grads`, the node's floats are
+//! half-written, and the old global `SharedPs` handle silently
+//! `PoisonError::into_inner`'d that state back to every survivor. A real
+//! PS cluster would declare the node *failed* and run the recovery
+//! protocol. `NodeLock` encodes exactly that:
+//!
+//! * a writer that panics while holding the guard marks the node **dead**
+//!   (detected via [`std::thread::panicking`] in the guard's `Drop`);
+//! * every subsequent `read()` / `write()` returns [`NodeDead`] — the
+//!   node reads as *failed*, never as corrupt;
+//! * [`NodeLock::kill`] is the same transition taken deliberately (the
+//!   failure-injection path), and [`NodeLock::revive`] installs a fresh
+//!   state (blank respawn; the checkpoint restore then repopulates it).
+//!
+//! Unlike `std` poisoning, death is recoverable without `&mut` access —
+//! `revive` replaces the state wholesale under the same lock, which is
+//! what lets the in-process backend live behind a plain `&self` data
+//! plane shared by N trainer threads.
+
+use std::cell::UnsafeCell;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar, Mutex, PoisonError};
+
+/// The node guarded by this lock has failed: a writer panicked while
+/// mutating it (lock-level poison converted into a node kill), or
+/// [`NodeLock::kill`] was called. Its state is unobservable until
+/// [`NodeLock::revive`] installs a replacement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeDead;
+
+impl std::fmt::Display for NodeDead {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Emb PS node is dead (killed or writer panicked; respawn + restore it)")
+    }
+}
+
+#[derive(Debug, Default)]
+struct State {
+    readers: usize,
+    writer: bool,
+    dead: bool,
+}
+
+/// Per-node RwLock with kill/revive semantics (see module docs).
+#[derive(Debug)]
+pub struct NodeLock<T> {
+    state: Mutex<State>,
+    cv: Condvar,
+    cell: UnsafeCell<T>,
+}
+
+// SAFETY: same bounds as std::sync::RwLock — the lock protocol below
+// guarantees &T only under reader registration and &mut T only under the
+// unique writer flag.
+unsafe impl<T: Send> Send for NodeLock<T> {}
+unsafe impl<T: Send + Sync> Sync for NodeLock<T> {}
+
+impl<T> NodeLock<T> {
+    pub fn new(value: T) -> Self {
+        Self {
+            state: Mutex::new(State::default()),
+            cv: Condvar::new(),
+            cell: UnsafeCell::new(value),
+        }
+    }
+
+    // The state mutex is only ever held for a few integer ops, but a
+    // guard Drop runs during unwinding (that is the whole point), so the
+    // mutex may observe std-poison; the State ints are always consistent.
+    fn state(&self) -> std::sync::MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Shared access, or [`NodeDead`] if the node has failed.
+    pub fn read(&self) -> Result<NodeReadGuard<'_, T>, NodeDead> {
+        let mut s = self.state();
+        while s.writer {
+            s = self.cv.wait(s).unwrap_or_else(PoisonError::into_inner);
+        }
+        if s.dead {
+            return Err(NodeDead);
+        }
+        s.readers += 1;
+        Ok(NodeReadGuard { lock: self })
+    }
+
+    /// Exclusive access, or [`NodeDead`] if the node has failed.
+    pub fn write(&self) -> Result<NodeWriteGuard<'_, T>, NodeDead> {
+        let mut s = self.state();
+        while s.writer || s.readers > 0 {
+            s = self.cv.wait(s).unwrap_or_else(PoisonError::into_inner);
+        }
+        if s.dead {
+            return Err(NodeDead);
+        }
+        s.writer = true;
+        Ok(NodeWriteGuard { lock: self })
+    }
+
+    /// Deliberately fail the node (failure injection). Readers currently
+    /// holding guards finish against the pre-kill state; no new guard is
+    /// handed out until [`NodeLock::revive`].
+    pub fn kill(&self) {
+        self.state().dead = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.state().dead
+    }
+
+    /// Bring a dead node back with a replacement state (blank respawn).
+    /// Blocks until in-flight guards drain, then atomically installs
+    /// `value` and clears the dead flag. Panics if the node is alive —
+    /// reviving a serving node would discard live updates.
+    pub fn revive(&self, value: T) {
+        let mut s = self.state();
+        assert!(s.dead, "revive() on a live node would discard its state");
+        while s.writer || s.readers > 0 {
+            s = self.cv.wait(s).unwrap_or_else(PoisonError::into_inner);
+        }
+        // SAFETY: dead + no readers/writers → no outstanding references.
+        unsafe { *self.cell.get() = value };
+        s.dead = false;
+        drop(s);
+        self.cv.notify_all();
+    }
+}
+
+pub struct NodeReadGuard<'a, T> {
+    lock: &'a NodeLock<T>,
+}
+
+// SAFETY: sharing a read guard across threads only hands out &T (same
+// bound as std::sync::RwLockReadGuard) — the gather fast path fans its
+// per-node guards out to scoped worker threads.
+unsafe impl<T: Sync> Sync for NodeReadGuard<'_, T> {}
+
+impl<T> Deref for NodeReadGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        // SAFETY: reader registered; writers excluded until drop.
+        unsafe { &*self.lock.cell.get() }
+    }
+}
+
+impl<T> Drop for NodeReadGuard<'_, T> {
+    fn drop(&mut self) {
+        let mut s = self.lock.state();
+        s.readers -= 1;
+        drop(s);
+        self.lock.cv.notify_all();
+    }
+}
+
+pub struct NodeWriteGuard<'a, T> {
+    lock: &'a NodeLock<T>,
+}
+
+impl<T> Deref for NodeWriteGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        // SAFETY: unique writer until drop.
+        unsafe { &*self.lock.cell.get() }
+    }
+}
+
+impl<T> DerefMut for NodeWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // SAFETY: unique writer until drop.
+        unsafe { &mut *self.lock.cell.get() }
+    }
+}
+
+impl<T> Drop for NodeWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        let mut s = self.lock.state();
+        if std::thread::panicking() {
+            // poison → node-kill: the writer died mid-mutation, so the
+            // state is suspect. Fail the node instead of letting the
+            // half-written floats leak to the next reader.
+            s.dead = true;
+        }
+        s.writer = false;
+        drop(s);
+        self.lock.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn read_write_roundtrip() {
+        let l = NodeLock::new(vec![1.0f32, 2.0]);
+        assert_eq!(*l.read().unwrap(), vec![1.0, 2.0]);
+        l.write().unwrap()[0] = 5.0;
+        assert_eq!(l.read().unwrap()[0], 5.0);
+    }
+
+    #[test]
+    fn concurrent_readers_share() {
+        let l = Arc::new(NodeLock::new(7u64));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let cur = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let (l, peak, cur) = (l.clone(), peak.clone(), cur.clone());
+                s.spawn(move || {
+                    for _ in 0..200 {
+                        let g = l.read().unwrap();
+                        let n = cur.fetch_add(1, Ordering::SeqCst) + 1;
+                        peak.fetch_max(n, Ordering::SeqCst);
+                        assert_eq!(*g, 7);
+                        cur.fetch_sub(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        assert!(peak.load(Ordering::SeqCst) >= 2, "readers never overlapped");
+    }
+
+    #[test]
+    fn writers_are_exclusive() {
+        let l = Arc::new(NodeLock::new(0u64));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let l = l.clone();
+                s.spawn(move || {
+                    for _ in 0..500 {
+                        let mut g = l.write().unwrap();
+                        let v = *g;
+                        *g = v + 1; // non-atomic rmw: races would lose counts
+                    }
+                });
+            }
+        });
+        assert_eq!(*l.read().unwrap(), 4 * 500);
+    }
+
+    #[test]
+    fn panicking_writer_kills_the_node() {
+        // THE poison-conversion contract: a writer that panics mid-update
+        // leaves the node FAILED — readers get NodeDead, never the
+        // half-written state.
+        let l = Arc::new(NodeLock::new(vec![0.0f32; 4]));
+        let l2 = l.clone();
+        let res = std::thread::spawn(move || {
+            let mut g = l2.write().unwrap();
+            g[0] = f32::NAN; // half-applied update
+            panic!("trainer died mid-apply");
+        })
+        .join();
+        assert!(res.is_err());
+        assert!(l.is_dead());
+        assert!(matches!(l.read().map(|_| ()), Err(NodeDead)));
+        assert!(matches!(l.write().map(|_| ()), Err(NodeDead)));
+    }
+
+    #[test]
+    fn kill_then_revive_restores_service() {
+        let l = NodeLock::new(3u64);
+        l.kill();
+        assert!(l.read().is_err());
+        l.revive(9);
+        assert!(!l.is_dead());
+        assert_eq!(*l.read().unwrap(), 9);
+    }
+
+    #[test]
+    fn revive_after_poison_replaces_corrupt_state() {
+        let l = Arc::new(NodeLock::new(1u64));
+        let l2 = l.clone();
+        let _ = std::thread::spawn(move || {
+            let mut g = l2.write().unwrap();
+            *g = 999;
+            panic!();
+        })
+        .join();
+        assert!(l.is_dead());
+        l.revive(42);
+        assert_eq!(*l.read().unwrap(), 42, "revive must install the fresh state");
+    }
+
+    #[test]
+    #[should_panic(expected = "live node")]
+    fn revive_on_live_node_panics() {
+        let l = NodeLock::new(0u8);
+        l.revive(1);
+    }
+}

@@ -1,9 +1,27 @@
-//! The Emb PS cluster runtime seam: a [`PsBackend`] trait over *how* the
-//! sharded embedding parameter servers execute, with two implementations:
+//! The Emb PS cluster runtime seam, split into two planes:
 //!
-//! * [`crate::embedding::PsCluster`] — the original in-process, synchronous
-//!   emulation: every gather/scatter runs inline on the coordinator thread.
-//!   Fast, simple, and the reference for numerical equivalence.
+//! * [`PsDataPlane`] — the training hot path (`gather*` / `apply_grads*` /
+//!   `read_rows`). Every method takes `&self` and is safe to call from N
+//!   trainer threads at once: backends synchronize *per node* internally
+//!   (the in-process backend keeps each node behind a
+//!   [`lock::NodeLock`]; the threaded backend's per-node worker channels
+//!   are the natural data plane), so two trainers touching rows owned by
+//!   different PS nodes never contend.
+//! * [`PsControlPlane`] — checkpoint capture/restore and failure
+//!   injection (`snapshot_node` / `load_node` / `reset` / `kill` /
+//!   `respawn` / `stats`). In the shared-runtime these run behind an
+//!   exclusive *quiesce token* ([`ShardedPs::quiesce`]) that the driver
+//!   acquires at the step barrier, preserving the documented checkpoint
+//!   consistency point.
+//!
+//! [`PsBackend`] is the both-planes alias the checkpoint store, the
+//! coordinator driver, and the reference loop bound on.
+//!
+//! Two implementations:
+//!
+//! * [`crate::embedding::PsCluster`] — the original in-process emulation:
+//!   gathers/scatters run inline on the calling thread under per-node
+//!   locks. Fast, simple, and the reference for numerical equivalence.
 //! * [`ThreadedCluster`] — a concurrent message-passing runtime: every Emb
 //!   PS node is its own worker thread owning its shards, served over mpsc
 //!   request/reply channels behind a sharded router. Nodes can *actually*
@@ -13,17 +31,19 @@
 //!
 //! Both backends are **bit-identical**: requests are reassembled in
 //! deterministic slot order and per-row updates are applied in sample
-//! order, so a training run produces the same floats on either backend
-//! (the integration suite asserts identical final AUC/logloss). The
-//! coordinator is generic over the trait and selects the backend from
+//! order per node, so a training run produces the same floats on either
+//! backend (the integration suite asserts identical final AUC/logloss).
+//! The coordinator is generic over the seam and selects the backend from
 //! `JobConfig` / `--backend inproc|threaded`.
 
+pub mod lock;
+pub mod sharded;
 pub mod threaded;
 
+pub use sharded::{PsQuiesce, ShardedPs, Turnstile};
 pub use threaded::ThreadedCluster;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 use crate::embedding::{init_value, shard_rows, EmbOptimizer, PsCluster, TableInfo};
 
@@ -52,14 +72,14 @@ pub struct BackendStats {
 /// `r % n_nodes` at local slot `r / n_nodes`. Every backend, the
 /// checkpoint mirror, and the threaded router all call this — checkpoint
 /// portability across backends depends on there being no second copy, so
-/// implementors must not override [`PsBackend::route`].
+/// implementors must not override [`PsDataPlane::route`].
 #[inline]
 pub fn route_row(global_row: usize, n_nodes: usize) -> (usize, usize) {
     (global_row % n_nodes, global_row / n_nodes)
 }
 
 /// Interior-mutable counters behind `&self` methods; `Clone` snapshots the
-/// current values (so `PsCluster` stays `Clone`).
+/// current values.
 #[derive(Debug, Default)]
 pub struct StatCounters {
     gathers: AtomicU64,
@@ -114,22 +134,29 @@ impl StatCounters {
     }
 }
 
-/// What the coordinator, checkpoint store, and priority trackers need from
-/// an Emb PS cluster runtime. Row routing is fixed (global row `r` lives on
-/// node `r % n_nodes` at local row `r / n_nodes`) so checkpoints taken on
-/// one backend restore onto the other.
+/// The training **data plane** of an Emb PS cluster runtime: everything
+/// the per-step hot path needs, `&self`-concurrent with interior per-node
+/// synchronization. Row routing is fixed (global row `r` lives on node
+/// `r % n_nodes` at local row `r / n_nodes`) so checkpoints taken on one
+/// backend restore onto the other.
 ///
-/// `Send + Sync` because the data-parallel trainer runtime serves N
-/// trainer threads from one backend through [`SharedPs`]: read-path
-/// methods (`gather*`, `read_rows`, `snapshot_node`) take `&self` and run
-/// under concurrent read locks, mutating methods behind a write lock.
-pub trait PsBackend: Send + Sync {
+/// Concurrency contract: any number of threads may call these methods
+/// simultaneously. Two `apply_grads*` calls that touch the *same* node
+/// serialize on that node (in an unspecified order — callers that need
+/// determinism sequence same-node updates themselves, see
+/// [`ShardedPs::apply_grads_ordered`]); calls touching disjoint nodes
+/// proceed in parallel.
+pub trait PsDataPlane: Send + Sync {
     /// Short identifier for reports ("inproc" | "threaded").
     fn name(&self) -> &'static str;
 
     fn tables(&self) -> &[TableInfo];
 
     fn n_nodes(&self) -> usize;
+
+    /// The backend's operation counters (interior-mutable; the sharded
+    /// handle bumps these for operations it composes itself).
+    fn counters(&self) -> &StatCounters;
 
     /// (owner node, local row) of a global row. Fixed for every backend
     /// (see [`route_row`]); do not override.
@@ -149,7 +176,22 @@ pub trait PsBackend: Send + Sync {
 
     /// Sparse update; duplicate rows accumulate in sample order.
     fn apply_grads(
-        &mut self,
+        &self,
+        indices: &[u32],
+        hotness: usize,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    );
+
+    /// Apply only the updates of `indices` owned by `node`, in sample
+    /// order, holding only that node's synchronization. The unit the
+    /// sharded handle sequences with per-node turnstiles — callers
+    /// updating different nodes never contend. Does not bump the apply
+    /// counter (the composing caller does, once per logical batch).
+    fn apply_grads_node(
+        &self,
+        node: usize,
         indices: &[u32],
         hotness: usize,
         grads: &[f32],
@@ -165,73 +207,57 @@ pub trait PsBackend: Send + Sync {
     /// optimizer accumulators ([rows.len()]).
     fn read_rows(&self, table: usize, rows: &[u32]) -> (Vec<f32>, Vec<f32>);
 
+    fn total_params(&self) -> usize {
+        self.tables().iter().map(|t| t.rows * t.dim).sum()
+    }
+}
+
+/// The **control plane** of an Emb PS cluster runtime: checkpoint capture
+/// and restore, failure injection, recovery, diagnostics. Methods take
+/// `&self` (backends synchronize internally), but in the shared runtime
+/// they are only reachable through the exclusive quiesce token
+/// ([`ShardedPs::quiesce`]) the driver acquires at the step barrier — a
+/// control operation never interleaves with an in-flight data-plane call.
+pub trait PsControlPlane: PsDataPlane {
     /// Capture one node's full state (checkpoint save path).
     fn snapshot_node(&self, node: usize) -> NodeSnapshot;
 
     /// Overwrite one node's full state (checkpoint restore path).
-    fn load_node(&mut self, node: usize, shards: &[Vec<f32>], opt: &[Vec<f32>]);
+    fn load_node(&self, node: usize, shards: &[Vec<f32>], opt: &[Vec<f32>]);
 
     /// Reset a node to its deterministic initial values (recovery when no
     /// checkpoint covers it).
-    fn reset_node_to_init(&mut self, node: usize);
+    fn reset_node_to_init(&self, node: usize);
 
     /// A failure event hits this node: its state is lost. On the threaded
     /// backend the worker thread really dies; survivors keep serving.
-    fn kill_node(&mut self, node: usize);
+    fn kill_node(&self, node: usize);
 
     /// Bring a blank replacement for a killed node back online (state at
     /// deterministic init; the recovery protocol then restores it).
-    fn respawn_node(&mut self, node: usize);
+    fn respawn_node(&self, node: usize);
 
-    fn total_params(&self) -> usize {
-        self.tables().iter().map(|t| t.rows * t.dim).sum()
-    }
+    /// Is the node serving? `false` between a kill (or a poison-converted
+    /// writer panic) and the matching respawn.
+    fn alive(&self, node: usize) -> bool;
 
-    fn stats(&self) -> BackendStats;
-}
-
-// ---------------------------------------------------------------------------
-// shared backend handle for concurrent trainers
-// ---------------------------------------------------------------------------
-
-/// A cloneable handle that lets many trainer threads drive one
-/// [`PsBackend`] concurrently: gathers (and every other `&self` method)
-/// run under a shared read lock — on the threaded backend the per-node
-/// workers genuinely interleave requests from different trainers — while
-/// sparse updates and control-plane operations (kill / respawn / restore)
-/// take the write lock. Determinism is the *caller's* contract: the
-/// trainer runtime orders `apply_grads` calls by trainer rank (see
-/// `crate::trainer::Turnstile`), so a run is reproducible even though the
-/// load is concurrent.
-pub struct SharedPs<B: PsBackend>(Arc<RwLock<B>>);
-
-impl<B: PsBackend> Clone for SharedPs<B> {
-    fn clone(&self) -> Self {
-        Self(Arc::clone(&self.0))
+    fn stats(&self) -> BackendStats {
+        self.counters().read()
     }
 }
 
-impl<B: PsBackend> SharedPs<B> {
-    pub fn new(backend: B) -> Self {
-        Self(Arc::new(RwLock::new(backend)))
-    }
+/// Both planes — what the checkpoint store, the coordinator driver, and
+/// the single-trainer reference loop bound on. Blanket-implemented; bound
+/// on the narrower plane where possible.
+pub trait PsBackend: PsControlPlane {}
 
-    /// Shared (read) access: gathers, row reads, snapshots.
-    pub fn read(&self) -> RwLockReadGuard<'_, B> {
-        self.0.read().unwrap_or_else(PoisonError::into_inner)
-    }
-
-    /// Exclusive (write) access: sparse updates, kill/respawn, restores.
-    pub fn write(&self) -> RwLockWriteGuard<'_, B> {
-        self.0.write().unwrap_or_else(PoisonError::into_inner)
-    }
-}
+impl<T: PsControlPlane + ?Sized> PsBackend for T {}
 
 // ---------------------------------------------------------------------------
 // the original in-process cluster as a backend
 // ---------------------------------------------------------------------------
 
-impl PsBackend for PsCluster {
+impl PsDataPlane for PsCluster {
     fn name(&self) -> &'static str {
         "inproc"
     }
@@ -244,13 +270,17 @@ impl PsBackend for PsCluster {
         self.n_nodes
     }
 
+    fn counters(&self) -> &StatCounters {
+        &self.stats
+    }
+
     fn gather_pooled(&self, indices: &[u32], hotness: usize, out: &mut [f32]) {
         self.stats.bump_gather();
         PsCluster::gather_pooled(self, indices, hotness, out);
     }
 
     fn apply_grads(
-        &mut self,
+        &self,
         indices: &[u32],
         hotness: usize,
         grads: &[f32],
@@ -261,55 +291,54 @@ impl PsBackend for PsCluster {
         PsCluster::apply_grads(self, indices, hotness, grads, lr, opt);
     }
 
+    fn apply_grads_node(
+        &self,
+        node: usize,
+        indices: &[u32],
+        hotness: usize,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    ) {
+        PsCluster::apply_grads_node(self, node, indices, hotness, grads, lr, opt);
+    }
+
     fn read_row(&self, table: usize, global_row: usize, out: &mut [f32]) {
         PsCluster::read_row(self, table, global_row, out);
     }
 
     fn read_rows(&self, table: usize, rows: &[u32]) -> (Vec<f32>, Vec<f32>) {
-        let dim = self.tables[table].dim;
-        let mut data = vec![0.0f32; rows.len() * dim];
-        let mut opt = vec![0.0f32; rows.len()];
-        for (i, &row) in rows.iter().enumerate() {
-            let (node, local) = PsCluster::route(self, row as usize);
-            data[i * dim..(i + 1) * dim]
-                .copy_from_slice(&self.shard(node, table)[local * dim..(local + 1) * dim]);
-            opt[i] = self.opt_shard(node, table)[local];
-        }
-        (data, opt)
+        PsCluster::read_rows(self, table, rows)
     }
+}
 
+impl PsControlPlane for PsCluster {
     fn snapshot_node(&self, node: usize) -> NodeSnapshot {
         self.stats.bump_snapshot();
-        NodeSnapshot {
-            node,
-            shards: (0..self.tables.len()).map(|t| self.shard(node, t).to_vec()).collect(),
-            opt: (0..self.tables.len()).map(|t| self.opt_shard(node, t).to_vec()).collect(),
-        }
+        let (shards, opt) = self.snapshot_parts(node);
+        NodeSnapshot { node, shards, opt }
     }
 
-    fn load_node(&mut self, node: usize, shards: &[Vec<f32>], opt: &[Vec<f32>]) {
-        for t in 0..self.tables.len() {
-            self.shard_mut(node, t).copy_from_slice(&shards[t]);
-            self.opt_shard_mut(node, t).copy_from_slice(&opt[t]);
-        }
+    fn load_node(&self, node: usize, shards: &[Vec<f32>], opt: &[Vec<f32>]) {
+        PsCluster::load_node(self, node, shards, opt);
     }
 
-    fn reset_node_to_init(&mut self, node: usize) {
+    fn reset_node_to_init(&self, node: usize) {
         PsCluster::reset_node_to_init(self, node);
     }
 
-    fn kill_node(&mut self, node: usize) {
-        // in-process emulation of a node death: its state is wiped
+    fn kill_node(&self, node: usize) {
         self.stats.bump_kill();
-        PsCluster::reset_node_to_init(self, node);
+        PsCluster::kill_node(self, node);
     }
 
-    fn respawn_node(&mut self, _node: usize) {
+    fn respawn_node(&self, node: usize) {
         self.stats.bump_respawn();
+        PsCluster::respawn_node(self, node);
     }
 
-    fn stats(&self) -> BackendStats {
-        self.stats.read()
+    fn alive(&self, node: usize) -> bool {
+        PsCluster::alive(self, node)
     }
 }
 
@@ -357,17 +386,17 @@ mod tests {
         let mut a = vec![0.0; 3 * 2 * 4];
         let mut b = vec![0.0; 3 * 2 * 4];
         PsCluster::gather(&c, &idx, &mut a);
-        PsBackend::gather(&c, &idx, &mut b);
+        PsDataPlane::gather(&c, &idx, &mut b);
         assert_eq!(a, b);
     }
 
     #[test]
     fn read_rows_matches_read_row() {
-        let mut c = cluster();
-        PsBackend::apply_grads(&mut c, &[4, 2], 1, &[0.3f32; 8], 1.0,
-                               EmbOptimizer::RowAdagrad { eps: 1e-8 });
+        let c = cluster();
+        PsDataPlane::apply_grads(&c, &[4, 2], 1, &[0.3f32; 8], 1.0,
+                                 EmbOptimizer::RowAdagrad { eps: 1e-8 });
         let rows = vec![4u32, 0, 7];
-        let (data, opt) = c.read_rows(0, &rows);
+        let (data, opt) = PsDataPlane::read_rows(&c, 0, &rows);
         let mut want = vec![0.0; 4];
         for (i, &r) in rows.iter().enumerate() {
             c.read_row(0, r as usize, &mut want);
@@ -379,63 +408,36 @@ mod tests {
 
     #[test]
     fn snapshot_load_roundtrip() {
-        let mut c = cluster();
-        PsBackend::apply_grads(&mut c, &[3, 1], 1, &[1.0f32; 8], 0.5,
-                               EmbOptimizer::Sgd);
-        let snap = c.snapshot_node(0);
+        let c = cluster();
+        PsDataPlane::apply_grads(&c, &[3, 1], 1, &[1.0f32; 8], 0.5,
+                                 EmbOptimizer::Sgd);
+        let snap = PsControlPlane::snapshot_node(&c, 0);
         assert_eq!(snap.node, 0);
-        PsBackend::apply_grads(&mut c, &[3, 1], 1, &[1.0f32; 8], 0.5,
-                               EmbOptimizer::Sgd);
-        let after = c.snapshot_node(0);
+        PsDataPlane::apply_grads(&c, &[3, 1], 1, &[1.0f32; 8], 0.5,
+                                 EmbOptimizer::Sgd);
+        let after = PsControlPlane::snapshot_node(&c, 0);
         assert_ne!(snap, after);
-        c.load_node(0, &snap.shards, &snap.opt);
-        assert_eq!(c.snapshot_node(0).shards, snap.shards);
+        PsControlPlane::load_node(&c, 0, &snap.shards, &snap.opt);
+        assert_eq!(PsControlPlane::snapshot_node(&c, 0).shards, snap.shards);
     }
 
     #[test]
     fn kill_wipes_to_init_and_stats_count() {
-        let mut c = cluster();
-        PsBackend::apply_grads(&mut c, &[3, 1], 1, &[1.0f32; 8], 0.5,
-                               EmbOptimizer::Sgd);
-        c.kill_node(0); // row 3 lives on node 0 (3 % 3)
-        c.respawn_node(0);
+        let c = cluster();
+        PsDataPlane::apply_grads(&c, &[3, 1], 1, &[1.0f32; 8], 0.5,
+                                 EmbOptimizer::Sgd);
+        PsControlPlane::kill_node(&c, 0); // row 3 lives on node 0 (3 % 3)
+        assert!(!PsControlPlane::alive(&c, 0));
+        PsControlPlane::respawn_node(&c, 0);
+        assert!(PsControlPlane::alive(&c, 0));
         let fresh = cluster();
         let mut a = vec![0.0; 4];
         let mut b = vec![0.0; 4];
         c.read_row(0, 3, &mut a);
         fresh.read_row(0, 3, &mut b);
         assert_eq!(a, b);
-        let s = PsBackend::stats(&c);
+        let s = PsControlPlane::stats(&c);
         assert_eq!((s.kills, s.respawns, s.applies), (1, 1, 1));
-    }
-
-    #[test]
-    fn shared_handle_serves_concurrent_gathers() {
-        // 4 threads gather through one SharedPs handle at once; every
-        // result must match the single-threaded reference, and a write
-        // (sparse update) afterwards must still go through.
-        let reference = cluster();
-        let idx = vec![0u32, 1, 10, 5, 3, 2];
-        let mut want = vec![0.0f32; 3 * 2 * 4];
-        PsBackend::gather(&reference, &idx, &mut want);
-        let shared = SharedPs::new(cluster());
-        std::thread::scope(|s| {
-            for _ in 0..4 {
-                let shared = shared.clone();
-                let idx = idx.clone();
-                let want = want.clone();
-                s.spawn(move || {
-                    for _ in 0..50 {
-                        let mut out = vec![0.0f32; 3 * 2 * 4];
-                        PsBackend::gather(&*shared.read(), &idx, &mut out);
-                        assert_eq!(out, want);
-                    }
-                });
-            }
-        });
-        PsBackend::apply_grads(&mut *shared.write(), &idx[..2], 1,
-                               &[0.1f32; 8], 1.0, EmbOptimizer::Sgd);
-        assert_eq!(PsBackend::stats(&*shared.read()).applies, 1);
     }
 
     #[test]
@@ -447,7 +449,7 @@ mod tests {
         );
         for node in 0..4 {
             let (shards, opt) = init_node_state(c.tables(), 4, node, 77);
-            let snap = c.snapshot_node(node);
+            let snap = PsControlPlane::snapshot_node(&c, node);
             assert_eq!(shards, snap.shards, "node {node}");
             assert_eq!(opt, snap.opt);
         }

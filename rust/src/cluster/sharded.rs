@@ -1,0 +1,544 @@
+//! [`ShardedPs`] — the sharded shared handle that replaced the global
+//! `SharedPs(Arc<RwLock<B>>)`.
+//!
+//! The old handle funneled every gather and every sparse update from all
+//! N trainers through one global lock, so cross-node writes serialized
+//! and the trainer-scaling benches measured lock convoying instead of PS
+//! throughput. The paper's premise is the opposite: the Emb PS cluster is
+//! *sharded*, node failures are independent, and per-shard concurrency is
+//! what makes PS-side fault tolerance cheap (ECRM). This handle makes the
+//! seam match:
+//!
+//! * **data plane** — `gather*` / `read_rows` / `apply_grads*` go straight
+//!   to the backend's `&self` methods (per-node interior locks); two
+//!   trainers touching rows owned by different PS nodes never contend.
+//!   All data-plane calls hold a shared *epoch* read lock, which only
+//!   excludes the control plane, never each other.
+//! * **ordered updates** — [`ShardedPs::apply_grads_ordered`] sequences
+//!   same-node updates across trainers with one [`Turnstile`] *per node*
+//!   (the old runtime had a single global turnstile): trainer rank order
+//!   is enforced within each node's queue only, so rank r+1 can be
+//!   applying on node A while rank r is still applying on node B.
+//!   Per-node sample-order apply keeps the floats bit-identical to the
+//!   old global rank-ordered scatter — each row lives on exactly one
+//!   node, so the per-row update sequence is unchanged.
+//! * **control plane** — [`ShardedPs::quiesce`] hands out the exclusive
+//!   epoch write lock as a [`PsQuiesce`] token. Checkpoint capture,
+//!   failure injection, and restores go through the token, which the
+//!   driver acquires at the step barrier (every trainer idle ⇒ the lock
+//!   is free); a control operation can never interleave with an in-flight
+//!   gather or scatter.
+
+use std::ops::Deref;
+use std::sync::{
+    Arc, Condvar, Mutex, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+
+use crate::embedding::{EmbOptimizer, TableInfo};
+
+use super::{PsBackend, PsDataPlane, StatCounters};
+
+/// A monotone ticket sequencer: thread `wait_for(t)` blocks until every
+/// ticket `< t` has been consumed via [`Turnstile::advance`]. The sharded
+/// handle keeps one per PS node, so rank order is enforced only within a
+/// node's update queue.
+pub struct Turnstile {
+    next: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Default for Turnstile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Turnstile {
+    pub fn new() -> Self {
+        Self { next: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    /// Block until `ticket` is the next to be served.
+    pub fn wait_for(&self, ticket: u64) {
+        let mut g = self.next.lock().unwrap_or_else(PoisonError::into_inner);
+        while *g != ticket {
+            g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Consume the current ticket, releasing the next waiter.
+    pub fn advance(&self) {
+        let mut g = self.next.lock().unwrap_or_else(PoisonError::into_inner);
+        *g += 1;
+        self.cv.notify_all();
+    }
+}
+
+struct Inner<B> {
+    backend: B,
+    /// Epoch lock: data-plane calls share it (read), the quiesce token is
+    /// exclusive (write). Guards only the `()` — the real state sits
+    /// behind the backend's per-node synchronization.
+    epoch: RwLock<()>,
+    /// One per PS node: sequences same-node sparse updates by ticket.
+    turnstiles: Vec<Turnstile>,
+}
+
+/// Cloneable sharded handle over one [`PsBackend`] (see module docs).
+pub struct ShardedPs<B: PsBackend> {
+    inner: Arc<Inner<B>>,
+}
+
+impl<B: PsBackend> Clone for ShardedPs<B> {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<B: PsBackend> ShardedPs<B> {
+    pub fn new(backend: B) -> Self {
+        let n = backend.n_nodes();
+        Self {
+            inner: Arc::new(Inner {
+                backend,
+                epoch: RwLock::new(()),
+                turnstiles: (0..n).map(|_| Turnstile::new()).collect(),
+            }),
+        }
+    }
+
+    fn epoch_read(&self) -> RwLockReadGuard<'_, ()> {
+        // the lock guards (), so std-poison carries no information
+        self.inner.epoch.read().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Rank-ordered sparse update: same-node updates across callers apply
+    /// in ascending `ticket` order (per-node turnstiles), node-disjoint
+    /// updates in parallel. Tickets must be dense: every ticket below the
+    /// highest ever passed must eventually reach this method or
+    /// [`ShardedPs::skip_ordered`], or later tickets block forever.
+    pub fn apply_grads_ordered(
+        &self,
+        ticket: u64,
+        indices: &[u32],
+        hotness: usize,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    ) {
+        let _epoch = self.epoch_read();
+        let n = self.inner.backend.n_nodes();
+        let mut touched = vec![false; n];
+        for &row in indices {
+            touched[row as usize % n] = true;
+        }
+        for (node, &is_touched) in touched.iter().enumerate() {
+            self.inner.turnstiles[node].wait_for(ticket);
+            if is_touched {
+                self.inner
+                    .backend
+                    .apply_grads_node(node, indices, hotness, grads, lr, opt);
+            }
+            self.inner.turnstiles[node].advance();
+        }
+        self.inner.backend.counters().bump_apply();
+    }
+
+    /// Consume `ticket` on every node without applying anything — a
+    /// participant that failed to produce an update must still pass its
+    /// turn through every node queue, or every later ticket deadlocks.
+    pub fn skip_ordered(&self, ticket: u64) {
+        let _epoch = self.epoch_read();
+        for ts in &self.inner.turnstiles {
+            ts.wait_for(ticket);
+            ts.advance();
+        }
+    }
+
+    /// Acquire the exclusive quiesce token for control-plane operations
+    /// (checkpoint capture/restore, kill/respawn). Blocks until every
+    /// in-flight data-plane call drains; the driver calls this at the
+    /// step barrier, where the handle is idle and acquisition is free.
+    pub fn quiesce(&self) -> PsQuiesce<'_, B> {
+        PsQuiesce {
+            _epoch: self.inner.epoch.write().unwrap_or_else(PoisonError::into_inner),
+            backend: &self.inner.backend,
+        }
+    }
+
+    /// Current backend stats (diagnostic read; no quiesce needed).
+    pub fn stats(&self) -> super::BackendStats {
+        self.inner.backend.counters().read()
+    }
+}
+
+/// Data-plane reads/writes go straight through the handle (shared epoch
+/// lock), so evaluation and benches can treat it as a [`PsDataPlane`].
+/// The trait's `apply_grads` here is *unordered* across threads — the
+/// trainer runtime uses [`ShardedPs::apply_grads_ordered`] instead.
+impl<B: PsBackend> PsDataPlane for ShardedPs<B> {
+    fn name(&self) -> &'static str {
+        self.inner.backend.name()
+    }
+
+    fn tables(&self) -> &[TableInfo] {
+        self.inner.backend.tables()
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.inner.backend.n_nodes()
+    }
+
+    fn counters(&self) -> &StatCounters {
+        self.inner.backend.counters()
+    }
+
+    fn gather_pooled(&self, indices: &[u32], hotness: usize, out: &mut [f32]) {
+        let _epoch = self.epoch_read();
+        self.inner.backend.gather_pooled(indices, hotness, out);
+    }
+
+    fn apply_grads(
+        &self,
+        indices: &[u32],
+        hotness: usize,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    ) {
+        let _epoch = self.epoch_read();
+        self.inner.backend.apply_grads(indices, hotness, grads, lr, opt);
+    }
+
+    fn apply_grads_node(
+        &self,
+        node: usize,
+        indices: &[u32],
+        hotness: usize,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    ) {
+        let _epoch = self.epoch_read();
+        self.inner.backend.apply_grads_node(node, indices, hotness, grads, lr, opt);
+    }
+
+    fn read_row(&self, table: usize, global_row: usize, out: &mut [f32]) {
+        let _epoch = self.epoch_read();
+        self.inner.backend.read_row(table, global_row, out);
+    }
+
+    fn read_rows(&self, table: usize, rows: &[u32]) -> (Vec<f32>, Vec<f32>) {
+        let _epoch = self.epoch_read();
+        self.inner.backend.read_rows(table, rows)
+    }
+}
+
+/// The exclusive quiesce token: proof that no data-plane call is in
+/// flight. Derefs to the backend, exposing the full [`PsBackend`] surface
+/// (both planes) to checkpoint capture, restore, and failure injection.
+pub struct PsQuiesce<'a, B: PsBackend> {
+    _epoch: RwLockWriteGuard<'a, ()>,
+    backend: &'a B,
+}
+
+impl<B: PsBackend> Deref for PsQuiesce<'_, B> {
+    type Target = B;
+
+    fn deref(&self) -> &B {
+        self.backend
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{PsControlPlane, ThreadedCluster};
+    use crate::embedding::PsCluster;
+    use crate::prop_assert;
+    use crate::testing::{forall, gen};
+    use crate::util::rng::Rng;
+    use std::sync::Mutex as StdMutex;
+
+    const TABLES: [TableInfo; 2] =
+        [TableInfo { rows: 23, dim: 4 }, TableInfo { rows: 11, dim: 4 }];
+
+    #[test]
+    fn turnstile_serves_tickets_in_order() {
+        let t = Arc::new(Turnstile::new());
+        let order = Arc::new(StdMutex::new(Vec::new()));
+        std::thread::scope(|s| {
+            for ticket in (0..8u64).rev() {
+                let t = Arc::clone(&t);
+                let order = Arc::clone(&order);
+                s.spawn(move || {
+                    t.wait_for(ticket);
+                    order.lock().unwrap().push(ticket);
+                    t.advance();
+                });
+            }
+        });
+        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn handle_serves_concurrent_gathers() {
+        // 4 threads gather through one handle at once; every result must
+        // match the single-threaded reference, and an ordered update
+        // afterwards must still go through.
+        let reference = PsCluster::new(TABLES.to_vec(), 3, 5);
+        let idx = vec![0u32, 1, 10, 5, 3, 2];
+        let mut want = vec![0.0f32; 3 * 2 * 4];
+        PsDataPlane::gather(&reference, &idx, &mut want);
+        let shared = ShardedPs::new(PsCluster::new(TABLES.to_vec(), 3, 5));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let shared = shared.clone();
+                let idx = idx.clone();
+                let want = want.clone();
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let mut out = vec![0.0f32; 3 * 2 * 4];
+                        shared.gather(&idx, &mut out);
+                        assert_eq!(out, want);
+                    }
+                });
+            }
+        });
+        shared.apply_grads_ordered(0, &idx[..2], 1, &[0.1f32; 8], 1.0,
+                                   EmbOptimizer::Sgd);
+        assert_eq!(shared.stats().applies, 1);
+    }
+
+    #[test]
+    fn quiesce_token_runs_the_recovery_protocol() {
+        let shared = ShardedPs::new(PsCluster::new(TABLES.to_vec(), 3, 5));
+        shared.apply_grads_ordered(0, &[3, 1], 1, &[1.0f32; 8], 0.5,
+                                   EmbOptimizer::Sgd);
+        let snap = {
+            let q = shared.quiesce();
+            q.snapshot_node(0)
+        };
+        shared.apply_grads_ordered(1, &[3, 1], 1, &[1.0f32; 8], 0.5,
+                                   EmbOptimizer::Sgd);
+        {
+            let q = shared.quiesce();
+            q.kill_node(0);
+            assert!(!q.alive(0));
+            q.respawn_node(0);
+            q.load_node(0, &snap.shards, &snap.opt);
+            assert_eq!(q.snapshot_node(0).shards, snap.shards);
+        }
+        // the handle keeps serving after the token drops
+        let mut out = vec![0.0f32; 4];
+        shared.read_row(0, 3, &mut out);
+    }
+
+    /// THE bit-identicality property (satellite): per-node sample-order
+    /// apply under the sharded handle — N concurrent appliers sequenced
+    /// only by per-node turnstiles — must produce exactly the floats of
+    /// the old global rank-ordered apply, for random batches with row
+    /// collisions, on both backends.
+    #[test]
+    fn property_sharded_apply_matches_global_rank_order() {
+        forall(0x5EAD, 10, |rng| {
+            let n_nodes = gen::usize_in(rng, 1, 5);
+            let n_appliers = gen::usize_in(rng, 1, 4);
+            let steps = gen::usize_in(rng, 1, 3);
+            let b = gen::usize_in(rng, 2, 6);
+            let hotness = gen::usize_in(rng, 1, 2);
+            let seed = rng.next_u64();
+            let dim = 4;
+            // random batches, biased small so row collisions are common
+            let mut batches: Vec<Vec<(Vec<u32>, Vec<f32>)>> = Vec::new();
+            for _ in 0..steps {
+                let mut per_rank = Vec::new();
+                for _ in 0..n_appliers {
+                    let idx: Vec<u32> = (0..b * 2 * hotness)
+                        .enumerate()
+                        .map(|(i, _)| {
+                            let t = (i / hotness) % 2;
+                            rng.below(TABLES[t].rows as u64) as u32
+                        })
+                        .collect();
+                    let grads: Vec<f32> =
+                        (0..b * 2 * dim).map(|_| rng.f32() - 0.5).collect();
+                    per_rank.push((idx, grads));
+                }
+                batches.push(per_rank);
+            }
+            let opt = if rng.f64() < 0.5 {
+                EmbOptimizer::Sgd
+            } else {
+                EmbOptimizer::RowAdagrad { eps: 1e-8 }
+            };
+            // reference: strict global rank order, single thread
+            let reference = PsCluster::new(TABLES.to_vec(), n_nodes, seed);
+            for per_rank in &batches {
+                for (idx, grads) in per_rank {
+                    PsDataPlane::apply_grads(&reference, idx, hotness, grads,
+                                             0.3, opt);
+                }
+            }
+            // sharded: N threads, per-node turnstile order only
+            let run_sharded = |shared: &ShardedPs<PsCluster>| {
+                std::thread::scope(|s| {
+                    for rank in 0..n_appliers {
+                        let shared = shared.clone();
+                        let batches = &batches;
+                        s.spawn(move || {
+                            for (step, per_rank) in batches.iter().enumerate() {
+                                let ticket =
+                                    (step * n_appliers + rank) as u64;
+                                let (idx, grads) = &per_rank[rank];
+                                shared.apply_grads_ordered(
+                                    ticket, idx, hotness, grads, 0.3, opt);
+                            }
+                        });
+                    }
+                });
+            };
+            let sharded = ShardedPs::new(PsCluster::new(TABLES.to_vec(),
+                                                        n_nodes, seed));
+            run_sharded(&sharded);
+            let q = sharded.quiesce();
+            for node in 0..n_nodes {
+                let a = PsControlPlane::snapshot_node(&reference, node);
+                let b = q.snapshot_node(node);
+                prop_assert!(a.shards == b.shards,
+                             "node {node} shards diverged (inproc)");
+                prop_assert!(a.opt == b.opt,
+                             "node {node} optimizer state diverged (inproc)");
+            }
+            drop(q);
+            // and the threaded backend under the same handle
+            let threaded = ShardedPs::new(ThreadedCluster::new(
+                TABLES.to_vec(), n_nodes, seed));
+            std::thread::scope(|s| {
+                for rank in 0..n_appliers {
+                    let shared = threaded.clone();
+                    let batches = &batches;
+                    s.spawn(move || {
+                        for (step, per_rank) in batches.iter().enumerate() {
+                            let ticket = (step * n_appliers + rank) as u64;
+                            let (idx, grads) = &per_rank[rank];
+                            shared.apply_grads_ordered(
+                                ticket, idx, hotness, grads, 0.3, opt);
+                        }
+                    });
+                }
+            });
+            let q = threaded.quiesce();
+            for node in 0..n_nodes {
+                let a = PsControlPlane::snapshot_node(&reference, node);
+                let b = q.snapshot_node(node);
+                prop_assert!(a.shards == b.shards,
+                             "node {node} shards diverged (threaded)");
+                prop_assert!(a.opt == b.opt,
+                             "node {node} optimizer state diverged (threaded)");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn disjoint_node_appliers_overlap() {
+        // two appliers whose rows live on different nodes must be able to
+        // hold their node applies concurrently: rank 1 (later ticket on
+        // every turnstile) still finishes while rank 0 is parked inside
+        // its own apply. We emulate "parked" with a big batch on node 0
+        // and assert rank 1's node-1 apply completes even though rank 0's
+        // ticket for node 1 is consumed before its node-0 work ends — the
+        // turnstile loop advances untouched nodes immediately.
+        let tables = vec![TableInfo { rows: 64, dim: 8 }];
+        let shared = ShardedPs::new(PsCluster::new(tables, 2, 1));
+        let idx0: Vec<u32> = (0..32).map(|i| (i * 2) as u32).collect(); // node 0
+        let idx1: Vec<u32> = (0..32).map(|i| (i * 2 + 1) as u32).collect(); // node 1
+        let g = vec![0.01f32; 32 * 8];
+        std::thread::scope(|s| {
+            let sh = shared.clone();
+            let (i0, g0) = (idx0.clone(), g.clone());
+            s.spawn(move || {
+                for step in 0..50u64 {
+                    sh.apply_grads_ordered(step * 2, &i0, 1, &g0, 0.1,
+                                           EmbOptimizer::Sgd);
+                }
+            });
+            let sh = shared.clone();
+            let (i1, g1) = (idx1.clone(), g.clone());
+            s.spawn(move || {
+                for step in 0..50u64 {
+                    sh.apply_grads_ordered(step * 2 + 1, &i1, 1, &g1, 0.1,
+                                           EmbOptimizer::Sgd);
+                }
+            });
+        });
+        assert_eq!(shared.stats().applies, 100);
+        // node-0 rows got exactly rank 0's updates, node-1 rows rank 1's
+        let reference = PsCluster::new(vec![TableInfo { rows: 64, dim: 8 }], 2, 1);
+        for _ in 0..50 {
+            PsDataPlane::apply_grads(&reference, &idx0, 1, &g, 0.1,
+                                     EmbOptimizer::Sgd);
+            PsDataPlane::apply_grads(&reference, &idx1, 1, &g, 0.1,
+                                     EmbOptimizer::Sgd);
+        }
+        let q = shared.quiesce();
+        for node in 0..2 {
+            assert_eq!(PsControlPlane::snapshot_node(&reference, node).shards,
+                       q.snapshot_node(node).shards);
+        }
+    }
+
+    #[test]
+    fn skip_ordered_unblocks_later_tickets() {
+        let shared = ShardedPs::new(PsCluster::new(TABLES.to_vec(), 2, 3));
+        let idx = vec![0u32, 1];
+        let g = vec![0.1f32; 8];
+        std::thread::scope(|s| {
+            let sh = shared.clone();
+            let (idx, g) = (idx.clone(), g.clone());
+            // ticket 1 blocks until ticket 0 is consumed
+            s.spawn(move || {
+                sh.apply_grads_ordered(1, &idx, 1, &g, 0.1, EmbOptimizer::Sgd)
+            });
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            shared.skip_ordered(0); // a failed rank passes its turn
+        });
+        assert_eq!(shared.stats().applies, 1);
+    }
+
+    #[test]
+    fn poisoned_node_under_the_handle_reads_as_failed() {
+        // a trainer panicking mid-apply through the sharded handle must
+        // fail exactly the node it was writing; the quiesce token then
+        // runs kill/respawn and service resumes
+        let shared = ShardedPs::new(PsCluster::new(TABLES.to_vec(), 3, 9));
+        // row 9999 → node 0 with an OOB local slot; the second slot also
+        // routes to node 0 (0 % 3), so ONLY node 0's guard is held at the
+        // panic — a guard held at panic time conservatively fails its node
+        let bogus = vec![9999u32, 0];
+        let r = std::thread::scope(|s| {
+            let sh = shared.clone();
+            s.spawn(move || {
+                sh.apply_grads_ordered(0, &bogus, 1, &[0.1f32; 8], 1.0,
+                                       EmbOptimizer::Sgd)
+            })
+            .join()
+        });
+        assert!(r.is_err());
+        {
+            let q = shared.quiesce();
+            assert!(!q.alive(0), "poisoned node must read as failed");
+            assert!(q.alive(1) && q.alive(2));
+            q.kill_node(0);
+            q.respawn_node(0);
+            assert!(q.alive(0));
+        }
+        // NOTE: ticket 0 died before advancing every turnstile; fresh
+        // runs must re-sync the queues before ordered traffic resumes.
+        // The trainer pool never reuses a handle after a wedged step, so
+        // here we just verify unordered reads still work.
+        let mut out = vec![0.0f32; 4];
+        shared.read_row(0, 3, &mut out);
+    }
+}

@@ -2,24 +2,35 @@
 //!
 //! Every node is a worker thread owning its shards (per-table row slices +
 //! optimizer accumulators), served over an mpsc request/reply channel. The
-//! router (the `PsBackend` methods on [`ThreadedCluster`]) shards each
+//! router (the [`PsDataPlane`] methods on [`ThreadedCluster`]) shards each
 //! batched request by row ownership, fans the per-node slices out to all
 //! live workers, and reassembles the replies **in slot order** so results
 //! are bit-identical to the in-process backend regardless of which worker
 //! answers first.
 //!
-//! Failure injection is real here: [`PsBackend::kill_node`] sends `Kill`
-//! and joins the worker — its state is gone, exactly like a production PS
-//! node loss — while the other workers keep serving gathers. `respawn_node`
-//! brings up a blank replacement at deterministic init, and the partial
-//! recovery protocol (coordinator + checkpoint pipeline) restores its rows
-//! from the last checkpoint.
+//! The per-node channels *are* the data plane: every router method takes
+//! `&self` (senders are cloned out of per-node slots), so N trainers can
+//! drive the cluster concurrently with no global lock — requests to
+//! different nodes land on different worker threads and proceed in
+//! parallel; requests to the same node serialize in that node's queue.
+//! A trainer panic cannot corrupt a worker (state never leaves the worker
+//! thread), so poison-conversion only concerns the in-process backend.
+//!
+//! Failure injection is real here: [`super::PsControlPlane::kill_node`]
+//! sends `Kill` and joins the worker — its state is gone, exactly like a
+//! production PS node loss — while the other workers keep serving.
+//! `respawn_node` brings up a blank replacement at deterministic init, and
+//! the partial recovery protocol (coordinator + checkpoint pipeline)
+//! restores its rows from the last checkpoint.
 
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 
-use super::{init_node_state, route_row, BackendStats, NodeSnapshot, PsBackend, StatCounters};
+use super::{
+    init_node_state, route_row, NodeSnapshot, PsControlPlane, PsDataPlane,
+    StatCounters,
+};
 use crate::embedding::{EmbOptimizer, TableInfo};
 
 /// One routed gather slot: read `local` of `table`.
@@ -61,8 +72,10 @@ pub struct ThreadedCluster {
     tables: Vec<TableInfo>,
     n_nodes: usize,
     seed: u64,
-    /// `None` = the node is dead (killed, not yet respawned)
-    workers: Vec<Option<Worker>>,
+    /// per-node worker slot; `None` = the node is dead (killed, not yet
+    /// respawned). Slots are independently locked so kill/respawn of one
+    /// node never blocks routing to another.
+    workers: Vec<Mutex<Option<Worker>>>,
     stats: StatCounters,
 }
 
@@ -138,7 +151,7 @@ impl ThreadedCluster {
     pub fn new(tables: Vec<TableInfo>, n_nodes: usize, seed: u64) -> Self {
         assert!(n_nodes >= 1);
         let workers = (0..n_nodes)
-            .map(|node_id| Some(Self::spawn(&tables, n_nodes, node_id, seed)))
+            .map(|node_id| Mutex::new(Some(Self::spawn(&tables, n_nodes, node_id, seed))))
             .collect();
         Self { tables, n_nodes, seed, workers, stats: StatCounters::default() }
     }
@@ -153,19 +166,27 @@ impl ThreadedCluster {
         Worker { tx, join }
     }
 
-    pub fn alive(&self, node: usize) -> bool {
-        self.workers[node].is_some()
+    fn slot(&self, node: usize) -> std::sync::MutexGuard<'_, Option<Worker>> {
+        // the slot holds only channel handles; a poisoned slot mutex means
+        // a router thread died mid-clone, which cannot corrupt the Option
+        self.workers[node].lock().unwrap_or_else(PoisonError::into_inner)
     }
 
-    fn sender(&self, node: usize) -> &Sender<NodeMsg> {
-        match &self.workers[node] {
-            Some(w) => &w.tx,
+    pub fn alive(&self, node: usize) -> bool {
+        self.slot(node).is_some()
+    }
+
+    /// Clone the node's request sender (cheap: an `Arc` bump) so routing
+    /// never holds the slot lock across a channel send.
+    fn sender(&self, node: usize) -> Sender<NodeMsg> {
+        match &*self.slot(node) {
+            Some(w) => w.tx.clone(),
             None => panic!("Emb PS node {node} is dead (killed, not respawned)"),
         }
     }
 }
 
-impl PsBackend for ThreadedCluster {
+impl PsDataPlane for ThreadedCluster {
     fn name(&self) -> &'static str {
         "threaded"
     }
@@ -176,6 +197,10 @@ impl PsBackend for ThreadedCluster {
 
     fn n_nodes(&self) -> usize {
         self.n_nodes
+    }
+
+    fn counters(&self) -> &StatCounters {
+        &self.stats
     }
 
     fn gather_pooled(&self, indices: &[u32], hotness: usize, out: &mut [f32]) {
@@ -230,7 +255,7 @@ impl PsBackend for ThreadedCluster {
     }
 
     fn apply_grads(
-        &mut self,
+        &self,
         indices: &[u32],
         hotness: usize,
         grads: &[f32],
@@ -276,6 +301,52 @@ impl PsBackend for ThreadedCluster {
         }
     }
 
+    fn apply_grads_node(
+        &self,
+        node: usize,
+        indices: &[u32],
+        hotness: usize,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    ) {
+        let t = self.tables.len();
+        let dim = self.tables[0].dim;
+        debug_assert_eq!(grads.len() * hotness, indices.len() * dim);
+        // ship only this node's gradient slices: the per-node compact
+        // buffer re-indexes grad_slot to the request's own position, so an
+        // 8-node ordered scatter does not copy the full gradient 8 times
+        let mut reqs: Vec<UpdateReq> = Vec::new();
+        let mut compact: Vec<f32> = Vec::new();
+        for (slot, &row) in indices.iter().enumerate() {
+            let (owner, local) = route_row(row as usize, self.n_nodes);
+            if owner != node {
+                continue;
+            }
+            let src_slot = slot / hotness;
+            reqs.push(UpdateReq {
+                table: (src_slot % t) as u32,
+                local: local as u32,
+                grad_slot: (compact.len() / dim) as u32,
+            });
+            compact.extend_from_slice(&grads[src_slot * dim..(src_slot + 1) * dim]);
+        }
+        if reqs.is_empty() {
+            return;
+        }
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.sender(node)
+            .send(NodeMsg::Apply {
+                reqs,
+                grads: Arc::new(compact),
+                lr,
+                opt,
+                ack: ack_tx,
+            })
+            .expect("Emb PS worker hung up");
+        ack_rx.recv().expect("Emb PS worker died mid-update");
+    }
+
     fn read_row(&self, table: usize, global_row: usize, out: &mut [f32]) {
         let (data, _) = self.read_rows(table, &[global_row as u32]);
         out.copy_from_slice(&data);
@@ -318,7 +389,9 @@ impl PsBackend for ThreadedCluster {
         }
         (data, opt)
     }
+}
 
+impl PsControlPlane for ThreadedCluster {
     fn snapshot_node(&self, node: usize) -> NodeSnapshot {
         self.stats.bump_snapshot();
         let (reply_tx, reply_rx) = mpsc::channel();
@@ -328,7 +401,7 @@ impl PsBackend for ThreadedCluster {
         reply_rx.recv().expect("Emb PS worker died mid-snapshot")
     }
 
-    fn load_node(&mut self, node: usize, shards: &[Vec<f32>], opt: &[Vec<f32>]) {
+    fn load_node(&self, node: usize, shards: &[Vec<f32>], opt: &[Vec<f32>]) {
         let (ack_tx, ack_rx) = mpsc::channel();
         self.sender(node)
             .send(NodeMsg::Load { shards: shards.to_vec(), opt: opt.to_vec(), ack: ack_tx })
@@ -336,7 +409,7 @@ impl PsBackend for ThreadedCluster {
         ack_rx.recv().expect("Emb PS worker died mid-restore");
     }
 
-    fn reset_node_to_init(&mut self, node: usize) {
+    fn reset_node_to_init(&self, node: usize) {
         let (ack_tx, ack_rx) = mpsc::channel();
         self.sender(node)
             .send(NodeMsg::Reset { ack: ack_tx })
@@ -344,30 +417,33 @@ impl PsBackend for ThreadedCluster {
         ack_rx.recv().expect("Emb PS worker died mid-reset");
     }
 
-    fn kill_node(&mut self, node: usize) {
+    fn kill_node(&self, node: usize) {
         self.stats.bump_kill();
-        if let Some(w) = self.workers[node].take() {
+        if let Some(w) = self.slot(node).take() {
             let _ = w.tx.send(NodeMsg::Kill);
             let _ = w.join.join();
         }
     }
 
-    fn respawn_node(&mut self, node: usize) {
-        assert!(self.workers[node].is_none(), "node {node} is already alive");
+    fn respawn_node(&self, node: usize) {
         self.stats.bump_respawn();
-        self.workers[node] = Some(Self::spawn(&self.tables, self.n_nodes, node, self.seed));
+        let mut slot = self.slot(node);
+        assert!(slot.is_none(), "node {node} is already alive");
+        *slot = Some(Self::spawn(&self.tables, self.n_nodes, node, self.seed));
     }
 
-    fn stats(&self) -> BackendStats {
-        self.stats.read()
+    fn alive(&self, node: usize) -> bool {
+        ThreadedCluster::alive(self, node)
     }
 }
 
 impl Drop for ThreadedCluster {
     fn drop(&mut self) {
-        for w in self.workers.iter_mut().filter_map(Option::take) {
-            let _ = w.tx.send(NodeMsg::Kill);
-            let _ = w.join.join();
+        for slot in &self.workers {
+            if let Some(w) = slot.lock().unwrap_or_else(PoisonError::into_inner).take() {
+                let _ = w.tx.send(NodeMsg::Kill);
+                let _ = w.join.join();
+            }
         }
     }
 }
@@ -408,7 +484,7 @@ mod tests {
             let idx = rand_indices(&mut rng, 16, hotness);
             let mut out_a = vec![0.0f32; 16 * 2 * 4];
             let mut out_b = vec![0.0f32; 16 * 2 * 4];
-            PsBackend::gather_pooled(&a, &idx, hotness, &mut out_a);
+            PsDataPlane::gather_pooled(&a, &idx, hotness, &mut out_a);
             b.gather_pooled(&idx, hotness, &mut out_b);
             assert_eq!(out_a, out_b, "hotness {hotness}");
         }
@@ -416,7 +492,7 @@ mod tests {
 
     #[test]
     fn apply_grads_is_bit_identical_to_inproc() {
-        let (mut a, mut b) = both(4, 9);
+        let (a, b) = both(4, 9);
         let mut rng = Rng::new(2);
         for (step, opt) in [(0usize, EmbOptimizer::Sgd),
                             (1, EmbOptimizer::RowAdagrad { eps: 1e-8 }),
@@ -424,11 +500,33 @@ mod tests {
             let hotness = 1 + step % 2;
             let idx = rand_indices(&mut rng, 8, hotness);
             let grads: Vec<f32> = (0..8 * 2 * 4).map(|_| rng.f32() - 0.5).collect();
-            PsBackend::apply_grads(&mut a, &idx, hotness, &grads, 0.7, opt);
+            PsDataPlane::apply_grads(&a, &idx, hotness, &grads, 0.7, opt);
             b.apply_grads(&idx, hotness, &grads, 0.7, opt);
         }
         for node in 0..4 {
-            let sa = a.snapshot_node(node);
+            let sa = PsControlPlane::snapshot_node(&a, node);
+            let sb = b.snapshot_node(node);
+            assert_eq!(sa.shards, sb.shards, "node {node} shards diverged");
+            assert_eq!(sa.opt, sb.opt, "node {node} optimizer state diverged");
+        }
+    }
+
+    #[test]
+    fn apply_grads_node_is_bit_identical_to_whole_batch() {
+        let (a, b) = both(3, 21);
+        let mut rng = Rng::new(7);
+        for hotness in [1usize, 2] {
+            let idx = rand_indices(&mut rng, 8, hotness);
+            let grads: Vec<f32> = (0..8 * 2 * 4).map(|_| rng.f32() - 0.5).collect();
+            PsDataPlane::apply_grads(&a, &idx, hotness, &grads, 0.7,
+                                     EmbOptimizer::RowAdagrad { eps: 1e-8 });
+            for node in 0..3 {
+                b.apply_grads_node(node, &idx, hotness, &grads, 0.7,
+                                   EmbOptimizer::RowAdagrad { eps: 1e-8 });
+            }
+        }
+        for node in 0..3 {
+            let sa = PsControlPlane::snapshot_node(&a, node);
             let sb = b.snapshot_node(node);
             assert_eq!(sa.shards, sb.shards, "node {node} shards diverged");
             assert_eq!(sa.opt, sb.opt, "node {node} optimizer state diverged");
@@ -437,7 +535,7 @@ mod tests {
 
     #[test]
     fn read_rows_matches_read_row() {
-        let mut c = ThreadedCluster::new(TABLES.to_vec(), 3, 5);
+        let c = ThreadedCluster::new(TABLES.to_vec(), 3, 5);
         let mut rng = Rng::new(3);
         let idx = rand_indices(&mut rng, 8, 1);
         let grads: Vec<f32> = (0..8 * 2 * 4).map(|_| rng.f32()).collect();
@@ -453,7 +551,7 @@ mod tests {
 
     #[test]
     fn survivors_serve_while_a_node_is_dead() {
-        let mut c = ThreadedCluster::new(TABLES.to_vec(), 3, 7);
+        let c = ThreadedCluster::new(TABLES.to_vec(), 3, 7);
         c.kill_node(1);
         assert!(!c.alive(1));
         // every row routes to node 0 (all ids ≡ 0 mod 3) — dead node 1 is
@@ -463,7 +561,7 @@ mod tests {
         c.gather_pooled(&idx, 1, &mut out); // must not panic or hang
         let reference = PsCluster::new(TABLES.to_vec(), 3, 7);
         let mut want = vec![0.0f32; 2 * 2 * 4];
-        PsBackend::gather_pooled(&reference, &idx, 1, &mut want);
+        PsDataPlane::gather_pooled(&reference, &idx, 1, &mut want);
         assert_eq!(out, want);
         c.respawn_node(1);
         assert!(c.alive(1));
@@ -472,7 +570,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "is dead")]
     fn routing_to_a_dead_node_panics() {
-        let mut c = ThreadedCluster::new(TABLES.to_vec(), 3, 7);
+        let c = ThreadedCluster::new(TABLES.to_vec(), 3, 7);
         c.kill_node(1);
         let mut out = vec![0.0f32; 4 * 2];
         c.gather_pooled(&[1, 1], 1, &mut out); // row 1 lives on dead node 1
@@ -480,7 +578,7 @@ mod tests {
 
     #[test]
     fn kill_respawn_load_runs_full_recovery_protocol() {
-        let mut c = ThreadedCluster::new(TABLES.to_vec(), 3, 7);
+        let c = ThreadedCluster::new(TABLES.to_vec(), 3, 7);
         let mut rng = Rng::new(4);
         let idx = rand_indices(&mut rng, 8, 1);
         let grads: Vec<f32> = (0..8 * 2 * 4).map(|_| rng.f32()).collect();
@@ -502,10 +600,34 @@ mod tests {
 
     #[test]
     fn reset_restores_init_values() {
-        let mut c = ThreadedCluster::new(TABLES.to_vec(), 2, 13);
+        let c = ThreadedCluster::new(TABLES.to_vec(), 2, 13);
         c.apply_grads(&[2, 2], 1, &[1.0f32; 8], 1.0, EmbOptimizer::Sgd);
         c.reset_node_to_init(0); // row 2 lives on node 0
         let fresh = ThreadedCluster::new(TABLES.to_vec(), 2, 13);
         assert_eq!(c.snapshot_node(0), fresh.snapshot_node(0));
+    }
+
+    #[test]
+    fn concurrent_routers_share_the_cluster() {
+        // the data plane is &self: many threads gather + apply at once
+        // with no external lock, and the result matches a serial run
+        let c = ThreadedCluster::new(TABLES.to_vec(), 4, 31);
+        let idx = vec![0u32, 1, 5, 2, 8, 3, 13, 4]; // 4 samples x 2 tables
+        let mut want = vec![0.0f32; 4 * 2 * 4];
+        c.gather_pooled(&idx, 1, &mut want);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = &c;
+                let idx = idx.clone();
+                let want = want.clone();
+                s.spawn(move || {
+                    for _ in 0..25 {
+                        let mut out = vec![0.0f32; 4 * 2 * 4];
+                        c.gather_pooled(&idx, 1, &mut out);
+                        assert_eq!(out, want);
+                    }
+                });
+            }
+        });
     }
 }

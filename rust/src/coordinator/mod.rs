@@ -11,8 +11,10 @@
 //! ## Multi-trainer driver
 //! `run_training` is a *driver* over the trainer pool: each global step,
 //! the N trainers gather concurrently from the shared [`PsBackend`]
-//! (behind a [`SharedPs`] read lock), hit a gather barrier, compute their
-//! local train step, apply sparse updates in rank order, and report back.
+//! (straight through the [`ShardedPs`] data plane — per-node interior
+//! locks, no global lock), hit a gather barrier, compute their local
+//! train step, apply sparse updates through per-node turnstiles in
+//! trainer-rank order, and report back.
 //! The driver then performs the emulated allreduce (replica parameter
 //! averaging — exactly gradient averaging, and the identity at N = 1),
 //! feeds the access streams to the priority trackers in rank order, and
@@ -50,8 +52,10 @@
 //! which applies them to the mirror and publishes durable files while
 //! training proceeds. Capture is a **cross-trainer consistency point**:
 //! it happens between global steps, when every trainer is quiesced at the
-//! step barrier (idle, waiting for the next step command), so a snapshot
-//! never interleaves with a half-applied sparse update. A durable
+//! step barrier (idle, waiting for the next step command), and the driver
+//! materializes that fact by acquiring the PS control plane's exclusive
+//! **quiesce token** ([`ShardedPs::quiesce`]) — so a snapshot can never
+//! interleave with a half-applied sparse update. A durable
 //! checkpoint is only *published* once the writer has fsynced the data
 //! file and then the `LATEST` manifest (crash-consistency rule — see
 //! `checkpoint::disk`). Restores flow through the same FIFO channel, so
@@ -76,7 +80,7 @@ use anyhow::{ensure, Result};
 use crate::checkpoint::async_pipeline::CheckpointPipeline;
 use crate::checkpoint::tracker::{priority_mask, MfuTracker, ScarTracker, SsuTracker};
 use crate::checkpoint::CheckpointStore;
-use crate::cluster::{PsBackend, SharedPs, ThreadedCluster};
+use crate::cluster::{PsBackend, PsDataPlane, ShardedPs, ThreadedCluster};
 use crate::config::{JobConfig, PsBackendKind, Strategy};
 use crate::data::{Batch, SyntheticDataset};
 use crate::embedding::{init_value, PsCluster, TableInfo};
@@ -229,11 +233,11 @@ fn run_training_core<B: PsBackend + 'static>(
     // emulated allreduce produces; trainers receive it as the step input)
     let mut host_params: Vec<Vec<f32>> =
         model.params_to_host(&model.init_params(cfg.train.seed))?;
-    let shared = SharedPs::new(cluster);
+    let shared = ShardedPs::new(cluster);
     // the async checkpoint pipeline owns the mirror store on its writer
     // thread; durable publication is enabled when a dir is configured
     let pipeline = CheckpointPipeline::new(
-        CheckpointStore::initial(&*shared.read(), host_params.clone()),
+        CheckpointStore::initial(&*shared.quiesce(), host_params.clone()),
         cfg.checkpoint.dir.as_deref(),
         2,
         std::time::Duration::ZERO,
@@ -288,7 +292,7 @@ fn run_training_core<B: PsBackend + 'static>(
     };
     let mut scar = match strategy {
         Strategy::CprScar if priority => {
-            Some(ScarTracker::new(&*shared.read(), &mask))
+            Some(ScarTracker::new(&*shared.quiesce(), &mask))
         }
         _ => None,
     };
@@ -370,24 +374,26 @@ fn run_training_core<B: PsBackend + 'static>(
         }
         if opts.eval_every > 0 && step % opts.eval_every as u64 == 0 {
             let params = model.params_from_host(&host_params);
-            let (a, _) = evaluate(model, cfg, &dataset, &*shared.read(), &params)?;
+            let (a, _) = evaluate(model, cfg, &dataset, &shared, &params)?;
             eval_auc_curve.push(step, a);
         }
 
         // ---- checkpoint saves up to the current clock ----
         // (captures happen here — the cross-trainer consistency point:
-        // every trainer is quiesced at the step barrier, so no sparse
-        // update can interleave with the snapshot; the pipeline's writer
-        // thread applies and persists them while training goes on)
+        // every trainer is quiesced at the step barrier, which the driver
+        // materializes by holding the control plane's exclusive quiesce
+        // token for the duration of the capture; the pipeline's writer
+        // thread applies and persists the captured data while training
+        // goes on)
         while clock_h >= next_save_h && next_save_h <= cfg.cluster.t_total_h {
             minor_count += 1;
             if priority {
                 ledger.save_h += r * cfg.cluster.o_save_h;
                 {
-                    let c = shared.read();
-                    for t in 0..c.tables().len() {
+                    let q = shared.quiesce();
+                    for t in 0..q.tables().len() {
                         if mask[t] {
-                            let rows_in_table = c.tables()[t].rows;
+                            let rows_in_table = q.tables()[t].rows;
                             let k = ((rows_in_table as f64 * r).ceil() as usize).max(1);
                             let rows: Vec<u32> = if let Some(tr) = mfu.as_mut() {
                                 let sel = tr.top_k(t, k);
@@ -396,16 +402,16 @@ fn run_training_core<B: PsBackend + 'static>(
                             } else if let Some(tr) = ssu.as_mut() {
                                 tr.drain(t)
                             } else if let Some(tr) = scar.as_mut() {
-                                tr.top_k(&*c, t, k)
+                                tr.top_k(&*q, t, k)
                             } else {
                                 unreachable!()
                             };
-                            pipeline.save_rows(&*c, t, &rows);
+                            pipeline.save_rows(&*q, t, &rows);
                             if let Some(tr) = scar.as_mut() {
-                                tr.mark_saved(&*c, t, &rows);
+                                tr.mark_saved(&*q, t, &rows);
                             }
                         } else {
-                            pipeline.save_table(&*c, t);
+                            pipeline.save_table(&*q, t);
                         }
                     }
                 }
@@ -419,7 +425,7 @@ fn run_training_core<B: PsBackend + 'static>(
             } else {
                 ledger.save_h += cfg.cluster.o_save_h;
                 ledger.n_saves += 1;
-                pipeline.full_save(&*shared.read(), host_params.clone(), step,
+                pipeline.full_save(&*shared.quiesce(), host_params.clone(), step,
                                    step * samples_per_step);
                 marked_step = step;
                 marked_samples = step * samples_per_step;
@@ -446,14 +452,18 @@ fn run_training_core<B: PsBackend + 'static>(
                     // live partial recovery: the victim dies (on the
                     // threaded backend its worker is joined), a blank node
                     // respawns, and the checkpoint mirror repopulates it —
-                    // survivors keep their progress and keep serving
-                    for &v in &ev.victims {
-                        {
-                            let mut c = shared.write();
-                            c.kill_node(v);
-                            c.respawn_node(v);
+                    // survivors keep their progress and keep serving. All
+                    // of it behind the quiesce token: the trainers are
+                    // parked at the step barrier, so the exclusive epoch
+                    // is free and no gather can observe a half-restored
+                    // node.
+                    {
+                        let q = shared.quiesce();
+                        for &v in &ev.victims {
+                            q.kill_node(v);
+                            q.respawn_node(v);
+                            pipeline.restore_node(&*q, v);
                         }
-                        pipeline.restore_node(&mut *shared.write(), v);
                     }
                 }
                 // trainer loss under partial recovery: the worker thread
@@ -475,7 +485,7 @@ fn run_training_core<B: PsBackend + 'static>(
                 let t_last = marked_step as f64 * dt_h;
                 ledger.lost_h += (clock_h - t_last).max(0.0);
                 let (mlp, ckpt_step, _samples) =
-                    pipeline.restore_all(&mut *shared.write());
+                    pipeline.restore_all(&*shared.quiesce());
                 host_params = mlp;
                 step = ckpt_step;
                 for &t in &ev.trainer_victims {
@@ -496,23 +506,22 @@ fn run_training_core<B: PsBackend + 'static>(
     // --- final evaluation --------------------------------------------------------
     let params = model.params_from_host(&host_params);
     let (final_auc, final_logloss) =
-        evaluate(model, cfg, &dataset, &*shared.read(), &params)?;
+        evaluate(model, cfg, &dataset, &shared, &params)?;
     eval_auc_curve.push(total_steps, final_auc);
 
     // --- Fig. 6 stats ---------------------------------------------------------------
     let row_stats = stat_counts.map(|counts| {
-        let c = shared.read();
         let mut rows = Vec::new();
         let dim = m.emb_dim;
-        for t in 0..c.tables().len() {
+        for t in 0..shared.tables().len() {
             if !mask[t] {
                 continue; // report the large tables, like the paper
             }
-            let info = c.tables()[t];
+            let info = shared.tables()[t];
             // one batched read per table (a per-row read_row would be a
             // channel round trip per row on the threaded backend)
             let ids: Vec<u32> = (0..info.rows as u32).collect();
-            let (data, _) = c.read_rows(t, &ids);
+            let (data, _) = shared.read_rows(t, &ids);
             for rrow in 0..info.rows {
                 let cur = &data[rrow * dim..(rrow + 1) * dim];
                 let mut change = 0.0f64;
@@ -527,7 +536,7 @@ fn run_training_core<B: PsBackend + 'static>(
         RowStats { rows }
     });
 
-    let backend = shared.read().name().to_string();
+    let backend = shared.name().to_string();
     Ok(TrainReport {
         strategy: strategy.name().to_string(),
         backend,
@@ -548,8 +557,9 @@ fn run_training_core<B: PsBackend + 'static>(
     })
 }
 
-/// AUC + logloss over the held-out eval split.
-pub fn evaluate<B: PsBackend>(
+/// AUC + logloss over the held-out eval split. Needs only the PS data
+/// plane (gathers), so it accepts a raw backend or a [`ShardedPs`] handle.
+pub fn evaluate<B: PsDataPlane>(
     model: &ModelExe,
     cfg: &JobConfig,
     dataset: &SyntheticDataset,

@@ -60,7 +60,7 @@ fn run_reference_core<B: PsBackend>(
     model: &ModelExe,
     cfg: &JobConfig,
     opts: &RunOptions,
-    mut cluster: B,
+    cluster: B,
 ) -> Result<TrainReport> {
     let m = &model.manifest;
     ensure!(m.batch == cfg.model.batch, "artifact batch mismatch");
@@ -270,12 +270,12 @@ fn run_reference_core<B: PsBackend>(
                 for &v in &ev.victims {
                     cluster.kill_node(v);
                     cluster.respawn_node(v);
-                    pipeline.restore_node(&mut cluster, v);
+                    pipeline.restore_node(&cluster, v);
                 }
             } else {
                 let t_last = marked_step as f64 * dt_h;
                 ledger.lost_h += (clock_h - t_last).max(0.0);
-                let (mlp, ckpt_step, _samples) = pipeline.restore_all(&mut cluster);
+                let (mlp, ckpt_step, _samples) = pipeline.restore_all(&cluster);
                 params = model.params_from_host(&mlp);
                 step = ckpt_step;
             }

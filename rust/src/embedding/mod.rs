@@ -7,6 +7,15 @@
 //! at local row `r / n_nodes`. A node failure therefore wipes a ~1/n slice
 //! of EVERY table, exactly the paper's failure unit.
 //!
+//! Concurrency model: every node sits behind its own
+//! [`crate::cluster::lock::NodeLock`], so the whole data plane
+//! (gather / sparse update / row reads) is `&self` — two trainers touching
+//! rows owned by *different* nodes never contend, and a trainer that
+//! panics mid-update fails only the node it was writing (the lock converts
+//! poison into a node kill; see `cluster::lock`). Ordering of same-node
+//! updates across trainers is the caller's contract
+//! (`cluster::ShardedPs` sequences them with per-node turnstiles).
+//!
 //! The trainer gathers rows for a minibatch, runs the AOT train-step (L2),
 //! and scatters the returned embedding gradient back as a sparse SGD
 //! update. CPR's checkpoint trackers observe the same access stream.
@@ -15,6 +24,7 @@ pub mod optim;
 
 pub use optim::EmbOptimizer;
 
+use crate::cluster::lock::{NodeLock, NodeReadGuard, NodeWriteGuard};
 use crate::cluster::StatCounters;
 use crate::util::rng::SplitMix64;
 use crate::util::threads::parallel_chunks;
@@ -36,12 +46,12 @@ pub struct EmbPsNode {
     opt_state: Vec<Vec<f32>>,
 }
 
-/// The sharded Emb PS cluster.
-#[derive(Clone, Debug)]
+/// The sharded Emb PS cluster (in-process backend).
+#[derive(Debug)]
 pub struct PsCluster {
     pub tables: Vec<TableInfo>,
     pub n_nodes: usize,
-    nodes: Vec<EmbPsNode>,
+    nodes: Vec<NodeLock<EmbPsNode>>,
     seed: u64,
     /// operation counters for the `PsBackend` trait view
     pub(crate) stats: StatCounters,
@@ -65,32 +75,23 @@ pub fn init_value(seed: u64, table: usize, row: usize, d: usize) -> f32 {
     ((h.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64) * 0.1 - 0.05) as f32
 }
 
+impl EmbPsNode {
+    /// A node at deterministic init (shared with the threaded backend so
+    /// blank respawns are bit-identical across runtimes).
+    pub(crate) fn at_init(tables: &[TableInfo], n_nodes: usize, node_id: usize,
+                          seed: u64) -> Self {
+        let (shards, opt_state) =
+            crate::cluster::init_node_state(tables, n_nodes, node_id, seed);
+        Self { shards, opt_state }
+    }
+}
+
 impl PsCluster {
     pub fn new(tables: Vec<TableInfo>, n_nodes: usize, seed: u64) -> Self {
         assert!(n_nodes >= 1);
-        let mut nodes = Vec::with_capacity(n_nodes);
-        for node_id in 0..n_nodes {
-            let mut shards = Vec::with_capacity(tables.len());
-            for (t, info) in tables.iter().enumerate() {
-                let local_rows = Self::local_rows_static(info.rows, n_nodes, node_id);
-                let mut shard = vec![0.0f32; local_rows * info.dim];
-                for lr in 0..local_rows {
-                    let global = node_id + lr * n_nodes;
-                    for d in 0..info.dim {
-                        shard[lr * info.dim + d] = init_value(seed, t, global, d);
-                    }
-                }
-                shards.push(shard);
-            }
-            let opt_state = tables
-                .iter()
-                .enumerate()
-                .map(|(_, info)| {
-                    vec![0.0f32; Self::local_rows_static(info.rows, n_nodes, node_id)]
-                })
-                .collect();
-            nodes.push(EmbPsNode { shards, opt_state });
-        }
+        let nodes = (0..n_nodes)
+            .map(|id| NodeLock::new(EmbPsNode::at_init(&tables, n_nodes, id, seed)))
+            .collect();
         Self { tables, n_nodes, nodes, seed, stats: StatCounters::default() }
     }
 
@@ -109,32 +110,73 @@ impl PsCluster {
         Self::local_rows_static(self.tables[table].rows, self.n_nodes, node_id)
     }
 
+    /// Is the node serving? `false` after a kill or a poison-converted
+    /// writer panic, until [`PsCluster::respawn_node`].
+    pub fn alive(&self, node: usize) -> bool {
+        !self.nodes[node].is_dead()
+    }
+
+    fn node_read(&self, node: usize) -> NodeReadGuard<'_, EmbPsNode> {
+        self.nodes[node].read().unwrap_or_else(|_| {
+            panic!("Emb PS node {node} is dead (killed or failed, not respawned)")
+        })
+    }
+
+    fn node_write(&self, node: usize) -> NodeWriteGuard<'_, EmbPsNode> {
+        self.nodes[node].write().unwrap_or_else(|_| {
+            panic!("Emb PS node {node} is dead (killed or failed, not respawned)")
+        })
+    }
+
+    /// Which nodes a routed index batch touches.
+    fn touched_nodes(&self, indices: &[u32]) -> Vec<bool> {
+        let mut touched = vec![false; self.n_nodes];
+        for &row in indices {
+            touched[row as usize % self.n_nodes] = true;
+        }
+        touched
+    }
+
     /// Read one row into `out` (len == dim).
     #[inline]
     pub fn read_row(&self, table: usize, global_row: usize, out: &mut [f32]) {
         let (node, local) = self.route(global_row);
         let dim = self.tables[table].dim;
-        let shard = &self.nodes[node].shards[table];
-        out.copy_from_slice(&shard[local * dim..(local + 1) * dim]);
+        let g = self.node_read(node);
+        out.copy_from_slice(&g.shards[table][local * dim..(local + 1) * dim]);
     }
 
-    /// Raw shard access (checkpoint save path).
-    pub fn shard(&self, node: usize, table: usize) -> &[f32] {
-        &self.nodes[node].shards[table]
+    /// Copy of one node's shard of `table` (checkpoint/test inspection).
+    pub fn shard(&self, node: usize, table: usize) -> Vec<f32> {
+        self.node_read(node).shards[table].clone()
     }
 
-    /// Mutable shard access (checkpoint restore path).
-    pub fn shard_mut(&mut self, node: usize, table: usize) -> &mut [f32] {
-        &mut self.nodes[node].shards[table]
+    /// Copy of one node's optimizer accumulators for `table`.
+    pub fn opt_shard(&self, node: usize, table: usize) -> Vec<f32> {
+        self.node_read(node).opt_state[table].clone()
     }
 
-    /// Optimizer-state shard access (one f32 per local row).
-    pub fn opt_shard(&self, node: usize, table: usize) -> &[f32] {
-        &self.nodes[node].opt_state[table]
-    }
-
-    pub fn opt_shard_mut(&mut self, node: usize, table: usize) -> &mut [f32] {
-        &mut self.nodes[node].opt_state[table]
+    /// Batched row fetch for priority checkpointing: rows' embedding data
+    /// ([rows.len() * dim], in `rows` order) + their optimizer
+    /// accumulators. Takes each needed node's read guard once, in
+    /// ascending node order — the same lock order every multi-node path
+    /// uses, so concurrent readers and appliers cannot deadlock.
+    pub fn read_rows(&self, table: usize, rows: &[u32]) -> (Vec<f32>, Vec<f32>) {
+        let dim = self.tables[table].dim;
+        let mut data = vec![0.0f32; rows.len() * dim];
+        let mut opt = vec![0.0f32; rows.len()];
+        let touched = self.touched_nodes(rows);
+        let guards: Vec<Option<NodeReadGuard<'_, EmbPsNode>>> = (0..self.n_nodes)
+            .map(|n| touched[n].then(|| self.node_read(n)))
+            .collect();
+        for (i, &row) in rows.iter().enumerate() {
+            let (node, local) = self.route(row as usize);
+            let g = guards[node].as_ref().unwrap();
+            data[i * dim..(i + 1) * dim]
+                .copy_from_slice(&g.shards[table][local * dim..(local + 1) * dim]);
+            opt[i] = g.opt_state[table][local];
+        }
+        (data, opt)
     }
 
     /// Gather a minibatch: `indices` is [B, T] row-major (T = #tables);
@@ -147,12 +189,20 @@ impl PsCluster {
     /// (H = hotness); `out` is [B, T, dim] with out[b,t] = Σ_h row(idx_h).
     /// This is the Rust-side counterpart of the L1 `embedding_bag` kernel
     /// (the pooled vector is what the L2 graph receives).
+    ///
+    /// Concurrency: takes read guards only on the nodes the batch touches,
+    /// so gathers against disjoint nodes (and any number of gathers
+    /// against the same node) run fully in parallel.
     pub fn gather_pooled(&self, indices: &[u32], hotness: usize, out: &mut [f32]) {
         let t = self.tables.len();
         let dim = self.tables[0].dim;
         debug_assert!(self.tables.iter().all(|i| i.dim == dim));
         let b = indices.len() / (t * hotness);
         debug_assert_eq!(out.len(), b * t * dim);
+        let touched = self.touched_nodes(indices);
+        let guards: Vec<Option<NodeReadGuard<'_, EmbPsNode>>> = (0..self.n_nodes)
+            .map(|n| touched[n].then(|| self.node_read(n)))
+            .collect();
         // Thread spawn costs ~50 µs; below ~2k samples a serial gather is
         // faster than fanning out (measured: 18 µs serial vs 55 µs across
         // 2 threads at B=128) — see EXPERIMENTS.md §Perf #5.
@@ -166,7 +216,8 @@ impl PsCluster {
                     let slot = lo * t + off;
                     let tab = slot % t;
                     let row = row as usize;
-                    let shard = &self.nodes[row % self.n_nodes].shards[tab];
+                    let node = guards[row % self.n_nodes].as_ref().unwrap();
+                    let shard = &node.shards[tab];
                     let local = row / self.n_nodes;
                     unsafe {
                         std::ptr::copy_nonoverlapping(
@@ -189,9 +240,9 @@ impl PsCluster {
                     };
                     for h in 0..hotness {
                         let row = indices[(s * t + tab) * hotness + h] as usize;
-                        let (node, local) = self.route(row);
-                        let shard = &self.nodes[node].shards[tab];
-                        let src = &shard[local * dim..(local + 1) * dim];
+                        let (node_id, local) = self.route(row);
+                        let node = guards[node_id].as_ref().unwrap();
+                        let src = &node.shards[tab][local * dim..(local + 1) * dim];
                         if h == 0 {
                             dst.copy_from_slice(src);
                         } else {
@@ -206,7 +257,7 @@ impl PsCluster {
     }
 
     /// Sparse SGD convenience wrapper (hotness 1).
-    pub fn sgd_update(&mut self, indices: &[u32], grads: &[f32], lr: f32) {
+    pub fn sgd_update(&self, indices: &[u32], grads: &[f32], lr: f32) {
         self.apply_grads(indices, 1, grads, lr, EmbOptimizer::Sgd);
     }
 
@@ -214,9 +265,14 @@ impl PsCluster {
     /// with the slot's pooled gradient (sum-pool backward broadcasts the
     /// [B, T, dim] gradient to each of the H contributing rows).
     /// Duplicate rows accumulate, matching a dense scatter-add.
-    /// Parallelized over *nodes* so all writes are owner-local.
+    ///
+    /// Per-node write guards are taken only for the nodes the batch
+    /// touches (ascending node order, so concurrent appliers cannot
+    /// deadlock); large batches parallelize over *nodes* so all writes
+    /// stay owner-local. Same-node updates are applied in sample order —
+    /// identical floats to the pre-refactor global scatter.
     pub fn apply_grads(
-        &mut self,
+        &self,
         indices: &[u32],
         hotness: usize,
         grads: &[f32],
@@ -228,11 +284,16 @@ impl PsCluster {
         let b = indices.len() / (t * hotness);
         debug_assert_eq!(grads.len(), b * t * dim);
         let n_nodes = self.n_nodes;
+        let touched = self.touched_nodes(indices);
         // Small batches: one thread applying updates directly beats the
         // per-node fan-out (each parallel worker must scan the whole
         // index list; at B=128 that costs 285 µs vs 30 µs serial —
         // EXPERIMENTS.md §Perf #5). Large batches amortize the scan.
         if b * t * hotness < 16_384 {
+            let mut guards: Vec<Option<NodeWriteGuard<'_, EmbPsNode>>> =
+                (0..n_nodes)
+                    .map(|n| touched[n].then(|| self.node_write(n)))
+                    .collect();
             for s in 0..b {
                 for tab in 0..t {
                     let g = &grads[(s * t + tab) * dim..(s * t + tab + 1) * dim];
@@ -240,7 +301,7 @@ impl PsCluster {
                         let row = indices[(s * t + tab) * hotness + h] as usize;
                         let node_id = row % n_nodes;
                         let local = row / n_nodes;
-                        let node = &mut self.nodes[node_id];
+                        let node = &mut **guards[node_id].as_mut().unwrap();
                         let dst =
                             &mut node.shards[tab][local * dim..(local + 1) * dim];
                         let acc = &mut node.opt_state[tab][local];
@@ -250,54 +311,93 @@ impl PsCluster {
             }
             return;
         }
-        let nodes = &mut self.nodes;
-        // Each thread owns a disjoint set of nodes → disjoint storage.
-        let node_refs: Vec<std::sync::Mutex<&mut EmbPsNode>> =
-            nodes.iter_mut().map(std::sync::Mutex::new).collect();
+        // Each worker thread owns a disjoint set of nodes → disjoint locks.
         parallel_chunks(n_nodes, 8, 1, |nlo, nhi| {
             for node_id in nlo..nhi {
-                let mut node = node_refs[node_id].lock().unwrap();
-                for s in 0..b {
-                    for tab in 0..t {
-                        let g = &grads[(s * t + tab) * dim..(s * t + tab + 1) * dim];
-                        for h in 0..hotness {
-                            let row =
-                                indices[(s * t + tab) * hotness + h] as usize;
-                            if row % n_nodes != node_id {
-                                continue;
-                            }
-                            let local = row / n_nodes;
-                            let node = &mut *node;
-                            let dst = &mut node.shards[tab]
-                                [local * dim..(local + 1) * dim];
-                            let acc = &mut node.opt_state[tab][local];
-                            opt.apply(dst, g, acc, lr);
-                        }
-                    }
+                if touched[node_id] {
+                    self.apply_grads_node(node_id, indices, hotness, grads, lr, opt);
                 }
             }
         });
     }
 
-    /// Reset a node's shards to their deterministic initial values
-    /// (recovery when no checkpoint exists yet).
-    pub fn reset_node_to_init(&mut self, node_id: usize) {
-        let tables = self.tables.clone();
+    /// Apply only the updates owned by `node`, in sample order, under that
+    /// node's write guard. This is the sharded data plane's unit of
+    /// contention: callers updating different nodes never serialize.
+    pub fn apply_grads_node(
+        &self,
+        node: usize,
+        indices: &[u32],
+        hotness: usize,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    ) {
+        let t = self.tables.len();
+        let dim = self.tables[0].dim;
+        let b = indices.len() / (t * hotness);
+        debug_assert_eq!(grads.len(), b * t * dim);
         let n_nodes = self.n_nodes;
-        let seed = self.seed;
-        for (t, info) in tables.iter().enumerate() {
-            let local_rows = Self::local_rows_static(info.rows, n_nodes, node_id);
-            let shard = &mut self.nodes[node_id].shards[t];
-            for lr in 0..local_rows {
-                let global = node_id + lr * n_nodes;
-                for d in 0..info.dim {
-                    shard[lr * info.dim + d] = init_value(seed, t, global, d);
+        let mut g_node = self.node_write(node);
+        for s in 0..b {
+            for tab in 0..t {
+                let g = &grads[(s * t + tab) * dim..(s * t + tab + 1) * dim];
+                for h in 0..hotness {
+                    let row = indices[(s * t + tab) * hotness + h] as usize;
+                    if row % n_nodes != node {
+                        continue;
+                    }
+                    let local = row / n_nodes;
+                    let n = &mut *g_node;
+                    let dst = &mut n.shards[tab][local * dim..(local + 1) * dim];
+                    let acc = &mut n.opt_state[tab][local];
+                    opt.apply(dst, g, acc, lr);
                 }
             }
-            for a in self.nodes[node_id].opt_state[t].iter_mut() {
-                *a = 0.0;
-            }
         }
+    }
+
+    /// Reset a node's shards to their deterministic initial values
+    /// (recovery when no checkpoint exists yet).
+    pub fn reset_node_to_init(&self, node_id: usize) {
+        let fresh = EmbPsNode::at_init(&self.tables, self.n_nodes, node_id, self.seed);
+        *self.node_write(node_id) = fresh;
+    }
+
+    /// A failure hits this node: it stops serving (reads/writes panic with
+    /// a "dead" diagnostic) until [`PsCluster::respawn_node`]. The same
+    /// transition is taken automatically when a writer panics mid-update
+    /// (lock poison → node kill; see `cluster::lock`).
+    pub fn kill_node(&self, node: usize) {
+        self.nodes[node].kill();
+    }
+
+    /// Bring a dead node back at deterministic init (blank replacement;
+    /// the recovery protocol then restores its rows). Panics if the node
+    /// is alive — same contract as the threaded backend, so a
+    /// respawn-without-kill bug cannot pass on one backend and abort on
+    /// the other.
+    pub fn respawn_node(&self, node: usize) {
+        assert!(self.nodes[node].is_dead(), "node {node} is already alive");
+        self.nodes[node].revive(EmbPsNode::at_init(
+            &self.tables, self.n_nodes, node, self.seed,
+        ));
+    }
+
+    /// Overwrite one node's full state (checkpoint restore path).
+    pub fn load_node(&self, node: usize, shards: &[Vec<f32>], opt: &[Vec<f32>]) {
+        let mut g = self.node_write(node);
+        for t in 0..self.tables.len() {
+            g.shards[t].copy_from_slice(&shards[t]);
+            g.opt_state[t].copy_from_slice(&opt[t]);
+        }
+    }
+
+    /// Clone one node's full state out as (shards, opt) — one copy, taken
+    /// under the node's read guard (checkpoint save path).
+    pub(crate) fn snapshot_parts(&self, node: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let g = self.node_read(node);
+        (g.shards.clone(), g.opt_state.clone())
     }
 
     /// Total parameter count across all tables.
@@ -374,7 +474,7 @@ mod tests {
 
     #[test]
     fn sgd_update_applies_lr_times_grad() {
-        let mut c = small_cluster(2);
+        let c = small_cluster(2);
         let indices = vec![5, 2]; // 1 sample, 2 tables
         let mut before = vec![0.0; 4];
         c.read_row(0, 5, &mut before);
@@ -389,7 +489,7 @@ mod tests {
 
     #[test]
     fn duplicate_rows_accumulate() {
-        let mut c = small_cluster(2);
+        let c = small_cluster(2);
         // two samples hitting the SAME row of table 0
         let indices = vec![4, 0, 4, 1];
         let mut before = vec![0.0; 4];
@@ -404,8 +504,26 @@ mod tests {
     }
 
     #[test]
+    fn apply_grads_node_covers_exactly_the_owned_rows() {
+        // applying node-by-node must equal the whole-batch apply
+        let a = small_cluster(3);
+        let b = small_cluster(3);
+        let indices = vec![0, 1, 4, 5, 8, 2, 3, 6]; // 4 samples x 2 tables
+        let grads: Vec<f32> = (0..4 * 2 * 4).map(|i| 0.01 * i as f32).collect();
+        a.apply_grads(&indices, 1, &grads, 0.5, EmbOptimizer::Sgd);
+        for node in 0..3 {
+            b.apply_grads_node(node, &indices, 1, &grads, 0.5, EmbOptimizer::Sgd);
+        }
+        for node in 0..3 {
+            for t in 0..2 {
+                assert_eq!(a.shard(node, t), b.shard(node, t), "node {node}");
+            }
+        }
+    }
+
+    #[test]
     fn reset_node_restores_init() {
-        let mut c = small_cluster(3);
+        let c = small_cluster(3);
         let indices = vec![3, 3];
         let grads = vec![1.0f32; 8];
         c.sgd_update(&indices, &grads, 1.0);
@@ -421,7 +539,7 @@ mod tests {
 
     #[test]
     fn reset_does_not_touch_other_nodes() {
-        let mut c = small_cluster(3);
+        let c = small_cluster(3);
         let indices = vec![4, 4]; // node 1
         let grads = vec![1.0f32; 8];
         c.sgd_update(&indices, &grads, 1.0);
@@ -457,7 +575,7 @@ mod tests {
 
     #[test]
     fn multi_hot_grad_broadcasts_to_all_rows() {
-        let mut c = small_cluster(2);
+        let c = small_cluster(2);
         let indices = vec![1, 3, 0, 2]; // table0: rows 1,3; table1: rows 0,2
         let mut r1 = vec![0.0; 4];
         let mut r3 = vec![0.0; 4];
@@ -477,7 +595,7 @@ mod tests {
 
     #[test]
     fn adagrad_state_accumulates_and_damps() {
-        let mut c = small_cluster(2);
+        let c = small_cluster(2);
         let opt = EmbOptimizer::RowAdagrad { eps: 1e-8 };
         let indices = vec![5, 2];
         let grads = vec![1.0f32; 8];
@@ -498,12 +616,59 @@ mod tests {
 
     #[test]
     fn reset_node_clears_optimizer_state() {
-        let mut c = small_cluster(3);
+        let c = small_cluster(3);
         let opt = EmbOptimizer::RowAdagrad { eps: 1e-8 };
         c.apply_grads(&[3, 3], 1, &[1.0f32; 8], 1.0, opt);
         let (node, local) = c.route(3);
         assert!(c.opt_shard(node, 0)[local] > 0.0);
         c.reset_node_to_init(node);
         assert_eq!(c.opt_shard(node, 0)[local], 0.0);
+    }
+
+    #[test]
+    fn poisoned_node_reads_as_failed_not_corrupt() {
+        // THE lock-poisoning contract (satellite): a trainer that panics
+        // mid-apply fails exactly the node it was writing. Survivors keep
+        // serving, readers of the victim see "dead" (never half-written
+        // floats), and the standard kill/respawn/restore protocol revives
+        // it.
+        let c = small_cluster(3);
+        // row 9999 routes to node 0 (9999 % 3 == 0) but its local slot is
+        // out of bounds → the apply panics while holding node 0's write
+        // guard, exactly like a trainer dying mid-update. The second slot
+        // also routes to node 0, so no other node's guard is held at the
+        // panic (a held guard conservatively fails its node).
+        let victim_batch = vec![9999u32, 0]; // 1 sample x 2 tables
+        let panicked = std::thread::scope(|s| {
+            s.spawn(|| c.apply_grads(&victim_batch, 1, &[0.1f32; 8], 1.0,
+                                     EmbOptimizer::Sgd))
+                .join()
+        });
+        assert!(panicked.is_err(), "OOB apply should have panicked");
+        assert!(!c.alive(0), "poisoned node must read as failed");
+        assert!(c.alive(1) && c.alive(2), "survivors must stay alive");
+        // reading the failed node panics with a 'dead' diagnostic...
+        let read = std::thread::scope(|s| {
+            s.spawn(|| {
+                let mut out = vec![0.0; 4];
+                c.read_row(0, 3, &mut out); // row 3 lives on node 0
+            })
+            .join()
+        });
+        assert!(read.is_err(), "reading a failed node must not succeed");
+        // ...while survivors serve normally
+        let mut out = vec![0.0; 4];
+        c.read_row(0, 4, &mut out); // row 4 lives on node 1
+        // recovery: kill (idempotent) + respawn brings the node back at
+        // deterministic init — bit-identical to a fresh cluster
+        c.kill_node(0);
+        c.respawn_node(0);
+        assert!(c.alive(0));
+        let fresh = small_cluster(3);
+        let mut got = vec![0.0; 4];
+        let mut want = vec![0.0; 4];
+        c.read_row(0, 3, &mut got);
+        fresh.read_row(0, 3, &mut want);
+        assert_eq!(got, want, "respawned node must be at clean init");
     }
 }

@@ -10,16 +10,17 @@
 //! `[(s·N + r)·B, (s·N + r + 1)·B)`. One global step is:
 //!
 //! 1. **gather** — every trainer gathers its batch's embedding rows
-//!    through the [`SharedPs`] read lock (true concurrent load on both
-//!    backends);
+//!    straight through the [`ShardedPs`] data plane (per-node interior
+//!    locks; true concurrent load on both backends, no global lock);
 //! 2. **gather barrier** — nobody applies until everyone has gathered, so
 //!    all replicas observe the *pre-step* PS state;
 //! 3. **compute** — each replica runs its local train step (in-graph SGD
 //!    on its dense params);
-//! 4. **ordered scatter** — sparse updates are applied through the write
-//!    lock in trainer-rank order, sequenced by a [`Turnstile`] ticket, so
-//!    the PS floats are reproducible run-to-run and identical across the
-//!    inproc and threaded backends;
+//! 4. **sharded ordered scatter** — sparse updates go through
+//!    [`ShardedPs::apply_grads_ordered`]: same-node updates are sequenced
+//!    by trainer rank on that node's own turnstile, node-disjoint updates
+//!    run in parallel. The PS floats are reproducible run-to-run and
+//!    identical across the inproc and threaded backends;
 //! 5. **allreduce (driver)** — the coordinator averages the N dense
 //!    replicas at the step barrier. Since every replica started the step
 //!    from the same params, parameter averaging after one local SGD step
@@ -27,6 +28,11 @@
 //!    keeping the single-trainer path bit-identical to the pre-refactor
 //!    coordinator (asserted against `coordinator::reference` by the
 //!    integration suite).
+//!
+//! The step barrier is also where the driver acquires the PS control
+//! plane's quiesce token ([`ShardedPs::quiesce`]) for checkpoint capture
+//! and failure injection — every trainer is parked on its command
+//! channel, so the token is free and no data-plane call is in flight.
 //!
 //! Trainer failures are real here: [`TrainerPool::kill_trainer`] joins
 //! the worker thread (its dense replica is gone), and
@@ -36,52 +42,16 @@
 //! under full recovery). See `coordinator` for the recovery matrix.
 
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::sync::{Arc, Barrier};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::cluster::{PsBackend, SharedPs};
+use crate::cluster::{PsBackend, PsDataPlane, ShardedPs};
 use crate::config::JobConfig;
 use crate::data::{Batch, SyntheticDataset};
 use crate::runtime::Runtime;
-
-/// A monotone ticket sequencer: thread `wait_for(t)` blocks until every
-/// ticket `< t` has been consumed via [`Turnstile::advance`]. The trainer
-/// pool hands each step's sparse update a globally unique ticket in rank
-/// order, which makes concurrent `apply_grads` deterministic.
-pub struct Turnstile {
-    next: Mutex<u64>,
-    cv: Condvar,
-}
-
-impl Default for Turnstile {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Turnstile {
-    pub fn new() -> Self {
-        Self { next: Mutex::new(0), cv: Condvar::new() }
-    }
-
-    /// Block until `ticket` is the next to be served.
-    pub fn wait_for(&self, ticket: u64) {
-        let mut g = self.next.lock().unwrap();
-        while *g != ticket {
-            g = self.cv.wait(g).unwrap();
-        }
-    }
-
-    /// Consume the current ticket, releasing the next waiter.
-    pub fn advance(&self) {
-        let mut g = self.next.lock().unwrap();
-        *g += 1;
-        self.cv.notify_all();
-    }
-}
 
 /// What one trainer hands back at the step barrier.
 pub struct TrainerStep {
@@ -118,15 +88,14 @@ struct TrainerHandle {
 struct WorkerCtx<B: PsBackend> {
     rank: usize,
     cfg: JobConfig,
-    shared: SharedPs<B>,
-    turnstile: Arc<Turnstile>,
+    shared: ShardedPs<B>,
     gather_barrier: Arc<Barrier>,
     rx: Receiver<TrainerCmd>,
     done: Sender<StepReply>,
 }
 
 fn worker_loop<B: PsBackend>(ctx: WorkerCtx<B>) {
-    let WorkerCtx { rank, cfg, shared, turnstile, gather_barrier, rx, done } = ctx;
+    let WorkerCtx { rank, cfg, shared, gather_barrier, rx, done } = ctx;
     let n = cfg.cluster.n_trainers.max(1) as u64;
     let hotness = cfg.data.hotness;
     // the replica: this trainer's own executor + dataset view + reusable
@@ -154,8 +123,7 @@ fn worker_loop<B: PsBackend>(ctx: WorkerCtx<B>) {
                 // keep the barrier/ticket protocol alive so the other
                 // trainers don't deadlock, then surface the error
                 gather_barrier.wait();
-                turnstile.wait_for(ticket);
-                turnstile.advance();
+                shared.skip_ordered(ticket);
                 Err(e.clone())
             }
             Ok((model, dataset, batch_buf, emb_buf)) => {
@@ -171,7 +139,7 @@ fn worker_loop<B: PsBackend>(ctx: WorkerCtx<B>) {
                     (step * n + rank as u64) * model.manifest.batch as u64,
                     batch_buf,
                 );
-                shared.read().gather_pooled(&batch_buf.indices, hotness, emb_buf);
+                shared.gather_pooled(&batch_buf.indices, hotness, emb_buf);
                 // every replica must observe the PRE-step PS state: nobody
                 // applies until everyone has gathered
                 gather_barrier.wait();
@@ -182,18 +150,20 @@ fn worker_loop<B: PsBackend>(ctx: WorkerCtx<B>) {
                     cfg.train.lr,
                     &mut bufs,
                 );
-                // rank-ordered sparse update → deterministic PS floats
-                turnstile.wait_for(ticket);
-                if let Ok(o) = &out {
-                    shared.write().apply_grads(
+                // sharded rank-ordered sparse update → deterministic PS
+                // floats without a global lock: same-node updates apply in
+                // ticket order, node-disjoint updates in parallel
+                match &out {
+                    Ok(o) => shared.apply_grads_ordered(
+                        ticket,
                         &batch_buf.indices,
                         hotness,
                         &o.emb_grad,
                         cfg.train.emb_lr,
                         cfg.train.emb_optimizer,
-                    );
+                    ),
+                    Err(_) => shared.skip_ordered(ticket),
                 }
-                turnstile.advance();
                 match out {
                     Ok(o) => match model.params_to_host(&bufs) {
                         Ok(host) => Ok(TrainerStep {
@@ -220,8 +190,7 @@ fn worker_loop<B: PsBackend>(ctx: WorkerCtx<B>) {
 /// failure injection.
 pub struct TrainerPool<B: PsBackend + 'static> {
     cfg: JobConfig,
-    shared: SharedPs<B>,
-    turnstile: Arc<Turnstile>,
+    shared: ShardedPs<B>,
     gather_barrier: Arc<Barrier>,
     /// `None` = the trainer is dead (killed, not yet respawned)
     workers: Vec<Option<TrainerHandle>>,
@@ -237,13 +206,12 @@ pub struct TrainerPool<B: PsBackend + 'static> {
 }
 
 impl<B: PsBackend + 'static> TrainerPool<B> {
-    pub fn new(cfg: &JobConfig, shared: SharedPs<B>) -> Self {
+    pub fn new(cfg: &JobConfig, shared: ShardedPs<B>) -> Self {
         let n = cfg.cluster.n_trainers.max(1);
         let (done_tx, done_rx) = mpsc::channel();
         let mut pool = Self {
             cfg: cfg.clone(),
             shared,
-            turnstile: Arc::new(Turnstile::new()),
             gather_barrier: Arc::new(Barrier::new(n)),
             workers: (0..n).map(|_| None).collect(),
             done_tx,
@@ -266,7 +234,6 @@ impl<B: PsBackend + 'static> TrainerPool<B> {
             rank,
             cfg: self.cfg.clone(),
             shared: self.shared.clone(),
-            turnstile: Arc::clone(&self.turnstile),
             gather_barrier: Arc::clone(&self.gather_barrier),
             rx,
             done: self.done_tx.clone(),
@@ -331,8 +298,9 @@ impl<B: PsBackend + 'static> TrainerPool<B> {
                 Err(_) => {
                     // timeout (a worker died without replying — likely a
                     // panic) or a closed channel: no more replies coming.
-                    // Survivors may be stuck at the gather barrier, so
-                    // mark the pool wedged — stop() must not join them.
+                    // Survivors may be stuck at the gather barrier or a
+                    // node turnstile, so mark the pool wedged — stop()
+                    // must not join them.
                     self.wedged = true;
                     if first_err.is_none() {
                         first_err = Some(format!(
@@ -404,38 +372,20 @@ mod tests {
         cfg
     }
 
-    fn shared_for(cfg: &JobConfig) -> SharedPs<PsCluster> {
+    fn shared_for(cfg: &JobConfig) -> ShardedPs<PsCluster> {
         let tables: Vec<TableInfo> = cfg
             .data
             .table_rows
             .iter()
             .map(|&rows| TableInfo { rows, dim: cfg.model.emb_dim })
             .collect();
-        SharedPs::new(PsCluster::new(tables, cfg.cluster.n_emb_ps, cfg.data.seed ^ 0xEB))
+        ShardedPs::new(PsCluster::new(tables, cfg.cluster.n_emb_ps, cfg.data.seed ^ 0xEB))
     }
 
     fn init_host(cfg: &JobConfig) -> Vec<Vec<f32>> {
         let rt = Runtime::cpu().unwrap();
         let model = rt.load_model(&cfg.artifacts_dir, &cfg.model.preset).unwrap();
         model.params_to_host(&model.init_params(cfg.train.seed)).unwrap()
-    }
-
-    #[test]
-    fn turnstile_serves_tickets_in_order() {
-        let t = Arc::new(Turnstile::new());
-        let order = Arc::new(Mutex::new(Vec::new()));
-        std::thread::scope(|s| {
-            for ticket in (0..8u64).rev() {
-                let t = Arc::clone(&t);
-                let order = Arc::clone(&order);
-                s.spawn(move || {
-                    t.wait_for(ticket);
-                    order.lock().unwrap().push(ticket);
-                    t.advance();
-                });
-            }
-        });
-        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<u64>>());
     }
 
     #[test]
@@ -449,7 +399,7 @@ mod tests {
         assert!(results.iter().all(|r| r.loss.is_finite()));
         assert!(results.iter().all(|r| !r.params.is_empty()));
         // both trainers issued a gather and applied their sparse update
-        let stats = PsBackend::stats(&*shared.read());
+        let stats = shared.stats();
         assert_eq!((stats.gathers, stats.applies), (2, 2));
         pool.stop();
     }

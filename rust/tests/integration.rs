@@ -462,10 +462,36 @@ fn multi_trainer_runs_are_deterministic_and_backend_identical() {
 }
 
 #[test]
-fn n4_run_with_trainer_and_ps_failure_partial_recovers() {
-    // the mixed-failure acceptance scenario: 4 trainers, one trainer loss
-    // and one Emb PS loss, partial recovery — the run completes with no
-    // step re-execution and finite metrics on both backends.
+fn n4_mixed_failure_is_backend_identical_and_n1_matches_reference() {
+    // the sharded-seam acceptance scenario (ISSUE 3): with one PS loss +
+    // one trainer loss under partial recovery,
+    //   (a) the N = 1 driver run stays bit-identical to the preserved
+    //       pre-refactor loop (coordinator::reference) on both backends
+    //       under the same PS-failure schedule, and
+    //   (b) the N = 4 runs are bit-identical ACROSS the two backends —
+    //       per-node turnstile ordering leaves no nondeterminism to hide
+    //       behind even under concurrent sharded scatters.
+    use cpr::coordinator::reference::run_training_reference;
+    let ps_only = vec![FailureEvent {
+        time_h: 35.0,
+        victims: vec![3],
+        trainer_victims: vec![],
+    }];
+    for backend in [PsBackendKind::InProc, PsBackendKind::Threaded] {
+        let mut cfg = test_cfg(Strategy::CprSsu);
+        cfg.cluster.backend = backend;
+        cfg.cluster.n_trainers = 1;
+        let opts = RunOptions { schedule: ps_only.clone(), ..Default::default() };
+        let a = with_mini(|m| run_training(m, &cfg, &opts)).unwrap();
+        let b = with_mini(|m| run_training_reference(m, &cfg, &opts)).unwrap();
+        let name = backend.name();
+        assert_eq!(a.final_auc, b.final_auc,
+                   "{name}: N=1 driver diverged from reference under failure");
+        assert_eq!(a.final_logloss, b.final_logloss, "{name}");
+        assert_eq!(a.pls, b.pls, "{name}");
+        assert_eq!(a.train_loss.points, b.train_loss.points, "{name}");
+    }
+    let mut per_backend = Vec::new();
     for backend in [PsBackendKind::InProc, PsBackendKind::Threaded] {
         let mut cfg = test_cfg(Strategy::CprSsu);
         cfg.cluster.backend = backend;
@@ -496,7 +522,44 @@ fn n4_run_with_trainer_and_ps_failure_partial_recovers() {
                 "{name}: logloss {}", r.final_logloss);
         assert!(r.overhead_frac.is_finite() && r.overhead_frac > 0.0, "{name}");
         assert!(!r.fell_back, "{name}");
+        per_backend.push(r);
     }
+    let (a, b) = (&per_backend[0], &per_backend[1]);
+    assert_eq!(a.final_auc, b.final_auc,
+               "N=4 mixed-failure AUC diverged across backends");
+    assert_eq!(a.final_logloss, b.final_logloss,
+               "N=4 mixed-failure logloss diverged across backends");
+    assert_eq!(a.pls, b.pls, "N=4 mixed-failure PLS diverged across backends");
+    assert_eq!(a.train_loss.points, b.train_loss.points,
+               "N=4 mixed-failure loss curve diverged across backends");
+}
+
+#[test]
+fn trainer_contention_n8_is_deterministic_and_backend_identical() {
+    // the release-mode contention scenario (CI runs this under
+    // `cargo test --release -- trainer`): 8 trainer threads hammer the
+    // sharded data plane — concurrent gathers, per-node turnstile
+    // scatters — and the run must still be reproducible run-to-run and
+    // bit-identical across the inproc and threaded backends.
+    let mut cfg = test_cfg(Strategy::PartialNaive);
+    cfg.cluster.n_trainers = 8;
+    cfg.data.train_samples = 128 * 8 * 8; // 8 global steps of 8 ranks
+    cfg.data.eval_samples = 128 * 4;
+    let opts = RunOptions::default();
+    let a = with_mini(|m| run_training(m, &cfg, &opts)).unwrap();
+    let b = with_mini(|m| run_training(m, &cfg, &opts)).unwrap();
+    assert_eq!(a.n_trainers, 8);
+    assert_eq!(a.steps_executed, 8);
+    assert_eq!(a.final_auc, b.final_auc,
+               "n=8 run must reproduce exactly under contention");
+    assert_eq!(a.final_logloss, b.final_logloss);
+    assert_eq!(a.train_loss.points, b.train_loss.points);
+    cfg.cluster.backend = PsBackendKind::Threaded;
+    let c = with_mini(|m| run_training(m, &cfg, &opts)).unwrap();
+    assert_eq!(c.backend, "threaded");
+    assert_eq!(a.final_auc, c.final_auc, "n=8 diverged across backends");
+    assert_eq!(a.final_logloss, c.final_logloss);
+    assert_eq!(a.train_loss.points, c.train_loss.points);
 }
 
 #[test]

@@ -4,6 +4,11 @@
 //! Sections:
 //!   table1_*          — tracker time overheads (paper Table 1): SCAR vs
 //!                       MFU vs SSU selection + record on a 1M-row table
+//!   policy_overhead[] — per-step record_batch + select cost of each
+//!                       tracker through the policy engine's
+//!                       dyn PriorityTracker object vs the old concrete
+//!                       calls, at 1e5 and 1e6 rows (dyn-dispatch +
+//!                       injected-read cost of the policy seam)
 //!   hotpath_*         — L3 coordinator primitives: PS gather/scatter,
 //!                       checkpoint save/restore, AUC, data generation
 //!   backend_*         — inproc vs threaded PS runtimes at B=128/512/2048
@@ -33,6 +38,7 @@ use cpr::coordinator::{run_training, RunOptions};
 use cpr::data::{Batch, SyntheticDataset};
 use cpr::embedding::{PsCluster, TableInfo};
 use cpr::metrics::auc;
+use cpr::policy::PriorityTracker;
 use cpr::runtime::Runtime;
 use cpr::util::dist::Zipf;
 use cpr::util::rng::Rng;
@@ -58,6 +64,9 @@ fn main() {
     }
     if want("table1") {
         table1(quick);
+    }
+    if want("policy_overhead") {
+        policy_overhead(quick);
     }
     if want("hotpath") {
         hotpath(quick);
@@ -331,6 +340,80 @@ fn table1(quick: bool) {
         .run(|| scar.top_k(&cluster, 0, k));
     println!("(paper Table 1: SCAR ≈ O(N log N), MFU ≈ O(N log N), SSU ≈ O(N);\n \
               this impl uses O(N) select_nth for SCAR/MFU — see §Perf)");
+}
+
+// ---------------------------------------------------------------------------
+// Policy-engine overhead — dyn PriorityTracker vs the concrete calls
+// ---------------------------------------------------------------------------
+
+/// Per-step tracker cost through the policy seam: `record_batch` +
+/// `select` via `Box<dyn PriorityTracker>` (what `Prioritized` drives,
+/// with the cluster read injected as `&dyn PsDataPlane`) against the
+/// same work through the old concrete-type calls. The delta is the
+/// dyn-dispatch price of the API redesign; rows at 1e5 and 1e6 rows
+/// match the acceptance grid (quick mode runs 1e5 only).
+fn policy_overhead(quick: bool) {
+    println!("\n-- policy_overhead: dyn PriorityTracker vs concrete tracker calls --");
+    let sizes: &[(usize, &str)] =
+        if quick { &[(100_000, "1e5")] } else { &[(100_000, "1e5"), (1_000_000, "1e6")] };
+    for &(rows, label) in sizes {
+        let dim = 16usize;
+        let k = rows / 8; // r = 0.125
+        let mask = vec![true];
+        let cluster = PsCluster::new(vec![TableInfo { rows, dim }], 8, 1);
+        let mut rng = Rng::new(11);
+        let zipf = Zipf::new(rows, 1.1);
+        let accesses: Vec<u32> =
+            (0..128 * 26).map(|_| zipf.sample(&mut rng) as u32).collect();
+        let slots = accesses.len() as u64;
+
+        // MFU: record + top-k select
+        let mut mfu = MfuTracker::new(&[rows], &mask);
+        bench(&format!("policy_overhead[mfu,rows={label},concrete]"), quick)
+            .throughput(slots)
+            .run(|| {
+                mfu.record_batch(&accesses, 1);
+                mfu.top_k(0, k)
+            });
+        let mut mfu_dyn: Box<dyn PriorityTracker> =
+            Box::new(MfuTracker::new(&[rows], &mask));
+        bench(&format!("policy_overhead[mfu,rows={label},dyn]"), quick)
+            .throughput(slots)
+            .run(|| {
+                mfu_dyn.record_batch(&accesses, 1, 1);
+                mfu_dyn.select(&cluster, 0, k)
+            });
+
+        // SSU: record + drain (select IS the drain in both APIs)
+        let mut ssu = SsuTracker::new(&[k], &mask, 2, 3);
+        bench(&format!("policy_overhead[ssu,rows={label},concrete]"), quick)
+            .throughput(slots)
+            .run(|| {
+                ssu.record_batch(&accesses, 1);
+                ssu.drain(0)
+            });
+        let mut ssu_dyn: Box<dyn PriorityTracker> =
+            Box::new(SsuTracker::new(&[k], &mask, 2, 3));
+        bench(&format!("policy_overhead[ssu,rows={label},dyn]"), quick)
+            .throughput(slots)
+            .run(|| {
+                ssu_dyn.record_batch(&accesses, 1, 1);
+                ssu_dyn.select(&cluster, 0, k)
+            });
+
+        // SCAR: the per-save cost is the full-table change scan; the dyn
+        // path adds the injected &dyn PsDataPlane read on top of dispatch
+        let scar = ScarTracker::new(&cluster, &mask);
+        bench(&format!("policy_overhead[scar,rows={label},concrete]"), quick)
+            .run(|| scar.top_k(&cluster, 0, k));
+        let mut scar_dyn: Box<dyn PriorityTracker> =
+            Box::new(ScarTracker::new(&cluster, &mask));
+        bench(&format!("policy_overhead[scar,rows={label},dyn]"), quick)
+            .run(|| {
+                scar_dyn.record_batch(&accesses, 1, 1);
+                scar_dyn.select(&cluster, 0, k)
+            });
+    }
 }
 
 // ---------------------------------------------------------------------------

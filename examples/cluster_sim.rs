@@ -9,11 +9,23 @@ use anyhow::Result;
 use cpr::analysis::{fit_survival, hazard_curve, scalability_sweep, FailureModel};
 use cpr::config::preset;
 use cpr::failure::NodeHazard;
+use cpr::policy::registry;
 use cpr::sim::{simulate_fleet, FleetSimConfig};
 use cpr::util::rng::Rng;
 
 fn main() -> Result<()> {
     let mut rng = Rng::new(2026);
+
+    // ---- the policy registry the fleet models approximate ----
+    // Fig. 4/13 model the overhead of these policies analytically; the
+    // training emulator runs the same registry for real.
+    println!("== checkpoint-policy registry ==");
+    for s in registry::specs() {
+        println!("{:<13} save={:<18} recovery={:<16} tracker={:<5} {}",
+                 s.name, s.save, s.recovery, s.tracker.unwrap_or("-"),
+                 s.summary);
+    }
+    println!();
 
     // ---- Fig. 3: survival + hazard of 20k synthetic jobs ----
     println!("== Fig. 3 — failure-trace analysis (20k jobs) ==");

@@ -1,16 +1,20 @@
-//! Failure-tolerance comparison: every recovery strategy on the same
-//! failure schedule (a miniature of the paper's Fig. 7).
+//! Failure-tolerance comparison: every registered checkpoint policy on
+//! the same failure schedule (a miniature of the paper's Fig. 7, plus
+//! the adaptive-interval policy the paper does not have).
 //!
 //!     cargo run --release --example failure_tolerance [-- --preset mini]
 //!
-//! Prints one row per strategy: checkpoint overhead, final AUC, PLS, and
-//! whether CPR decided to fall back.
+//! The strategy list comes from the policy registry
+//! (`cpr::policy::registry`), so a newly registered policy shows up here
+//! without editing the example. Prints one row per policy: checkpoint
+//! overhead, final AUC, PLS, and whether CPR decided to fall back.
 
 use anyhow::Result;
 
-use cpr::config::{preset, Strategy};
+use cpr::config::preset;
 use cpr::coordinator::{run_training, RunOptions};
 use cpr::failure::uniform_schedule;
+use cpr::policy::registry;
 use cpr::runtime::Runtime;
 use cpr::util::cli::Cli;
 use cpr::util::rng::Rng;
@@ -38,22 +42,31 @@ fn main() -> Result<()> {
     // no-failure reference first
     let clean = run_training(&model, &base, &RunOptions::default())?;
     println!("no-failure reference AUC: {:.5}\n", clean.final_auc);
-    println!("{:<14} {:>10} {:>10} {:>9} {:>9} {:>6}",
-             "strategy", "overhead%", "AUC", "dAUC", "PLS", "note");
+    println!("{:<14} {:<24} {:>10} {:>10} {:>9} {:>9} {:>6}",
+             "strategy", "policy (save+tracker)", "overhead%", "AUC",
+             "dAUC", "PLS", "note");
 
-    for strategy in [Strategy::Full, Strategy::PartialNaive,
-                     Strategy::CprVanilla, Strategy::CprScar,
-                     Strategy::CprMfu, Strategy::CprSsu] {
+    for spec in registry::specs() {
         let mut cfg = base.clone();
-        cfg.checkpoint.strategy = strategy;
+        cfg.checkpoint.strategy = spec.strategy.clone();
         let r = run_training(&model, &cfg, &RunOptions {
             schedule: schedule.clone(),
             ..Default::default()
         })?;
-        println!("{:<14} {:>9.2}% {:>10.5} {:>9.5} {:>9.4} {:>6}",
-                 r.strategy, 100.0 * r.overhead_frac, r.final_auc,
-                 clean.final_auc - r.final_auc, r.pls,
-                 if r.fell_back { "FB" } else { "" });
+        let policy = match spec.tracker {
+            Some(t) => format!("{}+{t}", spec.save),
+            None => spec.save.to_string(),
+        };
+        let note = if r.fell_back {
+            "FB".to_string()
+        } else if r.ledger.replans.is_empty() {
+            String::new()
+        } else {
+            format!("{} replans", r.ledger.replans.len())
+        };
+        println!("{:<14} {:<24} {:>9.2}% {:>10.5} {:>9.5} {:>9.4} {:>6}",
+                 r.strategy, policy, 100.0 * r.overhead_frac, r.final_auc,
+                 clean.final_auc - r.final_auc, r.pls, note);
     }
     Ok(())
 }

@@ -18,18 +18,26 @@ use anyhow::Result;
 use cpr::config::{preset, Strategy};
 use cpr::coordinator::{run_training, RunOptions};
 use cpr::failure::uniform_schedule;
+use cpr::policy::registry;
 use cpr::runtime::Runtime;
 use cpr::util::rng::Rng;
 
 fn main() -> Result<()> {
     // 1. a job config: model architecture + synthetic dataset + emulated
-    //    cluster constants. Presets mirror the paper's setups.
+    //    cluster constants. Presets mirror the paper's setups. The
+    //    strategy is a key into the checkpoint-policy registry: it
+    //    resolves to a JobPolicies bundle (save policy + recovery policy
+    //    + tracker) the coordinator drives.
     let mut cfg = preset("mini")?;
     cfg.data.train_samples = 64_000; // 250 global steps at 2 trainers
     cfg.data.eval_samples = 16_000;
     cfg.cluster.n_trainers = 2; // two data-parallel trainer threads
     cfg.checkpoint.strategy = Strategy::CprSsu;
     cfg.checkpoint.target_pls = 0.1;
+    let spec = registry::spec(&cfg.checkpoint.strategy);
+    println!("policy bundle [{}]: save={} | recovery={} | tracker={}",
+             spec.name, spec.save, spec.recovery,
+             spec.tracker.unwrap_or("-"));
 
     // 2. the PJRT runtime executes the Python-free AOT artifacts.
     let rt = Runtime::cpu()?;

@@ -12,6 +12,7 @@ use anyhow::Result;
 use cpr::config::{preset, Strategy};
 use cpr::coordinator::{run_training, RunOptions};
 use cpr::failure::uniform_schedule;
+use cpr::policy::registry;
 use cpr::runtime::Runtime;
 use cpr::util::cli::Cli;
 use cpr::util::rng::Rng;
@@ -28,6 +29,9 @@ fn main() -> Result<()> {
     cfg.data.train_samples = steps * cfg.model.batch;
     cfg.data.eval_samples = 16_000 - (16_000 % cfg.model.batch);
     cfg.checkpoint.strategy = Strategy::CprSsu;
+    let spec = registry::spec(&cfg.checkpoint.strategy);
+    println!("checkpoint policy [{}]: save={} recovery={} tracker={}",
+             spec.name, spec.save, spec.recovery, spec.tracker.unwrap_or("-"));
 
     let total_params = cfg.data.total_rows() * cfg.model.emb_dim;
     println!("embedding parameters: {:.1} M rows x {} dim = {:.1} M params",

@@ -176,7 +176,7 @@ impl CheckpointPipeline {
     /// Capture every node + the position marker and hand both to the
     /// writer. Blocks only if both snapshot buffers are still in flight
     /// (backpressure), never on the disk write itself.
-    pub fn full_save<B: PsControlPlane>(
+    pub fn full_save<B: PsControlPlane + ?Sized>(
         &self,
         backend: &B,
         mlp: Vec<Vec<f32>>,
@@ -200,7 +200,7 @@ impl CheckpointPipeline {
 
     /// Capture `rows` of `table` (priority save) and hand them to the
     /// writer. Does not move the position marker.
-    pub fn save_rows<B: PsDataPlane>(&self, backend: &B, table: usize, rows: &[u32]) {
+    pub fn save_rows<B: PsDataPlane + ?Sized>(&self, backend: &B, table: usize, rows: &[u32]) {
         let dim = backend.tables()[table].dim;
         let (data, opt) = backend.read_rows(table, rows);
         self.in_flight.fetch_add(1, Ordering::SeqCst);
@@ -208,7 +208,7 @@ impl CheckpointPipeline {
     }
 
     /// Capture one whole (small) table.
-    pub fn save_table<B: PsDataPlane>(&self, backend: &B, table: usize) {
+    pub fn save_table<B: PsDataPlane + ?Sized>(&self, backend: &B, table: usize) {
         let rows: Vec<u32> = (0..backend.tables()[table].rows as u32).collect();
         self.save_rows(backend, table, &rows);
     }
@@ -221,7 +221,7 @@ impl CheckpointPipeline {
     /// Partial recovery: fetch `node`'s mirror state (after all previously
     /// submitted saves have been applied — FIFO) and load it into the
     /// backend.
-    pub fn restore_node<B: PsControlPlane>(&self, backend: &B, node: usize) {
+    pub fn restore_node<B: PsControlPlane + ?Sized>(&self, backend: &B, node: usize) {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.send(Msg::GetNode { node, reply: reply_tx });
         let snap = reply_rx.recv().expect("checkpoint writer died");
@@ -230,7 +230,7 @@ impl CheckpointPipeline {
 
     /// Full recovery: restore every node from the mirror; returns
     /// (mlp, step, samples) for the trainer to rewind to.
-    pub fn restore_all<B: PsControlPlane>(&self, backend: &B) -> (Vec<Vec<f32>>, u64, u64) {
+    pub fn restore_all<B: PsControlPlane + ?Sized>(&self, backend: &B) -> (Vec<Vec<f32>>, u64, u64) {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.send(Msg::GetStore { reply: reply_tx });
         let store = reply_rx.recv().expect("checkpoint writer died");

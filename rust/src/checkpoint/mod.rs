@@ -59,7 +59,7 @@ pub struct CheckpointStore {
 
 impl CheckpointStore {
     /// Initial checkpoint = the cluster's initial state (epoch 0).
-    pub fn initial<B: PsControlPlane>(cluster: &B, mlp: Vec<Vec<f32>>) -> Self {
+    pub fn initial<B: PsControlPlane + ?Sized>(cluster: &B, mlp: Vec<Vec<f32>>) -> Self {
         let mut shards = Vec::with_capacity(cluster.n_nodes());
         let mut opt = Vec::with_capacity(cluster.n_nodes());
         for n in 0..cluster.n_nodes() {
@@ -73,7 +73,7 @@ impl CheckpointStore {
     /// Full checkpoint: mirror every shard + MLP params + position.
     /// (Synchronous path — the coordinator's async equivalent is
     /// [`async_pipeline::CheckpointPipeline::full_save`].)
-    pub fn full_save<B: PsControlPlane>(
+    pub fn full_save<B: PsControlPlane + ?Sized>(
         &mut self,
         cluster: &B,
         mlp: Vec<Vec<f32>>,
@@ -98,7 +98,7 @@ impl CheckpointStore {
 
     /// Priority (partial-content) save: copy only `rows` of `table` into
     /// the mirror. Does NOT move the PLS position marker.
-    pub fn save_rows<B: PsDataPlane>(&mut self, cluster: &B, table: usize, rows: &[u32]) {
+    pub fn save_rows<B: PsDataPlane + ?Sized>(&mut self, cluster: &B, table: usize, rows: &[u32]) {
         let dim = cluster.tables()[table].dim;
         let (data, opt) = cluster.read_rows(table, rows);
         self.apply_rows(table, rows, dim, &data, &opt);
@@ -126,7 +126,7 @@ impl CheckpointStore {
     /// Save one whole table. Row-at-a-time through `read_rows`, which is
     /// fine for its only callers — the tiny (≤64-row) non-priority tables
     /// of the skewed layout; large tables go through `snapshot_node`.
-    pub fn save_table<B: PsDataPlane>(&mut self, cluster: &B, table: usize) {
+    pub fn save_table<B: PsDataPlane + ?Sized>(&mut self, cluster: &B, table: usize) {
         let rows: Vec<u32> = (0..cluster.tables()[table].rows as u32).collect();
         self.save_rows(cluster, table, &rows);
     }
@@ -141,13 +141,13 @@ impl CheckpointStore {
 
     /// PARTIAL recovery: restore only `node`'s shards; everyone else keeps
     /// their progress.
-    pub fn restore_node<B: PsControlPlane>(&self, cluster: &B, node: usize) {
+    pub fn restore_node<B: PsControlPlane + ?Sized>(&self, cluster: &B, node: usize) {
         cluster.load_node(node, &self.shards[node], &self.opt[node]);
     }
 
     /// FULL recovery: restore every shard; returns (mlp, step, samples) for
     /// the trainer to rewind to.
-    pub fn restore_all<B: PsControlPlane>(&self, cluster: &B) -> (Vec<Vec<f32>>, u64, u64) {
+    pub fn restore_all<B: PsControlPlane + ?Sized>(&self, cluster: &B) -> (Vec<Vec<f32>>, u64, u64) {
         for n in 0..cluster.n_nodes() {
             cluster.load_node(n, &self.shards[n], &self.opt[n]);
         }

@@ -220,7 +220,7 @@ impl ScarTracker {
     // PS node), never per-row `read_row` — on the threaded backend the
     // latter would be a channel round trip per row of every priority table.
 
-    pub fn new<B: PsDataPlane>(cluster: &B, mask: &[bool]) -> Self {
+    pub fn new<B: PsDataPlane + ?Sized>(cluster: &B, mask: &[bool]) -> Self {
         let tables = cluster.tables();
         let mut last_saved = Vec::with_capacity(tables.len());
         let dims: Vec<usize> = tables.iter().map(|t| t.dim).collect();
@@ -235,7 +235,7 @@ impl ScarTracker {
     }
 
     /// The `k` rows of `table` with the largest change-L2 since last save.
-    pub fn top_k<B: PsDataPlane>(&self, cluster: &B, table: usize, k: usize) -> Vec<u32> {
+    pub fn top_k<B: PsDataPlane + ?Sized>(&self, cluster: &B, table: usize, k: usize) -> Vec<u32> {
         debug_assert!(self.mask[table]);
         let dim = self.dims[table];
         let mirror = &self.last_saved[table];
@@ -259,7 +259,7 @@ impl ScarTracker {
     }
 
     /// After saving `rows` of `table`, refresh their mirror entries.
-    pub fn mark_saved<B: PsDataPlane>(&mut self, cluster: &B, table: usize, rows: &[u32]) {
+    pub fn mark_saved<B: PsDataPlane + ?Sized>(&mut self, cluster: &B, table: usize, rows: &[u32]) {
         let dim = self.dims[table];
         let mirror = &mut self.last_saved[table];
         let (data, _) = cluster.read_rows(table, rows);
@@ -276,7 +276,7 @@ impl ScarTracker {
 }
 
 /// All of `table`'s rows in row-major order via one batched read.
-fn read_full_table<B: PsDataPlane>(cluster: &B, table: usize, rows: usize) -> Vec<f32> {
+fn read_full_table<B: PsDataPlane + ?Sized>(cluster: &B, table: usize, rows: usize) -> Vec<f32> {
     let ids: Vec<u32> = (0..rows as u32).collect();
     cluster.read_rows(table, &ids).0
 }

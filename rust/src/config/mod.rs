@@ -147,9 +147,14 @@ pub enum Strategy {
     CprMfu,
     /// CPR + sub-sampled-used list (paper's CPR-SSU)
     CprSsu,
+    /// CPR re-planning its interval online from the observed failure
+    /// rate (`policy::AdaptiveInterval`; Chameleon-style adaptivity)
+    CprAdaptive,
 }
 
 impl Strategy {
+    /// Parse a registry key (see `policy::registry::names`). The error
+    /// for an unknown key lists every valid name.
     pub fn parse(s: &str) -> Result<Strategy> {
         Ok(match s {
             "full" => Strategy::Full,
@@ -158,7 +163,11 @@ impl Strategy {
             "cpr-scar" => Strategy::CprScar,
             "cpr-mfu" => Strategy::CprMfu,
             "cpr-ssu" => Strategy::CprSsu,
-            _ => bail!("unknown strategy {s:?} (full|partial|cpr|cpr-scar|cpr-mfu|cpr-ssu)"),
+            "cpr-adaptive" => Strategy::CprAdaptive,
+            _ => bail!(
+                "unknown strategy {s:?} (valid: full|partial|cpr|cpr-vanilla|\
+                 cpr-scar|cpr-mfu|cpr-ssu|cpr-adaptive)"
+            ),
         })
     }
 
@@ -170,11 +179,24 @@ impl Strategy {
             Strategy::CprScar => "cpr-scar",
             Strategy::CprMfu => "cpr-mfu",
             Strategy::CprSsu => "cpr-ssu",
+            Strategy::CprAdaptive => "cpr-adaptive",
         }
     }
 
     pub fn is_partial(&self) -> bool {
         !matches!(self, Strategy::Full)
+    }
+
+    /// One of the CPR family (runs the PLS controller; may fall back).
+    pub fn is_cpr(&self) -> bool {
+        matches!(
+            self,
+            Strategy::CprVanilla
+                | Strategy::CprScar
+                | Strategy::CprMfu
+                | Strategy::CprSsu
+                | Strategy::CprAdaptive
+        )
     }
 
     pub fn priority(&self) -> bool {
@@ -533,9 +555,11 @@ mod tests {
 
     #[test]
     fn strategy_parse_roundtrip() {
-        for s in ["full", "partial", "cpr-vanilla", "cpr-scar", "cpr-mfu", "cpr-ssu"] {
+        for s in ["full", "partial", "cpr-vanilla", "cpr-scar", "cpr-mfu",
+                  "cpr-ssu", "cpr-adaptive"] {
             assert_eq!(Strategy::parse(s).unwrap().name(), s);
         }
         assert!(Strategy::parse("bogus").is_err());
+        assert!(Strategy::CprAdaptive.is_cpr() && !Strategy::CprAdaptive.priority());
     }
 }

@@ -3,10 +3,23 @@
 //! Owns the whole emulated job: the N data-parallel trainer replicas
 //! (each a [`crate::trainer::TrainerPool`] worker thread with its own
 //! `ModelExe`), the sharded Emb PS cluster, the synthetic dataset, the
-//! checkpoint manager with its priority trackers, the failure schedule,
-//! and the PLS controller. One call to [`run_training`] executes a full
-//! single-epoch job under a chosen [`Strategy`] and returns a
+//! checkpoint-policy engine, the failure schedule, and the PLS
+//! controller. One call to [`run_training`] executes a full
+//! single-epoch job under a chosen `config::Strategy` and returns a
 //! [`TrainReport`] with model quality + the overhead ledger.
+//!
+//! ## The policy engine
+//! Every checkpoint/recovery decision lives behind the
+//! [`crate::policy`] traits: the registry maps the configured strategy
+//! to a [`crate::policy::JobPolicies`] bundle up front, and the step
+//! loop is a strategy-free driver — it feeds the access streams to
+//! `SavePolicy::on_step`, captures whenever the clock reaches
+//! `SavePolicy::next_save_h`, and routes failure events through
+//! `RecoveryPolicy::on_failure`, applying the returned
+//! [`crate::policy::RecoveryAction`] to its own state (dense params,
+//! step counter). No `Strategy` or tracker-variant branching remains in
+//! the loop; new policies (like the online-replanned
+//! `policy::AdaptiveInterval`) plug in at the registry.
 //!
 //! ## Multi-trainer driver
 //! `run_training` is a *driver* over the trainer pool: each global step,
@@ -78,15 +91,18 @@ use std::sync::Arc;
 use anyhow::{ensure, Result};
 
 use crate::checkpoint::async_pipeline::CheckpointPipeline;
-use crate::checkpoint::tracker::{priority_mask, MfuTracker, ScarTracker, SsuTracker};
+use crate::checkpoint::tracker::{priority_mask, MfuTracker};
 use crate::checkpoint::CheckpointStore;
 use crate::cluster::{PsBackend, PsDataPlane, ShardedPs, ThreadedCluster};
-use crate::config::{JobConfig, PsBackendKind, Strategy};
+use crate::config::{JobConfig, PsBackendKind};
 use crate::data::{Batch, SyntheticDataset};
 use crate::embedding::{init_value, PsCluster, TableInfo};
 use crate::failure::FailureEvent;
 use crate::metrics::{auc, logloss_from_logits, Curve, OverheadLedger};
-use crate::pls::{self, CprPlan, PlsAccumulator};
+use crate::pls::CprPlan;
+use crate::policy::{
+    registry, FailureCtx, PsView, RecoveryAction, RecoveryPolicy, SaveCtx, SavePolicy,
+};
 use crate::runtime::{ModelExe, PjRtBuffer};
 use crate::trainer::{TrainerPool, TrainerStep};
 
@@ -219,7 +235,6 @@ fn run_training_core<B: PsBackend + 'static>(
     );
 
     let wall_start = std::time::Instant::now();
-    let strategy = cfg.checkpoint.strategy.clone();
     let n_emb = cfg.cluster.n_emb_ps;
     let batch = m.batch;
     // one global step = one batch per trainer
@@ -248,70 +263,23 @@ fn run_training_core<B: PsBackend + 'static>(
     let mut marked_step: u64 = 0;
     let mut marked_samples: u64 = 0;
 
-    // --- the CPR controller decides the plan --------------------------------
-    let (plan, use_partial, mut t_save_h) = match strategy {
-        Strategy::Full => (None, false, cfg.cluster.t_save_full_h()),
-        Strategy::PartialNaive => (None, true, cfg.cluster.t_save_full_h()),
-        _ => {
-            let p = pls::plan(&cfg.cluster, cfg.checkpoint.target_pls);
-            let partial = p.use_partial;
-            let t = p.t_save_h;
-            (Some(p), partial, t)
-        }
-    };
-    if let Some(t) = cfg.checkpoint.t_save_override_h {
-        t_save_h = t; // Fig. 11/12 sweeps force the interval directly
-    }
-    let fell_back = matches!(
-        strategy,
-        Strategy::CprVanilla | Strategy::CprScar | Strategy::CprMfu | Strategy::CprSsu
-    ) && !use_partial;
+    // --- the policy engine -------------------------------------------------
+    // The registry runs the CPR controller, applies the sweep override,
+    // decides fallback, and wires save cadence + tracker + recovery into
+    // one bundle; the step loop below never branches on the strategy.
+    // (SCAR reads its initial mirror through the quiesce token here.)
+    let mut policies = registry::build_policies(cfg, PsView::new(&*shared.quiesce()));
 
-    // --- priority trackers ----------------------------------------------------
-    let priority = strategy.priority() && use_partial;
-    let mask = priority_mask(&cfg.data.table_rows, cfg.checkpoint.priority_tables);
-    let r = cfg.checkpoint.r;
-    let mut mfu = match strategy {
-        Strategy::CprMfu if priority => {
-            Some(MfuTracker::new(&cfg.data.table_rows, &mask))
-        }
-        _ => None,
-    };
-    let mut ssu = match strategy {
-        Strategy::CprSsu if priority => {
-            let caps: Vec<usize> = cfg
-                .data
-                .table_rows
-                .iter()
-                .map(|&n| ((n as f64 * r).ceil() as usize).max(1))
-                .collect();
-            Some(SsuTracker::new(&caps, &mask, cfg.checkpoint.ssu_period,
-                                 cfg.data.seed ^ 0x55))
-        }
-        _ => None,
-    };
-    let mut scar = match strategy {
-        Strategy::CprScar if priority => {
-            Some(ScarTracker::new(&*shared.quiesce(), &mask))
-        }
-        _ => None,
-    };
-    // Fig. 6 instrumentation: full access counters over every table
+    // Fig. 6 instrumentation: full access counters over every table (not
+    // a policy — plain measurement, independent of the strategy)
     let mut stat_counts = if opts.collect_row_stats {
         Some(MfuTracker::new(&cfg.data.table_rows,
                              &vec![true; cfg.data.table_rows.len()]))
     } else {
         None
     };
-
-    // --- save cadence -----------------------------------------------------------
-    // priority schemes save r·N rows every r·T_save (cost r·O_save);
-    // others save everything every T_save (cost O_save). The PLS position
-    // marker advances once per full T_save in both cases.
-    let save_interval_h = if priority { r * t_save_h } else { t_save_h };
-    let minors_per_major = if priority { (1.0 / r).round() as u64 } else { 1 };
-    let mut next_save_h = save_interval_h;
-    let mut minor_count: u64 = 0;
+    // mask of the priority (large) tables, for the Fig. 6 report filter
+    let mask = priority_mask(&cfg.data.table_rows, cfg.checkpoint.priority_tables);
 
     // --- failure schedule (consumed in order of useful-progress time) --------
     // validate victim ids up front: schedules can come from hand-written
@@ -334,7 +302,6 @@ fn run_training_core<B: PsBackend + 'static>(
 
     // --- main loop ----------------------------------------------------------------
     let mut ledger = OverheadLedger::default();
-    let mut pls_acc = PlsAccumulator::new();
     let mut train_loss = Curve::default();
     let mut eval_auc_curve = Curve::default();
     let log_every = if opts.log_every == 0 { 50 } else { opts.log_every };
@@ -351,14 +318,10 @@ fn run_training_core<B: PsBackend + 'static>(
         let results = pool.step(step, step_params)?;
         let mean_loss =
             results.iter().map(|t| t.loss as f64).sum::<f64>() / n_trainers as f64;
-        // trackers observe the concatenated access stream in rank order
+        // the save policy observes the concatenated access stream in rank
+        // order (its tracker records it; tracker-less policies ignore it)
         for res in &results {
-            if let Some(t) = mfu.as_mut() {
-                t.record_batch_hot(&res.indices, m.num_sparse, hotness);
-            }
-            if let Some(t) = ssu.as_mut() {
-                t.record_batch_hot(&res.indices, m.num_sparse, hotness);
-            }
+            policies.save.on_step(&res.indices, m.num_sparse, hotness);
             if let Some(t) = stat_counts.as_mut() {
                 t.record_batch_hot(&res.indices, m.num_sparse, hotness);
             }
@@ -384,113 +347,80 @@ fn run_training_core<B: PsBackend + 'static>(
         // materializes by holding the control plane's exclusive quiesce
         // token for the duration of the capture; the pipeline's writer
         // thread applies and persists the captured data while training
-        // goes on)
-        while clock_h >= next_save_h && next_save_h <= cfg.cluster.t_total_h {
-            minor_count += 1;
-            if priority {
-                ledger.save_h += r * cfg.cluster.o_save_h;
-                {
-                    let q = shared.quiesce();
-                    for t in 0..q.tables().len() {
-                        if mask[t] {
-                            let rows_in_table = q.tables()[t].rows;
-                            let k = ((rows_in_table as f64 * r).ceil() as usize).max(1);
-                            let rows: Vec<u32> = if let Some(tr) = mfu.as_mut() {
-                                let sel = tr.top_k(t, k);
-                                tr.clear_rows(t, &sel);
-                                sel
-                            } else if let Some(tr) = ssu.as_mut() {
-                                tr.drain(t)
-                            } else if let Some(tr) = scar.as_mut() {
-                                tr.top_k(&*q, t, k)
-                            } else {
-                                unreachable!()
-                            };
-                            pipeline.save_rows(&*q, t, &rows);
-                            if let Some(tr) = scar.as_mut() {
-                                tr.mark_saved(&*q, t, &rows);
-                            }
-                        } else {
-                            pipeline.save_table(&*q, t);
-                        }
-                    }
-                }
-                if minor_count % minors_per_major == 0 {
-                    pipeline.mark_position(host_params.clone(), step,
-                                           step * samples_per_step);
-                    marked_step = step;
-                    marked_samples = step * samples_per_step;
-                    ledger.n_saves += 1;
-                }
-            } else {
-                ledger.save_h += cfg.cluster.o_save_h;
-                ledger.n_saves += 1;
-                pipeline.full_save(&*shared.quiesce(), host_params.clone(), step,
-                                   step * samples_per_step);
-                marked_step = step;
-                marked_samples = step * samples_per_step;
+        // goes on. The save policy owns cadence, content selection, and
+        // the ledger's save charges.)
+        while clock_h >= policies.save.next_save_h()
+            && policies.save.next_save_h() <= cfg.cluster.t_total_h
+        {
+            let q = shared.quiesce();
+            let marker = policies.save.capture(
+                PsView::new(&*q),
+                &pipeline,
+                &mut ledger,
+                &SaveCtx {
+                    step,
+                    samples: step * samples_per_step,
+                    clock_h,
+                    host_params: &host_params,
+                },
+            );
+            if let Some(mark) = marker {
+                marked_step = mark.step;
+                marked_samples = mark.samples;
             }
-            next_save_h += save_interval_h;
         }
 
         // ---- failures that fire at/before the current clock ----
         while next_event < schedule.len() && schedule[next_event].time_h <= clock_h {
             let ev = schedule[next_event].clone();
             next_event += 1;
-            ledger.n_failures += 1;
-            ledger.load_h += cfg.cluster.o_load_h;
-            ledger.reschedule_h += cfg.cluster.o_res_h;
-            if use_partial {
-                if !ev.victims.is_empty() {
-                    pls_acc.on_failure(
-                        step * samples_per_step,
+            // adaptive save policies re-estimate the MTBF from these
+            policies.save.observe_failure(clock_h);
+            // the recovery policy charges the ledger, runs the PS-side
+            // kill/respawn/restore behind the quiesce token (trainers are
+            // parked at the step barrier, so the exclusive epoch is free
+            // and no gather can observe a half-restored node), and
+            // accrues PLS; the returned action carries the driver-side
+            // effects.
+            let action = {
+                let q = shared.quiesce();
+                policies.recovery.on_failure(
+                    &ev,
+                    PsView::new(&*q),
+                    &pipeline,
+                    &mut ledger,
+                    &FailureCtx {
+                        clock_h,
+                        dt_h,
+                        samples: step * samples_per_step,
+                        marked_step,
                         marked_samples,
-                        cfg.data.train_samples as u64,
-                        n_emb,
-                        ev.victims.len(),
-                    );
-                    // live partial recovery: the victim dies (on the
-                    // threaded backend its worker is joined), a blank node
-                    // respawns, and the checkpoint mirror repopulates it —
-                    // survivors keep their progress and keep serving. All
-                    // of it behind the quiesce token: the trainers are
-                    // parked at the step barrier, so the exclusive epoch
-                    // is free and no gather can observe a half-restored
-                    // node.
-                    {
-                        let q = shared.quiesce();
-                        for &v in &ev.victims {
-                            q.kill_node(v);
-                            q.respawn_node(v);
-                            pipeline.restore_node(&*q, v);
-                        }
+                    },
+                )
+            };
+            // trainer loss: the worker thread really dies and is joined;
+            // the replacement re-joins at the next step barrier with
+            // whatever dense params the driver broadcasts (identical for
+            // both recovery modes — what it receives differs below)
+            for &t in &ev.trainer_victims {
+                pool.kill_trainer(t);
+                pool.respawn_trainer(t);
+            }
+            match action {
+                RecoveryAction::Continue { reload_dense_from_marker } => {
+                    // partial recovery: no rewind. With a single trainer
+                    // and a trainer loss there is no surviving replica:
+                    // dense params reload (stale) from the last marker
+                    // while the Emb PS keeps its progress.
+                    if reload_dense_from_marker {
+                        let (mlp, _step, _samples) = pipeline.marked_state();
+                        host_params = mlp;
                     }
                 }
-                // trainer loss under partial recovery: the worker thread
-                // really dies; dense params are replicated, so the
-                // replacement re-joins from the survivors' replica at the
-                // next step barrier. With a single trainer there is no
-                // survivor: dense params reload (stale) from the last
-                // checkpoint marker while the Emb PS keeps its progress.
-                for &t in &ev.trainer_victims {
-                    pool.kill_trainer(t);
-                    pool.respawn_trainer(t);
-                }
-                if !ev.trainer_victims.is_empty() && n_trainers == 1 {
-                    let (mlp, _step, _samples) = pipeline.marked_state();
+                RecoveryAction::Rewind { mlp, step: ckpt_step } => {
+                    // full recovery: everyone reloads, training rewinds
                     host_params = mlp;
-                }
-            } else {
-                // full recovery: everyone reloads, training rewinds
-                let t_last = marked_step as f64 * dt_h;
-                ledger.lost_h += (clock_h - t_last).max(0.0);
-                let (mlp, ckpt_step, _samples) =
-                    pipeline.restore_all(&*shared.quiesce());
-                host_params = mlp;
-                step = ckpt_step;
-                for &t in &ev.trainer_victims {
-                    pool.kill_trainer(t);
-                    pool.respawn_trainer(t);
+                    step = ckpt_step;
                 }
             }
         }
@@ -538,7 +468,7 @@ fn run_training_core<B: PsBackend + 'static>(
 
     let backend = shared.name().to_string();
     Ok(TrainReport {
-        strategy: strategy.name().to_string(),
+        strategy: cfg.checkpoint.strategy.name().to_string(),
         backend,
         n_trainers,
         final_auc,
@@ -547,9 +477,9 @@ fn run_training_core<B: PsBackend + 'static>(
         eval_auc: eval_auc_curve,
         overhead_frac: ledger.fraction_of(cfg.cluster.t_total_h),
         ledger,
-        pls: pls_acc.value(),
-        plan,
-        fell_back,
+        pls: policies.recovery.pls(),
+        plan: policies.plan,
+        fell_back: policies.fell_back,
         steps_executed,
         failures_seen: next_event as u64,
         wall_secs: wall_start.elapsed().as_secs_f64(),

@@ -28,6 +28,7 @@ pub mod embedding;
 pub mod failure;
 pub mod metrics;
 pub mod pls;
+pub mod policy;
 pub mod runtime;
 pub mod sim;
 pub mod testing;

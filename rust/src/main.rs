@@ -75,7 +75,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let cli = Cli::new("cpr train", "run one emulated training job")
         .opt("preset", "mini", "model preset (mini|kaggle_like|terabyte_like|large_100m)")
         .opt("config", "", "TOML job config (overrides preset)")
-        .opt("strategy", "", "full|partial|cpr-vanilla|cpr-scar|cpr-mfu|cpr-ssu")
+        .opt("strategy", "",
+             "full|partial|cpr-vanilla|cpr-scar|cpr-mfu|cpr-ssu|cpr-adaptive")
         .opt("backend", "", "Emb PS cluster runtime: inproc|threaded")
         .opt("target-pls", "", "CPR target PLS (default from config: 0.1)")
         .opt("n-emb", "", "number of Emb PS nodes")
@@ -111,6 +112,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     eprintln!("[cpr] model {} loaded: {} MLP params, {} embedding rows",
               cfg.model.preset, model.manifest.mlp_params(),
               cfg.data.total_rows());
+    let spec = cpr::policy::registry::spec(&cfg.checkpoint.strategy);
+    eprintln!("[cpr] policy bundle: save={} recovery={} tracker={}",
+              spec.save, spec.recovery, spec.tracker.unwrap_or("none"));
 
     let opts = RunOptions {
         schedule,
@@ -146,6 +150,12 @@ fn print_report(r: &TrainReport, t_total_h: f64) {
     println!("  load              {:.3} h", r.ledger.load_h);
     println!("  lost computation  {:.3} h", r.ledger.lost_h);
     println!("  reschedule        {:.3} h", r.ledger.reschedule_h);
+    if !r.ledger.replans.is_empty() {
+        let track: Vec<String> = r.ledger.replans.iter()
+            .map(|(at, t)| format!("{at:.1}h→{t:.2}h"))
+            .collect();
+        println!("  interval re-plans {}", track.join(", "));
+    }
     println!("wall time           {:.1} s", r.wall_secs);
 }
 

@@ -53,7 +53,7 @@ pub fn logloss_from_logits(logits: &[f32], labels: &[f32]) -> f64 {
 }
 
 /// The four overheads of paper §2.2, in emulated hours.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct OverheadLedger {
     pub save_h: f64,
     pub load_h: f64,
@@ -62,6 +62,10 @@ pub struct OverheadLedger {
     /// count of checkpoint saves / failures, for reporting
     pub n_saves: u64,
     pub n_failures: u64,
+    /// online interval re-plans by the adaptive save policy
+    /// (`policy::AdaptiveInterval`): `(emulated hour, new T_save)` per
+    /// accepted re-plan. Empty for every static-interval policy.
+    pub replans: Vec<(f64, f64)>,
 }
 
 impl OverheadLedger {
@@ -89,6 +93,7 @@ impl OverheadLedger {
         self.reschedule_h += other.reschedule_h;
         self.n_saves += other.n_saves;
         self.n_failures += other.n_failures;
+        self.replans.extend_from_slice(&other.replans);
     }
 }
 

@@ -90,6 +90,24 @@ pub fn t_save_for_target_pls_with_trainers(
     2.0 * target_pls * (n_emb + n_trainers) as f64 * t_fail_h
 }
 
+/// Online MTBF re-estimate from the failures observed so far
+/// (Chameleon-style adaptivity; used by `policy::AdaptiveInterval`). The
+/// configured `prior_t_fail_h` acts as one pseudo-failure spread over its
+/// own duration, so at `elapsed_h = 0` the estimate IS the prior, and as
+/// events accrue it converges to the empirical rate
+/// `elapsed_h / failures`. A degenerate (non-finite or non-positive)
+/// prior falls straight back to the empirical rate.
+pub fn estimate_mtbf(prior_t_fail_h: f64, elapsed_h: f64, failures: u64) -> f64 {
+    if !(prior_t_fail_h.is_finite() && prior_t_fail_h > 0.0) {
+        return if failures == 0 {
+            f64::INFINITY
+        } else {
+            elapsed_h / failures as f64
+        };
+    }
+    (prior_t_fail_h + elapsed_h) / (failures as f64 + 1.0)
+}
+
 /// `events per job` = T_total / T_fail, with the zero-failure-rate edge
 /// handled explicitly (an infinite MTBF means no failure terms, not NaN).
 fn failure_rate(c: &ClusterConfig) -> f64 {
@@ -374,6 +392,39 @@ mod tests {
         assert!((p1.expected_pls - target).abs() < 1e-12);
         // and the cheaper save cadence shows up as lower overhead
         assert!(p1.est_overhead_h <= p0.est_overhead_h + 1e-12);
+    }
+
+    #[test]
+    fn mtbf_estimate_starts_at_prior_and_converges_to_empirical() {
+        // no time, no failures: the prior
+        assert_eq!(estimate_mtbf(28.0, 0.0, 0), 28.0);
+        // empirical rate exactly matching the prior reproduces it
+        assert!((estimate_mtbf(28.0, 2800.0, 100) - 28.0).abs() < 1e-12);
+        // heavy evidence dominates: 100 failures in 100 h → ≈ 1.27 h
+        let est = estimate_mtbf(28.0, 100.0, 100);
+        assert!(est < 2.0 && est > 1.0, "est {est}");
+        // degenerate priors fall back to the empirical rate
+        assert_eq!(estimate_mtbf(f64::INFINITY, 10.0, 0), f64::INFINITY);
+        assert_eq!(estimate_mtbf(f64::INFINITY, 10.0, 5), 2.0);
+        assert_eq!(estimate_mtbf(0.0, 12.0, 4), 3.0);
+    }
+
+    #[test]
+    fn mtbf_estimate_monotone_in_failures_and_elapsed() {
+        forall(13, 200, |rng| {
+            let prior = gen::f64_in(rng, 1.0, 100.0);
+            let elapsed = gen::f64_in(rng, 0.0, 200.0);
+            let k = rng.below(50);
+            // one more observed failure can only lower the estimate
+            prop_assert!(estimate_mtbf(prior, elapsed, k + 1)
+                             <= estimate_mtbf(prior, elapsed, k),
+                         "more failures must not raise the MTBF estimate");
+            // more failure-free time can only raise it
+            prop_assert!(estimate_mtbf(prior, elapsed + 1.0, k)
+                             >= estimate_mtbf(prior, elapsed, k),
+                         "more elapsed time must not lower the MTBF estimate");
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! [`AdaptiveInterval`] — the save policy only expressible in the policy
+//! engine: Chameleon-style online re-planning of the checkpoint interval.
+//!
+//! The static CPR controller picks one interval up front from the
+//! *configured* MTBF. Real clusters drift (off-peak windows, bad
+//! hardware batches), so this policy re-estimates the MTBF from the
+//! failures actually observed (`pls::estimate_mtbf`: the configured MTBF
+//! acts as a one-pseudo-failure prior, converging to the empirical rate
+//! as events accrue) and re-runs the PLS planner at every major save —
+//! widening the interval when the job fails less than expected, and
+//! narrowing it when failures come fast, while holding the same target
+//! PLS. Every accepted re-plan is recorded in
+//! `metrics::OverheadLedger::replans`, so the `TrainReport` ledger shows
+//! the interval trajectory.
+
+use super::save::full_content_capture;
+use super::{PsView, SaveCtx, SaveMarker, SavePolicy};
+use crate::checkpoint::async_pipeline::CheckpointPipeline;
+use crate::config::ClusterConfig;
+use crate::metrics::OverheadLedger;
+use crate::pls;
+
+/// Online-replanned CPR (full-content saves, PLS-planned cadence that
+/// tracks the observed failure rate). `Strategy::CprAdaptive`.
+pub struct AdaptiveInterval {
+    cluster: ClusterConfig,
+    target_pls: f64,
+    /// false when a `t_save_override_h` sweep pinned the interval (or the
+    /// caller wants static-plan behaviour): capture still saves, but the
+    /// interval never moves
+    replan: bool,
+    interval_h: f64,
+    next_save_h: f64,
+    failures_seen: u64,
+}
+
+impl AdaptiveInterval {
+    /// Start from `interval_h` (the static plan's choice) and re-plan at
+    /// every major when `replan` is set.
+    pub fn new(cluster: &ClusterConfig, target_pls: f64, interval_h: f64, replan: bool) -> Self {
+        Self {
+            cluster: cluster.clone(),
+            target_pls,
+            replan,
+            interval_h,
+            next_save_h: interval_h,
+            failures_seen: 0,
+        }
+    }
+
+    /// The current (possibly re-planned) save interval, hours.
+    pub fn interval_h(&self) -> f64 {
+        self.interval_h
+    }
+
+    /// Failure events observed so far.
+    pub fn failures_seen(&self) -> u64 {
+        self.failures_seen
+    }
+}
+
+impl SavePolicy for AdaptiveInterval {
+    fn name(&self) -> &'static str {
+        "adaptive-interval"
+    }
+
+    fn next_save_h(&self) -> f64 {
+        self.next_save_h
+    }
+
+    fn observe_failure(&mut self, _clock_h: f64) {
+        self.failures_seen += 1;
+    }
+
+    fn capture(
+        &mut self,
+        ps: PsView<'_>,
+        pipeline: &CheckpointPipeline,
+        ledger: &mut OverheadLedger,
+        ctx: &SaveCtx<'_>,
+    ) -> Option<SaveMarker> {
+        let marker =
+            full_content_capture(self.cluster.o_save_h, ps, pipeline, ledger, ctx);
+        if self.replan {
+            let mut c = self.cluster.clone();
+            c.t_fail_h =
+                pls::estimate_mtbf(self.cluster.t_fail_h, ctx.clock_h, self.failures_seen);
+            let p = pls::plan(&c, self.target_pls);
+            // only move while partial recovery stays beneficial under the
+            // re-estimated rate; the recovery mode itself is fixed at job
+            // start, so a mid-job "would fall back" just freezes the
+            // interval instead of switching semantics
+            if p.use_partial && (p.t_save_h - self.interval_h).abs() > 1e-9 {
+                ledger.replans.push((ctx.clock_h, p.t_save_h));
+                self.interval_h = p.t_save_h;
+            }
+        }
+        self.next_save_h += self.interval_h;
+        Some(marker)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::CheckpointStore;
+    use crate::config::preset;
+    use crate::embedding::{PsCluster, TableInfo};
+
+    fn cluster() -> PsCluster {
+        PsCluster::new(vec![TableInfo { rows: 16, dim: 4 }], 2, 5)
+    }
+
+    fn pipeline(c: &PsCluster) -> CheckpointPipeline {
+        CheckpointPipeline::new(
+            CheckpointStore::initial(c, vec![]),
+            None,
+            2,
+            std::time::Duration::ZERO,
+        )
+        .unwrap()
+    }
+
+    fn capture_at(
+        policy: &mut AdaptiveInterval,
+        c: &PsCluster,
+        p: &CheckpointPipeline,
+        ledger: &mut OverheadLedger,
+        clock_h: f64,
+    ) {
+        let ctx = SaveCtx { step: 1, samples: 128, clock_h, host_params: &[] };
+        policy.capture(PsView::new(c), p, ledger, &ctx).expect("majors mark");
+    }
+
+    #[test]
+    fn widens_when_failures_stay_absent() {
+        let cl = preset("mini").unwrap().cluster; // T_fail = 28 h
+        let p0 = pls::plan(&cl, 0.02);
+        assert!(p0.use_partial);
+        let c = cluster();
+        let pipe = pipeline(&c);
+        let mut policy = AdaptiveInterval::new(&cl, 0.02, p0.t_save_h, true);
+        let mut ledger = OverheadLedger::default();
+        let t1 = policy.next_save_h();
+        capture_at(&mut policy, &c, &pipe, &mut ledger, t1);
+        assert!(policy.interval_h() > p0.t_save_h,
+                "no observed failures must stretch the interval");
+        assert_eq!(ledger.replans.len(), 1);
+        assert!((ledger.replans[0].0 - t1).abs() < 1e-12);
+        assert!((ledger.replans[0].1 - policy.interval_h()).abs() < 1e-12);
+        pipe.flush().unwrap();
+    }
+
+    #[test]
+    fn narrows_when_failures_come_faster_than_planned() {
+        let cl = preset("mini").unwrap().cluster;
+        let p0 = pls::plan(&cl, 0.02);
+        let c = cluster();
+        let pipe = pipeline(&c);
+        let mut policy = AdaptiveInterval::new(&cl, 0.02, p0.t_save_h, true);
+        let mut ledger = OverheadLedger::default();
+        // 6 failures before the first major — far above the 28-h MTBF
+        for i in 0..6 {
+            policy.observe_failure(i as f64);
+        }
+        let t1 = policy.next_save_h();
+        capture_at(&mut policy, &c, &pipe, &mut ledger, t1);
+        assert!(policy.interval_h() < p0.t_save_h,
+                "frequent failures must shrink the interval: {} !< {}",
+                policy.interval_h(), p0.t_save_h);
+        assert_eq!(ledger.replans.len(), 1);
+        pipe.flush().unwrap();
+    }
+
+    #[test]
+    fn frozen_interval_never_replans() {
+        let cl = preset("mini").unwrap().cluster;
+        let c = cluster();
+        let pipe = pipeline(&c);
+        let mut policy = AdaptiveInterval::new(&cl, 0.02, 5.0, false);
+        let mut ledger = OverheadLedger::default();
+        policy.observe_failure(1.0);
+        capture_at(&mut policy, &c, &pipe, &mut ledger, 5.0);
+        assert_eq!(policy.interval_h(), 5.0);
+        assert!(ledger.replans.is_empty());
+        assert_eq!(policy.next_save_h(), 10.0);
+        pipe.flush().unwrap();
+    }
+}

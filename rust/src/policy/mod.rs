@@ -1,0 +1,193 @@
+//! The pluggable checkpoint-policy engine.
+//!
+//! The paper's contribution is really three *policies* — estimating the
+//! benefit of partial recovery, selecting a save interval, and
+//! prioritizing hot rows — and this module turns each into a first-class
+//! trait so the coordinator's step loop stays a thin, strategy-free
+//! driver (Chameleon argues fault-tolerance policy selection deserves a
+//! runtime API; Check-N-Run shows checkpoint content policy composes
+//! orthogonally with tracking):
+//!
+//! * [`PriorityTracker`] (in [`tracker`]) — the object-safe unification
+//!   of the SCAR/MFU/SSU row trackers: `record_batch` / `select` /
+//!   `on_saved` / `memory_bytes`. The SCAR cluster-read dependency is
+//!   injected as a `&dyn PsDataPlane` argument, so `select` needs no
+//!   live backend generic at the call site.
+//! * [`SavePolicy`] — owns the interval math (from `pls::plan`), the
+//!   minor/major save cadence, the per-save row selection, and the save
+//!   side of the overhead ledger. Implementations: [`save::FullSave`],
+//!   [`save::CprVanilla`], [`save::Prioritized`], and
+//!   [`adaptive::AdaptiveInterval`] (the policy only expressible in this
+//!   API: it re-runs the PLS planner online from the observed failure
+//!   rate and widens/narrows the interval between majors).
+//! * [`RecoveryPolicy`] — absorbs the PLS accounting and the
+//!   kill/respawn/restore sequence behind `on_failure -> RecoveryAction`.
+//!   Implementations: [`recovery::FullRewind`] and
+//!   [`recovery::PartialRestore`].
+//!
+//! [`registry`] maps `config::Strategy` (plus string keys, for CLI-side
+//! construction) to a boxed [`registry::JobPolicies`] bundle; the
+//! coordinator builds the bundle up front and the step loop never
+//! branches on the strategy again.
+//!
+//! ## Backend access: [`PsView`]
+//!
+//! Policies run behind the driver's exclusive quiesce token
+//! (`ShardedPs::quiesce`), but the trait methods must stay object-safe,
+//! so they cannot take the token's `PsQuiesce<'_, B>` generic directly.
+//! Instead the driver derefs the token and hands out a [`PsView`] — one
+//! `&dyn` reference per cluster plane, both pointing at the same
+//! quiesced backend. (Two references because Rust before 1.86 cannot
+//! upcast `&dyn PsBackend` to its supertrait objects, and this crate's
+//! MSRV is 1.74.)
+
+pub mod adaptive;
+pub mod recovery;
+pub mod registry;
+pub mod save;
+pub mod tracker;
+
+pub use adaptive::AdaptiveInterval;
+pub use recovery::{FullRewind, PartialRestore};
+pub use registry::{build_policies, JobPolicies, PolicySpec};
+pub use save::{CprVanilla, FullSave, Prioritized};
+pub use tracker::PriorityTracker;
+
+use crate::checkpoint::async_pipeline::CheckpointPipeline;
+use crate::cluster::{PsBackend, PsControlPlane, PsDataPlane};
+use crate::failure::FailureEvent;
+use crate::metrics::OverheadLedger;
+
+/// The backend surface a policy may touch, split per cluster plane. Both
+/// references point at the SAME backend, which the driver has quiesced
+/// (no data-plane call in flight) before handing the view out — see the
+/// module docs for why this is not a single `&dyn PsBackend`.
+#[derive(Clone, Copy)]
+pub struct PsView<'a> {
+    /// gathers / batched row reads (priority-save capture, SCAR scans)
+    pub data: &'a dyn PsDataPlane,
+    /// snapshot / load / kill / respawn (capture + failure injection)
+    pub ctl: &'a dyn PsControlPlane,
+}
+
+impl<'a> PsView<'a> {
+    /// Both planes of one concrete backend (typically `&*quiesce_token`).
+    pub fn new<B: PsBackend>(backend: &'a B) -> Self {
+        Self { data: backend, ctl: backend }
+    }
+}
+
+/// What the driver knows at a save point.
+pub struct SaveCtx<'a> {
+    /// global step the save is taken at
+    pub step: u64,
+    /// samples consumed so far (`step × batch × n_trainers`)
+    pub samples: u64,
+    /// emulated clock, hours
+    pub clock_h: f64,
+    /// the post-allreduce dense parameters (host layout)
+    pub host_params: &'a [Vec<f32>],
+}
+
+/// What the driver knows when a failure event fires.
+pub struct FailureCtx {
+    /// emulated clock at the event, hours
+    pub clock_h: f64,
+    /// emulated hours per global step (for lost-computation accounting)
+    pub dt_h: f64,
+    /// samples consumed so far
+    pub samples: u64,
+    /// step of the last position-marking save
+    pub marked_step: u64,
+    /// samples at the last position-marking save
+    pub marked_samples: u64,
+}
+
+/// A position-marking save happened: the PLS marker advanced to here.
+/// The driver mirrors this into its local `marked_*` state, which feeds
+/// the next [`FailureCtx`].
+pub struct SaveMarker {
+    /// step the marker now points at
+    pub step: u64,
+    /// samples the marker now points at
+    pub samples: u64,
+}
+
+/// What the driver must do after a recovery policy handled a failure.
+/// Everything the policy can reach through [`PsView`] + the pipeline is
+/// already done (PS kills, respawns, restores, ledger charges); the
+/// action carries only the driver-owned effects (dense params, step
+/// counter — trainer kill/respawn is policy-independent and stays in the
+/// driver).
+pub enum RecoveryAction {
+    /// Partial recovery: keep going from the current position. When
+    /// `reload_dense_from_marker` is set (a trainer loss with no
+    /// surviving replica), the driver reloads the dense params (stale)
+    /// from the pipeline's position marker while the Emb PS keeps its
+    /// progress.
+    Continue {
+        /// reload dense params from the last checkpoint marker
+        reload_dense_from_marker: bool,
+    },
+    /// Full recovery: everyone reloads and training rewinds.
+    Rewind {
+        /// dense params from the checkpoint (host layout)
+        mlp: Vec<Vec<f32>>,
+        /// global step to rewind to
+        step: u64,
+    },
+}
+
+/// Decides *when* to checkpoint and *what* to capture, and owns the save
+/// side of the overhead ledger. Object-safe: the registry hands the
+/// driver a `Box<dyn SavePolicy>`.
+pub trait SavePolicy {
+    /// Short identifier for reports/diagnostics.
+    fn name(&self) -> &'static str;
+
+    /// Emulated hour of the next save. The driver captures whenever the
+    /// clock reaches this (and it is still within the job).
+    fn next_save_h(&self) -> f64;
+
+    /// Observe one trainer batch's embedding access stream
+    /// (`[B, num_tables, hotness]` row-major). The driver feeds every
+    /// trainer's stream in rank order; tracker-less policies ignore it.
+    fn on_step(&mut self, _indices: &[u32], _num_tables: usize, _hotness: usize) {}
+
+    /// Observe a failure event (any kind) at `clock_h`. Adaptive policies
+    /// re-estimate the failure rate from these; everyone else ignores it.
+    fn observe_failure(&mut self, _clock_h: f64) {}
+
+    /// Capture one save at the driver's quiesce point: charge the ledger,
+    /// select + hand content to the pipeline, advance `next_save_h`.
+    /// Returns the new position marker when this save advanced it (a
+    /// major), `None` for minor (content-only) saves.
+    fn capture(
+        &mut self,
+        ps: PsView<'_>,
+        pipeline: &CheckpointPipeline,
+        ledger: &mut OverheadLedger,
+        ctx: &SaveCtx<'_>,
+    ) -> Option<SaveMarker>;
+}
+
+/// Decides what happens when a failure event fires: charges the ledger,
+/// runs the PS-side recovery protocol through the quiesced backend, and
+/// tells the driver what to do with its own state. Object-safe.
+pub trait RecoveryPolicy {
+    /// Short identifier for reports/diagnostics.
+    fn name(&self) -> &'static str;
+
+    /// Handle one failure event at the driver's quiesce point.
+    fn on_failure(
+        &mut self,
+        ev: &FailureEvent,
+        ps: PsView<'_>,
+        pipeline: &CheckpointPipeline,
+        ledger: &mut OverheadLedger,
+        ctx: &FailureCtx,
+    ) -> RecoveryAction;
+
+    /// Accumulated PLS (Eq. 3) so far; 0 under full recovery.
+    fn pls(&self) -> f64;
+}

@@ -1,0 +1,258 @@
+//! [`RecoveryPolicy`] implementations: what happens when a failure event
+//! fires.
+//!
+//! Both absorb what the coordinator's old `if use_partial { … } else
+//! { … }` block did, op for op (golden-equivalence suite):
+//!
+//! * [`PartialRestore`] — CPR's partial recovery: accrue PLS for the
+//!   lost Emb PS slices (Eq. 3), kill/respawn each victim behind the
+//!   quiesce token and repopulate it from the checkpoint mirror while
+//!   survivors keep their progress; no rewind. A trainer loss with no
+//!   surviving replica (N = 1) asks the driver to reload the dense
+//!   params (stale) from the position marker.
+//! * [`FullRewind`] — classic full recovery: charge the lost
+//!   computation, restore every node from the mirror, and rewind the
+//!   driver to the checkpointed step.
+
+use super::{FailureCtx, PsView, RecoveryAction, RecoveryPolicy};
+use crate::checkpoint::async_pipeline::CheckpointPipeline;
+use crate::cluster::PsControlPlane;
+use crate::config::ClusterConfig;
+use crate::failure::FailureEvent;
+use crate::metrics::OverheadLedger;
+use crate::pls::PlsAccumulator;
+
+/// Partial recovery: victims restore from the mirror, survivors keep
+/// serving, PLS accrues (paper §2.3 / §4.1).
+pub struct PartialRestore {
+    o_load_h: f64,
+    o_res_h: f64,
+    n_emb: usize,
+    n_trainers: usize,
+    total_samples: u64,
+    pls: PlsAccumulator,
+}
+
+impl PartialRestore {
+    /// `total_samples` is the job's planned sample count (the PLS
+    /// denominator).
+    pub fn new(cluster: &ClusterConfig, total_samples: u64) -> Self {
+        Self {
+            o_load_h: cluster.o_load_h,
+            o_res_h: cluster.o_res_h,
+            n_emb: cluster.n_emb_ps,
+            n_trainers: cluster.n_trainers.max(1),
+            total_samples,
+            pls: PlsAccumulator::new(),
+        }
+    }
+}
+
+impl RecoveryPolicy for PartialRestore {
+    fn name(&self) -> &'static str {
+        "partial-restore"
+    }
+
+    fn on_failure(
+        &mut self,
+        ev: &FailureEvent,
+        ps: PsView<'_>,
+        pipeline: &CheckpointPipeline,
+        ledger: &mut OverheadLedger,
+        ctx: &FailureCtx,
+    ) -> RecoveryAction {
+        ledger.n_failures += 1;
+        ledger.load_h += self.o_load_h;
+        ledger.reschedule_h += self.o_res_h;
+        if !ev.victims.is_empty() {
+            self.pls.on_failure(
+                ctx.samples,
+                ctx.marked_samples,
+                self.total_samples,
+                self.n_emb,
+                ev.victims.len(),
+            );
+            // live partial recovery: the victim dies (on the threaded
+            // backend its worker is joined), a blank node respawns, and
+            // the checkpoint mirror repopulates it — survivors keep their
+            // progress and keep serving. All behind the driver's quiesce
+            // token, so no gather can observe a half-restored node.
+            for &v in &ev.victims {
+                ps.ctl.kill_node(v);
+                ps.ctl.respawn_node(v);
+                pipeline.restore_node(ps.ctl, v);
+            }
+        }
+        // trainer loss: dense params are replicated, so with survivors the
+        // respawned trainer re-joins from the replica at the next barrier;
+        // with a single trainer the driver must reload (stale) dense
+        // params from the marker while the Emb PS keeps its progress.
+        RecoveryAction::Continue {
+            reload_dense_from_marker: !ev.trainer_victims.is_empty()
+                && self.n_trainers == 1,
+        }
+    }
+
+    fn pls(&self) -> f64 {
+        self.pls.value()
+    }
+}
+
+/// Full recovery: everyone reloads from the checkpoint and training
+/// rewinds; the computation since the marker is charged as lost.
+pub struct FullRewind {
+    o_load_h: f64,
+    o_res_h: f64,
+}
+
+impl FullRewind {
+    /// Reads the load/reschedule overhead constants from the cluster.
+    pub fn new(cluster: &ClusterConfig) -> Self {
+        Self { o_load_h: cluster.o_load_h, o_res_h: cluster.o_res_h }
+    }
+}
+
+impl RecoveryPolicy for FullRewind {
+    fn name(&self) -> &'static str {
+        "full-rewind"
+    }
+
+    fn on_failure(
+        &mut self,
+        _ev: &FailureEvent,
+        ps: PsView<'_>,
+        pipeline: &CheckpointPipeline,
+        ledger: &mut OverheadLedger,
+        ctx: &FailureCtx,
+    ) -> RecoveryAction {
+        ledger.n_failures += 1;
+        ledger.load_h += self.o_load_h;
+        ledger.reschedule_h += self.o_res_h;
+        let t_last = ctx.marked_step as f64 * ctx.dt_h;
+        ledger.lost_h += (ctx.clock_h - t_last).max(0.0);
+        let (mlp, ckpt_step, _samples) = pipeline.restore_all(ps.ctl);
+        RecoveryAction::Rewind { mlp, step: ckpt_step }
+    }
+
+    fn pls(&self) -> f64 {
+        0.0 // full recovery loses no updates
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::CheckpointStore;
+    use crate::cluster::PsControlPlane;
+    use crate::config::preset;
+    use crate::embedding::{PsCluster, TableInfo};
+
+    fn cluster() -> PsCluster {
+        PsCluster::new(vec![TableInfo { rows: 24, dim: 4 }], 3, 11)
+    }
+
+    fn pipeline(c: &PsCluster, mlp: Vec<Vec<f32>>) -> CheckpointPipeline {
+        CheckpointPipeline::new(
+            CheckpointStore::initial(c, mlp),
+            None,
+            2,
+            std::time::Duration::ZERO,
+        )
+        .unwrap()
+    }
+
+    fn event(victims: Vec<usize>, trainer_victims: Vec<usize>) -> FailureEvent {
+        FailureEvent { time_h: 10.0, victims, trainer_victims }
+    }
+
+    #[test]
+    fn partial_restores_victim_and_accrues_pls() {
+        let c = cluster();
+        let p = pipeline(&c, vec![]);
+        let golden = c.snapshot_node(1);
+        // train past the checkpoint, then lose node 1
+        c.sgd_update(&[1, 4, 7], &[0.5f32; 12], 1.0);
+        let mut cfg = preset("mini").unwrap().cluster;
+        cfg.n_emb_ps = 3;
+        let mut policy = PartialRestore::new(&cfg, 10_000);
+        let mut ledger = OverheadLedger::default();
+        let ctx = FailureCtx {
+            clock_h: 10.0,
+            dt_h: 0.1,
+            samples: 5_000,
+            marked_step: 0,
+            marked_samples: 4_000,
+        };
+        let action = policy.on_failure(&event(vec![1], vec![]), PsView::new(&c),
+                                       &p, &mut ledger, &ctx);
+        assert!(matches!(
+            action,
+            RecoveryAction::Continue { reload_dense_from_marker: false }
+        ));
+        // victim back at the checkpointed (initial) state
+        assert_eq!(c.snapshot_node(1).shards, golden.shards);
+        // Eq. 3: 1 victim, 1000 lost samples, 3 nodes
+        assert!((policy.pls() - 1_000.0 / (10_000.0 * 3.0)).abs() < 1e-15);
+        assert_eq!(ledger.n_failures, 1);
+        assert_eq!(ledger.lost_h, 0.0, "partial recovery loses no time");
+        p.flush().unwrap();
+    }
+
+    #[test]
+    fn partial_single_trainer_loss_asks_for_dense_reload() {
+        let c = cluster();
+        let p = pipeline(&c, vec![]);
+        let mut cfg = preset("mini").unwrap().cluster;
+        cfg.n_trainers = 1;
+        let mut policy = PartialRestore::new(&cfg, 10_000);
+        let mut ledger = OverheadLedger::default();
+        let ctx = FailureCtx {
+            clock_h: 1.0,
+            dt_h: 0.1,
+            samples: 100,
+            marked_step: 0,
+            marked_samples: 0,
+        };
+        let action = policy.on_failure(&event(vec![], vec![0]), PsView::new(&c),
+                                       &p, &mut ledger, &ctx);
+        assert!(matches!(
+            action,
+            RecoveryAction::Continue { reload_dense_from_marker: true }
+        ));
+        assert_eq!(policy.pls(), 0.0, "trainer loss accrues no embedding PLS");
+        p.flush().unwrap();
+    }
+
+    #[test]
+    fn full_rewind_restores_everything_and_charges_lost_time() {
+        let c = cluster();
+        let p = pipeline(&c, vec![vec![1.0, 2.0]]);
+        let golden: Vec<_> = (0..3).map(|n| c.snapshot_node(n)).collect();
+        c.sgd_update(&[1, 4, 7], &[0.5f32; 12], 1.0);
+        let cfg = preset("mini").unwrap().cluster;
+        let mut policy = FullRewind::new(&cfg);
+        let mut ledger = OverheadLedger::default();
+        let ctx = FailureCtx {
+            clock_h: 10.0,
+            dt_h: 0.5,
+            samples: 2_560,
+            marked_step: 12, // marker at 6.0 h
+            marked_samples: 1_536,
+        };
+        let action = policy.on_failure(&event(vec![0], vec![]), PsView::new(&c),
+                                       &p, &mut ledger, &ctx);
+        match action {
+            RecoveryAction::Rewind { mlp, step } => {
+                assert_eq!(mlp, vec![vec![1.0, 2.0]]);
+                assert_eq!(step, 0, "initial store marks step 0");
+            }
+            _ => panic!("full recovery must rewind"),
+        }
+        for (n, g) in golden.iter().enumerate() {
+            assert_eq!(c.snapshot_node(n).shards, g.shards, "node {n}");
+        }
+        assert!((ledger.lost_h - 4.0).abs() < 1e-12, "10 h - 12·0.5 h lost");
+        assert_eq!(policy.pls(), 0.0);
+        p.flush().unwrap();
+    }
+}

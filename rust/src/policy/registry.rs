@@ -1,0 +1,337 @@
+//! The policy registry: maps `config::Strategy` (and its string names —
+//! the CLI/TOML keys) to a boxed [`JobPolicies`] bundle.
+//!
+//! This is the ONE place the strategy → policy wiring lives. It
+//! reproduces exactly what the coordinator's retired inline `match` did:
+//! run the CPR controller (`pls::plan`) for CPR strategies, apply the
+//! `t_save_override_h` sweep override, decide fallback, and construct
+//! the save/recovery pair (plus the tracker for priority strategies —
+//! SCAR's initial mirror is read from the quiesced backend handed in as
+//! a [`PsView`]). New policies plug in here: add a `Strategy` variant
+//! (or reuse an existing one), register a [`PolicySpec`] row, and wire
+//! the constructor — the driver never changes.
+
+use anyhow::Result;
+
+use super::adaptive::AdaptiveInterval;
+use super::recovery::{FullRewind, PartialRestore};
+use super::save::{CprVanilla, FullSave, Prioritized};
+use super::{PsView, RecoveryPolicy, SavePolicy};
+use crate::checkpoint::tracker::{priority_mask, MfuTracker, ScarTracker, SsuTracker};
+use crate::config::{JobConfig, Strategy};
+use crate::pls::{self, CprPlan};
+
+/// The full policy bundle one training job runs under. Built up front
+/// (by `config`/CLI through this registry); the coordinator's step loop
+/// drives the two boxed objects and never branches on the strategy.
+pub struct JobPolicies {
+    /// when to checkpoint + what to capture
+    pub save: Box<dyn SavePolicy>,
+    /// what happens on a failure event
+    pub recovery: Box<dyn RecoveryPolicy>,
+    /// the CPR controller's decision (None for full / partial-naive)
+    pub plan: Option<CprPlan>,
+    /// true when a CPR strategy fell back to full recovery
+    pub fell_back: bool,
+}
+
+/// Static description of one registered strategy: which policy objects
+/// its name resolves to (nominal wiring — a fell-back CPR strategy
+/// degrades to full-content saves + full rewind at run time).
+#[derive(Clone, Debug)]
+pub struct PolicySpec {
+    /// the registry key (== `Strategy::name()`)
+    pub name: &'static str,
+    /// the parsed strategy this key maps to
+    pub strategy: Strategy,
+    /// nominal [`SavePolicy`] implementation name
+    pub save: &'static str,
+    /// nominal [`RecoveryPolicy`] implementation name
+    pub recovery: &'static str,
+    /// priority tracker, for the prioritized strategies
+    pub tracker: Option<&'static str>,
+    /// one-line summary for CLI/example listings
+    pub summary: &'static str,
+}
+
+/// Every registered strategy, in presentation order.
+pub fn specs() -> Vec<PolicySpec> {
+    vec![
+        PolicySpec {
+            name: "full",
+            strategy: Strategy::Full,
+            save: "full-save",
+            recovery: "full-rewind",
+            tracker: None,
+            summary: "full recovery at the √(2·O_save·T_fail) optimum",
+        },
+        PolicySpec {
+            name: "partial",
+            strategy: Strategy::PartialNaive,
+            save: "full-save",
+            recovery: "partial-restore",
+            tracker: None,
+            summary: "partial recovery naively reusing the full-recovery interval",
+        },
+        PolicySpec {
+            name: "cpr-vanilla",
+            strategy: Strategy::CprVanilla,
+            save: "cpr-vanilla",
+            recovery: "partial-restore",
+            tracker: None,
+            summary: "CPR with the PLS-planned interval, no priority saving",
+        },
+        PolicySpec {
+            name: "cpr-scar",
+            strategy: Strategy::CprScar,
+            save: "prioritized",
+            recovery: "partial-restore",
+            tracker: Some("scar"),
+            summary: "CPR + SCAR update-magnitude priority (100% memory)",
+        },
+        PolicySpec {
+            name: "cpr-mfu",
+            strategy: Strategy::CprMfu,
+            save: "prioritized",
+            recovery: "partial-restore",
+            tracker: Some("mfu"),
+            summary: "CPR + most-frequently-used counters",
+        },
+        PolicySpec {
+            name: "cpr-ssu",
+            strategy: Strategy::CprSsu,
+            save: "prioritized",
+            recovery: "partial-restore",
+            tracker: Some("ssu"),
+            summary: "CPR + sub-sampled-used candidate list",
+        },
+        PolicySpec {
+            name: "cpr-adaptive",
+            strategy: Strategy::CprAdaptive,
+            save: "adaptive-interval",
+            recovery: "partial-restore",
+            tracker: None,
+            summary: "CPR re-planning its interval online from the observed MTBF",
+        },
+    ]
+}
+
+/// The registry keys (canonical strategy names).
+pub fn names() -> Vec<&'static str> {
+    specs().into_iter().map(|s| s.name).collect()
+}
+
+/// The spec a strategy resolves to.
+pub fn spec(strategy: &Strategy) -> PolicySpec {
+    specs()
+        .into_iter()
+        .find(|s| &s.strategy == strategy)
+        .expect("every Strategy variant is registered")
+}
+
+/// Build the policy bundle for `cfg.checkpoint.strategy`. `ps` is the
+/// quiesced backend (SCAR reads its initial mirror from it). This is the
+/// exact decision procedure the coordinator used to inline: plan →
+/// override → fallback → cadence/tracker construction.
+pub fn build_policies(cfg: &JobConfig, ps: PsView<'_>) -> JobPolicies {
+    let strategy = &cfg.checkpoint.strategy;
+
+    // --- the CPR controller decides the plan -------------------------------
+    let (plan, use_partial, mut t_save_h) = match strategy {
+        Strategy::Full => (None, false, cfg.cluster.t_save_full_h()),
+        Strategy::PartialNaive => (None, true, cfg.cluster.t_save_full_h()),
+        _ => {
+            let p = pls::plan(&cfg.cluster, cfg.checkpoint.target_pls);
+            (Some(p), p.use_partial, p.t_save_h)
+        }
+    };
+    let forced = cfg.checkpoint.t_save_override_h;
+    if let Some(t) = forced {
+        t_save_h = t; // Fig. 11/12 sweeps force the interval directly
+    }
+    let fell_back = strategy.is_cpr() && !use_partial;
+    let priority = strategy.priority() && use_partial;
+    let r = cfg.checkpoint.r;
+    let o_save_h = cfg.cluster.o_save_h;
+
+    // --- save policy (+ tracker for the priority schemes) ------------------
+    let save: Box<dyn SavePolicy> = if priority {
+        let mask = priority_mask(&cfg.data.table_rows, cfg.checkpoint.priority_tables);
+        match strategy {
+            Strategy::CprMfu => Box::new(Prioritized::new(
+                MfuTracker::new(&cfg.data.table_rows, &mask),
+                mask,
+                r,
+                o_save_h,
+                t_save_h,
+            )),
+            Strategy::CprSsu => {
+                let caps: Vec<usize> = cfg
+                    .data
+                    .table_rows
+                    .iter()
+                    .map(|&n| ((n as f64 * r).ceil() as usize).max(1))
+                    .collect();
+                Box::new(Prioritized::new(
+                    SsuTracker::new(&caps, &mask, cfg.checkpoint.ssu_period,
+                                    cfg.data.seed ^ 0x55),
+                    mask,
+                    r,
+                    o_save_h,
+                    t_save_h,
+                ))
+            }
+            Strategy::CprScar => Box::new(Prioritized::new(
+                ScarTracker::new(ps.data, &mask),
+                mask,
+                r,
+                o_save_h,
+                t_save_h,
+            )),
+            _ => unreachable!("priority() holds only for SCAR/MFU/SSU"),
+        }
+    } else if matches!(strategy, Strategy::CprAdaptive) && use_partial {
+        // re-plan only when the interval is not pinned by a sweep override
+        Box::new(AdaptiveInterval::new(&cfg.cluster, cfg.checkpoint.target_pls,
+                                       t_save_h, forced.is_none()))
+    } else {
+        match strategy {
+            Strategy::Full | Strategy::PartialNaive =>
+                Box::new(FullSave::new(o_save_h, t_save_h)),
+            // fell-back CPR strategies degrade to planned full-content saves
+            _ => Box::new(CprVanilla::new(o_save_h, t_save_h)),
+        }
+    };
+
+    // --- recovery policy ----------------------------------------------------
+    let recovery: Box<dyn RecoveryPolicy> = if use_partial {
+        Box::new(PartialRestore::new(&cfg.cluster, cfg.data.train_samples as u64))
+    } else {
+        Box::new(FullRewind::new(&cfg.cluster))
+    };
+
+    JobPolicies { save, recovery, plan, fell_back }
+}
+
+/// String-keyed entry point: resolve `name` through the registry and
+/// build the bundle for it (the rest of `cfg` is used as-is).
+pub fn build_by_name(name: &str, cfg: &JobConfig, ps: PsView<'_>) -> Result<JobPolicies> {
+    let strategy = Strategy::parse(name)?;
+    let mut cfg = cfg.clone();
+    cfg.checkpoint.strategy = strategy;
+    Ok(build_policies(&cfg, ps))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+    use crate::embedding::{PsCluster, TableInfo};
+    use crate::prop_assert;
+    use crate::testing::forall;
+
+    fn backend(cfg: &JobConfig) -> PsCluster {
+        let tables: Vec<TableInfo> = cfg
+            .data
+            .table_rows
+            .iter()
+            .map(|&rows| TableInfo { rows, dim: cfg.model.emb_dim })
+            .collect();
+        PsCluster::new(tables, cfg.cluster.n_emb_ps, cfg.data.seed ^ 0xEB)
+    }
+
+    #[test]
+    fn every_registered_name_round_trips_through_parse() {
+        for s in specs() {
+            let parsed = Strategy::parse(s.name).expect(s.name);
+            assert_eq!(parsed.name(), s.name, "parse↔name must round-trip");
+            assert_eq!(parsed, s.strategy);
+            assert_eq!(spec(&parsed).name, s.name);
+        }
+        // the shorthand alias resolves to vanilla's canonical name
+        assert_eq!(Strategy::parse("cpr").unwrap().name(), "cpr-vanilla");
+    }
+
+    #[test]
+    fn unknown_strategy_is_an_error_listing_every_valid_name() {
+        forall(0xE1, 50, |rng| {
+            // random lowercase gibberish (length 9 — never a valid key)
+            let s: String = (0..9)
+                .map(|_| (b'a' + rng.below(26) as u8) as char)
+                .collect();
+            if names().contains(&s.as_str()) {
+                return Ok(()); // astronomically unlikely; skip if hit
+            }
+            let err = match Strategy::parse(&s) {
+                Err(e) => format!("{e:#}"),
+                Ok(_) => return Err(format!("{s:?} parsed unexpectedly")),
+            };
+            for name in names() {
+                prop_assert!(err.contains(name),
+                             "error must list {name:?}, got: {err}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn builds_the_documented_bundle_for_every_strategy() {
+        let base = preset("mini").unwrap();
+        let c = backend(&base);
+        for s in specs() {
+            let mut cfg = base.clone();
+            cfg.checkpoint.strategy = s.strategy.clone();
+            let p = build_policies(&cfg, PsView::new(&c));
+            assert!(p.save.next_save_h() > 0.0, "{}", s.name);
+            assert!(!p.fell_back, "{} must not fall back on the paper cluster",
+                    s.name);
+            assert_eq!(p.recovery.name(), s.recovery, "{}", s.name);
+            assert_eq!(p.save.name(), s.save, "{}", s.name);
+            assert_eq!(p.plan.is_some(), s.strategy.is_cpr(), "{}", s.name);
+            assert_eq!(p.recovery.pls(), 0.0, "no failures seen yet");
+        }
+    }
+
+    #[test]
+    fn string_keyed_construction_matches_strategy_construction() {
+        let base = preset("mini").unwrap();
+        let c = backend(&base);
+        let by_name = build_by_name("cpr-ssu", &base, PsView::new(&c)).unwrap();
+        assert_eq!(by_name.save.name(), "prioritized");
+        assert_eq!(by_name.recovery.name(), "partial-restore");
+        assert!(build_by_name("bogus", &base, PsView::new(&c)).is_err());
+    }
+
+    #[test]
+    fn cpr_falls_back_to_full_policies_when_not_beneficial() {
+        let mut cfg = preset("mini").unwrap();
+        cfg.cluster.t_fail_h = 0.05; // absurd failure rate
+        cfg.checkpoint.target_pls = 0.01;
+        let c = backend(&cfg);
+        for strategy in [Strategy::CprVanilla, Strategy::CprScar,
+                         Strategy::CprMfu, Strategy::CprSsu,
+                         Strategy::CprAdaptive] {
+            cfg.checkpoint.strategy = strategy.clone();
+            let p = build_policies(&cfg, PsView::new(&c));
+            assert!(p.fell_back, "{strategy:?}");
+            assert_eq!(p.recovery.name(), "full-rewind", "{strategy:?}");
+            assert_eq!(p.save.name(), "cpr-vanilla",
+                       "fell-back CPR degrades to planned full-content saves");
+        }
+    }
+
+    #[test]
+    fn override_pins_the_interval_for_every_strategy() {
+        let base = preset("mini").unwrap();
+        let c = backend(&base);
+        for s in specs() {
+            let mut cfg = base.clone();
+            cfg.checkpoint.strategy = s.strategy.clone();
+            cfg.checkpoint.t_save_override_h = Some(4.0);
+            let p = build_policies(&cfg, PsView::new(&c));
+            // priority schemes save minors every r·T_save
+            let want = if s.tracker.is_some() { cfg.checkpoint.r * 4.0 } else { 4.0 };
+            assert!((p.save.next_save_h() - want).abs() < 1e-12, "{}", s.name);
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! [`SavePolicy`] implementations: when to checkpoint and what to
+//! capture.
+//!
+//! All three reproduce, op for op, what the coordinator's old inlined
+//! save block did — the golden-equivalence integration suite asserts a
+//! policy-driven run is bit-identical (AUC, logloss, PLS, loss curve,
+//! ledger) to the preserved pre-refactor loop:
+//!
+//! * [`FullSave`] — full-content saves at a caller-chosen interval (full
+//!   recovery's √(2·O_save·T_fail) optimum, or partial-naive's reuse of
+//!   it). Cost `O_save` per save, marker advances every save.
+//! * [`CprVanilla`] — the same capture shape at the PLS-planned interval
+//!   (`pls::plan`). Kept distinct so reports/registry name the policy the
+//!   paper names.
+//! * [`Prioritized<T>`] — CPR's priority checkpointing over any
+//!   [`PriorityTracker`]: saves `r·N` selected rows of each priority
+//!   table every `r·T_save` (cost `r·O_save` per minor), whole tiny
+//!   tables alongside, and advances the PLS marker once per full
+//!   `T_save` (every `1/r` minors).
+
+use super::tracker::PriorityTracker;
+use super::{PsView, SaveCtx, SaveMarker, SavePolicy};
+use crate::checkpoint::async_pipeline::CheckpointPipeline;
+use crate::cluster::PsDataPlane;
+use crate::metrics::OverheadLedger;
+
+/// Full-content checkpointing at a fixed interval (the non-priority,
+/// non-planned cadence: `Strategy::Full` and `Strategy::PartialNaive`).
+pub struct FullSave {
+    o_save_h: f64,
+    interval_h: f64,
+    next_save_h: f64,
+}
+
+impl FullSave {
+    /// Save everything every `interval_h`, charging `o_save_h` per save.
+    pub fn new(o_save_h: f64, interval_h: f64) -> Self {
+        Self { o_save_h, interval_h, next_save_h: interval_h }
+    }
+
+    /// The fixed save interval, hours.
+    pub fn interval_h(&self) -> f64 {
+        self.interval_h
+    }
+}
+
+/// One full-content capture: charge the ledger, snapshot every node +
+/// the dense params, advance the marker. Shared by the fixed-interval,
+/// planned, and adaptive policies.
+pub(super) fn full_content_capture(
+    o_save_h: f64,
+    ps: PsView<'_>,
+    pipeline: &CheckpointPipeline,
+    ledger: &mut OverheadLedger,
+    ctx: &SaveCtx<'_>,
+) -> SaveMarker {
+    ledger.save_h += o_save_h;
+    ledger.n_saves += 1;
+    pipeline.full_save(ps.ctl, ctx.host_params.to_vec(), ctx.step, ctx.samples);
+    SaveMarker { step: ctx.step, samples: ctx.samples }
+}
+
+impl SavePolicy for FullSave {
+    fn name(&self) -> &'static str {
+        "full-save"
+    }
+
+    fn next_save_h(&self) -> f64 {
+        self.next_save_h
+    }
+
+    fn capture(
+        &mut self,
+        ps: PsView<'_>,
+        pipeline: &CheckpointPipeline,
+        ledger: &mut OverheadLedger,
+        ctx: &SaveCtx<'_>,
+    ) -> Option<SaveMarker> {
+        let marker = full_content_capture(self.o_save_h, ps, pipeline, ledger, ctx);
+        self.next_save_h += self.interval_h;
+        Some(marker)
+    }
+}
+
+/// CPR without priority saving: full-content saves at the PLS-planned
+/// interval (`Strategy::CprVanilla`, and the capture shape every
+/// fell-back CPR strategy degrades to).
+pub struct CprVanilla(FullSave);
+
+impl CprVanilla {
+    /// `interval_h` is the planner's `t_save_h` (already fallback- and
+    /// override-adjusted by the registry).
+    pub fn new(o_save_h: f64, interval_h: f64) -> Self {
+        Self(FullSave::new(o_save_h, interval_h))
+    }
+
+    /// The planned save interval, hours.
+    pub fn interval_h(&self) -> f64 {
+        self.0.interval_h()
+    }
+}
+
+impl SavePolicy for CprVanilla {
+    fn name(&self) -> &'static str {
+        "cpr-vanilla"
+    }
+
+    fn next_save_h(&self) -> f64 {
+        self.0.next_save_h()
+    }
+
+    fn capture(
+        &mut self,
+        ps: PsView<'_>,
+        pipeline: &CheckpointPipeline,
+        ledger: &mut OverheadLedger,
+        ctx: &SaveCtx<'_>,
+    ) -> Option<SaveMarker> {
+        self.0.capture(ps, pipeline, ledger, ctx)
+    }
+}
+
+/// CPR priority checkpointing (paper §4.2) over any tracker: minor saves
+/// capture the tracker-selected `r·N` rows of each priority table (plus
+/// the whole tiny tables) every `r·T_save` at cost `r·O_save`; every
+/// `1/r`-th minor is a major that also advances the PLS position marker.
+pub struct Prioritized<T: PriorityTracker> {
+    tracker: T,
+    mask: Vec<bool>,
+    r: f64,
+    o_save_h: f64,
+    /// the minor interval, `r · t_save_h`
+    interval_h: f64,
+    minors_per_major: u64,
+    minor_count: u64,
+    next_save_h: f64,
+}
+
+impl<T: PriorityTracker> Prioritized<T> {
+    /// `mask` flags the priority tables (see
+    /// `checkpoint::tracker::priority_mask`), `r` the priority fraction,
+    /// `t_save_h` the PLS-planned full interval.
+    pub fn new(tracker: T, mask: Vec<bool>, r: f64, o_save_h: f64, t_save_h: f64) -> Self {
+        let interval_h = r * t_save_h;
+        Self {
+            tracker,
+            mask,
+            r,
+            o_save_h,
+            interval_h,
+            minors_per_major: ((1.0 / r).round() as u64).max(1),
+            minor_count: 0,
+            next_save_h: interval_h,
+        }
+    }
+
+    /// The underlying tracker (diagnostics: name, memory accounting).
+    pub fn tracker(&self) -> &T {
+        &self.tracker
+    }
+}
+
+impl<T: PriorityTracker> SavePolicy for Prioritized<T> {
+    fn name(&self) -> &'static str {
+        "prioritized"
+    }
+
+    fn next_save_h(&self) -> f64 {
+        self.next_save_h
+    }
+
+    fn on_step(&mut self, indices: &[u32], num_tables: usize, hotness: usize) {
+        self.tracker.record_batch(indices, num_tables, hotness);
+    }
+
+    fn capture(
+        &mut self,
+        ps: PsView<'_>,
+        pipeline: &CheckpointPipeline,
+        ledger: &mut OverheadLedger,
+        ctx: &SaveCtx<'_>,
+    ) -> Option<SaveMarker> {
+        self.minor_count += 1;
+        ledger.save_h += self.r * self.o_save_h;
+        let n_tables = ps.data.tables().len();
+        for t in 0..n_tables {
+            if self.mask[t] {
+                let rows_in_table = ps.data.tables()[t].rows;
+                let k = ((rows_in_table as f64 * self.r).ceil() as usize).max(1);
+                let rows = self.tracker.select(ps.data, t, k);
+                pipeline.save_rows(ps.data, t, &rows);
+                self.tracker.on_saved(ps.data, t, &rows);
+            } else {
+                // tiny non-priority tables ride along whole
+                pipeline.save_table(ps.data, t);
+            }
+        }
+        let marker = if self.minor_count % self.minors_per_major == 0 {
+            pipeline.mark_position(ctx.host_params.to_vec(), ctx.step, ctx.samples);
+            ledger.n_saves += 1;
+            Some(SaveMarker { step: ctx.step, samples: ctx.samples })
+        } else {
+            None
+        };
+        self.next_save_h += self.interval_h;
+        marker
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::tracker::MfuTracker;
+    use crate::checkpoint::CheckpointStore;
+    use crate::embedding::{PsCluster, TableInfo};
+
+    fn cluster() -> PsCluster {
+        PsCluster::new(
+            vec![TableInfo { rows: 40, dim: 4 }, TableInfo { rows: 8, dim: 4 }],
+            2,
+            3,
+        )
+    }
+
+    fn pipeline(c: &PsCluster) -> CheckpointPipeline {
+        CheckpointPipeline::new(
+            CheckpointStore::initial(c, vec![]),
+            None,
+            2,
+            std::time::Duration::ZERO,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn full_save_charges_ledger_and_marks_every_save() {
+        let c = cluster();
+        let p = pipeline(&c);
+        let mut policy = FullSave::new(0.1, 2.0);
+        assert_eq!(policy.next_save_h(), 2.0);
+        let mut ledger = OverheadLedger::default();
+        let ctx = SaveCtx { step: 5, samples: 640, clock_h: 2.1, host_params: &[] };
+        let m = policy
+            .capture(PsView::new(&c), &p, &mut ledger, &ctx)
+            .expect("full saves always mark");
+        assert_eq!((m.step, m.samples), (5, 640));
+        assert_eq!(policy.next_save_h(), 4.0);
+        assert_eq!(ledger.n_saves, 1);
+        assert!((ledger.save_h - 0.1).abs() < 1e-12);
+        p.flush().unwrap();
+    }
+
+    #[test]
+    fn prioritized_minor_major_cadence_matches_r() {
+        let c = cluster();
+        let p = pipeline(&c);
+        let r = 0.25; // 4 minors per major
+        let mask = vec![true, false];
+        let tracker = MfuTracker::new(&[40, 8], &mask);
+        let mut policy = Prioritized::new(tracker, mask, r, 0.1, 8.0);
+        assert!((policy.next_save_h() - 2.0).abs() < 1e-12, "minor = r·T_save");
+        let mut ledger = OverheadLedger::default();
+        policy.on_step(&[1, 0, 1, 0, 2, 0], 2, 1);
+        let mut marks = 0;
+        for minor in 1..=8u64 {
+            let ctx = SaveCtx {
+                step: minor,
+                samples: minor * 128,
+                clock_h: minor as f64 * 2.0,
+                host_params: &[],
+            };
+            if let Some(m) = policy.capture(PsView::new(&c), &p, &mut ledger, &ctx) {
+                marks += 1;
+                assert_eq!(m.step % 4, 0, "majors land every 1/r minors");
+            }
+        }
+        assert_eq!(marks, 2, "8 minors at r=0.25 give 2 majors");
+        assert_eq!(ledger.n_saves, 2, "only majors count as saves");
+        // 8 minors each charging r·O_save
+        assert!((ledger.save_h - 8.0 * r * 0.1).abs() < 1e-12);
+        p.flush().unwrap();
+    }
+}

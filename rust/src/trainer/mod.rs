@@ -29,6 +29,12 @@
 //!    coordinator (asserted against `coordinator::reference` by the
 //!    integration suite).
 //!
+//! Each [`TrainerStep`] also carries its batch's embedding access stream
+//! (`indices`, `[B, T, H]` row-major): the driver feeds the streams in
+//! rank order to the checkpoint policy engine
+//! (`policy::SavePolicy::on_step`), which is how the priority trackers
+//! observe the concatenated multi-trainer access sequence.
+//!
 //! The step barrier is also where the driver acquires the PS control
 //! plane's quiesce token ([`ShardedPs::quiesce`]) for checkpoint capture
 //! and failure injection — every trainer is parked on its command

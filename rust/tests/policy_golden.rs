@@ -1,0 +1,166 @@
+//! Golden equivalence for the checkpoint-policy engine (ISSUE 4).
+//!
+//! The coordinator's inlined strategy `match` was replaced by boxed
+//! policy objects (`cpr::policy`). These tests pin the refactor:
+//!
+//! * for EVERY pre-existing strategy, an N = 1 run driven through the
+//!   policy objects is bit-identical — final AUC, logloss, PLS, loss
+//!   curve, overhead ledger — to the pre-refactor coordinator
+//!   (preserved verbatim as `coordinator::reference`), on both cluster
+//!   backends, under a failure schedule;
+//! * at N = 4 with mixed PS + trainer failures, every strategy
+//!   (including the new `cpr-adaptive`) is bit-identical ACROSS the two
+//!   backends;
+//! * `cpr-adaptive` runs end-to-end and its online re-planned intervals
+//!   land in the `TrainReport` ledger, widening on quiet jobs and
+//!   narrowing under failure storms.
+
+use cpr::config::{preset, JobConfig, PsBackendKind, Strategy};
+use cpr::coordinator::reference::run_training_reference;
+use cpr::coordinator::{run_training, RunOptions, TrainReport};
+use cpr::failure::{uniform_schedule, FailureEvent};
+use cpr::pls;
+use cpr::runtime::{ModelExe, Runtime};
+use cpr::util::rng::Rng;
+
+/// The strategies that existed before the policy engine — the set the
+/// reference loop is an executable specification for.
+const PRE_EXISTING: [Strategy; 6] = [
+    Strategy::Full,
+    Strategy::PartialNaive,
+    Strategy::CprVanilla,
+    Strategy::CprScar,
+    Strategy::CprMfu,
+    Strategy::CprSsu,
+];
+
+fn load_model() -> ModelExe {
+    Runtime::cpu()
+        .expect("runtime")
+        .load_model("artifacts", "mini")
+        .expect("loading model")
+}
+
+/// 100-global-step mini job (fast enough for the strategy × backend grid).
+fn grid_cfg(strategy: Strategy, backend: PsBackendKind, n_trainers: usize) -> JobConfig {
+    let mut cfg = preset("mini").unwrap();
+    cfg.data.train_samples = 128 * n_trainers * 100;
+    cfg.data.eval_samples = 3_840;
+    cfg.checkpoint.strategy = strategy;
+    cfg.cluster.backend = backend;
+    cfg.cluster.n_trainers = n_trainers;
+    cfg
+}
+
+fn ps_only_schedule(seed: u64, n: usize, victims: usize, cfg: &JobConfig) -> Vec<FailureEvent> {
+    let mut rng = Rng::new(seed);
+    uniform_schedule(&mut rng, n, cfg.cluster.t_total_h, cfg.cluster.n_emb_ps, victims)
+}
+
+fn assert_bit_identical(a: &TrainReport, b: &TrainReport, what: &str) {
+    assert_eq!(a.final_auc, b.final_auc, "{what}: AUC diverged");
+    assert_eq!(a.final_logloss, b.final_logloss, "{what}: logloss diverged");
+    assert_eq!(a.pls, b.pls, "{what}: PLS diverged");
+    assert_eq!(a.steps_executed, b.steps_executed, "{what}: steps diverged");
+    assert_eq!(a.failures_seen, b.failures_seen, "{what}: failure count diverged");
+    assert_eq!(a.ledger, b.ledger, "{what}: overhead ledger diverged");
+    assert_eq!(a.train_loss.points, b.train_loss.points,
+               "{what}: loss curve diverged");
+}
+
+fn n1_matches_reference_on(backend: PsBackendKind) {
+    let model = load_model();
+    for strategy in PRE_EXISTING {
+        let cfg = grid_cfg(strategy.clone(), backend, 1);
+        let schedule = ps_only_schedule(17, 3, 2, &cfg);
+        let opts = RunOptions { schedule, ..Default::default() };
+        let a = run_training(&model, &cfg, &opts).expect("policy-driven run");
+        let b = run_training_reference(&model, &cfg, &opts).expect("reference run");
+        let what = format!("{}/{}", backend.name(), strategy.name());
+        assert_eq!(a.strategy, strategy.name(), "{what}");
+        assert_eq!(a.backend, b.backend, "{what}");
+        assert_bit_identical(&a, &b, &what);
+    }
+}
+
+#[test]
+fn n1_policy_driver_matches_reference_for_every_strategy_inproc() {
+    n1_matches_reference_on(PsBackendKind::InProc);
+}
+
+#[test]
+fn n1_policy_driver_matches_reference_for_every_strategy_threaded() {
+    n1_matches_reference_on(PsBackendKind::Threaded);
+}
+
+#[test]
+fn n4_mixed_failures_backend_identical_for_every_strategy() {
+    let model = load_model();
+    // one trainer loss + one PS loss, fixed times (the ISSUE-3 scenario,
+    // now swept over the whole registry including cpr-adaptive)
+    let schedule = vec![
+        FailureEvent { time_h: 20.0, victims: vec![], trainer_victims: vec![2] },
+        FailureEvent { time_h: 35.0, victims: vec![3], trainer_victims: vec![] },
+    ];
+    let mut all = PRE_EXISTING.to_vec();
+    all.push(Strategy::CprAdaptive);
+    for strategy in all {
+        let mut per_backend = Vec::new();
+        for backend in [PsBackendKind::InProc, PsBackendKind::Threaded] {
+            let mut cfg = grid_cfg(strategy.clone(), backend, 4);
+            // tighter target so CPR (incl. adaptive) saves several times
+            cfg.checkpoint.target_pls = 0.02;
+            let opts = RunOptions { schedule: schedule.clone(), ..Default::default() };
+            let r = run_training(&model, &cfg, &opts).expect("N=4 run");
+            assert_eq!(r.n_trainers, 4, "{}", strategy.name());
+            assert_eq!(r.failures_seen, 2, "{}", strategy.name());
+            assert!(r.final_auc.is_finite() && r.final_auc > 0.5, "{}: AUC {}",
+                    strategy.name(), r.final_auc);
+            per_backend.push(r);
+        }
+        let what = format!("N=4/{}", strategy.name());
+        assert_bit_identical(&per_backend[0], &per_backend[1], &what);
+    }
+}
+
+#[test]
+fn adaptive_widens_its_interval_on_a_quiet_job() {
+    let model = load_model();
+    let mut cfg = grid_cfg(Strategy::CprAdaptive, PsBackendKind::InProc, 1);
+    cfg.checkpoint.target_pls = 0.02; // plan ≈ 10 h → several majors in 56 h
+    let r = run_training(&model, &cfg, &RunOptions::default()).unwrap();
+    assert!(!r.fell_back);
+    assert_eq!(r.pls, 0.0);
+    assert!(!r.ledger.replans.is_empty(),
+            "a quiet job must still re-plan (the MTBF estimate rises)");
+    let p0 = pls::plan(&cfg.cluster, cfg.checkpoint.target_pls);
+    let mut prev = p0.t_save_h;
+    for &(at_h, t_save_h) in &r.ledger.replans {
+        assert!(at_h.is_finite() && t_save_h.is_finite());
+        assert!(t_save_h > prev,
+                "no observed failures → every re-plan must widen: \
+                 {t_save_h} !> {prev} at {at_h} h");
+        prev = t_save_h;
+    }
+}
+
+#[test]
+fn adaptive_narrows_its_interval_under_a_failure_storm() {
+    let model = load_model();
+    let mut cfg = grid_cfg(Strategy::CprAdaptive, PsBackendKind::InProc, 1);
+    cfg.checkpoint.target_pls = 0.02;
+    let schedule = ps_only_schedule(23, 8, 1, &cfg); // 4× the planned rate
+    let r = run_training(&model, &cfg, &RunOptions { schedule, ..Default::default() })
+        .unwrap();
+    assert_eq!(r.strategy, "cpr-adaptive");
+    assert!(!r.fell_back);
+    assert_eq!(r.failures_seen, 8);
+    assert!(r.pls > 0.0, "PS losses under partial recovery accrue PLS");
+    assert_eq!(r.ledger.lost_h, 0.0, "partial recovery never rewinds");
+    assert!(!r.ledger.replans.is_empty());
+    let p0 = pls::plan(&cfg.cluster, cfg.checkpoint.target_pls);
+    let last = r.ledger.replans.last().unwrap().1;
+    assert!(last < p0.t_save_h,
+            "a failure storm must narrow the interval: {last} !< {}",
+            p0.t_save_h);
+}

@@ -1,0 +1,102 @@
+//! The per-strategy end-to-end matrix (one CI job leg per registered
+//! checkpoint policy, on the threaded backend).
+//!
+//! CI's `strategy-matrix` job runs this binary once per strategy with
+//! `CPR_STRATEGY=<name>`; without the variable (local `cargo test`) it
+//! sweeps every policy the registry knows about, so a newly registered
+//! policy is exercised end-to-end without editing this file.
+
+use cpr::config::{preset, PsBackendKind, Strategy};
+use cpr::coordinator::{run_training, RunOptions};
+use cpr::failure::FailureEvent;
+use cpr::policy::registry;
+use cpr::runtime::Runtime;
+
+fn strategies_under_test() -> Vec<Strategy> {
+    match std::env::var("CPR_STRATEGY") {
+        Ok(name) => vec![Strategy::parse(&name)
+            .expect("CPR_STRATEGY must be a registered strategy name")],
+        Err(_) => registry::specs().into_iter().map(|s| s.strategy).collect(),
+    }
+}
+
+#[test]
+fn ci_matrix_lists_every_registered_strategy() {
+    // the workflow's matrix is a hand-written list; catch drift against
+    // the registry here (skipped when the workflow file is not present,
+    // e.g. in a crate-only checkout)
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../.github/workflows/ci.yml");
+    let Ok(yaml) = std::fs::read_to_string(path) else {
+        return;
+    };
+    for name in registry::names() {
+        assert!(yaml.contains(name),
+                "CI strategy-matrix is missing {name:?} — keep the matrix in \
+                 .github/workflows/ci.yml in sync with policy::registry::names()");
+    }
+}
+
+#[test]
+fn strategy_end_to_end_on_the_threaded_backend() {
+    let model = Runtime::cpu()
+        .expect("runtime")
+        .load_model("artifacts", "mini")
+        .expect("loading model");
+    for strategy in strategies_under_test() {
+        let mut cfg = preset("mini").unwrap();
+        cfg.data.train_samples = 128 * 2 * 75; // 75 global steps at N = 2
+        cfg.data.eval_samples = 6_400;
+        cfg.cluster.backend = PsBackendKind::Threaded;
+        cfg.cluster.n_trainers = 2;
+        cfg.checkpoint.strategy = strategy.clone();
+        // tight target so CPR policies (incl. adaptive) save several times
+        cfg.checkpoint.target_pls = 0.02;
+        // mixed schedule: two PS losses + one trainer loss, at fixed times
+        // chosen away from every strategy's save boundaries (so the first
+        // PS loss always lands strictly after the last marker and PLS is
+        // deterministically positive under partial recovery)
+        let schedule = vec![
+            FailureEvent { time_h: 13.0, victims: vec![1], trainer_victims: vec![] },
+            FailureEvent { time_h: 27.5, victims: vec![5], trainer_victims: vec![] },
+            FailureEvent { time_h: 40.0, victims: vec![], trainer_victims: vec![1] },
+        ];
+        let name = strategy.name();
+        let r = run_training(&model, &cfg, &RunOptions { schedule, ..Default::default() })
+            .unwrap_or_else(|e| panic!("{name}: run failed: {e:#}"));
+
+        // universal invariants
+        assert_eq!(r.strategy, name);
+        assert_eq!(r.backend, "threaded", "{name}");
+        assert_eq!(r.n_trainers, 2, "{name}");
+        assert_eq!(r.failures_seen, 3, "{name}");
+        assert!(r.final_auc > 0.55 && r.final_auc < 1.0, "{name}: AUC {}", r.final_auc);
+        assert!(r.final_logloss.is_finite() && r.final_logloss > 0.0, "{name}");
+        assert!(r.overhead_frac.is_finite() && r.overhead_frac > 0.0, "{name}");
+        assert!(r.ledger.n_saves > 0, "{name}: no saves recorded");
+
+        // per-mode semantics
+        if strategy.is_partial() && !r.fell_back {
+            assert_eq!(r.steps_executed, 75,
+                       "{name}: partial recovery must not re-execute steps");
+            assert_eq!(r.ledger.lost_h, 0.0, "{name}");
+            assert!(r.pls > 0.0, "{name}: PS losses must accrue PLS");
+        } else {
+            assert!(r.steps_executed >= 75, "{name}: full recovery replays");
+            assert_eq!(r.pls, 0.0, "{name}: full recovery loses no updates");
+        }
+        if strategy == Strategy::CprAdaptive {
+            assert!(!r.ledger.replans.is_empty(),
+                    "{name}: adaptive must re-plan at its majors");
+            assert!(r.ledger.replans.iter().all(|&(_, t)| t.is_finite() && t > 0.0),
+                    "{name}: re-planned intervals must be positive");
+        } else {
+            assert!(r.ledger.replans.is_empty(),
+                    "{name}: static policies never re-plan");
+        }
+        if strategy.is_cpr() {
+            assert!(r.plan.is_some(), "{name}: CPR strategies carry their plan");
+            assert!(!r.fell_back,
+                    "{name}: the paper cluster must not trigger fallback");
+        }
+    }
+}

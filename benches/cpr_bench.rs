@@ -11,6 +11,11 @@
 //!                       injected-read cost of the policy seam)
 //!   hotpath_*         — L3 coordinator primitives: PS gather/scatter,
 //!                       checkpoint save/restore, AUC, data generation
+//!   checkpoint_io[]   — durable publish cost per on-disk format: v1
+//!                       monolithic rewrite vs v2 base re-publish vs v2
+//!                       dirty-row delta (rows=1e5/1e6), plus the
+//!                       one-node-chain partial restore; `[...,bytes]`
+//!                       rows carry bytes-per-publish as throughput_per_s
 //!   backend_*         — inproc vs threaded PS runtimes at B=128/512/2048
 //!   scatter_contention[] — cross-node apply_grads throughput of the
 //!                       sharded handle (per-node turnstiles) vs the
@@ -30,7 +35,10 @@
 //! Results are recorded in EXPERIMENTS.md §Perf.
 
 use cpr::bench::{record_external, write_json, Bench};
+use cpr::checkpoint::disk::{self, DiskCheckpointer};
 use cpr::checkpoint::tracker::{MfuTracker, ScarTracker, SsuTracker};
+use cpr::checkpoint::v2::V2Engine;
+use cpr::checkpoint::writer_pool::WriterPool;
 use cpr::checkpoint::CheckpointStore;
 use cpr::cluster::{PsBackend, PsDataPlane, ShardedPs, ThreadedCluster};
 use cpr::config::{preset, PsBackendKind};
@@ -70,6 +78,9 @@ fn main() {
     }
     if want("hotpath") {
         hotpath(quick);
+    }
+    if want("checkpoint_io") {
+        checkpoint_io(quick);
     }
     if want("backend") {
         backend_comparison(quick);
@@ -413,6 +424,109 @@ fn policy_overhead(quick: bool) {
                 scar_dyn.record_batch(&accesses, 1, 1);
                 scar_dyn.select(&cluster, 0, k)
             });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint I/O — v1 monolithic publishes vs v2 base/delta chains
+// ---------------------------------------------------------------------------
+
+/// Disk-layer cost of one durable publish per format, at 1e5 and 1e6 rows
+/// (dim 16, 8 nodes; the delta case dirties r·N = 12.5% of rows per
+/// publish — a prioritized minor's shape). Each timing row has a
+/// `[...,bytes]` sibling recorded with a 1-second denominator, so its
+/// `throughput_per_s` in the JSON artifact IS the bytes one publish
+/// wrote — the acceptance check "v2 delta publishes write strictly fewer
+/// bytes than v1 full publishes" reads those two numbers. The
+/// `v2-restore-node` row times the partial-restore read path (one node's
+/// base+delta chain, not the whole checkpoint).
+fn checkpoint_io(quick: bool) {
+    println!("\n-- checkpoint_io: v1 monolithic vs v2 incremental publishes --");
+    let sizes: &[(usize, &str)] =
+        if quick { &[(100_000, "1e5")] } else { &[(100_000, "1e5"), (1_000_000, "1e6")] };
+    for &(rows, label) in sizes {
+        let dim = 16usize;
+        let n_nodes = 8usize;
+        let cluster = PsCluster::new(vec![TableInfo { rows, dim }], n_nodes, 3);
+        let mut store = CheckpointStore::initial(&cluster, vec![]);
+        let k = (rows / 8).max(1); // r = 0.125 of the table per minor
+        let hot: Vec<u32> = (0..k as u32).collect();
+        let mut step = 0u64;
+
+        // v1: every publish rewrites the whole store into one file
+        let dir1 = std::env::temp_dir().join(format!("cpr_bench_ckpt_v1_{label}"));
+        std::fs::remove_dir_all(&dir1).ok();
+        std::fs::create_dir_all(&dir1).unwrap();
+        let v1_bytes = store.size_bytes() as u64;
+        bench(&format!("checkpoint_io[v1-full,rows={label}]"), quick)
+            .throughput(v1_bytes)
+            .run(|| {
+                step += 1;
+                store.mark_position(vec![], step, step * 128);
+                disk::publish(&dir1, &store, 2).unwrap()
+            });
+        record_external(&format!("checkpoint_io[v1-full,rows={label},bytes]"),
+                        1.0, v1_bytes);
+
+        // v2-base: forced re-base every publish (a priority major) — the
+        // per-node files fan out over the writer pool
+        let dir2 = std::env::temp_dir().join(format!("cpr_bench_ckpt_v2_{label}"));
+        std::fs::remove_dir_all(&dir2).ok();
+        let mut eng =
+            V2Engine::open(&dir2, WriterPool::for_nodes(n_nodes), 0.5).unwrap();
+        let mut base_bytes = 0u64;
+        bench(&format!("checkpoint_io[v2-base,rows={label}]"), quick)
+            .throughput(v1_bytes)
+            .run(|| {
+                step += 1;
+                store.mark_position(vec![], step, step * 128);
+                base_bytes = eng.publish(&mut store, true, true).unwrap();
+            });
+        record_external(&format!("checkpoint_io[v2-base,rows={label},bytes]"),
+                        1.0, base_bytes);
+
+        // v2-delta: only the hot 12.5% of rows dirty per publish (the
+        // prioritized-minor shape); huge compact_frac keeps every publish
+        // a pure delta so the row isn't a base/delta mix
+        let dir3 = std::env::temp_dir().join(format!("cpr_bench_ckpt_v2d_{label}"));
+        std::fs::remove_dir_all(&dir3).ok();
+        let mut engd =
+            V2Engine::open(&dir3, WriterPool::for_nodes(n_nodes), 1e12).unwrap();
+        engd.publish(&mut store, true, false).unwrap(); // initial bases
+        let mut delta_bytes = 0u64;
+        bench(&format!("checkpoint_io[v2-delta,rows={label}]"), quick)
+            .throughput(cpr::checkpoint::rows_io_bytes(k, dim))
+            .run(|| {
+                step += 1;
+                store.save_rows(&cluster, 0, &hot);
+                store.mark_position(vec![], step, step * 128);
+                delta_bytes = engd.publish(&mut store, true, false).unwrap();
+            });
+        record_external(&format!("checkpoint_io[v2-delta,rows={label},bytes]"),
+                        1.0, delta_bytes);
+        println!("  -> v1-full/v2-delta bytes per publish at rows={label}: \
+                  {v1_bytes} / {delta_bytes} = {:.1}x",
+                 v1_bytes as f64 / delta_bytes.max(1) as f64);
+
+        // v2 partial restore: read ONE node's chain back. Give dir2's
+        // chains a representative delta tail first (bounded by the 0.5
+        // compaction threshold), so the row times real base+delta replay,
+        // not a bare base read.
+        for _ in 0..2 {
+            step += 1;
+            store.save_rows(&cluster, 0, &hot);
+            store.mark_position(vec![], step, step * 128);
+            eng.publish(&mut store, true, false).unwrap();
+        }
+        let dir2_str = dir2.to_str().unwrap().to_string();
+        bench(&format!("checkpoint_io[v2-restore-node,rows={label}]"), quick)
+            .run(|| {
+                DiskCheckpointer::load_latest_node(&dir2_str, 3).unwrap().unwrap()
+            });
+
+        std::fs::remove_dir_all(&dir1).ok();
+        std::fs::remove_dir_all(&dir2).ok();
+        std::fs::remove_dir_all(&dir3).ok();
     }
 }
 

@@ -304,7 +304,8 @@ fn fig6(ctx: &Ctx) -> Result<()> {
 
 fn fig7(ctx: &Ctx) -> Result<()> {
     println!("\n== Fig. 7 — overhead + AUC, all strategies ==");
-    let mut csv = String::from("dataset,strategy,overhead_pct,auc,dauc,pls\n");
+    let mut csv = String::from(
+        "dataset,strategy,overhead_pct,auc,dauc,pls,ckpt_mb_written,ckpt_mb_restored\n");
     for preset_name in ["kaggle_like", "terabyte_like"] {
         let model = ctx.model(preset_name)?;
         let mut cfg = ctx.cfg(preset_name)?;
@@ -325,13 +326,16 @@ fn fig7(ctx: &Ctx) -> Result<()> {
             cfg.checkpoint.strategy = strategy;
             let r = run_training(&model, &cfg, &RunOptions {
                 schedule: schedule.clone(), ..Default::default() })?;
-            println!("{:<14} {:>9.2}% {:>10.5} {:>9.5} {:>8.4}",
+            println!("{:<14} {:>9.2}% {:>10.5} {:>9.5} {:>8.4}  ({:.1} MB saved)",
                      r.strategy, 100.0 * r.overhead_frac, r.final_auc,
-                     clean.final_auc - r.final_auc, r.pls);
-            csv.push_str(&format!("{preset_name},{},{},{},{},{}\n",
+                     clean.final_auc - r.final_auc, r.pls,
+                     r.ledger.bytes_written as f64 / 1e6);
+            csv.push_str(&format!("{preset_name},{},{},{},{},{},{},{}\n",
                                   r.strategy, 100.0 * r.overhead_frac,
                                   r.final_auc, clean.final_auc - r.final_auc,
-                                  r.pls));
+                                  r.pls,
+                                  r.ledger.bytes_written as f64 / 1e6,
+                                  r.ledger.bytes_restored as f64 / 1e6));
         }
         println!("(paper {preset_name}: full 8.5/8.2% → CPR 0.53/0.68%, \
                   AUC parity with priority schemes)");
@@ -565,7 +569,8 @@ fn trainers(ctx: &Ctx) -> Result<()> {
     let model = ctx.model("mini")?;
     let base = ctx.cfg("mini")?;
     let mut csv = String::from(
-        "backend,n_trainers,global_steps,samples,steps_per_sec,samples_per_sec,auc\n");
+        "backend,n_trainers,global_steps,samples,steps_per_sec,samples_per_sec,auc,\
+         ckpt_mb_written,ckpt_mb_restored\n");
     println!("{:<9} {:>9} {:>7} {:>9} {:>11} {:>13} {:>8}",
              "backend", "trainers", "steps", "samples", "steps/s", "samples/s", "AUC");
     for backend in [PsBackendKind::InProc, PsBackendKind::Threaded] {
@@ -588,8 +593,11 @@ fn trainers(ctx: &Ctx) -> Result<()> {
             println!("{:<9} {:>9} {:>7} {:>9} {:>11.2} {:>13.0} {:>8.5}",
                      r.backend, n, r.steps_executed, samples, steps_per_sec,
                      samples_per_sec, r.final_auc);
-            csv.push_str(&format!("{},{n},{},{samples},{steps_per_sec},{samples_per_sec},{}\n",
-                                  r.backend, r.steps_executed, r.final_auc));
+            let mb_w = r.ledger.bytes_written as f64 / 1e6;
+            let mb_r = r.ledger.bytes_restored as f64 / 1e6;
+            csv.push_str(&format!(
+                "{},{n},{},{samples},{steps_per_sec},{samples_per_sec},{},{mb_w},{mb_r}\n",
+                r.backend, r.steps_executed, r.final_auc));
         }
     }
     println!("(the N = 1 rows are bit-identical to the pre-refactor \

@@ -30,8 +30,11 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use super::v2::V2Engine;
+use super::writer_pool::WriterPool;
 use super::{disk, CheckpointStore};
 use crate::cluster::{NodeSnapshot, PsControlPlane, PsDataPlane};
+use crate::config::CkptFormat;
 
 /// How many full-cluster snapshot captures may be in flight at once.
 const FULL_BUFFERS: usize = 2;
@@ -41,8 +44,14 @@ enum Msg {
     Nodes(Vec<NodeSnapshot>),
     /// priority-row save: captured rows of one table
     Rows { table: usize, rows: Vec<u32>, dim: usize, data: Vec<f32>, opt: Vec<f32> },
-    /// advance the PLS position marker; publishes to disk when configured
-    Mark { mlp: Vec<Vec<f32>>, step: u64, samples: u64 },
+    /// advance the PLS position marker; publishes to disk when configured.
+    /// `force_base` re-bases every node chain under format v2 (priority
+    /// majors) and is a no-op under v1.
+    Mark { mlp: Vec<Vec<f32>>, step: u64, samples: u64, force_base: bool },
+    /// format v2: publish the mirror's dirty rows as deltas WITHOUT
+    /// moving the position marker (a minor save's durability point).
+    /// No-op under v1 / in-memory-only runs.
+    Commit,
     GetNode { node: usize, reply: mpsc::Sender<NodeSnapshot> },
     GetStore { reply: mpsc::Sender<CheckpointStore> },
     /// position marker + dense params only — no mirror clone
@@ -64,12 +73,24 @@ pub struct CheckpointPipeline {
 
 struct WriterCtx {
     store: CheckpointStore,
+    /// v1 publication target (None = in-memory only or v2)
     dir: Option<PathBuf>,
+    /// v2 publication engine (None = in-memory only or v1)
+    engine: Option<V2Engine>,
     keep: usize,
     write_delay: Duration,
     in_flight: Arc<AtomicUsize>,
     full_slots: Arc<(Mutex<usize>, Condvar)>,
     io_error: Arc<Mutex<Option<String>>>,
+}
+
+impl WriterCtx {
+    fn record_io_error(&self, e: anyhow::Error) {
+        self.io_error
+            .lock()
+            .unwrap()
+            .get_or_insert_with(|| format!("{e:#}"));
+    }
 }
 
 fn writer_loop(mut ctx: WriterCtx, rx: Receiver<Msg>) {
@@ -94,14 +115,31 @@ fn writer_loop(mut ctx: WriterCtx, rx: Receiver<Msg>) {
                 ctx.store.apply_rows(table, &rows, dim, &data, &opt);
                 ctx.in_flight.fetch_sub(1, Ordering::SeqCst);
             }
-            Msg::Mark { mlp, step, samples } => {
+            Msg::Mark { mlp, step, samples, force_base } => {
                 ctx.store.mark_position(mlp, step, samples);
-                if let Some(dir) = &ctx.dir {
+                if let Some(engine) = ctx.engine.as_mut() {
+                    if let Err(e) = engine.publish(&mut ctx.store, true, force_base) {
+                        ctx.record_io_error(e);
+                    }
+                } else if let Some(dir) = &ctx.dir {
                     if let Err(e) = disk::publish(dir, &ctx.store, ctx.keep) {
-                        ctx.io_error
-                            .lock()
-                            .unwrap()
-                            .get_or_insert_with(|| format!("{e:#}"));
+                        ctx.record_io_error(e);
+                    }
+                }
+            }
+            Msg::Commit => {
+                // minor-save durability point: dirty rows go out as
+                // deltas, the marker (and its meta file) stay put
+                let any_dirty = ctx
+                    .store
+                    .node_states()
+                    .iter()
+                    .any(|n| n.dirty_row_count() > 0);
+                if let Some(engine) = ctx.engine.as_mut() {
+                    if any_dirty {
+                        if let Err(e) = engine.publish(&mut ctx.store, false, false) {
+                            ctx.record_io_error(e);
+                        }
                     }
                 }
             }
@@ -130,12 +168,31 @@ impl CheckpointPipeline {
     /// `store` is the initial mirror (epoch-0 state). `dir` enables durable
     /// publication of every position-marking save, rotating to the newest
     /// `keep` files. `write_delay` is an artificial per-save writer cost —
-    /// zero in production, nonzero in tests that assert overlap.
+    /// zero in production, nonzero in tests that assert overlap. Publishes
+    /// as format v1; [`CheckpointPipeline::with_format`] selects v2.
     pub fn new(
         store: CheckpointStore,
         dir: Option<&str>,
         keep: usize,
         write_delay: Duration,
+    ) -> Result<Self> {
+        Self::with_format(store, dir, keep, write_delay, CkptFormat::V1, 0.5)
+    }
+
+    /// [`CheckpointPipeline::new`] with an explicit on-disk format. Under
+    /// [`CkptFormat::V2`] the writer owns a [`V2Engine`]: position-marking
+    /// saves publish the mirror's dirty rows as per-node delta files
+    /// (bases when forced / chain-less / compaction-due), written in
+    /// parallel by the writer pool; [`CheckpointPipeline::commit_save`]
+    /// publishes minors without moving the marker. `compact_frac` is the
+    /// chain-compaction threshold (ignored for v1).
+    pub fn with_format(
+        store: CheckpointStore,
+        dir: Option<&str>,
+        keep: usize,
+        write_delay: Duration,
+        format: CkptFormat,
+        compact_frac: f64,
     ) -> Result<Self> {
         let dir = match dir {
             Some(d) => {
@@ -145,12 +202,21 @@ impl CheckpointPipeline {
             }
             None => None,
         };
+        let (dir, engine) = match (format, dir) {
+            (_, None) => (None, None),
+            (CkptFormat::V1, d) => (d, None),
+            (CkptFormat::V2, Some(d)) => {
+                let pool = WriterPool::for_nodes(store.node_states().len());
+                (None, Some(V2Engine::open(&d, pool, compact_frac)?))
+            }
+        };
         let in_flight = Arc::new(AtomicUsize::new(0));
         let full_slots = Arc::new((Mutex::new(FULL_BUFFERS), Condvar::new()));
         let io_error = Arc::new(Mutex::new(None));
         let ctx = WriterCtx {
             store,
             dir,
+            engine,
             keep: keep.max(1),
             write_delay,
             in_flight: Arc::clone(&in_flight),
@@ -195,7 +261,7 @@ impl CheckpointPipeline {
             (0..backend.n_nodes()).map(|n| backend.snapshot_node(n)).collect();
         self.in_flight.fetch_add(1, Ordering::SeqCst);
         self.send(Msg::Nodes(snaps));
-        self.send(Msg::Mark { mlp, step, samples });
+        self.send(Msg::Mark { mlp, step, samples, force_base: false });
     }
 
     /// Capture `rows` of `table` (priority save) and hand them to the
@@ -207,6 +273,39 @@ impl CheckpointPipeline {
         self.send(Msg::Rows { table, rows: rows.to_vec(), dim, data, opt });
     }
 
+    /// Delta capture: read `rows` (global ids) of `table` grouped by
+    /// owning node through the control plane's dirty-set export
+    /// ([`PsControlPlane::snapshot_node_rows`]) — one per-node message,
+    /// one node read guard each, never a full node clone. Content-wise
+    /// identical to [`CheckpointPipeline::save_rows`]; the per-node
+    /// grouping is what lets format v2 turn the capture into per-node
+    /// delta files without re-routing.
+    pub fn delta_save<B: PsControlPlane + ?Sized>(
+        &self,
+        backend: &B,
+        table: usize,
+        rows: &[u32],
+    ) {
+        let dim = backend.tables()[table].dim;
+        let n = backend.n_nodes();
+        // carry (locals, globals) together so the mirror application uses
+        // the caller's own ids — no inverse-routing pass to drift
+        let mut per_node: Vec<(Vec<u32>, Vec<u32>)> = vec![(Vec::new(), Vec::new()); n];
+        for &r in rows {
+            let (node, local) = crate::cluster::route_row(r as usize, n);
+            per_node[node].0.push(local as u32);
+            per_node[node].1.push(r);
+        }
+        for (node, (locals, globals)) in per_node.into_iter().enumerate() {
+            if locals.is_empty() {
+                continue;
+            }
+            let (data, opt) = backend.snapshot_node_rows(node, table, &locals);
+            self.in_flight.fetch_add(1, Ordering::SeqCst);
+            self.send(Msg::Rows { table, rows: globals, dim, data, opt });
+        }
+    }
+
     /// Capture one whole (small) table.
     pub fn save_table<B: PsDataPlane + ?Sized>(&self, backend: &B, table: usize) {
         let rows: Vec<u32> = (0..backend.tables()[table].rows as u32).collect();
@@ -215,7 +314,22 @@ impl CheckpointPipeline {
 
     /// Advance the position marker (and publish, when a dir is configured).
     pub fn mark_position(&self, mlp: Vec<Vec<f32>>, step: u64, samples: u64) {
-        self.send(Msg::Mark { mlp, step, samples });
+        self.send(Msg::Mark { mlp, step, samples, force_base: false });
+    }
+
+    /// Advance the position marker AND re-base every node chain (a
+    /// priority *major* under format v2: deltas accumulated by the minors
+    /// are folded into fresh bases). Identical to
+    /// [`CheckpointPipeline::mark_position`] under v1.
+    pub fn mark_position_base(&self, mlp: Vec<Vec<f32>>, step: u64, samples: u64) {
+        self.send(Msg::Mark { mlp, step, samples, force_base: true });
+    }
+
+    /// Publish the mirror's dirty rows as per-node deltas without moving
+    /// the position marker (a priority *minor*'s durability point under
+    /// format v2). No-op under v1 or without a checkpoint dir.
+    pub fn commit_save(&self) {
+        self.send(Msg::Commit);
     }
 
     /// Partial recovery: fetch `node`'s mirror state (after all previously
@@ -278,11 +392,11 @@ impl Drop for CheckpointPipeline {
 impl CheckpointStore {
     /// Writer-thread accessors for request/reply restores.
     pub(crate) fn node_shards(&self, node: usize) -> &[Vec<f32>] {
-        &self.shards[node]
+        self.node_states()[node].shards()
     }
 
     pub(crate) fn node_opt(&self, node: usize) -> &[Vec<f32>] {
-        &self.opt[node]
+        self.node_states()[node].opt()
     }
 }
 
@@ -407,6 +521,74 @@ mod tests {
         assert!(t0.elapsed() >= Duration::from_millis(100),
                 "third capture should have waited for the writer");
         p.flush().unwrap();
+    }
+
+    #[test]
+    fn delta_save_captures_like_save_rows() {
+        let c = cluster();
+        let p = pipeline(&c, 0);
+        perturb(&c, 20);
+        let rows = [0u32, 3, 6, 1, 4]; // nodes 0 and 1
+        let (want, want_opt) = c.read_rows(0, &rows);
+        p.delta_save(&c, 0, &rows);
+        perturb(&c, 21);
+        for node in 0..3 {
+            p.restore_node(&c, node);
+        }
+        let (got, got_opt) = c.read_rows(0, &rows);
+        assert_eq!(got, want, "delta capture must mirror the captured rows");
+        assert_eq!(got_opt, want_opt, "optimizer state rides with delta rows");
+        p.flush().unwrap();
+    }
+
+    #[test]
+    fn v2_minors_publish_deltas_and_majors_rebase() {
+        let dir = std::env::temp_dir().join("cpr_pipeline_v2");
+        std::fs::remove_dir_all(&dir).ok();
+        let c = cluster();
+        let p = CheckpointPipeline::with_format(
+            CheckpointStore::initial(&c, vec![]),
+            Some(dir.to_str().unwrap()),
+            2,
+            Duration::ZERO,
+            CkptFormat::V2,
+            0.5,
+        )
+        .unwrap();
+        // minor #1: first durable publish → every node gets a base
+        perturb(&c, 30);
+        p.delta_save(&c, 0, &[0, 3]);
+        p.commit_save();
+        p.flush().unwrap();
+        let m1 = crate::checkpoint::v2::read_manifest(&dir).unwrap().unwrap();
+        assert_eq!(m1.chains.len(), 3);
+        assert!(m1.chains.iter().all(|ch| ch.deltas.is_empty()));
+        // minor #2: only node 0's rows dirty → one delta, marker untouched
+        perturb(&c, 31);
+        p.delta_save(&c, 0, &[0, 3]);
+        p.commit_save();
+        p.flush().unwrap();
+        let m2 = crate::checkpoint::v2::read_manifest(&dir).unwrap().unwrap();
+        assert_eq!(m2.chains[0].deltas.len(), 1, "minor publishes a delta");
+        assert!(m2.chains[1].deltas.is_empty(), "clean nodes publish nothing");
+        assert_eq!(m2.meta, m1.meta, "minors do not move the position marker");
+        // major: marker advances AND every chain folds into a fresh base
+        p.mark_position_base(vec![vec![5.0]], 9, 1152);
+        p.flush().unwrap();
+        let m3 = crate::checkpoint::v2::read_manifest(&dir).unwrap().unwrap();
+        assert!(m3.chains.iter().all(|ch| ch.deltas.is_empty()),
+                "a major re-bases every chain");
+        assert_ne!(m3.meta, m2.meta, "majors move the marker");
+        let latest = super::disk::DiskCheckpointer::load_latest(dir.to_str().unwrap())
+            .unwrap()
+            .expect("published v2 checkpoint");
+        assert_eq!(latest.step, 9);
+        assert_eq!(latest.mlp, vec![vec![5.0]]);
+        // the delta-saved rows came back through the chain
+        let (cur, _) = c.read_rows(0, &[0, 3]);
+        assert_eq!(&latest.node_states()[0].shards()[0][0..4], &cur[0..4]);
+        assert_eq!(&latest.node_states()[0].shards()[0][4..8], &cur[4..8]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

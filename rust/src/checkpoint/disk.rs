@@ -1,34 +1,42 @@
 //! Durable on-disk checkpoint publication.
 //!
-//! [`publish`] is the single write path (used by the asynchronous
-//! [`super::async_pipeline::CheckpointPipeline`] writer and by the
-//! standalone [`DiskCheckpointer`]). It enforces the crash-consistency
-//! rule: **a checkpoint is only published after the writer thread fsyncs
-//! the manifest** —
+//! Two formats share this entry point:
 //!
-//! 1. data is written to a temp file and fsynced
-//!    ([`CheckpointStore::write_file`] syncs before returning);
-//! 2. the temp file is atomically renamed to `ckpt-<step>.bin` and the
-//!    directory is fsynced (renames are directory metadata — without this
-//!    the manifest rename could survive a crash that loses the data one);
-//! 3. the `LATEST` manifest (a text pointer; symlinks are not portable) is
-//!    written to a temp file, fsynced, atomically renamed over the old
-//!    manifest, and the directory is fsynced again.
+//! * **v1** — [`publish`] writes the whole [`CheckpointStore`] into one
+//!   monolithic `ckpt-<step>.bin` file and flips the `LATEST` pointer:
+//!   1. data is written to a temp file and fsynced
+//!      ([`CheckpointStore::write_file`] syncs before returning);
+//!   2. the temp file is atomically renamed and the directory is fsynced
+//!      (renames are directory metadata — without this the manifest
+//!      rename could survive a crash that loses the data one);
+//!   3. the `LATEST` manifest (a text pointer; symlinks are not portable)
+//!      is written to a temp file, fsynced, atomically renamed over the
+//!      old manifest, and the directory is fsynced again.
+//! * **v2** — [`super::v2`]: per-node base+delta chains behind a
+//!   `MANIFEST`, written in parallel by the writer pool, with chain
+//!   compaction and reference-safe GC. Same discipline, sharded files.
 //!
 //! A crash at any point leaves the previously published checkpoint intact
-//! and observable; readers never see a torn file. Files rotate, keeping
-//! the most recent `keep` checkpoints.
+//! and observable; readers never see a torn file. [`DiskCheckpointer::load_latest`]
+//! auto-detects the directory's format (a `MANIFEST` marks v2), so a v1
+//! directory keeps loading after the engine switches to v2, and
+//! [`DiskCheckpointer::load_latest_node`] restores one node by reading
+//! only that node's chain (v2) — the partial-restore read path.
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
-use super::CheckpointStore;
+use super::v2::{self, V2Engine};
+use super::writer_pool::WriterPool;
+use super::{fsync_dir, write_durable, CheckpointStore};
+use crate::cluster::NodeSnapshot;
+use crate::config::CkptFormat;
 
-/// Durably publish `store` into `dir` (see module docs for the ordering
-/// guarantees), then rotate old checkpoints down to `keep`.
+/// Durably publish `store` into `dir` as format v1 (see module docs for
+/// the ordering guarantees), then rotate old checkpoints down to `keep`.
 pub fn publish(dir: &Path, store: &CheckpointStore, keep: usize) -> Result<()> {
     let path = dir.join(format!("ckpt-{}.bin", store.step));
     let tmp = dir.join(format!(".ckpt-{}.tmp", store.step));
@@ -38,25 +46,35 @@ pub fn publish(dir: &Path, store: &CheckpointStore, keep: usize) -> Result<()> {
     // the LATEST rename below could become durable while the data rename
     // is lost, leaving a manifest pointing at nothing
     fsync_dir(dir)?;
-    // manifest: write-fsync-rename so LATEST is never torn and only ever
-    // points at fully durable data
-    let latest_tmp = dir.join(".LATEST.tmp");
-    {
-        let mut f = std::fs::File::create(&latest_tmp)
-            .with_context(|| format!("creating {}", latest_tmp.display()))?;
+    // manifest: write-fsync-rename (the shared `write_durable` dance) so
+    // LATEST is never torn and only ever points at fully durable data
+    write_durable(dir, "LATEST", |w| {
         use std::io::Write;
-        f.write_all(format!("ckpt-{}.bin\n", store.step).as_bytes())?;
-        f.sync_all().context("fsync LATEST manifest")?;
-    }
-    std::fs::rename(&latest_tmp, dir.join("LATEST"))?;
+        Ok(w.write_all(format!("ckpt-{}.bin\n", store.step).as_bytes())?)
+    })?;
     fsync_dir(dir)?;
+    // a v1 publish reclaims the directory from format v2: readers prefer
+    // a MANIFEST, so a stale one left by an earlier v2 run would
+    // permanently shadow every newer v1 checkpoint after a format
+    // switch-back. Remove it only now that LATEST is durable — and with
+    // the manifest gone the chain files are unreadable dead weight (a
+    // v2 base set can be the full model's size), so reclaim them too;
+    // v1's own gc() only rotates ckpt-*.bin and would leak them forever.
+    let manifest = dir.join(v2::MANIFEST);
+    if manifest.exists() {
+        std::fs::remove_file(&manifest).ok();
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for e in entries.flatten() {
+                if let Ok(name) = e.file_name().into_string() {
+                    if v2::is_v2_data_file(&name) {
+                        std::fs::remove_file(e.path()).ok();
+                    }
+                }
+            }
+        }
+        fsync_dir(dir).ok();
+    }
     gc(dir, keep.max(1))
-}
-
-fn fsync_dir(dir: &Path) -> Result<()> {
-    std::fs::File::open(dir)
-        .and_then(|d| d.sync_all())
-        .with_context(|| format!("fsync checkpoint dir {}", dir.display()))
 }
 
 enum Msg {
@@ -66,34 +84,79 @@ enum Msg {
 
 /// Standalone background checkpoint-to-disk writer (the coordinator now
 /// uses the richer `CheckpointPipeline`; this stays as the minimal
-/// submit-a-snapshot API and the `load_latest` reader).
+/// submit-a-snapshot API and the format-detecting reader).
+///
+/// With [`CkptFormat::V2`] the worker owns a [`V2Engine`]: each submitted
+/// store's **dirty sets** decide what hits disk — a fully-dirty or
+/// chain-less node gets a base, a row-dirty node a delta, a clean node
+/// nothing — so callers that submit incremental snapshots get
+/// incremental publishes (call [`CheckpointStore::clear_dirty`] on your
+/// copy after each submit so the next one carries only changes since
+/// then). `keep` only applies to v1 rotation; a v2 directory holds
+/// exactly one live chain per node (plus nothing unreferenced, by GC).
 pub struct DiskCheckpointer {
     dir: PathBuf,
     tx: mpsc::Sender<Msg>,
-    worker: Option<JoinHandle<Result<()>>>,
+    /// the worker returns its v2 engine on drain, so a flush/respawn
+    /// cycle keeps the chain state (incremental submits stay incremental)
+    worker: Option<JoinHandle<Result<Option<V2Engine>>>>,
     keep: usize,
+    format: CkptFormat,
+    compact_frac: f64,
 }
 
 impl DiskCheckpointer {
+    /// A v1 (monolithic-file) checkpointer — the historical default.
     pub fn new(dir: &str, keep: usize) -> Result<Self> {
+        Self::new_with_format(dir, keep, CkptFormat::V1, 0.5)
+    }
+
+    /// A checkpointer publishing in the given format. `compact_frac` is
+    /// the v2 chain-compaction threshold (ignored for v1).
+    pub fn new_with_format(
+        dir: &str,
+        keep: usize,
+        format: CkptFormat,
+        compact_frac: f64,
+    ) -> Result<Self> {
         let dir = PathBuf::from(dir);
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
         let keep_n = keep.max(1);
-        let (tx, worker) = Self::spawn_worker(dir.clone(), keep_n);
-        Ok(Self { dir, tx, worker: Some(worker), keep: keep_n })
+        let (tx, worker) =
+            Self::spawn_worker(dir.clone(), keep_n, format, compact_frac, None);
+        Ok(Self { dir, tx, worker: Some(worker), keep: keep_n, format, compact_frac })
     }
 
+    /// `engine` carries the v2 chain state across a flush's drain/respawn
+    /// cycle (None on first spawn, or for v1).
     fn spawn_worker(
         dir: PathBuf,
         keep: usize,
-    ) -> (mpsc::Sender<Msg>, JoinHandle<Result<()>>) {
+        format: CkptFormat,
+        compact_frac: f64,
+        engine: Option<V2Engine>,
+    ) -> (mpsc::Sender<Msg>, JoinHandle<Result<Option<V2Engine>>>) {
         let (tx, rx) = mpsc::channel::<Msg>();
-        let worker = std::thread::spawn(move || -> Result<()> {
-            while let Ok(Msg::Write(store)) = rx.recv() {
-                publish(&dir, &store, keep)?;
+        let worker = std::thread::spawn(move || -> Result<Option<V2Engine>> {
+            let mut engine = match (format, engine) {
+                (CkptFormat::V1, _) => None,
+                (CkptFormat::V2, Some(e)) => Some(e),
+                (CkptFormat::V2, None) => Some(V2Engine::open(
+                    &dir,
+                    WriterPool::for_nodes(usize::MAX),
+                    compact_frac,
+                )?),
+            };
+            while let Ok(Msg::Write(mut store)) = rx.recv() {
+                match engine.as_mut() {
+                    None => publish(&dir, &store, keep)?,
+                    Some(e) => {
+                        e.publish(&mut store, true, false)?;
+                    }
+                }
             }
-            Ok(())
+            Ok(engine)
         });
         (tx, worker)
     }
@@ -107,26 +170,79 @@ impl DiskCheckpointer {
 
     /// Wait for all queued writes to land (checkpoint barrier).
     pub fn flush(&mut self) -> Result<()> {
-        // drain by restarting the worker: send Stop, join, respawn
+        // drain by restarting the worker: send Stop, join (recovering the
+        // v2 engine so its chains keep extending), respawn
         self.tx.send(Msg::Stop).ok();
+        let mut engine = None;
         if let Some(w) = self.worker.take() {
-            w.join().map_err(|_| anyhow::anyhow!("writer panicked"))??;
+            engine = w.join().map_err(|_| anyhow::anyhow!("writer panicked"))??;
         }
-        let (tx, worker) = Self::spawn_worker(self.dir.clone(), self.keep);
+        let (tx, worker) = Self::spawn_worker(
+            self.dir.clone(),
+            self.keep,
+            self.format,
+            self.compact_frac,
+            engine,
+        );
         self.worker = Some(worker);
         self.tx = tx;
         Ok(())
     }
 
-    /// Load the most recent checkpoint in `dir`, if any.
+    /// Load the most recent checkpoint in `dir`, if any. Auto-detects the
+    /// format: a `MANIFEST` marks a v2 chain directory, a `LATEST`
+    /// pointer the v1 layout — so readers survive a format migration.
     pub fn load_latest(dir: &str) -> Result<Option<CheckpointStore>> {
-        let latest = Path::new(dir).join("LATEST");
+        let dir_path = Path::new(dir);
+        if dir_path.join(v2::MANIFEST).exists() {
+            return v2::load_store(dir_path);
+        }
+        let latest = dir_path.join("LATEST");
         if !latest.exists() {
             return Ok(None);
         }
         let name = std::fs::read_to_string(&latest)?;
-        let path = Path::new(dir).join(name.trim());
+        let path = dir_path.join(name.trim());
         Ok(Some(CheckpointStore::read_file(&path)?))
+    }
+
+    /// Load ONE node's latest durable state (plus the marker position it
+    /// was published under). On a v2 directory this reads only that
+    /// node's base+delta chain — the whole point of the sharded layout;
+    /// on v1 it falls back to reading the monolithic file and slicing the
+    /// node out.
+    pub fn load_latest_node(
+        dir: &str,
+        node: usize,
+    ) -> Result<Option<(NodeSnapshot, u64, u64)>> {
+        let dir_path = Path::new(dir);
+        if dir_path.join(v2::MANIFEST).exists() {
+            return Ok(v2::load_node(dir_path, node)?.map(
+                |((shards, opt), step, samples)| {
+                    (NodeSnapshot { node, shards, opt }, step, samples)
+                },
+            ));
+        }
+        match Self::load_latest(dir)? {
+            None => Ok(None),
+            Some(store) => {
+                ensure!(
+                    node < store.node_states().len(),
+                    "checkpoint covers {} nodes, asked for node {node}",
+                    store.node_states().len()
+                );
+                let st = &store.node_states()[node];
+                Ok(Some((
+                    NodeSnapshot {
+                        node,
+                        shards: st.shards().to_vec(),
+                        opt: st.opt().to_vec(),
+                    },
+                    store.step,
+                    store.samples,
+                )))
+            }
+        }
     }
 }
 
@@ -188,6 +304,103 @@ mod tests {
     }
 
     #[test]
+    fn v2_writes_chains_and_load_latest_autodetects() {
+        let dir = tmpdir("v2");
+        let mut w =
+            DiskCheckpointer::new_with_format(&dir, 3, CkptFormat::V2, 0.5).unwrap();
+        // first submit: fresh dir → bases; second: fully-dirty snapshot
+        // (independent full snapshots re-base, like v1 full saves)
+        let c = PsCluster::new(vec![TableInfo { rows: 12, dim: 4 }], 2, 1);
+        let mut s = CheckpointStore::initial(&c, vec![vec![1.0]]);
+        s.full_save(&c, vec![vec![1.0]], 1, 128);
+        w.submit(s.clone()).unwrap();
+        // a flush must NOT lose the engine's chain state: the next
+        // incremental submit still publishes a delta, not a re-base
+        w.flush().unwrap();
+        // incremental submit: only row 3 dirty relative to the last one
+        // (the submitted clone kept its own dirty flags; reset ours to
+        // model "changes since the previous submit" — the public half of
+        // the incremental-submit contract)
+        s.clear_dirty();
+        s.save_rows(&c, 0, &[3]);
+        s.mark_position(vec![vec![2.0]], 2, 256);
+        w.submit(s.clone()).unwrap();
+        w.flush().unwrap();
+        assert!(Path::new(&dir).join(super::v2::MANIFEST).exists());
+        let latest = DiskCheckpointer::load_latest(&dir).unwrap().unwrap();
+        assert_eq!(latest, s, "v2 chain replay through the auto-detecting loader");
+        assert_eq!(latest.step, 2);
+        assert_eq!(latest.mlp, vec![vec![2.0]]);
+        // row 3 lives on node 1 (3 % 2): its chain gained a delta
+        let m = super::v2::read_manifest(Path::new(&dir)).unwrap().unwrap();
+        assert_eq!(m.chains[1].deltas.len(), 1);
+        assert!(m.chains[0].deltas.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_latest_node_reads_one_chain_on_v2_and_slices_on_v1() {
+        // v1 directory
+        let dir1 = tmpdir("node_v1");
+        let mut w = DiskCheckpointer::new(&dir1, 2).unwrap();
+        w.submit(store(5)).unwrap();
+        w.flush().unwrap();
+        let (snap, step, samples) =
+            DiskCheckpointer::load_latest_node(&dir1, 1).unwrap().unwrap();
+        assert_eq!(snap.node, 1);
+        assert_eq!((step, samples), (5, 640));
+        let full = DiskCheckpointer::load_latest(&dir1).unwrap().unwrap();
+        assert_eq!(snap.shards, full.node_states()[1].shards());
+        assert!(DiskCheckpointer::load_latest_node(&dir1, 9).is_err(),
+                "out-of-range node must be an error, not a panic");
+        // v2 directory: corrupt node 0's base; node 1 must still load
+        let dir2 = tmpdir("node_v2");
+        let mut w2 =
+            DiskCheckpointer::new_with_format(&dir2, 2, CkptFormat::V2, 0.5).unwrap();
+        w2.submit(store(7)).unwrap();
+        w2.flush().unwrap();
+        let m = super::v2::read_manifest(Path::new(&dir2)).unwrap().unwrap();
+        let base0 = Path::new(&dir2).join(&m.chains[0].base);
+        let bytes = std::fs::read(&base0).unwrap();
+        std::fs::write(&base0, &bytes[..bytes.len() / 2]).unwrap();
+        let (snap1, _, _) =
+            DiskCheckpointer::load_latest_node(&dir2, 1).unwrap().unwrap();
+        assert_eq!(snap1.node, 1);
+        assert!(DiskCheckpointer::load_latest_node(&dir2, 0).is_err(),
+                "node 0's torn chain fails its own load");
+        std::fs::remove_dir_all(&dir1).ok();
+        std::fs::remove_dir_all(&dir2).ok();
+    }
+
+    #[test]
+    fn v1_publish_reclaims_a_v2_directory() {
+        // switch v2 → v1 on the same dir: the stale MANIFEST must not
+        // shadow the newer v1 checkpoint (readers prefer MANIFEST)
+        let dir = tmpdir("reclaim");
+        let mut w2 =
+            DiskCheckpointer::new_with_format(&dir, 2, CkptFormat::V2, 0.5).unwrap();
+        w2.submit(store(3)).unwrap();
+        w2.flush().unwrap();
+        drop(w2);
+        assert!(Path::new(&dir).join(super::v2::MANIFEST).exists());
+        let mut w1 = DiskCheckpointer::new(&dir, 2).unwrap();
+        w1.submit(store(9)).unwrap();
+        w1.flush().unwrap();
+        assert!(!Path::new(&dir).join(super::v2::MANIFEST).exists(),
+                "the v1 publish must reclaim the directory");
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok()?.file_name().into_string().ok())
+            .filter(|n| super::v2::is_v2_data_file(n))
+            .collect();
+        assert!(leftovers.is_empty(),
+                "orphaned v2 chain files must be reclaimed: {leftovers:?}");
+        let latest = DiskCheckpointer::load_latest(&dir).unwrap().unwrap();
+        assert_eq!(latest.step, 9, "the NEWER v1 checkpoint must win");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn rotation_keeps_only_newest() {
         let dir = tmpdir("b");
         let mut w = DiskCheckpointer::new(&dir, 2).unwrap();
@@ -211,6 +424,7 @@ mod tests {
         let dir = tmpdir("c");
         std::fs::create_dir_all(&dir).unwrap();
         assert!(DiskCheckpointer::load_latest(&dir).unwrap().is_none());
+        assert!(DiskCheckpointer::load_latest_node(&dir, 0).unwrap().is_none());
         std::fs::remove_dir_all(&dir).ok();
     }
 

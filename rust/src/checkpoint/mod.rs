@@ -15,6 +15,15 @@
 //! runtimes (checkpoints taken on one restore onto the other — row routing
 //! is part of the trait contract).
 //!
+//! ## Sharded mirror + dirty tracking
+//!
+//! The mirror is a vector of per-node [`ShardState`] units — the same
+//! shard-granular layout the cluster itself uses. Every row-level or
+//! node-level application marks the touched local rows *dirty*; the dirty
+//! sets are what checkpoint **format v2** ([`v2`]) turns into per-node
+//! delta files, so an incremental publish writes only what changed since
+//! the last durable publish instead of rewriting every node's mirror.
+//!
 //! ## Asynchronous pipeline
 //!
 //! The coordinator no longer applies saves to the mirror inline. Row and
@@ -27,29 +36,227 @@
 //! before it.
 //!
 //! **Crash-consistency rule:** a durable checkpoint is only *published*
-//! after the writer thread has fsynced the data file and then the `LATEST`
-//! manifest (see [`disk`]); a crash mid-write leaves the previous
-//! checkpoint as the published one, never a torn file.
+//! after the writer thread has fsynced the data file(s) and then the
+//! `LATEST` manifest (v1) / `MANIFEST` chain index (v2) — see [`disk`]
+//! and [`v2`]; a crash mid-write leaves the previous checkpoint as the
+//! published one, never a torn file.
 
 pub mod async_pipeline;
 pub mod disk;
 pub mod tracker;
+pub mod v2;
+pub mod writer_pool;
 
-use std::io::{Read, Write};
+use std::io::{BufWriter, Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::{PsControlPlane, PsDataPlane};
+use crate::embedding::TableInfo;
 
-/// Snapshot store (the emulated persistent checkpoint target).
+/// Fsync a checkpoint directory — renames are directory-metadata updates,
+/// so every publish path (v1 and v2) must make them durable before a
+/// manifest can name the renamed files. The ONE copy of this primitive,
+/// shared so the two formats' crash-consistency guarantees cannot drift.
+pub(crate) fn fsync_dir(dir: &Path) -> Result<()> {
+    std::fs::File::open(dir)
+        .and_then(|d| d.sync_all())
+        .with_context(|| format!("fsync checkpoint dir {}", dir.display()))
+}
+
+/// Write `name` durably: temp file → fsync → atomic rename. The caller
+/// fsyncs the directory before any manifest/pointer names the file.
+/// Returns the file's byte length. Shared by v1's `LATEST` pointer and
+/// every v2 file, so the write half of the crash-consistency discipline
+/// has one copy too.
+pub(crate) fn write_durable<F>(dir: &Path, name: &str, write: F) -> Result<u64>
+where
+    F: FnOnce(&mut BufWriter<std::fs::File>) -> Result<()>,
+{
+    let tmp = dir.join(format!(".{name}.tmp"));
+    let file = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    let mut w = BufWriter::new(file);
+    write(&mut w)?;
+    w.flush()?;
+    w.get_ref()
+        .sync_all()
+        .with_context(|| format!("fsync {}", tmp.display()))?;
+    let path = dir.join(name);
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("publishing {}", path.display()))?;
+    Ok(std::fs::metadata(&path)?.len())
+}
+
+// ---------------------------------------------------------------------------
+// logical checkpoint I/O volume
+// ---------------------------------------------------------------------------
+//
+// One shared set of byte formulas so the overhead ledger, the PLS cost
+// model, and the v2 on-disk encoder agree on what a save/restore moves.
+// These count *content* bytes (row payload + per-row bookkeeping), not
+// file headers — headers are O(tables) noise next to O(rows·dim) payload.
+
+/// Bytes one delta row record occupies: local row id + `dim` f32 values +
+/// one f32 optimizer accumulator (the v2 delta record shape).
+pub fn row_io_bytes(dim: usize) -> u64 {
+    4 + 4 * dim as u64 + 4
+}
+
+/// Bytes a `n_rows`-row delta of a `dim`-wide table occupies.
+pub fn rows_io_bytes(n_rows: usize, dim: usize) -> u64 {
+    n_rows as u64 * row_io_bytes(dim)
+}
+
+/// Content bytes of one whole table (values + opt state, no row ids —
+/// base files store rows positionally).
+pub fn table_io_bytes(rows: usize, dim: usize) -> u64 {
+    (rows * (dim + 1) * 4) as u64
+}
+
+/// Content bytes of the dense (MLP) parameters.
+pub fn mlp_io_bytes(mlp: &[Vec<f32>]) -> u64 {
+    mlp.iter().map(|p| p.len() as u64 * 4).sum()
+}
+
+/// Content bytes of a full checkpoint: every table + the dense params.
+pub fn full_content_io_bytes(tables: &[TableInfo], mlp: &[Vec<f32>]) -> u64 {
+    tables.iter().map(|t| table_io_bytes(t.rows, t.dim)).sum::<u64>() + mlp_io_bytes(mlp)
+}
+
+/// Content bytes of one node's slice of the mirror (what a partial
+/// restore of that node moves).
+pub fn node_content_io_bytes(tables: &[TableInfo], n_nodes: usize, node: usize) -> u64 {
+    tables
+        .iter()
+        .map(|t| table_io_bytes(crate::embedding::shard_rows(t.rows, n_nodes, node), t.dim))
+        .sum()
+}
+
+// ---------------------------------------------------------------------------
+// per-node shard state
+// ---------------------------------------------------------------------------
+
+/// One node's slice of the checkpoint mirror: per-table shards + optimizer
+/// accumulators, plus the *dirty set* — which local rows changed since the
+/// last durable publish. The unit of incremental persistence: format v2
+/// writes a node's dirty rows as a delta file and a fully-dirty (or
+/// chain-less) node as a fresh base file.
+#[derive(Clone, Debug)]
+pub struct ShardState {
+    /// shards[table], local_row-major [local_rows * dim]
+    shards: Vec<Vec<f32>>,
+    /// opt[table], one f32 per local row
+    opt: Vec<Vec<f32>>,
+    /// dirty[table][local_row]: changed since the last publish
+    dirty: Vec<Vec<bool>>,
+    /// dirty-row count per table (kept in sync with `dirty`)
+    dirty_count: Vec<usize>,
+}
+
+impl PartialEq for ShardState {
+    /// Content equality only — dirty bookkeeping is publication state,
+    /// not checkpoint content (a store read back from disk is clean).
+    fn eq(&self, other: &Self) -> bool {
+        self.shards == other.shards && self.opt == other.opt
+    }
+}
+
+impl ShardState {
+    /// Build one node's state from its shard/opt parts (clean).
+    pub fn from_parts(shards: Vec<Vec<f32>>, opt: Vec<Vec<f32>>) -> Self {
+        let dirty = opt.iter().map(|o| vec![false; o.len()]).collect();
+        let dirty_count = vec![0; opt.len()];
+        Self { shards, opt, dirty, dirty_count }
+    }
+
+    /// Per-table shard data, local_row-major.
+    pub fn shards(&self) -> &[Vec<f32>] {
+        &self.shards
+    }
+
+    /// Per-table optimizer accumulators (one f32 per local row).
+    pub fn opt(&self) -> &[Vec<f32>] {
+        &self.opt
+    }
+
+    fn mark_row_dirty(&mut self, table: usize, local: usize) {
+        if !self.dirty[table][local] {
+            self.dirty[table][local] = true;
+            self.dirty_count[table] += 1;
+        }
+    }
+
+    fn mark_all_dirty(&mut self) {
+        for (t, d) in self.dirty.iter_mut().enumerate() {
+            for f in d.iter_mut() {
+                *f = true;
+            }
+            self.dirty_count[t] = d.len();
+        }
+    }
+
+    /// Total dirty rows across tables.
+    pub fn dirty_row_count(&self) -> usize {
+        self.dirty_count.iter().sum()
+    }
+
+    /// True when every local row of every table is dirty (a delta would
+    /// be as large as a base).
+    pub fn fully_dirty(&self) -> bool {
+        self.dirty_count
+            .iter()
+            .zip(&self.dirty)
+            .all(|(&c, d)| c == d.len())
+    }
+
+    /// The dirty local rows of `table`, ascending.
+    pub fn dirty_rows(&self, table: usize) -> Vec<u32> {
+        self.dirty[table]
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &d)| d.then_some(i as u32))
+            .collect()
+    }
+
+    /// Forget this node's dirty marks (called after a successful durable
+    /// publish — the chain now covers everything).
+    pub fn clear_dirty(&mut self) {
+        for (t, d) in self.dirty.iter_mut().enumerate() {
+            for f in d.iter_mut() {
+                *f = false;
+            }
+            self.dirty_count[t] = 0;
+        }
+    }
+
+    /// Content bytes a delta of the current dirty set would occupy.
+    pub fn dirty_io_bytes(&self) -> u64 {
+        self.dirty_count
+            .iter()
+            .zip(&self.shards)
+            .zip(&self.opt)
+            .map(|((&c, s), o)| {
+                let dim = if o.is_empty() { 0 } else { s.len() / o.len() };
+                rows_io_bytes(c, dim)
+            })
+            .sum()
+    }
+
+    /// Content bytes of this node's full state (a base file's payload).
+    pub fn content_io_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.len() as u64 * 4).sum::<u64>()
+            + self.opt.iter().map(|o| o.len() as u64 * 4).sum::<u64>()
+    }
+}
+
+/// Snapshot store (the emulated persistent checkpoint target), sharded
+/// into per-node [`ShardState`] units.
 #[derive(Clone, Debug)]
 pub struct CheckpointStore {
-    /// mirror[node][table], identical layout to the cluster shards
-    shards: Vec<Vec<Vec<f32>>>,
-    /// optimizer-state mirror[node][table] (row-wise accumulators);
-    /// paper §2.2: checkpoints include the optimizer state
-    opt: Vec<Vec<Vec<f32>>>,
+    /// mirror[node], identical layout to the cluster shards
+    nodes: Vec<ShardState>,
     /// MLP parameters at the last save
     pub mlp: Vec<Vec<f32>>,
     /// training position at the last save that updated the PLS marker
@@ -57,22 +264,63 @@ pub struct CheckpointStore {
     pub samples: u64,
 }
 
+impl PartialEq for CheckpointStore {
+    fn eq(&self, other: &Self) -> bool {
+        self.nodes == other.nodes
+            && self.mlp == other.mlp
+            && self.step == other.step
+            && self.samples == other.samples
+    }
+}
+
 impl CheckpointStore {
     /// Initial checkpoint = the cluster's initial state (epoch 0).
     pub fn initial<B: PsControlPlane + ?Sized>(cluster: &B, mlp: Vec<Vec<f32>>) -> Self {
-        let mut shards = Vec::with_capacity(cluster.n_nodes());
-        let mut opt = Vec::with_capacity(cluster.n_nodes());
-        for n in 0..cluster.n_nodes() {
-            let snap = cluster.snapshot_node(n);
-            shards.push(snap.shards);
-            opt.push(snap.opt);
+        let nodes = (0..cluster.n_nodes())
+            .map(|n| {
+                let snap = cluster.snapshot_node(n);
+                ShardState::from_parts(snap.shards, snap.opt)
+            })
+            .collect();
+        Self { nodes, mlp, step: 0, samples: 0 }
+    }
+
+    /// Assemble a store from already-loaded per-node states (the v2 chain
+    /// loader's constructor).
+    pub fn from_node_states(
+        nodes: Vec<ShardState>,
+        mlp: Vec<Vec<f32>>,
+        step: u64,
+        samples: u64,
+    ) -> Self {
+        Self { nodes, mlp, step, samples }
+    }
+
+    /// The per-node mirror units.
+    pub fn node_states(&self) -> &[ShardState] {
+        &self.nodes
+    }
+
+    /// Mutable access for the publish path (dirty-set export/clear).
+    pub(crate) fn node_states_mut(&mut self) -> &mut [ShardState] {
+        &mut self.nodes
+    }
+
+    /// Forget every node's dirty marks. The incremental-submit contract
+    /// of `disk::DiskCheckpointer` (format v2) needs this: a caller
+    /// keeping its own store snapshot resets the dirty sets after each
+    /// submit so the next submit carries only "changes since then".
+    /// (The pipeline/engine clear dirty themselves on publish.)
+    pub fn clear_dirty(&mut self) {
+        for st in &mut self.nodes {
+            st.clear_dirty();
         }
-        Self { shards, opt, mlp, step: 0, samples: 0 }
     }
 
     /// Full checkpoint: mirror every shard + MLP params + position.
     /// (Synchronous path — the coordinator's async equivalent is
-    /// [`async_pipeline::CheckpointPipeline::full_save`].)
+    /// [`async_pipeline::CheckpointPipeline::full_save`].) Marks every
+    /// node fully dirty: the next incremental publish re-bases it.
     pub fn full_save<B: PsControlPlane + ?Sized>(
         &mut self,
         cluster: &B,
@@ -82,8 +330,7 @@ impl CheckpointStore {
     ) {
         for n in 0..cluster.n_nodes() {
             let snap = cluster.snapshot_node(n);
-            self.shards[n] = snap.shards;
-            self.opt[n] = snap.opt;
+            self.apply_node(snap);
         }
         self.mlp = mlp;
         self.step = step;
@@ -92,8 +339,10 @@ impl CheckpointStore {
 
     /// Apply one captured node snapshot to the mirror (writer-thread path).
     pub fn apply_node(&mut self, snap: crate::cluster::NodeSnapshot) {
-        self.shards[snap.node] = snap.shards;
-        self.opt[snap.node] = snap.opt;
+        let node = &mut self.nodes[snap.node];
+        node.shards = snap.shards;
+        node.opt = snap.opt;
+        node.mark_all_dirty();
     }
 
     /// Priority (partial-content) save: copy only `rows` of `table` into
@@ -105,7 +354,7 @@ impl CheckpointStore {
     }
 
     /// Apply captured row data (`data` in `rows` order, [rows.len() * dim])
-    /// to the mirror (writer-thread path).
+    /// to the mirror (writer-thread path). Touched rows become dirty.
     pub fn apply_rows(
         &mut self,
         table: usize,
@@ -114,12 +363,14 @@ impl CheckpointStore {
         data: &[f32],
         opt: &[f32],
     ) {
-        let n_nodes = self.shards.len();
+        let n_nodes = self.nodes.len();
         for (i, &row) in rows.iter().enumerate() {
             let (node, local) = crate::cluster::route_row(row as usize, n_nodes);
-            self.shards[node][table][local * dim..(local + 1) * dim]
+            let st = &mut self.nodes[node];
+            st.shards[table][local * dim..(local + 1) * dim]
                 .copy_from_slice(&data[i * dim..(i + 1) * dim]);
-            self.opt[node][table][local] = opt[i];
+            st.opt[table][local] = opt[i];
+            st.mark_row_dirty(table, local);
         }
     }
 
@@ -142,26 +393,41 @@ impl CheckpointStore {
     /// PARTIAL recovery: restore only `node`'s shards; everyone else keeps
     /// their progress.
     pub fn restore_node<B: PsControlPlane + ?Sized>(&self, cluster: &B, node: usize) {
-        cluster.load_node(node, &self.shards[node], &self.opt[node]);
+        cluster.load_node(node, &self.nodes[node].shards, &self.nodes[node].opt);
     }
 
     /// FULL recovery: restore every shard; returns (mlp, step, samples) for
     /// the trainer to rewind to.
     pub fn restore_all<B: PsControlPlane + ?Sized>(&self, cluster: &B) -> (Vec<Vec<f32>>, u64, u64) {
-        for n in 0..cluster.n_nodes() {
-            cluster.load_node(n, &self.shards[n], &self.opt[n]);
+        for n in 0..self.nodes.len() {
+            self.restore_node(cluster, n);
         }
         (self.mlp.clone(), self.step, self.samples)
     }
 
-    /// Bytes a full checkpoint occupies (tables + MLP).
+    /// Exact byte length of the v1 file [`CheckpointStore::write_file`]
+    /// emits: the 28-byte header (magic + position marker + table/node
+    /// counts), every shard/opt/MLP vector's payload AND its 4-byte
+    /// length prefix. The PLS cost model sizes saves off this, so it must
+    /// match what actually hits disk (asserted by a unit test).
     pub fn size_bytes(&self) -> usize {
-        let t: usize = self.shards.iter()
-            .flat_map(|n| n.iter().map(|s| s.len() * 4)).sum();
-        t + self.mlp.iter().map(|p| p.len() * 4).sum::<usize>()
+        let mut b = 4 + 8 + 8 + 4 + 4; // magic, step, samples, n_nodes, n_tables
+        for node in &self.nodes {
+            for s in &node.shards {
+                b += 4 + s.len() * 4;
+            }
+            for o in &node.opt {
+                b += 4 + o.len() * 4;
+            }
+        }
+        b += 4; // MLP vector count
+        for p in &self.mlp {
+            b += 4 + p.len() * 4;
+        }
+        b
     }
 
-    // -- on-disk persistence ------------------------------------------------
+    // -- on-disk persistence (format v1: one monolithic file) ----------------
 
     const MAGIC: u32 = 0x4350_5232; // "CPR2"
 
@@ -172,16 +438,16 @@ impl CheckpointStore {
         w32(&mut f, Self::MAGIC)?;
         w64(&mut f, self.step)?;
         w64(&mut f, self.samples)?;
-        w32(&mut f, self.shards.len() as u32)?;
-        w32(&mut f, self.shards.first().map_or(0, |n| n.len()) as u32)?;
-        for node in &self.shards {
-            for shard in node {
+        w32(&mut f, self.nodes.len() as u32)?;
+        w32(&mut f, self.nodes.first().map_or(0, |n| n.shards.len()) as u32)?;
+        for node in &self.nodes {
+            for shard in &node.shards {
                 w32(&mut f, shard.len() as u32)?;
                 wf32s(&mut f, shard)?;
             }
         }
-        for node in &self.opt {
-            for st in node {
+        for node in &self.nodes {
+            for st in &node.opt {
                 w32(&mut f, st.len() as u32)?;
                 wf32s(&mut f, st)?;
             }
@@ -234,19 +500,24 @@ impl CheckpointStore {
             let len = r32(&mut f)? as usize;
             mlp.push(rf32s(&mut f, len)?);
         }
-        Ok(Self { shards, opt, mlp, step, samples })
+        let nodes = shards
+            .into_iter()
+            .zip(opt)
+            .map(|(s, o)| ShardState::from_parts(s, o))
+            .collect();
+        Ok(Self { nodes, mlp, step, samples })
     }
 }
 
-fn w32<W: Write>(w: &mut W, v: u32) -> Result<()> {
+pub(crate) fn w32<W: Write>(w: &mut W, v: u32) -> Result<()> {
     Ok(w.write_all(&v.to_le_bytes())?)
 }
 
-fn w64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+pub(crate) fn w64<W: Write>(w: &mut W, v: u64) -> Result<()> {
     Ok(w.write_all(&v.to_le_bytes())?)
 }
 
-fn wf32s<W: Write>(w: &mut W, v: &[f32]) -> Result<()> {
+pub(crate) fn wf32s<W: Write>(w: &mut W, v: &[f32]) -> Result<()> {
     // SAFETY: f32 slice reinterpreted as bytes (little-endian hosts only,
     // which is all this image targets)
     let bytes = unsafe {
@@ -255,19 +526,19 @@ fn wf32s<W: Write>(w: &mut W, v: &[f32]) -> Result<()> {
     Ok(w.write_all(bytes)?)
 }
 
-fn r32<R: Read>(r: &mut R) -> Result<u32> {
+pub(crate) fn r32<R: Read>(r: &mut R) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
 }
 
-fn r64<R: Read>(r: &mut R) -> Result<u64> {
+pub(crate) fn r64<R: Read>(r: &mut R) -> Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
 }
 
-fn rf32s<R: Read>(r: &mut R, len: usize) -> Result<Vec<f32>> {
+pub(crate) fn rf32s<R: Read>(r: &mut R, len: usize) -> Result<Vec<f32>> {
     let mut v = vec![0f32; len];
     let bytes = unsafe {
         std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, len * 4)
@@ -386,8 +657,27 @@ mod tests {
         assert_eq!(back.step, 42);
         assert_eq!(back.samples, 5376);
         assert_eq!(back.mlp, store.mlp);
-        assert_eq!(back.shards, store.shards);
-        assert_eq!(back.opt, store.opt);
+        assert_eq!(back, store, "content equality across the disk roundtrip");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn size_bytes_matches_written_file_exactly() {
+        // the PLS save-cost estimate sizes checkpoints off size_bytes; it
+        // must equal what write_file actually emits (header + length
+        // prefixes + payload — previously the mark position, the length
+        // prefixes, and the whole optimizer mirror were missing)
+        let c = cluster();
+        perturb(&c, 20);
+        let mut store = CheckpointStore::initial(&c, vec![vec![0.5; 13], vec![]]);
+        store.full_save(&c, vec![vec![1.0; 9], vec![2.0; 3]], 7, 896);
+        let dir = std::env::temp_dir().join("cpr_ckpt_size");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sized.bin");
+        store.write_file(&path).unwrap();
+        let on_disk = std::fs::metadata(&path).unwrap().len() as usize;
+        assert_eq!(store.size_bytes(), on_disk,
+                   "size_bytes must match the emitted file length");
         std::fs::remove_file(&path).ok();
     }
 
@@ -399,6 +689,33 @@ mod tests {
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(CheckpointStore::read_file(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn dirty_tracking_follows_row_and_node_applications() {
+        let c = cluster();
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        assert_eq!(store.node_states().iter()
+                       .map(ShardState::dirty_row_count).sum::<usize>(),
+                   0, "initial mirror is clean");
+        perturb(&c, 15);
+        store.save_rows(&c, 0, &[5, 8, 2]); // 5,8 → node 2; 2 → node 2? 2%3==2
+        let n2 = &store.node_states()[2];
+        assert_eq!(n2.dirty_rows(0), vec![0, 1, 2],
+                   "locals 5/3=1, 8/3=2, 2/3=0 of node 2");
+        assert_eq!(n2.dirty_row_count(), 3);
+        assert!(!n2.fully_dirty());
+        // a full node application marks everything dirty
+        store.apply_node(PsControlPlane::snapshot_node(&c, 1));
+        assert!(store.node_states()[1].fully_dirty());
+        // clearing resets the delta unit
+        store.node_states_mut()[2].clear_dirty();
+        assert_eq!(store.node_states()[2].dirty_row_count(), 0);
+        assert_eq!(store.node_states()[1].dirty_io_bytes(),
+                   store.node_states()[1].content_io_bytes()
+                       + 4 * store.node_states()[1].opt()
+                             .iter().map(Vec::len).sum::<usize>() as u64,
+                   "fully dirty delta = content + one row id per row");
     }
 
     #[test]

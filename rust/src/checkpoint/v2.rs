@@ -1,0 +1,1055 @@
+//! Checkpoint **format v2**: per-node base + delta chains behind a
+//! `MANIFEST`.
+//!
+//! Format v1 ([`super::disk::publish`]) rewrites the *whole*
+//! [`CheckpointStore`] into one monolithic file on every position-marking
+//! save — a CPR-MFU minor save that refreshed the top-k rows of each
+//! table still pays for every node's full dense mirror, and restoring one
+//! failed node reads everything. v2 makes the durable layout match the
+//! sharded mirror (Check-N-Run-style differential checkpointing, ECRM's
+//! per-shard durability unit):
+//!
+//! ```text
+//! dir/
+//!   MANIFEST                  text index: the LIVE chain per node + meta
+//!   meta-<seq>.bin            position marker (step/samples) + MLP params
+//!   node<N>-base-<seq>.bin    full state of node N (positional rows)
+//!   node<N>-delta-<seq>.bin   dirty rows of node N: ids + values + opt
+//! ```
+//!
+//! * A node's durable state is its **chain**: one base plus the ordered
+//!   deltas after it; replaying the chain reproduces the node's mirror
+//!   slice exactly (row ids are node-local, so a chain never references
+//!   another node's files — restoring node N reads only node N's chain).
+//! * A publish writes, per node, either nothing (clean), a **delta** of
+//!   the mirror's dirty rows, or a fresh **base** — when the node has no
+//!   chain yet, is fully dirty, the caller forces a re-base (priority
+//!   majors), or the chain would exceed the **compaction** threshold
+//!   (`delta_bytes > compact_frac × base_bytes` — bounding both restore
+//!   replay length and dead bytes on disk).
+//! * Node files are written in parallel by the
+//!   [`super::writer_pool::WriterPool`] (one job per node), each with the
+//!   same durability discipline as v1: temp file → fsync → atomic rename,
+//!   then one directory fsync for the batch, then the `MANIFEST` is
+//!   written (temp → fsync → rename → dir fsync). **A file becomes part
+//!   of the checkpoint only when a durable manifest names it**, so a
+//!   crash at any point — mid-delta, mid-meta, mid-manifest — leaves the
+//!   previous manifest's chains fully intact and readable.
+//! * **GC** runs only after the new manifest is durable and removes only
+//!   v2 files the live manifest does not reference (plus stale `.tmp`
+//!   files); it can never break a referenced chain, and it never touches
+//!   v1 files (`ckpt-*.bin` / `LATEST`). A later **v1** publish reclaims
+//!   a shared directory by deleting the `MANIFEST` (readers prefer it)
+//!   and the now-unreadable chain files, so switching formats leaves
+//!   neither a stale shadow nor leaked disk.
+//! * An **inherited** manifest (left by a previous process) is only used
+//!   to continue the `seq` numbering: a new engine's mirror need not
+//!   match the old chains' content or shape, so its first publish
+//!   re-bases every node from the current mirror and GC reclaims the old
+//!   run's files — chains are only ever extended by the engine that
+//!   wrote them.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{BufReader, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::writer_pool::{WriteJob, WriterPool};
+use super::{
+    fsync_dir, r32, r64, rf32s, w32, w64, wf32s, write_durable, CheckpointStore,
+    ShardState,
+};
+
+const MAGIC_BASE: u32 = 0x4350_5242; // "CPRB"
+const MAGIC_DELTA: u32 = 0x4350_5244; // "CPRD"
+const MAGIC_META: u32 = 0x4350_524D; // "CPRM"
+const MANIFEST_HEADER: &str = "CPR-MANIFEST-V2";
+
+/// The manifest file name (presence of this file is how
+/// [`super::disk::DiskCheckpointer::load_latest`] detects a v2 directory).
+pub const MANIFEST: &str = "MANIFEST";
+
+/// The live chain of one node: a base file plus the deltas to replay on
+/// top, oldest first. File names are bare (no directory components).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeChain {
+    pub base: String,
+    pub deltas: Vec<String>,
+}
+
+/// The durable index: which files ARE the checkpoint right now.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    /// monotone publish sequence number (also embedded in file names)
+    pub seq: u64,
+    /// position marker + MLP params file
+    pub meta: String,
+    /// chains[node]
+    pub chains: Vec<NodeChain>,
+}
+
+impl Manifest {
+    fn to_text(&self) -> String {
+        let mut s = format!("{MANIFEST_HEADER}\nseq {}\nmeta {}\n", self.seq, self.meta);
+        for (n, c) in self.chains.iter().enumerate() {
+            s.push_str(&format!("node {n} {}", c.base));
+            for d in &c.deltas {
+                s.push(' ');
+                s.push_str(d);
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    fn parse(text: &str) -> Result<Manifest> {
+        let mut lines = text.lines();
+        ensure!(
+            lines.next() == Some(MANIFEST_HEADER),
+            "not a v2 checkpoint manifest"
+        );
+        let mut seq = None;
+        let mut meta = None;
+        let mut chains: Vec<NodeChain> = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("seq") => {
+                    seq = Some(
+                        parts
+                            .next()
+                            .context("manifest: seq value missing")?
+                            .parse::<u64>()
+                            .context("manifest: bad seq")?,
+                    );
+                }
+                Some("meta") => {
+                    meta = Some(parts.next().context("manifest: meta name missing")?.to_string());
+                }
+                Some("node") => {
+                    let idx: usize = parts
+                        .next()
+                        .context("manifest: node id missing")?
+                        .parse()
+                        .context("manifest: bad node id")?;
+                    ensure!(
+                        idx == chains.len(),
+                        "manifest: node lines out of order ({idx} after {})",
+                        chains.len()
+                    );
+                    let base = parts.next().context("manifest: base name missing")?.to_string();
+                    let deltas = parts.map(str::to_string).collect();
+                    chains.push(NodeChain { base, deltas });
+                }
+                other => bail!("manifest: unknown line kind {other:?}"),
+            }
+        }
+        Ok(Manifest {
+            seq: seq.context("manifest: seq line missing")?,
+            meta: meta.context("manifest: meta line missing")?,
+            chains,
+        })
+    }
+}
+
+/// One node's reconstructed state in cluster layout:
+/// (shards[table], opt[table]) — what [`CheckpointStore`]'s `ShardState`
+/// and the control plane's `load_node` both speak.
+pub type NodeStateParts = (Vec<Vec<f32>>, Vec<Vec<f32>>);
+
+/// One table's slice of a delta file: `locals[i]` holds row
+/// `data[i*dim..(i+1)*dim]` with optimizer accumulator `opt[i]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeltaTable {
+    pub dim: usize,
+    pub locals: Vec<u32>,
+    pub data: Vec<f32>,
+    pub opt: Vec<f32>,
+}
+
+/// Extract the dirty rows of one node as delta payloads (one per table).
+pub(crate) fn delta_tables(state: &ShardState) -> Vec<DeltaTable> {
+    (0..state.shards().len())
+        .map(|t| {
+            let shard = &state.shards()[t];
+            let opt = &state.opt()[t];
+            let dim = if opt.is_empty() { 0 } else { shard.len() / opt.len() };
+            let locals = state.dirty_rows(t);
+            let mut data = Vec::with_capacity(locals.len() * dim);
+            let mut od = Vec::with_capacity(locals.len());
+            for &lr in &locals {
+                let lr = lr as usize;
+                data.extend_from_slice(&shard[lr * dim..(lr + 1) * dim]);
+                od.push(opt[lr]);
+            }
+            DeltaTable { dim, locals, data, opt: od }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// durable file primitives (write_durable/fsync_dir live in super — one
+// copy of the crash-consistency discipline for both formats)
+// ---------------------------------------------------------------------------
+
+fn open_reader(path: &Path) -> Result<BufReader<std::fs::File>> {
+    Ok(BufReader::new(std::fs::File::open(path).with_context(|| {
+        format!("opening {}", path.display())
+    })?))
+}
+
+/// Write one node's full state as a base file.
+pub fn write_base(dir: &Path, name: &str, node: usize, state: &ShardState) -> Result<u64> {
+    write_durable(dir, name, |w| {
+        w32(w, MAGIC_BASE)?;
+        w32(w, node as u32)?;
+        w32(w, state.shards().len() as u32)?;
+        for shard in state.shards() {
+            w32(w, shard.len() as u32)?;
+            wf32s(w, shard)?;
+        }
+        for opt in state.opt() {
+            w32(w, opt.len() as u32)?;
+            wf32s(w, opt)?;
+        }
+        Ok(())
+    })
+}
+
+/// Read a base file back as (node, (shards, opt)). A truncated or
+/// foreign file is an error, never a partial result.
+pub fn read_base(path: &Path) -> Result<(usize, NodeStateParts)> {
+    let mut r = open_reader(path)?;
+    if r32(&mut r)? != MAGIC_BASE {
+        bail!("{} is not a v2 base file", path.display());
+    }
+    let node = r32(&mut r)? as usize;
+    let n_tables = r32(&mut r)? as usize;
+    let mut shards = Vec::with_capacity(n_tables);
+    for _ in 0..n_tables {
+        let len = r32(&mut r)? as usize;
+        shards.push(rf32s(&mut r, len).with_context(|| {
+            format!("truncated base file {}", path.display())
+        })?);
+    }
+    let mut opt = Vec::with_capacity(n_tables);
+    for _ in 0..n_tables {
+        let len = r32(&mut r)? as usize;
+        opt.push(rf32s(&mut r, len).with_context(|| {
+            format!("truncated base file {}", path.display())
+        })?);
+    }
+    Ok((node, (shards, opt)))
+}
+
+/// Write one node's dirty rows as a delta file.
+pub fn write_delta(dir: &Path, name: &str, node: usize, tables: &[DeltaTable]) -> Result<u64> {
+    write_durable(dir, name, |w| {
+        w32(w, MAGIC_DELTA)?;
+        w32(w, node as u32)?;
+        w32(w, tables.len() as u32)?;
+        for t in tables {
+            w32(w, t.locals.len() as u32)?;
+            w32(w, t.dim as u32)?;
+            for &lr in &t.locals {
+                w32(w, lr)?;
+            }
+            wf32s(w, &t.data)?;
+            wf32s(w, &t.opt)?;
+        }
+        Ok(())
+    })
+}
+
+/// Read a delta file back as (node, per-table payloads). Truncation is an
+/// error (the manifest only ever references fully-fsynced files, so a
+/// torn delta means external corruption, not a crash artifact).
+pub fn read_delta(path: &Path) -> Result<(usize, Vec<DeltaTable>)> {
+    let mut r = open_reader(path)?;
+    if r32(&mut r)? != MAGIC_DELTA {
+        bail!("{} is not a v2 delta file", path.display());
+    }
+    let node = r32(&mut r)? as usize;
+    let n_tables = r32(&mut r)? as usize;
+    let mut tables = Vec::with_capacity(n_tables);
+    for _ in 0..n_tables {
+        let n_rows = r32(&mut r)? as usize;
+        let dim = r32(&mut r)? as usize;
+        let mut locals = Vec::with_capacity(n_rows);
+        for _ in 0..n_rows {
+            locals.push(r32(&mut r)?);
+        }
+        let data = rf32s(&mut r, n_rows * dim)
+            .with_context(|| format!("truncated delta file {}", path.display()))?;
+        let opt = rf32s(&mut r, n_rows)
+            .with_context(|| format!("truncated delta file {}", path.display()))?;
+        tables.push(DeltaTable { dim, locals, data, opt });
+    }
+    Ok((node, tables))
+}
+
+/// Write the position marker + MLP params.
+pub fn write_meta(
+    dir: &Path,
+    name: &str,
+    mlp: &[Vec<f32>],
+    step: u64,
+    samples: u64,
+) -> Result<u64> {
+    write_durable(dir, name, |w| {
+        w32(w, MAGIC_META)?;
+        w64(w, step)?;
+        w64(w, samples)?;
+        w32(w, mlp.len() as u32)?;
+        for p in mlp {
+            w32(w, p.len() as u32)?;
+            wf32s(w, p)?;
+        }
+        Ok(())
+    })
+}
+
+/// Read a meta file back as (mlp, step, samples).
+pub fn read_meta(path: &Path) -> Result<(Vec<Vec<f32>>, u64, u64)> {
+    let mut r = open_reader(path)?;
+    if r32(&mut r)? != MAGIC_META {
+        bail!("{} is not a v2 meta file", path.display());
+    }
+    let step = r64(&mut r)?;
+    let samples = r64(&mut r)?;
+    let n_mlp = r32(&mut r)? as usize;
+    let mut mlp = Vec::with_capacity(n_mlp);
+    for _ in 0..n_mlp {
+        let len = r32(&mut r)? as usize;
+        mlp.push(rf32s(&mut r, len).with_context(|| {
+            format!("truncated meta file {}", path.display())
+        })?);
+    }
+    Ok((mlp, step, samples))
+}
+
+/// Read the live manifest, if the directory has one.
+pub fn read_manifest(dir: &Path) -> Result<Option<Manifest>> {
+    let path = dir.join(MANIFEST);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Manifest::parse(&text).map(Some)
+}
+
+fn write_manifest(dir: &Path, m: &Manifest) -> Result<()> {
+    write_durable(dir, MANIFEST, |w| Ok(w.write_all(m.to_text().as_bytes())?))?;
+    fsync_dir(dir)
+}
+
+// ---------------------------------------------------------------------------
+// chain loading
+// ---------------------------------------------------------------------------
+
+/// Reconstruct one node's state by replaying its chain: read the base,
+/// apply each delta in order. Touches ONLY this node's files.
+pub fn load_node_chain(
+    dir: &Path,
+    chain: &NodeChain,
+    expect_node: usize,
+) -> Result<NodeStateParts> {
+    let (node, (mut shards, mut opt)) = read_base(&dir.join(&chain.base))?;
+    ensure!(
+        node == expect_node,
+        "chain base {} belongs to node {node}, expected {expect_node}",
+        chain.base
+    );
+    for d in &chain.deltas {
+        let (dnode, tables) = read_delta(&dir.join(d))?;
+        ensure!(
+            dnode == expect_node,
+            "chain delta {d} belongs to node {dnode}, expected {expect_node}"
+        );
+        ensure!(
+            tables.len() == shards.len(),
+            "chain delta {d} has {} tables, base has {}",
+            tables.len(),
+            shards.len()
+        );
+        for (t, dt) in tables.iter().enumerate() {
+            if dt.locals.is_empty() {
+                continue;
+            }
+            // a structurally-valid delta can still disagree with its
+            // base (bit corruption, a chain stitched across layouts):
+            // reject it as an error, never index out of bounds or write
+            // rows at wrong offsets
+            let rows = opt[t].len();
+            let base_dim = if rows == 0 { 0 } else { shards[t].len() / rows };
+            ensure!(
+                dt.dim == base_dim,
+                "chain delta {d} table {t}: dim {} != base dim {base_dim}",
+                dt.dim
+            );
+            for (i, &lr) in dt.locals.iter().enumerate() {
+                let lr = lr as usize;
+                ensure!(
+                    lr < rows,
+                    "chain delta {d} table {t}: local row {lr} out of range \
+                     ({rows} rows)"
+                );
+                shards[t][lr * dt.dim..(lr + 1) * dt.dim]
+                    .copy_from_slice(&dt.data[i * dt.dim..(i + 1) * dt.dim]);
+                opt[t][lr] = dt.opt[i];
+            }
+        }
+    }
+    Ok((shards, opt))
+}
+
+/// Load the full store from a v2 directory (every node's chain + meta).
+/// `Ok(None)` when no manifest exists.
+pub fn load_store(dir: &Path) -> Result<Option<CheckpointStore>> {
+    let Some(m) = read_manifest(dir)? else {
+        return Ok(None);
+    };
+    let (mlp, step, samples) = read_meta(&dir.join(&m.meta))?;
+    let mut nodes = Vec::with_capacity(m.chains.len());
+    for (n, chain) in m.chains.iter().enumerate() {
+        let (shards, opt) = load_node_chain(dir, chain, n)?;
+        nodes.push(ShardState::from_parts(shards, opt));
+    }
+    Ok(Some(CheckpointStore::from_node_states(nodes, mlp, step, samples)))
+}
+
+/// Load ONE node's state (plus the marker position) by reading only that
+/// node's chain — the partial-restore read path: restoring a failed node
+/// does not touch any other node's files. `Ok(None)` when no manifest.
+pub fn load_node(
+    dir: &Path,
+    node: usize,
+) -> Result<Option<(NodeStateParts, u64, u64)>> {
+    let Some(m) = read_manifest(dir)? else {
+        return Ok(None);
+    };
+    ensure!(
+        node < m.chains.len(),
+        "manifest covers {} nodes, asked for node {node}",
+        m.chains.len()
+    );
+    let (_, step, samples) = read_meta(&dir.join(&m.meta))?;
+    let parts = load_node_chain(dir, &m.chains[node], node)?;
+    Ok(Some((parts, step, samples)))
+}
+
+// ---------------------------------------------------------------------------
+// the publish engine
+// ---------------------------------------------------------------------------
+
+/// What the engine decided to write for one node this publish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Action {
+    /// chain unchanged (node has no dirty rows)
+    Keep,
+    /// append a delta of the dirty rows
+    Delta,
+    /// start a fresh chain with a full base (no chain / fully dirty /
+    /// forced / compaction due)
+    Base,
+}
+
+/// The v2 publish engine: owns the manifest state of one checkpoint
+/// directory and turns a [`CheckpointStore`]'s dirty sets into durable
+/// base/delta chains. Single-owner — lives on the pipeline writer thread
+/// (or a bench/tool loop); the parallelism is inside
+/// [`V2Engine::publish`], which fans node files out over the
+/// [`WriterPool`].
+pub struct V2Engine {
+    dir: PathBuf,
+    pool: WriterPool,
+    compact_frac: f64,
+    manifest: Option<Manifest>,
+    /// false until this engine's first successful publish: an inherited
+    /// manifest (from a previous process) is used only to continue the
+    /// `seq` numbering — its chains are NEVER extended, because this
+    /// engine's mirror need not match the old chains' content or shape.
+    /// The first publish re-bases every node from the current mirror and
+    /// GC reclaims the previous run's files.
+    synced: bool,
+    /// byte length of every chain/meta file THIS engine wrote, so
+    /// compaction planning never re-stats the directory (chains are only
+    /// ever extended within one engine's lifetime — see `synced`).
+    sizes: HashMap<String, u64>,
+}
+
+impl V2Engine {
+    /// Open (or create) a v2 checkpoint directory, resuming its manifest
+    /// sequence if one exists. `compact_frac` is the chain-compaction
+    /// threshold (re-base a node when its pending chain's delta bytes
+    /// exceed `compact_frac × base_bytes`).
+    pub fn open(dir: &Path, pool: WriterPool, compact_frac: f64) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let manifest = read_manifest(dir)?;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            pool,
+            compact_frac,
+            manifest,
+            synced: false,
+            sizes: HashMap::new(),
+        })
+    }
+
+    /// The live manifest (None before the first publish into a fresh dir).
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.manifest.as_ref()
+    }
+
+    /// Durably publish the store's dirty state: per-node base/delta files
+    /// in parallel, then meta (when `update_meta`, or when none exists
+    /// yet), then the manifest, then GC. `force_base` re-bases every node
+    /// (priority majors). On success the store's dirty sets are cleared;
+    /// on error the previous manifest stays live and dirty sets stay set,
+    /// so the next publish retries the same content. Returns total bytes
+    /// written (node files + meta + manifest).
+    pub fn publish(
+        &mut self,
+        store: &mut CheckpointStore,
+        update_meta: bool,
+        force_base: bool,
+    ) -> Result<u64> {
+        let n_nodes = store.node_states().len();
+        // chains are only extendable when THIS engine published them
+        // (`synced`) for this cluster shape; an inherited or
+        // shape-mismatched manifest only continues the seq numbering —
+        // everything re-bases from the current mirror and the old files
+        // become garbage for GC
+        let prev = self
+            .manifest
+            .as_ref()
+            .filter(|m| self.synced && m.chains.len() == n_nodes);
+        let seq = self.manifest.as_ref().map_or(0, |m| m.seq) + 1;
+
+        // --- plan per-node actions (compaction needs chain sizes) ------
+        let mut actions = Vec::with_capacity(n_nodes);
+        for (n, st) in store.node_states().iter().enumerate() {
+            let action = match prev.map(|m| &m.chains[n]) {
+                None => Action::Base,
+                Some(_) if force_base || st.fully_dirty() => Action::Base,
+                Some(_) if st.dirty_row_count() == 0 => Action::Keep,
+                Some(chain) => {
+                    let base_bytes = self.file_size(&chain.base)?;
+                    let mut delta_bytes = st.dirty_io_bytes();
+                    for d in &chain.deltas {
+                        delta_bytes += self.file_size(d)?;
+                    }
+                    if delta_bytes as f64 > self.compact_frac * base_bytes as f64 {
+                        Action::Base
+                    } else {
+                        Action::Delta
+                    }
+                }
+            };
+            actions.push(action);
+        }
+
+        // --- build the new chain set + one write job per dirty node ----
+        let mut chains = Vec::with_capacity(n_nodes);
+        let mut jobs: Vec<WriteJob<'_>> = Vec::new();
+        let mut job_names: Vec<String> = Vec::new();
+        let dir = self.dir.clone();
+        for (n, st) in store.node_states().iter().enumerate() {
+            match actions[n] {
+                Action::Keep => {
+                    chains.push(prev.expect("Keep implies a previous chain").chains[n].clone());
+                }
+                Action::Base => {
+                    let name = format!("node{n}-base-{seq}.bin");
+                    chains.push(NodeChain { base: name.clone(), deltas: Vec::new() });
+                    job_names.push(name.clone());
+                    let dir = dir.clone();
+                    jobs.push(Box::new(move || write_base(&dir, &name, n, st)));
+                }
+                Action::Delta => {
+                    let name = format!("node{n}-delta-{seq}.bin");
+                    let mut chain = prev.expect("Delta implies a previous chain").chains[n].clone();
+                    chain.deltas.push(name.clone());
+                    chains.push(chain);
+                    job_names.push(name.clone());
+                    let dir = dir.clone();
+                    jobs.push(Box::new(move || {
+                        let tables = delta_tables(st);
+                        write_delta(&dir, &name, n, &tables)
+                    }));
+                }
+            }
+        }
+        let byte_counts = self.pool.run(jobs)?;
+        let mut total: u64 = byte_counts.iter().sum();
+        for (name, &bytes) in job_names.iter().zip(&byte_counts) {
+            self.sizes.insert(name.clone(), bytes);
+        }
+
+        // --- meta ------------------------------------------------------
+        let meta = if update_meta || prev.is_none() {
+            let name = format!("meta-{seq}.bin");
+            let bytes =
+                write_meta(&self.dir, &name, &store.mlp, store.step, store.samples)?;
+            total += bytes;
+            self.sizes.insert(name.clone(), bytes);
+            name
+        } else {
+            prev.expect("checked above").meta.clone()
+        };
+
+        // renames are directory-metadata updates: make every node/meta
+        // file durable before the manifest can name them
+        fsync_dir(&self.dir)?;
+
+        // --- manifest: the publish point -------------------------------
+        let manifest = Manifest { seq, meta, chains };
+        write_manifest(&self.dir, &manifest)?;
+        total += std::fs::metadata(self.dir.join(MANIFEST))?.len();
+        self.manifest = Some(manifest);
+        self.synced = true;
+        for st in store.node_states_mut() {
+            st.clear_dirty();
+        }
+
+        // --- GC: only after the new manifest is durable ----------------
+        self.gc()?;
+        Ok(total)
+    }
+
+    /// Byte length of a chain/meta file: from the engine's write cache
+    /// (every extendable chain file was written by this engine), falling
+    /// back to a stat for robustness.
+    fn file_size(&self, name: &str) -> Result<u64> {
+        if let Some(&b) = self.sizes.get(name) {
+            return Ok(b);
+        }
+        Ok(std::fs::metadata(self.dir.join(name))
+            .with_context(|| format!("sizing {name}"))?
+            .len())
+    }
+
+    /// Remove v2 files the live manifest does not reference (and stale
+    /// temp files), and bound the size cache to the live chain set.
+    /// Referenced chains are never touched; neither are v1 files sharing
+    /// the directory.
+    fn gc(&mut self) -> Result<()> {
+        let Some(m) = &self.manifest else {
+            return Ok(());
+        };
+        let mut referenced: HashSet<&str> = HashSet::new();
+        referenced.insert(m.meta.as_str());
+        for c in &m.chains {
+            referenced.insert(c.base.as_str());
+            for d in &c.deltas {
+                referenced.insert(d.as_str());
+            }
+        }
+        for entry in std::fs::read_dir(&self.dir)? {
+            let Ok(entry) = entry else { continue };
+            let Ok(name) = entry.file_name().into_string() else { continue };
+            // stale temp files are crash debris by definition: gc runs
+            // strictly after this publish's renames, so no live .tmp exists
+            let stale_tmp = name.ends_with(".tmp");
+            let unreferenced = is_v2_data_file(&name) && !referenced.contains(name.as_str());
+            if stale_tmp || unreferenced {
+                std::fs::remove_file(entry.path()).ok();
+            }
+        }
+        self.sizes.retain(|k, _| referenced.contains(k.as_str()));
+        Ok(())
+    }
+}
+
+/// Does `name` follow the v2 data-file naming scheme? (GC — and the v1
+/// publish path's directory reclaim — only ever consider these, so v1
+/// files and foreign files are never collected.)
+pub(crate) fn is_v2_data_file(name: &str) -> bool {
+    if !name.ends_with(".bin") {
+        return false;
+    }
+    if name.starts_with("meta-") {
+        return true;
+    }
+    name.starts_with("node") && (name.contains("-base-") || name.contains("-delta-"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::{PsCluster, TableInfo};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cpr_v2_{tag}"));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn cluster() -> PsCluster {
+        PsCluster::new(
+            vec![TableInfo { rows: 24, dim: 4 }, TableInfo { rows: 7, dim: 4 }],
+            3,
+            17,
+        )
+    }
+
+    fn perturb(c: &PsCluster, seed: u64) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let idx: Vec<u32> = (0..10)
+            .flat_map(|_| vec![rng.below(24) as u32, rng.below(7) as u32])
+            .collect();
+        let grads: Vec<f32> = (0..10 * 2 * 4).map(|_| rng.f32() - 0.5).collect();
+        c.sgd_update(&idx, &grads, 0.5);
+    }
+
+    fn engine(dir: &Path) -> V2Engine {
+        V2Engine::open(dir, WriterPool::new(3), 0.5).unwrap()
+    }
+
+    #[test]
+    fn base_file_roundtrip_and_foreign_rejection() {
+        let dir = tmpdir("base");
+        let c = cluster();
+        perturb(&c, 1);
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        store.full_save(&c, vec![], 1, 128);
+        let st = &store.node_states()[1];
+        let bytes = write_base(&dir, "node1-base-1.bin", 1, st).unwrap();
+        assert_eq!(bytes, std::fs::metadata(dir.join("node1-base-1.bin")).unwrap().len());
+        let (node, (shards, opt)) = read_base(&dir.join("node1-base-1.bin")).unwrap();
+        assert_eq!(node, 1);
+        assert_eq!(shards, st.shards());
+        assert_eq!(opt, st.opt());
+        // a v1 checkpoint is not a base file
+        store.write_file(&dir.join("v1.bin")).unwrap();
+        assert!(read_base(&dir.join("v1.bin")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn delta_file_roundtrip() {
+        let dir = tmpdir("delta");
+        let c = cluster();
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        perturb(&c, 2);
+        store.save_rows(&c, 0, &[0, 3, 9]); // node 0 locals 0,1,3
+        let st = &store.node_states()[0];
+        let tables = delta_tables(st);
+        assert_eq!(tables[0].locals, vec![0, 1, 3]);
+        assert!(tables[1].locals.is_empty());
+        write_delta(&dir, "node0-delta-1.bin", 0, &tables).unwrap();
+        let (node, back) = read_delta(&dir.join("node0-delta-1.bin")).unwrap();
+        assert_eq!(node, 0);
+        assert_eq!(back, tables);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_delta_and_base_files_are_rejected() {
+        // extends `read_rejects_garbage` to the v2 record types: a file
+        // cut mid-payload must fail loudly, never yield partial rows
+        let dir = tmpdir("trunc");
+        let c = cluster();
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        perturb(&c, 3);
+        store.save_rows(&c, 0, &[0, 3, 9, 12]);
+        let st = &store.node_states()[0];
+        write_delta(&dir, "d.bin", 0, &delta_tables(st)).unwrap();
+        write_base(&dir, "b.bin", 0, st).unwrap();
+        for name in ["d.bin", "b.bin"] {
+            let path = dir.join(name);
+            let full = std::fs::read(&path).unwrap();
+            std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        }
+        assert!(read_delta(&dir.join("d.bin")).is_err(), "truncated delta must fail");
+        assert!(read_base(&dir.join("b.bin")).is_err(), "truncated base must fail");
+        // and garbage bytes are rejected by magic, not parsed
+        std::fs::write(dir.join("g.bin"), b"junkjunkjunk").unwrap();
+        assert!(read_delta(&dir.join("g.bin")).is_err());
+        assert!(read_base(&dir.join("g.bin")).is_err());
+        assert!(read_meta(&dir.join("g.bin")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_text_roundtrip_and_rejection() {
+        let m = Manifest {
+            seq: 12,
+            meta: "meta-9.bin".into(),
+            chains: vec![
+                NodeChain {
+                    base: "node0-base-3.bin".into(),
+                    deltas: vec!["node0-delta-5.bin".into(), "node0-delta-9.bin".into()],
+                },
+                NodeChain { base: "node1-base-9.bin".into(), deltas: vec![] },
+            ],
+        };
+        assert_eq!(Manifest::parse(&m.to_text()).unwrap(), m);
+        assert!(Manifest::parse("LATEST-style pointer\n").is_err());
+        assert!(Manifest::parse("CPR-MANIFEST-V2\nseq 1\n").is_err(), "meta missing");
+    }
+
+    #[test]
+    fn publish_then_load_store_roundtrips() {
+        let dir = tmpdir("pub");
+        let c = cluster();
+        perturb(&c, 4);
+        let mut store = CheckpointStore::initial(&c, vec![vec![1.0, 2.0]]);
+        store.full_save(&c, vec![vec![3.5]], 10, 1280);
+        let mut eng = engine(&dir);
+        let bytes = eng.publish(&mut store, true, false).unwrap();
+        assert!(bytes > 0);
+        let back = load_store(&dir).unwrap().expect("manifest published");
+        assert_eq!(back, store);
+        assert_eq!((back.step, back.samples), (10, 1280));
+        assert_eq!(back.mlp, vec![vec![3.5]]);
+        // dirty sets are consumed by the publish
+        assert!(store.node_states().iter().all(|n| n.dirty_row_count() == 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn delta_publish_writes_only_dirty_rows_and_replays() {
+        let dir = tmpdir("inc");
+        // tables big enough that a 3-row delta sits far below both the
+        // base size and the compaction threshold
+        let c = PsCluster::new(
+            vec![TableInfo { rows: 240, dim: 4 }, TableInfo { rows: 70, dim: 4 }],
+            3,
+            17,
+        );
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        store.full_save(&c, vec![], 1, 128);
+        let mut eng = engine(&dir);
+        let base_bytes = eng.publish(&mut store, true, false).unwrap();
+        // re-save three rows of node 0 (0, 3, 9 ≡ 0 mod 3), publish again:
+        // one small delta on node 0's chain, nothing for clean nodes
+        store.save_rows(&c, 0, &[0, 3, 9]);
+        store.mark_position(vec![], 2, 256);
+        let delta_bytes = eng.publish(&mut store, true, false).unwrap();
+        assert!(delta_bytes * 4 < base_bytes,
+                "delta publish ({delta_bytes} B) must be far below the base \
+                 publish ({base_bytes} B)");
+        let m = eng.manifest().unwrap();
+        let chain0 = &m.chains[0];
+        assert_eq!(chain0.deltas.len(), 1, "node 0 chain gained one delta");
+        assert!(m.chains[1].deltas.is_empty(), "clean node keeps its bare base");
+        let back = load_store(&dir).unwrap().unwrap();
+        assert_eq!(back, store, "chain replay must reproduce the mirror");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compaction_rebases_when_deltas_outgrow_the_base() {
+        let dir = tmpdir("compact");
+        let c = cluster();
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        store.full_save(&c, vec![], 1, 128);
+        // tiny threshold: the second delta must trigger a re-base
+        let mut eng = V2Engine::open(&dir, WriterPool::new(2), 0.05).unwrap();
+        eng.publish(&mut store, true, false).unwrap();
+        for i in 0..6u64 {
+            perturb(&c, 10 + i);
+            store.save_rows(&c, 0, &[0, 3, 6, 9, 12]);
+            store.mark_position(vec![], 2 + i, 256);
+            eng.publish(&mut store, true, false).unwrap();
+            let chain = &eng.manifest().unwrap().chains[0];
+            assert!(chain.deltas.len() <= 2,
+                    "compaction must bound the chain, got {:?}", chain);
+        }
+        let back = load_store(&dir).unwrap().unwrap();
+        assert_eq!(back, store, "compacted chain still replays exactly");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_drops_unreferenced_files_but_never_referenced_chains() {
+        let dir = tmpdir("gc");
+        let c = cluster();
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        store.full_save(&c, vec![], 1, 128);
+        let mut eng = engine(&dir);
+        eng.publish(&mut store, true, false).unwrap();
+        // force a full re-base: the old bases + meta become garbage
+        perturb(&c, 20);
+        store.full_save(&c, vec![], 2, 256);
+        eng.publish(&mut store, true, false).unwrap();
+        let m = eng.manifest().unwrap().clone();
+        let on_disk: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok()?.file_name().into_string().ok())
+            .filter(|n| is_v2_data_file(n))
+            .collect();
+        let mut referenced: Vec<String> = vec![m.meta.clone()];
+        for ch in &m.chains {
+            referenced.push(ch.base.clone());
+            referenced.extend(ch.deltas.iter().cloned());
+        }
+        let mut a = on_disk.clone();
+        let mut b = referenced.clone();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b, "disk must hold exactly the referenced v2 files");
+        // every referenced file is readable (the chain is unbroken)
+        assert!(load_store(&dir).unwrap().is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn interrupted_publish_leaves_previous_chain_readable() {
+        // simulate a writer killed mid-publish: new-seq node files land
+        // (renamed) but the manifest update never happens, plus a torn
+        // temp file — load_store must return the last DURABLE state
+        let dir = tmpdir("crash");
+        let c = cluster();
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        store.full_save(&c, vec![], 1, 128);
+        let mut eng = engine(&dir);
+        eng.publish(&mut store, true, false).unwrap();
+        let durable = load_store(&dir).unwrap().unwrap();
+        // "crash": orphan delta with a plausible name + torn tmp manifest
+        perturb(&c, 30);
+        store.save_rows(&c, 0, &[0, 3]);
+        let st = &store.node_states()[0];
+        write_delta(&dir, "node0-delta-99.bin", 0, &delta_tables(st)).unwrap();
+        let orphan = std::fs::read(dir.join("node0-delta-99.bin")).unwrap();
+        std::fs::write(dir.join("node0-delta-98.bin"), &orphan[..orphan.len() / 3]).unwrap();
+        std::fs::write(dir.join(".MANIFEST.tmp"), b"CPR-MANIFEST-V2\nseq ").unwrap();
+        let back = load_store(&dir).unwrap().unwrap();
+        assert_eq!(back, durable,
+                   "unreferenced files must be invisible to readers");
+        // the next successful publish GCs the crash debris
+        store.mark_position(vec![], 2, 256);
+        let mut store2 = store.clone();
+        eng.publish(&mut store2, true, false).unwrap();
+        assert!(!dir.join("node0-delta-98.bin").exists(), "debris not GC'd");
+        assert!(!dir.join(".MANIFEST.tmp").exists(), "stale tmp not GC'd");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_node_reads_only_that_nodes_chain() {
+        let dir = tmpdir("node");
+        let c = cluster();
+        perturb(&c, 6);
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        store.full_save(&c, vec![], 5, 640);
+        let mut eng = engine(&dir);
+        eng.publish(&mut store, true, false).unwrap();
+        // corrupt node 1's base: nodes 0/2 must still load, node 1 must not
+        let m = eng.manifest().unwrap().clone();
+        let victim = dir.join(&m.chains[1].base);
+        let full = std::fs::read(&victim).unwrap();
+        std::fs::write(&victim, &full[..full.len() / 2]).unwrap();
+        let ((shards, opt), step, samples) =
+            load_node(&dir, 0).unwrap().expect("manifest exists");
+        assert_eq!(shards, store.node_states()[0].shards());
+        assert_eq!(opt, store.node_states()[0].opt());
+        assert_eq!((step, samples), (5, 640));
+        assert!(load_node(&dir, 2).unwrap().is_some());
+        assert!(load_node(&dir, 1).is_err(),
+                "node 1's torn chain must fail its own load");
+        assert!(load_store(&dir).is_err(),
+                "the full-store load does read node 1's chain");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn inherited_manifests_are_never_extended() {
+        // a new engine (new process) must not append deltas to chains it
+        // did not write: its mirror need not match the old chains, so the
+        // first publish re-bases everything from the current mirror
+        let dir = tmpdir("inherit");
+        let c = cluster();
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        store.full_save(&c, vec![], 1, 128);
+        {
+            let mut eng1 = engine(&dir);
+            eng1.publish(&mut store, true, false).unwrap();
+            perturb(&c, 40);
+            store.save_rows(&c, 0, &[0, 3]);
+            store.mark_position(vec![], 2, 256);
+            eng1.publish(&mut store, true, false).unwrap();
+            assert_eq!(eng1.manifest().unwrap().chains[0].deltas.len(), 1);
+        }
+        // a DIFFERENT mirror in a new process: row 6 diverged, and the
+        // new mirror never saw the old run's row 0/3 deltas
+        let c2 = cluster();
+        perturb(&c2, 41);
+        let mut store2 = CheckpointStore::initial(&c2, vec![]);
+        store2.save_rows(&c2, 0, &[6]);
+        store2.mark_position(vec![], 7, 896);
+        let mut eng2 = engine(&dir);
+        eng2.publish(&mut store2, true, false).unwrap();
+        let m = eng2.manifest().unwrap();
+        assert!(m.chains.iter().all(|ch| ch.deltas.is_empty()),
+                "first publish of a new engine must re-base, got {m:?}");
+        let back = load_store(&dir).unwrap().unwrap();
+        assert_eq!(back, store2,
+                   "no stale chain data may leak into the new run's checkpoint");
+        // within the same engine, chains extend again
+        store2.save_rows(&c2, 0, &[0]);
+        store2.mark_position(vec![], 8, 1024);
+        eng2.publish(&mut store2, true, false).unwrap();
+        assert_eq!(eng2.manifest().unwrap().chains[0].deltas.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn delta_disagreeing_with_its_base_is_an_error_not_a_panic() {
+        // structurally-valid delta, wrong geometry: local row id past the
+        // base's shard — replay must bail, never index out of bounds
+        let dir = tmpdir("geom");
+        let c = cluster();
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        store.full_save(&c, vec![], 1, 128);
+        let st = &store.node_states()[0];
+        write_base(&dir, "b.bin", 0, st).unwrap();
+        let bad = vec![
+            DeltaTable { dim: 4, locals: vec![999], data: vec![0.0; 4], opt: vec![0.0] },
+            DeltaTable { dim: 4, locals: vec![], data: vec![], opt: vec![] },
+        ];
+        write_delta(&dir, "d.bin", 0, &bad).unwrap();
+        let chain = NodeChain { base: "b.bin".into(), deltas: vec!["d.bin".into()] };
+        let err = load_node_chain(&dir, &chain, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        // and a dim mismatch is rejected the same way
+        let bad_dim = vec![
+            DeltaTable { dim: 2, locals: vec![0], data: vec![0.0; 2], opt: vec![0.0] },
+            DeltaTable { dim: 4, locals: vec![], data: vec![], opt: vec![] },
+        ];
+        write_delta(&dir, "d2.bin", 0, &bad_dim).unwrap();
+        let chain2 = NodeChain { base: "b.bin".into(), deltas: vec!["d2.bin".into()] };
+        let err2 = load_node_chain(&dir, &chain2, 0).unwrap_err();
+        assert!(format!("{err2:#}").contains("dim"), "{err2:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reopen_resumes_the_manifest_sequence() {
+        let dir = tmpdir("reopen");
+        let c = cluster();
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        store.full_save(&c, vec![], 1, 128);
+        {
+            let mut eng = engine(&dir);
+            eng.publish(&mut store, true, false).unwrap();
+        }
+        let mut eng2 = engine(&dir);
+        let seq0 = eng2.manifest().unwrap().seq;
+        perturb(&c, 7);
+        store.save_rows(&c, 0, &[0]);
+        store.mark_position(vec![], 2, 256);
+        eng2.publish(&mut store, true, false).unwrap();
+        assert_eq!(eng2.manifest().unwrap().seq, seq0 + 1);
+        assert_eq!(load_store(&dir).unwrap().unwrap(), store);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,184 @@
+//! [`WriterPool`] — the parallel per-node checkpoint writer.
+//!
+//! Format v2 publishes one file *per node* (a base or a delta — see
+//! [`super::v2`]), and node files are independent until the manifest
+//! names them, so there is no reason to serialize their encoding + fsync
+//! behind the single pipeline writer thread. The pool runs one write job
+//! per node with up to `threads` workers: **one in-flight publish per
+//! node, nodes in parallel** — the publish batch's jobs never contain two
+//! jobs for the same node, and [`WriterPool::run`] is a barrier, so the
+//! next publish cannot overlap the previous one.
+//!
+//! Jobs borrow the caller's data (the pipeline's mirror [`super::ShardState`]s)
+//! via scoped threads — no node state is cloned to cross the pool
+//! boundary. Each job returns the bytes it wrote; the first error wins
+//! and fails the whole batch (the caller then skips the manifest update,
+//! leaving the previous durable chain published — the crash-consistency
+//! rule holds for IO errors exactly as for crashes).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+/// One write job: encode + durably write one node's base/delta file,
+/// returning the bytes written. Borrows from the caller (`'a`).
+pub type WriteJob<'a> = Box<dyn FnOnce() -> Result<u64> + Send + 'a>;
+
+/// Bounded pool of checkpoint write workers (see module docs).
+pub struct WriterPool {
+    threads: usize,
+}
+
+impl WriterPool {
+    /// A pool running at most `threads` jobs concurrently (min 1).
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// A pool sized for `n_nodes` node files on this host: one worker per
+    /// node, capped at the parallelism the machine offers.
+    pub fn for_nodes(n_nodes: usize) -> Self {
+        let cap = std::thread::available_parallelism()
+            .map(std::num::NonZeroUsize::get)
+            .unwrap_or(4);
+        Self::new(n_nodes.clamp(1, cap))
+    }
+
+    /// Worker cap.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every job to completion (a barrier), up to `threads` at a
+    /// time, and return the per-job bytes written **in job order**. The
+    /// first job error fails the batch (remaining jobs still run — a
+    /// failed batch must not leave half the pool's work silently
+    /// unattempted when the caller retries).
+    pub fn run(&self, jobs: Vec<WriteJob<'_>>) -> Result<Vec<u64>> {
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n_workers = self.threads.min(jobs.len());
+        if n_workers == 1 {
+            return jobs.into_iter().map(|j| j()).collect();
+        }
+        let n_jobs = jobs.len();
+        let queue: Vec<Mutex<Option<WriteJob<'_>>>> =
+            jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+        let results: Vec<Mutex<Option<Result<u64>>>> =
+            (0..n_jobs).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..n_workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_jobs {
+                        break;
+                    }
+                    let job = queue[i]
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .expect("each job is claimed exactly once");
+                    *results[i].lock().unwrap() = Some(job());
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap()
+                    .expect("every claimed job stores its result")
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn results_come_back_in_job_order() {
+        let pool = WriterPool::new(3);
+        let jobs: Vec<WriteJob<'_>> = (0..10u64)
+            .map(|i| Box::new(move || Ok(i * 100)) as WriteJob<'_>)
+            .collect();
+        let got = pool.run(jobs).unwrap();
+        assert_eq!(got, (0..10u64).map(|i| i * 100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        assert_eq!(WriterPool::new(4).run(Vec::new()).unwrap(), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn first_error_fails_the_batch() {
+        let pool = WriterPool::new(2);
+        let jobs: Vec<WriteJob<'_>> = vec![
+            Box::new(|| Ok(1)),
+            Box::new(|| anyhow::bail!("disk full")),
+            Box::new(|| Ok(3)),
+        ];
+        let err = pool.run(jobs).unwrap_err();
+        assert!(format!("{err:#}").contains("disk full"));
+    }
+
+    #[test]
+    fn jobs_overlap_across_workers() {
+        // 4 × 60 ms jobs on 4 workers must beat the 240 ms serial time by
+        // a wide margin
+        let pool = WriterPool::new(4);
+        let jobs: Vec<WriteJob<'_>> = (0..4)
+            .map(|_| {
+                Box::new(|| {
+                    std::thread::sleep(Duration::from_millis(60));
+                    Ok(0)
+                }) as WriteJob<'_>
+            })
+            .collect();
+        let t0 = Instant::now();
+        pool.run(jobs).unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(200),
+                "pool must run node writes in parallel");
+    }
+
+    #[test]
+    fn jobs_borrow_caller_state_without_cloning() {
+        let data: Vec<u64> = (0..100).collect();
+        let pool = WriterPool::new(4);
+        let jobs: Vec<WriteJob<'_>> = data
+            .chunks(25)
+            .map(|chunk| Box::new(move || Ok(chunk.iter().sum())) as WriteJob<'_>)
+            .collect();
+        let got = pool.run(jobs).unwrap();
+        assert_eq!(got.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn pool_never_exceeds_its_worker_cap() {
+        use std::sync::atomic::AtomicUsize;
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let pool = WriterPool::new(2);
+        let jobs: Vec<WriteJob<'_>> = (0..8)
+            .map(|_| {
+                Box::new(|| {
+                    let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(10));
+                    live.fetch_sub(1, Ordering::SeqCst);
+                    Ok(0)
+                }) as WriteJob<'_>
+            })
+            .collect();
+        pool.run(jobs).unwrap();
+        assert!(peak.load(Ordering::SeqCst) <= 2,
+                "observed {} concurrent jobs on a 2-worker pool",
+                peak.load(Ordering::SeqCst));
+    }
+}

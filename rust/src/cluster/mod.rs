@@ -78,6 +78,14 @@ pub fn route_row(global_row: usize, n_nodes: usize) -> (usize, usize) {
     (global_row % n_nodes, global_row / n_nodes)
 }
 
+/// Inverse of [`route_row`]: the global row id living at `node`'s `local`
+/// slot. Kept next to its inverse so the ONE routing definition rule
+/// covers both directions (delta capture grouping uses this pair).
+#[inline]
+pub fn unroute_row(node: usize, local: usize, n_nodes: usize) -> usize {
+    local * n_nodes + node
+}
+
 /// Interior-mutable counters behind `&self` methods; `Clone` snapshots the
 /// current values.
 #[derive(Debug, Default)]
@@ -222,6 +230,28 @@ pub trait PsControlPlane: PsDataPlane {
     /// Capture one node's full state (checkpoint save path).
     fn snapshot_node(&self, node: usize) -> NodeSnapshot;
 
+    /// Dirty-set export for incremental (format-v2 delta) checkpoint
+    /// capture: read `local_rows` (node-local ascending ids) of `table`
+    /// on `node`, returning their embedding data ([rows.len() * dim], in
+    /// `local_rows` order) and optimizer accumulators — the per-node
+    /// sibling of [`PsDataPlane::read_rows`] that clones only the dirty
+    /// slice instead of the whole node. The default routes through the
+    /// data plane's batched read; backends with direct node storage may
+    /// shortcut it.
+    fn snapshot_node_rows(
+        &self,
+        node: usize,
+        table: usize,
+        local_rows: &[u32],
+    ) -> (Vec<f32>, Vec<f32>) {
+        let n = self.n_nodes();
+        let globals: Vec<u32> = local_rows
+            .iter()
+            .map(|&lr| unroute_row(node, lr as usize, n) as u32)
+            .collect();
+        self.read_rows(table, &globals)
+    }
+
     /// Overwrite one node's full state (checkpoint restore path).
     fn load_node(&self, node: usize, shards: &[Vec<f32>], opt: &[Vec<f32>]);
 
@@ -317,6 +347,17 @@ impl PsControlPlane for PsCluster {
         self.stats.bump_snapshot();
         let (shards, opt) = self.snapshot_parts(node);
         NodeSnapshot { node, shards, opt }
+    }
+
+    fn snapshot_node_rows(
+        &self,
+        node: usize,
+        table: usize,
+        local_rows: &[u32],
+    ) -> (Vec<f32>, Vec<f32>) {
+        // one read guard on the one node, instead of the default's
+        // global-id routing pass
+        PsCluster::snapshot_node_rows_local(self, node, table, local_rows)
     }
 
     fn load_node(&self, node: usize, shards: &[Vec<f32>], opt: &[Vec<f32>]) {
@@ -438,6 +479,34 @@ mod tests {
         assert_eq!(a, b);
         let s = PsControlPlane::stats(&c);
         assert_eq!((s.kills, s.respawns, s.applies), (1, 1, 1));
+    }
+
+    #[test]
+    fn snapshot_node_rows_matches_read_rows_on_both_paths() {
+        let c = cluster();
+        PsDataPlane::apply_grads(&c, &[4, 2, 7, 5], 1, &[0.7f32; 16], 1.0,
+                                 EmbOptimizer::RowAdagrad { eps: 1e-8 });
+        let n = c.n_nodes;
+        for node in 0..n {
+            // every local row of table 0 this node owns
+            let local_rows: Vec<u32> =
+                (0..crate::embedding::shard_rows(11, n, node) as u32).collect();
+            // the overridden fast path
+            let (data, opt) =
+                PsControlPlane::snapshot_node_rows(&c, node, 0, &local_rows);
+            // the trait-default path (global-id routing through read_rows)
+            let globals: Vec<u32> = local_rows
+                .iter()
+                .map(|&lr| lr * n as u32 + node as u32)
+                .collect();
+            let (want_data, want_opt) = PsDataPlane::read_rows(&c, 0, &globals);
+            assert_eq!(data, want_data, "node {node}");
+            assert_eq!(opt, want_opt, "node {node}");
+            // and it agrees with the full-node snapshot slice
+            let snap = PsControlPlane::snapshot_node(&c, node);
+            assert_eq!(&data[..], &snap.shards[0][..local_rows.len() * 4],
+                       "node {node}");
+        }
     }
 
     #[test]

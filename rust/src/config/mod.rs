@@ -97,6 +97,35 @@ impl PsBackendKind {
     }
 }
 
+/// On-disk checkpoint layout (see `checkpoint::disk` and `checkpoint::v2`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CkptFormat {
+    /// format v1: one monolithic store file per publish + `LATEST` pointer
+    #[default]
+    V1,
+    /// format v2: per-node base+delta chains behind a `MANIFEST`, written
+    /// in parallel by the writer pool; minor saves publish row deltas,
+    /// priority majors re-base, chains compact when deltas outgrow the base
+    V2,
+}
+
+impl CkptFormat {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "v1" => CkptFormat::V1,
+            "v2" => CkptFormat::V2,
+            _ => bail!("unknown checkpoint format {s:?} (v1|v2)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CkptFormat::V1 => "v1",
+            CkptFormat::V2 => "v2",
+        }
+    }
+}
+
 /// Emulated production-cluster constants (paper §3 / §5.1). All times in
 /// *hours of emulated wall-clock*; each training step advances the clock by
 /// `t_total / total_steps` so overhead percentages match the paper's frame.
@@ -123,12 +152,28 @@ pub struct ClusterConfig {
     pub o_load_h: f64,
     /// rescheduling cost, hours
     pub o_res_h: f64,
+    /// checkpoint write bandwidth in GB per emulated hour. When set, the
+    /// PLS controller derives the save cost from the measured checkpoint
+    /// *size* (`bytes / bandwidth`) instead of the flat `o_save_h`
+    /// constant — see [`ClusterConfig::o_save_eff_h`]. `None` (the
+    /// default, and every preset) keeps the paper's calibrated constant.
+    pub save_bw_gb_h: Option<f64>,
 }
 
 impl ClusterConfig {
     /// Optimal full-recovery interval √(2·O_save·T_fail) (paper §2.2).
     pub fn t_save_full_h(&self) -> f64 {
         (2.0 * self.o_save_h * self.t_fail_h).sqrt()
+    }
+
+    /// The effective per-save cost: bandwidth-derived when both a write
+    /// bandwidth and a checkpoint size are known, the flat `o_save_h`
+    /// otherwise.
+    pub fn o_save_eff_h(&self, ckpt_bytes: Option<u64>) -> f64 {
+        match (self.save_bw_gb_h, ckpt_bytes) {
+            (Some(bw), Some(b)) if bw > 0.0 => b as f64 / 1e9 / bw,
+            _ => self.o_save_h,
+        }
     }
 }
 
@@ -217,6 +262,12 @@ pub struct CheckpointConfig {
     pub priority_tables: usize,
     /// directory for on-disk snapshots (None = in-memory only)
     pub dir: Option<String>,
+    /// on-disk layout: v1 monolithic files or v2 incremental base+delta
+    /// chains (`--ckpt-format`, `[checkpoint] format`)
+    pub format: CkptFormat,
+    /// v2 chain-compaction threshold: re-base a node when its pending
+    /// delta bytes exceed `compact_frac × base_bytes`
+    pub compact_frac: f64,
     /// force a checkpoint interval (hours), bypassing the strategy's
     /// default — used by the Fig. 11/12 sweeps that explore the PLS range
     pub t_save_override_h: Option<f64>,
@@ -289,6 +340,7 @@ fn cluster_emulation(n_emb_ps: usize) -> ClusterConfig {
         o_save_h: 0.094,
         o_load_h: 0.042,
         o_res_h: 0.042,
+        save_bw_gb_h: None,
     }
 }
 
@@ -300,6 +352,8 @@ fn base_checkpoint() -> CheckpointConfig {
         ssu_period: 2,
         priority_tables: 7,
         dir: None,
+        format: CkptFormat::V1,
+        compact_frac: 0.5,
         t_save_override_h: None,
     }
 }
@@ -425,12 +479,22 @@ impl JobConfig {
         set!("cluster", "o_save_h", self.cluster.o_save_h, as_f64);
         set!("cluster", "o_load_h", self.cluster.o_load_h, as_f64);
         set!("cluster", "o_res_h", self.cluster.o_res_h, as_f64);
+        if let Some(v) = get(doc, "cluster", "save_bw_gb_h") {
+            self.cluster.save_bw_gb_h = Some(v.as_f64()?);
+        }
         set!("checkpoint", "target_pls", self.checkpoint.target_pls, as_f64);
         set!("checkpoint", "r", self.checkpoint.r, as_f64);
         set!("checkpoint", "ssu_period", self.checkpoint.ssu_period, as_usize);
         set!("checkpoint", "priority_tables", self.checkpoint.priority_tables, as_usize);
         if let Some(v) = get(doc, "checkpoint", "strategy") {
             self.checkpoint.strategy = Strategy::parse(v.as_str()?)?;
+        }
+        if let Some(v) = get(doc, "checkpoint", "format") {
+            self.checkpoint.format = CkptFormat::parse(v.as_str()?)?;
+        }
+        set!("checkpoint", "compact_frac", self.checkpoint.compact_frac, as_f64);
+        if let Some(v) = get(doc, "checkpoint", "dir") {
+            self.checkpoint.dir = Some(v.as_str()?.to_string());
         }
         if let Some(v) = get(doc, "train", "lr") {
             self.train.lr = v.as_f64()? as f32;
@@ -551,6 +615,50 @@ mod tests {
         "#).unwrap();
         assert_eq!(cfg.cluster.backend, PsBackendKind::Threaded);
         assert_eq!(preset("mini").unwrap().cluster.backend, PsBackendKind::InProc);
+    }
+
+    #[test]
+    fn ckpt_format_parse_and_toml_override() {
+        assert_eq!(CkptFormat::parse("v1").unwrap(), CkptFormat::V1);
+        assert_eq!(CkptFormat::parse("v2").unwrap().name(), "v2");
+        assert!(CkptFormat::parse("v3").is_err());
+        let cfg = JobConfig::from_toml(r#"
+            preset = "mini"
+            [checkpoint]
+            format = "v2"
+            compact_frac = 0.25
+            dir = "/tmp/ckpts"
+        "#).unwrap();
+        assert_eq!(cfg.checkpoint.format, CkptFormat::V2);
+        assert_eq!(cfg.checkpoint.compact_frac, 0.25);
+        assert_eq!(cfg.checkpoint.dir.as_deref(), Some("/tmp/ckpts"));
+        let base = preset("mini").unwrap();
+        assert_eq!(base.checkpoint.format, CkptFormat::V1,
+                   "presets stay on v1 by default");
+        assert_eq!(base.checkpoint.compact_frac, 0.5);
+    }
+
+    #[test]
+    fn save_cost_is_bandwidth_derived_only_when_configured() {
+        let mut c = cluster_emulation(8);
+        // no bandwidth: the flat paper constant, regardless of size
+        assert_eq!(c.o_save_eff_h(Some(10_000_000_000)), c.o_save_h);
+        assert_eq!(c.o_save_eff_h(None), c.o_save_h);
+        // 100 GB/h writing a 10 GB checkpoint = 0.1 h per save
+        c.save_bw_gb_h = Some(100.0);
+        assert!((c.o_save_eff_h(Some(10_000_000_000)) - 0.1).abs() < 1e-12);
+        // bandwidth set but size unknown: fall back to the constant
+        assert_eq!(c.o_save_eff_h(None), c.o_save_h);
+        // degenerate bandwidth never divides by zero
+        c.save_bw_gb_h = Some(0.0);
+        assert_eq!(c.o_save_eff_h(Some(1)), c.o_save_h);
+        // TOML override path
+        let cfg = JobConfig::from_toml(r#"
+            preset = "mini"
+            [cluster]
+            save_bw_gb_h = 250.0
+        "#).unwrap();
+        assert_eq!(cfg.cluster.save_bw_gb_h, Some(250.0));
     }
 
     #[test]

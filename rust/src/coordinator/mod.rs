@@ -250,12 +250,16 @@ fn run_training_core<B: PsBackend + 'static>(
         model.params_to_host(&model.init_params(cfg.train.seed))?;
     let shared = ShardedPs::new(cluster);
     // the async checkpoint pipeline owns the mirror store on its writer
-    // thread; durable publication is enabled when a dir is configured
-    let pipeline = CheckpointPipeline::new(
+    // thread; durable publication is enabled when a dir is configured,
+    // in the configured on-disk format (v1 monolithic files or v2
+    // per-node base+delta chains behind the parallel writer pool)
+    let pipeline = CheckpointPipeline::with_format(
         CheckpointStore::initial(&*shared.quiesce(), host_params.clone()),
         cfg.checkpoint.dir.as_deref(),
         2,
         std::time::Duration::ZERO,
+        cfg.checkpoint.format,
+        cfg.checkpoint.compact_frac,
     )?;
     let mut pool = TrainerPool::new(cfg, shared.clone());
     // the coordinator's view of the last position-marking save (the

@@ -20,7 +20,10 @@ use anyhow::{ensure, Result};
 
 use crate::checkpoint::async_pipeline::CheckpointPipeline;
 use crate::checkpoint::tracker::{priority_mask, MfuTracker, ScarTracker, SsuTracker};
-use crate::checkpoint::CheckpointStore;
+use crate::checkpoint::{
+    full_content_io_bytes, mlp_io_bytes, node_content_io_bytes, rows_io_bytes,
+    CheckpointStore,
+};
 use crate::cluster::{PsBackend, ThreadedCluster};
 use crate::config::{JobConfig, PsBackendKind, Strategy};
 use crate::data::{Batch, SyntheticDataset};
@@ -212,6 +215,7 @@ fn run_reference_core<B: PsBackend>(
             if priority {
                 ledger.save_h += r * cfg.cluster.o_save_h;
                 for t in 0..cluster.tables().len() {
+                    let dim = cluster.tables()[t].dim;
                     if mask[t] {
                         let rows_in_table = cluster.tables()[t].rows;
                         let k = ((rows_in_table as f64 * r).ceil() as usize).max(1);
@@ -226,17 +230,21 @@ fn run_reference_core<B: PsBackend>(
                         } else {
                             unreachable!()
                         };
+                        ledger.bytes_written += rows_io_bytes(rows.len(), dim);
                         pipeline.save_rows(&cluster, t, &rows);
                         if let Some(tr) = scar.as_mut() {
                             tr.mark_saved(&cluster, t, &rows);
                         }
                     } else {
+                        ledger.bytes_written +=
+                            rows_io_bytes(cluster.tables()[t].rows, dim);
                         pipeline.save_table(&cluster, t);
                     }
                 }
                 if minor_count % minors_per_major == 0 {
-                    pipeline.mark_position(model.params_to_host(&params)?,
-                                           step, step * batch as u64);
+                    let host = model.params_to_host(&params)?;
+                    ledger.bytes_written += mlp_io_bytes(&host);
+                    pipeline.mark_position(host, step, step * batch as u64);
                     marked_step = step;
                     marked_samples = step * batch as u64;
                     ledger.n_saves += 1;
@@ -244,8 +252,9 @@ fn run_reference_core<B: PsBackend>(
             } else {
                 ledger.save_h += cfg.cluster.o_save_h;
                 ledger.n_saves += 1;
-                pipeline.full_save(&cluster, model.params_to_host(&params)?,
-                                   step, step * batch as u64);
+                let host = model.params_to_host(&params)?;
+                ledger.bytes_written += full_content_io_bytes(cluster.tables(), &host);
+                pipeline.full_save(&cluster, host, step, step * batch as u64);
                 marked_step = step;
                 marked_samples = step * batch as u64;
             }
@@ -268,6 +277,8 @@ fn run_reference_core<B: PsBackend>(
                     ev.victims.len(),
                 );
                 for &v in &ev.victims {
+                    ledger.bytes_restored +=
+                        node_content_io_bytes(cluster.tables(), n_emb, v);
                     cluster.kill_node(v);
                     cluster.respawn_node(v);
                     pipeline.restore_node(&cluster, v);
@@ -276,6 +287,8 @@ fn run_reference_core<B: PsBackend>(
                 let t_last = marked_step as f64 * dt_h;
                 ledger.lost_h += (clock_h - t_last).max(0.0);
                 let (mlp, ckpt_step, _samples) = pipeline.restore_all(&cluster);
+                ledger.bytes_restored +=
+                    full_content_io_bytes(cluster.tables(), &mlp);
                 params = model.params_from_host(&mlp);
                 step = ckpt_step;
             }

@@ -400,6 +400,29 @@ impl PsCluster {
         (g.shards.clone(), g.opt_state.clone())
     }
 
+    /// Export `local_rows` of `table` on `node` under a single node read
+    /// guard — the dirty-set (delta-capture) slice of `snapshot_parts`.
+    pub(crate) fn snapshot_node_rows_local(
+        &self,
+        node: usize,
+        table: usize,
+        local_rows: &[u32],
+    ) -> (Vec<f32>, Vec<f32>) {
+        let dim = self.tables[table].dim;
+        let g = self.node_read(node);
+        let shard = &g.shards[table];
+        let acc = &g.opt_state[table];
+        let mut data = vec![0.0f32; local_rows.len() * dim];
+        let mut opt = vec![0.0f32; local_rows.len()];
+        for (i, &lr) in local_rows.iter().enumerate() {
+            let lr = lr as usize;
+            data[i * dim..(i + 1) * dim]
+                .copy_from_slice(&shard[lr * dim..(lr + 1) * dim]);
+            opt[i] = acc[lr];
+        }
+        (data, opt)
+    }
+
     /// Total parameter count across all tables.
     pub fn total_params(&self) -> usize {
         self.tables.iter().map(|t| t.rows * t.dim).sum()

@@ -15,7 +15,7 @@
 
 use anyhow::{bail, Result};
 
-use cpr::config::{preset, JobConfig, PsBackendKind, Strategy};
+use cpr::config::{preset, CkptFormat, JobConfig, PsBackendKind, Strategy};
 use cpr::coordinator::{run_training, RunOptions, TrainReport};
 use cpr::failure::{trainer_schedule, uniform_schedule};
 use cpr::runtime::Runtime;
@@ -78,6 +78,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .opt("strategy", "",
              "full|partial|cpr-vanilla|cpr-scar|cpr-mfu|cpr-ssu|cpr-adaptive")
         .opt("backend", "", "Emb PS cluster runtime: inproc|threaded")
+        .opt("ckpt-format", "",
+             "on-disk checkpoint layout: v1 (monolithic) | v2 (incremental chains)")
+        .opt("ckpt-dir", "", "durable checkpoint directory (enables publication)")
         .opt("target-pls", "", "CPR target PLS (default from config: 0.1)")
         .opt("n-emb", "", "number of Emb PS nodes")
         .opt("trainers", "", "data-parallel trainer count (default from config: 1)")
@@ -94,6 +97,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
     cfg.artifacts_dir = cli.get("artifacts").to_string();
     if !cli.get("backend").is_empty() {
         cfg.cluster.backend = PsBackendKind::parse(cli.get("backend"))?;
+    }
+    if !cli.get("ckpt-format").is_empty() {
+        cfg.checkpoint.format = CkptFormat::parse(cli.get("ckpt-format"))?;
+    }
+    if !cli.get("ckpt-dir").is_empty() {
+        cfg.checkpoint.dir = Some(cli.get("ckpt-dir").to_string());
     }
 
     let n_failures = cli.get_usize("failures")?;
@@ -150,6 +159,9 @@ fn print_report(r: &TrainReport, t_total_h: f64) {
     println!("  load              {:.3} h", r.ledger.load_h);
     println!("  lost computation  {:.3} h", r.ledger.lost_h);
     println!("  reschedule        {:.3} h", r.ledger.reschedule_h);
+    println!("  ckpt io           {:.2} MB written, {:.2} MB restored",
+             r.ledger.bytes_written as f64 / 1e6,
+             r.ledger.bytes_restored as f64 / 1e6);
     if !r.ledger.replans.is_empty() {
         let track: Vec<String> = r.ledger.replans.iter()
             .map(|(at, t)| format!("{at:.1}h→{t:.2}h"))
@@ -171,8 +183,23 @@ fn cmd_plan(args: &[String]) -> Result<()> {
         .opt("eval-samples", "", "")
         .parse(args)?;
     let cfg = job_config_from(&cli)?;
-    let p = cpr::pls::plan(&cfg.cluster, cfg.checkpoint.target_pls);
+    // size the checkpoint like the policy registry does, so a configured
+    // write bandwidth (cluster.save_bw_gb_h) shapes the plan here too
+    let ckpt_bytes: u64 = cfg
+        .data
+        .table_rows
+        .iter()
+        .map(|&r| cpr::checkpoint::table_io_bytes(r, cfg.model.emb_dim))
+        .sum();
+    let p = cpr::pls::plan_with_bytes(&cfg.cluster, cfg.checkpoint.target_pls,
+                                      Some(ckpt_bytes));
     let t = cfg.cluster.t_total_h;
+    if let Some(bw) = cfg.cluster.save_bw_gb_h {
+        println!("save bandwidth      {bw} GB/h → O_save={:.4} h for the \
+                  {:.1} MB checkpoint",
+                 cfg.cluster.o_save_eff_h(Some(ckpt_bytes)),
+                 ckpt_bytes as f64 / 1e6);
+    }
     println!("cluster: N_emb={} N_tr={} T_total={:.0}h T_fail={:.1}h O_save={:.3}h \
               O_load={:.3}h O_res={:.3}h",
              cfg.cluster.n_emb_ps, cfg.cluster.n_trainers, t, cfg.cluster.t_fail_h,

@@ -62,6 +62,15 @@ pub struct OverheadLedger {
     /// count of checkpoint saves / failures, for reporting
     pub n_saves: u64,
     pub n_failures: u64,
+    /// logical checkpoint bytes captured for persistence (row payloads +
+    /// per-row ids + dense params — `checkpoint::rows_io_bytes` /
+    /// `full_content_io_bytes`), charged at capture time so I/O volume is
+    /// visible even for in-memory-only runs. Format v2 delta captures
+    /// charge only the touched rows; v1 full saves charge the whole store.
+    pub bytes_written: u64,
+    /// logical checkpoint bytes read back by restores (per-node content
+    /// for partial recovery, the whole store + dense params for a rewind)
+    pub bytes_restored: u64,
     /// online interval re-plans by the adaptive save policy
     /// (`policy::AdaptiveInterval`): `(emulated hour, new T_save)` per
     /// accepted re-plan. Empty for every static-interval policy.
@@ -93,6 +102,8 @@ impl OverheadLedger {
         self.reschedule_h += other.reschedule_h;
         self.n_saves += other.n_saves;
         self.n_failures += other.n_failures;
+        self.bytes_written += other.bytes_written;
+        self.bytes_restored += other.bytes_restored;
         self.replans.extend_from_slice(&other.replans);
     }
 }
@@ -187,12 +198,25 @@ mod tests {
 
     #[test]
     fn ledger_accumulates() {
-        let mut a = OverheadLedger { save_h: 1.0, n_saves: 2, ..Default::default() };
-        let b = OverheadLedger { lost_h: 3.0, n_failures: 1, ..Default::default() };
+        let mut a = OverheadLedger {
+            save_h: 1.0,
+            n_saves: 2,
+            bytes_written: 100,
+            ..Default::default()
+        };
+        let b = OverheadLedger {
+            lost_h: 3.0,
+            n_failures: 1,
+            bytes_written: 50,
+            bytes_restored: 30,
+            ..Default::default()
+        };
         a.add(&b);
         assert_eq!(a.total_h(), 4.0);
         assert_eq!(a.fraction_of(40.0), 0.1);
         assert_eq!((a.n_saves, a.n_failures), (2, 1));
+        assert_eq!((a.bytes_written, a.bytes_restored), (150, 30),
+                   "I/O volume must accumulate like the time charges");
     }
 
     #[test]

@@ -197,6 +197,24 @@ pub fn plan(c: &ClusterConfig, target_pls: f64) -> CprPlan {
     }
 }
 
+/// [`plan`] with a **bandwidth-derived save cost**: when the cluster
+/// carries a checkpoint write bandwidth (`ClusterConfig::save_bw_gb_h`)
+/// and the caller knows the checkpoint size (`CheckpointStore::size_bytes`
+/// or the registry's table-derived estimate), the per-save cost becomes
+/// `bytes / bandwidth` instead of the flat `o_save_h` constant — so the
+/// planned interval tracks the actual I/O volume a save moves
+/// (Check-N-Run sizes its checkpoint budget the same way). With no
+/// bandwidth configured (every preset) this is exactly [`plan`].
+pub fn plan_with_bytes(
+    c: &ClusterConfig,
+    target_pls: f64,
+    ckpt_bytes: Option<u64>,
+) -> CprPlan {
+    let mut eff = c.clone();
+    eff.o_save_h = c.o_save_eff_h(ckpt_bytes);
+    plan(&eff, target_pls)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,6 +231,7 @@ mod tests {
             o_save_h: 0.094,
             o_load_h: 0.042,
             o_res_h: 0.042,
+            save_bw_gb_h: None,
         }
     }
 
@@ -425,6 +444,26 @@ mod tests {
                          "more elapsed time must not lower the MTBF estimate");
             Ok(())
         });
+    }
+
+    #[test]
+    fn bandwidth_derived_plan_tracks_checkpoint_size() {
+        let c = cluster(8, 28.0);
+        // no bandwidth → identical to the flat-constant plan
+        assert_eq!(plan_with_bytes(&c, 0.1, Some(123_456_789)), plan(&c, 0.1));
+        assert_eq!(plan_with_bytes(&c, 0.1, None), plan(&c, 0.1));
+        let mut bw = c.clone();
+        bw.save_bw_gb_h = Some(100.0);
+        // a 9.4 GB checkpoint at 100 GB/h reproduces o_save_h = 0.094
+        let same = plan_with_bytes(&bw, 0.1, Some(9_400_000_000));
+        assert!((same.est_overhead_h - plan(&c, 0.1).est_overhead_h).abs() < 1e-12);
+        // a 10× larger checkpoint costs 10× per save: the full-recovery
+        // optimum stretches by √10 and estimated overheads grow
+        let big = plan_with_bytes(&bw, 0.1, Some(94_000_000_000));
+        assert!(big.est_full_overhead_h > same.est_full_overhead_h);
+        // a tiny checkpoint makes saving nearly free
+        let tiny = plan_with_bytes(&bw, 0.1, Some(1_000_000));
+        assert!(tiny.est_overhead_h < same.est_overhead_h);
     }
 
     #[test]

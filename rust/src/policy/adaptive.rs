@@ -13,7 +13,7 @@
 //! `metrics::OverheadLedger::replans`, so the `TrainReport` ledger shows
 //! the interval trajectory.
 
-use super::save::full_content_capture;
+use super::save::{full_content_capture, TouchedRows};
 use super::{PsView, SaveCtx, SaveMarker, SavePolicy};
 use crate::checkpoint::async_pipeline::CheckpointPipeline;
 use crate::config::ClusterConfig;
@@ -32,6 +32,7 @@ pub struct AdaptiveInterval {
     interval_h: f64,
     next_save_h: f64,
     failures_seen: u64,
+    delta: Option<TouchedRows>,
 }
 
 impl AdaptiveInterval {
@@ -45,7 +46,15 @@ impl AdaptiveInterval {
             interval_h,
             next_save_h: interval_h,
             failures_seen: 0,
+            delta: None,
         }
+    }
+
+    /// Format v2: delta-capture touched rows instead of full node
+    /// snapshots (see `FullSave::with_delta_capture`).
+    pub fn with_delta_capture(mut self, table_rows: &[usize]) -> Self {
+        self.delta = Some(TouchedRows::new(table_rows));
+        self
     }
 
     /// The current (possibly re-planned) save interval, hours.
@@ -72,6 +81,12 @@ impl SavePolicy for AdaptiveInterval {
         self.failures_seen += 1;
     }
 
+    fn on_step(&mut self, indices: &[u32], num_tables: usize, hotness: usize) {
+        if let Some(touched) = self.delta.as_mut() {
+            touched.record(indices, num_tables, hotness);
+        }
+    }
+
     fn capture(
         &mut self,
         ps: PsView<'_>,
@@ -79,8 +94,8 @@ impl SavePolicy for AdaptiveInterval {
         ledger: &mut OverheadLedger,
         ctx: &SaveCtx<'_>,
     ) -> Option<SaveMarker> {
-        let marker =
-            full_content_capture(self.cluster.o_save_h, ps, pipeline, ledger, ctx);
+        let marker = full_content_capture(self.cluster.o_save_h, self.delta.as_mut(),
+                                          ps, pipeline, ledger, ctx);
         if self.replan {
             let mut c = self.cluster.clone();
             c.t_fail_h =

@@ -16,6 +16,7 @@
 
 use super::{FailureCtx, PsView, RecoveryAction, RecoveryPolicy};
 use crate::checkpoint::async_pipeline::CheckpointPipeline;
+use crate::checkpoint::{full_content_io_bytes, node_content_io_bytes};
 use crate::cluster::PsControlPlane;
 use crate::config::ClusterConfig;
 use crate::failure::FailureEvent;
@@ -77,7 +78,11 @@ impl RecoveryPolicy for PartialRestore {
             // the checkpoint mirror repopulates it — survivors keep their
             // progress and keep serving. All behind the driver's quiesce
             // token, so no gather can observe a half-restored node.
+            // Restore I/O = each victim's slice only (on disk: that
+            // node's base+delta chain), never the whole store.
             for &v in &ev.victims {
+                ledger.bytes_restored +=
+                    node_content_io_bytes(ps.data.tables(), ps.data.n_nodes(), v);
                 ps.ctl.kill_node(v);
                 ps.ctl.respawn_node(v);
                 pipeline.restore_node(ps.ctl, v);
@@ -131,6 +136,8 @@ impl RecoveryPolicy for FullRewind {
         let t_last = ctx.marked_step as f64 * ctx.dt_h;
         ledger.lost_h += (ctx.clock_h - t_last).max(0.0);
         let (mlp, ckpt_step, _samples) = pipeline.restore_all(ps.ctl);
+        // a rewind reads everything back: every table + the dense params
+        ledger.bytes_restored += full_content_io_bytes(ps.data.tables(), &mlp);
         RecoveryAction::Rewind { mlp, step: ckpt_step }
     }
 

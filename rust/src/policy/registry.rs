@@ -17,8 +17,9 @@ use super::adaptive::AdaptiveInterval;
 use super::recovery::{FullRewind, PartialRestore};
 use super::save::{CprVanilla, FullSave, Prioritized};
 use super::{PsView, RecoveryPolicy, SavePolicy};
+use crate::checkpoint::table_io_bytes;
 use crate::checkpoint::tracker::{priority_mask, MfuTracker, ScarTracker, SsuTracker};
-use crate::config::{JobConfig, Strategy};
+use crate::config::{CkptFormat, JobConfig, Strategy};
 use crate::pls::{self, CprPlan};
 
 /// The full policy bundle one training job runs under. Built up front
@@ -136,12 +137,31 @@ pub fn spec(strategy: &Strategy) -> PolicySpec {
 pub fn build_policies(cfg: &JobConfig, ps: PsView<'_>) -> JobPolicies {
     let strategy = &cfg.checkpoint.strategy;
 
+    // --- effective save cost -----------------------------------------------
+    // Size the checkpoint from the table layout (embedding-dominated —
+    // dense params are noise at DLRM scale, and `CheckpointStore::
+    // size_bytes` confirms the exact figure at run time): a configured
+    // write bandwidth (`cluster.save_bw_gb_h`) turns the size into a
+    // per-save cost; without one (every preset) this is exactly the
+    // paper's flat `o_save_h` and every plan below is bit-identical to
+    // the pre-bandwidth registry.
+    let ckpt_bytes: u64 = cfg
+        .data
+        .table_rows
+        .iter()
+        .map(|&r| table_io_bytes(r, cfg.model.emb_dim))
+        .sum();
+    let mut eff_cluster = cfg.cluster.clone();
+    eff_cluster.o_save_h = cfg.cluster.o_save_eff_h(Some(ckpt_bytes));
+    let o_save_h = eff_cluster.o_save_h;
+
     // --- the CPR controller decides the plan -------------------------------
     let (plan, use_partial, mut t_save_h) = match strategy {
-        Strategy::Full => (None, false, cfg.cluster.t_save_full_h()),
-        Strategy::PartialNaive => (None, true, cfg.cluster.t_save_full_h()),
+        Strategy::Full => (None, false, eff_cluster.t_save_full_h()),
+        Strategy::PartialNaive => (None, true, eff_cluster.t_save_full_h()),
         _ => {
-            let p = pls::plan(&cfg.cluster, cfg.checkpoint.target_pls);
+            // == pls::plan_with_bytes(&cfg.cluster, target, Some(ckpt_bytes))
+            let p = pls::plan(&eff_cluster, cfg.checkpoint.target_pls);
             (Some(p), p.use_partial, p.t_save_h)
         }
     };
@@ -152,7 +172,12 @@ pub fn build_policies(cfg: &JobConfig, ps: PsView<'_>) -> JobPolicies {
     let fell_back = strategy.is_cpr() && !use_partial;
     let priority = strategy.priority() && use_partial;
     let r = cfg.checkpoint.r;
-    let o_save_h = cfg.cluster.o_save_h;
+    // format v2: full-content policies capture touched-row deltas instead
+    // of node snapshots (the persistence layer then publishes them as
+    // per-node delta chains); priority policies already capture rows and
+    // need no mode — their minors commit deltas and majors re-base via
+    // the pipeline itself.
+    let v2 = cfg.checkpoint.format == CkptFormat::V2;
 
     // --- save policy (+ tracker for the priority schemes) ------------------
     let save: Box<dyn SavePolicy> = if priority {
@@ -191,15 +216,23 @@ pub fn build_policies(cfg: &JobConfig, ps: PsView<'_>) -> JobPolicies {
             _ => unreachable!("priority() holds only for SCAR/MFU/SSU"),
         }
     } else if matches!(strategy, Strategy::CprAdaptive) && use_partial {
-        // re-plan only when the interval is not pinned by a sweep override
-        Box::new(AdaptiveInterval::new(&cfg.cluster, cfg.checkpoint.target_pls,
-                                       t_save_h, forced.is_none()))
+        // re-plan only when the interval is not pinned by a sweep
+        // override; re-plans run against the bandwidth-derived save cost
+        let a = AdaptiveInterval::new(&eff_cluster, cfg.checkpoint.target_pls,
+                                      t_save_h, forced.is_none());
+        Box::new(if v2 { a.with_delta_capture(&cfg.data.table_rows) } else { a })
     } else {
         match strategy {
-            Strategy::Full | Strategy::PartialNaive =>
-                Box::new(FullSave::new(o_save_h, t_save_h)),
+            Strategy::Full | Strategy::PartialNaive => {
+                let p = FullSave::new(o_save_h, t_save_h);
+                Box::new(if v2 { p.with_delta_capture(&cfg.data.table_rows) } else { p })
+                    as Box<dyn SavePolicy>
+            }
             // fell-back CPR strategies degrade to planned full-content saves
-            _ => Box::new(CprVanilla::new(o_save_h, t_save_h)),
+            _ => {
+                let p = CprVanilla::new(o_save_h, t_save_h);
+                Box::new(if v2 { p.with_delta_capture(&cfg.data.table_rows) } else { p })
+            }
         }
     };
 
@@ -318,6 +351,47 @@ mod tests {
             assert_eq!(p.save.name(), "cpr-vanilla",
                        "fell-back CPR degrades to planned full-content saves");
         }
+    }
+
+    #[test]
+    fn v2_format_keeps_every_strategys_cadence_and_wiring() {
+        // the on-disk format changes what hits disk, never the policy
+        // cadence or the bundle wiring
+        let base = preset("mini").unwrap();
+        let c = backend(&base);
+        for s in specs() {
+            let mut v1 = base.clone();
+            v1.checkpoint.strategy = s.strategy.clone();
+            let mut v2 = v1.clone();
+            v2.checkpoint.format = crate::config::CkptFormat::V2;
+            let p1 = build_policies(&v1, PsView::new(&c));
+            let p2 = build_policies(&v2, PsView::new(&c));
+            assert_eq!(p1.save.name(), p2.save.name(), "{}", s.name);
+            assert_eq!(p1.recovery.name(), p2.recovery.name(), "{}", s.name);
+            assert_eq!(p1.save.next_save_h(), p2.save.next_save_h(),
+                       "{}: v2 must not move the save cadence", s.name);
+            assert_eq!(p1.fell_back, p2.fell_back, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn bandwidth_derived_cost_scales_the_planned_interval() {
+        let base = preset("mini").unwrap();
+        let c = backend(&base);
+        let p0 = build_policies(&base, PsView::new(&c));
+        // a crawling checkpoint store (1 MB/h) makes each save expensive:
+        // the full-recovery optimum √(2·O_save·T_fail) must stretch
+        let mut slow = base.clone();
+        slow.cluster.save_bw_gb_h = Some(0.001);
+        let p1 = build_policies(&slow, PsView::new(&c));
+        assert!(p1.save.next_save_h() > p0.save.next_save_h(),
+                "bandwidth-derived save cost must stretch the interval: \
+                 {} !> {}", p1.save.next_save_h(), p0.save.next_save_h());
+        // and an absurdly fast store shrinks it
+        let mut fast = base.clone();
+        fast.cluster.save_bw_gb_h = Some(1e6);
+        let p2 = build_policies(&fast, PsView::new(&c));
+        assert!(p2.save.next_save_h() < p0.save.next_save_h());
     }
 
     #[test]

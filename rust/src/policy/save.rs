@@ -21,8 +21,65 @@
 use super::tracker::PriorityTracker;
 use super::{PsView, SaveCtx, SaveMarker, SavePolicy};
 use crate::checkpoint::async_pipeline::CheckpointPipeline;
+use crate::checkpoint::{full_content_io_bytes, mlp_io_bytes, rows_io_bytes};
 use crate::cluster::PsDataPlane;
 use crate::metrics::OverheadLedger;
+
+/// Capture-side dirty set for format-v2 **delta captures** by the
+/// full-content policies: a per-table bitmap of rows touched by the
+/// access stream since the last capture.
+///
+/// Why touched ⊇ changed: a row's cluster value only ever changes through
+/// a trainer's sparse update, every update uses the same indices as the
+/// gather, and the driver feeds every trainer's access stream to
+/// [`SavePolicy::on_step`] in rank order. Rows absent from this set are
+/// therefore byte-identical to the mirror copy from the previous capture
+/// (restores only ever copy mirror values *into* the cluster), so a
+/// capture of just the touched rows builds exactly the mirror a full
+/// node-snapshot capture would — the v1-vs-v2 golden-equivalence suite
+/// asserts this end to end. Over-approximation (rows touched then
+/// restored back) costs bytes, never correctness.
+pub(super) struct TouchedRows {
+    tables: Vec<Vec<bool>>,
+    counts: Vec<usize>,
+}
+
+impl TouchedRows {
+    pub(super) fn new(table_rows: &[usize]) -> Self {
+        Self {
+            tables: table_rows.iter().map(|&r| vec![false; r]).collect(),
+            counts: vec![0; table_rows.len()],
+        }
+    }
+
+    /// Observe one batch's access stream (`[B, num_tables, hotness]`).
+    pub(super) fn record(&mut self, indices: &[u32], num_tables: usize, hotness: usize) {
+        for chunk in indices.chunks_exact(num_tables * hotness) {
+            for (slot, &row) in chunk.iter().enumerate() {
+                let t = slot / hotness;
+                let flag = &mut self.tables[t][row as usize];
+                if !*flag {
+                    *flag = true;
+                    self.counts[t] += 1;
+                }
+            }
+        }
+    }
+
+    /// Drain `table`'s touched rows (ascending), clearing the set.
+    pub(super) fn take(&mut self, table: usize) -> Vec<u32> {
+        let flags = &mut self.tables[table];
+        let mut rows = Vec::with_capacity(self.counts[table]);
+        for (i, f) in flags.iter_mut().enumerate() {
+            if *f {
+                rows.push(i as u32);
+                *f = false;
+            }
+        }
+        self.counts[table] = 0;
+        rows
+    }
+}
 
 /// Full-content checkpointing at a fixed interval (the non-priority,
 /// non-planned cadence: `Strategy::Full` and `Strategy::PartialNaive`).
@@ -30,12 +87,24 @@ pub struct FullSave {
     o_save_h: f64,
     interval_h: f64,
     next_save_h: f64,
+    delta: Option<TouchedRows>,
 }
 
 impl FullSave {
     /// Save everything every `interval_h`, charging `o_save_h` per save.
     pub fn new(o_save_h: f64, interval_h: f64) -> Self {
-        Self { o_save_h, interval_h, next_save_h: interval_h }
+        Self { o_save_h, interval_h, next_save_h: interval_h, delta: None }
+    }
+
+    /// Format v2: capture only the rows touched since the last save
+    /// (delta capture) instead of full node snapshots — the mirror ends
+    /// up byte-identical (touched ⊇ changed, since updates use exactly
+    /// the gather indices this policy observes via `on_step`), but
+    /// capture clones and the ledger's I/O volume shrink to the working
+    /// set.
+    pub fn with_delta_capture(mut self, table_rows: &[usize]) -> Self {
+        self.delta = Some(TouchedRows::new(table_rows));
+        self
     }
 
     /// The fixed save interval, hours.
@@ -44,11 +113,15 @@ impl FullSave {
     }
 }
 
-/// One full-content capture: charge the ledger, snapshot every node +
-/// the dense params, advance the marker. Shared by the fixed-interval,
-/// planned, and adaptive policies.
+/// One full-content capture: charge the ledger (time + I/O volume),
+/// capture content + the dense params, advance the marker. Shared by the
+/// fixed-interval, planned, and adaptive policies. With `delta` set
+/// (format v2) the content capture is the touched-row set exported
+/// through the control plane's `snapshot_node_rows`; otherwise every
+/// node is snapshotted whole.
 pub(super) fn full_content_capture(
     o_save_h: f64,
+    delta: Option<&mut TouchedRows>,
     ps: PsView<'_>,
     pipeline: &CheckpointPipeline,
     ledger: &mut OverheadLedger,
@@ -56,7 +129,26 @@ pub(super) fn full_content_capture(
 ) -> SaveMarker {
     ledger.save_h += o_save_h;
     ledger.n_saves += 1;
-    pipeline.full_save(ps.ctl, ctx.host_params.to_vec(), ctx.step, ctx.samples);
+    match delta {
+        None => {
+            ledger.bytes_written +=
+                full_content_io_bytes(ps.data.tables(), ctx.host_params);
+            pipeline.full_save(ps.ctl, ctx.host_params.to_vec(), ctx.step, ctx.samples);
+        }
+        Some(touched) => {
+            let tables = ps.data.tables();
+            for t in 0..tables.len() {
+                let rows = touched.take(t);
+                if rows.is_empty() {
+                    continue;
+                }
+                ledger.bytes_written += rows_io_bytes(rows.len(), tables[t].dim);
+                pipeline.delta_save(ps.ctl, t, &rows);
+            }
+            ledger.bytes_written += mlp_io_bytes(ctx.host_params);
+            pipeline.mark_position(ctx.host_params.to_vec(), ctx.step, ctx.samples);
+        }
+    }
     SaveMarker { step: ctx.step, samples: ctx.samples }
 }
 
@@ -69,6 +161,12 @@ impl SavePolicy for FullSave {
         self.next_save_h
     }
 
+    fn on_step(&mut self, indices: &[u32], num_tables: usize, hotness: usize) {
+        if let Some(touched) = self.delta.as_mut() {
+            touched.record(indices, num_tables, hotness);
+        }
+    }
+
     fn capture(
         &mut self,
         ps: PsView<'_>,
@@ -76,7 +174,8 @@ impl SavePolicy for FullSave {
         ledger: &mut OverheadLedger,
         ctx: &SaveCtx<'_>,
     ) -> Option<SaveMarker> {
-        let marker = full_content_capture(self.o_save_h, ps, pipeline, ledger, ctx);
+        let marker = full_content_capture(self.o_save_h, self.delta.as_mut(), ps,
+                                          pipeline, ledger, ctx);
         self.next_save_h += self.interval_h;
         Some(marker)
     }
@@ -94,6 +193,12 @@ impl CprVanilla {
         Self(FullSave::new(o_save_h, interval_h))
     }
 
+    /// Format v2: delta-capture touched rows (see
+    /// [`FullSave::with_delta_capture`]).
+    pub fn with_delta_capture(self, table_rows: &[usize]) -> Self {
+        Self(self.0.with_delta_capture(table_rows))
+    }
+
     /// The planned save interval, hours.
     pub fn interval_h(&self) -> f64 {
         self.0.interval_h()
@@ -107,6 +212,10 @@ impl SavePolicy for CprVanilla {
 
     fn next_save_h(&self) -> f64 {
         self.0.next_save_h()
+    }
+
+    fn on_step(&mut self, indices: &[u32], num_tables: usize, hotness: usize) {
+        self.0.on_step(indices, num_tables, hotness);
     }
 
     fn capture(
@@ -184,22 +293,34 @@ impl<T: PriorityTracker> SavePolicy for Prioritized<T> {
         ledger.save_h += self.r * self.o_save_h;
         let n_tables = ps.data.tables().len();
         for t in 0..n_tables {
+            let dim = ps.data.tables()[t].dim;
             if self.mask[t] {
                 let rows_in_table = ps.data.tables()[t].rows;
                 let k = ((rows_in_table as f64 * self.r).ceil() as usize).max(1);
                 let rows = self.tracker.select(ps.data, t, k);
+                ledger.bytes_written += rows_io_bytes(rows.len(), dim);
                 pipeline.save_rows(ps.data, t, &rows);
                 self.tracker.on_saved(ps.data, t, &rows);
             } else {
                 // tiny non-priority tables ride along whole
+                ledger.bytes_written +=
+                    rows_io_bytes(ps.data.tables()[t].rows, dim);
                 pipeline.save_table(ps.data, t);
             }
         }
         let marker = if self.minor_count % self.minors_per_major == 0 {
-            pipeline.mark_position(ctx.host_params.to_vec(), ctx.step, ctx.samples);
+            // a MAJOR: the marker advances, and under format v2 every
+            // node chain re-bases (the minors' deltas fold in); identical
+            // to mark_position under v1
+            ledger.bytes_written += mlp_io_bytes(ctx.host_params);
+            pipeline.mark_position_base(ctx.host_params.to_vec(), ctx.step, ctx.samples);
             ledger.n_saves += 1;
             Some(SaveMarker { step: ctx.step, samples: ctx.samples })
         } else {
+            // a MINOR: under format v2 the captured rows become durable
+            // per-node delta files right now (v1 only persists at marks,
+            // where this is a no-op)
+            pipeline.commit_save();
             None
         };
         self.next_save_h += self.interval_h;
@@ -248,6 +369,63 @@ mod tests {
         assert_eq!(ledger.n_saves, 1);
         assert!((ledger.save_h - 0.1).abs() < 1e-12);
         p.flush().unwrap();
+    }
+
+    #[test]
+    fn delta_capture_builds_the_same_mirror_as_full_snapshots() {
+        use crate::cluster::PsDataPlane;
+        use crate::embedding::EmbOptimizer;
+        let c = cluster();
+        let p_full = pipeline(&c);
+        let p_delta = pipeline(&c);
+        let mut full = FullSave::new(0.1, 2.0);
+        let mut delta = FullSave::new(0.1, 2.0).with_delta_capture(&[40, 8]);
+        // one training step: updates + the matching access stream
+        let idx = [1u32, 0, 5, 2, 9, 7]; // 3 samples × 2 tables
+        let grads = [0.25f32; 3 * 2 * 4];
+        PsDataPlane::apply_grads(&c, &idx, 1, &grads, 1.0, EmbOptimizer::Sgd);
+        full.on_step(&idx, 2, 1); // no-op without delta mode
+        delta.on_step(&idx, 2, 1);
+        let mut lf = OverheadLedger::default();
+        let mut ld = OverheadLedger::default();
+        let ctx = SaveCtx { step: 1, samples: 128, clock_h: 2.0, host_params: &[] };
+        full.capture(PsView::new(&c), &p_full, &mut lf, &ctx).unwrap();
+        delta.capture(PsView::new(&c), &p_delta, &mut ld, &ctx).unwrap();
+        // identical time charges, strictly smaller I/O volume
+        assert_eq!(lf.save_h, ld.save_h);
+        assert_eq!((lf.n_saves, ld.n_saves), (1, 1));
+        assert!(ld.bytes_written < lf.bytes_written,
+                "delta capture ({}) must move fewer bytes than full ({})",
+                ld.bytes_written, lf.bytes_written);
+        assert!(ld.bytes_written > 0);
+        // both mirrors restore to identical cluster state
+        let ca = PsCluster::new(
+            vec![TableInfo { rows: 40, dim: 4 }, TableInfo { rows: 8, dim: 4 }],
+            2, 999,
+        );
+        let cb = PsCluster::new(
+            vec![TableInfo { rows: 40, dim: 4 }, TableInfo { rows: 8, dim: 4 }],
+            2, 999,
+        );
+        p_full.restore_all(&ca);
+        p_delta.restore_all(&cb);
+        let mut a = vec![0.0f32; 4];
+        let mut b = vec![0.0f32; 4];
+        for (t, rows) in [(0usize, 40usize), (1, 8)] {
+            for r in 0..rows {
+                PsDataPlane::read_row(&ca, t, r, &mut a);
+                PsDataPlane::read_row(&cb, t, r, &mut b);
+                assert_eq!(a, b, "table {t} row {r} diverged");
+            }
+        }
+        // the delta mirror marked the touched rows dirty for node-level
+        // dirty publication, and the capture drained the touched set —
+        // a second capture with no new accesses moves only the marker
+        let marker =
+            delta.capture(PsView::new(&c), &p_delta, &mut ld, &ctx).unwrap();
+        assert_eq!(marker.step, 1);
+        p_full.flush().unwrap();
+        p_delta.flush().unwrap();
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Golden equivalence + crash consistency for checkpoint format v2
+//! (ISSUE 5: incremental sharded checkpoint engine).
+//!
+//! v2 changes *what hits disk* — per-node base+delta chains instead of
+//! monolithic store rewrites — and how full-content policies capture
+//! (touched-row deltas instead of node snapshots). It must NOT change
+//! training math:
+//!
+//! * every registered strategy produces bit-identical AUC / logloss /
+//!   PLS / loss-curve / time-ledger under v2 vs v1, on both backends;
+//! * v2 moves strictly fewer logical bytes for full-content strategies
+//!   (delta capture) and identical bytes for the already-row-granular
+//!   priority strategies;
+//! * durable publication does not perturb the run, chains load back
+//!   through the auto-detecting reader, one node restores from its own
+//!   chain alone, and crash debris (orphan/truncated files, torn temp
+//!   manifests) is invisible to readers.
+
+use cpr::checkpoint::disk::DiskCheckpointer;
+use cpr::checkpoint::v2;
+use cpr::config::{preset, CkptFormat, JobConfig, PsBackendKind, Strategy};
+use cpr::coordinator::{run_training, RunOptions, TrainReport};
+use cpr::failure::FailureEvent;
+use cpr::policy::registry;
+use cpr::runtime::{ModelExe, Runtime};
+
+fn load_model() -> ModelExe {
+    Runtime::cpu()
+        .expect("runtime")
+        .load_model("artifacts", "mini")
+        .expect("loading model")
+}
+
+/// 100-global-step mini job with a tight PLS target (several saves).
+fn grid_cfg(strategy: Strategy, backend: PsBackendKind, format: CkptFormat) -> JobConfig {
+    let mut cfg = preset("mini").unwrap();
+    cfg.data.train_samples = 128 * 100;
+    cfg.data.eval_samples = 3_840;
+    cfg.checkpoint.strategy = strategy;
+    cfg.checkpoint.target_pls = 0.02;
+    cfg.checkpoint.format = format;
+    cfg.cluster.backend = backend;
+    cfg
+}
+
+/// Two PS losses away from save boundaries, so partial restores really
+/// read the mirror both runs.
+fn schedule() -> Vec<FailureEvent> {
+    vec![
+        FailureEvent { time_h: 13.0, victims: vec![1], trainer_victims: vec![] },
+        FailureEvent { time_h: 37.5, victims: vec![5, 2], trainer_victims: vec![] },
+    ]
+}
+
+fn assert_training_identical(a: &TrainReport, b: &TrainReport, what: &str) {
+    assert_eq!(a.final_auc, b.final_auc, "{what}: AUC diverged");
+    assert_eq!(a.final_logloss, b.final_logloss, "{what}: logloss diverged");
+    assert_eq!(a.pls, b.pls, "{what}: PLS diverged");
+    assert_eq!(a.steps_executed, b.steps_executed, "{what}: steps diverged");
+    assert_eq!(a.failures_seen, b.failures_seen, "{what}: failures diverged");
+    assert_eq!(a.train_loss.points, b.train_loss.points,
+               "{what}: loss curve diverged");
+    // time charges are format-independent; only the I/O volume may move
+    assert_eq!(a.ledger.save_h, b.ledger.save_h, "{what}: save_h diverged");
+    assert_eq!(a.ledger.load_h, b.ledger.load_h, "{what}: load_h diverged");
+    assert_eq!(a.ledger.lost_h, b.ledger.lost_h, "{what}: lost_h diverged");
+    assert_eq!(a.ledger.reschedule_h, b.ledger.reschedule_h, "{what}");
+    assert_eq!(a.ledger.n_saves, b.ledger.n_saves, "{what}: save count diverged");
+    assert_eq!(a.ledger.n_failures, b.ledger.n_failures, "{what}");
+    assert_eq!(a.ledger.bytes_restored, b.ledger.bytes_restored,
+               "{what}: restore volume diverged");
+}
+
+#[test]
+fn v2_training_is_bit_identical_to_v1_for_every_strategy() {
+    let model = load_model();
+    for spec in registry::specs() {
+        let strategy = spec.strategy;
+        let opts = RunOptions { schedule: schedule(), ..Default::default() };
+        let v1 = run_training(
+            &model,
+            &grid_cfg(strategy.clone(), PsBackendKind::InProc, CkptFormat::V1),
+            &opts,
+        )
+        .expect("v1 run");
+        let v2 = run_training(
+            &model,
+            &grid_cfg(strategy.clone(), PsBackendKind::InProc, CkptFormat::V2),
+            &opts,
+        )
+        .expect("v2 run");
+        let what = format!("v1-vs-v2/{}", strategy.name());
+        assert_training_identical(&v1, &v2, &what);
+        assert!(v1.ledger.bytes_written > 0, "{what}: v1 must account volume");
+        assert!(v2.ledger.bytes_written > 0, "{what}: v2 must account volume");
+        if strategy.priority() {
+            // priority capture was already row-granular: identical volume
+            assert_eq!(v2.ledger.bytes_written, v1.ledger.bytes_written, "{what}");
+        } else {
+            // full-content strategies now capture touched-row deltas:
+            // strictly below full snapshots on a Zipf-skewed stream
+            assert!(v2.ledger.bytes_written < v1.ledger.bytes_written,
+                    "{what}: delta capture must shrink I/O volume \
+                     ({} !< {})", v2.ledger.bytes_written, v1.ledger.bytes_written);
+        }
+    }
+}
+
+#[test]
+fn v2_is_backend_identical() {
+    let model = load_model();
+    let opts = RunOptions { schedule: schedule(), ..Default::default() };
+    let a = run_training(
+        &model,
+        &grid_cfg(Strategy::CprMfu, PsBackendKind::InProc, CkptFormat::V2),
+        &opts,
+    )
+    .expect("inproc v2");
+    let b = run_training(
+        &model,
+        &grid_cfg(Strategy::CprMfu, PsBackendKind::Threaded, CkptFormat::V2),
+        &opts,
+    )
+    .expect("threaded v2");
+    assert_training_identical(&a, &b, "v2/inproc-vs-threaded");
+    assert_eq!(a.ledger.bytes_written, b.ledger.bytes_written);
+}
+
+#[test]
+fn v2_durable_publication_does_not_perturb_training_and_loads_back() {
+    let model = load_model();
+    let dir = std::env::temp_dir().join("cpr_v2_e2e_durable");
+    std::fs::remove_dir_all(&dir).ok();
+    let opts = RunOptions { schedule: schedule(), ..Default::default() };
+    let mem = run_training(
+        &model,
+        &grid_cfg(Strategy::CprMfu, PsBackendKind::InProc, CkptFormat::V2),
+        &opts,
+    )
+    .expect("in-memory v2 run");
+    let mut cfg = grid_cfg(Strategy::CprMfu, PsBackendKind::InProc, CkptFormat::V2);
+    cfg.checkpoint.dir = Some(dir.to_str().unwrap().to_string());
+    let durable = run_training(&model, &cfg, &opts).expect("durable v2 run");
+    assert_training_identical(&mem, &durable, "v2/mem-vs-durable");
+    assert_eq!(mem.ledger.bytes_written, durable.ledger.bytes_written);
+
+    // the published chains load back through the auto-detecting reader
+    let d = dir.to_str().unwrap();
+    let loaded = DiskCheckpointer::load_latest(d)
+        .expect("v2 dir loads")
+        .expect("a checkpoint was published");
+    assert!(loaded.step > 0, "position marker advanced on majors");
+    let manifest = v2::read_manifest(&dir).unwrap().expect("MANIFEST exists");
+    assert_eq!(manifest.chains.len(), cfg.cluster.n_emb_ps);
+
+    // partial restore of one node touches only that node's chain: tear
+    // every OTHER node's base and node 0 must still come back
+    for chain in &manifest.chains[1..] {
+        let p = dir.join(&chain.base);
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+    }
+    let (snap, step, _samples) = DiskCheckpointer::load_latest_node(d, 0)
+        .expect("node 0 chain intact")
+        .expect("manifest exists");
+    assert_eq!(snap.node, 0);
+    assert_eq!(step, loaded.step);
+    assert_eq!(snap.shards, loaded.node_states()[0].shards());
+    assert!(DiskCheckpointer::load_latest(d).is_err(),
+            "the full-store load DOES read the torn chains");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn v2_crash_debris_is_invisible_to_readers() {
+    let model = load_model();
+    let dir = std::env::temp_dir().join("cpr_v2_e2e_crash");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut cfg = grid_cfg(Strategy::CprVanilla, PsBackendKind::InProc, CkptFormat::V2);
+    cfg.checkpoint.dir = Some(dir.to_str().unwrap().to_string());
+    let opts = RunOptions { schedule: schedule(), ..Default::default() };
+    run_training(&model, &cfg, &opts).expect("durable v2 run");
+    let d = dir.to_str().unwrap();
+    let before = DiskCheckpointer::load_latest(d).unwrap().unwrap();
+    // a writer killed mid-publish leaves renamed-but-unreferenced files
+    // and torn temp files; none of it may reach a reader
+    std::fs::write(dir.join("node0-delta-9999.bin"), b"CPRD-torn-mid-write").unwrap();
+    std::fs::write(dir.join(".MANIFEST.tmp"), b"CPR-MANIFEST-V2\nseq ").unwrap();
+    std::fs::write(dir.join(".node1-delta-9999.bin.tmp"), b"half").unwrap();
+    let after = DiskCheckpointer::load_latest(d).unwrap().unwrap();
+    assert_eq!(after, before, "debris must not change what readers see");
+    let (snap_before, ..) =
+        DiskCheckpointer::load_latest_node(d, 0).unwrap().unwrap();
+    assert_eq!(snap_before.shards, before.node_states()[0].shards());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -6,7 +6,8 @@
 //! sweeps every policy the registry knows about, so a newly registered
 //! policy is exercised end-to-end without editing this file.
 
-use cpr::config::{preset, PsBackendKind, Strategy};
+use cpr::checkpoint::disk::DiskCheckpointer;
+use cpr::config::{preset, CkptFormat, PsBackendKind, Strategy};
 use cpr::coordinator::{run_training, RunOptions};
 use cpr::failure::FailureEvent;
 use cpr::policy::registry;
@@ -17,6 +18,16 @@ fn strategies_under_test() -> Vec<Strategy> {
         Ok(name) => vec![Strategy::parse(&name)
             .expect("CPR_STRATEGY must be a registered strategy name")],
         Err(_) => registry::specs().into_iter().map(|s| s.strategy).collect(),
+    }
+}
+
+/// `CPR_CKPT_FORMAT=v2` re-runs the scenario on the incremental
+/// checkpoint engine (one CI leg does); default v1.
+fn ckpt_format_under_test() -> CkptFormat {
+    match std::env::var("CPR_CKPT_FORMAT") {
+        Ok(name) => CkptFormat::parse(&name)
+            .expect("CPR_CKPT_FORMAT must be v1 or v2"),
+        Err(_) => CkptFormat::V1,
     }
 }
 
@@ -51,6 +62,18 @@ fn strategy_end_to_end_on_the_threaded_backend() {
         cfg.checkpoint.strategy = strategy.clone();
         // tight target so CPR policies (incl. adaptive) save several times
         cfg.checkpoint.target_pls = 0.02;
+        let format = ckpt_format_under_test();
+        cfg.checkpoint.format = format;
+        let ckpt_dir = if format == CkptFormat::V2 {
+            // v2 legs exercise the durable chain path end to end
+            let dir = std::env::temp_dir()
+                .join(format!("cpr_matrix_v2_{}", strategy.name()));
+            std::fs::remove_dir_all(&dir).ok();
+            cfg.checkpoint.dir = Some(dir.to_str().unwrap().to_string());
+            Some(dir)
+        } else {
+            None
+        };
         // mixed schedule: two PS losses + one trainer loss, at fixed times
         // chosen away from every strategy's save boundaries (so the first
         // PS loss always lands strictly after the last marker and PLS is
@@ -97,6 +120,23 @@ fn strategy_end_to_end_on_the_threaded_backend() {
             assert!(r.plan.is_some(), "{name}: CPR strategies carry their plan");
             assert!(!r.fell_back,
                     "{name}: the paper cluster must not trigger fallback");
+        }
+        assert!(r.ledger.bytes_written > 0,
+                "{name}: saves must account their I/O volume");
+        if let Some(dir) = ckpt_dir {
+            // the v2 leg published real chains: a MANIFEST exists, the
+            // store loads back through the auto-detecting reader, and a
+            // single node restores from its own chain only
+            let d = dir.to_str().unwrap();
+            let loaded = DiskCheckpointer::load_latest(d)
+                .expect("v2 directory must load")
+                .expect("v2 leg must have published a checkpoint");
+            assert!(loaded.step > 0, "{name}: published marker must advance");
+            let (snap, _, _) = DiskCheckpointer::load_latest_node(d, 0)
+                .expect("node chain must load")
+                .expect("manifest exists");
+            assert_eq!(snap.shards, loaded.node_states()[0].shards(), "{name}");
+            std::fs::remove_dir_all(&dir).ok();
         }
     }
 }

@@ -24,6 +24,11 @@
 //!                       (disjoint-node batches — pure contention signal)
 //!   trainer_scaling[] — end-to-end steps/sec at 1/2/4/8 data-parallel
 //!                       trainers on both backends
+//!   telemetry_overhead[] — the instrumented gather seam with the span
+//!                       recorder off (one relaxed atomic load per site)
+//!                       vs on (thread-local buffer push); the acceptance
+//!                       bar reads the off-row against the pre-telemetry
+//!                       baseline (must be within noise)
 //!   pjrt_*            — L2 executables from Rust: train_step / predict
 //!                       latency, and the full e2e step
 //!
@@ -90,6 +95,9 @@ fn main() {
     }
     if want("trainer_scaling") {
         trainer_scaling(quick);
+    }
+    if want("telemetry_overhead") {
+        telemetry_overhead(quick);
     }
     if want("pjrt") {
         pjrt(quick);
@@ -309,6 +317,44 @@ fn trainer_scaling(quick: bool) {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Telemetry overhead — span recorder off vs on through a real seam
+// ---------------------------------------------------------------------------
+
+/// Drive the sharded handle's instrumented gather (the hottest span site)
+/// with the recorder disabled and enabled. The off row IS the disabled-path
+/// price every un-telemetered run pays: one relaxed atomic load per site.
+/// The on row adds the monotonic-clock reads + thread-local buffer push.
+fn telemetry_overhead(quick: bool) {
+    use cpr::config::TelemetryConfig;
+    use cpr::telemetry::TelemetrySink;
+    println!("\n-- telemetry_overhead: instrumented gather, recorder off vs on --");
+    let rows = 100_000usize;
+    let dim = 16usize;
+    let shared = ShardedPs::new(PsCluster::new(vec![TableInfo { rows, dim }], 8, 7));
+    let mut rng = Rng::new(13);
+    let batch = 2048usize;
+    let indices: Vec<u32> =
+        (0..batch).map(|_| rng.below(rows as u64) as u32).collect();
+    let mut out = vec![0.0f32; batch * dim];
+
+    bench("telemetry_overhead[off,rows=1e5]", quick)
+        .throughput(batch as u64)
+        .run(|| shared.gather_pooled(&indices, 1, &mut out));
+
+    let mut sink = TelemetrySink::from_config(&TelemetryConfig {
+        enabled: true,
+        dir: None,
+        progress_steps: 0,
+    });
+    bench("telemetry_overhead[on,rows=1e5]", quick)
+        .throughput(batch as u64)
+        .run(|| shared.gather_pooled(&indices, 1, &mut out));
+    let stats = sink.export().expect("telemetry drain");
+    println!("  -> {} spans recorded while on (drained in-memory; no dir set)",
+             stats.spans);
 }
 
 // ---------------------------------------------------------------------------

@@ -97,6 +97,7 @@ fn writer_loop(mut ctx: WriterCtx, rx: Receiver<Msg>) {
     while let Ok(msg) = rx.recv() {
         match msg {
             Msg::Nodes(snaps) => {
+                let _t = crate::telemetry::span("ckpt_apply");
                 if !ctx.write_delay.is_zero() {
                     std::thread::sleep(ctx.write_delay);
                 }
@@ -109,6 +110,7 @@ fn writer_loop(mut ctx: WriterCtx, rx: Receiver<Msg>) {
                 cvar.notify_one();
             }
             Msg::Rows { table, rows, dim, data, opt } => {
+                let _t = crate::telemetry::span("ckpt_apply");
                 if !ctx.write_delay.is_zero() {
                     std::thread::sleep(ctx.write_delay);
                 }
@@ -116,6 +118,7 @@ fn writer_loop(mut ctx: WriterCtx, rx: Receiver<Msg>) {
                 ctx.in_flight.fetch_sub(1, Ordering::SeqCst);
             }
             Msg::Mark { mlp, step, samples, force_base } => {
+                let _t = crate::telemetry::span("ckpt_publish");
                 ctx.store.mark_position(mlp, step, samples);
                 if let Some(engine) = ctx.engine.as_mut() {
                     if let Err(e) = engine.publish(&mut ctx.store, true, force_base) {
@@ -137,6 +140,7 @@ fn writer_loop(mut ctx: WriterCtx, rx: Receiver<Msg>) {
                     .any(|n| n.dirty_row_count() > 0);
                 if let Some(engine) = ctx.engine.as_mut() {
                     if any_dirty {
+                        let _t = crate::telemetry::span("ckpt_publish");
                         if let Err(e) = engine.publish(&mut ctx.store, false, false) {
                             ctx.record_io_error(e);
                         }
@@ -158,10 +162,15 @@ fn writer_loop(mut ctx: WriterCtx, rx: Receiver<Msg>) {
                                     ctx.store.samples));
             }
             Msg::Flush { ack } => {
+                // a flush is the export barrier: push the writer thread's
+                // buffered spans to the journal before acking, so an
+                // export right after flush() sees them
+                crate::telemetry::flush_thread();
                 let _ = ack.send(());
             }
         }
     }
+    crate::telemetry::flush_thread();
 }
 
 impl CheckpointPipeline {
@@ -251,14 +260,17 @@ impl CheckpointPipeline {
     ) {
         let (lock, cvar) = &*self.full_slots;
         {
+            let _w = crate::telemetry::span("ckpt_backpressure_wait");
             let mut slots = lock.lock().unwrap();
             while *slots == 0 {
                 slots = cvar.wait(slots).unwrap();
             }
             *slots -= 1;
         }
-        let snaps: Vec<NodeSnapshot> =
-            (0..backend.n_nodes()).map(|n| backend.snapshot_node(n)).collect();
+        let snaps: Vec<NodeSnapshot> = {
+            let _t = crate::telemetry::span("ckpt_capture");
+            (0..backend.n_nodes()).map(|n| backend.snapshot_node(n)).collect()
+        };
         self.in_flight.fetch_add(1, Ordering::SeqCst);
         self.send(Msg::Nodes(snaps));
         self.send(Msg::Mark { mlp, step, samples, force_base: false });
@@ -267,6 +279,7 @@ impl CheckpointPipeline {
     /// Capture `rows` of `table` (priority save) and hand them to the
     /// writer. Does not move the position marker.
     pub fn save_rows<B: PsDataPlane + ?Sized>(&self, backend: &B, table: usize, rows: &[u32]) {
+        let _t = crate::telemetry::span("ckpt_capture_rows");
         let dim = backend.tables()[table].dim;
         let (data, opt) = backend.read_rows(table, rows);
         self.in_flight.fetch_add(1, Ordering::SeqCst);
@@ -286,6 +299,7 @@ impl CheckpointPipeline {
         table: usize,
         rows: &[u32],
     ) {
+        let _t = crate::telemetry::span("ckpt_capture_rows");
         let dim = backend.tables()[table].dim;
         let n = backend.n_nodes();
         // carry (locals, globals) together so the mirror application uses
@@ -336,6 +350,7 @@ impl CheckpointPipeline {
     /// submitted saves have been applied — FIFO) and load it into the
     /// backend.
     pub fn restore_node<B: PsControlPlane + ?Sized>(&self, backend: &B, node: usize) {
+        let _t = crate::telemetry::span_node("restore_node", node);
         let (reply_tx, reply_rx) = mpsc::channel();
         self.send(Msg::GetNode { node, reply: reply_tx });
         let snap = reply_rx.recv().expect("checkpoint writer died");

@@ -40,8 +40,14 @@ use crate::config::CkptFormat;
 pub fn publish(dir: &Path, store: &CheckpointStore, keep: usize) -> Result<()> {
     let path = dir.join(format!("ckpt-{}.bin", store.step));
     let tmp = dir.join(format!(".ckpt-{}.tmp", store.step));
-    store.write_file(&tmp)?; // writes + fsyncs the data
-    std::fs::rename(&tmp, &path)?; // atomic data publish
+    {
+        let _t = crate::telemetry::span("ckpt_write");
+        store.write_file(&tmp)?; // writes + fsyncs the data
+    }
+    {
+        let _t = crate::telemetry::span("ckpt_rename");
+        std::fs::rename(&tmp, &path)?; // atomic data publish
+    }
     // renames are directory-metadata updates: without a directory fsync
     // the LATEST rename below could become durable while the data rename
     // is lost, leaving a manifest pointing at nothing

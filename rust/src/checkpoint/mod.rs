@@ -60,6 +60,7 @@ use crate::embedding::TableInfo;
 /// manifest can name the renamed files. The ONE copy of this primitive,
 /// shared so the two formats' crash-consistency guarantees cannot drift.
 pub(crate) fn fsync_dir(dir: &Path) -> Result<()> {
+    let _t = crate::telemetry::span("ckpt_fsync_dir");
     std::fs::File::open(dir)
         .and_then(|d| d.sync_all())
         .with_context(|| format!("fsync checkpoint dir {}", dir.display()))
@@ -80,12 +81,18 @@ where
     let mut w = BufWriter::new(file);
     write(&mut w)?;
     w.flush()?;
-    w.get_ref()
-        .sync_all()
-        .with_context(|| format!("fsync {}", tmp.display()))?;
+    {
+        let _t = crate::telemetry::span("ckpt_fsync");
+        w.get_ref()
+            .sync_all()
+            .with_context(|| format!("fsync {}", tmp.display()))?;
+    }
     let path = dir.join(name);
-    std::fs::rename(&tmp, &path)
-        .with_context(|| format!("publishing {}", path.display()))?;
+    {
+        let _t = crate::telemetry::span("ckpt_rename");
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing {}", path.display()))?;
+    }
     Ok(std::fs::metadata(&path)?.len())
 }
 
@@ -460,6 +467,7 @@ impl CheckpointStore {
         // crash-consistency: the data must be durable BEFORE the caller
         // publishes a manifest pointing at it
         f.flush()?;
+        let _t = crate::telemetry::span("ckpt_fsync");
         f.get_ref().sync_all().context("fsync checkpoint data")?;
         Ok(())
     }

@@ -533,6 +533,7 @@ impl V2Engine {
         let seq = self.manifest.as_ref().map_or(0, |m| m.seq) + 1;
 
         // --- plan per-node actions (compaction needs chain sizes) ------
+        let plan_span = crate::telemetry::span("ckpt_plan");
         let mut actions = Vec::with_capacity(n_nodes);
         for (n, st) in store.node_states().iter().enumerate() {
             let action = match prev.map(|m| &m.chains[n]) {
@@ -554,6 +555,7 @@ impl V2Engine {
             };
             actions.push(action);
         }
+        drop(plan_span);
 
         // --- build the new chain set + one write job per dirty node ----
         let mut chains = Vec::with_capacity(n_nodes);
@@ -570,7 +572,10 @@ impl V2Engine {
                     chains.push(NodeChain { base: name.clone(), deltas: Vec::new() });
                     job_names.push(name.clone());
                     let dir = dir.clone();
-                    jobs.push(Box::new(move || write_base(&dir, &name, n, st)));
+                    jobs.push(Box::new(move || {
+                        let _t = crate::telemetry::span_node("ckpt_write_base", n);
+                        write_base(&dir, &name, n, st)
+                    }));
                 }
                 Action::Delta => {
                     let name = format!("node{n}-delta-{seq}.bin");
@@ -580,6 +585,7 @@ impl V2Engine {
                     job_names.push(name.clone());
                     let dir = dir.clone();
                     jobs.push(Box::new(move || {
+                        let _t = crate::telemetry::span_node("ckpt_write_delta", n);
                         let tables = delta_tables(st);
                         write_delta(&dir, &name, n, &tables)
                     }));
@@ -594,6 +600,7 @@ impl V2Engine {
 
         // --- meta ------------------------------------------------------
         let meta = if update_meta || prev.is_none() {
+            let _t = crate::telemetry::span("ckpt_meta");
             let name = format!("meta-{seq}.bin");
             let bytes =
                 write_meta(&self.dir, &name, &store.mlp, store.step, store.samples)?;
@@ -610,7 +617,10 @@ impl V2Engine {
 
         // --- manifest: the publish point -------------------------------
         let manifest = Manifest { seq, meta, chains };
-        write_manifest(&self.dir, &manifest)?;
+        {
+            let _t = crate::telemetry::span("ckpt_manifest");
+            write_manifest(&self.dir, &manifest)?;
+        }
         total += std::fs::metadata(self.dir.join(MANIFEST))?.len();
         self.manifest = Some(manifest);
         self.synced = true;
@@ -619,7 +629,11 @@ impl V2Engine {
         }
 
         // --- GC: only after the new manifest is durable ----------------
-        self.gc()?;
+        {
+            let _t = crate::telemetry::span("ckpt_gc");
+            self.gc()?;
+        }
+        crate::telemetry::observe("bytes_per_publish", total);
         Ok(total)
     }
 

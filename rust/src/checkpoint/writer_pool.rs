@@ -71,17 +71,26 @@ impl WriterPool {
         let next = AtomicUsize::new(0);
         std::thread::scope(|s| {
             for _ in 0..n_workers {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n_jobs {
-                        break;
+                s.spawn(|| {
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_jobs {
+                            break;
+                        }
+                        let job = queue[i]
+                            .lock()
+                            .unwrap()
+                            .take()
+                            .expect("each job is claimed exactly once");
+                        let out = {
+                            let _t = crate::telemetry::span("ckpt_pool_job");
+                            job()
+                        };
+                        *results[i].lock().unwrap() = Some(out);
                     }
-                    let job = queue[i]
-                        .lock()
-                        .unwrap()
-                        .take()
-                        .expect("each job is claimed exactly once");
-                    *results[i].lock().unwrap() = Some(job());
+                    // pool workers are short-lived scoped threads: push
+                    // their buffered spans to the journal before exit
+                    crate::telemetry::flush_thread();
                 });
             }
         });

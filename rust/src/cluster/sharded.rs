@@ -35,6 +35,7 @@ use std::sync::{
 };
 
 use crate::embedding::{EmbOptimizer, TableInfo};
+use crate::telemetry;
 
 use super::{PsBackend, PsDataPlane, StatCounters};
 
@@ -133,8 +134,12 @@ impl<B: PsBackend> ShardedPs<B> {
             touched[row as usize % n] = true;
         }
         for (node, &is_touched) in touched.iter().enumerate() {
-            self.inner.turnstiles[node].wait_for(ticket);
+            {
+                let _t = telemetry::span_node("turnstile_wait", node);
+                self.inner.turnstiles[node].wait_for(ticket);
+            }
             if is_touched {
+                let _a = telemetry::span_node("apply_node", node);
                 self.inner
                     .backend
                     .apply_grads_node(node, indices, hotness, grads, lr, opt);
@@ -160,6 +165,7 @@ impl<B: PsBackend> ShardedPs<B> {
     /// in-flight data-plane call drains; the driver calls this at the
     /// step barrier, where the handle is idle and acquisition is free.
     pub fn quiesce(&self) -> PsQuiesce<'_, B> {
+        let _q = telemetry::span("quiesce");
         PsQuiesce {
             _epoch: self.inner.epoch.write().unwrap_or_else(PoisonError::into_inner),
             backend: &self.inner.backend,
@@ -194,6 +200,7 @@ impl<B: PsBackend> PsDataPlane for ShardedPs<B> {
     }
 
     fn gather_pooled(&self, indices: &[u32], hotness: usize, out: &mut [f32]) {
+        let _g = telemetry::span("gather");
         let _epoch = self.epoch_read();
         self.inner.backend.gather_pooled(indices, hotness, out);
     }

@@ -393,6 +393,7 @@ impl PsDataPlane for ThreadedCluster {
 
 impl PsControlPlane for ThreadedCluster {
     fn snapshot_node(&self, node: usize) -> NodeSnapshot {
+        let _t = crate::telemetry::span_node("ps_snapshot", node);
         self.stats.bump_snapshot();
         let (reply_tx, reply_rx) = mpsc::channel();
         self.sender(node)
@@ -402,6 +403,7 @@ impl PsControlPlane for ThreadedCluster {
     }
 
     fn load_node(&self, node: usize, shards: &[Vec<f32>], opt: &[Vec<f32>]) {
+        let _t = crate::telemetry::span_node("ps_load", node);
         let (ack_tx, ack_rx) = mpsc::channel();
         self.sender(node)
             .send(NodeMsg::Load { shards: shards.to_vec(), opt: opt.to_vec(), ack: ack_tx })

@@ -286,6 +286,30 @@ pub struct TrainConfig {
     pub eval_every: usize,
 }
 
+/// Telemetry plane switches (see `crate::telemetry`). Off by default:
+/// the instrumented hot path then costs one relaxed atomic load per
+/// site, and telemetry is strictly read-only w.r.t. training state, so
+/// enabling it cannot move any trained float (asserted by
+/// `tests/telemetry_neutrality.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryConfig {
+    /// record spans + metrics (`--telemetry`, `[telemetry] enabled`)
+    pub enabled: bool,
+    /// export directory for `trace.json` / `metrics.json` /
+    /// `metrics.csv`; setting it implies `enabled`
+    /// (`--telemetry-dir`, `[telemetry] dir`)
+    pub dir: Option<String>,
+    /// print a one-line live progress report every n global steps
+    /// (0 = never; only when telemetry is enabled)
+    pub progress_steps: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        Self { enabled: false, dir: None, progress_steps: 0 }
+    }
+}
+
 /// Everything a training job needs.
 #[derive(Clone, Debug, PartialEq)]
 pub struct JobConfig {
@@ -294,6 +318,7 @@ pub struct JobConfig {
     pub cluster: ClusterConfig,
     pub checkpoint: CheckpointConfig,
     pub train: TrainConfig,
+    pub telemetry: TelemetryConfig,
     /// root dir holding AOT artifacts (default "artifacts")
     pub artifacts_dir: String,
 }
@@ -424,6 +449,7 @@ pub fn preset(name: &str) -> Result<JobConfig> {
             seed: 99,
             eval_every: 0,
         },
+        telemetry: TelemetryConfig::default(),
         artifacts_dir: "artifacts".into(),
         model,
     })
@@ -506,6 +532,14 @@ impl JobConfig {
             self.train.emb_optimizer = EmbOptimizer::parse(v.as_str()?)?;
         }
         set!("train", "eval_every", self.train.eval_every, as_usize);
+        if let Some(v) = get(doc, "telemetry", "enabled") {
+            self.telemetry.enabled = v.as_bool()?;
+        }
+        if let Some(v) = get(doc, "telemetry", "dir") {
+            self.telemetry.dir = Some(v.as_str()?.to_string());
+            self.telemetry.enabled = true;
+        }
+        set!("telemetry", "progress_steps", self.telemetry.progress_steps, as_usize);
         Ok(())
     }
 }
@@ -659,6 +693,30 @@ mod tests {
             save_bw_gb_h = 250.0
         "#).unwrap();
         assert_eq!(cfg.cluster.save_bw_gb_h, Some(250.0));
+    }
+
+    #[test]
+    fn telemetry_defaults_off_and_toml_overrides() {
+        let base = preset("mini").unwrap();
+        assert!(!base.telemetry.enabled, "telemetry must default off");
+        assert_eq!(base.telemetry.dir, None);
+        assert_eq!(base.telemetry.progress_steps, 0);
+        let cfg = JobConfig::from_toml(r#"
+            preset = "mini"
+            [telemetry]
+            enabled = true
+            progress_steps = 50
+        "#).unwrap();
+        assert!(cfg.telemetry.enabled);
+        assert_eq!(cfg.telemetry.progress_steps, 50);
+        // setting the export dir implies enablement
+        let cfg = JobConfig::from_toml(r#"
+            preset = "mini"
+            [telemetry]
+            dir = "/tmp/telemetry"
+        "#).unwrap();
+        assert!(cfg.telemetry.enabled);
+        assert_eq!(cfg.telemetry.dir.as_deref(), Some("/tmp/telemetry"));
     }
 
     #[test]

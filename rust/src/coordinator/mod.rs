@@ -235,6 +235,11 @@ fn run_training_core<B: PsBackend + 'static>(
     );
 
     let wall_start = std::time::Instant::now();
+    // telemetry is observation-only: a no-op sink unless [telemetry] (or
+    // --telemetry/--telemetry-dir) turned it on, and strictly read-only
+    // w.r.t. training state either way — golden suites run bit-identical
+    // with it enabled (asserted by tests/telemetry_neutrality.rs)
+    let mut sink = crate::telemetry::TelemetrySink::from_config(&cfg.telemetry);
     let n_emb = cfg.cluster.n_emb_ps;
     let batch = m.batch;
     // one global step = one batch per trainer
@@ -318,6 +323,9 @@ fn run_training_core<B: PsBackend + 'static>(
         // one global step: every trainer gathers concurrently, hits the
         // gather barrier, computes on its replica, then applies its sparse
         // update in rank order (see the trainer module)
+        // `_step_span` lives to the end of the iteration, so the "step"
+        // span encloses compute, captures, and any failure handling
+        let _step_span = crate::telemetry::span("step");
         let step_params = Arc::new(std::mem::take(&mut host_params));
         let results = pool.step(step, step_params)?;
         let mean_loss =
@@ -343,6 +351,17 @@ fn run_training_core<B: PsBackend + 'static>(
             let params = model.params_from_host(&host_params);
             let (a, _) = evaluate(model, cfg, &dataset, &shared, &params)?;
             eval_auc_curve.push(step, a);
+        }
+        if sink.enabled()
+            && cfg.telemetry.progress_steps > 0
+            && step % cfg.telemetry.progress_steps as u64 == 0
+        {
+            // one-line live progress report (stderr, like the run logs)
+            eprintln!(
+                "[telemetry] step {step}/{total_steps}  loss {mean_loss:.4}  \
+                 sim clock {clock_h:.3} h  ckpt in-flight {}",
+                pipeline.in_flight()
+            );
         }
 
         // ---- checkpoint saves up to the current clock ----
@@ -373,11 +392,13 @@ fn run_training_core<B: PsBackend + 'static>(
                 marked_samples = mark.samples;
             }
         }
+        crate::telemetry::gauge_set("ckpt_in_flight", pipeline.in_flight() as f64);
 
         // ---- failures that fire at/before the current clock ----
         while next_event < schedule.len() && schedule[next_event].time_h <= clock_h {
             let ev = schedule[next_event].clone();
             next_event += 1;
+            crate::telemetry::event("failure");
             // adaptive save policies re-estimate the MTBF from these
             policies.save.observe_failure(clock_h);
             // the recovery policy charges the ledger, runs the PS-side
@@ -436,6 +457,14 @@ fn run_training_core<B: PsBackend + 'static>(
     // drain the pipeline: every capture applied + published (surfaces any
     // writer IO error, like the old synchronous path did)
     pipeline.flush()?;
+
+    // export the telemetry journal now — after the pool has stopped and the
+    // writer drained (both flush their thread-local buffers on those paths)
+    // and before the final evaluation, so eval-time gathers don't pollute
+    // the training trace. Export failure is a warning, never a train error.
+    if let Err(e) = sink.export() {
+        eprintln!("warning: telemetry export failed: {e:#}");
+    }
 
     // --- final evaluation --------------------------------------------------------
     let params = model.params_from_host(&host_params);

@@ -31,6 +31,7 @@ pub mod pls;
 pub mod policy;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod testing;
 pub mod trace;
 pub mod trainer;

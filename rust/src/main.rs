@@ -92,6 +92,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .opt("seed", "7", "failure schedule seed")
         .opt("eval-every", "0", "eval AUC every n steps (0 = final only)")
         .opt("artifacts", "artifacts", "artifacts directory")
+        .flag("telemetry", "enable the telemetry plane (in-memory spans + metrics)")
+        .opt("telemetry-dir", "",
+             "export chrome trace + metrics snapshots here (implies --telemetry)")
         .parse(args)?;
     let mut cfg = job_config_from(&cli)?;
     cfg.artifacts_dir = cli.get("artifacts").to_string();
@@ -103,6 +106,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
     }
     if !cli.get("ckpt-dir").is_empty() {
         cfg.checkpoint.dir = Some(cli.get("ckpt-dir").to_string());
+    }
+    if cli.get_flag("telemetry") {
+        cfg.telemetry.enabled = true;
+    }
+    if !cli.get("telemetry-dir").is_empty() {
+        cfg.telemetry.dir = Some(cli.get("telemetry-dir").to_string());
+        cfg.telemetry.enabled = true;
     }
 
     let n_failures = cli.get_usize("failures")?;

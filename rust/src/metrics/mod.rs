@@ -19,7 +19,10 @@ pub fn auc(scores: &[f32], labels: &[f32]) -> f64 {
         return 0.5;
     }
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // total_cmp, not partial_cmp().unwrap(): a NaN score (a diverged
+    // model is exactly when you evaluate) must degrade the ranking, not
+    // panic the evaluation
+    order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
     // midranks over tied groups
     let mut rank_sum_pos = 0.0f64;
     let mut i = 0;
@@ -83,8 +86,13 @@ impl OverheadLedger {
     }
 
     /// Overhead as a fraction of useful training time `t_total_h`
-    /// (the paper reports overhead / total training time).
+    /// (the paper reports overhead / total training time). A zero-length
+    /// job has zero overhead fraction — not NaN (0/0) or inf (x/0),
+    /// which would poison every downstream report that averages it.
     pub fn fraction_of(&self, t_total_h: f64) -> f64 {
+        if t_total_h == 0.0 {
+            return 0.0;
+        }
         self.total_h() / t_total_h
     }
 
@@ -187,6 +195,31 @@ mod tests {
     #[test]
     fn auc_single_class_is_half() {
         assert_eq!(auc(&[0.3, 0.6], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn auc_tolerates_nan_scores() {
+        // regression: the sort used partial_cmp().unwrap(), so a single
+        // NaN score (diverged model) panicked the whole evaluation
+        let scores = [0.1, f32::NAN, 0.8, 0.4f32];
+        let labels = [0.0, 0.0, 1.0, 1.0f32];
+        let a = auc(&scores, &labels);
+        assert!(a.is_finite(), "NaN scores must yield a finite AUC, got {a}");
+        assert!((0.0..=1.0).contains(&a));
+        // all-NaN scores: still a finite ranking under total_cmp
+        let a = auc(&[f32::NAN, f32::NAN], &[0.0, 1.0]);
+        assert!(a.is_finite());
+    }
+
+    #[test]
+    fn fraction_of_zero_total_time_is_zero() {
+        // regression: 0-hour jobs divided by zero (0/0 = NaN with an
+        // empty ledger, x/0 = inf otherwise)
+        let empty = OverheadLedger::default();
+        assert_eq!(empty.fraction_of(0.0), 0.0);
+        let l = OverheadLedger { save_h: 1.0, ..Default::default() };
+        assert_eq!(l.fraction_of(0.0), 0.0);
+        assert!(l.fraction_of(0.0).is_finite());
     }
 
     #[test]

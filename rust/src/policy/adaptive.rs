@@ -106,6 +106,7 @@ impl SavePolicy for AdaptiveInterval {
             // start, so a mid-job "would fall back" just freezes the
             // interval instead of switching semantics
             if p.use_partial && (p.t_save_h - self.interval_h).abs() > 1e-9 {
+                crate::telemetry::event("replan");
                 ledger.replans.push((ctx.clock_h, p.t_save_h));
                 self.interval_h = p.t_save_h;
             }

@@ -83,8 +83,14 @@ impl RecoveryPolicy for PartialRestore {
             for &v in &ev.victims {
                 ledger.bytes_restored +=
                     node_content_io_bytes(ps.data.tables(), ps.data.n_nodes(), v);
-                ps.ctl.kill_node(v);
-                ps.ctl.respawn_node(v);
+                {
+                    let _t = crate::telemetry::span_node("recovery_kill", v);
+                    ps.ctl.kill_node(v);
+                }
+                {
+                    let _t = crate::telemetry::span_node("recovery_respawn", v);
+                    ps.ctl.respawn_node(v);
+                }
                 pipeline.restore_node(ps.ctl, v);
             }
         }
@@ -135,7 +141,10 @@ impl RecoveryPolicy for FullRewind {
         ledger.reschedule_h += self.o_res_h;
         let t_last = ctx.marked_step as f64 * ctx.dt_h;
         ledger.lost_h += (ctx.clock_h - t_last).max(0.0);
-        let (mlp, ckpt_step, _samples) = pipeline.restore_all(ps.ctl);
+        let (mlp, ckpt_step, _samples) = {
+            let _t = crate::telemetry::span("restore_all");
+            pipeline.restore_all(ps.ctl)
+        };
         // a rewind reads everything back: every table + the dense params
         ledger.bytes_restored += full_content_io_bytes(ps.data.tables(), &mlp);
         RecoveryAction::Rewind { mlp, step: ckpt_step }

@@ -1,0 +1,263 @@
+//! Log-bucketed histograms + the metrics registry.
+//!
+//! [`Histogram`] is an HdrHistogram-style log-linear sketch: values below
+//! 16 get exact unit buckets; above that each power-of-two octave is split
+//! into 8 sub-buckets, so any recorded value lands in a bucket whose width
+//! is at most 1/8 of its magnitude (~12.5 % relative quantile error,
+//! constant 4 KB memory per histogram, O(1) insert). That is the right
+//! trade for latency telemetry: p50/p95/p99/p999 of microsecond spans,
+//! never exact percentiles.
+//!
+//! [`Registry`] is the plain-data map of counters / gauges / histograms
+//! keyed by [`MetricKey`] (metric name + optional static label, e.g.
+//! `apply_node{node=3}`). It has no locking and no global state — the
+//! process-wide instance and its enabled-gating live in
+//! [`super`](crate::telemetry); this file stays purely computational so
+//! the bucket math is unit-testable in isolation.
+
+use std::collections::BTreeMap;
+
+const SUB_BITS: u32 = 3;
+/// Sub-buckets per power-of-two octave.
+const SUB: usize = 1 << SUB_BITS;
+/// Values below this get exact unit buckets.
+const EXACT: u64 = 2 * SUB as u64;
+/// 16 exact buckets + 8 sub-buckets for each octave 2^4 ..= 2^63.
+pub const N_BUCKETS: usize = EXACT as usize + (63 - SUB_BITS as usize) * SUB;
+
+fn bucket_index(v: u64) -> usize {
+    if v < EXACT {
+        return v as usize;
+    }
+    let exp = 63 - v.leading_zeros(); // >= SUB_BITS + 1
+    let sub = ((v >> (exp - SUB_BITS)) as usize) & (SUB - 1);
+    EXACT as usize + (exp - SUB_BITS - 1) as usize * SUB + sub
+}
+
+/// Smallest value that lands in bucket `idx` (inverse of `bucket_index`).
+fn bucket_floor(idx: usize) -> u64 {
+    if idx < EXACT as usize {
+        return idx as u64;
+    }
+    let b = idx - EXACT as usize;
+    let exp = SUB_BITS + 1 + (b / SUB) as u32;
+    let sub = (b % SUB) as u64;
+    (1u64 << exp) + (sub << (exp - SUB_BITS))
+}
+
+/// Representative value reported for bucket `idx`: exact for the unit
+/// buckets, bucket midpoint above (half the ~12.5 % bucket width off at
+/// worst).
+fn bucket_rep(idx: usize) -> u64 {
+    if idx < EXACT as usize {
+        return idx as u64;
+    }
+    let b = idx - EXACT as usize;
+    let exp = SUB_BITS + 1 + (b / SUB) as u32;
+    let width = 1u64 << (exp - SUB_BITS);
+    bucket_floor(idx) + width / 2
+}
+
+/// Fixed-memory log-bucketed histogram of non-negative integer samples
+/// (microseconds, bytes, rows — unit is the caller's convention).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self { counts: vec![0; N_BUCKETS], total: 0, sum: 0.0, min: u64::MAX, max: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.total += 1;
+        self.sum += v as f64;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.min }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.sum / self.total as f64 }
+    }
+
+    /// The q-quantile (q in [0, 1]) to within the bucket resolution,
+    /// clamped to the observed [min, max] so small samples report sane
+    /// tails (p999 of 3 samples is the max, not a bucket ceiling).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_rep(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// A metric's identity: name + at most one static label (node id, rank —
+/// all-`'static` so hot-path keying allocates nothing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct MetricKey {
+    pub name: &'static str,
+    pub label: Option<(&'static str, u64)>,
+}
+
+impl MetricKey {
+    pub fn plain(name: &'static str) -> Self {
+        Self { name, label: None }
+    }
+
+    pub fn node(name: &'static str, node: usize) -> Self {
+        Self { name, label: Some(("node", node as u64)) }
+    }
+
+    /// Prometheus-flavoured rendering: `name` or `name{node=3}`.
+    pub fn render(&self) -> String {
+        match self.label {
+            None => self.name.to_string(),
+            Some((k, v)) => format!("{}{{{k}={v}}}", self.name),
+        }
+    }
+}
+
+/// Plain-data metric store: monotonically increasing counters, last-value
+/// gauges, and log-bucketed histograms.
+#[derive(Default, Clone, Debug)]
+pub struct Registry {
+    pub counters: BTreeMap<MetricKey, u64>,
+    pub gauges: BTreeMap<MetricKey, f64>,
+    pub hists: BTreeMap<MetricKey, Histogram>,
+}
+
+impl Registry {
+    pub fn counter_add(&mut self, key: MetricKey, delta: u64) {
+        *self.counters.entry(key).or_insert(0) += delta;
+    }
+
+    pub fn gauge_set(&mut self, key: MetricKey, v: f64) {
+        self.gauges.insert(key, v);
+    }
+
+    pub fn observe(&mut self, key: MetricKey, v: u64) {
+        self.hists.entry(key).or_default().observe(v);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_and_floor_are_consistent() {
+        // every bucket's floor maps back to that bucket, and indices are
+        // monotone in the value
+        for idx in 0..N_BUCKETS {
+            assert_eq!(bucket_index(bucket_floor(idx)), idx, "idx {idx}");
+        }
+        let mut last = 0;
+        for v in [0u64, 1, 7, 15, 16, 17, 31, 32, 100, 1000, 65_535,
+                  1 << 20, (1 << 40) + 12345, u64::MAX] {
+            let idx = bucket_index(v);
+            assert!(idx >= last, "index must be monotone at v={v}");
+            assert!(idx < N_BUCKETS);
+            assert!(bucket_floor(idx) <= v, "floor exceeds value at v={v}");
+            last = idx;
+        }
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = Histogram::default();
+        for v in [0u64, 1, 2, 3, 5, 15] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 15);
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(0.5), 2);
+        assert_eq!(h.quantile(1.0), 15);
+    }
+
+    #[test]
+    fn quantiles_within_bucket_resolution() {
+        let mut h = Histogram::default();
+        for v in 1..=10_000u64 {
+            h.observe(v);
+        }
+        for (q, want) in [(0.5, 5_000.0), (0.95, 9_500.0), (0.99, 9_900.0)] {
+            let got = h.quantile(q) as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.13, "q={q}: got {got}, want ~{want} (rel {rel})");
+        }
+        assert!((h.mean() - 5_000.5).abs() < 1e-6);
+        assert_eq!(h.quantile(1.0), 10_000);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.99), 0);
+    }
+
+    #[test]
+    fn metric_key_renders_labels() {
+        assert_eq!(MetricKey::plain("gather").render(), "gather");
+        assert_eq!(MetricKey::node("apply_node", 3).render(), "apply_node{node=3}");
+        // keys order by name then label, so per-node families group
+        assert!(MetricKey::node("a", 1) < MetricKey::node("a", 2));
+        assert!(MetricKey::node("a", 9) < MetricKey::plain("b"));
+    }
+
+    #[test]
+    fn registry_accumulates() {
+        let mut r = Registry::default();
+        assert!(r.is_empty());
+        r.counter_add(MetricKey::plain("c"), 2);
+        r.counter_add(MetricKey::plain("c"), 3);
+        r.gauge_set(MetricKey::plain("g"), 1.5);
+        r.gauge_set(MetricKey::plain("g"), 2.5);
+        r.observe(MetricKey::node("h", 0), 100);
+        assert_eq!(r.counters[&MetricKey::plain("c")], 5);
+        assert_eq!(r.gauges[&MetricKey::plain("g")], 2.5);
+        assert_eq!(r.hists[&MetricKey::node("h", 0)].count(), 1);
+    }
+}

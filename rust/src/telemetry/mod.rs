@@ -1,0 +1,531 @@
+//! Telemetry plane: wall-clock spans, metrics, and trace export.
+//!
+//! Everything the crate's other instruments measure is *emulated* time
+//! (the `OverheadLedger`'s hours). This module measures what the real
+//! threads do: how long a gather or a per-node apply takes, how long a
+//! trainer parks on the gather barrier or a turnstile, how long each
+//! stage of a durable checkpoint publish runs. It is strictly read-only
+//! with respect to training state — no RNG stream, no ordering, no
+//! ledgered quantity is touched, so every golden bit-equality suite
+//! passes with telemetry enabled (asserted by
+//! `tests/telemetry_neutrality.rs`).
+//!
+//! ## Recording model
+//!
+//! * A process-global `AtomicBool` gates everything. **The entire cost of
+//!   the disabled path is one relaxed atomic load** — no clock read, no
+//!   allocation, no lock.
+//! * [`span`] / [`span_node`] return a guard that stamps a monotonic
+//!   start time ([`Instant`] against a process-wide epoch) and records a
+//!   `(name, node, t_start, t_end)` [`SpanRec`] into a **per-thread
+//!   buffer** when dropped. Buffers drain into the global journal every
+//!   [`FLUSH_THRESHOLD`] spans and on thread exit (a thread-local `Drop`
+//!   — this is what captures the writer pool's unnamed scoped workers),
+//!   so the hot path takes the journal lock ~1/64th of the time.
+//! * [`counter_add`] / [`gauge_set`] / [`observe`] feed the metrics
+//!   [`Registry`] directly — used only at low-frequency sites (rows per
+//!   step, queue depth, bytes per publish). High-frequency per-node
+//!   latency histograms are *not* fed on the hot path: they are folded
+//!   out of the span journal at export time ([`export::fold_spans`]).
+//! * The journal is capped at [`MAX_JOURNAL_SPANS`]; overflow increments
+//!   a dropped-count surfaced in the trace artifact rather than growing
+//!   without bound.
+//!
+//! ## Lifecycle
+//!
+//! The coordinator builds a [`TelemetrySink`] from `[telemetry]` config
+//! at run start and calls [`TelemetrySink::export`] after the trainer
+//! pool stops: the journal + registry are drained, span durations are
+//! folded into per-`(name, node)` histograms, and — when a directory is
+//! configured — `trace.json` (Chrome Trace Event Format, loadable in
+//! `chrome://tracing` / Perfetto, one track per thread), `metrics.json`,
+//! and `metrics.csv` are written. Export failures must never fail
+//! training; the coordinator logs and continues.
+
+pub mod export;
+pub mod hist;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock, PoisonError};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+pub use hist::{Histogram, MetricKey, Registry};
+
+use crate::config::TelemetryConfig;
+
+/// Spans buffered per thread before draining into the global journal.
+const FLUSH_THRESHOLD: usize = 64;
+/// Journal cap: beyond this, spans are counted as dropped, not stored
+/// (4M spans ≈ a few hundred MB worst case — plenty for any smoke run).
+const MAX_JOURNAL_SPANS: usize = 4_000_000;
+/// Sentinel node id for spans without a node label.
+pub(crate) const NO_NODE: u32 = u32::MAX;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is the telemetry plane recording? One relaxed load — this is the
+/// entire disabled-path cost at every instrumentation site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The process-wide monotonic epoch. Set once on first use and never
+/// reset, so span timestamps from different threads and different sinks
+/// share one timeline.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// One completed span: a named wall-clock interval on one thread, with
+/// an optional PS-node label.
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    pub name: &'static str,
+    /// Labeled node id, or [`NO_NODE`].
+    pub node: u32,
+    /// Journal-assigned thread id (chrome-trace track).
+    pub tid: u64,
+    pub t_start_us: u64,
+    pub dur_us: u64,
+}
+
+/// The global journal: drained per-thread buffers + the thread-name
+/// table (tid → name) for the chrome-trace metadata track.
+#[derive(Default)]
+struct Journal {
+    spans: Vec<SpanRec>,
+    threads: BTreeMap<u64, String>,
+    dropped: u64,
+}
+
+fn journal() -> &'static Mutex<Journal> {
+    static J: OnceLock<Mutex<Journal>> = OnceLock::new();
+    J.get_or_init(|| Mutex::new(Journal::default()))
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static R: OnceLock<Mutex<Registry>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Registry::default()))
+}
+
+struct ThreadBuf {
+    tid: u64,
+    name: String,
+    /// thread name already registered in the journal
+    named: bool,
+    spans: Vec<SpanRec>,
+}
+
+impl ThreadBuf {
+    fn new() -> Self {
+        static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let name = std::thread::current()
+            .name()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("thread-{tid}"));
+        Self { tid, name, named: false, spans: Vec::new() }
+    }
+
+    fn flush(&mut self) {
+        if self.spans.is_empty() {
+            return;
+        }
+        let mut j = journal().lock().unwrap_or_else(PoisonError::into_inner);
+        if !self.named {
+            j.threads.insert(self.tid, self.name.clone());
+            self.named = true;
+        }
+        let room = MAX_JOURNAL_SPANS.saturating_sub(j.spans.len());
+        if self.spans.len() > room {
+            j.dropped += (self.spans.len() - room) as u64;
+            self.spans.truncate(room);
+        }
+        j.spans.append(&mut self.spans);
+    }
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<ThreadBuf> = RefCell::new(ThreadBuf::new());
+}
+
+fn record(mut rec: SpanRec) {
+    // try_with: a span dropped during thread teardown (after the TLS
+    // buffer is destroyed) is silently lost rather than panicking
+    let _ = BUF.try_with(|b| {
+        let mut b = b.borrow_mut();
+        rec.tid = b.tid;
+        b.spans.push(rec);
+        if b.spans.len() >= FLUSH_THRESHOLD {
+            b.flush();
+        }
+    });
+}
+
+/// Drain this thread's span buffer into the journal. Long-lived threads
+/// that outlive the sink (the coordinator itself, the pipeline writer at
+/// its flush barrier, trainers on `Stop`) call this so their tail spans
+/// make the export.
+pub fn flush_thread() {
+    let _ = BUF.try_with(|b| b.borrow_mut().flush());
+}
+
+/// RAII span guard: records the interval from construction to drop.
+#[must_use = "a span records the interval until it is dropped"]
+pub struct Span {
+    name: &'static str,
+    node: u32,
+    start_us: u64,
+    live: bool,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        let end = now_us();
+        record(SpanRec {
+            name: self.name,
+            node: self.node,
+            tid: 0,
+            t_start_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+        });
+    }
+}
+
+/// Open a span. `name` must be `'static` (span names are a fixed
+/// taxonomy, not formatted strings — see DESIGN.md "Telemetry plane").
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if !enabled() {
+        return Span { name, node: NO_NODE, start_us: 0, live: false };
+    }
+    Span { name, node: NO_NODE, start_us: now_us(), live: true }
+}
+
+/// Open a span labeled with a PS node id (per-node latency families).
+#[inline]
+pub fn span_node(name: &'static str, node: usize) -> Span {
+    if !enabled() {
+        return Span { name, node: NO_NODE, start_us: 0, live: false };
+    }
+    Span { name, node: node as u32, start_us: now_us(), live: true }
+}
+
+/// Record a zero-duration instant (exported as a chrome-trace instant
+/// event): failures, re-plans, kills.
+#[inline]
+pub fn event(name: &'static str) {
+    if !enabled() {
+        return;
+    }
+    let t = now_us();
+    record(SpanRec { name, node: NO_NODE, tid: 0, t_start_us: t, dur_us: 0 });
+}
+
+// ---------------------------------------------------------------------------
+// metrics (direct registry feeds — low-frequency sites only)
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub fn counter_add(name: &'static str, delta: u64) {
+    if !enabled() {
+        return;
+    }
+    registry()
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .counter_add(MetricKey::plain(name), delta);
+}
+
+#[inline]
+pub fn gauge_set(name: &'static str, v: f64) {
+    if !enabled() {
+        return;
+    }
+    registry()
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .gauge_set(MetricKey::plain(name), v);
+}
+
+/// Feed one sample into the named histogram (unit is the caller's:
+/// bytes, rows, microseconds).
+#[inline]
+pub fn observe(name: &'static str, v: u64) {
+    if !enabled() {
+        return;
+    }
+    registry()
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .observe(MetricKey::plain(name), v);
+}
+
+#[inline]
+pub fn observe_node(name: &'static str, node: usize, v: u64) {
+    if !enabled() {
+        return;
+    }
+    registry()
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .observe(MetricKey::node(name, node), v);
+}
+
+fn reset() {
+    let mut j = journal().lock().unwrap_or_else(PoisonError::into_inner);
+    j.spans.clear();
+    j.threads.clear();
+    j.dropped = 0;
+    *registry().lock().unwrap_or_else(PoisonError::into_inner) = Registry::default();
+}
+
+// ---------------------------------------------------------------------------
+// sink
+// ---------------------------------------------------------------------------
+
+/// What an export drained (for the coordinator's closing log line).
+#[derive(Debug, Default, Clone)]
+pub struct ExportStats {
+    pub spans: usize,
+    pub dropped: u64,
+    pub dir: Option<PathBuf>,
+}
+
+/// Handle tying the global recorder to one training run. Construction
+/// from an enabled config clears any prior journal/registry content and
+/// turns recording on; [`TelemetrySink::export`] (or drop) turns it off.
+/// A sink built from a disabled config is a pure no-op — this is the
+/// only switch, so an uninstrumented run never pays more than the
+/// per-site relaxed load.
+pub struct TelemetrySink {
+    active: bool,
+    dir: Option<PathBuf>,
+}
+
+impl TelemetrySink {
+    /// The no-op sink (recording stays off).
+    pub fn disabled() -> Self {
+        Self { active: false, dir: None }
+    }
+
+    /// Build from `[telemetry]` config. A configured export dir implies
+    /// enablement.
+    pub fn from_config(cfg: &TelemetryConfig) -> Self {
+        let dir = cfg.dir.as_ref().map(PathBuf::from);
+        if !cfg.enabled && dir.is_none() {
+            return Self::disabled();
+        }
+        reset();
+        ENABLED.store(true, Ordering::Relaxed);
+        Self { active: true, dir }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.active
+    }
+
+    /// Stop recording, drain the journal + registry, fold span durations
+    /// into per-`(name, node)` latency histograms, and write the trace +
+    /// metrics artifacts when an export dir is configured. Idempotent;
+    /// callers treat an `Err` as a warning (training already succeeded).
+    pub fn export(&mut self) -> Result<ExportStats> {
+        if !self.active {
+            return Ok(ExportStats::default());
+        }
+        self.active = false;
+        ENABLED.store(false, Ordering::Relaxed);
+        flush_thread();
+        let (spans, threads, dropped) = {
+            let mut j = journal().lock().unwrap_or_else(PoisonError::into_inner);
+            (std::mem::take(&mut j.spans), std::mem::take(&mut j.threads), {
+                let d = j.dropped;
+                j.dropped = 0;
+                d
+            })
+        };
+        let mut reg = std::mem::take(
+            &mut *registry().lock().unwrap_or_else(PoisonError::into_inner),
+        );
+        export::fold_spans(&mut reg, &spans);
+        let stats = ExportStats { spans: spans.len(), dropped, dir: self.dir.clone() };
+        if let Some(dir) = &self.dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating telemetry dir {}", dir.display()))?;
+            let trace = export::chrome_trace(&spans, &threads, dropped);
+            std::fs::write(dir.join("trace.json"), crate::util::json::JsonWriter::write(&trace))
+                .context("writing trace.json")?;
+            let metrics = export::metrics_json(&reg);
+            std::fs::write(
+                dir.join("metrics.json"),
+                crate::util::json::JsonWriter::write(&metrics),
+            )
+            .context("writing metrics.json")?;
+            std::fs::write(dir.join("metrics.csv"), export::metrics_csv(&reg))
+                .context("writing metrics.csv")?;
+        }
+        Ok(stats)
+    }
+}
+
+impl Drop for TelemetrySink {
+    fn drop(&mut self) {
+        if self.active {
+            // dropped without export (early error path): just stop
+            // recording; the next sink's reset clears the leftovers
+            self.active = false;
+            ENABLED.store(false, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests here toggle the process-global enable; serialize them so
+    /// they cannot observe each other's journals. (Other unit tests in
+    /// the binary never enable telemetry, and all assertions below are
+    /// containment-based, so concurrent foreign spans are harmless.)
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn on() -> TelemetrySink {
+        TelemetrySink::from_config(&TelemetryConfig {
+            enabled: true,
+            dir: None,
+            progress_steps: 0,
+        })
+    }
+
+    fn drain_names() -> Vec<&'static str> {
+        flush_thread();
+        journal()
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .spans
+            .iter()
+            .map(|s| s.name)
+            .collect()
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut sink = TelemetrySink::disabled();
+        assert!(!sink.enabled());
+        {
+            let _s = span("tm_disabled_probe");
+        }
+        event("tm_disabled_probe");
+        counter_add("tm_disabled_probe", 1);
+        assert!(!drain_names().contains(&"tm_disabled_probe"));
+        let stats = sink.export().unwrap();
+        assert_eq!(stats.spans, 0);
+    }
+
+    #[test]
+    fn spans_and_events_reach_the_journal() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut sink = on();
+        {
+            let _s = span("tm_probe_span");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        {
+            let _s = span_node("tm_probe_node", 3);
+        }
+        event("tm_probe_event");
+        // a worker thread's buffer flushes on thread exit (TLS Drop)
+        std::thread::Builder::new()
+            .name("tm-worker".into())
+            .spawn(|| {
+                let _s = span("tm_probe_worker");
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+        flush_thread();
+        {
+            let j = journal().lock().unwrap_or_else(PoisonError::into_inner);
+            let find = |n: &str| j.spans.iter().find(|s| s.name == n).cloned();
+            let main_span = find("tm_probe_span").expect("span recorded");
+            assert!(main_span.dur_us >= 1_000, "slept 1ms inside the span");
+            assert_eq!(find("tm_probe_node").unwrap().node, 3);
+            assert_eq!(find("tm_probe_event").unwrap().dur_us, 0);
+            let worker = find("tm_probe_worker").expect("worker span flushed on exit");
+            assert_ne!(worker.tid, main_span.tid);
+            assert_eq!(j.threads[&worker.tid], "tm-worker");
+        }
+        let stats = sink.export().unwrap();
+        assert!(stats.spans >= 4);
+        assert!(!enabled(), "export turns recording off");
+    }
+
+    #[test]
+    fn export_folds_spans_and_writes_artifacts() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+        let dir = std::env::temp_dir().join("cpr_telemetry_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut sink = TelemetrySink::from_config(&TelemetryConfig {
+            enabled: true,
+            dir: Some(dir.to_str().unwrap().to_string()),
+            progress_steps: 0,
+        });
+        for node in 0..2usize {
+            for _ in 0..3 {
+                let _s = span_node("tm_fold_apply", node);
+            }
+        }
+        counter_add("tm_fold_counter", 7);
+        gauge_set("tm_fold_gauge", 2.5);
+        observe("tm_fold_bytes", 4096);
+        sink.export().unwrap();
+        let trace =
+            crate::util::json::Json::parse(&std::fs::read_to_string(dir.join("trace.json")).unwrap())
+                .unwrap();
+        let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events.iter().any(|e| {
+            e.get("name").map(|n| n.as_str().unwrap_or("")) == Ok("tm_fold_apply")
+        }));
+        let metrics = crate::util::json::Json::parse(
+            &std::fs::read_to_string(dir.join("metrics.json")).unwrap(),
+        )
+        .unwrap();
+        // span durations folded into per-node histogram families
+        let hists = metrics.get("histograms").unwrap();
+        for node in 0..2 {
+            let h = hists.get(&format!("tm_fold_apply{{node={node}}}")).unwrap();
+            assert_eq!(h.get("count").unwrap().as_usize().unwrap(), 3);
+            assert!(h.get("p99").is_ok() && h.get("p50").is_ok());
+        }
+        assert_eq!(
+            metrics.get("counters").unwrap().get("tm_fold_counter").unwrap()
+                .as_usize().unwrap(),
+            7
+        );
+        let csv = std::fs::read_to_string(dir.join("metrics.csv")).unwrap();
+        assert!(csv.lines().next().unwrap().starts_with("metric,kind"));
+        assert!(csv.contains("tm_fold_gauge"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

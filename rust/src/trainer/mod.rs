@@ -145,17 +145,24 @@ fn worker_loop<B: PsBackend>(ctx: WorkerCtx<B>) {
                     (step * n + rank as u64) * model.manifest.batch as u64,
                     batch_buf,
                 );
+                crate::telemetry::observe("rows_per_step", batch_buf.indices.len() as u64);
                 shared.gather_pooled(&batch_buf.indices, hotness, emb_buf);
                 // every replica must observe the PRE-step PS state: nobody
                 // applies until everyone has gathered
-                gather_barrier.wait();
-                let out = model.train_step(
-                    &batch_buf.dense,
-                    emb_buf,
-                    &batch_buf.labels,
-                    cfg.train.lr,
-                    &mut bufs,
-                );
+                {
+                    let _b = crate::telemetry::span("barrier_wait");
+                    gather_barrier.wait();
+                }
+                let out = {
+                    let _t = crate::telemetry::span("train_step");
+                    model.train_step(
+                        &batch_buf.dense,
+                        emb_buf,
+                        &batch_buf.labels,
+                        cfg.train.lr,
+                        &mut bufs,
+                    )
+                };
                 // sharded rank-ordered sparse update → deterministic PS
                 // floats without a global lock: same-node updates apply in
                 // ticket order, node-disjoint updates in parallel
@@ -188,6 +195,9 @@ fn worker_loop<B: PsBackend>(ctx: WorkerCtx<B>) {
             break; // driver went away
         }
     }
+    // hand any buffered spans to the journal before the thread exits, so
+    // an export after pool.stop() sees every trainer's records
+    crate::telemetry::flush_thread();
 }
 
 /// N trainer worker threads behind a step/reply protocol (see module

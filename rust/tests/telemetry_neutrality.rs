@@ -1,0 +1,200 @@
+//! Telemetry-plane acceptance tests (ISSUE 6).
+//!
+//! The telemetry plane is observation-only: enabling it must not perturb
+//! training in any way — no RNG draws, no ordering changes, no ledger
+//! charges. The bit-equality tests here run the same job with telemetry
+//! off and on (both cluster backends, failures included) and require the
+//! `TrainReport` to be IDENTICAL. The artifact test then checks that an
+//! exporting run actually produces a loadable Chrome trace + metrics
+//! snapshot covering the instrumented seams.
+
+use std::sync::Mutex;
+
+use cpr::config::{preset, JobConfig, PsBackendKind, Strategy};
+use cpr::coordinator::{run_training, RunOptions, TrainReport};
+use cpr::failure::{uniform_schedule, FailureEvent};
+use cpr::runtime::{ModelExe, Runtime};
+use cpr::util::json::Json;
+use cpr::util::rng::Rng;
+
+/// The span recorder's enable switch is process-global; serialize the
+/// tests in this binary so an exporting run can't capture a concurrent
+/// run's spans (and a "telemetry off" run really records nothing).
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn load_model(preset_name: &str) -> ModelExe {
+    Runtime::cpu()
+        .expect("runtime")
+        .load_model("artifacts", preset_name)
+        .expect("loading model")
+}
+
+thread_local! {
+    static MINI: std::cell::OnceCell<ModelExe> = const { std::cell::OnceCell::new() };
+}
+
+fn with_mini<R>(f: impl FnOnce(&ModelExe) -> R) -> R {
+    MINI.with(|cell| f(cell.get_or_init(|| load_model("mini"))))
+}
+
+/// Small-but-learnable job config (same preset the integration suite uses).
+fn test_cfg(strategy: Strategy) -> JobConfig {
+    let mut cfg = preset("mini").unwrap();
+    cfg.data.train_samples = 38_400; // 300 steps
+    cfg.data.eval_samples = 12_800;
+    cfg.checkpoint.strategy = strategy;
+    cfg
+}
+
+fn sched(seed: u64, n: usize, victims: usize, t_total: f64, n_nodes: usize)
+         -> Vec<FailureEvent> {
+    let mut rng = Rng::new(seed);
+    uniform_schedule(&mut rng, n, t_total, n_nodes, victims)
+}
+
+fn run(cfg: &JobConfig, schedule: Vec<FailureEvent>) -> TrainReport {
+    with_mini(|model| {
+        run_training(model, cfg, &RunOptions { schedule, ..Default::default() })
+    })
+    .expect("training run")
+}
+
+fn assert_reports_identical(off: &TrainReport, on: &TrainReport, tag: &str) {
+    assert_eq!(off.final_auc, on.final_auc, "{tag}: AUC diverged");
+    assert_eq!(off.final_logloss, on.final_logloss, "{tag}: logloss diverged");
+    assert_eq!(off.pls, on.pls, "{tag}: PLS diverged");
+    assert_eq!(off.steps_executed, on.steps_executed, "{tag}: steps diverged");
+    assert_eq!(off.failures_seen, on.failures_seen, "{tag}");
+    assert_eq!(off.ledger, on.ledger, "{tag}: overhead ledger diverged");
+    assert_eq!(off.train_loss.points, on.train_loss.points,
+               "{tag}: loss curve diverged");
+}
+
+// ---------------------------------------------------------------------------
+// bit-equality: telemetry on vs off
+// ---------------------------------------------------------------------------
+
+#[test]
+fn telemetry_is_bit_neutral_on_both_backends() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    for backend in [PsBackendKind::InProc, PsBackendKind::Threaded] {
+        let mut cfg = test_cfg(Strategy::CprMfu);
+        cfg.cluster.backend = backend;
+        let n = cfg.cluster.n_emb_ps;
+        let schedule = sched(23, 3, 2, cfg.cluster.t_total_h, n);
+
+        let off = run(&cfg, schedule.clone());
+        cfg.telemetry.enabled = true; // record in memory, no export dir
+        cfg.telemetry.progress_steps = 100; // the progress line must be inert too
+        let on = run(&cfg, schedule);
+
+        assert_eq!(off.failures_seen, 3);
+        assert_reports_identical(&off, &on, backend.name());
+    }
+}
+
+#[test]
+fn telemetry_is_bit_neutral_under_full_rewind() {
+    // full recovery replays steps through the instrumented seams twice;
+    // the replay must stay deterministic with the recorder on
+    let _g = TEST_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let mut cfg = test_cfg(Strategy::Full);
+    let n = cfg.cluster.n_emb_ps;
+    let schedule = sched(3, 2, n / 2, cfg.cluster.t_total_h, n);
+    let off = run(&cfg, schedule.clone());
+    cfg.telemetry.enabled = true;
+    let on = run(&cfg, schedule);
+    assert!(on.ledger.lost_h > 0.0, "rewind path not exercised");
+    assert_reports_identical(&off, &on, "full-rewind");
+}
+
+// ---------------------------------------------------------------------------
+// export artifacts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn export_produces_trace_and_metrics_covering_the_seams() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let tdir = std::env::temp_dir().join("cpr_telemetry_export_test");
+    let cdir = std::env::temp_dir().join("cpr_telemetry_export_ckpt");
+    std::fs::remove_dir_all(&tdir).ok();
+    std::fs::remove_dir_all(&cdir).ok();
+
+    let mut cfg = test_cfg(Strategy::Full);
+    cfg.cluster.backend = PsBackendKind::Threaded;
+    // a durable checkpoint dir so the fsync/rename spans actually fire
+    cfg.checkpoint.dir = Some(cdir.to_str().unwrap().to_string());
+    cfg.telemetry.dir = Some(tdir.to_str().unwrap().to_string()); // implies enabled
+    let n = cfg.cluster.n_emb_ps;
+    let r = run(&cfg, sched(3, 2, n / 2, cfg.cluster.t_total_h, n));
+    assert_eq!(r.failures_seen, 2);
+
+    // ---- trace.json: loadable Chrome Trace Event Format ----
+    let text = std::fs::read_to_string(tdir.join("trace.json")).expect("trace.json");
+    let doc = Json::parse(&text).expect("trace.json must parse");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    assert_eq!(doc.get("droppedSpans").unwrap().as_usize().unwrap(), 0,
+               "mini run must fit the journal cap");
+    let names: std::collections::BTreeSet<&str> = events
+        .iter()
+        .filter_map(|e| e.get("name").and_then(Json::as_str))
+        .collect();
+    for want in [
+        "step", "gather", "barrier_wait", "train_step", "turnstile_wait",
+        "apply_node", "quiesce", "ckpt_capture", "ckpt_publish", "ckpt_write",
+        "ckpt_fsync", "ckpt_rename", "restore_all", "failure",
+    ] {
+        assert!(names.contains(want), "trace missing span {want:?}; have {names:?}");
+    }
+    // named tracks: the driver and its worker threads announce themselves
+    let threads: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "M")
+        .filter_map(|e| e.get("args").unwrap().get("name").and_then(Json::as_str))
+        .collect();
+    assert!(!threads.is_empty(), "no thread_name metadata events");
+    // per-node spans carry their node label
+    let apply = events
+        .iter()
+        .find(|e| e.get("name").unwrap().as_str() == Some("apply_node"))
+        .unwrap();
+    assert!(apply.get("args").unwrap().get("node").unwrap().as_usize().is_some());
+
+    // ---- metrics.json: per-node latency histograms ----
+    let mtext = std::fs::read_to_string(tdir.join("metrics.json")).expect("metrics.json");
+    let m = Json::parse(&mtext).expect("metrics.json must parse");
+    let hists = m.get("histograms").unwrap();
+    for node in 0..n {
+        let key = format!("apply_node{{node={node}}}");
+        let h = hists.get(&key).unwrap_or_else(|| panic!("missing histogram {key}"));
+        assert!(h.get("count").unwrap().as_usize().unwrap() > 0, "{key} empty");
+        assert!(h.get("p99").unwrap().as_f64().is_some(), "{key} lacks p99");
+    }
+    assert!(hists.get("gather").is_some(), "no gather latency histogram");
+    assert!(hists.get("rows_per_step").is_some(), "rows/step not observed");
+    assert!(m.get("gauges").unwrap().get("ckpt_in_flight").is_some());
+
+    // ---- metrics.csv: one row per metric, stable header ----
+    let csv = std::fs::read_to_string(tdir.join("metrics.csv")).expect("metrics.csv");
+    let mut lines = csv.lines();
+    assert_eq!(lines.next().unwrap(),
+               "metric,kind,value,count,min,max,mean,p50,p95,p99,p999");
+    assert!(lines.clone().any(|l| l.starts_with("gather,histogram")));
+    assert!(lines.any(|l| l.starts_with("ckpt_in_flight,gauge")));
+
+    std::fs::remove_dir_all(&tdir).ok();
+    std::fs::remove_dir_all(&cdir).ok();
+}
+
+#[test]
+fn disabled_telemetry_writes_nothing() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let tdir = std::env::temp_dir().join("cpr_telemetry_disabled_test");
+    std::fs::remove_dir_all(&tdir).ok();
+    let cfg = test_cfg(Strategy::PartialNaive); // telemetry defaults: off
+    let n = cfg.cluster.n_emb_ps;
+    let r = run(&cfg, sched(29, 1, 1, cfg.cluster.t_total_h, n));
+    assert_eq!(r.failures_seen, 1);
+    assert!(!tdir.exists(), "disabled run must not create telemetry output");
+}

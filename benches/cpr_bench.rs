@@ -13,7 +13,9 @@
 //!                       checkpoint save/restore, AUC, data generation
 //!   checkpoint_io[]   — durable publish cost per on-disk format: v1
 //!                       monolithic rewrite vs v2 base re-publish vs v2
-//!                       dirty-row delta (rows=1e5/1e6), plus the
+//!                       dirty-row delta (rows=1e5/1e6), the q8/q4
+//!                       encoded delta publishes plus raw codec
+//!                       encode/decode throughput, and the
 //!                       one-node-chain partial restore; `[...,bytes]`
 //!                       rows carry bytes-per-publish as throughput_per_s
 //!   backend_*         — inproc vs threaded PS runtimes at B=128/512/2048
@@ -40,13 +42,14 @@
 //! Results are recorded in EXPERIMENTS.md §Perf.
 
 use cpr::bench::{record_external, write_json, Bench};
+use cpr::checkpoint::codec;
 use cpr::checkpoint::disk::{self, DiskCheckpointer};
 use cpr::checkpoint::tracker::{MfuTracker, ScarTracker, SsuTracker};
 use cpr::checkpoint::v2::V2Engine;
 use cpr::checkpoint::writer_pool::WriterPool;
 use cpr::checkpoint::CheckpointStore;
 use cpr::cluster::{PsBackend, PsDataPlane, ShardedPs, ThreadedCluster};
-use cpr::config::{preset, PsBackendKind};
+use cpr::config::{preset, CkptCodec, PsBackendKind};
 use cpr::coordinator::{run_training, RunOptions};
 use cpr::data::{Batch, SyntheticDataset};
 use cpr::embedding::{PsCluster, TableInfo};
@@ -485,7 +488,11 @@ fn policy_overhead(quick: bool) {
 /// wrote — the acceptance check "v2 delta publishes write strictly fewer
 /// bytes than v1 full publishes" reads those two numbers. The
 /// `v2-restore-node` row times the partial-restore read path (one node's
-/// base+delta chain, not the whole checkpoint).
+/// base+delta chain, not the whole checkpoint). The `v2-delta-q8`/`-q4`
+/// rows repeat the delta shape with quantized encoding inside the writer
+/// pool (their `[...,bytes]` siblings carry the *encoded* volume — the
+/// ISSUE 7 "q8 ≤ ~30% of fp32 delta bytes" check reads them), and the
+/// `codec-encode-*`/`codec-decode-*` rows report raw codec throughput.
 fn checkpoint_io(quick: bool) {
     println!("\n-- checkpoint_io: v1 monolithic vs v2 incremental publishes --");
     let sizes: &[(usize, &str)] =
@@ -518,8 +525,9 @@ fn checkpoint_io(quick: bool) {
         // per-node files fan out over the writer pool
         let dir2 = std::env::temp_dir().join(format!("cpr_bench_ckpt_v2_{label}"));
         std::fs::remove_dir_all(&dir2).ok();
-        let mut eng =
-            V2Engine::open(&dir2, WriterPool::for_nodes(n_nodes), 0.5).unwrap();
+        let mut eng = V2Engine::open(&dir2, WriterPool::for_nodes(n_nodes), 0.5,
+                                     CkptCodec::None)
+            .unwrap();
         let mut base_bytes = 0u64;
         bench(&format!("checkpoint_io[v2-base,rows={label}]"), quick)
             .throughput(v1_bytes)
@@ -536,8 +544,9 @@ fn checkpoint_io(quick: bool) {
         // a pure delta so the row isn't a base/delta mix
         let dir3 = std::env::temp_dir().join(format!("cpr_bench_ckpt_v2d_{label}"));
         std::fs::remove_dir_all(&dir3).ok();
-        let mut engd =
-            V2Engine::open(&dir3, WriterPool::for_nodes(n_nodes), 1e12).unwrap();
+        let mut engd = V2Engine::open(&dir3, WriterPool::for_nodes(n_nodes), 1e12,
+                                      CkptCodec::None)
+            .unwrap();
         engd.publish(&mut store, true, false).unwrap(); // initial bases
         let mut delta_bytes = 0u64;
         bench(&format!("checkpoint_io[v2-delta,rows={label}]"), quick)
@@ -553,6 +562,57 @@ fn checkpoint_io(quick: bool) {
         println!("  -> v1-full/v2-delta bytes per publish at rows={label}: \
                   {v1_bytes} / {delta_bytes} = {:.1}x",
                  v1_bytes as f64 / delta_bytes.max(1) as f64);
+
+        // v2-delta under quantizing codecs: the identical minor shape,
+        // encoded inside the writer-pool jobs. The ISSUE 7 acceptance
+        // bar reads these `[...,bytes]` rows against the fp32 delta row:
+        // q8 must land at ≤ ~30% on the 1e5-row config.
+        for codec_kind in [CkptCodec::Q8, CkptCodec::Q4] {
+            let cname = codec_kind.name();
+            let dirc = std::env::temp_dir()
+                .join(format!("cpr_bench_ckpt_v2d_{cname}_{label}"));
+            std::fs::remove_dir_all(&dirc).ok();
+            let mut engc = V2Engine::open(&dirc, WriterPool::for_nodes(n_nodes),
+                                          1e12, codec_kind)
+                .unwrap();
+            engc.publish(&mut store, true, false).unwrap(); // initial bases
+            let mut enc_bytes = 0u64;
+            bench(&format!("checkpoint_io[v2-delta-{cname},rows={label}]"), quick)
+                .throughput(cpr::checkpoint::rows_io_bytes(k, dim))
+                .run(|| {
+                    step += 1;
+                    store.save_rows(&cluster, 0, &hot);
+                    store.mark_position(vec![], step, step * 128);
+                    enc_bytes = engc.publish(&mut store, true, false).unwrap();
+                });
+            record_external(
+                &format!("checkpoint_io[v2-delta-{cname},rows={label},bytes]"),
+                1.0, enc_bytes);
+            println!("  -> {cname}/fp32 delta bytes per publish at rows={label}: \
+                      {enc_bytes} / {delta_bytes} = {:.1}%",
+                     100.0 * enc_bytes as f64 / delta_bytes.max(1) as f64);
+            std::fs::remove_dir_all(&dirc).ok();
+        }
+
+        // raw codec throughput off the disk path: one node's delta
+        // payload (k rows × dim) through encode, then decode of the
+        // encoded blob — MB/s per codec in the JSON artifact
+        let mut rng = Rng::new(42);
+        let vals: Vec<f32> = (0..k * dim).map(|_| rng.f32() - 0.5).collect();
+        let payload_bytes = (vals.len() * 4) as u64;
+        for codec_kind in [CkptCodec::Q8, CkptCodec::Q4, CkptCodec::Rle] {
+            let cname = codec_kind.name();
+            let c = codec::codec(codec_kind);
+            bench(&format!("checkpoint_io[codec-encode-{cname},rows={label}]"),
+                  quick)
+                .throughput(payload_bytes)
+                .run(|| c.encode(codec::Payload::Rows, &vals));
+            let enc = c.encode(codec::Payload::Rows, &vals);
+            bench(&format!("checkpoint_io[codec-decode-{cname},rows={label}]"),
+                  quick)
+                .throughput(payload_bytes)
+                .run(|| c.decode(codec::Payload::Rows, &enc, vals.len()).unwrap());
+        }
 
         // v2 partial restore: read ONE node's chain back. Give dir2's
         // chains a representative delta tail first (bounded by the 0.5

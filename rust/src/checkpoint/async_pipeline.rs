@@ -32,9 +32,9 @@ use anyhow::{anyhow, Result};
 
 use super::v2::V2Engine;
 use super::writer_pool::WriterPool;
-use super::{disk, CheckpointStore};
+use super::{codec, disk, CheckpointOptions, CheckpointStore};
 use crate::cluster::{NodeSnapshot, PsControlPlane, PsDataPlane};
-use crate::config::CkptFormat;
+use crate::config::{CkptCodec, CkptFormat};
 
 /// How many full-cluster snapshot captures may be in flight at once.
 const FULL_BUFFERS: usize = 2;
@@ -77,6 +77,11 @@ struct WriterCtx {
     dir: Option<PathBuf>,
     /// v2 publication engine (None = in-memory only or v1)
     engine: Option<V2Engine>,
+    /// the engine's payload codec ([`CkptCodec::None`] when there is no
+    /// engine): restores must reconstruct what a durable reload would —
+    /// under a lossy codec that means quantized rows, so GetNode/GetStore
+    /// replies round-trip embedding rows through the codec
+    codec: CkptCodec,
     keep: usize,
     write_delay: Duration,
     in_flight: Arc<AtomicUsize>,
@@ -148,14 +153,32 @@ fn writer_loop(mut ctx: WriterCtx, rx: Receiver<Msg>) {
                 }
             }
             Msg::GetNode { node, reply } => {
+                let mut shards = ctx.store.node_shards(node).to_vec();
+                // a restore from an encoded checkpoint reconstructs
+                // quantized rows: hand recovery checkpoint-fidelity
+                // values, not the fp32 mirror (opt state is lossless
+                // under every codec, so it passes through untouched)
+                if ctx.codec.lossy() {
+                    for s in &mut shards {
+                        codec::roundtrip_rows(ctx.codec, s);
+                    }
+                }
                 let _ = reply.send(NodeSnapshot {
                     node,
-                    shards: ctx.store.node_shards(node).to_vec(),
+                    shards,
                     opt: ctx.store.node_opt(node).to_vec(),
                 });
             }
             Msg::GetStore { reply } => {
-                let _ = reply.send(ctx.store.clone());
+                let mut store = ctx.store.clone();
+                if ctx.codec.lossy() {
+                    for st in store.node_states_mut() {
+                        for s in st.shards_mut() {
+                            codec::roundtrip_rows(ctx.codec, s);
+                        }
+                    }
+                }
+                let _ = reply.send(store);
             }
             Msg::GetMark { reply } => {
                 let _ = reply.send((ctx.store.mlp.clone(), ctx.store.step,
@@ -174,36 +197,18 @@ fn writer_loop(mut ctx: WriterCtx, rx: Receiver<Msg>) {
 }
 
 impl CheckpointPipeline {
-    /// `store` is the initial mirror (epoch-0 state). `dir` enables durable
-    /// publication of every position-marking save, rotating to the newest
-    /// `keep` files. `write_delay` is an artificial per-save writer cost —
-    /// zero in production, nonzero in tests that assert overlap. Publishes
-    /// as format v1; [`CheckpointPipeline::with_format`] selects v2.
-    pub fn new(
-        store: CheckpointStore,
-        dir: Option<&str>,
-        keep: usize,
-        write_delay: Duration,
-    ) -> Result<Self> {
-        Self::with_format(store, dir, keep, write_delay, CkptFormat::V1, 0.5)
-    }
-
-    /// [`CheckpointPipeline::new`] with an explicit on-disk format. Under
-    /// [`CkptFormat::V2`] the writer owns a [`V2Engine`]: position-marking
-    /// saves publish the mirror's dirty rows as per-node delta files
-    /// (bases when forced / chain-less / compaction-due), written in
-    /// parallel by the writer pool; [`CheckpointPipeline::commit_save`]
-    /// publishes minors without moving the marker. `compact_frac` is the
-    /// chain-compaction threshold (ignored for v1).
-    pub fn with_format(
-        store: CheckpointStore,
-        dir: Option<&str>,
-        keep: usize,
-        write_delay: Duration,
-        format: CkptFormat,
-        compact_frac: f64,
-    ) -> Result<Self> {
-        let dir = match dir {
+    /// `store` is the initial mirror (epoch-0 state); everything else —
+    /// publication dir, on-disk format, compaction threshold, payload
+    /// codec, v1 rotation depth, test-only write delay — rides in one
+    /// [`CheckpointOptions`] ([`CheckpointOptions::from_config`] is the
+    /// production path). Under [`CkptFormat::V2`] the writer owns a
+    /// [`V2Engine`]: position-marking saves publish the mirror's dirty
+    /// rows as per-node delta files (bases when forced / chain-less /
+    /// compaction-due), written — and codec-encoded — in parallel by the
+    /// writer pool; [`CheckpointPipeline::commit_save`] publishes minors
+    /// without moving the marker.
+    pub fn with_options(store: CheckpointStore, opts: &CheckpointOptions) -> Result<Self> {
+        let dir = match opts.dir.as_deref() {
             Some(d) => {
                 let p = PathBuf::from(d);
                 std::fs::create_dir_all(&p)?;
@@ -211,14 +216,18 @@ impl CheckpointPipeline {
             }
             None => None,
         };
-        let (dir, engine) = match (format, dir) {
+        let (dir, engine) = match (opts.format, dir) {
             (_, None) => (None, None),
             (CkptFormat::V1, d) => (d, None),
             (CkptFormat::V2, Some(d)) => {
                 let pool = WriterPool::for_nodes(store.node_states().len());
-                (None, Some(V2Engine::open(&d, pool, compact_frac)?))
+                (None, Some(V2Engine::open(&d, pool, opts.compact_frac, opts.codec)?))
             }
         };
+        // the codec only shapes restores when something durable is
+        // actually encoded with it: v1 publishes and in-memory-only runs
+        // ignore the knob entirely
+        let codec = if engine.is_some() { opts.codec } else { CkptCodec::None };
         let in_flight = Arc::new(AtomicUsize::new(0));
         let full_slots = Arc::new((Mutex::new(FULL_BUFFERS), Condvar::new()));
         let io_error = Arc::new(Mutex::new(None));
@@ -226,8 +235,9 @@ impl CheckpointPipeline {
             store,
             dir,
             engine,
-            keep: keep.max(1),
-            write_delay,
+            codec,
+            keep: opts.keep.max(1),
+            write_delay: opts.write_delay,
             in_flight: Arc::clone(&in_flight),
             full_slots: Arc::clone(&full_slots),
             io_error: Arc::clone(&io_error),
@@ -238,6 +248,48 @@ impl CheckpointPipeline {
             .spawn(move || writer_loop(ctx, rx))
             .expect("spawning checkpoint writer");
         Ok(Self { tx: Some(tx), worker: Some(worker), in_flight, full_slots, io_error })
+    }
+
+    /// Positional v1 constructor, kept for downstream code.
+    #[deprecated(note = "build a `CheckpointOptions` and call `with_options`")]
+    pub fn new(
+        store: CheckpointStore,
+        dir: Option<&str>,
+        keep: usize,
+        write_delay: Duration,
+    ) -> Result<Self> {
+        Self::with_options(
+            store,
+            &CheckpointOptions {
+                dir: dir.map(str::to_string),
+                keep,
+                write_delay,
+                ..CheckpointOptions::default()
+            },
+        )
+    }
+
+    /// Positional format-selecting constructor, kept for downstream code.
+    #[deprecated(note = "build a `CheckpointOptions` and call `with_options`")]
+    pub fn with_format(
+        store: CheckpointStore,
+        dir: Option<&str>,
+        keep: usize,
+        write_delay: Duration,
+        format: CkptFormat,
+        compact_frac: f64,
+    ) -> Result<Self> {
+        Self::with_options(
+            store,
+            &CheckpointOptions {
+                dir: dir.map(str::to_string),
+                keep,
+                write_delay,
+                format,
+                compact_frac,
+                ..CheckpointOptions::default()
+            },
+        )
     }
 
     fn tx(&self) -> &SyncSender<Msg> {
@@ -438,11 +490,12 @@ mod tests {
     }
 
     fn pipeline(c: &PsCluster, delay_ms: u64) -> CheckpointPipeline {
-        CheckpointPipeline::new(
+        CheckpointPipeline::with_options(
             CheckpointStore::initial(c, vec![]),
-            None,
-            2,
-            Duration::from_millis(delay_ms),
+            &CheckpointOptions {
+                write_delay: Duration::from_millis(delay_ms),
+                ..CheckpointOptions::default()
+            },
         )
         .unwrap()
     }
@@ -561,13 +614,13 @@ mod tests {
         let dir = std::env::temp_dir().join("cpr_pipeline_v2");
         std::fs::remove_dir_all(&dir).ok();
         let c = cluster();
-        let p = CheckpointPipeline::with_format(
+        let p = CheckpointPipeline::with_options(
             CheckpointStore::initial(&c, vec![]),
-            Some(dir.to_str().unwrap()),
-            2,
-            Duration::ZERO,
-            CkptFormat::V2,
-            0.5,
+            &CheckpointOptions {
+                dir: Some(dir.to_str().unwrap().to_string()),
+                format: CkptFormat::V2,
+                ..CheckpointOptions::default()
+            },
         )
         .unwrap();
         // minor #1: first durable publish → every node gets a base
@@ -607,15 +660,89 @@ mod tests {
     }
 
     #[test]
-    fn publishes_durable_checkpoint_on_mark() {
-        let dir = std::env::temp_dir().join("cpr_pipeline_pub");
+    fn lossy_codec_restores_quantized_rows_exact_opt_state() {
+        // with a q8 engine, a restore must reproduce what a durable
+        // reload of the encoded chain would: quantized embedding rows,
+        // bit-exact optimizer state and marker. Without a lossy codec
+        // the same sequence is bit-identical to the mirror (the golden
+        // suites rely on that).
+        let dir = std::env::temp_dir().join("cpr_pipeline_q8");
         std::fs::remove_dir_all(&dir).ok();
         let c = cluster();
+        let p = CheckpointPipeline::with_options(
+            CheckpointStore::initial(&c, vec![]),
+            &CheckpointOptions {
+                dir: Some(dir.to_str().unwrap().to_string()),
+                format: CkptFormat::V2,
+                codec: CkptCodec::Q8,
+                ..CheckpointOptions::default()
+            },
+        )
+        .unwrap();
+        perturb(&c, 44);
+        let at_capture = c.snapshot_node(0);
+        p.full_save(&c, vec![], 1, 128);
+        p.flush().unwrap();
+        p.restore_node(&c, 0);
+        let got = c.snapshot_node(0);
+        assert_eq!(got.opt, at_capture.opt, "opt state is lossless under q8");
+        for (t, shard) in got.shards.iter().enumerate() {
+            let mut want = at_capture.shards[t].clone();
+            codec::roundtrip_rows(CkptCodec::Q8, &mut want);
+            assert_eq!(shard, &want, "restored rows carry checkpoint fidelity");
+            assert_ne!(shard, &at_capture.shards[t],
+                       "q8 restore must actually differ from the fp32 mirror");
+        }
+        // and the durable chain agrees with what the restore handed back
+        let durable = super::disk::DiskCheckpointer::load_latest(dir.to_str().unwrap())
+            .unwrap()
+            .unwrap();
+        assert_eq!(durable.node_states()[0].shards(), got.shards.as_slice());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructor_shims_still_work() {
+        let c = cluster();
         let p = CheckpointPipeline::new(
+            CheckpointStore::initial(&c, vec![]),
+            None,
+            2,
+            Duration::ZERO,
+        )
+        .unwrap();
+        p.full_save(&c, vec![], 1, 128);
+        p.flush().unwrap();
+        let dir = std::env::temp_dir().join("cpr_pipeline_shim");
+        std::fs::remove_dir_all(&dir).ok();
+        let p2 = CheckpointPipeline::with_format(
             CheckpointStore::initial(&c, vec![]),
             Some(dir.to_str().unwrap()),
             2,
             Duration::ZERO,
+            CkptFormat::V2,
+            0.5,
+        )
+        .unwrap();
+        p2.full_save(&c, vec![], 2, 256);
+        p2.flush().unwrap();
+        assert!(dir.join(crate::checkpoint::v2::MANIFEST).exists());
+        drop(p2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn publishes_durable_checkpoint_on_mark() {
+        let dir = std::env::temp_dir().join("cpr_pipeline_pub");
+        std::fs::remove_dir_all(&dir).ok();
+        let c = cluster();
+        let p = CheckpointPipeline::with_options(
+            CheckpointStore::initial(&c, vec![]),
+            &CheckpointOptions {
+                dir: Some(dir.to_str().unwrap().to_string()),
+                ..CheckpointOptions::default()
+            },
         )
         .unwrap();
         perturb(&c, 9);

@@ -1,0 +1,543 @@
+//! Checkpoint payload codecs (ISSUE 7: quantized + compressed
+//! checkpoints, Check-N-Run style).
+//!
+//! A [`Codec`] turns one logical f32 payload — a base shard, a delta
+//! table's packed rows, or optimizer / dense state — into bytes and
+//! back. Codecs are split by payload class:
+//!
+//! * [`Payload::Rows`] is embedding-row content and MAY be lossy: the
+//!   quantizers (`q8`/`q4`) store per-chunk `min`/`scale` headers plus
+//!   one fixed-width code per value, bounding the absolute
+//!   reconstruction error by `chunk_range / (2·levels)`.
+//! * [`Payload::State`] is optimizer state and dense (MLP) parameters
+//!   and MUST round-trip bit-exactly — Check-N-Run keeps optimizer
+//!   state at full precision because its dynamic range defeats uniform
+//!   quantization. The quantizers fall back to byte-RLE'd raw fp32
+//!   here; `rle` and `none` are lossless for both classes.
+//!
+//! Codecs are stateless: [`codec`] hands out `'static` instances so
+//! the v2 engine can capture one inside each [`super::writer_pool`]
+//! write job and encode per-node files in parallel. File framing
+//! (magics, per-blob lengths and FNV-1a checksums) lives in
+//! [`super::v2`]; this module only maps `f32`s ⇄ bytes.
+
+use super::CkptError;
+use crate::config::CkptCodec;
+
+/// Values per quantization chunk. Each chunk carries an 8-byte
+/// `min`/`scale` header, so the header overhead is 8/`CHUNK` bytes per
+/// value — at 256 that is ~0.8% of the raw fp32 size, small enough to
+/// keep `q8` delta publishes under ~30% of fp32 (the ISSUE 7
+/// acceptance bar) while chunk ranges stay local enough for tight
+/// error bounds.
+pub const QUANT_CHUNK: usize = 256;
+
+/// Which kind of payload a blob holds; see the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Payload {
+    /// Embedding-row values — lossy encodings allowed.
+    Rows,
+    /// Optimizer state / dense params — must round-trip bit-exactly.
+    State,
+}
+
+/// One checkpoint payload codec. Implementations are stateless and
+/// shared (`Send + Sync`) so write jobs on the pool can encode
+/// concurrently.
+pub trait Codec: Send + Sync {
+    /// The config name this codec registers under.
+    fn kind(&self) -> CkptCodec;
+
+    /// Encode one payload into a self-contained blob.
+    fn encode(&self, class: Payload, vals: &[f32]) -> Vec<u8>;
+
+    /// Decode a blob produced by [`Codec::encode`] back into exactly
+    /// `n` values. `n` comes from the file framing, not the blob.
+    fn decode(&self, class: Payload, bytes: &[u8], n: usize) -> Result<Vec<f32>, CkptError>;
+
+    /// Expected encoded-size : raw-size ratio for embedding-dominated
+    /// checkpoint content. The policy engine and `cpr plan` scale the
+    /// bandwidth-derived save cost by this, so the PLS planner narrows
+    /// intervals when checkpoints get cheaper; actual file sizes (what
+    /// `bytes_per_publish` reports) come from the written files.
+    fn estimated_ratio(&self) -> f64;
+}
+
+/// Look up the `'static` codec instance for a config kind.
+pub fn codec(kind: CkptCodec) -> &'static dyn Codec {
+    match kind {
+        CkptCodec::None => &NoneCodec,
+        CkptCodec::Q8 => &Quant::<255>,
+        CkptCodec::Q4 => &Quant::<15>,
+        CkptCodec::Rle => &RleCodec,
+    }
+}
+
+/// [`Codec::estimated_ratio`] by config kind (planner convenience).
+pub fn estimated_ratio(kind: CkptCodec) -> f64 {
+    codec(kind).estimated_ratio()
+}
+
+/// Round-trip row values through `kind`, in place. This is what a
+/// restore from an encoded checkpoint would reconstruct: the async
+/// pipeline applies it to embedding rows handed back to recovery so
+/// training under a lossy codec sees checkpoint-fidelity values even
+/// though the mirror itself stays fp32. A no-op for lossless codecs.
+pub fn roundtrip_rows(kind: CkptCodec, vals: &mut Vec<f32>) {
+    if kind == CkptCodec::None || kind == CkptCodec::Rle {
+        return;
+    }
+    let c = codec(kind);
+    let blob = c.encode(Payload::Rows, vals);
+    *vals = c
+        .decode(Payload::Rows, &blob, vals.len())
+        .expect("in-memory codec round-trip cannot fail");
+}
+
+/// FNV-1a over a blob — the per-blob checksum the v2 framing appends
+/// to encoded payloads (raw fp32 blobs are covered by their length
+/// alone, exactly as in format v2 before codecs existed).
+pub fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+fn f32s_to_le(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn le_to_f32s(bytes: &[u8], n: usize, what: &str) -> Result<Vec<f32>, CkptError> {
+    if bytes.len() != n * 4 {
+        return Err(CkptError::Truncated {
+            what: format!("{what}: {} bytes for {n} f32 values", bytes.len()),
+        });
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// none: raw little-endian fp32 (the pre-codec v2 byte layout)
+// ---------------------------------------------------------------------------
+
+struct NoneCodec;
+
+impl Codec for NoneCodec {
+    fn kind(&self) -> CkptCodec {
+        CkptCodec::None
+    }
+    fn encode(&self, _class: Payload, vals: &[f32]) -> Vec<u8> {
+        f32s_to_le(vals)
+    }
+    fn decode(&self, _class: Payload, bytes: &[u8], n: usize) -> Result<Vec<f32>, CkptError> {
+        le_to_f32s(bytes, n, "raw fp32 blob")
+    }
+    fn estimated_ratio(&self) -> f64 {
+        1.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// q8 / q4: per-chunk uniform quantization (Check-N-Run style)
+// ---------------------------------------------------------------------------
+
+/// `LEVELS` is the maximum code value: 255 for 8-bit, 15 for 4-bit
+/// (two codes packed per byte, low nibble first).
+struct Quant<const LEVELS: u32>;
+
+impl<const LEVELS: u32> Quant<LEVELS> {
+    const PACKED: bool = LEVELS < 16;
+
+    fn encode_rows(vals: &[f32]) -> Vec<u8> {
+        let chunks = vals.len().div_ceil(QUANT_CHUNK);
+        let mut out = Vec::with_capacity(chunks * 8 + vals.len());
+        for chunk in vals.chunks(QUANT_CHUNK) {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &v in chunk {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            // degenerate chunks (all equal, or non-finite garbage)
+            // collapse to scale 0: every code decodes to `lo`
+            if !(lo.is_finite() && hi.is_finite()) {
+                lo = 0.0;
+                hi = 0.0;
+            }
+            let scale = if hi > lo { (hi - lo) / LEVELS as f32 } else { 0.0 };
+            out.extend_from_slice(&lo.to_le_bytes());
+            out.extend_from_slice(&scale.to_le_bytes());
+            let code = |v: f32| -> u8 {
+                if scale == 0.0 {
+                    0
+                } else {
+                    (((v - lo) / scale).round() as u32).min(LEVELS) as u8
+                }
+            };
+            if Self::PACKED {
+                for pair in chunk.chunks(2) {
+                    let a = code(pair[0]);
+                    let b = if pair.len() == 2 { code(pair[1]) } else { 0 };
+                    out.push(a | (b << 4));
+                }
+            } else {
+                out.extend(chunk.iter().map(|&v| code(v)));
+            }
+        }
+        out
+    }
+
+    fn decode_rows(bytes: &[u8], n: usize) -> Result<Vec<f32>, CkptError> {
+        let mut out = Vec::with_capacity(n);
+        let mut at = 0usize;
+        while out.len() < n {
+            let take = (n - out.len()).min(QUANT_CHUNK);
+            let body = if Self::PACKED { take.div_ceil(2) } else { take };
+            let end = at + 8 + body;
+            if end > bytes.len() {
+                return Err(CkptError::Truncated {
+                    what: format!(
+                        "quantized blob: {} bytes, need {end} for {n} values",
+                        bytes.len()
+                    ),
+                });
+            }
+            let lo = f32::from_le_bytes(bytes[at..at + 4].try_into().unwrap());
+            let scale = f32::from_le_bytes(bytes[at + 4..at + 8].try_into().unwrap());
+            let codes = &bytes[at + 8..end];
+            if Self::PACKED {
+                for i in 0..take {
+                    let byte = codes[i / 2];
+                    let c = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                    out.push(lo + c as f32 * scale);
+                }
+            } else {
+                out.extend(codes.iter().map(|&c| lo + c as f32 * scale));
+            }
+            at = end;
+        }
+        if at != bytes.len() {
+            return Err(CkptError::CodecMismatch {
+                what: format!(
+                    "quantized blob has {} trailing bytes after {n} values",
+                    bytes.len() - at
+                ),
+            });
+        }
+        Ok(out)
+    }
+}
+
+impl<const LEVELS: u32> Codec for Quant<LEVELS> {
+    fn kind(&self) -> CkptCodec {
+        if Self::PACKED {
+            CkptCodec::Q4
+        } else {
+            CkptCodec::Q8
+        }
+    }
+    fn encode(&self, class: Payload, vals: &[f32]) -> Vec<u8> {
+        match class {
+            Payload::Rows => Self::encode_rows(vals),
+            // fp32 fallback for optimizer / dense state, byte-RLE'd so
+            // the (often sparse) accumulators still shrink losslessly
+            Payload::State => rle_encode(&f32s_to_le(vals)),
+        }
+    }
+    fn decode(&self, class: Payload, bytes: &[u8], n: usize) -> Result<Vec<f32>, CkptError> {
+        match class {
+            Payload::Rows => Self::decode_rows(bytes, n),
+            Payload::State => le_to_f32s(&rle_decode(bytes)?, n, "quantized state blob"),
+        }
+    }
+    fn estimated_ratio(&self) -> f64 {
+        // per value: header 8/CHUNK + code bytes, against 4 raw bytes;
+        // the (dim+1)-th optimizer value per row stays ~fp32
+        let code = if Self::PACKED { 0.5 } else { 1.0 };
+        let per_val = (code + 8.0 / QUANT_CHUNK as f64) / 4.0;
+        // embedding dims dominate rows (dim ≥ 8 everywhere we run), so
+        // weight the fp32 state tail at ~1/16 of the content
+        per_val * (15.0 / 16.0) + 1.0 / 16.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rle: lossless byte-level run-length coding (PackBits framing)
+// ---------------------------------------------------------------------------
+
+struct RleCodec;
+
+impl Codec for RleCodec {
+    fn kind(&self) -> CkptCodec {
+        CkptCodec::Rle
+    }
+    fn encode(&self, _class: Payload, vals: &[f32]) -> Vec<u8> {
+        rle_encode(&f32s_to_le(vals))
+    }
+    fn decode(&self, _class: Payload, bytes: &[u8], n: usize) -> Result<Vec<f32>, CkptError> {
+        le_to_f32s(&rle_decode(bytes)?, n, "rle blob")
+    }
+    fn estimated_ratio(&self) -> f64 {
+        // lossless and data-dependent; fresh optimizer state and cold
+        // rows crush, trained embeddings barely move — stay conservative
+        0.9
+    }
+}
+
+/// PackBits-style byte RLE: a control byte `c ≤ 127` is followed by
+/// `c + 1` literal bytes; `c ≥ 128` repeats the next byte `c - 126`
+/// times (runs of 2..=129).
+pub(crate) fn rle_encode(bytes: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(bytes.len() / 4 + 16);
+    let mut i = 0usize;
+    while i < bytes.len() {
+        // measure the run starting here
+        let b = bytes[i];
+        let mut run = 1usize;
+        while run < 129 && i + run < bytes.len() && bytes[i + run] == b {
+            run += 1;
+        }
+        if run >= 2 {
+            out.push((run + 126) as u8);
+            out.push(b);
+            i += run;
+            continue;
+        }
+        // literal stretch: scan until a run of ≥ 3 starts (a 2-run is
+        // cheaper kept literal than breaking the block) or 128 bytes
+        let start = i;
+        i += 1;
+        while i < bytes.len() && i - start < 128 {
+            let b = bytes[i];
+            let mut run = 1usize;
+            while run < 3 && i + run < bytes.len() && bytes[i + run] == b {
+                run += 1;
+            }
+            if run >= 3 {
+                break;
+            }
+            i += 1;
+        }
+        out.push((i - start - 1) as u8);
+        out.extend_from_slice(&bytes[start..i]);
+    }
+    out
+}
+
+pub(crate) fn rle_decode(bytes: &[u8]) -> Result<Vec<u8>, CkptError> {
+    let mut out = Vec::with_capacity(bytes.len() * 2);
+    let mut i = 0usize;
+    let truncated = |need: usize| CkptError::Truncated {
+        what: format!("rle blob: control at {i} needs {need} more bytes"),
+    };
+    while i < bytes.len() {
+        let c = bytes[i];
+        if c <= 127 {
+            let len = c as usize + 1;
+            if i + 1 + len > bytes.len() {
+                return Err(truncated(len));
+            }
+            out.extend_from_slice(&bytes[i + 1..i + 1 + len]);
+            i += 1 + len;
+        } else {
+            if i + 1 >= bytes.len() {
+                return Err(truncated(1));
+            }
+            out.resize(out.len() + (c as usize - 126), bytes[i + 1]);
+            i += 2;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, gen};
+
+    const ALL: [CkptCodec; 4] = [CkptCodec::None, CkptCodec::Q8, CkptCodec::Q4, CkptCodec::Rle];
+
+    fn random_vals(rng: &mut crate::util::rng::Rng, n: usize) -> Vec<f32> {
+        // mix of smooth values, exact zeros, and repeated constants —
+        // the shapes optimizer state and embedding rows actually take
+        (0..n)
+            .map(|_| match rng.usize_below(4) {
+                0 => 0.0,
+                1 => 0.25,
+                _ => rng.f32() * 2.0 - 1.0,
+            })
+            .collect()
+    }
+
+    /// Per-chunk error bound for a `levels`-code uniform quantizer:
+    /// half a quantization step, plus float-rounding slack.
+    fn quant_bound(chunk: &[f32], levels: f32) -> f32 {
+        let lo = chunk.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let range = hi - lo;
+        range / (2.0 * levels) + range.abs() * 1e-5 + 1e-6
+    }
+
+    #[test]
+    fn lossless_codecs_round_trip_bit_exactly() {
+        forall(0xC0DE, 64, |rng| {
+            let n = gen::usize_in(rng, 0, 2_000);
+            let vals = random_vals(rng, n);
+            for kind in [CkptCodec::None, CkptCodec::Rle] {
+                for class in [Payload::Rows, Payload::State] {
+                    let c = codec(kind);
+                    let got = c
+                        .decode(class, &c.encode(class, &vals), n)
+                        .map_err(|e| format!("{kind:?}/{class:?}: {e}"))?;
+                    crate::prop_assert!(
+                        got.iter().zip(&vals).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{kind:?}/{class:?}: lossless codec changed values"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantizers_bound_max_abs_error_per_chunk() {
+        forall(0x84A, 64, |rng| {
+            let n = gen::usize_in(rng, 1, 3 * QUANT_CHUNK + 7);
+            let vals = random_vals(rng, n);
+            for (kind, levels) in [(CkptCodec::Q8, 255.0f32), (CkptCodec::Q4, 15.0f32)] {
+                let c = codec(kind);
+                let got = c
+                    .decode(Payload::Rows, &c.encode(Payload::Rows, &vals), n)
+                    .map_err(|e| format!("{kind:?}: {e}"))?;
+                crate::prop_assert!(got.len() == n, "{kind:?}: length changed");
+                for (ci, chunk) in vals.chunks(QUANT_CHUNK).enumerate() {
+                    let bound = quant_bound(chunk, levels);
+                    for (i, (&a, &b)) in
+                        chunk.iter().zip(&got[ci * QUANT_CHUNK..]).enumerate()
+                    {
+                        crate::prop_assert!(
+                            (a - b).abs() <= bound,
+                            "{kind:?}: chunk {ci} value {i}: |{a} - {b}| > {bound}"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantizer_state_payloads_stay_fp32_exact() {
+        forall(0xF32, 48, |rng| {
+            let n = gen::usize_in(rng, 0, 1_000);
+            let vals = random_vals(rng, n);
+            for kind in [CkptCodec::Q8, CkptCodec::Q4] {
+                let c = codec(kind);
+                let got = c
+                    .decode(Payload::State, &c.encode(Payload::State, &vals), n)
+                    .map_err(|e| format!("{kind:?}: {e}"))?;
+                crate::prop_assert!(
+                    got.iter().zip(&vals).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{kind:?}: optimizer-state fallback must be lossless"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn constant_and_empty_payloads_round_trip() {
+        for kind in ALL {
+            let c = codec(kind);
+            for vals in [vec![], vec![0.0f32; 700], vec![-3.25f32; 17]] {
+                let got = c
+                    .decode(Payload::Rows, &c.encode(Payload::Rows, &vals), vals.len())
+                    .unwrap();
+                assert_eq!(got, vals, "{kind:?}: degenerate payload");
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_blobs_are_typed_errors_not_panics() {
+        let vals: Vec<f32> = (0..600).map(|i| i as f32 * 0.125).collect();
+        for kind in ALL {
+            let c = codec(kind);
+            let blob = c.encode(Payload::Rows, &vals);
+            let err = c
+                .decode(Payload::Rows, &blob[..blob.len() - 3], vals.len())
+                .unwrap_err();
+            assert!(
+                matches!(err, CkptError::Truncated { .. } | CkptError::CodecMismatch { .. }),
+                "{kind:?}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn rle_crushes_zero_runs_and_survives_incompressible_bytes() {
+        let zeros = vec![0u8; 4096];
+        let enc = rle_encode(&zeros);
+        assert!(enc.len() < zeros.len() / 50, "zero run barely shrank: {}", enc.len());
+        assert_eq!(rle_decode(&enc).unwrap(), zeros);
+        let noise: Vec<u8> = (0..4096u32)
+            .map(|i| (i.wrapping_mul(2654435761) >> 13) as u8)
+            .collect();
+        let enc = rle_encode(&noise);
+        assert!(enc.len() <= noise.len() + noise.len() / 64 + 2,
+                "literal framing overhead too high: {}", enc.len());
+        assert_eq!(rle_decode(&enc).unwrap(), noise);
+    }
+
+    #[test]
+    fn quantizer_shrinks_row_payloads_by_its_advertised_ratio() {
+        // dim-16 rows, the checkpoint_io bench shape: q8 must land
+        // under ~30% of raw fp32 (the ISSUE 7 acceptance bar), q4 lower
+        let mut rng = crate::util::rng::Rng::new(7);
+        let vals: Vec<f32> = (0..16 * 4096).map(|_| rng.f32() - 0.5).collect();
+        let raw = vals.len() * 4;
+        let q8 = codec(CkptCodec::Q8).encode(Payload::Rows, &vals).len();
+        let q4 = codec(CkptCodec::Q4).encode(Payload::Rows, &vals).len();
+        assert!((q8 as f64) < raw as f64 * 0.30, "q8: {q8} / raw {raw}");
+        assert!((q4 as f64) < raw as f64 * 0.16, "q4: {q4} / raw {raw}");
+        assert!(estimated_ratio(CkptCodec::Q8) < 0.31);
+        assert!(estimated_ratio(CkptCodec::Q4) < 0.20);
+        assert_eq!(estimated_ratio(CkptCodec::None), 1.0);
+    }
+
+    #[test]
+    fn roundtrip_rows_is_identity_for_lossless_and_bounded_for_lossy() {
+        let vals: Vec<f32> = (0..500).map(|i| (i as f32).sin()).collect();
+        let mut kept = vals.clone();
+        roundtrip_rows(CkptCodec::None, &mut kept);
+        assert_eq!(kept, vals);
+        roundtrip_rows(CkptCodec::Rle, &mut kept);
+        assert_eq!(kept, vals);
+        let mut q = vals.clone();
+        roundtrip_rows(CkptCodec::Q8, &mut q);
+        assert_ne!(q, vals, "q8 round-trip should actually quantize");
+        for (ci, chunk) in vals.chunks(QUANT_CHUNK).enumerate() {
+            let bound = quant_bound(chunk, 255.0);
+            for (a, b) in chunk.iter().zip(&q[ci * QUANT_CHUNK..]) {
+                assert!((a - b).abs() <= bound);
+            }
+        }
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        assert_eq!(fnv1a(b""), 0x811c_9dc5);
+        assert_eq!(fnv1a(b"a"), 0xe40c_292c);
+        assert_eq!(fnv1a(b"foobar"), 0xbf9c_f968);
+    }
+}

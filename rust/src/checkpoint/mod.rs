@@ -42,6 +42,7 @@
 //! published one, never a torn file.
 
 pub mod async_pipeline;
+pub mod codec;
 pub mod disk;
 pub mod tracker;
 pub mod v2;
@@ -53,7 +54,136 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::{PsControlPlane, PsDataPlane};
+use crate::config::{CheckpointConfig, CkptCodec, CkptFormat, DEFAULT_COMPACT_FRAC};
 use crate::embedding::TableInfo;
+
+// ---------------------------------------------------------------------------
+// typed load/replay errors
+// ---------------------------------------------------------------------------
+
+/// What went wrong reading a checkpoint back (the v2 load/replay path
+/// and the codec layer). Public APIs still return `anyhow::Result`, so
+/// callers that care match on the variant via
+/// `err.downcast_ref::<CkptError>()` instead of substring-grepping the
+/// message (ISSUE 7).
+#[derive(Debug)]
+pub enum CkptError {
+    /// A file or encoded blob ended before its declared payload.
+    Truncated { what: String },
+    /// The leading magic does not name any checkpoint file kind this
+    /// build knows (or names the *wrong* kind for the read path).
+    BadMagic { what: String, found: u32 },
+    /// Chain geometry disagrees with its base: node ids, table counts,
+    /// dims, or local row ranges.
+    GeometryMismatch { what: String },
+    /// An encoded file names a codec this build does not register, or
+    /// a blob's framing is inconsistent with its codec.
+    CodecMismatch { what: String },
+    /// An encoded blob's FNV-1a checksum does not match its bytes.
+    ChecksumMismatch { what: String },
+    /// An underlying I/O failure that is not a clean truncation.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::Truncated { what } => write!(f, "truncated checkpoint data: {what}"),
+            CkptError::BadMagic { what, found } => {
+                write!(f, "bad checkpoint magic {found:#010x}: {what}")
+            }
+            CkptError::GeometryMismatch { what } => {
+                write!(f, "checkpoint geometry mismatch: {what}")
+            }
+            CkptError::CodecMismatch { what } => write!(f, "checkpoint codec mismatch: {what}"),
+            CkptError::ChecksumMismatch { what } => {
+                write!(f, "checkpoint checksum mismatch: {what}")
+            }
+            CkptError::Io(e) => write!(f, "checkpoint i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CkptError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CkptError {
+    /// A clean EOF mid-record is [`CkptError::Truncated`] (the torn-file
+    /// shape crash tests produce); everything else is real I/O trouble.
+    fn from(e: std::io::Error) -> Self {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            CkptError::Truncated { what: "file ended mid-record".into() }
+        } else {
+            CkptError::Io(e)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint construction options
+// ---------------------------------------------------------------------------
+
+/// Everything a checkpoint writer needs to know, in one place — the
+/// construction API for [`disk::DiskCheckpointer`] and
+/// [`async_pipeline::CheckpointPipeline`] (ISSUE 7). Replaces the old
+/// positional-argument constructor pairs: build one via
+/// [`CheckpointOptions::from_config`] (the production path) or
+/// `CheckpointOptions::default()` plus struct update syntax in tests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointOptions {
+    /// Durable-publication directory (`None` = in-memory mirror only).
+    pub dir: Option<String>,
+    /// v1 rotation depth: how many `ckpt-*.bin` generations to keep.
+    pub keep: usize,
+    /// On-disk layout: v1 monolithic files or v2 base+delta chains.
+    pub format: CkptFormat,
+    /// v2 chain-compaction threshold (re-base when pending delta bytes
+    /// exceed `compact_frac × base_bytes`).
+    pub compact_frac: f64,
+    /// Payload codec for v2 files (ignored under v1).
+    pub codec: CkptCodec,
+    /// Artificial per-write delay — a test knob for exercising the
+    /// async pipeline's backpressure; always zero in production.
+    pub write_delay: std::time::Duration,
+}
+
+impl Default for CheckpointOptions {
+    fn default() -> Self {
+        Self {
+            dir: None,
+            keep: 2,
+            format: CkptFormat::V1,
+            compact_frac: DEFAULT_COMPACT_FRAC,
+            codec: CkptCodec::None,
+            write_delay: std::time::Duration::ZERO,
+        }
+    }
+}
+
+impl CheckpointOptions {
+    /// The production mapping from job config to writer options.
+    pub fn from_config(cfg: &CheckpointConfig) -> Self {
+        Self {
+            dir: cfg.dir.clone(),
+            format: cfg.format,
+            compact_frac: cfg.compact_frac,
+            codec: cfg.codec,
+            ..Self::default()
+        }
+    }
+
+    /// Builder-style override for the publication directory.
+    pub fn dir(mut self, dir: Option<&str>) -> Self {
+        self.dir = dir.map(str::to_string);
+        self
+    }
+}
 
 /// Fsync a checkpoint directory — renames are directory-metadata updates,
 /// so every publish path (v1 and v2) must make them durable before a
@@ -186,6 +316,14 @@ impl ShardState {
     /// Per-table optimizer accumulators (one f32 per local row).
     pub fn opt(&self) -> &[Vec<f32>] {
         &self.opt
+    }
+
+    /// Mutable shard data WITHOUT dirty tracking — only for the async
+    /// pipeline's restore path, which round-trips a *cloned* snapshot
+    /// through the configured codec (checkpoint fidelity, not content
+    /// mutation). Never call this on the live mirror.
+    pub(crate) fn shards_mut(&mut self) -> &mut [Vec<f32>] {
+        &mut self.shards
     }
 
     fn mark_row_dirty(&mut self, table: usize, local: usize) {

@@ -48,23 +48,63 @@
 //!   re-bases every node from the current mirror and GC reclaims the old
 //!   run's files — chains are only ever extended by the engine that
 //!   wrote them.
+//! * **Codecs** ([`super::codec`], ISSUE 7): every f32 payload block can
+//!   be written through a [`CkptCodec`] — per-chunk quantized rows,
+//!   RLE'd bytes, or raw fp32. Encoded files are self-describing: they
+//!   lead with the `CPRE` container magic, the codec id, and then the
+//!   file-kind magic, and every encoded blob carries its length and an
+//!   FNV-1a checksum. Readers detect the codec **per file**, so a chain
+//!   mixing codecs (a mid-run codec switch, manually stitched chains)
+//!   restores correctly, and pre-codec files — which are byte-identical
+//!   to `codec = none` output — keep loading. Load failures are typed
+//!   [`CkptError`]s; match on the variant, not the message.
 
 use std::collections::{HashMap, HashSet};
-use std::io::{BufReader, Write};
+use std::io::{BufReader, Read, Write};
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{Context, Result};
 
+use super::codec::{self, Payload};
 use super::writer_pool::{WriteJob, WriterPool};
 use super::{
     fsync_dir, r32, r64, rf32s, w32, w64, wf32s, write_durable, CheckpointStore,
-    ShardState,
+    CkptError, ShardState,
 };
+use crate::config::CkptCodec;
 
 const MAGIC_BASE: u32 = 0x4350_5242; // "CPRB"
 const MAGIC_DELTA: u32 = 0x4350_5244; // "CPRD"
 const MAGIC_META: u32 = 0x4350_524D; // "CPRM"
+/// Container magic of an encoded file: `CPRE`, then the codec id, then
+/// the inner file-kind magic (base/delta/meta). `codec = none` files
+/// skip the container and lead with the kind magic directly — exactly
+/// the pre-codec v2 byte layout.
+const MAGIC_ENC: u32 = 0x4350_5245; // "CPRE"
 const MANIFEST_HEADER: &str = "CPR-MANIFEST-V2";
+
+fn codec_id(c: CkptCodec) -> u32 {
+    match c {
+        CkptCodec::None => 0,
+        CkptCodec::Q8 => 1,
+        CkptCodec::Q4 => 2,
+        CkptCodec::Rle => 3,
+    }
+}
+
+fn codec_from_id(id: u32) -> Result<CkptCodec, CkptError> {
+    Ok(match id {
+        0 => CkptCodec::None,
+        1 => CkptCodec::Q8,
+        2 => CkptCodec::Q4,
+        3 => CkptCodec::Rle,
+        _ => {
+            return Err(CkptError::CodecMismatch {
+                what: format!("encoded file names codec id {id}, which this build does not register"),
+            })
+        }
+    })
+}
 
 /// The manifest file name (presence of this file is how
 /// [`super::disk::DiskCheckpointer::load_latest`] detects a v2 directory).
@@ -104,11 +144,19 @@ impl Manifest {
     }
 
     fn parse(text: &str) -> Result<Manifest> {
+        // a field that stops mid-line is the torn-write shape → Truncated;
+        // a present-but-malformed field is structural → GeometryMismatch
+        let cut = |what: &str| CkptError::Truncated { what: format!("manifest: {what}") };
+        let malformed =
+            |what: String| CkptError::GeometryMismatch { what: format!("manifest: {what}") };
         let mut lines = text.lines();
-        ensure!(
-            lines.next() == Some(MANIFEST_HEADER),
-            "not a v2 checkpoint manifest"
-        );
+        if lines.next() != Some(MANIFEST_HEADER) {
+            return Err(CkptError::BadMagic {
+                what: "not a v2 checkpoint manifest".into(),
+                found: 0,
+            }
+            .into());
+        }
         let mut seq = None;
         let mut meta = None;
         let mut chains: Vec<NodeChain> = Vec::new();
@@ -122,35 +170,40 @@ impl Manifest {
                     seq = Some(
                         parts
                             .next()
-                            .context("manifest: seq value missing")?
+                            .ok_or_else(|| cut("seq value missing"))?
                             .parse::<u64>()
-                            .context("manifest: bad seq")?,
+                            .map_err(|_| malformed("bad seq".into()))?,
                     );
                 }
                 Some("meta") => {
-                    meta = Some(parts.next().context("manifest: meta name missing")?.to_string());
+                    meta = Some(
+                        parts.next().ok_or_else(|| cut("meta name missing"))?.to_string(),
+                    );
                 }
                 Some("node") => {
                     let idx: usize = parts
                         .next()
-                        .context("manifest: node id missing")?
+                        .ok_or_else(|| cut("node id missing"))?
                         .parse()
-                        .context("manifest: bad node id")?;
-                    ensure!(
-                        idx == chains.len(),
-                        "manifest: node lines out of order ({idx} after {})",
-                        chains.len()
-                    );
-                    let base = parts.next().context("manifest: base name missing")?.to_string();
+                        .map_err(|_| malformed("bad node id".into()))?;
+                    if idx != chains.len() {
+                        return Err(malformed(format!(
+                            "node lines out of order ({idx} after {})",
+                            chains.len()
+                        ))
+                        .into());
+                    }
+                    let base =
+                        parts.next().ok_or_else(|| cut("base name missing"))?.to_string();
                     let deltas = parts.map(str::to_string).collect();
                     chains.push(NodeChain { base, deltas });
                 }
-                other => bail!("manifest: unknown line kind {other:?}"),
+                other => return Err(malformed(format!("unknown line kind {other:?}")).into()),
             }
         }
         Ok(Manifest {
-            seq: seq.context("manifest: seq line missing")?,
-            meta: meta.context("manifest: meta line missing")?,
+            seq: seq.ok_or_else(|| cut("seq line missing"))?,
+            meta: meta.ok_or_else(|| cut("meta line missing"))?,
             chains,
         })
     }
@@ -202,54 +255,146 @@ fn open_reader(path: &Path) -> Result<BufReader<std::fs::File>> {
     })?))
 }
 
-/// Write one node's full state as a base file.
-pub fn write_base(dir: &Path, name: &str, node: usize, state: &ShardState) -> Result<u64> {
+/// Map a raw read failure onto the typed error surface: a clean EOF is
+/// [`CkptError::Truncated`] naming `what`, any other I/O failure is
+/// [`CkptError::Io`]; already-typed errors pass through untouched.
+fn typed(e: anyhow::Error, what: impl FnOnce() -> String) -> anyhow::Error {
+    if e.downcast_ref::<CkptError>().is_some() {
+        return e;
+    }
+    match e.downcast::<std::io::Error>() {
+        Ok(io) if io.kind() == std::io::ErrorKind::UnexpectedEof => {
+            CkptError::Truncated { what: what() }.into()
+        }
+        Ok(io) => CkptError::Io(io).into(),
+        Err(e) => e,
+    }
+}
+
+/// Write the file header: the kind magic alone under `codec = none`
+/// (the pre-codec layout, byte for byte), or the `CPRE` container magic
+/// + codec id + kind magic for encoded files.
+fn write_header<W: Write>(w: &mut W, kind: u32, codec: CkptCodec) -> Result<()> {
+    if codec != CkptCodec::None {
+        w32(w, MAGIC_ENC)?;
+        w32(w, codec_id(codec))?;
+    }
+    w32(w, kind)
+}
+
+/// Read a file header, auto-detecting the codec: returns the codec the
+/// file was written with and its kind magic. `expect` rejects the wrong
+/// file kind with a typed [`CkptError::BadMagic`].
+fn read_header<R: Read>(r: &mut R, expect: u32, what: &str) -> Result<CkptCodec> {
+    let mut magic = r32(r)?;
+    let mut codec = CkptCodec::None;
+    if magic == MAGIC_ENC {
+        codec = codec_from_id(r32(r)?)?;
+        magic = r32(r)?;
+    }
+    if magic != expect {
+        return Err(CkptError::BadMagic { what: what.to_string(), found: magic }.into());
+    }
+    Ok(codec)
+}
+
+/// Write one f32 payload block through `codec`. Raw (`none`) blocks are
+/// `len + values`, exactly the pre-codec layout; encoded blocks are
+/// `n_values + blob_len + blob + fnv1a(blob)` so a reader can verify the
+/// blob before decoding it.
+fn write_f32_block<W: Write>(
+    w: &mut W,
+    codec: CkptCodec,
+    class: Payload,
+    vals: &[f32],
+) -> Result<()> {
+    w32(w, vals.len() as u32)?;
+    if codec == CkptCodec::None {
+        return wf32s(w, vals);
+    }
+    let blob = codec::codec(codec).encode(class, vals);
+    w32(w, blob.len() as u32)?;
+    w.write_all(&blob)?;
+    w32(w, codec::fnv1a(&blob))
+}
+
+/// Read one f32 payload block written by [`write_f32_block`].
+fn read_f32_block<R: Read>(
+    r: &mut R,
+    codec: CkptCodec,
+    class: Payload,
+    what: impl Fn() -> String,
+) -> Result<Vec<f32>> {
+    let n = r32(r)? as usize;
+    if codec == CkptCodec::None {
+        return rf32s(r, n).map_err(|e| typed(e, &what));
+    }
+    let blob_len = r32(r)? as usize;
+    let mut blob = vec![0u8; blob_len];
+    r.read_exact(&mut blob)
+        .map_err(|e| typed(e.into(), &what))?;
+    let sum = r32(r)?;
+    if codec::fnv1a(&blob) != sum {
+        return Err(CkptError::ChecksumMismatch { what: what() }.into());
+    }
+    codec::codec(codec)
+        .decode(class, &blob, n)
+        .map_err(anyhow::Error::from)
+}
+
+/// Write one node's full state as a base file (through `codec`).
+pub fn write_base(
+    dir: &Path,
+    name: &str,
+    node: usize,
+    state: &ShardState,
+    codec: CkptCodec,
+) -> Result<u64> {
     write_durable(dir, name, |w| {
-        w32(w, MAGIC_BASE)?;
+        write_header(w, MAGIC_BASE, codec)?;
         w32(w, node as u32)?;
         w32(w, state.shards().len() as u32)?;
         for shard in state.shards() {
-            w32(w, shard.len() as u32)?;
-            wf32s(w, shard)?;
+            write_f32_block(w, codec, Payload::Rows, shard)?;
         }
         for opt in state.opt() {
-            w32(w, opt.len() as u32)?;
-            wf32s(w, opt)?;
+            write_f32_block(w, codec, Payload::State, opt)?;
         }
         Ok(())
     })
 }
 
-/// Read a base file back as (node, (shards, opt)). A truncated or
-/// foreign file is an error, never a partial result.
+/// Read a base file back as (node, (shards, opt)), auto-detecting the
+/// codec it was written with. A truncated or foreign file is a typed
+/// error, never a partial result.
 pub fn read_base(path: &Path) -> Result<(usize, NodeStateParts)> {
     let mut r = open_reader(path)?;
-    if r32(&mut r)? != MAGIC_BASE {
-        bail!("{} is not a v2 base file", path.display());
-    }
-    let node = r32(&mut r)? as usize;
-    let n_tables = r32(&mut r)? as usize;
+    let what = || format!("base file {}", path.display());
+    let codec = read_header(&mut r, MAGIC_BASE, &format!("{} is not a v2 base file", path.display()))
+        .map_err(|e| typed(e, what))?;
+    let node = r32(&mut r).map_err(|e| typed(e, what))? as usize;
+    let n_tables = r32(&mut r).map_err(|e| typed(e, what))? as usize;
     let mut shards = Vec::with_capacity(n_tables);
     for _ in 0..n_tables {
-        let len = r32(&mut r)? as usize;
-        shards.push(rf32s(&mut r, len).with_context(|| {
-            format!("truncated base file {}", path.display())
-        })?);
+        shards.push(read_f32_block(&mut r, codec, Payload::Rows, what)?);
     }
     let mut opt = Vec::with_capacity(n_tables);
     for _ in 0..n_tables {
-        let len = r32(&mut r)? as usize;
-        opt.push(rf32s(&mut r, len).with_context(|| {
-            format!("truncated base file {}", path.display())
-        })?);
+        opt.push(read_f32_block(&mut r, codec, Payload::State, what)?);
     }
     Ok((node, (shards, opt)))
 }
 
-/// Write one node's dirty rows as a delta file.
-pub fn write_delta(dir: &Path, name: &str, node: usize, tables: &[DeltaTable]) -> Result<u64> {
+/// Write one node's dirty rows as a delta file (through `codec`).
+pub fn write_delta(
+    dir: &Path,
+    name: &str,
+    node: usize,
+    tables: &[DeltaTable],
+    codec: CkptCodec,
+) -> Result<u64> {
     write_durable(dir, name, |w| {
-        w32(w, MAGIC_DELTA)?;
+        write_header(w, MAGIC_DELTA, codec)?;
         w32(w, node as u32)?;
         w32(w, tables.len() as u32)?;
         for t in tables {
@@ -258,76 +403,86 @@ pub fn write_delta(dir: &Path, name: &str, node: usize, tables: &[DeltaTable]) -
             for &lr in &t.locals {
                 w32(w, lr)?;
             }
-            wf32s(w, &t.data)?;
-            wf32s(w, &t.opt)?;
+            write_f32_block(w, codec, Payload::Rows, &t.data)?;
+            write_f32_block(w, codec, Payload::State, &t.opt)?;
         }
         Ok(())
     })
 }
 
-/// Read a delta file back as (node, per-table payloads). Truncation is an
-/// error (the manifest only ever references fully-fsynced files, so a
-/// torn delta means external corruption, not a crash artifact).
+/// Read a delta file back as (node, per-table payloads), auto-detecting
+/// its codec. Truncation is an error (the manifest only ever references
+/// fully-fsynced files, so a torn delta means external corruption, not a
+/// crash artifact).
 pub fn read_delta(path: &Path) -> Result<(usize, Vec<DeltaTable>)> {
     let mut r = open_reader(path)?;
-    if r32(&mut r)? != MAGIC_DELTA {
-        bail!("{} is not a v2 delta file", path.display());
-    }
-    let node = r32(&mut r)? as usize;
-    let n_tables = r32(&mut r)? as usize;
+    let what = || format!("delta file {}", path.display());
+    let codec =
+        read_header(&mut r, MAGIC_DELTA, &format!("{} is not a v2 delta file", path.display()))
+            .map_err(|e| typed(e, what))?;
+    let node = r32(&mut r).map_err(|e| typed(e, what))? as usize;
+    let n_tables = r32(&mut r).map_err(|e| typed(e, what))? as usize;
     let mut tables = Vec::with_capacity(n_tables);
     for _ in 0..n_tables {
-        let n_rows = r32(&mut r)? as usize;
-        let dim = r32(&mut r)? as usize;
+        let n_rows = r32(&mut r).map_err(|e| typed(e, what))? as usize;
+        let dim = r32(&mut r).map_err(|e| typed(e, what))? as usize;
         let mut locals = Vec::with_capacity(n_rows);
         for _ in 0..n_rows {
-            locals.push(r32(&mut r)?);
+            locals.push(r32(&mut r).map_err(|e| typed(e, what))?);
         }
-        let data = rf32s(&mut r, n_rows * dim)
-            .with_context(|| format!("truncated delta file {}", path.display()))?;
-        let opt = rf32s(&mut r, n_rows)
-            .with_context(|| format!("truncated delta file {}", path.display()))?;
+        let data = read_f32_block(&mut r, codec, Payload::Rows, what)?;
+        if data.len() != n_rows * dim {
+            return Err(CkptError::GeometryMismatch {
+                what: format!(
+                    "{}: {} row values for {n_rows} rows × dim {dim}",
+                    what(),
+                    data.len()
+                ),
+            }
+            .into());
+        }
+        let opt = read_f32_block(&mut r, codec, Payload::State, what)?;
         tables.push(DeltaTable { dim, locals, data, opt });
     }
     Ok((node, tables))
 }
 
-/// Write the position marker + MLP params.
+/// Write the position marker + MLP params (through `codec`; the dense
+/// params ride the lossless state path under every codec).
 pub fn write_meta(
     dir: &Path,
     name: &str,
     mlp: &[Vec<f32>],
     step: u64,
     samples: u64,
+    codec: CkptCodec,
 ) -> Result<u64> {
     write_durable(dir, name, |w| {
-        w32(w, MAGIC_META)?;
+        write_header(w, MAGIC_META, codec)?;
         w64(w, step)?;
         w64(w, samples)?;
         w32(w, mlp.len() as u32)?;
         for p in mlp {
-            w32(w, p.len() as u32)?;
-            wf32s(w, p)?;
+            write_f32_block(w, codec, Payload::State, p)?;
         }
         Ok(())
     })
 }
 
-/// Read a meta file back as (mlp, step, samples).
+/// Read a meta file back as (mlp, step, samples), auto-detecting its
+/// codec.
 pub fn read_meta(path: &Path) -> Result<(Vec<Vec<f32>>, u64, u64)> {
     let mut r = open_reader(path)?;
-    if r32(&mut r)? != MAGIC_META {
-        bail!("{} is not a v2 meta file", path.display());
-    }
-    let step = r64(&mut r)?;
-    let samples = r64(&mut r)?;
-    let n_mlp = r32(&mut r)? as usize;
+    let what = || format!("meta file {}", path.display());
+    let codec =
+        read_header(&mut r, MAGIC_META, &format!("{} is not a v2 meta file", path.display()))
+            .map_err(|e| typed(e, what))?;
+    let step = r64(&mut r).map_err(|e| typed(e, what))?;
+    let samples = r64(&mut r).map_err(|e| typed(e, what))?;
+    let n_mlp = r32(&mut r).map_err(|e| typed(e, what))? as usize;
     let mut mlp = Vec::with_capacity(n_mlp);
     for _ in 0..n_mlp {
-        let len = r32(&mut r)? as usize;
-        mlp.push(rf32s(&mut r, len).with_context(|| {
-            format!("truncated meta file {}", path.display())
-        })?);
+        mlp.push(read_f32_block(&mut r, codec, Payload::State, what)?);
     }
     Ok((mlp, step, samples))
 }
@@ -360,23 +515,33 @@ pub fn load_node_chain(
     expect_node: usize,
 ) -> Result<NodeStateParts> {
     let (node, (mut shards, mut opt)) = read_base(&dir.join(&chain.base))?;
-    ensure!(
-        node == expect_node,
-        "chain base {} belongs to node {node}, expected {expect_node}",
-        chain.base
-    );
+    if node != expect_node {
+        return Err(CkptError::GeometryMismatch {
+            what: format!(
+                "chain base {} belongs to node {node}, expected {expect_node}",
+                chain.base
+            ),
+        }
+        .into());
+    }
     for d in &chain.deltas {
         let (dnode, tables) = read_delta(&dir.join(d))?;
-        ensure!(
-            dnode == expect_node,
-            "chain delta {d} belongs to node {dnode}, expected {expect_node}"
-        );
-        ensure!(
-            tables.len() == shards.len(),
-            "chain delta {d} has {} tables, base has {}",
-            tables.len(),
-            shards.len()
-        );
+        if dnode != expect_node {
+            return Err(CkptError::GeometryMismatch {
+                what: format!("chain delta {d} belongs to node {dnode}, expected {expect_node}"),
+            }
+            .into());
+        }
+        if tables.len() != shards.len() {
+            return Err(CkptError::GeometryMismatch {
+                what: format!(
+                    "chain delta {d} has {} tables, base has {}",
+                    tables.len(),
+                    shards.len()
+                ),
+            }
+            .into());
+        }
         for (t, dt) in tables.iter().enumerate() {
             if dt.locals.is_empty() {
                 continue;
@@ -387,18 +552,26 @@ pub fn load_node_chain(
             // rows at wrong offsets
             let rows = opt[t].len();
             let base_dim = if rows == 0 { 0 } else { shards[t].len() / rows };
-            ensure!(
-                dt.dim == base_dim,
-                "chain delta {d} table {t}: dim {} != base dim {base_dim}",
-                dt.dim
-            );
+            if dt.dim != base_dim {
+                return Err(CkptError::GeometryMismatch {
+                    what: format!(
+                        "chain delta {d} table {t}: dim {} != base dim {base_dim}",
+                        dt.dim
+                    ),
+                }
+                .into());
+            }
             for (i, &lr) in dt.locals.iter().enumerate() {
                 let lr = lr as usize;
-                ensure!(
-                    lr < rows,
-                    "chain delta {d} table {t}: local row {lr} out of range \
-                     ({rows} rows)"
-                );
+                if lr >= rows {
+                    return Err(CkptError::GeometryMismatch {
+                        what: format!(
+                            "chain delta {d} table {t}: local row {lr} out of range \
+                             ({rows} rows)"
+                        ),
+                    }
+                    .into());
+                }
                 shards[t][lr * dt.dim..(lr + 1) * dt.dim]
                     .copy_from_slice(&dt.data[i * dt.dim..(i + 1) * dt.dim]);
                 opt[t][lr] = dt.opt[i];
@@ -433,11 +606,15 @@ pub fn load_node(
     let Some(m) = read_manifest(dir)? else {
         return Ok(None);
     };
-    ensure!(
-        node < m.chains.len(),
-        "manifest covers {} nodes, asked for node {node}",
-        m.chains.len()
-    );
+    if node >= m.chains.len() {
+        return Err(CkptError::GeometryMismatch {
+            what: format!(
+                "manifest covers {} nodes, asked for node {node}",
+                m.chains.len()
+            ),
+        }
+        .into());
+    }
     let (_, step, samples) = read_meta(&dir.join(&m.meta))?;
     let parts = load_node_chain(dir, &m.chains[node], node)?;
     Ok(Some((parts, step, samples)))
@@ -469,6 +646,7 @@ pub struct V2Engine {
     dir: PathBuf,
     pool: WriterPool,
     compact_frac: f64,
+    codec: CkptCodec,
     manifest: Option<Manifest>,
     /// false until this engine's first successful publish: an inherited
     /// manifest (from a previous process) is used only to continue the
@@ -487,8 +665,17 @@ impl V2Engine {
     /// Open (or create) a v2 checkpoint directory, resuming its manifest
     /// sequence if one exists. `compact_frac` is the chain-compaction
     /// threshold (re-base a node when its pending chain's delta bytes
-    /// exceed `compact_frac × base_bytes`).
-    pub fn open(dir: &Path, pool: WriterPool, compact_frac: f64) -> Result<Self> {
+    /// exceed `compact_frac × base_bytes`); `codec` is applied to every
+    /// file THIS engine writes — files already in the directory keep
+    /// whatever codec their headers declare, so a mid-run codec switch
+    /// yields a mixed chain that still restores (readers auto-detect
+    /// per file).
+    pub fn open(
+        dir: &Path,
+        pool: WriterPool,
+        compact_frac: f64,
+        codec: CkptCodec,
+    ) -> Result<Self> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
         let manifest = read_manifest(dir)?;
@@ -496,6 +683,7 @@ impl V2Engine {
             dir: dir.to_path_buf(),
             pool,
             compact_frac,
+            codec,
             manifest,
             synced: false,
             sizes: HashMap::new(),
@@ -542,7 +730,12 @@ impl V2Engine {
                 Some(_) if st.dirty_row_count() == 0 => Action::Keep,
                 Some(chain) => {
                     let base_bytes = self.file_size(&chain.base)?;
-                    let mut delta_bytes = st.dirty_io_bytes();
+                    // the pending delta hasn't been encoded yet: scale its
+                    // logical bytes by the codec's expected ratio so the
+                    // compaction decision compares on-disk apples to apples
+                    let pending = (st.dirty_io_bytes() as f64
+                        * codec::estimated_ratio(self.codec)) as u64;
+                    let mut delta_bytes = pending;
                     for d in &chain.deltas {
                         delta_bytes += self.file_size(d)?;
                     }
@@ -562,6 +755,9 @@ impl V2Engine {
         let mut jobs: Vec<WriteJob<'_>> = Vec::new();
         let mut job_names: Vec<String> = Vec::new();
         let dir = self.dir.clone();
+        // Copy — each pool job captures its own; encoding runs inside the
+        // jobs, so it parallelizes across nodes with the file writes
+        let job_codec = self.codec;
         for (n, st) in store.node_states().iter().enumerate() {
             match actions[n] {
                 Action::Keep => {
@@ -574,7 +770,7 @@ impl V2Engine {
                     let dir = dir.clone();
                     jobs.push(Box::new(move || {
                         let _t = crate::telemetry::span_node("ckpt_write_base", n);
-                        write_base(&dir, &name, n, st)
+                        write_base(&dir, &name, n, st, job_codec)
                     }));
                 }
                 Action::Delta => {
@@ -587,7 +783,7 @@ impl V2Engine {
                     jobs.push(Box::new(move || {
                         let _t = crate::telemetry::span_node("ckpt_write_delta", n);
                         let tables = delta_tables(st);
-                        write_delta(&dir, &name, n, &tables)
+                        write_delta(&dir, &name, n, &tables, job_codec)
                     }));
                 }
             }
@@ -602,8 +798,14 @@ impl V2Engine {
         let meta = if update_meta || prev.is_none() {
             let _t = crate::telemetry::span("ckpt_meta");
             let name = format!("meta-{seq}.bin");
-            let bytes =
-                write_meta(&self.dir, &name, &store.mlp, store.step, store.samples)?;
+            let bytes = write_meta(
+                &self.dir,
+                &name,
+                &store.mlp,
+                store.step,
+                store.samples,
+                self.codec,
+            )?;
             total += bytes;
             self.sizes.insert(name.clone(), bytes);
             name
@@ -724,7 +926,11 @@ mod tests {
     }
 
     fn engine(dir: &Path) -> V2Engine {
-        V2Engine::open(dir, WriterPool::new(3), 0.5).unwrap()
+        V2Engine::open(dir, WriterPool::new(3), 0.5, CkptCodec::None).unwrap()
+    }
+
+    fn engine_with(dir: &Path, codec: CkptCodec) -> V2Engine {
+        V2Engine::open(dir, WriterPool::new(3), 0.5, codec).unwrap()
     }
 
     #[test]
@@ -735,7 +941,7 @@ mod tests {
         let mut store = CheckpointStore::initial(&c, vec![]);
         store.full_save(&c, vec![], 1, 128);
         let st = &store.node_states()[1];
-        let bytes = write_base(&dir, "node1-base-1.bin", 1, st).unwrap();
+        let bytes = write_base(&dir, "node1-base-1.bin", 1, st, CkptCodec::None).unwrap();
         assert_eq!(bytes, std::fs::metadata(dir.join("node1-base-1.bin")).unwrap().len());
         let (node, (shards, opt)) = read_base(&dir.join("node1-base-1.bin")).unwrap();
         assert_eq!(node, 1);
@@ -758,7 +964,7 @@ mod tests {
         let tables = delta_tables(st);
         assert_eq!(tables[0].locals, vec![0, 1, 3]);
         assert!(tables[1].locals.is_empty());
-        write_delta(&dir, "node0-delta-1.bin", 0, &tables).unwrap();
+        write_delta(&dir, "node0-delta-1.bin", 0, &tables, CkptCodec::None).unwrap();
         let (node, back) = read_delta(&dir.join("node0-delta-1.bin")).unwrap();
         assert_eq!(node, 0);
         assert_eq!(back, tables);
@@ -775,8 +981,8 @@ mod tests {
         perturb(&c, 3);
         store.save_rows(&c, 0, &[0, 3, 9, 12]);
         let st = &store.node_states()[0];
-        write_delta(&dir, "d.bin", 0, &delta_tables(st)).unwrap();
-        write_base(&dir, "b.bin", 0, st).unwrap();
+        write_delta(&dir, "d.bin", 0, &delta_tables(st), CkptCodec::None).unwrap();
+        write_base(&dir, "b.bin", 0, st, CkptCodec::None).unwrap();
         for name in ["d.bin", "b.bin"] {
             let path = dir.join(name);
             let full = std::fs::read(&path).unwrap();
@@ -867,7 +1073,7 @@ mod tests {
         let mut store = CheckpointStore::initial(&c, vec![]);
         store.full_save(&c, vec![], 1, 128);
         // tiny threshold: the second delta must trigger a re-base
-        let mut eng = V2Engine::open(&dir, WriterPool::new(2), 0.05).unwrap();
+        let mut eng = V2Engine::open(&dir, WriterPool::new(2), 0.05, CkptCodec::None).unwrap();
         eng.publish(&mut store, true, false).unwrap();
         for i in 0..6u64 {
             perturb(&c, 10 + i);
@@ -932,7 +1138,7 @@ mod tests {
         perturb(&c, 30);
         store.save_rows(&c, 0, &[0, 3]);
         let st = &store.node_states()[0];
-        write_delta(&dir, "node0-delta-99.bin", 0, &delta_tables(st)).unwrap();
+        write_delta(&dir, "node0-delta-99.bin", 0, &delta_tables(st), CkptCodec::None).unwrap();
         let orphan = std::fs::read(dir.join("node0-delta-99.bin")).unwrap();
         std::fs::write(dir.join("node0-delta-98.bin"), &orphan[..orphan.len() / 3]).unwrap();
         std::fs::write(dir.join(".MANIFEST.tmp"), b"CPR-MANIFEST-V2\nseq ").unwrap();
@@ -1025,24 +1231,34 @@ mod tests {
         let mut store = CheckpointStore::initial(&c, vec![]);
         store.full_save(&c, vec![], 1, 128);
         let st = &store.node_states()[0];
-        write_base(&dir, "b.bin", 0, st).unwrap();
+        write_base(&dir, "b.bin", 0, st, CkptCodec::None).unwrap();
         let bad = vec![
             DeltaTable { dim: 4, locals: vec![999], data: vec![0.0; 4], opt: vec![0.0] },
             DeltaTable { dim: 4, locals: vec![], data: vec![], opt: vec![] },
         ];
-        write_delta(&dir, "d.bin", 0, &bad).unwrap();
+        write_delta(&dir, "d.bin", 0, &bad, CkptCodec::None).unwrap();
         let chain = NodeChain { base: "b.bin".into(), deltas: vec!["d.bin".into()] };
         let err = load_node_chain(&dir, &chain, 0).unwrap_err();
+        // typed, not stringly: callers match the variant
+        assert!(
+            matches!(err.downcast_ref::<CkptError>(),
+                     Some(CkptError::GeometryMismatch { .. })),
+            "{err:#}"
+        );
         assert!(format!("{err:#}").contains("out of range"), "{err:#}");
         // and a dim mismatch is rejected the same way
         let bad_dim = vec![
             DeltaTable { dim: 2, locals: vec![0], data: vec![0.0; 2], opt: vec![0.0] },
             DeltaTable { dim: 4, locals: vec![], data: vec![], opt: vec![] },
         ];
-        write_delta(&dir, "d2.bin", 0, &bad_dim).unwrap();
+        write_delta(&dir, "d2.bin", 0, &bad_dim, CkptCodec::None).unwrap();
         let chain2 = NodeChain { base: "b.bin".into(), deltas: vec!["d2.bin".into()] };
         let err2 = load_node_chain(&dir, &chain2, 0).unwrap_err();
-        assert!(format!("{err2:#}").contains("dim"), "{err2:#}");
+        assert!(
+            matches!(err2.downcast_ref::<CkptError>(),
+                     Some(CkptError::GeometryMismatch { .. })),
+            "{err2:#}"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -1065,5 +1281,207 @@ mod tests {
         assert_eq!(eng2.manifest().unwrap().seq, seq0 + 1);
         assert_eq!(load_store(&dir).unwrap().unwrap(), store);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // -- codec coverage -----------------------------------------------------
+
+    /// What reading a codec'd file must yield: exactly what the codec's
+    /// own encode→decode produces (bit-exact for lossless codecs,
+    /// quantized values for lossy ones — file I/O adds no drift of its
+    /// own on top of the codec).
+    fn expect_rows(codec: CkptCodec, vals: &[f32]) -> Vec<f32> {
+        let c = codec::codec(codec);
+        c.decode(Payload::Rows, &c.encode(Payload::Rows, vals), vals.len()).unwrap()
+    }
+
+    #[test]
+    fn every_codec_roundtrips_base_delta_and_meta_files() {
+        for k in CkptCodec::all() {
+            let dir = tmpdir(&format!("codec_{}", k.name()));
+            let c = cluster();
+            perturb(&c, 50);
+            let mut store = CheckpointStore::initial(&c, vec![vec![0.25, -1.5]]);
+            store.full_save(&c, vec![vec![0.25, -1.5]], 3, 384);
+            let st = &store.node_states()[0];
+            write_base(&dir, "b.bin", 0, st, k).unwrap();
+            let (node, (shards, opt)) = read_base(&dir.join("b.bin")).unwrap();
+            assert_eq!(node, 0);
+            for (t, shard) in shards.iter().enumerate() {
+                assert_eq!(shard, &expect_rows(k, &st.shards()[t]), "codec {k:?}");
+            }
+            // optimizer state rides the lossless path under EVERY codec
+            assert_eq!(opt, st.opt(), "codec {k:?} must keep opt state fp32-exact");
+
+            let tables = delta_tables(st);
+            write_delta(&dir, "d.bin", 0, &tables, k).unwrap();
+            let (_, back) = read_delta(&dir.join("d.bin")).unwrap();
+            for (t, bt) in back.iter().enumerate() {
+                assert_eq!(bt.locals, tables[t].locals);
+                assert_eq!(bt.data, expect_rows(k, &tables[t].data), "codec {k:?}");
+                assert_eq!(bt.opt, tables[t].opt, "codec {k:?} delta opt must be exact");
+            }
+
+            write_meta(&dir, "m.bin", &store.mlp, 3, 384, k).unwrap();
+            let (mlp, step, samples) = read_meta(&dir.join("m.bin")).unwrap();
+            assert_eq!(mlp, store.mlp, "codec {k:?} must keep MLP params fp32-exact");
+            assert_eq!((step, samples), (3, 384));
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn mixed_codec_chains_restore_per_file() {
+        // a mid-run codec switch stitches chains whose base and deltas
+        // carry different codecs; the reader must auto-detect each file
+        let dir = tmpdir("mixed");
+        let c = cluster();
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        store.full_save(&c, vec![], 1, 128);
+        let st = store.node_states()[0].clone();
+        write_base(&dir, "b.bin", 0, &st, CkptCodec::None).unwrap();
+        perturb(&c, 51);
+        let mut store2 = CheckpointStore::initial(&c, vec![]);
+        store2.save_rows(&c, 0, &[0, 3, 9]);
+        let tables = delta_tables(&store2.node_states()[0]);
+        write_delta(&dir, "d.bin", 0, &tables, CkptCodec::Q8).unwrap();
+        let chain = NodeChain { base: "b.bin".into(), deltas: vec!["d.bin".into()] };
+        let (shards, opt) = load_node_chain(&dir, &chain, 0).unwrap();
+        // expected: the fp32 base with the delta's rows replayed through q8
+        let mut want = st.shards().to_vec();
+        let mut want_opt = st.opt().to_vec();
+        for (t, dt) in tables.iter().enumerate() {
+            let dec = expect_rows(CkptCodec::Q8, &dt.data);
+            for (i, &lr) in dt.locals.iter().enumerate() {
+                let lr = lr as usize;
+                want[t][lr * dt.dim..(lr + 1) * dt.dim]
+                    .copy_from_slice(&dec[i * dt.dim..(i + 1) * dt.dim]);
+                want_opt[t][lr] = dt.opt[i];
+            }
+        }
+        assert_eq!(shards, want);
+        assert_eq!(opt, want_opt);
+        // the reverse stitch (quantized base, raw delta) restores too
+        write_base(&dir, "b2.bin", 0, &st, CkptCodec::Q4).unwrap();
+        let chain2 = NodeChain { base: "b2.bin".into(), deltas: vec![] };
+        let (shards2, _) = load_node_chain(&dir, &chain2, 0).unwrap();
+        for (t, shard) in shards2.iter().enumerate() {
+            assert_eq!(shard, &expect_rows(CkptCodec::Q4, &st.shards()[t]));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_encoded_files_fail_with_typed_errors() {
+        let dir = tmpdir("enc_corrupt");
+        let c = cluster();
+        let mut store = CheckpointStore::initial(&c, vec![]);
+        store.full_save(&c, vec![], 1, 128);
+        let st = &store.node_states()[0];
+        write_base(&dir, "b.bin", 0, st, CkptCodec::Q8).unwrap();
+        let full = std::fs::read(dir.join("b.bin")).unwrap();
+        // a bit flip inside an encoded blob trips the blob checksum
+        let mut flipped = full.clone();
+        let last = flipped.len();
+        flipped[last - 6] ^= 0x40;
+        std::fs::write(dir.join("flip.bin"), &flipped).unwrap();
+        let err = read_base(&dir.join("flip.bin")).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<CkptError>(),
+                     Some(CkptError::ChecksumMismatch { .. })),
+            "{err:#}"
+        );
+        // truncation mid-blob is Truncated, same as raw files
+        std::fs::write(dir.join("cut.bin"), &full[..full.len() / 2]).unwrap();
+        let err = read_base(&dir.join("cut.bin")).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<CkptError>(), Some(CkptError::Truncated { .. })),
+            "{err:#}"
+        );
+        // an unknown codec id in the container header is a CodecMismatch
+        let mut unknown = Vec::new();
+        unknown.extend_from_slice(&MAGIC_ENC.to_le_bytes());
+        unknown.extend_from_slice(&99u32.to_le_bytes());
+        unknown.extend_from_slice(&MAGIC_BASE.to_le_bytes());
+        std::fs::write(dir.join("odd.bin"), &unknown).unwrap();
+        let err = read_base(&dir.join("odd.bin")).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<CkptError>(),
+                     Some(CkptError::CodecMismatch { .. })),
+            "{err:#}"
+        );
+        // the wrong kind of file is BadMagic carrying the found magic
+        write_meta(&dir, "m.bin", &[], 1, 128, CkptCodec::None).unwrap();
+        let err = read_base(&dir.join("m.bin")).unwrap_err();
+        match err.downcast_ref::<CkptError>() {
+            Some(CkptError::BadMagic { found, .. }) => assert_eq!(*found, MAGIC_META),
+            other => panic!("expected BadMagic, got {other:?} ({err:#})"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quantized_publish_shrinks_bytes_and_still_loads() {
+        // bigger tables so codes dominate headers
+        let mk = || {
+            let c = PsCluster::new(
+                vec![TableInfo { rows: 240, dim: 16 }, TableInfo { rows: 70, dim: 16 }],
+                3,
+                17,
+            );
+            let mut store = CheckpointStore::initial(&c, vec![vec![0.5; 32]]);
+            store.full_save(&c, vec![vec![0.5; 32]], 1, 128);
+            (c, store)
+        };
+        let dir_f = tmpdir("pub_f32");
+        let dir_q = tmpdir("pub_q8");
+        let (_, mut store_f) = mk();
+        let (_, mut store_q) = mk();
+        let mut eng_f = engine(&dir_f);
+        let mut eng_q = engine_with(&dir_q, CkptCodec::Q8);
+        let bytes_f = eng_f.publish(&mut store_f, true, false).unwrap();
+        let bytes_q = eng_q.publish(&mut store_q, true, false).unwrap();
+        assert!(
+            (bytes_q as f64) < 0.6 * bytes_f as f64,
+            "q8 publish ({bytes_q} B) must be well below fp32 ({bytes_f} B)"
+        );
+        // partial restore reads the quantized chain back within its bound
+        let ((shards, opt), step, _) = load_node(&dir_q, 0).unwrap().unwrap();
+        assert_eq!(step, 1);
+        assert_eq!(opt, store_q.node_states()[0].opt());
+        for (t, shard) in shards.iter().enumerate() {
+            assert_eq!(shard, &expect_rows(CkptCodec::Q8, &store_q.node_states()[0].shards()[t]));
+        }
+        std::fs::remove_dir_all(&dir_f).ok();
+        std::fs::remove_dir_all(&dir_q).ok();
+    }
+
+    #[test]
+    fn crash_debris_is_invisible_under_every_codec() {
+        // the PR-5 interrupted-publish guarantee must hold for encoded
+        // files too: orphans, torn encoded files, stale tmp — all invisible
+        for k in CkptCodec::all() {
+            let dir = tmpdir(&format!("debris_{}", k.name()));
+            let c = cluster();
+            let mut store = CheckpointStore::initial(&c, vec![]);
+            store.full_save(&c, vec![], 1, 128);
+            let mut eng = engine_with(&dir, k);
+            eng.publish(&mut store, true, false).unwrap();
+            let durable = load_store(&dir).unwrap().unwrap();
+            perturb(&c, 60);
+            store.save_rows(&c, 0, &[0, 3]);
+            let st = &store.node_states()[0];
+            write_delta(&dir, "node0-delta-99.bin", 0, &delta_tables(st), k).unwrap();
+            let orphan = std::fs::read(dir.join("node0-delta-99.bin")).unwrap();
+            std::fs::write(dir.join("node0-delta-98.bin"), &orphan[..orphan.len() / 3])
+                .unwrap();
+            std::fs::write(dir.join(".MANIFEST.tmp"), b"CPR-MANIFEST-V2\nseq ").unwrap();
+            let back = load_store(&dir).unwrap().unwrap();
+            assert_eq!(back, durable, "codec {k:?}: debris must be invisible");
+            store.mark_position(vec![], 2, 256);
+            eng.publish(&mut store, true, false).unwrap();
+            assert!(!dir.join("node0-delta-98.bin").exists(), "codec {k:?}: debris not GC'd");
+            assert!(!dir.join(".MANIFEST.tmp").exists(), "codec {k:?}: stale tmp not GC'd");
+            std::fs::remove_dir_all(&dir).ok();
+        }
     }
 }

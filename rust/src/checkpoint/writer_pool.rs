@@ -15,6 +15,14 @@
 //! and fails the whole batch (the caller then skips the manifest update,
 //! leaving the previous durable chain published — the crash-consistency
 //! rule holds for IO errors exactly as for crashes).
+//!
+//! The codec stage (ISSUE 7) runs *inside* these jobs: when the engine
+//! carries a payload codec ([`super::codec`]), each job quantizes /
+//! compresses its own node's payload before writing, so encoding
+//! parallelizes across nodes exactly like the raw fp32 serialization it
+//! replaces. The job's returned byte count is the **encoded** size —
+//! that is what reaches `bytes_written` telemetry and the compaction
+//! ledger.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;

@@ -126,6 +126,63 @@ impl CkptFormat {
     }
 }
 
+/// Default v2 chain-compaction threshold (`compact_frac`): re-base a
+/// node once its pending delta bytes exceed half the base. The single
+/// source of truth — `CheckpointOptions` and every constructor shim
+/// derive from here.
+pub const DEFAULT_COMPACT_FRAC: f64 = 0.5;
+
+/// Payload codec for format-v2 checkpoint files (see
+/// `checkpoint::codec`; Check-N-Run style quantization). Ignored under
+/// format v1, which always writes raw fp32 stores.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CkptCodec {
+    /// raw little-endian fp32 — byte-identical to pre-codec format v2
+    #[default]
+    None,
+    /// 8-bit per-chunk uniform quantization of embedding rows
+    /// (per-chunk `min`/`scale`, fp32 fallback for optimizer state)
+    Q8,
+    /// 4-bit per-chunk uniform quantization (two codes per byte)
+    Q4,
+    /// lossless byte-level run-length coding of the fp32 stream
+    Rle,
+}
+
+impl CkptCodec {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "none" => CkptCodec::None,
+            "q8" => CkptCodec::Q8,
+            "q4" => CkptCodec::Q4,
+            "rle" => CkptCodec::Rle,
+            _ => bail!("unknown checkpoint codec {s:?} (none|q8|q4|rle)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CkptCodec::None => "none",
+            CkptCodec::Q8 => "q8",
+            CkptCodec::Q4 => "q4",
+            CkptCodec::Rle => "rle",
+        }
+    }
+
+    /// Every registered codec, in the order the CI codec matrix runs
+    /// them.
+    pub fn all() -> [CkptCodec; 4] {
+        [CkptCodec::None, CkptCodec::Q8, CkptCodec::Q4, CkptCodec::Rle]
+    }
+
+    /// True when decoding does not reproduce the written values
+    /// bit-exactly (the quantizers) — the golden suites compare such
+    /// runs under an epsilon instead of exact equality.
+    pub fn lossy(&self) -> bool {
+        matches!(self, CkptCodec::Q8 | CkptCodec::Q4)
+    }
+}
+
 /// Emulated production-cluster constants (paper §3 / §5.1). All times in
 /// *hours of emulated wall-clock*; each training step advances the clock by
 /// `t_total / total_steps` so overhead percentages match the paper's frame.
@@ -268,6 +325,9 @@ pub struct CheckpointConfig {
     /// v2 chain-compaction threshold: re-base a node when its pending
     /// delta bytes exceed `compact_frac × base_bytes`
     pub compact_frac: f64,
+    /// payload codec for v2 checkpoint files (`--ckpt-codec`,
+    /// `[checkpoint] codec`): none | q8 | q4 | rle
+    pub codec: CkptCodec,
     /// force a checkpoint interval (hours), bypassing the strategy's
     /// default — used by the Fig. 11/12 sweeps that explore the PLS range
     pub t_save_override_h: Option<f64>,
@@ -378,7 +438,8 @@ fn base_checkpoint() -> CheckpointConfig {
         priority_tables: 7,
         dir: None,
         format: CkptFormat::V1,
-        compact_frac: 0.5,
+        compact_frac: DEFAULT_COMPACT_FRAC,
+        codec: CkptCodec::None,
         t_save_override_h: None,
     }
 }
@@ -517,6 +578,9 @@ impl JobConfig {
         }
         if let Some(v) = get(doc, "checkpoint", "format") {
             self.checkpoint.format = CkptFormat::parse(v.as_str()?)?;
+        }
+        if let Some(v) = get(doc, "checkpoint", "codec") {
+            self.checkpoint.codec = CkptCodec::parse(v.as_str()?)?;
         }
         set!("checkpoint", "compact_frac", self.checkpoint.compact_frac, as_f64);
         if let Some(v) = get(doc, "checkpoint", "dir") {
@@ -669,7 +733,27 @@ mod tests {
         let base = preset("mini").unwrap();
         assert_eq!(base.checkpoint.format, CkptFormat::V1,
                    "presets stay on v1 by default");
-        assert_eq!(base.checkpoint.compact_frac, 0.5);
+        assert_eq!(base.checkpoint.compact_frac, DEFAULT_COMPACT_FRAC);
+    }
+
+    #[test]
+    fn ckpt_codec_parse_and_toml_override() {
+        for kind in CkptCodec::all() {
+            assert_eq!(CkptCodec::parse(kind.name()).unwrap(), kind,
+                       "codec name must round-trip through parse");
+        }
+        assert!(CkptCodec::parse("zstd").is_err(), "unknown codecs are errors");
+        assert!(CkptCodec::Q8.lossy() && CkptCodec::Q4.lossy());
+        assert!(!CkptCodec::None.lossy() && !CkptCodec::Rle.lossy());
+        let cfg = JobConfig::from_toml(r#"
+            preset = "mini"
+            [checkpoint]
+            format = "v2"
+            codec = "q8"
+        "#).unwrap();
+        assert_eq!(cfg.checkpoint.codec, CkptCodec::Q8);
+        assert_eq!(preset("mini").unwrap().checkpoint.codec, CkptCodec::None,
+                   "presets write raw fp32 by default");
     }
 
     #[test]

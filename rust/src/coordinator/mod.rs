@@ -92,7 +92,7 @@ use anyhow::{ensure, Result};
 
 use crate::checkpoint::async_pipeline::CheckpointPipeline;
 use crate::checkpoint::tracker::{priority_mask, MfuTracker};
-use crate::checkpoint::CheckpointStore;
+use crate::checkpoint::{CheckpointOptions, CheckpointStore};
 use crate::cluster::{PsBackend, PsDataPlane, ShardedPs, ThreadedCluster};
 use crate::config::{JobConfig, PsBackendKind};
 use crate::data::{Batch, SyntheticDataset};
@@ -257,14 +257,11 @@ fn run_training_core<B: PsBackend + 'static>(
     // the async checkpoint pipeline owns the mirror store on its writer
     // thread; durable publication is enabled when a dir is configured,
     // in the configured on-disk format (v1 monolithic files or v2
-    // per-node base+delta chains behind the parallel writer pool)
-    let pipeline = CheckpointPipeline::with_format(
+    // per-node base+delta chains behind the parallel writer pool,
+    // optionally codec-encoded)
+    let pipeline = CheckpointPipeline::with_options(
         CheckpointStore::initial(&*shared.quiesce(), host_params.clone()),
-        cfg.checkpoint.dir.as_deref(),
-        2,
-        std::time::Duration::ZERO,
-        cfg.checkpoint.format,
-        cfg.checkpoint.compact_frac,
+        &CheckpointOptions::from_config(&cfg.checkpoint),
     )?;
     let mut pool = TrainerPool::new(cfg, shared.clone());
     // the coordinator's view of the last position-marking save (the

@@ -22,7 +22,7 @@ use crate::checkpoint::async_pipeline::CheckpointPipeline;
 use crate::checkpoint::tracker::{priority_mask, MfuTracker, ScarTracker, SsuTracker};
 use crate::checkpoint::{
     full_content_io_bytes, mlp_io_bytes, node_content_io_bytes, rows_io_bytes,
-    CheckpointStore,
+    CheckpointOptions, CheckpointStore,
 };
 use crate::cluster::{PsBackend, ThreadedCluster};
 use crate::config::{JobConfig, PsBackendKind, Strategy};
@@ -85,11 +85,12 @@ fn run_reference_core<B: PsBackend>(
     // --- build the job state ------------------------------------------------
     let dataset = SyntheticDataset::new(m.num_dense, &cfg.data);
     let mut params: Vec<PjRtBuffer> = model.init_params(cfg.train.seed);
-    let pipeline = CheckpointPipeline::new(
+    // the reference path stays on the v1 monolithic format: no codec,
+    // no delta chains — it is the bit-for-bit baseline the strategy
+    // goldens are anchored to
+    let pipeline = CheckpointPipeline::with_options(
         CheckpointStore::initial(&cluster, model.params_to_host(&params)?),
-        cfg.checkpoint.dir.as_deref(),
-        2,
-        std::time::Duration::ZERO,
+        &CheckpointOptions::default().dir(cfg.checkpoint.dir.as_deref()),
     )?;
     let mut marked_step: u64 = 0;
     let mut marked_samples: u64 = 0;

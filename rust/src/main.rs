@@ -15,7 +15,7 @@
 
 use anyhow::{bail, Result};
 
-use cpr::config::{preset, CkptFormat, JobConfig, PsBackendKind, Strategy};
+use cpr::config::{preset, CkptCodec, CkptFormat, JobConfig, PsBackendKind, Strategy};
 use cpr::coordinator::{run_training, RunOptions, TrainReport};
 use cpr::failure::{trainer_schedule, uniform_schedule};
 use cpr::runtime::Runtime;
@@ -80,6 +80,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .opt("backend", "", "Emb PS cluster runtime: inproc|threaded")
         .opt("ckpt-format", "",
              "on-disk checkpoint layout: v1 (monolithic) | v2 (incremental chains)")
+        .opt("ckpt-codec", "",
+             "v2 payload codec: none | q8 | q4 (quantized rows) | rle")
         .opt("ckpt-dir", "", "durable checkpoint directory (enables publication)")
         .opt("target-pls", "", "CPR target PLS (default from config: 0.1)")
         .opt("n-emb", "", "number of Emb PS nodes")
@@ -103,6 +105,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     }
     if !cli.get("ckpt-format").is_empty() {
         cfg.checkpoint.format = CkptFormat::parse(cli.get("ckpt-format"))?;
+    }
+    if !cli.get("ckpt-codec").is_empty() {
+        cfg.checkpoint.codec = CkptCodec::parse(cli.get("ckpt-codec"))?;
     }
     if !cli.get("ckpt-dir").is_empty() {
         cfg.checkpoint.dir = Some(cli.get("ckpt-dir").to_string());
@@ -187,20 +192,41 @@ fn cmd_plan(args: &[String]) -> Result<()> {
         .opt("config", "", "TOML job config")
         .opt("strategy", "", "(accepted for symmetry; unused)")
         .opt("target-pls", "", "target PLS")
+        .opt("ckpt-format", "", "v1 | v2 (v2 enables codec-scaled sizing)")
+        .opt("ckpt-codec", "", "v2 payload codec: none | q8 | q4 | rle")
         .opt("n-emb", "", "number of Emb PS nodes")
         .opt("trainers", "", "data-parallel trainer count (failure-share term)")
         .opt("train-samples", "", "")
         .opt("eval-samples", "", "")
         .parse(args)?;
-    let cfg = job_config_from(&cli)?;
+    let mut cfg = job_config_from(&cli)?;
+    if !cli.get("ckpt-format").is_empty() {
+        cfg.checkpoint.format = CkptFormat::parse(cli.get("ckpt-format"))?;
+    }
+    if !cli.get("ckpt-codec").is_empty() {
+        cfg.checkpoint.codec = CkptCodec::parse(cli.get("ckpt-codec"))?;
+    }
     // size the checkpoint like the policy registry does, so a configured
-    // write bandwidth (cluster.save_bw_gb_h) shapes the plan here too
-    let ckpt_bytes: u64 = cfg
+    // write bandwidth (cluster.save_bw_gb_h) shapes the plan here too —
+    // including the codec's expected encoded/raw ratio under format v2
+    // (the planner must see *encoded* sizes to narrow the interval)
+    let raw_bytes: u64 = cfg
         .data
         .table_rows
         .iter()
         .map(|&r| cpr::checkpoint::table_io_bytes(r, cfg.model.emb_dim))
         .sum();
+    let ratio = if cfg.checkpoint.format == CkptFormat::V2 {
+        cpr::checkpoint::codec::estimated_ratio(cfg.checkpoint.codec)
+    } else {
+        1.0
+    };
+    let ckpt_bytes =
+        if ratio == 1.0 { raw_bytes } else { (raw_bytes as f64 * ratio).ceil() as u64 };
+    if ratio != 1.0 {
+        println!("ckpt codec          {} (~{:.0}% of raw fp32 bytes)",
+                 cfg.checkpoint.codec.name(), 100.0 * ratio);
+    }
     let p = cpr::pls::plan_with_bytes(&cfg.cluster, cfg.checkpoint.target_pls,
                                       Some(ckpt_bytes));
     let t = cfg.cluster.t_total_h;

@@ -205,6 +205,12 @@ pub fn plan(c: &ClusterConfig, target_pls: f64) -> CprPlan {
 /// planned interval tracks the actual I/O volume a save moves
 /// (Check-N-Run sizes its checkpoint budget the same way). With no
 /// bandwidth configured (every preset) this is exactly [`plan`].
+///
+/// `ckpt_bytes` must be the **encoded** size when the checkpoint writer
+/// runs a payload codec (format v2 + `[checkpoint] codec`): the policy
+/// registry and `cpr plan` both pre-scale the raw fp32 size by
+/// `checkpoint::codec::estimated_ratio`, which is how quantized
+/// checkpoints narrow the planned interval.
 pub fn plan_with_bytes(
     c: &ClusterConfig,
     target_pls: f64,

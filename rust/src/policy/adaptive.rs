@@ -33,6 +33,7 @@ pub struct AdaptiveInterval {
     next_save_h: f64,
     failures_seen: u64,
     delta: Option<TouchedRows>,
+    byte_ratio: f64,
 }
 
 impl AdaptiveInterval {
@@ -47,6 +48,7 @@ impl AdaptiveInterval {
             next_save_h: interval_h,
             failures_seen: 0,
             delta: None,
+            byte_ratio: 1.0,
         }
     }
 
@@ -54,6 +56,12 @@ impl AdaptiveInterval {
     /// snapshots (see `FullSave::with_delta_capture`).
     pub fn with_delta_capture(mut self, table_rows: &[usize]) -> Self {
         self.delta = Some(TouchedRows::new(table_rows));
+        self
+    }
+
+    /// Codec-scaled ledger charges (see `FullSave::with_byte_ratio`).
+    pub fn with_byte_ratio(mut self, ratio: f64) -> Self {
+        self.byte_ratio = ratio;
         self
     }
 
@@ -95,7 +103,7 @@ impl SavePolicy for AdaptiveInterval {
         ctx: &SaveCtx<'_>,
     ) -> Option<SaveMarker> {
         let marker = full_content_capture(self.cluster.o_save_h, self.delta.as_mut(),
-                                          ps, pipeline, ledger, ctx);
+                                          self.byte_ratio, ps, pipeline, ledger, ctx);
         if self.replan {
             let mut c = self.cluster.clone();
             c.t_fail_h =
@@ -128,11 +136,9 @@ mod tests {
     }
 
     fn pipeline(c: &PsCluster) -> CheckpointPipeline {
-        CheckpointPipeline::new(
+        CheckpointPipeline::with_options(
             CheckpointStore::initial(c, vec![]),
-            None,
-            2,
-            std::time::Duration::ZERO,
+            &crate::checkpoint::CheckpointOptions::default(),
         )
         .unwrap()
     }

@@ -168,11 +168,9 @@ mod tests {
     }
 
     fn pipeline(c: &PsCluster, mlp: Vec<Vec<f32>>) -> CheckpointPipeline {
-        CheckpointPipeline::new(
+        CheckpointPipeline::with_options(
             CheckpointStore::initial(c, mlp),
-            None,
-            2,
-            std::time::Duration::ZERO,
+            &crate::checkpoint::CheckpointOptions::default(),
         )
         .unwrap()
     }

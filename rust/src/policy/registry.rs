@@ -17,6 +17,7 @@ use super::adaptive::AdaptiveInterval;
 use super::recovery::{FullRewind, PartialRestore};
 use super::save::{CprVanilla, FullSave, Prioritized};
 use super::{PsView, RecoveryPolicy, SavePolicy};
+use crate::checkpoint::codec;
 use crate::checkpoint::table_io_bytes;
 use crate::checkpoint::tracker::{priority_mask, MfuTracker, ScarTracker, SsuTracker};
 use crate::config::{CkptFormat, JobConfig, Strategy};
@@ -137,6 +138,20 @@ pub fn spec(strategy: &Strategy) -> PolicySpec {
 pub fn build_policies(cfg: &JobConfig, ps: PsView<'_>) -> JobPolicies {
     let strategy = &cfg.checkpoint.strategy;
 
+    // format v2: full-content policies capture touched-row deltas instead
+    // of node snapshots (the persistence layer then publishes them as
+    // per-node delta chains); priority policies already capture rows and
+    // need no mode — their minors commit deltas and majors re-base via
+    // the pipeline itself.
+    let v2 = cfg.checkpoint.format == CkptFormat::V2;
+    // v2 with a codec publishes *encoded* bytes: the planner's save cost
+    // and the ledger's I/O charges both scale by the codec's expected
+    // encoded/raw ratio (1.0 under v1 or codec `none`), so cheaper
+    // checkpoints genuinely narrow the planned interval. The v2 engine's
+    // compaction planner uses the same estimate.
+    let byte_ratio =
+        if v2 { codec::estimated_ratio(cfg.checkpoint.codec) } else { 1.0 };
+
     // --- effective save cost -----------------------------------------------
     // Size the checkpoint from the table layout (embedding-dominated —
     // dense params are noise at DLRM scale, and `CheckpointStore::
@@ -145,12 +160,17 @@ pub fn build_policies(cfg: &JobConfig, ps: PsView<'_>) -> JobPolicies {
     // per-save cost; without one (every preset) this is exactly the
     // paper's flat `o_save_h` and every plan below is bit-identical to
     // the pre-bandwidth registry.
-    let ckpt_bytes: u64 = cfg
+    let raw_ckpt_bytes: u64 = cfg
         .data
         .table_rows
         .iter()
         .map(|&r| table_io_bytes(r, cfg.model.emb_dim))
         .sum();
+    let ckpt_bytes = if byte_ratio == 1.0 {
+        raw_ckpt_bytes
+    } else {
+        (raw_ckpt_bytes as f64 * byte_ratio).ceil() as u64
+    };
     let mut eff_cluster = cfg.cluster.clone();
     eff_cluster.o_save_h = cfg.cluster.o_save_eff_h(Some(ckpt_bytes));
     let o_save_h = eff_cluster.o_save_h;
@@ -172,24 +192,21 @@ pub fn build_policies(cfg: &JobConfig, ps: PsView<'_>) -> JobPolicies {
     let fell_back = strategy.is_cpr() && !use_partial;
     let priority = strategy.priority() && use_partial;
     let r = cfg.checkpoint.r;
-    // format v2: full-content policies capture touched-row deltas instead
-    // of node snapshots (the persistence layer then publishes them as
-    // per-node delta chains); priority policies already capture rows and
-    // need no mode — their minors commit deltas and majors re-base via
-    // the pipeline itself.
-    let v2 = cfg.checkpoint.format == CkptFormat::V2;
 
     // --- save policy (+ tracker for the priority schemes) ------------------
     let save: Box<dyn SavePolicy> = if priority {
         let mask = priority_mask(&cfg.data.table_rows, cfg.checkpoint.priority_tables);
         match strategy {
-            Strategy::CprMfu => Box::new(Prioritized::new(
-                MfuTracker::new(&cfg.data.table_rows, &mask),
-                mask,
-                r,
-                o_save_h,
-                t_save_h,
-            )),
+            Strategy::CprMfu => Box::new(
+                Prioritized::new(
+                    MfuTracker::new(&cfg.data.table_rows, &mask),
+                    mask,
+                    r,
+                    o_save_h,
+                    t_save_h,
+                )
+                .with_byte_ratio(byte_ratio),
+            ),
             Strategy::CprSsu => {
                 let caps: Vec<usize> = cfg
                     .data
@@ -197,40 +214,47 @@ pub fn build_policies(cfg: &JobConfig, ps: PsView<'_>) -> JobPolicies {
                     .iter()
                     .map(|&n| ((n as f64 * r).ceil() as usize).max(1))
                     .collect();
-                Box::new(Prioritized::new(
-                    SsuTracker::new(&caps, &mask, cfg.checkpoint.ssu_period,
-                                    cfg.data.seed ^ 0x55),
+                Box::new(
+                    Prioritized::new(
+                        SsuTracker::new(&caps, &mask, cfg.checkpoint.ssu_period,
+                                        cfg.data.seed ^ 0x55),
+                        mask,
+                        r,
+                        o_save_h,
+                        t_save_h,
+                    )
+                    .with_byte_ratio(byte_ratio),
+                )
+            }
+            Strategy::CprScar => Box::new(
+                Prioritized::new(
+                    ScarTracker::new(ps.data, &mask),
                     mask,
                     r,
                     o_save_h,
                     t_save_h,
-                ))
-            }
-            Strategy::CprScar => Box::new(Prioritized::new(
-                ScarTracker::new(ps.data, &mask),
-                mask,
-                r,
-                o_save_h,
-                t_save_h,
-            )),
+                )
+                .with_byte_ratio(byte_ratio),
+            ),
             _ => unreachable!("priority() holds only for SCAR/MFU/SSU"),
         }
     } else if matches!(strategy, Strategy::CprAdaptive) && use_partial {
         // re-plan only when the interval is not pinned by a sweep
         // override; re-plans run against the bandwidth-derived save cost
         let a = AdaptiveInterval::new(&eff_cluster, cfg.checkpoint.target_pls,
-                                      t_save_h, forced.is_none());
+                                      t_save_h, forced.is_none())
+            .with_byte_ratio(byte_ratio);
         Box::new(if v2 { a.with_delta_capture(&cfg.data.table_rows) } else { a })
     } else {
         match strategy {
             Strategy::Full | Strategy::PartialNaive => {
-                let p = FullSave::new(o_save_h, t_save_h);
+                let p = FullSave::new(o_save_h, t_save_h).with_byte_ratio(byte_ratio);
                 Box::new(if v2 { p.with_delta_capture(&cfg.data.table_rows) } else { p })
                     as Box<dyn SavePolicy>
             }
             // fell-back CPR strategies degrade to planned full-content saves
             _ => {
-                let p = CprVanilla::new(o_save_h, t_save_h);
+                let p = CprVanilla::new(o_save_h, t_save_h).with_byte_ratio(byte_ratio);
                 Box::new(if v2 { p.with_delta_capture(&cfg.data.table_rows) } else { p })
             }
         }
@@ -392,6 +416,38 @@ mod tests {
         fast.cluster.save_bw_gb_h = Some(1e6);
         let p2 = build_policies(&fast, PsView::new(&c));
         assert!(p2.save.next_save_h() < p0.save.next_save_h());
+    }
+
+    #[test]
+    fn codec_scaled_save_cost_narrows_the_planned_interval() {
+        // under a bandwidth-derived save cost, a v2+q8 job publishes
+        // ~3.5× fewer bytes per save, so the planner can afford to save
+        // more often; v1 ignores the codec knob entirely
+        let mut base = preset("mini").unwrap();
+        base.cluster.save_bw_gb_h = Some(0.001); // make bytes matter
+        base.checkpoint.format = crate::config::CkptFormat::V2;
+        let c = backend(&base);
+        let p_raw = build_policies(&base, PsView::new(&c));
+        let mut q8 = base.clone();
+        q8.checkpoint.codec = crate::config::CkptCodec::Q8;
+        let p_q8 = build_policies(&q8, PsView::new(&c));
+        assert!(p_q8.save.next_save_h() < p_raw.save.next_save_h(),
+                "cheaper encoded checkpoints must narrow the interval: \
+                 {} !< {}", p_q8.save.next_save_h(), p_raw.save.next_save_h());
+        // q4 encodes smaller still → saves more often than q8
+        let mut q4 = base.clone();
+        q4.checkpoint.codec = crate::config::CkptCodec::Q4;
+        let p_q4 = build_policies(&q4, PsView::new(&c));
+        assert!(p_q4.save.next_save_h() < p_q8.save.next_save_h());
+        // v1 publishes raw monoliths: the codec knob must not move it
+        let mut v1 = base.clone();
+        v1.checkpoint.format = crate::config::CkptFormat::V1;
+        let mut v1_q8 = v1.clone();
+        v1_q8.checkpoint.codec = crate::config::CkptCodec::Q8;
+        let a = build_policies(&v1, PsView::new(&c));
+        let b = build_policies(&v1_q8, PsView::new(&c));
+        assert_eq!(a.save.next_save_h(), b.save.next_save_h(),
+                   "v1 ignores the codec knob");
     }
 
     #[test]

@@ -81,6 +81,21 @@ impl TouchedRows {
     }
 }
 
+/// Scale a raw fp32 payload size by a codec's expected encoded/raw byte
+/// ratio. The ledger models I/O volume analytically (it never stats real
+/// files), so encoded publishes charge `raw × ratio`, rounded up — the
+/// same estimate the v2 engine's compaction planner uses, keeping the
+/// ledger, the planner, and the adaptive re-planner on one cost model.
+/// `ratio == 1.0` (v1, or codec `none`/`rle`-as-configured) is exact
+/// pass-through so pre-codec golden ledgers stay bit-identical.
+pub(super) fn scaled_bytes(bytes: u64, ratio: f64) -> u64 {
+    if ratio == 1.0 {
+        bytes
+    } else {
+        (bytes as f64 * ratio).ceil() as u64
+    }
+}
+
 /// Full-content checkpointing at a fixed interval (the non-priority,
 /// non-planned cadence: `Strategy::Full` and `Strategy::PartialNaive`).
 pub struct FullSave {
@@ -88,12 +103,21 @@ pub struct FullSave {
     interval_h: f64,
     next_save_h: f64,
     delta: Option<TouchedRows>,
+    byte_ratio: f64,
 }
 
 impl FullSave {
     /// Save everything every `interval_h`, charging `o_save_h` per save.
     pub fn new(o_save_h: f64, interval_h: f64) -> Self {
-        Self { o_save_h, interval_h, next_save_h: interval_h, delta: None }
+        Self { o_save_h, interval_h, next_save_h: interval_h, delta: None, byte_ratio: 1.0 }
+    }
+
+    /// Charge the ledger at `ratio ×` the raw fp32 size — the registry
+    /// sets this to the configured codec's estimated encoded/raw ratio
+    /// when format v2 publishes encoded files.
+    pub fn with_byte_ratio(mut self, ratio: f64) -> Self {
+        self.byte_ratio = ratio;
+        self
     }
 
     /// Format v2: capture only the rows touched since the last save
@@ -122,6 +146,7 @@ impl FullSave {
 pub(super) fn full_content_capture(
     o_save_h: f64,
     delta: Option<&mut TouchedRows>,
+    byte_ratio: f64,
     ps: PsView<'_>,
     pipeline: &CheckpointPipeline,
     ledger: &mut OverheadLedger,
@@ -131,8 +156,10 @@ pub(super) fn full_content_capture(
     ledger.n_saves += 1;
     match delta {
         None => {
-            ledger.bytes_written +=
-                full_content_io_bytes(ps.data.tables(), ctx.host_params);
+            ledger.bytes_written += scaled_bytes(
+                full_content_io_bytes(ps.data.tables(), ctx.host_params),
+                byte_ratio,
+            );
             pipeline.full_save(ps.ctl, ctx.host_params.to_vec(), ctx.step, ctx.samples);
         }
         Some(touched) => {
@@ -142,10 +169,12 @@ pub(super) fn full_content_capture(
                 if rows.is_empty() {
                     continue;
                 }
-                ledger.bytes_written += rows_io_bytes(rows.len(), tables[t].dim);
+                ledger.bytes_written +=
+                    scaled_bytes(rows_io_bytes(rows.len(), tables[t].dim), byte_ratio);
                 pipeline.delta_save(ps.ctl, t, &rows);
             }
-            ledger.bytes_written += mlp_io_bytes(ctx.host_params);
+            ledger.bytes_written +=
+                scaled_bytes(mlp_io_bytes(ctx.host_params), byte_ratio);
             pipeline.mark_position(ctx.host_params.to_vec(), ctx.step, ctx.samples);
         }
     }
@@ -174,8 +203,8 @@ impl SavePolicy for FullSave {
         ledger: &mut OverheadLedger,
         ctx: &SaveCtx<'_>,
     ) -> Option<SaveMarker> {
-        let marker = full_content_capture(self.o_save_h, self.delta.as_mut(), ps,
-                                          pipeline, ledger, ctx);
+        let marker = full_content_capture(self.o_save_h, self.delta.as_mut(),
+                                          self.byte_ratio, ps, pipeline, ledger, ctx);
         self.next_save_h += self.interval_h;
         Some(marker)
     }
@@ -197,6 +226,11 @@ impl CprVanilla {
     /// [`FullSave::with_delta_capture`]).
     pub fn with_delta_capture(self, table_rows: &[usize]) -> Self {
         Self(self.0.with_delta_capture(table_rows))
+    }
+
+    /// Codec-scaled ledger charges (see [`FullSave::with_byte_ratio`]).
+    pub fn with_byte_ratio(self, ratio: f64) -> Self {
+        Self(self.0.with_byte_ratio(ratio))
     }
 
     /// The planned save interval, hours.
@@ -243,6 +277,7 @@ pub struct Prioritized<T: PriorityTracker> {
     minors_per_major: u64,
     minor_count: u64,
     next_save_h: f64,
+    byte_ratio: f64,
 }
 
 impl<T: PriorityTracker> Prioritized<T> {
@@ -260,7 +295,14 @@ impl<T: PriorityTracker> Prioritized<T> {
             minors_per_major: ((1.0 / r).round() as u64).max(1),
             minor_count: 0,
             next_save_h: interval_h,
+            byte_ratio: 1.0,
         }
+    }
+
+    /// Codec-scaled ledger charges (see [`FullSave::with_byte_ratio`]).
+    pub fn with_byte_ratio(mut self, ratio: f64) -> Self {
+        self.byte_ratio = ratio;
+        self
     }
 
     /// The underlying tracker (diagnostics: name, memory accounting).
@@ -298,13 +340,16 @@ impl<T: PriorityTracker> SavePolicy for Prioritized<T> {
                 let rows_in_table = ps.data.tables()[t].rows;
                 let k = ((rows_in_table as f64 * self.r).ceil() as usize).max(1);
                 let rows = self.tracker.select(ps.data, t, k);
-                ledger.bytes_written += rows_io_bytes(rows.len(), dim);
+                ledger.bytes_written +=
+                    scaled_bytes(rows_io_bytes(rows.len(), dim), self.byte_ratio);
                 pipeline.save_rows(ps.data, t, &rows);
                 self.tracker.on_saved(ps.data, t, &rows);
             } else {
                 // tiny non-priority tables ride along whole
-                ledger.bytes_written +=
-                    rows_io_bytes(ps.data.tables()[t].rows, dim);
+                ledger.bytes_written += scaled_bytes(
+                    rows_io_bytes(ps.data.tables()[t].rows, dim),
+                    self.byte_ratio,
+                );
                 pipeline.save_table(ps.data, t);
             }
         }
@@ -312,7 +357,8 @@ impl<T: PriorityTracker> SavePolicy for Prioritized<T> {
             // a MAJOR: the marker advances, and under format v2 every
             // node chain re-bases (the minors' deltas fold in); identical
             // to mark_position under v1
-            ledger.bytes_written += mlp_io_bytes(ctx.host_params);
+            ledger.bytes_written +=
+                scaled_bytes(mlp_io_bytes(ctx.host_params), self.byte_ratio);
             pipeline.mark_position_base(ctx.host_params.to_vec(), ctx.step, ctx.samples);
             ledger.n_saves += 1;
             Some(SaveMarker { step: ctx.step, samples: ctx.samples })
@@ -344,11 +390,9 @@ mod tests {
     }
 
     fn pipeline(c: &PsCluster) -> CheckpointPipeline {
-        CheckpointPipeline::new(
+        CheckpointPipeline::with_options(
             CheckpointStore::initial(c, vec![]),
-            None,
-            2,
-            std::time::Duration::ZERO,
+            &crate::checkpoint::CheckpointOptions::default(),
         )
         .unwrap()
     }
@@ -426,6 +470,32 @@ mod tests {
         assert_eq!(marker.step, 1);
         p_full.flush().unwrap();
         p_delta.flush().unwrap();
+    }
+
+    #[test]
+    fn byte_ratio_scales_ledger_charges_not_cadence() {
+        let c = cluster();
+        let p_raw = pipeline(&c);
+        let p_enc = pipeline(&c);
+        let ratio = 0.3;
+        let mut raw = FullSave::new(0.1, 2.0);
+        let mut enc = FullSave::new(0.1, 2.0).with_byte_ratio(ratio);
+        let mut lr = OverheadLedger::default();
+        let mut le = OverheadLedger::default();
+        let ctx = SaveCtx { step: 1, samples: 128, clock_h: 2.0, host_params: &[] };
+        raw.capture(PsView::new(&c), &p_raw, &mut lr, &ctx).unwrap();
+        enc.capture(PsView::new(&c), &p_enc, &mut le, &ctx).unwrap();
+        assert_eq!(le.bytes_written, scaled_bytes(lr.bytes_written, ratio),
+                   "encoded publishes charge ratio × raw, rounded up");
+        assert!(le.bytes_written < lr.bytes_written);
+        // time charges and cadence are codec-independent
+        assert_eq!(le.save_h, lr.save_h);
+        assert_eq!(enc.next_save_h(), raw.next_save_h());
+        // ratio 1.0 is exact pass-through (golden-ledger safety)
+        assert_eq!(scaled_bytes(12_345, 1.0), 12_345);
+        assert_eq!(scaled_bytes(10, 0.31), 4, "ceil, never undercharge");
+        p_raw.flush().unwrap();
+        p_enc.flush().unwrap();
     }
 
     #[test]

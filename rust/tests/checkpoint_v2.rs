@@ -15,10 +15,15 @@
 //!   through the auto-detecting reader, one node restores from its own
 //!   chain alone, and crash debris (orphan/truncated files, torn temp
 //!   manifests) is invisible to readers.
+//!
+//! ISSUE 7 adds the **epsilon-bounded tier**: quantized codecs (q8/q4)
+//! make restores deliberately non-bit-identical, so those runs assert
+//! exact schedule/ledger-time equality but only epsilon-bounded AUC and
+//! logloss against the fp32 run ([`CODEC_EPS`]).
 
 use cpr::checkpoint::disk::DiskCheckpointer;
 use cpr::checkpoint::v2;
-use cpr::config::{preset, CkptFormat, JobConfig, PsBackendKind, Strategy};
+use cpr::config::{preset, CkptCodec, CkptFormat, JobConfig, PsBackendKind, Strategy};
 use cpr::coordinator::{run_training, RunOptions, TrainReport};
 use cpr::failure::FailureEvent;
 use cpr::policy::registry;
@@ -69,6 +74,33 @@ fn assert_training_identical(a: &TrainReport, b: &TrainReport, what: &str) {
     assert_eq!(a.ledger.n_failures, b.ledger.n_failures, "{what}");
     assert_eq!(a.ledger.bytes_restored, b.ledger.bytes_restored,
                "{what}: restore volume diverged");
+}
+
+/// The stated accuracy-drift budget for lossy checkpoint codecs: a
+/// quantized run's final AUC and logloss must land within this of the
+/// fp32 run. Check-N-Run reports negligible quality loss at byte-level
+/// quantization; uniform q8 over dim-16 rows keeps per-value error below
+/// `range/510`, and the mini job's restores touch a minority of steps.
+const CODEC_EPS: f64 = 0.01;
+
+/// The epsilon tier: everything time- and schedule-shaped stays exact
+/// (the codec changes restored *values*, never cadence, failure
+/// handling, or time charges); only the learned-quality metrics get the
+/// epsilon.
+fn assert_training_close(a: &TrainReport, b: &TrainReport, eps: f64, what: &str) {
+    assert_eq!(a.steps_executed, b.steps_executed, "{what}: steps diverged");
+    assert_eq!(a.failures_seen, b.failures_seen, "{what}: failures diverged");
+    assert_eq!(a.pls, b.pls, "{what}: PLS diverged");
+    assert_eq!(a.ledger.n_saves, b.ledger.n_saves, "{what}: save count diverged");
+    assert_eq!(a.ledger.save_h, b.ledger.save_h, "{what}: save_h diverged");
+    assert_eq!(a.ledger.load_h, b.ledger.load_h, "{what}: load_h diverged");
+    assert_eq!(a.ledger.lost_h, b.ledger.lost_h, "{what}: lost_h diverged");
+    assert!((a.final_auc - b.final_auc).abs() <= eps,
+            "{what}: AUC drifted past ε={eps}: {} vs {}",
+            a.final_auc, b.final_auc);
+    assert!((a.final_logloss - b.final_logloss).abs() <= eps,
+            "{what}: logloss drifted past ε={eps}: {} vs {}",
+            a.final_logloss, b.final_logloss);
 }
 
 #[test]
@@ -169,6 +201,46 @@ fn v2_durable_publication_does_not_perturb_training_and_loads_back() {
     assert!(DiskCheckpointer::load_latest(d).is_err(),
             "the full-store load DOES read the torn chains");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn quantized_codecs_track_fp32_training_within_epsilon() {
+    // the ISSUE 7 accuracy-drift gate: cpr-mfu with two PS failures
+    // (restores actually read codec-fidelity values), durable v2 chains,
+    // on BOTH backends — q8 and q4 must stay within CODEC_EPS of the
+    // fp32 (codec=none) run while publishing strictly fewer bytes
+    let model = load_model();
+    let opts = RunOptions { schedule: schedule(), ..Default::default() };
+    for backend in [PsBackendKind::InProc, PsBackendKind::Threaded] {
+        let tag = format!("{backend:?}").to_lowercase();
+        let base_dir = std::env::temp_dir().join(format!("cpr_codec_eps_{tag}_none"));
+        std::fs::remove_dir_all(&base_dir).ok();
+        let mut base_cfg = grid_cfg(Strategy::CprMfu, backend, CkptFormat::V2);
+        base_cfg.checkpoint.dir = Some(base_dir.to_str().unwrap().to_string());
+        let fp32 = run_training(&model, &base_cfg, &opts).expect("fp32 run");
+        for codec in [CkptCodec::Q8, CkptCodec::Q4] {
+            let what = format!("codec-eps/{tag}/{}", codec.name());
+            let dir = std::env::temp_dir()
+                .join(format!("cpr_codec_eps_{tag}_{}", codec.name()));
+            std::fs::remove_dir_all(&dir).ok();
+            let mut cfg = grid_cfg(Strategy::CprMfu, backend, CkptFormat::V2);
+            cfg.checkpoint.dir = Some(dir.to_str().unwrap().to_string());
+            cfg.checkpoint.codec = codec;
+            let q = run_training(&model, &cfg, &opts).expect("quantized run");
+            assert_training_close(&fp32, &q, CODEC_EPS, &what);
+            assert!(q.ledger.bytes_written < fp32.ledger.bytes_written,
+                    "{what}: encoded publishes must charge fewer bytes \
+                     ({} !< {})", q.ledger.bytes_written,
+                    fp32.ledger.bytes_written);
+            // the encoded chain is a valid durable checkpoint
+            let loaded = DiskCheckpointer::load_latest(dir.to_str().unwrap())
+                .expect("encoded chain loads")
+                .expect("a checkpoint was published");
+            assert!(loaded.step > 0);
+            std::fs::remove_dir_all(&dir).ok();
+        }
+        std::fs::remove_dir_all(&base_dir).ok();
+    }
 }
 
 #[test]

@@ -370,11 +370,12 @@ fn async_checkpoint_save_overlaps_a_training_step() {
         let mut params = model.init_params(1);
         // writer is artificially slow (400 ms per save): plenty of window
         // for a real training step to land while the save is in flight
-        let pipeline = CheckpointPipeline::new(
+        let pipeline = CheckpointPipeline::with_options(
             CheckpointStore::initial(&cluster, vec![]),
-            None,
-            2,
-            std::time::Duration::from_millis(400),
+            &cpr::checkpoint::CheckpointOptions {
+                write_delay: std::time::Duration::from_millis(400),
+                ..Default::default()
+            },
         ).unwrap();
         pipeline.full_save(&cluster, vec![], 1, 128);
         assert!(pipeline.in_flight() > 0, "save should be queued");

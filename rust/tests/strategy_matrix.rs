@@ -7,7 +7,7 @@
 //! policy is exercised end-to-end without editing this file.
 
 use cpr::checkpoint::disk::DiskCheckpointer;
-use cpr::config::{preset, CkptFormat, PsBackendKind, Strategy};
+use cpr::config::{preset, CkptCodec, CkptFormat, PsBackendKind, Strategy};
 use cpr::coordinator::{run_training, RunOptions};
 use cpr::failure::FailureEvent;
 use cpr::policy::registry;
@@ -28,6 +28,18 @@ fn ckpt_format_under_test() -> CkptFormat {
         Ok(name) => CkptFormat::parse(&name)
             .expect("CPR_CKPT_FORMAT must be v1 or v2"),
         Err(_) => CkptFormat::V1,
+    }
+}
+
+/// `CPR_CKPT_CODEC=none|q8|q4|rle` re-runs the v2 scenario with an
+/// encoded payload (the CI codec-matrix legs); default none. An empty
+/// value also means none, so a matrix row can pass the variable
+/// unconditionally.
+fn ckpt_codec_under_test() -> CkptCodec {
+    match std::env::var("CPR_CKPT_CODEC") {
+        Ok(name) if !name.is_empty() => CkptCodec::parse(&name)
+            .expect("CPR_CKPT_CODEC must be none, q8, q4, or rle"),
+        _ => CkptCodec::None,
     }
 }
 
@@ -64,10 +76,14 @@ fn strategy_end_to_end_on_the_threaded_backend() {
         cfg.checkpoint.target_pls = 0.02;
         let format = ckpt_format_under_test();
         cfg.checkpoint.format = format;
+        // codec legs only bite under v2 (v1 publishes raw monoliths);
+        // the durable chain below round-trips through the encoded files
+        cfg.checkpoint.codec = ckpt_codec_under_test();
         let ckpt_dir = if format == CkptFormat::V2 {
             // v2 legs exercise the durable chain path end to end
             let dir = std::env::temp_dir()
-                .join(format!("cpr_matrix_v2_{}", strategy.name()));
+                .join(format!("cpr_matrix_v2_{}_{}", strategy.name(),
+                              cfg.checkpoint.codec.name()));
             std::fs::remove_dir_all(&dir).ok();
             cfg.checkpoint.dir = Some(dir.to_str().unwrap().to_string());
             Some(dir)

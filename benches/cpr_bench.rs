@@ -31,6 +31,14 @@
 //!                       vs on (thread-local buffer push); the acceptance
 //!                       bar reads the off-row against the pre-telemetry
 //!                       baseline (must be within noise)
+//!   serve_qps[]       — the read-only serving plane under live training
+//!                       writes: open-loop Zipfian load at n=2/4/8 nodes
+//!                       and 1e4/1e5 target QPS (rows carry completed
+//!                       requests as throughput), a `during-ckpt` row
+//!                       where a snapshot loop holds the quiesce token,
+//!                       and `serve_contention[...,serving=off/on]` apply
+//!                       throughput rows quantifying what serving costs
+//!                       the training hot path
 //!   pjrt_*            — L2 executables from Rust: train_step / predict
 //!                       latency, and the full e2e step
 //!
@@ -48,7 +56,9 @@ use cpr::checkpoint::tracker::{MfuTracker, ScarTracker, SsuTracker};
 use cpr::checkpoint::v2::V2Engine;
 use cpr::checkpoint::writer_pool::WriterPool;
 use cpr::checkpoint::CheckpointStore;
-use cpr::cluster::{PsBackend, PsDataPlane, ShardedPs, ThreadedCluster};
+use cpr::cluster::{
+    PsBackend, PsControlPlane, PsDataPlane, PsServePlane, ShardedPs, ThreadedCluster,
+};
 use cpr::config::{preset, CkptCodec, PsBackendKind};
 use cpr::coordinator::{run_training, RunOptions};
 use cpr::data::{Batch, SyntheticDataset};
@@ -101,6 +111,9 @@ fn main() {
     }
     if want("telemetry_overhead") {
         telemetry_overhead(quick);
+    }
+    if want("serve_qps") {
+        serve_qps(quick);
     }
     if want("pjrt") {
         pjrt(quick);
@@ -358,6 +371,155 @@ fn telemetry_overhead(quick: bool) {
     let stats = sink.export().expect("telemetry drain");
     println!("  -> {} spans recorded while on (drained in-memory; no dir set)",
              stats.spans);
+}
+
+// ---------------------------------------------------------------------------
+// Serving plane — serve_gather under live training writes
+// ---------------------------------------------------------------------------
+
+/// What the concurrent writer thread does during a serving measurement.
+#[derive(Clone, Copy)]
+enum ServeLoad {
+    /// trainer-shaped load: continuous ordered sparse applies + a view
+    /// publish per "step" (the coordinator's cadence)
+    Train,
+    /// checkpoint-shaped load: repeatedly hold the quiesce token for a
+    /// full-cluster snapshot — serving reads must ride through it
+    Ckpt,
+}
+
+/// Run the open-loop load generator (if `qps` is set) for `run_ms`
+/// against `shared` while one writer thread applies `load`. Returns the
+/// serving report and the writer's completed iterations.
+fn serve_point<B: PsBackend + 'static>(
+    shared: &ShardedPs<B>,
+    tables: &[TableInfo],
+    n_nodes: usize,
+    qps: Option<f64>,
+    run_ms: u64,
+    load: ServeLoad,
+) -> (Option<cpr::serving::ServeReport>, u64) {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::Arc;
+    let t = tables.len();
+    let dim = tables[0].dim;
+    let b = 256usize;
+    let mut rng = Rng::new(31);
+    let indices: Vec<u32> = (0..b * t)
+        .map(|i| rng.below(tables[i % t].rows as u64) as u32)
+        .collect();
+    let grads = vec![0.001f32; b * t * dim];
+    let stop = Arc::new(AtomicBool::new(false));
+    let writes = Arc::new(AtomicU64::new(0));
+    let writer = {
+        let shared = shared.clone();
+        let stop = Arc::clone(&stop);
+        let writes = Arc::clone(&writes);
+        std::thread::spawn(move || {
+            let mut ticket = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                match load {
+                    ServeLoad::Train => {
+                        shared.apply_grads_ordered(
+                            ticket, &indices, 1, &grads, 0.01,
+                            cpr::embedding::EmbOptimizer::Sgd);
+                        ticket += 1;
+                        shared.publish_serve_view();
+                    }
+                    ServeLoad::Ckpt => {
+                        {
+                            let q = shared.quiesce();
+                            for node in 0..n_nodes {
+                                std::hint::black_box(q.snapshot_node(node));
+                            }
+                        }
+                        shared.publish_serve_view();
+                    }
+                }
+                writes.fetch_add(1, Ordering::Relaxed);
+            }
+        })
+    };
+    let report = qps.map(|qps| {
+        let lg = cpr::serving::LoadGen::start(
+            Arc::new(shared.clone()), tables.to_vec(), n_nodes, qps, 4, 1.1, 17);
+        std::thread::sleep(std::time::Duration::from_millis(run_ms));
+        lg.stop()
+    });
+    if report.is_none() {
+        std::thread::sleep(std::time::Duration::from_millis(run_ms));
+    }
+    stop.store(true, Ordering::Release);
+    writer.join().expect("bench writer panicked");
+    (report, writes.load(Ordering::Relaxed))
+}
+
+/// All serving rows for one backend: the qps × nodes grid, the
+/// during-ckpt row, and the serving-off/on apply contention pair.
+fn serve_qps_backend<B: PsBackend + 'static>(
+    kind: &str,
+    mk: impl Fn(usize) -> B,
+    tables: &[TableInfo],
+    ns: &[usize],
+    qpss: &[f64],
+    run_ms: u64,
+) {
+    for &n in ns {
+        for &qps in qpss {
+            let shared = ShardedPs::new(mk(n));
+            let (report, _) =
+                serve_point(&shared, tables, n, Some(qps), run_ms, ServeLoad::Train);
+            let r = report.unwrap();
+            let s = r.regime("steady").unwrap();
+            record_external(&format!("serve_qps[{kind},n={n},qps={qps:.0}]"),
+                            r.wall_secs, r.total_requests);
+            println!("  {kind},n={n},qps={qps:.0}: achieved {:.0}/s  p50 {} us  \
+                      p99 {} us  p999 {} us",
+                     r.achieved_qps, s.p50_us, s.p99_us, s.p999_us);
+        }
+    }
+    // serving while a checkpoint loop holds the quiesce token: the
+    // non-blocking-read guarantee as a latency number
+    let n = *ns.last().unwrap();
+    let shared = ShardedPs::new(mk(n));
+    let (report, snaps) =
+        serve_point(&shared, tables, n, Some(qpss[0]), run_ms, ServeLoad::Ckpt);
+    let r = report.unwrap();
+    let s = r.regime("steady").unwrap();
+    record_external(&format!("serve_qps[{kind},during-ckpt]"),
+                    r.wall_secs, r.total_requests);
+    println!("  {kind},during-ckpt: achieved {:.0}/s  p99 {} us  p999 {} us  \
+              ({snaps} snapshot rounds)",
+             r.achieved_qps, s.p99_us, s.p999_us);
+    // what serving costs training: apply throughput, generator off vs on
+    let slots_per_write = (256 * tables.len()) as u64;
+    let run_s = run_ms as f64 / 1e3;
+    let shared = ShardedPs::new(mk(n));
+    let (_, off) = serve_point(&shared, tables, n, None, run_ms, ServeLoad::Train);
+    let shared = ShardedPs::new(mk(n));
+    let (_, on) = serve_point(&shared, tables, n, Some(*qpss.last().unwrap()),
+                              run_ms, ServeLoad::Train);
+    record_external(&format!("serve_contention[{kind},serving=off]"),
+                    run_s, off * slots_per_write);
+    record_external(&format!("serve_contention[{kind},serving=on]"),
+                    run_s, on * slots_per_write);
+    println!("  -> {kind}: apply slots/s {:.0} (serving off) vs {:.0} (serving on)",
+             off as f64 * slots_per_write as f64 / run_s,
+             on as f64 * slots_per_write as f64 / run_s);
+}
+
+fn serve_qps(quick: bool) {
+    println!("\n-- serve_qps: read-only serving plane under live training writes --");
+    let dim = 16usize;
+    let tables: Vec<TableInfo> =
+        (0..4).map(|_| TableInfo { rows: 65_536, dim }).collect();
+    let run_ms: u64 = if quick { 150 } else { 1000 };
+    let ns: &[usize] = if quick { &[2] } else { &[2, 4, 8] };
+    let qpss: &[f64] = if quick { &[10_000.0] } else { &[10_000.0, 100_000.0] };
+    serve_qps_backend("inproc", |n| PsCluster::new(tables.clone(), n, 7),
+                      &tables, ns, qpss, run_ms);
+    serve_qps_backend("threaded", |n| ThreadedCluster::new(tables.clone(), n, 7),
+                      &tables, ns, qpss, run_ms);
 }
 
 // ---------------------------------------------------------------------------

@@ -3,17 +3,122 @@
 //! scalability projection (Fig. 13).
 //!
 //!     cargo run --release --example cluster_sim
+//!
+//! With `--serve-qps [QPS]` it instead demos the online serving plane:
+//! an open-loop Zipfian load generator reads a live cluster through the
+//! three regimes (steady training writes, checkpoint capture under the
+//! quiesce token, node failure + recovery) and prints the per-regime
+//! latency table for both backends.
+//!
+//!     cargo run --release --example cluster_sim -- --serve-qps 50000
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
 use cpr::analysis::{fit_survival, hazard_curve, scalability_sweep, FailureModel};
+use cpr::cluster::{
+    PsBackend, PsControlPlane, PsDataPlane, PsServePlane, ShardedPs, ThreadedCluster,
+};
 use cpr::config::preset;
+use cpr::embedding::{EmbOptimizer, PsCluster, TableInfo};
 use cpr::failure::NodeHazard;
 use cpr::policy::registry;
+use cpr::serving::{LoadGen, Regime};
 use cpr::sim::{simulate_fleet, FleetSimConfig};
 use cpr::util::rng::Rng;
 
+/// Drive one backend through steady / capture / recovery while the load
+/// generator reads, and print its per-regime latency table.
+fn serve_regimes<B: PsBackend + 'static>(kind: &str, shared: ShardedPs<B>, qps: f64) {
+    let tables = shared.tables().to_vec();
+    let n = shared.n_nodes();
+    let t = tables.len();
+    let dim = tables[0].dim;
+    let lg = LoadGen::start(Arc::new(shared.clone()), tables.clone(), n,
+                            qps, 4, 1.1, 2026);
+
+    // -- steady: trainer-shaped writes racing the readers --
+    let stop = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let shared = shared.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(11);
+            let b = 256usize;
+            let grads = vec![0.001f32; b * t * dim];
+            let mut ticket = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                let indices: Vec<u32> = (0..b * t)
+                    .map(|i| rng.below(tables[i % t].rows as u64) as u32)
+                    .collect();
+                shared.apply_grads_ordered(ticket, &indices, 1, &grads, 0.01,
+                                           EmbOptimizer::Sgd);
+                ticket += 1;
+                shared.publish_serve_view();
+            }
+        })
+    };
+    std::thread::sleep(Duration::from_millis(400));
+    stop.store(true, Ordering::Release);
+    writer.join().expect("writer");
+
+    // -- capture: a checkpoint loop holds the quiesce token --
+    lg.set_regime(Regime::Capture);
+    let t0 = std::time::Instant::now();
+    while t0.elapsed() < Duration::from_millis(400) {
+        let q = shared.quiesce();
+        for node in 0..n {
+            std::hint::black_box(q.snapshot_node(node));
+        }
+    }
+
+    // -- recovery: a node dies, serves NodeDown, then comes back --
+    lg.set_regime(Regime::Recovery);
+    {
+        let q = shared.quiesce();
+        q.kill_node(1);
+    }
+    std::thread::sleep(Duration::from_millis(200));
+    {
+        let q = shared.quiesce();
+        q.respawn_node(1);
+    }
+    shared.publish_serve_view();
+    std::thread::sleep(Duration::from_millis(200));
+
+    let r = lg.stop();
+    println!("\n-- {kind}: achieved {:.0}/s of {:.0} target --",
+             r.achieved_qps, r.target_qps);
+    println!("{:>9} {:>9} {:>9} {:>8} {:>8} {:>8} {:>8}",
+             "regime", "requests", "nodedown", "p50us", "p95us", "p99us",
+             "p999us");
+    for reg in &r.regimes {
+        println!("{:>9} {:>9} {:>9} {:>8} {:>8} {:>8} {:>8}",
+                 reg.regime, reg.requests, reg.node_down, reg.p50_us,
+                 reg.p95_us, reg.p99_us, reg.p999_us);
+    }
+}
+
+fn serve_demo(qps: f64) -> Result<()> {
+    let n = 4usize;
+    let tables: Vec<TableInfo> =
+        (0..4).map(|_| TableInfo { rows: 65_536, dim: 16 }).collect();
+    println!("== serving-plane demo: {qps:.0} qps over {n} nodes, three regimes ==");
+    serve_regimes("inproc", ShardedPs::new(PsCluster::new(tables.clone(), n, 7)), qps);
+    serve_regimes("threaded",
+                  ShardedPs::new(ThreadedCluster::new(tables, n, 7)), qps);
+    Ok(())
+}
+
 fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--serve-qps") {
+        let qps = args.get(i + 1).and_then(|v| v.parse().ok()).unwrap_or(20_000.0);
+        return serve_demo(qps);
+    }
     let mut rng = Rng::new(2026);
 
     // ---- the policy registry the fleet models approximate ----

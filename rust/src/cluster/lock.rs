@@ -129,6 +129,35 @@ impl<T> NodeLock<T> {
         drop(s);
         self.cv.notify_all();
     }
+
+    /// [`NodeLock::revive`], but mutating the existing state **in place**
+    /// instead of installing a replacement value. The in-process serving
+    /// plane reads node shards through guard-free seqlock snapshots whose
+    /// raw pointers ([`NodeLock::data_ptr`]) must stay valid for the
+    /// cluster's lifetime — a wholesale `*cell = value` would free the
+    /// shard `Vec` allocations out from under an in-flight reader, so
+    /// respawn refills the existing buffers instead.
+    pub fn revive_with(&self, f: impl FnOnce(&mut T)) {
+        let mut s = self.state();
+        assert!(s.dead, "revive_with() on a live node would discard its state");
+        while s.writer || s.readers > 0 {
+            s = self.cv.wait(s).unwrap_or_else(PoisonError::into_inner);
+        }
+        // SAFETY: dead + no readers/writers → no outstanding references.
+        f(unsafe { &mut *self.cell.get() });
+        s.dead = false;
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Raw pointer to the guarded state, for **seqlock-validated** reads
+    /// only: the caller must treat every dereference as a racy snapshot
+    /// and discard it unless the surrounding sequence counter proves no
+    /// writer overlapped (see `PsCluster::serve_gather`). Never produce a
+    /// `&T`/`&mut T` from this without holding a guard.
+    pub fn data_ptr(&self) -> *mut T {
+        self.cell.get()
+    }
 }
 
 pub struct NodeReadGuard<'a, T> {
@@ -296,5 +325,24 @@ mod tests {
     fn revive_on_live_node_panics() {
         let l = NodeLock::new(0u8);
         l.revive(1);
+    }
+
+    #[test]
+    fn revive_with_mutates_in_place() {
+        let l = NodeLock::new(vec![1.0f32, 2.0]);
+        let p0 = l.read().unwrap().as_ptr();
+        l.kill();
+        l.revive_with(|v| v.iter_mut().for_each(|x| *x = 0.0));
+        let g = l.read().unwrap();
+        assert_eq!(*g, vec![0.0, 0.0]);
+        // the whole point: the Vec allocation survives the respawn
+        assert_eq!(g.as_ptr(), p0, "revive_with must not reallocate");
+    }
+
+    #[test]
+    #[should_panic(expected = "live node")]
+    fn revive_with_on_live_node_panics() {
+        let l = NodeLock::new(0u8);
+        l.revive_with(|_| {});
     }
 }

@@ -13,8 +13,14 @@
 //!   exclusive *quiesce token* ([`ShardedPs::quiesce`]) that the driver
 //!   acquires at the step barrier, preserving the documented checkpoint
 //!   consistency point.
+//! * [`PsServePlane`] — the online-serving read path. `serve_gather`
+//!   never takes a node's lock and never waits on the quiesce token: the
+//!   in-process backend reads through a per-node seqlock (retry on a torn
+//!   row, bounded spin, then a typed [`ServeError::NodeDown`]), the
+//!   threaded backend reads a double-buffered shard view republished at
+//!   the step barrier. Serving a dead node is an *error*, never a hang.
 //!
-//! [`PsBackend`] is the both-planes alias the checkpoint store, the
+//! [`PsBackend`] is the all-planes alias the checkpoint store, the
 //! coordinator driver, and the reference loop bound on.
 //!
 //! Two implementations:
@@ -66,6 +72,12 @@ pub struct BackendStats {
     pub snapshots: u64,
     pub kills: u64,
     pub respawns: u64,
+    /// Completed [`PsServePlane::serve_gather`] requests.
+    pub serve_reads: u64,
+    /// Seqlock retries serving readers paid (torn or in-progress rows);
+    /// the threaded backend's snapshot reads never retry, so it stays 0
+    /// there.
+    pub serve_retries: u64,
 }
 
 /// The ONE routing definition: global row `r` of any table lives on node
@@ -95,6 +107,8 @@ pub struct StatCounters {
     snapshots: AtomicU64,
     kills: AtomicU64,
     respawns: AtomicU64,
+    serve_reads: AtomicU64,
+    serve_retries: AtomicU64,
 }
 
 impl Clone for StatCounters {
@@ -106,6 +120,8 @@ impl Clone for StatCounters {
             snapshots: AtomicU64::new(s.snapshots),
             kills: AtomicU64::new(s.kills),
             respawns: AtomicU64::new(s.respawns),
+            serve_reads: AtomicU64::new(s.serve_reads),
+            serve_retries: AtomicU64::new(s.serve_retries),
         }
     }
 }
@@ -131,6 +147,16 @@ impl StatCounters {
         self.respawns.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn bump_serve_read(&self) {
+        self.serve_reads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_serve_retries(&self, n: u64) {
+        if n > 0 {
+            self.serve_retries.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
     pub fn read(&self) -> BackendStats {
         BackendStats {
             gathers: self.gathers.load(Ordering::Relaxed),
@@ -138,6 +164,8 @@ impl StatCounters {
             snapshots: self.snapshots.load(Ordering::Relaxed),
             kills: self.kills.load(Ordering::Relaxed),
             respawns: self.respawns.load(Ordering::Relaxed),
+            serve_reads: self.serve_reads.load(Ordering::Relaxed),
+            serve_retries: self.serve_retries.load(Ordering::Relaxed),
         }
     }
 }
@@ -276,12 +304,61 @@ pub trait PsControlPlane: PsDataPlane {
     }
 }
 
-/// Both planes — what the checkpoint store, the coordinator driver, and
+/// Why a serving read could not be satisfied. Deliberately small: the
+/// serving plane's whole contract is "an answer or a typed error,
+/// never a hang", so the only failure a reader can see is a node that is
+/// not serving (killed, poisoned by a writer panic, or mid-revive).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The owner node of a requested row is down (or stuck mid-write
+    /// beyond the reader's spin budget, which only happens when its
+    /// writer died). Retry after the recovery protocol revives it.
+    NodeDown { node: usize },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::NodeDown { node } => {
+                write!(f, "Emb PS node {node} is down; serving read refused")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// The online **serving plane** of an Emb PS cluster runtime: read-only
+/// batched gathers that stay wait-free with respect to trainers and the
+/// checkpoint quiesce token. `&self`-concurrent from any number of
+/// serving threads.
+///
+/// Consistency contract: a served row is always a value some writer
+/// published *in full* — never a torn half-update — but it may be stale
+/// by up to one step barrier (the threaded backend serves the view
+/// republished at the last barrier; the in-process backend serves live
+/// rows through a seqlock, so staleness there is bounded by the
+/// in-flight update). Reads of a dead node return
+/// [`ServeError::NodeDown`] instead of blocking on recovery.
+pub trait PsServePlane: Send + Sync {
+    /// Single-hot serving gather: `indices` is [B, T] row-major over this
+    /// backend's tables, `out` is [B, T, dim]. Must not take any per-node
+    /// lock or the quiesce token. On `Err`, `out` contents are
+    /// unspecified.
+    fn serve_gather(&self, indices: &[u32], out: &mut [f32]) -> Result<(), ServeError>;
+
+    /// Republish the serving view (called by the coordinator at the step
+    /// barrier, outside any quiesce). Backends that serve live state
+    /// (seqlock) need no publication step — the default is a no-op.
+    fn publish_serve_view(&self) {}
+}
+
+/// All planes — what the checkpoint store, the coordinator driver, and
 /// the single-trainer reference loop bound on. Blanket-implemented; bound
 /// on the narrower plane where possible.
-pub trait PsBackend: PsControlPlane {}
+pub trait PsBackend: PsControlPlane + PsServePlane {}
 
-impl<T: PsControlPlane + ?Sized> PsBackend for T {}
+impl<T: PsControlPlane + PsServePlane + ?Sized> PsBackend for T {}
 
 // ---------------------------------------------------------------------------
 // the original in-process cluster as a backend
@@ -381,6 +458,13 @@ impl PsControlPlane for PsCluster {
     fn alive(&self, node: usize) -> bool {
         PsCluster::alive(self, node)
     }
+}
+
+impl PsServePlane for PsCluster {
+    fn serve_gather(&self, indices: &[u32], out: &mut [f32]) -> Result<(), ServeError> {
+        PsCluster::serve_gather(self, indices, out)
+    }
+    // publish_serve_view: default no-op — the seqlock serves live rows.
 }
 
 /// Initial state of one node, shared by both backends so a fresh

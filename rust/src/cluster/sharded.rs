@@ -37,7 +37,7 @@ use std::sync::{
 use crate::embedding::{EmbOptimizer, TableInfo};
 use crate::telemetry;
 
-use super::{PsBackend, PsDataPlane, StatCounters};
+use super::{PsBackend, PsDataPlane, PsServePlane, ServeError, StatCounters};
 
 /// A monotone ticket sequencer: thread `wait_for(t)` blocks until every
 /// ticket `< t` has been consumed via [`Turnstile::advance`]. The sharded
@@ -172,9 +172,34 @@ impl<B: PsBackend> ShardedPs<B> {
         }
     }
 
-    /// Current backend stats (diagnostic read; no quiesce needed).
+    /// Current backend stats — a lock-free diagnostic read straight off
+    /// the atomic counters. Deliberately NOT routed through
+    /// [`ShardedPs::quiesce`] or the epoch lock: serving threads poll
+    /// this (e.g. for `serve_reads`/`serve_retries`) while a checkpoint
+    /// capture holds the quiesce token, and a stats read must never fence
+    /// against the control plane. The quiesce-fenced sibling is
+    /// [`super::PsControlPlane::stats`] via the [`PsQuiesce`] token.
     pub fn stats(&self) -> super::BackendStats {
         self.inner.backend.counters().read()
+    }
+}
+
+/// Serving reads bypass the epoch lock entirely — THE non-blocking
+/// guarantee of the serving plane. A `serve_gather` must complete while a
+/// checkpoint capture (or any control op) holds the exclusive quiesce
+/// token; the backends make that safe (seqlock validation in-process,
+/// immutable published views on the threaded runtime), so the handle has
+/// nothing to add but the pass-through. `publish_serve_view` *does* take
+/// the epoch read lock: it is called from the driver between steps and
+/// must not interleave with a control op swapping node state.
+impl<B: PsBackend> PsServePlane for ShardedPs<B> {
+    fn serve_gather(&self, indices: &[u32], out: &mut [f32]) -> Result<(), ServeError> {
+        self.inner.backend.serve_gather(indices, out)
+    }
+
+    fn publish_serve_view(&self) {
+        let _epoch = self.epoch_read();
+        self.inner.backend.publish_serve_view();
     }
 }
 
@@ -512,6 +537,58 @@ mod tests {
             shared.skip_ordered(0); // a failed rank passes its turn
         });
         assert_eq!(shared.stats().applies, 1);
+    }
+
+    #[test]
+    fn serve_gather_completes_while_quiesce_token_is_held() {
+        // THE non-blocking acceptance criterion: a serving read to live
+        // nodes must finish while the exclusive quiesce token is held
+        // (data-plane calls would block here). Run it on both backends.
+        fn check<B: PsBackend + 'static>(shared: ShardedPs<B>, tag: &str) {
+            let idx = vec![0u32, 1, 10, 5, 3, 2]; // 3 samples x 2 tables
+            let mut want = vec![0.0f32; 3 * 2 * 4];
+            shared.gather(&idx, &mut want);
+            let q = shared.quiesce(); // exclusive epoch write lock held
+            let (done_tx, done_rx) = std::sync::mpsc::channel();
+            std::thread::scope(|s| {
+                let sh = shared.clone();
+                let idx = idx.clone();
+                s.spawn(move || {
+                    let mut out = vec![0.0f32; 3 * 2 * 4];
+                    sh.serve_gather(&idx, &mut out).unwrap();
+                    done_tx.send(out).unwrap();
+                });
+                let out = done_rx
+                    .recv_timeout(std::time::Duration::from_secs(10))
+                    .unwrap_or_else(|_| {
+                        panic!("{tag}: serve_gather blocked on the quiesce token")
+                    });
+                assert_eq!(out, want, "{tag}");
+                drop(q);
+            });
+            assert_eq!(shared.stats().serve_reads, 1, "{tag}");
+        }
+        check(ShardedPs::new(PsCluster::new(TABLES.to_vec(), 3, 5)), "inproc");
+        check(ShardedPs::new(ThreadedCluster::new(TABLES.to_vec(), 3, 5)),
+              "threaded");
+    }
+
+    #[test]
+    fn stats_read_does_not_fence_against_quiesce() {
+        // satellite 2: the diagnostic stats surface serving threads poll
+        // must stay reachable while the control plane holds the token
+        let shared = ShardedPs::new(PsCluster::new(TABLES.to_vec(), 2, 5));
+        let q = shared.quiesce();
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::scope(|s| {
+            let sh = shared.clone();
+            s.spawn(move || tx.send(sh.stats()).unwrap());
+            let stats = rx
+                .recv_timeout(std::time::Duration::from_secs(10))
+                .expect("stats() blocked on the quiesce token");
+            assert_eq!(stats.serve_reads, 0);
+            drop(q);
+        });
     }
 
     #[test]

@@ -24,12 +24,12 @@
 //! restores its rows from the last checkpoint.
 
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Mutex, PoisonError};
+use std::sync::{Arc, Mutex, PoisonError, RwLock};
 use std::thread::JoinHandle;
 
 use super::{
     init_node_state, route_row, NodeSnapshot, PsControlPlane, PsDataPlane,
-    StatCounters,
+    PsServePlane, ServeError, StatCounters,
 };
 use crate::embedding::{EmbOptimizer, TableInfo};
 
@@ -57,6 +57,8 @@ enum NodeMsg {
     },
     ReadRows { table: u32, locals: Vec<u32>, reply: Sender<(usize, Vec<f32>, Vec<f32>)> },
     Snapshot { reply: Sender<NodeSnapshot> },
+    /// shards-only clone for the serving view (no optimizer state)
+    ServeView { reply: Sender<(usize, Vec<Vec<f32>>)> },
     Load { shards: Vec<Vec<f32>>, opt: Vec<Vec<f32>>, ack: Sender<()> },
     Reset { ack: Sender<()> },
     Kill,
@@ -76,6 +78,15 @@ pub struct ThreadedCluster {
     /// respawned). Slots are independently locked so kill/respawn of one
     /// node never blocks routing to another.
     workers: Vec<Mutex<Option<Worker>>>,
+    /// Published per-node serving views (shards only): serving readers
+    /// clone the `Arc` under a briefly-held read lock and copy rows from
+    /// the immutable snapshot — they never touch a worker channel, so
+    /// they never queue behind trainer traffic or checkpoint ops. The
+    /// coordinator republishes at the step barrier
+    /// ([`PsServePlane::publish_serve_view`]); staleness is therefore
+    /// bounded by one step. `None` = the node is dead ⇒
+    /// [`ServeError::NodeDown`].
+    serve_views: Vec<RwLock<Option<Arc<Vec<Vec<f32>>>>>>,
     stats: StatCounters,
 }
 
@@ -131,6 +142,9 @@ fn worker_loop(
                     opt: opt_state.clone(),
                 });
             }
+            NodeMsg::ServeView { reply } => {
+                let _ = reply.send((node_id, shards.clone()));
+            }
             NodeMsg::Load { shards: s, opt: o, ack } => {
                 shards = s;
                 opt_state = o;
@@ -153,7 +167,13 @@ impl ThreadedCluster {
         let workers = (0..n_nodes)
             .map(|node_id| Mutex::new(Some(Self::spawn(&tables, n_nodes, node_id, seed))))
             .collect();
-        Self { tables, n_nodes, seed, workers, stats: StatCounters::default() }
+        let serve_views = (0..n_nodes)
+            .map(|node_id| {
+                let (shards, _) = init_node_state(&tables, n_nodes, node_id, seed);
+                RwLock::new(Some(Arc::new(shards)))
+            })
+            .collect();
+        Self { tables, n_nodes, seed, workers, serve_views, stats: StatCounters::default() }
     }
 
     fn spawn(tables: &[TableInfo], n_nodes: usize, node_id: usize, seed: u64) -> Worker {
@@ -183,6 +203,21 @@ impl ThreadedCluster {
             Some(w) => w.tx.clone(),
             None => panic!("Emb PS node {node} is dead (killed, not respawned)"),
         }
+    }
+
+    /// Swap one node's published serving view (`None` = dead).
+    fn set_serve_view(&self, node: usize, view: Option<Arc<Vec<Vec<f32>>>>) {
+        *self.serve_views[node]
+            .write()
+            .unwrap_or_else(PoisonError::into_inner) = view;
+    }
+
+    /// Republish a node's view at its deterministic init (respawn/reset
+    /// paths — keeps the view in lockstep with the worker's state without
+    /// a round-trip).
+    fn set_serve_view_init(&self, node: usize) {
+        let (shards, _) = init_node_state(&self.tables, self.n_nodes, node, self.seed);
+        self.set_serve_view(node, Some(Arc::new(shards)));
     }
 }
 
@@ -409,6 +444,10 @@ impl PsControlPlane for ThreadedCluster {
             .send(NodeMsg::Load { shards: shards.to_vec(), opt: opt.to_vec(), ack: ack_tx })
             .expect("Emb PS worker hung up");
         ack_rx.recv().expect("Emb PS worker died mid-restore");
+        // serving resumes on the restored values right away, not at the
+        // next barrier publish — recovery should shrink the NodeDown
+        // window, not stretch it by a step
+        self.set_serve_view(node, Some(Arc::new(shards.to_vec())));
     }
 
     fn reset_node_to_init(&self, node: usize) {
@@ -417,10 +456,14 @@ impl PsControlPlane for ThreadedCluster {
             .send(NodeMsg::Reset { ack: ack_tx })
             .expect("Emb PS worker hung up");
         ack_rx.recv().expect("Emb PS worker died mid-reset");
+        self.set_serve_view_init(node);
     }
 
     fn kill_node(&self, node: usize) {
         self.stats.bump_kill();
+        // fail serving first: a read racing the kill gets NodeDown, never
+        // a view for a node the control plane already declared dead
+        self.set_serve_view(node, None);
         if let Some(w) = self.slot(node).take() {
             let _ = w.tx.send(NodeMsg::Kill);
             let _ = w.join.join();
@@ -432,10 +475,66 @@ impl PsControlPlane for ThreadedCluster {
         let mut slot = self.slot(node);
         assert!(slot.is_none(), "node {node} is already alive");
         *slot = Some(Self::spawn(&self.tables, self.n_nodes, node, self.seed));
+        drop(slot);
+        self.set_serve_view_init(node);
     }
 
     fn alive(&self, node: usize) -> bool {
         ThreadedCluster::alive(self, node)
+    }
+}
+
+impl PsServePlane for ThreadedCluster {
+    fn serve_gather(&self, indices: &[u32], out: &mut [f32]) -> Result<(), ServeError> {
+        let t = self.tables.len();
+        let dim = self.tables[0].dim;
+        debug_assert!(self.tables.iter().all(|i| i.dim == dim));
+        debug_assert_eq!(out.len(), indices.len() * dim);
+        // clone each touched node's view Arc once; the RwLock is held only
+        // for the clone, so a concurrent publish never blocks readers for
+        // longer than a pointer swap
+        let mut views: Vec<Option<Arc<Vec<Vec<f32>>>>> = vec![None; self.n_nodes];
+        for (slot, &row) in indices.iter().enumerate() {
+            let tab = slot % t;
+            let (node, local) = route_row(row as usize, self.n_nodes);
+            if views[node].is_none() {
+                let g = self.serve_views[node]
+                    .read()
+                    .unwrap_or_else(PoisonError::into_inner);
+                match &*g {
+                    Some(v) => views[node] = Some(Arc::clone(v)),
+                    None => return Err(ServeError::NodeDown { node }),
+                }
+            }
+            let shard = &views[node].as_ref().unwrap()[tab];
+            out[slot * dim..(slot + 1) * dim]
+                .copy_from_slice(&shard[local * dim..(local + 1) * dim]);
+        }
+        self.stats.bump_serve_read();
+        Ok(())
+    }
+
+    /// Double-buffer swap at the step barrier: ask every live worker for a
+    /// shards-only clone and publish it. Dead nodes keep their `None`
+    /// view. Readers keep serving the old `Arc` until their in-flight
+    /// request finishes — no reader ever observes a half-swapped view.
+    fn publish_serve_view(&self) {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let mut expected = 0usize;
+        for node in 0..self.n_nodes {
+            let tx = match &*self.slot(node) {
+                Some(w) => w.tx.clone(),
+                None => continue,
+            };
+            expected += 1;
+            tx.send(NodeMsg::ServeView { reply: reply_tx.clone() })
+                .expect("Emb PS worker hung up");
+        }
+        drop(reply_tx);
+        for _ in 0..expected {
+            let (node, shards) = reply_rx.recv().expect("Emb PS worker died mid-publish");
+            self.set_serve_view(node, Some(Arc::new(shards)));
+        }
     }
 }
 
@@ -607,6 +706,54 @@ mod tests {
         c.reset_node_to_init(0); // row 2 lives on node 0
         let fresh = ThreadedCluster::new(TABLES.to_vec(), 2, 13);
         assert_eq!(c.snapshot_node(0), fresh.snapshot_node(0));
+    }
+
+    #[test]
+    fn serve_view_is_stale_until_published() {
+        let c = ThreadedCluster::new(TABLES.to_vec(), 3, 7);
+        let idx = vec![0u32, 3]; // 1 sample x 2 tables, both rows on node 0
+        let mut init = vec![0.0f32; 2 * 4];
+        c.serve_gather(&idx, &mut init).unwrap();
+        c.apply_grads(&idx, 1, &[1.0f32; 8], 1.0, EmbOptimizer::Sgd);
+        // before the barrier publish, serving still sees the old view
+        let mut stale = vec![0.0f32; 2 * 4];
+        c.serve_gather(&idx, &mut stale).unwrap();
+        assert_eq!(stale, init, "view must not move before publish");
+        c.publish_serve_view();
+        let mut fresh = vec![0.0f32; 2 * 4];
+        c.serve_gather(&idx, &mut fresh).unwrap();
+        let mut want = vec![0.0f32; 2 * 4];
+        c.gather_pooled(&idx, 1, &mut want);
+        assert_eq!(fresh, want, "published view must match live state");
+        let s = c.stats();
+        assert_eq!(s.serve_reads, 3);
+        assert_eq!(s.serve_retries, 0, "snapshot reads never retry");
+    }
+
+    #[test]
+    fn serve_dead_node_errors_and_recovery_restores_service() {
+        let c = ThreadedCluster::new(TABLES.to_vec(), 3, 7);
+        let idx = vec![1u32, 4]; // both rows on node 1
+        c.apply_grads(&idx, 1, &[1.0f32; 8], 1.0, EmbOptimizer::Sgd);
+        c.publish_serve_view();
+        let checkpoint = c.snapshot_node(1);
+        c.kill_node(1);
+        let mut out = vec![0.0f32; 2 * 4];
+        assert_eq!(c.serve_gather(&idx, &mut out),
+                   Err(ServeError::NodeDown { node: 1 }));
+        // survivors keep serving (rows on nodes 0 and 2)
+        c.serve_gather(&[0, 2], &mut out).unwrap();
+        // respawn serves init immediately, load serves the restored rows
+        c.respawn_node(1);
+        c.serve_gather(&idx, &mut out).unwrap();
+        let fresh = ThreadedCluster::new(TABLES.to_vec(), 3, 7);
+        let mut want = vec![0.0f32; 2 * 4];
+        fresh.gather_pooled(&idx, 1, &mut want);
+        assert_eq!(out, want, "respawned view must be at init");
+        c.load_node(1, &checkpoint.shards, &checkpoint.opt);
+        c.serve_gather(&idx, &mut out).unwrap();
+        c.gather_pooled(&idx, 1, &mut want);
+        assert_eq!(out, want, "restored view must match live state");
     }
 
     #[test]

@@ -370,6 +370,31 @@ impl Default for TelemetryConfig {
     }
 }
 
+/// Online serving plane switches (see `crate::serving`). Off by default:
+/// when enabled, the coordinator runs the open-loop load generator
+/// concurrently with training against the read-only
+/// `cluster::PsServePlane`, which is strictly read-only w.r.t. training
+/// state (asserted by `tests/serving.rs` bit-identity).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServingConfig {
+    /// run the serving load generator during training
+    /// (`--serve-qps`, `[serving] enabled`)
+    pub enabled: bool,
+    /// aggregate target requests/second across all clients
+    /// (`--serve-qps`, `[serving] qps`; setting it implies `enabled`)
+    pub qps: f64,
+    /// closed serving worker threads (`--serve-clients`, `[serving] clients`)
+    pub clients: usize,
+    /// Zipf skew of key popularity (`[serving] zipf_s`)
+    pub zipf_s: f64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self { enabled: false, qps: 20_000.0, clients: 2, zipf_s: 1.1 }
+    }
+}
+
 /// Everything a training job needs.
 #[derive(Clone, Debug, PartialEq)]
 pub struct JobConfig {
@@ -379,6 +404,7 @@ pub struct JobConfig {
     pub checkpoint: CheckpointConfig,
     pub train: TrainConfig,
     pub telemetry: TelemetryConfig,
+    pub serving: ServingConfig,
     /// root dir holding AOT artifacts (default "artifacts")
     pub artifacts_dir: String,
 }
@@ -511,6 +537,7 @@ pub fn preset(name: &str) -> Result<JobConfig> {
             eval_every: 0,
         },
         telemetry: TelemetryConfig::default(),
+        serving: ServingConfig::default(),
         artifacts_dir: "artifacts".into(),
         model,
     })
@@ -604,6 +631,15 @@ impl JobConfig {
             self.telemetry.enabled = true;
         }
         set!("telemetry", "progress_steps", self.telemetry.progress_steps, as_usize);
+        if let Some(v) = get(doc, "serving", "enabled") {
+            self.serving.enabled = v.as_bool()?;
+        }
+        if let Some(v) = get(doc, "serving", "qps") {
+            self.serving.qps = v.as_f64()?;
+            self.serving.enabled = true;
+        }
+        set!("serving", "clients", self.serving.clients, as_usize);
+        set!("serving", "zipf_s", self.serving.zipf_s, as_f64);
         Ok(())
     }
 }
@@ -801,6 +837,34 @@ mod tests {
         "#).unwrap();
         assert!(cfg.telemetry.enabled);
         assert_eq!(cfg.telemetry.dir.as_deref(), Some("/tmp/telemetry"));
+    }
+
+    #[test]
+    fn serving_defaults_off_and_toml_overrides() {
+        let base = preset("mini").unwrap();
+        assert!(!base.serving.enabled, "serving must default off");
+        assert_eq!(base.serving.qps, 20_000.0);
+        assert_eq!(base.serving.clients, 2);
+        assert_eq!(base.serving.zipf_s, 1.1);
+        // setting the target qps implies enablement (like telemetry.dir)
+        let cfg = JobConfig::from_toml(r#"
+            preset = "mini"
+            [serving]
+            qps = 100000.0
+            clients = 4
+            zipf_s = 0.9
+        "#).unwrap();
+        assert!(cfg.serving.enabled);
+        assert_eq!(cfg.serving.qps, 100_000.0);
+        assert_eq!(cfg.serving.clients, 4);
+        assert_eq!(cfg.serving.zipf_s, 0.9);
+        let cfg = JobConfig::from_toml(r#"
+            preset = "mini"
+            [serving]
+            enabled = true
+        "#).unwrap();
+        assert!(cfg.serving.enabled);
+        assert_eq!(cfg.serving.qps, 20_000.0, "qps keeps its default");
     }
 
     #[test]

@@ -93,7 +93,7 @@ use anyhow::{ensure, Result};
 use crate::checkpoint::async_pipeline::CheckpointPipeline;
 use crate::checkpoint::tracker::{priority_mask, MfuTracker};
 use crate::checkpoint::{CheckpointOptions, CheckpointStore};
-use crate::cluster::{PsBackend, PsDataPlane, ShardedPs, ThreadedCluster};
+use crate::cluster::{PsBackend, PsDataPlane, PsServePlane, ShardedPs, ThreadedCluster};
 use crate::config::{JobConfig, PsBackendKind};
 use crate::data::{Batch, SyntheticDataset};
 use crate::embedding::{init_value, PsCluster, TableInfo};
@@ -138,6 +138,11 @@ pub struct TrainReport {
     pub failures_seen: u64,
     pub wall_secs: f64,
     pub row_stats: Option<RowStats>,
+    /// serving-plane latency report when `[serving]` was enabled (the
+    /// load generator is strictly read-only, so every other field is
+    /// bit-identical with serving on or off — asserted by
+    /// tests/serving.rs)
+    pub serving: Option<crate::serving::ServeReport>,
 }
 
 /// Options beyond the JobConfig.
@@ -264,6 +269,23 @@ fn run_training_core<B: PsBackend + 'static>(
         &CheckpointOptions::from_config(&cfg.checkpoint),
     )?;
     let mut pool = TrainerPool::new(cfg, shared.clone());
+    // the serving plane: an open-loop Zipfian load generator hammering
+    // the read-only PsServePlane concurrently with training. Strictly
+    // read-only — it owns its own rng and never touches trainer state,
+    // so the training trajectory is bit-identical with it on or off.
+    let loadgen = if cfg.serving.enabled {
+        Some(crate::serving::LoadGen::start(
+            Arc::new(shared.clone()),
+            shared.tables().to_vec(),
+            n_emb,
+            cfg.serving.qps,
+            cfg.serving.clients,
+            cfg.serving.zipf_s,
+            cfg.data.seed ^ 0x5EE,
+        ))
+    } else {
+        None
+    };
     // the coordinator's view of the last position-marking save (the
     // pipeline applies it asynchronously; these are the submitted values)
     let mut marked_step: u64 = 0;
@@ -336,6 +358,13 @@ fn run_training_core<B: PsBackend + 'static>(
             }
         }
         host_params = allreduce_mean(results);
+        // the threaded backend's serving views swap here, at the step
+        // barrier — its staleness bound is exactly one global step (the
+        // in-proc backend's seqlock readers always see live rows, so
+        // publish is a no-op there)
+        if loadgen.is_some() {
+            shared.publish_serve_view();
+        }
 
         step += 1;
         steps_executed += 1;
@@ -372,6 +401,11 @@ fn run_training_core<B: PsBackend + 'static>(
         while clock_h >= policies.save.next_save_h()
             && policies.save.next_save_h() <= cfg.cluster.t_total_h
         {
+            // serving requests issued while the saver holds the quiesce
+            // token land in the "capture" latency bucket
+            if let Some(lg) = &loadgen {
+                lg.set_regime(crate::serving::Regime::Capture);
+            }
             let q = shared.quiesce();
             let marker = policies.save.capture(
                 PsView::new(&*q),
@@ -389,12 +423,21 @@ fn run_training_core<B: PsBackend + 'static>(
                 marked_samples = mark.samples;
             }
         }
+        if let Some(lg) = &loadgen {
+            lg.set_regime(crate::serving::Regime::Steady);
+        }
         crate::telemetry::gauge_set("ckpt_in_flight", pipeline.in_flight() as f64);
 
         // ---- failures that fire at/before the current clock ----
         while next_event < schedule.len() && schedule[next_event].time_h <= clock_h {
             let ev = schedule[next_event].clone();
             next_event += 1;
+            // serving requests racing the kill → respawn → restore window
+            // land in the "recovery" latency bucket (dead-node refusals
+            // included)
+            if let Some(lg) = &loadgen {
+                lg.set_regime(crate::serving::Regime::Recovery);
+            }
             crate::telemetry::event("failure");
             // adaptive save policies re-estimate the MTBF from these
             policies.save.observe_failure(clock_h);
@@ -445,11 +488,18 @@ fn run_training_core<B: PsBackend + 'static>(
                     step = ckpt_step;
                 }
             }
+            if let Some(lg) = &loadgen {
+                lg.set_regime(crate::serving::Regime::Steady);
+            }
         }
     }
 
     // quiesce the pool before the final drain/eval
     pool.stop();
+
+    // join the serving clients (before the telemetry export below, so
+    // their final `serve_gather{node=N}` samples are in the registry)
+    let serving = loadgen.map(|lg| lg.stop());
 
     // drain the pipeline: every capture applied + published (surfaces any
     // writer IO error, like the old synchronous path did)
@@ -514,6 +564,7 @@ fn run_training_core<B: PsBackend + 'static>(
         failures_seen: next_event as u64,
         wall_secs: wall_start.elapsed().as_secs_f64(),
         row_stats,
+        serving,
     })
 }
 

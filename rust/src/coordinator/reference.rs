@@ -345,5 +345,6 @@ fn run_reference_core<B: PsBackend>(
         failures_seen: next_event as u64,
         wall_secs: wall_start.elapsed().as_secs_f64(),
         row_stats,
+        serving: None,
     })
 }

@@ -24,8 +24,10 @@ pub mod optim;
 
 pub use optim::EmbOptimizer;
 
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering};
+
 use crate::cluster::lock::{NodeLock, NodeReadGuard, NodeWriteGuard};
-use crate::cluster::StatCounters;
+use crate::cluster::{ServeError, StatCounters};
 use crate::util::rng::SplitMix64;
 use crate::util::threads::parallel_chunks;
 
@@ -46,12 +48,33 @@ pub struct EmbPsNode {
     opt_state: Vec<Vec<f32>>,
 }
 
+/// Per-node serving-plane state: the seqlock sequence counter plus a
+/// fast-path liveness flag.
+///
+/// Protocol (the classic seqlock, writer side already mutually excluded
+/// by the node's write guard): a writer makes the counter odd before
+/// touching floats and even after; a serving reader snapshots the row
+/// between two counter loads and discards the copy unless both loads saw
+/// the same even value. Readers therefore never take the `NodeLock` and
+/// never wait on a writer — they retry instead.
+#[derive(Debug)]
+struct ServeSeq {
+    seq: AtomicU64,
+    /// `false` between an injected kill and the matching respawn. A
+    /// writer *panic* does not clear this (nobody is left to), which is
+    /// why the reader's retry loop also polls `NodeLock::is_dead` once
+    /// its spin budget runs out.
+    alive: AtomicBool,
+}
+
 /// The sharded Emb PS cluster (in-process backend).
 #[derive(Debug)]
 pub struct PsCluster {
     pub tables: Vec<TableInfo>,
     pub n_nodes: usize,
     nodes: Vec<NodeLock<EmbPsNode>>,
+    /// serving-plane seqlocks, one per node (same indexing as `nodes`)
+    serve: Vec<ServeSeq>,
     seed: u64,
     /// operation counters for the `PsBackend` trait view
     pub(crate) stats: StatCounters,
@@ -92,7 +115,13 @@ impl PsCluster {
         let nodes = (0..n_nodes)
             .map(|id| NodeLock::new(EmbPsNode::at_init(&tables, n_nodes, id, seed)))
             .collect();
-        Self { tables, n_nodes, nodes, seed, stats: StatCounters::default() }
+        let serve = (0..n_nodes)
+            .map(|_| ServeSeq {
+                seq: AtomicU64::new(0),
+                alive: AtomicBool::new(true),
+            })
+            .collect();
+        Self { tables, n_nodes, nodes, serve, seed, stats: StatCounters::default() }
     }
 
     #[inline]
@@ -126,6 +155,114 @@ impl PsCluster {
         self.nodes[node].write().unwrap_or_else(|_| {
             panic!("Emb PS node {node} is dead (killed or failed, not respawned)")
         })
+    }
+
+    /// Seqlock writer entry for `node`. Caller must hold the node's write
+    /// guard (or, for revive, the dead-node exclusivity of
+    /// [`NodeLock::revive_with`]) — writers are mutually excluded, so a
+    /// plain load/store pair is enough.
+    #[inline]
+    fn serve_write_begin(&self, node: usize) {
+        let seq = &self.serve[node].seq;
+        let s = seq.load(Ordering::Relaxed);
+        // s even (normal) → s+1, odd; s odd (residue of a writer that
+        // panicked mid-update and never reached `serve_write_end`) → s+2:
+        // still odd but CHANGED, so a reader that snapshotted before the
+        // death can never validate against the new epoch.
+        seq.store(s.wrapping_add(1 + (s & 1)), Ordering::Relaxed);
+        fence(Ordering::Release);
+    }
+
+    /// Seqlock writer exit for `node`: republish an even sequence. Not
+    /// reached when the writer panics — the residue case
+    /// `serve_write_begin` and the reader's dead-node fallback handle.
+    #[inline]
+    fn serve_write_end(&self, node: usize) {
+        let seq = &self.serve[node].seq;
+        let s = seq.load(Ordering::Relaxed);
+        seq.store(s.wrapping_add(1), Ordering::Release);
+    }
+
+    /// Serving-plane single-hot gather (`indices` [B, T] row-major, `out`
+    /// [B, T, dim]): per-row seqlock reads, no `NodeLock` guard, no
+    /// quiesce. Rows of a dead node return [`ServeError::NodeDown`]
+    /// instead of blocking on recovery; `out` is unspecified on `Err`.
+    pub fn serve_gather(&self, indices: &[u32], out: &mut [f32]) -> Result<(), ServeError> {
+        let t = self.tables.len();
+        let dim = self.tables[0].dim;
+        debug_assert!(self.tables.iter().all(|i| i.dim == dim));
+        debug_assert_eq!(out.len(), indices.len() * dim);
+        let mut retries = 0u64;
+        for (slot, &row) in indices.iter().enumerate() {
+            let tab = slot % t;
+            let (node, local) = self.route(row as usize);
+            let dst = &mut out[slot * dim..(slot + 1) * dim];
+            match self.serve_row_into(node, tab, local, dst) {
+                Ok(r) => retries += r,
+                Err(e) => {
+                    self.stats.add_serve_retries(retries);
+                    return Err(e);
+                }
+            }
+        }
+        self.stats.bump_serve_read();
+        self.stats.add_serve_retries(retries);
+        Ok(())
+    }
+
+    /// One seqlock-validated row copy; returns the retries paid. The copy
+    /// itself is racy by construction — it only escapes when the sequence
+    /// counter proves no writer overlapped it.
+    fn serve_row_into(
+        &self,
+        node: usize,
+        table: usize,
+        local: usize,
+        dst: &mut [f32],
+    ) -> Result<u64, ServeError> {
+        let sq = &self.serve[node];
+        if !sq.alive.load(Ordering::Acquire) {
+            return Err(ServeError::NodeDown { node });
+        }
+        let dim = dst.len();
+        let mut retries = 0u64;
+        loop {
+            let s1 = sq.seq.load(Ordering::Acquire);
+            if s1 & 1 == 0 {
+                // Raw shard base pointer without forming a &EmbPsNode or a
+                // &[f32] over the racing floats: only the Vec headers are
+                // referenced, and those are never mutated after
+                // construction (load/reset/revive all refill the existing
+                // allocations in place — see `NodeLock::revive_with`).
+                let base = unsafe {
+                    let shards = std::ptr::addr_of!((*self.nodes[node].data_ptr()).shards);
+                    (*(*shards).as_ptr().add(table)).as_ptr().add(local * dim)
+                };
+                for (d, v) in dst.iter_mut().enumerate() {
+                    // SAFETY: in-bounds by routing; volatile because a
+                    // writer may be racing us — the validation below
+                    // discards any torn copy.
+                    *v = unsafe { std::ptr::read_volatile(base.add(d)) };
+                }
+                fence(Ordering::Acquire);
+                if sq.seq.load(Ordering::Relaxed) == s1 {
+                    return Ok(retries);
+                }
+            }
+            retries += 1;
+            if retries % 128 == 0 {
+                // Spin budget exhausted: either a writer died mid-update
+                // (seq stuck odd, node poisoned → dead) or the node was
+                // killed between our liveness check and now. Surface the
+                // typed error rather than spinning forever.
+                if self.nodes[node].is_dead() || !sq.alive.load(Ordering::Acquire) {
+                    return Err(ServeError::NodeDown { node });
+                }
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
     }
 
     /// Which nodes a routed index batch touches.
@@ -294,6 +431,11 @@ impl PsCluster {
                 (0..n_nodes)
                     .map(|n| touched[n].then(|| self.node_write(n)))
                     .collect();
+            for n in 0..n_nodes {
+                if touched[n] {
+                    self.serve_write_begin(n);
+                }
+            }
             for s in 0..b {
                 for tab in 0..t {
                     let g = &grads[(s * t + tab) * dim..(s * t + tab + 1) * dim];
@@ -307,6 +449,11 @@ impl PsCluster {
                         let acc = &mut node.opt_state[tab][local];
                         opt.apply(dst, g, acc, lr);
                     }
+                }
+            }
+            for n in 0..n_nodes {
+                if touched[n] {
+                    self.serve_write_end(n);
                 }
             }
             return;
@@ -339,6 +486,7 @@ impl PsCluster {
         debug_assert_eq!(grads.len(), b * t * dim);
         let n_nodes = self.n_nodes;
         let mut g_node = self.node_write(node);
+        self.serve_write_begin(node);
         for s in 0..b {
             for tab in 0..t {
                 let g = &grads[(s * t + tab) * dim..(s * t + tab + 1) * dim];
@@ -355,13 +503,24 @@ impl PsCluster {
                 }
             }
         }
+        self.serve_write_end(node);
     }
 
     /// Reset a node's shards to their deterministic initial values
-    /// (recovery when no checkpoint exists yet).
+    /// (recovery when no checkpoint exists yet). Refills the existing
+    /// buffers instead of installing a fresh `EmbPsNode` — the serving
+    /// plane's seqlock readers hold raw pointers into the shard `Vec`s,
+    /// so those allocations must stay put for the cluster's lifetime.
     pub fn reset_node_to_init(&self, node_id: usize) {
-        let fresh = EmbPsNode::at_init(&self.tables, self.n_nodes, node_id, self.seed);
-        *self.node_write(node_id) = fresh;
+        let (shards, opt) =
+            crate::cluster::init_node_state(&self.tables, self.n_nodes, node_id, self.seed);
+        let mut g = self.node_write(node_id);
+        self.serve_write_begin(node_id);
+        for t in 0..self.tables.len() {
+            g.shards[t].copy_from_slice(&shards[t]);
+            g.opt_state[t].copy_from_slice(&opt[t]);
+        }
+        self.serve_write_end(node_id);
     }
 
     /// A failure hits this node: it stops serving (reads/writes panic with
@@ -369,6 +528,9 @@ impl PsCluster {
     /// transition is taken automatically when a writer panics mid-update
     /// (lock poison → node kill; see `cluster::lock`).
     pub fn kill_node(&self, node: usize) {
+        // fail the serving fast path first so a reader cannot start a
+        // fresh seqlock attempt against a node already declared dead
+        self.serve[node].alive.store(false, Ordering::Release);
         self.nodes[node].kill();
     }
 
@@ -379,18 +541,32 @@ impl PsCluster {
     /// the other.
     pub fn respawn_node(&self, node: usize) {
         assert!(self.nodes[node].is_dead(), "node {node} is already alive");
-        self.nodes[node].revive(EmbPsNode::at_init(
-            &self.tables, self.n_nodes, node, self.seed,
-        ));
+        let (shards, opt) =
+            crate::cluster::init_node_state(&self.tables, self.n_nodes, node, self.seed);
+        // seqlock epoch around the in-place refill: `revive_with` (not
+        // `revive`) so the shard allocations serving readers point into
+        // survive the respawn, and the odd sequence keeps any reader that
+        // races the refill from validating a half-initialized row.
+        self.serve_write_begin(node);
+        self.nodes[node].revive_with(|n| {
+            for t in 0..shards.len() {
+                n.shards[t].copy_from_slice(&shards[t]);
+                n.opt_state[t].copy_from_slice(&opt[t]);
+            }
+        });
+        self.serve_write_end(node);
+        self.serve[node].alive.store(true, Ordering::Release);
     }
 
     /// Overwrite one node's full state (checkpoint restore path).
     pub fn load_node(&self, node: usize, shards: &[Vec<f32>], opt: &[Vec<f32>]) {
         let mut g = self.node_write(node);
+        self.serve_write_begin(node);
         for t in 0..self.tables.len() {
             g.shards[t].copy_from_slice(&shards[t]);
             g.opt_state[t].copy_from_slice(&opt[t]);
         }
+        self.serve_write_end(node);
     }
 
     /// Clone one node's full state out as (shards, opt) — one copy, taken
@@ -646,6 +822,76 @@ mod tests {
         assert!(c.opt_shard(node, 0)[local] > 0.0);
         c.reset_node_to_init(node);
         assert_eq!(c.opt_shard(node, 0)[local], 0.0);
+    }
+
+    #[test]
+    fn serve_gather_matches_locked_gather() {
+        let c = small_cluster(3);
+        c.apply_grads(&[4, 2, 7, 5], 1, &[0.7f32; 16], 1.0,
+                      EmbOptimizer::RowAdagrad { eps: 1e-8 });
+        let indices = vec![0u32, 1, 9, 6, 3, 2]; // 3 samples x 2 tables
+        let mut locked = vec![0.0; 3 * 2 * 4];
+        let mut served = vec![0.0; 3 * 2 * 4];
+        c.gather(&indices, &mut locked);
+        c.serve_gather(&indices, &mut served).unwrap();
+        assert_eq!(locked, served);
+        let s = c.stats.read();
+        assert_eq!(s.serve_reads, 1);
+        assert_eq!(s.serve_retries, 0, "uncontended serve must not retry");
+    }
+
+    #[test]
+    fn serve_gather_on_dead_node_errors_not_hangs() {
+        let c = small_cluster(3);
+        c.kill_node(1);
+        // row 4 lives on node 1 (4 % 3)
+        let mut out = vec![0.0; 2 * 4];
+        let err = c.serve_gather(&[4, 2], &mut out).unwrap_err();
+        assert_eq!(err, ServeError::NodeDown { node: 1 });
+        // survivors still serve
+        c.serve_gather(&[3, 2], &mut out).unwrap();
+        // recovery restores service for the victim's rows
+        c.respawn_node(1);
+        c.serve_gather(&[4, 2], &mut out).unwrap();
+        let mut want = vec![0.0; 4];
+        c.read_row(0, 4, &mut want);
+        assert_eq!(&out[..4], &want[..]);
+    }
+
+    #[test]
+    fn serve_gather_survives_reset_and_load() {
+        let c = small_cluster(2);
+        c.apply_grads(&[5, 2], 1, &[1.0f32; 8], 0.5, EmbOptimizer::Sgd);
+        let (shards, opt) = c.snapshot_parts(1);
+        c.reset_node_to_init(1);
+        let mut out = vec![0.0; 2 * 4];
+        c.serve_gather(&[5, 2], &mut out).unwrap();
+        let fresh = small_cluster(2);
+        let mut want = vec![0.0; 4];
+        fresh.read_row(0, 5, &mut want);
+        assert_eq!(&out[..4], &want[..], "reset must serve init values");
+        c.load_node(1, &shards, &opt);
+        c.serve_gather(&[5, 2], &mut out).unwrap();
+        c.read_row(0, 5, &mut want);
+        assert_eq!(&out[..4], &want[..], "load must serve restored values");
+    }
+
+    #[test]
+    fn serve_gather_after_writer_panic_errors_within_spin_budget() {
+        // A writer that dies mid-update leaves the victim's sequence
+        // counter odd forever; the reader must convert that into
+        // NodeDown via its spin-budget fallback instead of spinning.
+        let c = small_cluster(3);
+        let victim_batch = vec![9999u32, 0]; // OOB local slot on node 0
+        let panicked = std::thread::scope(|s| {
+            s.spawn(|| c.apply_grads(&victim_batch, 1, &[0.1f32; 8], 1.0,
+                                     EmbOptimizer::Sgd))
+                .join()
+        });
+        assert!(panicked.is_err());
+        let mut out = vec![0.0; 2 * 4];
+        let err = c.serve_gather(&[3, 2], &mut out).unwrap_err(); // row 3 → node 0
+        assert_eq!(err, ServeError::NodeDown { node: 0 });
     }
 
     #[test]

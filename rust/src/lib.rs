@@ -30,6 +30,7 @@ pub mod metrics;
 pub mod pls;
 pub mod policy;
 pub mod runtime;
+pub mod serving;
 pub mod sim;
 pub mod telemetry;
 pub mod testing;

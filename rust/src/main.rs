@@ -97,6 +97,10 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .flag("telemetry", "enable the telemetry plane (in-memory spans + metrics)")
         .opt("telemetry-dir", "",
              "export chrome trace + metrics snapshots here (implies --telemetry)")
+        .opt("serve-qps", "",
+             "run the online serving load generator at this aggregate QPS \
+              concurrently with training (enables the serving plane)")
+        .opt("serve-clients", "", "serving client threads (default from config: 2)")
         .parse(args)?;
     let mut cfg = job_config_from(&cli)?;
     cfg.artifacts_dir = cli.get("artifacts").to_string();
@@ -118,6 +122,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if !cli.get("telemetry-dir").is_empty() {
         cfg.telemetry.dir = Some(cli.get("telemetry-dir").to_string());
         cfg.telemetry.enabled = true;
+    }
+    if !cli.get("serve-qps").is_empty() {
+        cfg.serving.qps = cli.get_f64("serve-qps")?;
+        cfg.serving.enabled = true;
+    }
+    if !cli.get("serve-clients").is_empty() {
+        cfg.serving.clients = cli.get_usize("serve-clients")?.max(1);
     }
 
     let n_failures = cli.get_usize("failures")?;
@@ -184,6 +195,19 @@ fn print_report(r: &TrainReport, t_total_h: f64) {
         println!("  interval re-plans {}", track.join(", "));
     }
     println!("wall time           {:.1} s", r.wall_secs);
+    if let Some(s) = &r.serving {
+        println!("serving             target {:.0} qps, achieved {:.0} qps \
+                  ({} clients, zipf s={})",
+                 s.target_qps, s.achieved_qps, s.clients, s.zipf_s);
+        println!("  {:>9} {:>9} {:>9} {:>8} {:>8} {:>8} {:>8}",
+                 "regime", "requests", "nodedown", "p50us", "p95us", "p99us",
+                 "p999us");
+        for reg in &s.regimes {
+            println!("  {:>9} {:>9} {:>9} {:>8} {:>8} {:>8} {:>8}",
+                     reg.regime, reg.requests, reg.node_down, reg.p50_us,
+                     reg.p95_us, reg.p99_us, reg.p999_us);
+        }
+    }
 }
 
 fn cmd_plan(args: &[String]) -> Result<()> {

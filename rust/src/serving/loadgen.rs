@@ -1,0 +1,299 @@
+//! Open-loop Zipfian load generator over a [`PsServePlane`].
+//!
+//! Each of the M client threads owns a fixed request schedule: client c's
+//! k-th request is *intended* at `anchor + k * (clients / qps)` seconds.
+//! The client waits for the intended time (sleep down to ~1 ms out, then
+//! spin), issues one single-sample `serve_gather`, and records
+//! `completion - intended` as the latency — the coordinated-omission-safe
+//! definition: when the serving plane stalls (e.g. a reader briefly
+//! retries behind a hot writer), requests queue up behind their intended
+//! times and every queued request's delay lands in the histogram, instead
+//! of the generator quietly re-anchoring and hiding the stall.
+//!
+//! Clients record into thread-local per-regime histograms (no shared
+//! state on the request path beyond the backend itself) and the results
+//! are merged once at [`LoadGen::stop`]. Per-request telemetry goes to
+//! the existing registry: `serve_gather{node=N}` latency histograms and
+//! the `serve_nodedown` counter (both no-ops when telemetry is off).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::cluster::{PsServePlane, ServeError};
+use crate::embedding::TableInfo;
+use crate::telemetry;
+use crate::telemetry::hist::Histogram;
+use crate::util::dist::Zipf;
+use crate::util::rng::Rng;
+
+use super::{Regime, RegimeLatency, ServeReport};
+
+/// One client's thread-local results, merged at stop.
+struct ClientStats {
+    hists: [Histogram; 3],
+    node_down: [u64; 3],
+}
+
+/// Running load generator; create with [`LoadGen::start`], flip regimes
+/// with [`LoadGen::set_regime`], and collect the [`ServeReport`] with
+/// [`LoadGen::stop`].
+pub struct LoadGen {
+    stop: Arc<AtomicBool>,
+    regime: Arc<AtomicUsize>,
+    clients: Vec<JoinHandle<ClientStats>>,
+    anchor: Instant,
+    target_qps: f64,
+    zipf_s: f64,
+}
+
+impl LoadGen {
+    /// Spawn `clients` worker threads driving `backend` at an aggregate
+    /// `qps` with Zipf(`zipf_s`) key popularity over each table's rows.
+    ///
+    /// Key ranks map directly to row ids (rank 0 → row 0), so the hottest
+    /// keys concentrate on the low node ids under the fixed `r % n`
+    /// routing — a deliberate skew: it makes the contention experiments
+    /// show a *hot node*, which is the hard case for the serving plane.
+    pub fn start(
+        backend: Arc<dyn PsServePlane>,
+        tables: Vec<TableInfo>,
+        n_nodes: usize,
+        qps: f64,
+        clients: usize,
+        zipf_s: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(qps > 0.0, "serving qps must be positive");
+        assert!(clients >= 1, "serving needs at least one client");
+        let stop = Arc::new(AtomicBool::new(false));
+        let regime = Arc::new(AtomicUsize::new(Regime::Steady as usize));
+        let anchor = Instant::now();
+        let interval_s = clients as f64 / qps;
+        let handles = (0..clients)
+            .map(|c| {
+                let backend = Arc::clone(&backend);
+                let tables = tables.clone();
+                let stop = Arc::clone(&stop);
+                let regime = Arc::clone(&regime);
+                std::thread::Builder::new()
+                    .name(format!("serve-client-{c}"))
+                    .spawn(move || {
+                        client_loop(
+                            &*backend,
+                            &tables,
+                            n_nodes,
+                            anchor,
+                            interval_s,
+                            zipf_s,
+                            seed ^ (0x5E11 + c as u64),
+                            &stop,
+                            &regime,
+                        )
+                    })
+                    .expect("spawning serving client")
+            })
+            .collect();
+        Self {
+            stop,
+            regime,
+            clients: handles,
+            anchor,
+            target_qps: qps,
+            zipf_s,
+        }
+    }
+
+    /// Tag subsequent requests with `regime` (monotonic flag flip; an
+    /// in-flight request keeps the regime it started under).
+    pub fn set_regime(&self, regime: Regime) {
+        self.regime.store(regime as usize, Ordering::Release);
+    }
+
+    /// Stop the clients, merge their histograms, and summarize.
+    pub fn stop(self) -> ServeReport {
+        self.stop.store(true, Ordering::Release);
+        let wall_secs = self.anchor.elapsed().as_secs_f64();
+        let n_clients = self.clients.len();
+        let mut hists: [Histogram; 3] = std::array::from_fn(|_| Histogram::default());
+        let mut node_down = [0u64; 3];
+        for h in self.clients {
+            let stats = h.join().expect("serving client panicked");
+            for (i, hist) in stats.hists.iter().enumerate() {
+                hists[i].merge(hist);
+                node_down[i] += stats.node_down[i];
+            }
+        }
+        let regimes: Vec<RegimeLatency> = Regime::ALL
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| RegimeLatency {
+                regime: r.name().to_string(),
+                requests: hists[i].count(),
+                node_down: node_down[i],
+                p50_us: hists[i].quantile(0.50),
+                p95_us: hists[i].quantile(0.95),
+                p99_us: hists[i].quantile(0.99),
+                p999_us: hists[i].quantile(0.999),
+                mean_us: hists[i].mean(),
+                max_us: hists[i].max(),
+            })
+            .collect();
+        let total_requests: u64 = regimes.iter().map(|r| r.requests).sum();
+        let total_node_down: u64 = regimes.iter().map(|r| r.node_down).sum();
+        ServeReport {
+            target_qps: self.target_qps,
+            clients: n_clients,
+            zipf_s: self.zipf_s,
+            wall_secs,
+            total_requests,
+            total_node_down,
+            achieved_qps: if wall_secs > 0.0 {
+                total_requests as f64 / wall_secs
+            } else {
+                0.0
+            },
+            regimes,
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn client_loop(
+    backend: &dyn PsServePlane,
+    tables: &[TableInfo],
+    n_nodes: usize,
+    anchor: Instant,
+    interval_s: f64,
+    zipf_s: f64,
+    seed: u64,
+    stop: &AtomicBool,
+    regime: &AtomicUsize,
+) -> ClientStats {
+    let t = tables.len();
+    let dim = tables[0].dim;
+    let mut rng = Rng::new(seed);
+    let zipfs: Vec<Zipf> = tables.iter().map(|info| Zipf::new(info.rows, zipf_s)).collect();
+    let mut stats = ClientStats {
+        hists: std::array::from_fn(|_| Histogram::default()),
+        node_down: [0u64; 3],
+    };
+    let mut indices = vec![0u32; t];
+    let mut out = vec![0.0f32; t * dim];
+    let mut k = 0u64;
+    loop {
+        // open-loop wait for the request's intended time; never
+        // re-anchored, so a stalled backend accumulates queued requests
+        // whose full delay is charged to the latency below
+        let intended_s = k as f64 * interval_s;
+        loop {
+            if stop.load(Ordering::Acquire) {
+                return stats;
+            }
+            let now_s = anchor.elapsed().as_secs_f64();
+            if now_s >= intended_s {
+                break;
+            }
+            let remaining = intended_s - now_s;
+            if remaining > 0.001 {
+                // sleep most of it, spin the last stretch (sleep wakes
+                // late by scheduler quanta; the spin keeps the schedule)
+                std::thread::sleep(Duration::from_secs_f64(remaining - 0.0005));
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        for (tab, z) in zipfs.iter().enumerate() {
+            indices[tab] = z.sample(&mut rng) as u32;
+        }
+        let reg = regime.load(Ordering::Acquire).min(2);
+        let result = backend.serve_gather(&indices, &mut out);
+        // coordinated-omission-safe latency: completion minus *intended*
+        let latency_s = anchor.elapsed().as_secs_f64() - intended_s;
+        let latency_us = (latency_s * 1e6).max(0.0) as u64;
+        match result {
+            Ok(()) => {
+                stats.hists[reg].observe(latency_us);
+                // per-node attribution keyed on the first table's owner
+                let node = indices[0] as usize % n_nodes;
+                telemetry::observe_node("serve_gather", node, latency_us);
+            }
+            Err(ServeError::NodeDown { .. }) => {
+                stats.node_down[reg] += 1;
+                telemetry::counter_add("serve_nodedown", 1);
+            }
+        }
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::PsCluster;
+
+    const TABLES: [TableInfo; 2] =
+        [TableInfo { rows: 40, dim: 4 }, TableInfo { rows: 17, dim: 4 }];
+
+    fn run_for(
+        cluster: Arc<PsCluster>,
+        millis: u64,
+        qps: f64,
+        clients: usize,
+    ) -> ServeReport {
+        let lg = LoadGen::start(cluster, TABLES.to_vec(), 3, qps, clients, 1.1, 7);
+        std::thread::sleep(Duration::from_millis(millis));
+        lg.stop()
+    }
+
+    #[test]
+    fn loadgen_hits_roughly_the_target_qps() {
+        let cluster = Arc::new(PsCluster::new(TABLES.to_vec(), 3, 7));
+        let report = run_for(cluster, 200, 2_000.0, 2);
+        assert!(report.total_requests > 50,
+                "too few requests: {}", report.total_requests);
+        assert_eq!(report.total_node_down, 0);
+        assert_eq!(report.clients, 2);
+        let steady = report.regime("steady").unwrap();
+        assert_eq!(steady.requests, report.total_requests,
+                   "all traffic should be steady-regime");
+        assert!(steady.p999_us >= steady.p50_us);
+        // open loop at 2k qps for 200 ms ≈ 400 intended requests; allow a
+        // generous band for CI-runner jitter
+        assert!(report.achieved_qps > 200.0,
+                "achieved {} qps", report.achieved_qps);
+    }
+
+    #[test]
+    fn regime_flips_bucket_traffic_separately() {
+        let cluster = Arc::new(PsCluster::new(TABLES.to_vec(), 3, 7));
+        let lg = LoadGen::start(cluster, TABLES.to_vec(), 3, 2_000.0, 2, 1.1, 9);
+        std::thread::sleep(Duration::from_millis(80));
+        lg.set_regime(Regime::Capture);
+        std::thread::sleep(Duration::from_millis(80));
+        lg.set_regime(Regime::Recovery);
+        std::thread::sleep(Duration::from_millis(80));
+        let report = lg.stop();
+        for name in ["steady", "capture", "recovery"] {
+            let r = report.regime(name).unwrap();
+            assert!(r.requests > 0, "regime {name} saw no traffic");
+        }
+        let sum: u64 = report.regimes.iter().map(|r| r.requests).sum();
+        assert_eq!(sum, report.total_requests);
+    }
+
+    #[test]
+    fn dead_node_requests_count_as_node_down_not_latency() {
+        let cluster = Arc::new(PsCluster::new(TABLES.to_vec(), 2, 7));
+        cluster.kill_node(0);
+        // rank→row mapping means row 0 (node 0) is the hottest key, so a
+        // short run is guaranteed to hit the dead node
+        let lg = LoadGen::start(cluster, TABLES.to_vec(), 2, 2_000.0, 2, 1.1, 11);
+        std::thread::sleep(Duration::from_millis(150));
+        let report = lg.stop();
+        assert!(report.total_node_down > 0, "dead node never surfaced");
+        // live-node traffic still completed
+        assert!(report.total_requests > 0, "survivors saw no traffic");
+    }
+}

@@ -1,0 +1,95 @@
+//! Online serving plane: the open-loop load generator and its report.
+//!
+//! CPR's setting is a production recommendation model that keeps
+//! *serving* while it trains and while nodes fail (paper §1; Check-N-Run
+//! makes the same coupling explicit — checkpoints exist to feed the
+//! online model). This module drives the read-only
+//! [`crate::cluster::PsServePlane`] the way an inference tier would:
+//! `clients` closed worker threads issue single-sample gathers with
+//! Zipfian key popularity against a fixed open-loop schedule at a target
+//! aggregate QPS, and latency is measured **coordinated-omission-safe**
+//! (from each request's *intended* send time, never re-anchored when the
+//! generator falls behind), so a serving stall shows up in the tail
+//! instead of silently thinning the load.
+//!
+//! Requests are bucketed into the three regimes the paper cares about —
+//! steady training, during checkpoint capture, and across a node failure
+//! + partial recovery — via a regime flag the coordinator flips around
+//! its save and failure blocks. Dead nodes surface as typed
+//! [`crate::cluster::ServeError::NodeDown`] counts per regime, never as
+//! a hang.
+
+pub mod loadgen;
+
+pub use loadgen::LoadGen;
+
+/// Which phase of the training run a serving request landed in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    /// normal training steps
+    Steady = 0,
+    /// a checkpoint capture is in progress (quiesce held by the saver)
+    Capture = 1,
+    /// a failure was injected and partial recovery is running
+    Recovery = 2,
+}
+
+impl Regime {
+    pub const ALL: [Regime; 3] = [Regime::Steady, Regime::Capture, Regime::Recovery];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Regime::Steady => "steady",
+            Regime::Capture => "capture",
+            Regime::Recovery => "recovery",
+        }
+    }
+}
+
+/// Latency summary of one regime's serving traffic (all times in
+/// microseconds of coordinated-omission-safe latency).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RegimeLatency {
+    /// regime name ("steady" | "capture" | "recovery")
+    pub regime: String,
+    /// completed requests recorded in this regime
+    pub requests: u64,
+    /// requests refused with `ServeError::NodeDown` in this regime
+    pub node_down: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    pub mean_us: f64,
+    pub max_us: u64,
+}
+
+/// End-of-run summary of the serving load generator, attached to the
+/// coordinator's `TrainReport` when the `[serving]` block is enabled.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeReport {
+    /// configured aggregate target QPS across all clients
+    pub target_qps: f64,
+    /// number of closed serving worker threads
+    pub clients: usize,
+    /// Zipf skew parameter of the key popularity distribution
+    pub zipf_s: f64,
+    /// wall-clock seconds the generator ran
+    pub wall_secs: f64,
+    /// completed requests across all regimes
+    pub total_requests: u64,
+    /// requests refused with `ServeError::NodeDown` across all regimes
+    pub total_node_down: u64,
+    /// completed requests / wall_secs
+    pub achieved_qps: f64,
+    /// per-regime latency tables, in [`Regime::ALL`] order (regimes with
+    /// zero traffic report zeroed quantiles)
+    pub regimes: Vec<RegimeLatency>,
+}
+
+impl ServeReport {
+    /// The regime row by name, for tests and report printing.
+    pub fn regime(&self, name: &str) -> Option<&RegimeLatency> {
+        self.regimes.iter().find(|r| r.regime == name)
+    }
+}

@@ -104,6 +104,20 @@ impl Histogram {
         if self.total == 0 { 0.0 } else { self.sum / self.total as f64 }
     }
 
+    /// Fold another histogram's samples into this one (identical fixed
+    /// bucket layout, so the merge is a plain per-bucket add). Lets
+    /// serving load-generator clients record into thread-local histograms
+    /// contention-free and combine them once at shutdown.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (dst, &src) in self.counts.iter_mut().zip(&other.counts) {
+            *dst += src;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     /// The q-quantile (q in [0, 1]) to within the bucket resolution,
     /// clamped to the observed [min, max] so small samples report sane
     /// tails (p999 of 3 samples is the max, not a bucket ceiling).
@@ -236,6 +250,37 @@ mod tests {
         assert_eq!(h.max(), 0);
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.quantile(0.99), 0);
+    }
+
+    #[test]
+    fn merge_equals_observing_everything_in_one() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        let mut all = Histogram::default();
+        for v in [3u64, 17, 250, 9_000] {
+            a.observe(v);
+            all.observe(v);
+        }
+        for v in [1u64, 40_000] {
+            b.observe(v);
+            all.observe(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        assert_eq!(a.sum(), all.sum());
+        for q in [0.0, 0.5, 0.95, 0.99, 0.999, 1.0] {
+            assert_eq!(a.quantile(q), all.quantile(q), "q={q}");
+        }
+        // merging an empty histogram is a no-op either direction
+        let before = a.count();
+        a.merge(&Histogram::default());
+        assert_eq!(a.count(), before);
+        let mut empty = Histogram::default();
+        empty.merge(&a);
+        assert_eq!(empty.min(), a.min());
+        assert_eq!(empty.quantile(0.5), a.quantile(0.5));
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Serving-plane acceptance tests (ISSUE 8).
+//!
+//! Two properties anchor the serving plane:
+//!
+//! * **Torn-read safety** — `serve_gather` never returns a row that mixes
+//!   two published states. The property test hammers one node with
+//!   concurrent serving reads while writer threads overwrite the node
+//!   with sentinel patterns (every float of one publication is the same
+//!   value), so any torn read is detectable as a non-uniform row.
+//!   Exercised on both backends: the in-proc seqlock path (where tearing
+//!   is a real hazard the sequence check must catch) and the threaded
+//!   snapshot path (where it holds by construction).
+//! * **Training neutrality** — the load generator is strictly read-only:
+//!   the same job run with serving off and on must produce an IDENTICAL
+//!   `TrainReport` (AUC, logloss, PLS, ledger, loss curve), failures
+//!   included, on both backends.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use cpr::cluster::{PsControlPlane, PsServePlane};
+use cpr::config::{preset, JobConfig, PsBackendKind, Strategy};
+use cpr::coordinator::{run_training, RunOptions, TrainReport};
+use cpr::embedding::{PsCluster, TableInfo};
+use cpr::failure::{uniform_schedule, FailureEvent};
+use cpr::runtime::{ModelExe, Runtime};
+use cpr::util::rng::Rng;
+
+/// Serialize the heavy tests in this binary (each spawns its own thread
+/// pools; overlapping them just adds CI timing noise).
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+// ---------------------------------------------------------------------------
+// torn-read safety (satellite: property test)
+// ---------------------------------------------------------------------------
+
+const ROWS: usize = 64;
+const DIM: usize = 8;
+const N_NODES: usize = 2;
+const TARGET: usize = 1; // the hammered node
+const WRITERS: usize = 2;
+const WRITES_PER_WRITER: usize = 300;
+
+/// Sentinel for writer `w`'s `i`-th publication: every float of the node
+/// is this one value, so a read mixing two publications cannot be
+/// row-uniform.
+fn sentinel(w: usize, i: usize) -> f32 {
+    (w * 10_000 + i + 1) as f32
+}
+
+fn sentinel_state() -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let local_rows = ROWS / N_NODES;
+    (vec![vec![0.0; local_rows * DIM]], vec![vec![0.0; local_rows]])
+}
+
+/// Hammer `TARGET` with sentinel-publishing writers and concurrent
+/// serving readers; every returned row must be uniform (untorn) and, once
+/// the first sentinel is published, a known sentinel value.
+fn hammer<C>(cluster: Arc<C>, tag: &str)
+where
+    C: PsControlPlane + PsServePlane + 'static,
+{
+    // publish an initial sentinel so readers never see the (non-uniform)
+    // deterministic init values
+    let (mut shards, opt) = sentinel_state();
+    shards[0].fill(sentinel(0, 0));
+    cluster.load_node(TARGET, &shards, &opt);
+    cluster.publish_serve_view();
+
+    let done = Arc::new(AtomicBool::new(false));
+    let writers: Vec<_> = (0..WRITERS)
+        .map(|w| {
+            let cluster = Arc::clone(&cluster);
+            std::thread::spawn(move || {
+                let (mut shards, opt) = sentinel_state();
+                for i in 0..WRITES_PER_WRITER {
+                    shards[0].fill(sentinel(w, i));
+                    cluster.load_node(TARGET, &shards, &opt);
+                    if i % 16 == 0 {
+                        cluster.publish_serve_view();
+                    }
+                }
+            })
+        })
+        .collect();
+    let readers: Vec<_> = (0..2)
+        .map(|r| {
+            let cluster = Arc::clone(&cluster);
+            let done = Arc::clone(&done);
+            let tag = tag.to_string();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0xC0FFEE ^ r as u64);
+                let mut out = vec![0.0f32; DIM];
+                let mut reads = 0u64;
+                while !done.load(Ordering::Acquire) {
+                    // any global row owned by TARGET under r % n routing
+                    let local = rng.next_u64() as usize % (ROWS / N_NODES);
+                    let row = (local * N_NODES + TARGET) as u32;
+                    cluster
+                        .serve_gather(&[row], &mut out)
+                        .expect("no node dies in this test");
+                    let first = out[0];
+                    assert!(
+                        out.iter().all(|&v| v == first),
+                        "{tag}: torn read on row {row}: {out:?}"
+                    );
+                    // uniform AND a value some writer actually published
+                    let s = first as usize;
+                    assert!(
+                        s >= 1 && s <= WRITERS * 10_000 + WRITES_PER_WRITER,
+                        "{tag}: row {row} holds non-sentinel value {first}"
+                    );
+                    reads += 1;
+                }
+                reads
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().expect("writer panicked");
+    }
+    // let the readers observe the final published state too
+    cluster.publish_serve_view();
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    done.store(true, Ordering::Release);
+    for r in readers {
+        let reads = r.join().expect("reader panicked (torn read?)");
+        assert!(reads > 0, "{tag}: reader never completed a read");
+    }
+}
+
+#[test]
+fn serve_reads_are_never_torn_inproc() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let tables = vec![TableInfo { rows: ROWS, dim: DIM }];
+    hammer(Arc::new(PsCluster::new(tables, N_NODES, 5)), "inproc");
+}
+
+#[test]
+fn serve_reads_are_never_torn_threaded() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let tables = vec![TableInfo { rows: ROWS, dim: DIM }];
+    hammer(
+        Arc::new(cpr::cluster::ThreadedCluster::new(tables, N_NODES, 5)),
+        "threaded",
+    );
+}
+
+// ---------------------------------------------------------------------------
+// training neutrality: serving on vs off
+// ---------------------------------------------------------------------------
+
+fn load_model(preset_name: &str) -> ModelExe {
+    Runtime::cpu()
+        .expect("runtime")
+        .load_model("artifacts", preset_name)
+        .expect("loading model")
+}
+
+thread_local! {
+    static MINI: std::cell::OnceCell<ModelExe> = const { std::cell::OnceCell::new() };
+}
+
+fn with_mini<R>(f: impl FnOnce(&ModelExe) -> R) -> R {
+    MINI.with(|cell| f(cell.get_or_init(|| load_model("mini"))))
+}
+
+fn test_cfg(strategy: Strategy) -> JobConfig {
+    let mut cfg = preset("mini").unwrap();
+    cfg.data.train_samples = 38_400; // 300 steps
+    cfg.data.eval_samples = 12_800;
+    cfg.checkpoint.strategy = strategy;
+    cfg
+}
+
+fn sched(seed: u64, n: usize, victims: usize, t_total: f64, n_nodes: usize)
+         -> Vec<FailureEvent> {
+    let mut rng = Rng::new(seed);
+    uniform_schedule(&mut rng, n, t_total, n_nodes, victims)
+}
+
+fn run(cfg: &JobConfig, schedule: Vec<FailureEvent>) -> TrainReport {
+    with_mini(|model| {
+        run_training(model, cfg, &RunOptions { schedule, ..Default::default() })
+    })
+    .expect("training run")
+}
+
+fn assert_reports_identical(off: &TrainReport, on: &TrainReport, tag: &str) {
+    assert_eq!(off.final_auc, on.final_auc, "{tag}: AUC diverged");
+    assert_eq!(off.final_logloss, on.final_logloss, "{tag}: logloss diverged");
+    assert_eq!(off.pls, on.pls, "{tag}: PLS diverged");
+    assert_eq!(off.steps_executed, on.steps_executed, "{tag}: steps diverged");
+    assert_eq!(off.failures_seen, on.failures_seen, "{tag}");
+    assert_eq!(off.ledger, on.ledger, "{tag}: overhead ledger diverged");
+    assert_eq!(off.train_loss.points, on.train_loss.points,
+               "{tag}: loss curve diverged");
+}
+
+#[test]
+fn serving_is_bit_neutral_on_both_backends() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    for backend in [PsBackendKind::InProc, PsBackendKind::Threaded] {
+        let mut cfg = test_cfg(Strategy::CprMfu);
+        cfg.cluster.backend = backend;
+        let n = cfg.cluster.n_emb_ps;
+        let schedule = sched(23, 3, 2, cfg.cluster.t_total_h, n);
+
+        let off = run(&cfg, schedule.clone());
+        assert!(off.serving.is_none(), "serving report without serving?");
+        cfg.serving.enabled = true;
+        cfg.serving.qps = 50_000.0;
+        cfg.serving.clients = 2;
+        let on = run(&cfg, schedule);
+
+        assert_eq!(off.failures_seen, 3);
+        assert_reports_identical(&off, &on, backend.name());
+        let serve = on.serving.expect("serving report missing");
+        assert!(serve.total_requests > 0,
+                "{}: load generator issued no requests", backend.name());
+        let steady = serve.regime("steady").expect("steady regime row");
+        assert!(steady.requests > 0, "{}: no steady traffic", backend.name());
+    }
+}

@@ -508,8 +508,64 @@ fn serve_qps_backend<B: PsBackend + 'static>(
              on as f64 * slots_per_write as f64 / run_s);
 }
 
+/// Micro-guard for the PR 9 storage swap: one seqlock-validated row copy
+/// through `AtomicF32s` (the shipping read path — Relaxed per-word atomic
+/// loads + bitcast) against the pre-refactor per-float volatile-copy
+/// loop over a plain `Vec<f32>`. Single-threaded and writer-free, so the
+/// delta is the pure per-word instruction cost of the swap; the
+/// `serve_qps`/`serve_contention` rows above cover the contended end.
+fn serve_row_read_guard(quick: bool) {
+    use cpr::cluster::{AtomicF32s, SeqLock};
+    let dim = 16usize;
+    let rows = 4096usize;
+    let iters: u64 = if quick { 50_000 } else { 2_000_000 };
+    let init: Vec<f32> = (0..rows * dim).map(|i| (i % 997) as f32 * 0.5).collect();
+    let mut dst = vec![0.0f32; dim];
+    let mut sink = 0.0f32;
+
+    let words = AtomicF32s::from_f32s(&init);
+    let lock = SeqLock::new();
+    let t0 = std::time::Instant::now();
+    for i in 0..iters {
+        let off = (i as usize % rows) * dim;
+        lock.read(|| words.load_into(off, &mut dst), || false)
+            .expect("unkilled seqlock read");
+        sink += dst[0];
+    }
+    let atomic_secs = t0.elapsed().as_secs_f64();
+    record_external("serve_row_read[seqlock=atomic]", atomic_secs,
+                    iters * dim as u64);
+
+    // Pre-refactor baseline. The buffer is owned and unaliased here (no
+    // concurrent writer exists in this loop), so the volatile reads are
+    // sound: this measures the instruction sequence the old serving path
+    // paid, not its (data-racing, since-removed) production behavior.
+    // This file is the invariant lint's sole allowlisted non-src home of
+    // `unsafe`/`read_volatile` for exactly this labeled baseline.
+    let plain = init.clone();
+    let t0 = std::time::Instant::now();
+    for i in 0..iters {
+        let off = (i as usize % rows) * dim;
+        for (d, slot) in dst.iter_mut().enumerate() {
+            // SAFETY: `plain` outlives the loop and `off + d` is in
+            // bounds (`off < rows*dim`, `d < dim`, buffer is rows*dim);
+            // no other thread aliases the buffer.
+            *slot = unsafe { std::ptr::read_volatile(plain.as_ptr().add(off + d)) };
+        }
+        sink += dst[0];
+    }
+    let volatile_secs = t0.elapsed().as_secs_f64();
+    record_external("serve_row_read[seqlock=volatile-baseline]", volatile_secs,
+                    iters * dim as u64);
+    println!("  serve_row_read: atomic {:.1}M f32/s vs volatile baseline \
+              {:.1}M f32/s  (sink {sink:.0})",
+             iters as f64 * dim as f64 / atomic_secs / 1e6,
+             iters as f64 * dim as f64 / volatile_secs / 1e6);
+}
+
 fn serve_qps(quick: bool) {
     println!("\n-- serve_qps: read-only serving plane under live training writes --");
+    serve_row_read_guard(quick);
     let dim = 16usize;
     let tables: Vec<TableInfo> =
         (0..4).map(|_| TableInfo { rows: 65_536, dim }).collect();

@@ -20,6 +20,12 @@
 //! Crash-consistency rule (see [`super::disk`]): a checkpoint is only
 //! *published* after the writer thread fsyncs the data file and then the
 //! `LATEST` manifest; an interrupted save can never be observed.
+//!
+//! Quiesce contract: the synchronous captures (`snapshot_node`) and the
+//! restore replies (`load_node`) run on the coordinator thread at a step
+//! barrier, trainers parked behind the coordinator's
+//! [`crate::cluster::PsQuiesce`] token; only the mirror application and
+//! disk IO overlap training. The writer thread never touches the cluster.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};

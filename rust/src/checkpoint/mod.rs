@@ -15,6 +15,13 @@
 //! runtimes (checkpoints taken on one restore onto the other — row routing
 //! is part of the trait contract).
 //!
+//! Quiesce contract: every control-plane call issued here (`snapshot_node`
+//! for capture, `load_node` for restore) runs from coordinator code at a
+//! step barrier, with the trainers parked behind the coordinator's
+//! [`crate::cluster::PsQuiesce`] token — captures are consistency points,
+//! never mid-batch tearings. The `invariant-lint` workspace tool enforces
+//! that files making these calls document this contract.
+//!
 //! ## Sharded mirror + dirty tracking
 //!
 //! The mirror is a vector of per-node [`ShardState`] units — the same
@@ -663,13 +670,25 @@ pub(crate) fn w64<W: Write>(w: &mut W, v: u64) -> Result<()> {
     Ok(w.write_all(&v.to_le_bytes())?)
 }
 
+/// f32 count per stack chunk of [`wf32s`]/[`rf32s`] (4 KiB of bytes):
+/// big enough to amortize the `Write`/`Read` call, small enough to stay
+/// comfortably on the stack.
+const F32_IO_CHUNK: usize = 1024;
+
 pub(crate) fn wf32s<W: Write>(w: &mut W, v: &[f32]) -> Result<()> {
-    // SAFETY: f32 slice reinterpreted as bytes (little-endian hosts only,
-    // which is all this image targets)
-    let bytes = unsafe {
-        std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-    };
-    Ok(w.write_all(bytes)?)
+    // Explicit little-endian serialization in fixed stack chunks. This
+    // replaced a `from_raw_parts` byte reinterpretation (PR 9): no
+    // unsafe, the on-disk format is now explicitly LE on every host, and
+    // the bytes written are identical on the LE hosts the old cast
+    // targeted — golden checkpoint digests are unchanged.
+    let mut buf = [0u8; F32_IO_CHUNK * 4];
+    for chunk in v.chunks(F32_IO_CHUNK) {
+        for (i, x) in chunk.iter().enumerate() {
+            buf[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf[..chunk.len() * 4])?;
+    }
+    Ok(())
 }
 
 pub(crate) fn r32<R: Read>(r: &mut R) -> Result<u32> {
@@ -685,11 +704,19 @@ pub(crate) fn r64<R: Read>(r: &mut R) -> Result<u64> {
 }
 
 pub(crate) fn rf32s<R: Read>(r: &mut R, len: usize) -> Result<Vec<f32>> {
-    let mut v = vec![0f32; len];
-    let bytes = unsafe {
-        std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, len * 4)
-    };
-    r.read_exact(bytes)?;
+    // mirror of `wf32s`: chunked explicit-LE decode, no byte cast
+    let mut v = Vec::with_capacity(len);
+    let mut buf = [0u8; F32_IO_CHUNK * 4];
+    let mut remaining = len;
+    while remaining > 0 {
+        let n = remaining.min(F32_IO_CHUNK);
+        r.read_exact(&mut buf[..n * 4])?;
+        for i in 0..n {
+            let b = [buf[i * 4], buf[i * 4 + 1], buf[i * 4 + 2], buf[i * 4 + 3]];
+            v.push(f32::from_le_bytes(b));
+        }
+        remaining -= n;
+    }
     Ok(v)
 }
 
@@ -700,6 +727,27 @@ mod tests {
     use crate::embedding::{PsCluster, TableInfo};
     use crate::prop_assert;
     use crate::testing::{forall, gen};
+
+    #[test]
+    fn f32_bytes_roundtrip_exact() {
+        // crosses the F32_IO_CHUNK boundary and covers non-finite bit
+        // patterns; also runs under the Miri CI lane (pure in-memory IO)
+        let vals: Vec<f32> = [0.0f32, -0.0, 1.5, f32::NAN, f32::INFINITY,
+                              f32::NEG_INFINITY, f32::MIN_POSITIVE, -3.25e-7]
+            .into_iter()
+            .chain((0..3000).map(|i| i as f32 * 0.37 - 55.0))
+            .collect();
+        let mut bytes = Vec::new();
+        wf32s(&mut bytes, &vals).unwrap();
+        assert_eq!(bytes.len(), vals.len() * 4);
+        // the format is explicitly little-endian on every host
+        assert_eq!(&bytes[..4], &vals[0].to_le_bytes());
+        assert_eq!(&bytes[8..12], &1.5f32.to_le_bytes());
+        let back = rf32s(&mut bytes.as_slice(), vals.len()).unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
 
     fn cluster() -> PsCluster {
         PsCluster::new(

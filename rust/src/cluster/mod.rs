@@ -43,9 +43,13 @@
 //! `JobConfig` / `--backend inproc|threaded`.
 
 pub mod lock;
+#[cfg(feature = "loom")]
+pub mod models;
+pub mod seqlock;
 pub mod sharded;
 pub mod threaded;
 
+pub use seqlock::{AtomicF32s, SeqLock};
 pub use sharded::{PsQuiesce, ShardedPs, Turnstile};
 pub use threaded::ThreadedCluster;
 

@@ -1,0 +1,388 @@
+//! [`SeqLock`] + [`AtomicF32s`] — the serving plane's guard-free read
+//! protocol over racing embedding storage, with **no data-race UB**.
+//!
+//! PR 8 implemented this protocol inside `embedding/mod.rs` with
+//! `ptr::read_volatile` over `&`-reachable floats. That is *observably*
+//! correct (the sequence validation discards every torn copy) but it is
+//! still a data race — and therefore undefined behavior — under the Rust
+//! memory model: volatile is an I/O primitive, not a synchronization
+//! primitive, and Miri/TSan rightly flag it. This module fixes the class
+//! at its root:
+//!
+//! * the racing payload is [`AtomicU32`]-per-word ([`AtomicF32s`],
+//!   bitcast to/from `f32` — exact, `to_bits`/`from_bits` round-trip
+//!   every bit pattern including NaNs), so concurrent reads and writes
+//!   are *defined* (relaxed atomics), and
+//! * the [`SeqLock`] sequence protocol orders them: a reader's copy only
+//!   escapes when two loads of the sequence counter bracket it with the
+//!   same even value, with the writer's `Release` bump ordering the word
+//!   stores against the counter.
+//!
+//! The protocol itself is bit-for-bit the PR 8 one (same parity-safe
+//! bump, same spin budget, same `NodeDown` semantics):
+//!
+//! * **writer** (already mutually excluded by the node's write guard):
+//!   [`SeqLock::write_begin`] makes the counter odd — `s + 1` from even,
+//!   `s + 2` from odd, so a counter left odd by a writer that *panicked*
+//!   mid-update still CHANGES and no stale reader can ever validate
+//!   against the new epoch — then [`SeqLock::write_end`] republishes an
+//!   even value with `Release` ordering;
+//! * **reader**: [`SeqLock::read`] snapshots the payload between two
+//!   counter loads, retries on any mismatch or odd value, and converts a
+//!   stuck-odd counter (dead writer) or a cleared liveness flag into a
+//!   typed [`SeqLockDown`] after each [`SPIN_CHECK_INTERVAL`] retries
+//!   instead of spinning forever.
+//!
+//! Model coverage: the interleaving-level properties (no torn read ever
+//! escapes; stuck-odd always yields `SeqLockDown`) are exhaustively
+//! checked by `cluster::models::seqlock` under `--features loom`; the
+//! memory-ordering level (these fences, on the real code) is covered by
+//! the Miri and TSan CI lanes. This file contains **zero** `unsafe`.
+
+use std::sync::atomic::{fence, AtomicBool, AtomicU32, AtomicU64, Ordering};
+
+/// Retries between dead-node polls in [`SeqLock::read`]: the reader
+/// spin-waits this many attempts on the fast path before paying the
+/// (mutex-guarded) `is_dead` check and a scheduler yield.
+pub const SPIN_CHECK_INTERVAL: u64 = 128;
+
+/// Typed failure of [`SeqLock::read`]: the instance was (or became) dead
+/// — killed via [`SeqLock::set_alive`] or stuck odd with the caller's
+/// `dead` probe confirming the writer died. The cluster layer maps this
+/// to `ServeError::NodeDown`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeqLockDown;
+
+/// Sequence counter + liveness flag for one seqlock-protected node.
+///
+/// The payload is *not* owned by the lock: callers pair one `SeqLock`
+/// with whatever [`AtomicF32s`] (or other always-shareable) storage the
+/// epoch protects, which is what lets one per-node `SeqLock` cover every
+/// table shard of that node.
+#[derive(Debug)]
+pub struct SeqLock {
+    seq: AtomicU64,
+    /// `false` between an injected kill and the matching respawn. A
+    /// writer *panic* does not clear this (nobody is left to), which is
+    /// why [`SeqLock::read`] also polls the caller's `dead` probe once
+    /// its spin budget runs out.
+    alive: AtomicBool,
+}
+
+impl Default for SeqLock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SeqLock {
+    /// A live lock at sequence 0 (even: readers may validate immediately).
+    pub fn new() -> Self {
+        Self { seq: AtomicU64::new(0), alive: AtomicBool::new(true) }
+    }
+
+    /// Writer entry. The caller must hold whatever exclusion serializes
+    /// writers (the node's write guard, or dead-node exclusivity during
+    /// revive) — writers are mutually excluded, so a plain load/store
+    /// pair is enough.
+    #[inline]
+    pub fn write_begin(&self) {
+        let s = self.seq.load(Ordering::Relaxed);
+        // s even (normal) → s+1, odd; s odd (residue of a writer that
+        // panicked mid-update and never reached `write_end`) → s+2:
+        // still odd but CHANGED, so a reader that snapshotted before the
+        // death can never validate against the new epoch.
+        self.seq.store(s.wrapping_add(1 + (s & 1)), Ordering::Relaxed);
+        fence(Ordering::Release);
+    }
+
+    /// Writer exit: republish an even sequence. Not reached when the
+    /// writer panics — the residue case `write_begin` and the reader's
+    /// dead-probe fallback handle.
+    #[inline]
+    pub fn write_end(&self) {
+        let s = self.seq.load(Ordering::Relaxed);
+        self.seq.store(s.wrapping_add(1), Ordering::Release);
+    }
+
+    /// Flip the fast-path liveness flag (kill: `false`, respawn: `true`).
+    #[inline]
+    pub fn set_alive(&self, alive: bool) {
+        self.alive.store(alive, Ordering::Release);
+    }
+
+    #[inline]
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Acquire)
+    }
+
+    /// Current raw sequence value (tests/diagnostics only).
+    pub fn raw_seq(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// One validated read: run `copy` (which must re-read the protected
+    /// payload into caller storage each call — it may run several times,
+    /// and all but the last run may observe torn state, which is fine
+    /// *because the payload is atomic* and the result is discarded) until
+    /// a pass is bracketed by two identical even sequence values. Returns
+    /// the retries paid, or [`SeqLockDown`] once the lock is not alive or
+    /// the caller's `dead` probe reports the writer gone while the
+    /// sequence is unvalidatable.
+    pub fn read(
+        &self,
+        mut copy: impl FnMut(),
+        dead: impl Fn() -> bool,
+    ) -> Result<u64, SeqLockDown> {
+        if !self.is_alive() {
+            return Err(SeqLockDown);
+        }
+        let mut retries = 0u64;
+        loop {
+            let s1 = self.seq.load(Ordering::Acquire);
+            if s1 & 1 == 0 {
+                copy();
+                fence(Ordering::Acquire);
+                if self.seq.load(Ordering::Relaxed) == s1 {
+                    return Ok(retries);
+                }
+            }
+            retries += 1;
+            if retries % SPIN_CHECK_INTERVAL == 0 {
+                // Spin budget exhausted: either a writer died mid-update
+                // (sequence stuck odd, node poisoned → dead) or the node
+                // was killed between our liveness check and now. Surface
+                // the typed error rather than spinning forever.
+                if dead() || !self.is_alive() {
+                    return Err(SeqLockDown);
+                }
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+}
+
+/// A fixed-length `f32` buffer whose every word is an [`AtomicU32`]
+/// (bitcast with `to_bits`/`from_bits`, which round-trips every bit
+/// pattern exactly — goldens stay bit-identical).
+///
+/// All accesses are `Relaxed`: this type provides race-*freedom*, not
+/// ordering. Callers get consistency either from a surrounding
+/// [`SeqLock`] epoch (serving reads) or from lock acquire/release edges
+/// (data-plane reads under a `NodeLock` guard happen-after the writer's
+/// guard release).
+///
+/// The buffer never reallocates — only interior stores — so in-flight
+/// guard-free readers stay valid across `load/reset/respawn` refills,
+/// which is the pointer-stability contract `NodeLock::revive_with`
+/// used to carry for the volatile path.
+#[derive(Debug)]
+pub struct AtomicF32s {
+    words: Box<[AtomicU32]>,
+}
+
+impl AtomicF32s {
+    /// An atomic copy of `src`.
+    pub fn from_f32s(src: &[f32]) -> Self {
+        Self { words: src.iter().map(|v| AtomicU32::new(v.to_bits())).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        f32::from_bits(self.words[i].load(Ordering::Relaxed))
+    }
+
+    #[inline]
+    pub fn set(&self, i: usize, v: f32) {
+        self.words[i].store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Copy `dst.len()` words starting at `offset` into `dst`. Panics if
+    /// the range is out of bounds (same contract as slice indexing — the
+    /// cluster's OOB-row poison tests rely on it).
+    #[inline]
+    pub fn load_into(&self, offset: usize, dst: &mut [f32]) {
+        let words = &self.words[offset..offset + dst.len()];
+        for (d, w) in dst.iter_mut().zip(words) {
+            *d = f32::from_bits(w.load(Ordering::Relaxed));
+        }
+    }
+
+    /// `dst[i] += self[offset + i]` — the sum-pooling accumulate step.
+    #[inline]
+    pub fn add_into(&self, offset: usize, dst: &mut [f32]) {
+        let words = &self.words[offset..offset + dst.len()];
+        for (d, w) in dst.iter_mut().zip(words) {
+            *d += f32::from_bits(w.load(Ordering::Relaxed));
+        }
+    }
+
+    /// Store `src` into the words starting at `offset`. Panics on OOB.
+    #[inline]
+    pub fn store_from(&self, offset: usize, src: &[f32]) {
+        let words = &self.words[offset..offset + src.len()];
+        for (w, v) in words.iter().zip(src) {
+            w.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Whole-buffer refill (load/reset/respawn paths). Panics unless
+    /// `src.len()` matches exactly.
+    pub fn copy_from(&self, src: &[f32]) {
+        assert_eq!(src.len(), self.words.len(), "refill length mismatch");
+        self.store_from(0, src);
+    }
+
+    /// Plain-`Vec` copy of the whole buffer (checkpoint/test inspection).
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.words.iter().map(|w| f32::from_bits(w.load(Ordering::Relaxed))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn bitcast_roundtrip_is_exact() {
+        let vals = [0.0f32, -0.0, 1.5, -3.25e-7, f32::MAX, f32::MIN_POSITIVE,
+                    f32::INFINITY, f32::NEG_INFINITY, f32::NAN];
+        let a = AtomicF32s::from_f32s(&vals);
+        for (i, v) in vals.iter().enumerate() {
+            assert_eq!(a.get(i).to_bits(), v.to_bits(), "word {i}");
+        }
+        let back = a.to_vec();
+        for (b, v) in back.iter().zip(&vals) {
+            assert_eq!(b.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn load_store_windows() {
+        let a = AtomicF32s::from_f32s(&[0.0; 8]);
+        a.store_from(2, &[1.0, 2.0, 3.0]);
+        let mut out = [0.0f32; 3];
+        a.load_into(2, &mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+        let mut acc = [10.0f32; 3];
+        a.add_into(2, &mut acc);
+        assert_eq!(acc, [11.0, 12.0, 13.0]);
+        assert_eq!(a.get(0), 0.0);
+        a.set(0, 9.0);
+        assert_eq!(a.to_vec(), vec![9.0, 0.0, 1.0, 2.0, 3.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn load_into_out_of_bounds_panics() {
+        let a = AtomicF32s::from_f32s(&[0.0; 4]);
+        let mut out = [0.0f32; 2];
+        a.load_into(3, &mut out);
+    }
+
+    #[test]
+    fn uncontended_read_validates_first_try() {
+        let sl = SeqLock::new();
+        let data = AtomicF32s::from_f32s(&[4.0, 5.0]);
+        let mut out = [0.0f32; 2];
+        let retries = sl.read(|| data.load_into(0, &mut out), || false).unwrap();
+        assert_eq!(retries, 0);
+        assert_eq!(out, [4.0, 5.0]);
+    }
+
+    #[test]
+    fn write_epoch_forces_retry_then_validates() {
+        let sl = SeqLock::new();
+        // an in-progress write (odd seq) keeps the reader retrying;
+        // closing the epoch lets the next pass validate
+        sl.write_begin();
+        assert_eq!(sl.raw_seq() & 1, 1);
+        sl.write_end();
+        assert_eq!(sl.raw_seq() & 1, 0);
+        let mut copies = 0u32;
+        let retries = sl.read(|| copies += 1, || false).unwrap();
+        assert_eq!((retries, copies), (0, 1));
+    }
+
+    #[test]
+    fn stuck_odd_sequence_reports_down_once_dead() {
+        let sl = SeqLock::new();
+        sl.write_begin(); // writer "dies" here: seq stuck odd
+        let mut copies = 0u32;
+        let err = sl.read(|| copies += 1, || true).unwrap_err();
+        assert_eq!(err, SeqLockDown);
+        assert_eq!(copies, 0, "no copy may escape an odd epoch");
+    }
+
+    #[test]
+    fn begin_from_odd_still_changes_the_epoch() {
+        let sl = SeqLock::new();
+        sl.write_begin();
+        let stuck = sl.raw_seq();
+        sl.write_begin(); // parity-safe bump: +2 from odd
+        assert_eq!(sl.raw_seq(), stuck + 2);
+        assert_eq!(sl.raw_seq() & 1, 1);
+        sl.write_end();
+        assert_eq!(sl.raw_seq() & 1, 0);
+    }
+
+    #[test]
+    fn not_alive_fails_fast() {
+        let sl = SeqLock::new();
+        sl.set_alive(false);
+        assert!(!sl.is_alive());
+        let err = sl.read(|| panic!("must not copy"), || false).unwrap_err();
+        assert_eq!(err, SeqLockDown);
+        sl.set_alive(true);
+        assert!(sl.read(|| {}, || false).is_ok());
+    }
+
+    /// Concurrent hammer: sentinel-pattern writers vs readers — every
+    /// escaped copy must be uniform. Also runs under the Miri CI lane
+    /// (iterations shrunk there: interleaving exploration is loom's job,
+    /// Miri's is the memory model).
+    #[test]
+    fn concurrent_reads_are_never_torn() {
+        let writes: usize = if cfg!(miri) { 40 } else { 2_000 };
+        let sl = Arc::new(SeqLock::new());
+        let data = Arc::new(AtomicF32s::from_f32s(&[0.0; 8]));
+        let stop = Arc::new(AtomicBool::new(false));
+        std::thread::scope(|s| {
+            {
+                let (sl, data, stop) = (sl.clone(), data.clone(), stop.clone());
+                s.spawn(move || {
+                    for i in 1..=writes {
+                        sl.write_begin();
+                        data.copy_from(&[i as f32; 8]);
+                        sl.write_end();
+                    }
+                    stop.store(true, Ordering::Release);
+                });
+            }
+            for _ in 0..2 {
+                let (sl, data, stop) = (sl.clone(), data.clone(), stop.clone());
+                s.spawn(move || {
+                    let mut out = [0.0f32; 8];
+                    while !stop.load(Ordering::Acquire) {
+                        sl.read(|| data.load_into(0, &mut out), || false).unwrap();
+                        let first = out[0];
+                        assert!(out.iter().all(|&v| v == first),
+                                "torn read escaped validation: {out:?}");
+                    }
+                });
+            }
+        });
+        assert_eq!(data.get(0), writes as f32);
+    }
+}

@@ -14,7 +14,12 @@
 //! different nodes land on different worker threads and proceed in
 //! parallel; requests to the same node serialize in that node's queue.
 //! A trainer panic cannot corrupt a worker (state never leaves the worker
-//! thread), so poison-conversion only concerns the in-process backend.
+//! thread). A panic *inside* a worker (e.g. a malformed request indexing
+//! out of bounds) unwinds only that worker's thread: the wrapper in
+//! [`ThreadedCluster::spawn`] raises the node's `panicked` flag as the
+//! unwind escapes, which [`PsServePlane::serve_gather`] and `alive()`
+//! convert to [`ServeError::NodeDown`] — the threaded backend's analogue
+//! of the in-process backend's poison→KILL conversion.
 //!
 //! Failure injection is real here: [`super::PsControlPlane::kill_node`]
 //! sends `Kill` and joins the worker — its state is gone, exactly like a
@@ -23,6 +28,8 @@
 //! the partial recovery protocol (coordinator + checkpoint pipeline)
 //! restores its rows from the last checkpoint.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex, PoisonError, RwLock};
 use std::thread::JoinHandle;
@@ -87,6 +94,13 @@ pub struct ThreadedCluster {
     /// bounded by one step. `None` = the node is dead ⇒
     /// [`ServeError::NodeDown`].
     serve_views: Vec<RwLock<Option<Arc<Vec<Vec<f32>>>>>>,
+    /// Per-node worker-crash flags, raised by the worker thread itself as
+    /// a panic unwinds off its loop (see [`Self::spawn`]). Serving checks
+    /// the flag before trusting a published view and `alive()` folds it
+    /// in, so a crashed worker reads as a dead node (`NodeDown`) instead
+    /// of silently serving the stale last-published snapshot forever.
+    /// Cleared by `respawn_node`.
+    panicked: Vec<Arc<AtomicBool>>,
     stats: StatCounters,
 }
 
@@ -164,8 +178,18 @@ fn worker_loop(
 impl ThreadedCluster {
     pub fn new(tables: Vec<TableInfo>, n_nodes: usize, seed: u64) -> Self {
         assert!(n_nodes >= 1);
+        let panicked: Vec<Arc<AtomicBool>> =
+            (0..n_nodes).map(|_| Arc::new(AtomicBool::new(false))).collect();
         let workers = (0..n_nodes)
-            .map(|node_id| Mutex::new(Some(Self::spawn(&tables, n_nodes, node_id, seed))))
+            .map(|node_id| {
+                Mutex::new(Some(Self::spawn(
+                    &tables,
+                    n_nodes,
+                    node_id,
+                    seed,
+                    Arc::clone(&panicked[node_id]),
+                )))
+            })
             .collect();
         let serve_views = (0..n_nodes)
             .map(|node_id| {
@@ -173,15 +197,43 @@ impl ThreadedCluster {
                 RwLock::new(Some(Arc::new(shards)))
             })
             .collect();
-        Self { tables, n_nodes, seed, workers, serve_views, stats: StatCounters::default() }
+        Self {
+            tables,
+            n_nodes,
+            seed,
+            workers,
+            serve_views,
+            panicked,
+            stats: StatCounters::default(),
+        }
     }
 
-    fn spawn(tables: &[TableInfo], n_nodes: usize, node_id: usize, seed: u64) -> Worker {
+    fn spawn(
+        tables: &[TableInfo],
+        n_nodes: usize,
+        node_id: usize,
+        seed: u64,
+        panicked: Arc<AtomicBool>,
+    ) -> Worker {
         let (tx, rx) = mpsc::channel();
         let tables = tables.to_vec();
         let join = std::thread::Builder::new()
             .name(format!("emb-ps-{node_id}"))
-            .spawn(move || worker_loop(node_id, tables, n_nodes, seed, rx))
+            .spawn(move || {
+                // worker_loop owns only this node's state and channel ends,
+                // all of which die with the thread, so observing them after
+                // a caught unwind is fine (AssertUnwindSafe); the flag must
+                // be raised BEFORE the unwind continues so serving can
+                // never observe "thread gone, flag clear" — the Release
+                // pairs with the Acquire loads in serve_gather/alive.
+                let run = catch_unwind(AssertUnwindSafe(|| {
+                    worker_loop(node_id, tables, n_nodes, seed, rx)
+                }));
+                if let Err(payload) = run {
+                    panicked.store(true, Ordering::Release);
+                    resume_unwind(payload);
+                }
+            })
             .expect("spawning Emb PS worker");
         Worker { tx, join }
     }
@@ -193,7 +245,7 @@ impl ThreadedCluster {
     }
 
     pub fn alive(&self, node: usize) -> bool {
-        self.slot(node).is_some()
+        self.slot(node).is_some() && !self.panicked[node].load(Ordering::Acquire)
     }
 
     /// Clone the node's request sender (cheap: an `Arc` bump) so routing
@@ -474,7 +526,16 @@ impl PsControlPlane for ThreadedCluster {
         self.stats.bump_respawn();
         let mut slot = self.slot(node);
         assert!(slot.is_none(), "node {node} is already alive");
-        *slot = Some(Self::spawn(&self.tables, self.n_nodes, node, self.seed));
+        // clear the crash flag before the replacement goes live: the old
+        // worker is joined (kill_node), so no stale store can race this
+        self.panicked[node].store(false, Ordering::Release);
+        *slot = Some(Self::spawn(
+            &self.tables,
+            self.n_nodes,
+            node,
+            self.seed,
+            Arc::clone(&self.panicked[node]),
+        ));
         drop(slot);
         self.set_serve_view_init(node);
     }
@@ -498,6 +559,13 @@ impl PsServePlane for ThreadedCluster {
             let tab = slot % t;
             let (node, local) = route_row(row as usize, self.n_nodes);
             if views[node].is_none() {
+                // a crashed worker never unpublishes its view (kill_node
+                // does that for orderly kills) — fold the panic flag in so
+                // a crashed node fails fast instead of serving its stale
+                // last-published snapshot forever
+                if self.panicked[node].load(Ordering::Acquire) {
+                    return Err(ServeError::NodeDown { node });
+                }
                 let g = self.serve_views[node]
                     .read()
                     .unwrap_or_else(PoisonError::into_inner);
@@ -520,19 +588,22 @@ impl PsServePlane for ThreadedCluster {
     /// request finishes — no reader ever observes a half-swapped view.
     fn publish_serve_view(&self) {
         let (reply_tx, reply_rx) = mpsc::channel();
-        let mut expected = 0usize;
         for node in 0..self.n_nodes {
+            if self.panicked[node].load(Ordering::Acquire) {
+                continue; // crashed worker: serving already fails NodeDown
+            }
             let tx = match &*self.slot(node) {
                 Some(w) => w.tx.clone(),
                 None => continue,
             };
-            expected += 1;
-            tx.send(NodeMsg::ServeView { reply: reply_tx.clone() })
-                .expect("Emb PS worker hung up");
+            // a worker may crash between the flag check and this send (or
+            // while holding the request) — both simply mean fewer replies,
+            // which the drain below tolerates; the raised flag converts
+            // subsequent serving to NodeDown
+            let _ = tx.send(NodeMsg::ServeView { reply: reply_tx.clone() });
         }
         drop(reply_tx);
-        for _ in 0..expected {
-            let (node, shards) = reply_rx.recv().expect("Emb PS worker died mid-publish");
+        while let Ok((node, shards)) = reply_rx.recv() {
             self.set_serve_view(node, Some(Arc::new(shards)));
         }
     }
@@ -754,6 +825,45 @@ mod tests {
         c.serve_gather(&idx, &mut out).unwrap();
         c.gather_pooled(&idx, 1, &mut want);
         assert_eq!(out, want, "restored view must match live state");
+    }
+
+    #[test]
+    fn worker_panic_reads_as_dead_and_respawn_recovers() {
+        let c = ThreadedCluster::new(TABLES.to_vec(), 3, 7);
+        // row 4000 routes to node 1 (4000 % 3 == 1) at local 1333 — far
+        // outside every table's shard, so the worker panics mid-apply;
+        // the router observes the loss as a recv failure (its own panic)
+        let bad = vec![4000u32, 4000];
+        let routed = std::thread::scope(|s| {
+            s.spawn(|| c.apply_grads(&bad, 1, &[0.0f32; 8], 1.0, EmbOptimizer::Sgd))
+                .join()
+        });
+        assert!(routed.is_err(), "router must observe the worker loss");
+        // the crash flag is raised as the unwind escapes the worker loop,
+        // which can land just after the router's recv failure — wait it out
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while c.alive(1) {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "worker crash never flipped alive() to false"
+            );
+            std::thread::yield_now();
+        }
+        // serving converts the crash to NodeDown (the stale published view
+        // must not be served) while survivors keep answering
+        let mut out = vec![0.0f32; 2 * 4];
+        assert_eq!(
+            c.serve_gather(&[1, 4], &mut out),
+            Err(ServeError::NodeDown { node: 1 })
+        );
+        c.serve_gather(&[0, 2], &mut out).unwrap();
+        // publish skips the crashed node instead of hanging on its channel
+        c.publish_serve_view();
+        // orderly kill reaps the crashed slot; respawn clears the flag
+        c.kill_node(1);
+        c.respawn_node(1);
+        assert!(c.alive(1));
+        c.serve_gather(&[1, 4], &mut out).unwrap();
     }
 
     #[test]

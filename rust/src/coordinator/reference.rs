@@ -15,6 +15,12 @@
 //! * [`crate::failure::FailureEvent::trainer_victims`] predates this
 //!   loop and is ignored (events still charge load/reschedule, exactly
 //!   as the pre-refactor code charged every event).
+//!
+//! Quiesce contract: with exactly one trainer — this thread — every point
+//! in the loop is trivially a step barrier, so the control-plane calls
+//! below (`kill_node`/`respawn_node` on failure injection, checkpoint
+//! save/restore) need no [`crate::cluster::PsQuiesce`] token: the sole
+//! writer is the caller itself.
 
 use anyhow::{ensure, Result};
 

@@ -7,14 +7,25 @@
 //! at local row `r / n_nodes`. A node failure therefore wipes a ~1/n slice
 //! of EVERY table, exactly the paper's failure unit.
 //!
-//! Concurrency model: every node sits behind its own
-//! [`crate::cluster::lock::NodeLock`], so the whole data plane
-//! (gather / sparse update / row reads) is `&self` — two trainers touching
-//! rows owned by *different* nodes never contend, and a trainer that
-//! panics mid-update fails only the node it was writing (the lock converts
-//! poison into a node kill; see `cluster::lock`). Ordering of same-node
-//! updates across trainers is the caller's contract
-//! (`cluster::ShardedPs` sequences them with per-node turnstiles).
+//! Concurrency model (machine-checked since PR 9; see DESIGN.md
+//! "Concurrency model & unsafe inventory"):
+//!
+//! * every node's *non-shard* state sits behind its own
+//!   [`crate::cluster::lock::NodeLock`], so the whole data plane
+//!   (gather / sparse update / row reads) is `&self` — two trainers
+//!   touching rows owned by *different* nodes never contend, and a
+//!   trainer that panics mid-update fails only the node it was writing
+//!   (the lock converts poison into a node kill; see `cluster::lock`);
+//! * the shard floats themselves live in [`AtomicF32s`] word stores
+//!   (`shard_words`, outside the lock), so the guard-free serving
+//!   seqlock reads race the writers with *defined* behavior — no
+//!   `read_volatile`, no raw pointers, no `unsafe` anywhere in this
+//!   file. Writers still only mutate a node's words while holding its
+//!   write guard (or dead-node exclusivity during respawn), which is
+//!   what makes the [`SeqLock`] epoch protocol sound;
+//! * ordering of same-node updates across trainers is the caller's
+//!   contract (`cluster::ShardedPs` sequences them with per-node
+//!   turnstiles).
 //!
 //! The trainer gathers rows for a minibatch, runs the AOT train-step (L2),
 //! and scatters the returned embedding gradient back as a sparse SGD
@@ -24,12 +35,11 @@ pub mod optim;
 
 pub use optim::EmbOptimizer;
 
-use std::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering};
-
 use crate::cluster::lock::{NodeLock, NodeReadGuard, NodeWriteGuard};
+use crate::cluster::seqlock::{AtomicF32s, SeqLock};
 use crate::cluster::{ServeError, StatCounters};
 use crate::util::rng::SplitMix64;
-use crate::util::threads::parallel_chunks;
+use crate::util::threads::{parallel_chunks, parallel_chunks_mut};
 
 /// Row-count + vector width of one logical embedding table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -38,33 +48,15 @@ pub struct TableInfo {
     pub dim: usize,
 }
 
-/// One emulated Emb PS node: the local shard of every table plus the
-/// per-row optimizer state (row-wise AdaGrad accumulator).
-#[derive(Clone, Debug)]
+/// One emulated Emb PS node's lock-guarded state: the per-row optimizer
+/// accumulators (row-wise AdaGrad). The embedding words themselves live
+/// outside the lock in `PsCluster::shard_words` so guard-free serving
+/// readers never alias a writer's `&mut` — the write guard still
+/// serializes every mutation of both halves.
+#[derive(Debug)]
 pub struct EmbPsNode {
-    /// per-table storage, local_row-major [local_rows * dim]
-    shards: Vec<Vec<f32>>,
     /// per-table optimizer accumulators, one f32 per local row
     opt_state: Vec<Vec<f32>>,
-}
-
-/// Per-node serving-plane state: the seqlock sequence counter plus a
-/// fast-path liveness flag.
-///
-/// Protocol (the classic seqlock, writer side already mutually excluded
-/// by the node's write guard): a writer makes the counter odd before
-/// touching floats and even after; a serving reader snapshots the row
-/// between two counter loads and discards the copy unless both loads saw
-/// the same even value. Readers therefore never take the `NodeLock` and
-/// never wait on a writer — they retry instead.
-#[derive(Debug)]
-struct ServeSeq {
-    seq: AtomicU64,
-    /// `false` between an injected kill and the matching respawn. A
-    /// writer *panic* does not clear this (nobody is left to), which is
-    /// why the reader's retry loop also polls `NodeLock::is_dead` once
-    /// its spin budget runs out.
-    alive: AtomicBool,
 }
 
 /// The sharded Emb PS cluster (in-process backend).
@@ -73,8 +65,13 @@ pub struct PsCluster {
     pub tables: Vec<TableInfo>,
     pub n_nodes: usize,
     nodes: Vec<NodeLock<EmbPsNode>>,
+    /// per-node per-table embedding words, local_row-major
+    /// [local_rows * dim]; atomic so seqlock readers race writers without
+    /// UB. INVARIANT: stores only while holding the node's write guard
+    /// (or dead-node exclusivity inside respawn).
+    shard_words: Vec<Vec<AtomicF32s>>,
     /// serving-plane seqlocks, one per node (same indexing as `nodes`)
-    serve: Vec<ServeSeq>,
+    serve: Vec<SeqLock>,
     seed: u64,
     /// operation counters for the `PsBackend` trait view
     pub(crate) stats: StatCounters,
@@ -98,30 +95,21 @@ pub fn init_value(seed: u64, table: usize, row: usize, d: usize) -> f32 {
     ((h.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64) * 0.1 - 0.05) as f32
 }
 
-impl EmbPsNode {
-    /// A node at deterministic init (shared with the threaded backend so
-    /// blank respawns are bit-identical across runtimes).
-    pub(crate) fn at_init(tables: &[TableInfo], n_nodes: usize, node_id: usize,
-                          seed: u64) -> Self {
-        let (shards, opt_state) =
-            crate::cluster::init_node_state(tables, n_nodes, node_id, seed);
-        Self { shards, opt_state }
-    }
-}
-
 impl PsCluster {
     pub fn new(tables: Vec<TableInfo>, n_nodes: usize, seed: u64) -> Self {
         assert!(n_nodes >= 1);
-        let nodes = (0..n_nodes)
-            .map(|id| NodeLock::new(EmbPsNode::at_init(&tables, n_nodes, id, seed)))
-            .collect();
-        let serve = (0..n_nodes)
-            .map(|_| ServeSeq {
-                seq: AtomicU64::new(0),
-                alive: AtomicBool::new(true),
-            })
-            .collect();
-        Self { tables, n_nodes, nodes, serve, seed, stats: StatCounters::default() }
+        let mut nodes = Vec::with_capacity(n_nodes);
+        let mut shard_words = Vec::with_capacity(n_nodes);
+        for id in 0..n_nodes {
+            let (shards, opt_state) =
+                crate::cluster::init_node_state(&tables, n_nodes, id, seed);
+            shard_words
+                .push(shards.iter().map(|s| AtomicF32s::from_f32s(s)).collect());
+            nodes.push(NodeLock::new(EmbPsNode { opt_state }));
+        }
+        let serve = (0..n_nodes).map(|_| SeqLock::new()).collect();
+        Self { tables, n_nodes, nodes, shard_words, serve, seed,
+               stats: StatCounters::default() }
     }
 
     #[inline]
@@ -158,29 +146,17 @@ impl PsCluster {
     }
 
     /// Seqlock writer entry for `node`. Caller must hold the node's write
-    /// guard (or, for revive, the dead-node exclusivity of
-    /// [`NodeLock::revive_with`]) — writers are mutually excluded, so a
-    /// plain load/store pair is enough.
+    /// guard (or, for respawn, the dead-node exclusivity of
+    /// [`NodeLock::revive_with`]) — see [`SeqLock::write_begin`].
     #[inline]
     fn serve_write_begin(&self, node: usize) {
-        let seq = &self.serve[node].seq;
-        let s = seq.load(Ordering::Relaxed);
-        // s even (normal) → s+1, odd; s odd (residue of a writer that
-        // panicked mid-update and never reached `serve_write_end`) → s+2:
-        // still odd but CHANGED, so a reader that snapshotted before the
-        // death can never validate against the new epoch.
-        seq.store(s.wrapping_add(1 + (s & 1)), Ordering::Relaxed);
-        fence(Ordering::Release);
+        self.serve[node].write_begin();
     }
 
-    /// Seqlock writer exit for `node`: republish an even sequence. Not
-    /// reached when the writer panics — the residue case
-    /// `serve_write_begin` and the reader's dead-node fallback handle.
+    /// Seqlock writer exit for `node`: republish an even sequence.
     #[inline]
     fn serve_write_end(&self, node: usize) {
-        let seq = &self.serve[node].seq;
-        let s = seq.load(Ordering::Relaxed);
-        seq.store(s.wrapping_add(1), Ordering::Release);
+        self.serve[node].write_end();
     }
 
     /// Serving-plane single-hot gather (`indices` [B, T] row-major, `out`
@@ -211,8 +187,9 @@ impl PsCluster {
     }
 
     /// One seqlock-validated row copy; returns the retries paid. The copy
-    /// itself is racy by construction — it only escapes when the sequence
-    /// counter proves no writer overlapped it.
+    /// races writers by construction — the word loads are atomic (no UB)
+    /// and the copy only escapes when the sequence counter proves no
+    /// writer overlapped it.
     fn serve_row_into(
         &self,
         node: usize,
@@ -220,49 +197,14 @@ impl PsCluster {
         local: usize,
         dst: &mut [f32],
     ) -> Result<u64, ServeError> {
-        let sq = &self.serve[node];
-        if !sq.alive.load(Ordering::Acquire) {
-            return Err(ServeError::NodeDown { node });
-        }
-        let dim = dst.len();
-        let mut retries = 0u64;
-        loop {
-            let s1 = sq.seq.load(Ordering::Acquire);
-            if s1 & 1 == 0 {
-                // Raw shard base pointer without forming a &EmbPsNode or a
-                // &[f32] over the racing floats: only the Vec headers are
-                // referenced, and those are never mutated after
-                // construction (load/reset/revive all refill the existing
-                // allocations in place — see `NodeLock::revive_with`).
-                let base = unsafe {
-                    let shards = std::ptr::addr_of!((*self.nodes[node].data_ptr()).shards);
-                    (*(*shards).as_ptr().add(table)).as_ptr().add(local * dim)
-                };
-                for (d, v) in dst.iter_mut().enumerate() {
-                    // SAFETY: in-bounds by routing; volatile because a
-                    // writer may be racing us — the validation below
-                    // discards any torn copy.
-                    *v = unsafe { std::ptr::read_volatile(base.add(d)) };
-                }
-                fence(Ordering::Acquire);
-                if sq.seq.load(Ordering::Relaxed) == s1 {
-                    return Ok(retries);
-                }
-            }
-            retries += 1;
-            if retries % 128 == 0 {
-                // Spin budget exhausted: either a writer died mid-update
-                // (seq stuck odd, node poisoned → dead) or the node was
-                // killed between our liveness check and now. Surface the
-                // typed error rather than spinning forever.
-                if self.nodes[node].is_dead() || !sq.alive.load(Ordering::Acquire) {
-                    return Err(ServeError::NodeDown { node });
-                }
-                std::thread::yield_now();
-            } else {
-                std::hint::spin_loop();
-            }
-        }
+        let words = &self.shard_words[node][table];
+        let off = local * dst.len();
+        self.serve[node]
+            .read(
+                || words.load_into(off, &mut *dst),
+                || self.nodes[node].is_dead(),
+            )
+            .map_err(|_| ServeError::NodeDown { node })
     }
 
     /// Which nodes a routed index batch touches.
@@ -279,13 +221,16 @@ impl PsCluster {
     pub fn read_row(&self, table: usize, global_row: usize, out: &mut [f32]) {
         let (node, local) = self.route(global_row);
         let dim = self.tables[table].dim;
-        let g = self.node_read(node);
-        out.copy_from_slice(&g.shards[table][local * dim..(local + 1) * dim]);
+        // guard excludes writers; the word loads then happen-after every
+        // prior writer's guard release
+        let _g = self.node_read(node);
+        self.shard_words[node][table].load_into(local * dim, out);
     }
 
     /// Copy of one node's shard of `table` (checkpoint/test inspection).
     pub fn shard(&self, node: usize, table: usize) -> Vec<f32> {
-        self.node_read(node).shards[table].clone()
+        let _g = self.node_read(node);
+        self.shard_words[node][table].to_vec()
     }
 
     /// Copy of one node's optimizer accumulators for `table`.
@@ -309,8 +254,8 @@ impl PsCluster {
         for (i, &row) in rows.iter().enumerate() {
             let (node, local) = self.route(row as usize);
             let g = guards[node].as_ref().unwrap();
-            data[i * dim..(i + 1) * dim]
-                .copy_from_slice(&g.shards[table][local * dim..(local + 1) * dim]);
+            self.shard_words[node][table]
+                .load_into(local * dim, &mut data[i * dim..(i + 1) * dim]);
             opt[i] = g.opt_state[table][local];
         }
         (data, opt)
@@ -329,7 +274,12 @@ impl PsCluster {
     ///
     /// Concurrency: takes read guards only on the nodes the batch touches,
     /// so gathers against disjoint nodes (and any number of gathers
-    /// against the same node) run fully in parallel.
+    /// against the same node) run fully in parallel. The guards are held
+    /// on the calling thread for the whole fan-out (excluding writers);
+    /// worker threads read the atomic shard words directly and write
+    /// disjoint `&mut` output chunks handed out by
+    /// [`parallel_chunks_mut`] — the old `SendPtr` raw-pointer escape
+    /// hatch is gone.
     pub fn gather_pooled(&self, indices: &[u32], hotness: usize, out: &mut [f32]) {
         let t = self.tables.len();
         let dim = self.tables[0].dim;
@@ -337,55 +287,39 @@ impl PsCluster {
         let b = indices.len() / (t * hotness);
         debug_assert_eq!(out.len(), b * t * dim);
         let touched = self.touched_nodes(indices);
-        let guards: Vec<Option<NodeReadGuard<'_, EmbPsNode>>> = (0..self.n_nodes)
+        let _guards: Vec<Option<NodeReadGuard<'_, EmbPsNode>>> = (0..self.n_nodes)
             .map(|n| touched[n].then(|| self.node_read(n)))
             .collect();
         // Thread spawn costs ~50 µs; below ~2k samples a serial gather is
         // faster than fanning out (measured: 18 µs serial vs 55 µs across
         // 2 threads at B=128) — see EXPERIMENTS.md §Perf #5.
-        let out_ptr = SendPtr(out.as_mut_ptr());
         if hotness == 1 {
             // specialized single-hot path: a straight row copy per slot
             // (the generic loop costs 2× at Criteo shapes — §Perf #5)
-            parallel_chunks(b, 8, 2048, |lo, hi| {
-                let out_ptr = &out_ptr;
+            parallel_chunks_mut(out, b, t * dim, 8, 2048, |lo, hi, chunk| {
                 for (off, &row) in indices[lo * t..hi * t].iter().enumerate() {
-                    let slot = lo * t + off;
-                    let tab = slot % t;
-                    let row = row as usize;
-                    let node = guards[row % self.n_nodes].as_ref().unwrap();
-                    let shard = &node.shards[tab];
-                    let local = row / self.n_nodes;
-                    unsafe {
-                        std::ptr::copy_nonoverlapping(
-                            shard.as_ptr().add(local * dim),
-                            out_ptr.0.add(slot * dim),
-                            dim,
-                        );
-                    }
+                    let tab = (lo * t + off) % t;
+                    let (node, local) = self.route(row as usize);
+                    self.shard_words[node][tab].load_into(
+                        local * dim,
+                        &mut chunk[off * dim..(off + 1) * dim],
+                    );
                 }
             });
             return;
         }
-        parallel_chunks(b, 8, 2048, |lo, hi| {
-            let out_ptr = &out_ptr;
+        parallel_chunks_mut(out, b, t * dim, 8, 2048, |lo, hi, chunk| {
             for s in lo..hi {
                 for tab in 0..t {
-                    let dst = unsafe {
-                        std::slice::from_raw_parts_mut(
-                            out_ptr.0.add((s * t + tab) * dim), dim)
-                    };
+                    let dst = &mut chunk[((s - lo) * t + tab) * dim..][..dim];
                     for h in 0..hotness {
                         let row = indices[(s * t + tab) * hotness + h] as usize;
                         let (node_id, local) = self.route(row);
-                        let node = guards[node_id].as_ref().unwrap();
-                        let src = &node.shards[tab][local * dim..(local + 1) * dim];
+                        let words = &self.shard_words[node_id][tab];
                         if h == 0 {
-                            dst.copy_from_slice(src);
+                            words.load_into(local * dim, dst);
                         } else {
-                            for (d, v) in dst.iter_mut().zip(src) {
-                                *d += v;
-                            }
+                            words.add_into(local * dim, dst);
                         }
                     }
                 }
@@ -396,6 +330,26 @@ impl PsCluster {
     /// Sparse SGD convenience wrapper (hotness 1).
     pub fn sgd_update(&self, indices: &[u32], grads: &[f32], lr: f32) {
         self.apply_grads(indices, 1, grads, lr, EmbOptimizer::Sgd);
+    }
+
+    /// Load one row into `buf`, run the optimizer on it, and store it
+    /// back — the scatter unit of every apply path. The load/store
+    /// round-trip through the atomic words is bit-exact, so the result is
+    /// identical floats to the old in-place slice mutation.
+    #[inline]
+    fn apply_row(
+        words: &AtomicF32s,
+        local: usize,
+        g: &[f32],
+        acc: &mut f32,
+        lr: f32,
+        opt: EmbOptimizer,
+        buf: &mut [f32],
+    ) {
+        let dim = buf.len();
+        words.load_into(local * dim, buf);
+        opt.apply(buf, g, acc, lr);
+        words.store_from(local * dim, buf);
     }
 
     /// Sparse update: apply `opt` to every (sample, table, hot) slot's row
@@ -436,6 +390,7 @@ impl PsCluster {
                     self.serve_write_begin(n);
                 }
             }
+            let mut buf = vec![0.0f32; dim];
             for s in 0..b {
                 for tab in 0..t {
                     let g = &grads[(s * t + tab) * dim..(s * t + tab + 1) * dim];
@@ -444,10 +399,9 @@ impl PsCluster {
                         let node_id = row % n_nodes;
                         let local = row / n_nodes;
                         let node = &mut **guards[node_id].as_mut().unwrap();
-                        let dst =
-                            &mut node.shards[tab][local * dim..(local + 1) * dim];
-                        let acc = &mut node.opt_state[tab][local];
-                        opt.apply(dst, g, acc, lr);
+                        Self::apply_row(&self.shard_words[node_id][tab], local,
+                                        g, &mut node.opt_state[tab][local], lr,
+                                        opt, &mut buf);
                     }
                 }
             }
@@ -487,6 +441,7 @@ impl PsCluster {
         let n_nodes = self.n_nodes;
         let mut g_node = self.node_write(node);
         self.serve_write_begin(node);
+        let mut buf = vec![0.0f32; dim];
         for s in 0..b {
             for tab in 0..t {
                 let g = &grads[(s * t + tab) * dim..(s * t + tab + 1) * dim];
@@ -497,9 +452,9 @@ impl PsCluster {
                     }
                     let local = row / n_nodes;
                     let n = &mut *g_node;
-                    let dst = &mut n.shards[tab][local * dim..(local + 1) * dim];
-                    let acc = &mut n.opt_state[tab][local];
-                    opt.apply(dst, g, acc, lr);
+                    Self::apply_row(&self.shard_words[node][tab], local, g,
+                                    &mut n.opt_state[tab][local], lr, opt,
+                                    &mut buf);
                 }
             }
         }
@@ -508,16 +463,17 @@ impl PsCluster {
 
     /// Reset a node's shards to their deterministic initial values
     /// (recovery when no checkpoint exists yet). Refills the existing
-    /// buffers instead of installing a fresh `EmbPsNode` — the serving
-    /// plane's seqlock readers hold raw pointers into the shard `Vec`s,
-    /// so those allocations must stay put for the cluster's lifetime.
+    /// word buffers instead of installing fresh ones — [`AtomicF32s`]
+    /// never reallocates, so in-flight guard-free seqlock readers stay
+    /// valid across the refill (the odd sequence keeps them from
+    /// validating a half-reset row).
     pub fn reset_node_to_init(&self, node_id: usize) {
         let (shards, opt) =
             crate::cluster::init_node_state(&self.tables, self.n_nodes, node_id, self.seed);
         let mut g = self.node_write(node_id);
         self.serve_write_begin(node_id);
         for t in 0..self.tables.len() {
-            g.shards[t].copy_from_slice(&shards[t]);
+            self.shard_words[node_id][t].copy_from(&shards[t]);
             g.opt_state[t].copy_from_slice(&opt[t]);
         }
         self.serve_write_end(node_id);
@@ -530,7 +486,7 @@ impl PsCluster {
     pub fn kill_node(&self, node: usize) {
         // fail the serving fast path first so a reader cannot start a
         // fresh seqlock attempt against a node already declared dead
-        self.serve[node].alive.store(false, Ordering::Release);
+        self.serve[node].set_alive(false);
         self.nodes[node].kill();
     }
 
@@ -543,19 +499,22 @@ impl PsCluster {
         assert!(self.nodes[node].is_dead(), "node {node} is already alive");
         let (shards, opt) =
             crate::cluster::init_node_state(&self.tables, self.n_nodes, node, self.seed);
-        // seqlock epoch around the in-place refill: `revive_with` (not
-        // `revive`) so the shard allocations serving readers point into
-        // survive the respawn, and the odd sequence keeps any reader that
-        // races the refill from validating a half-initialized row.
+        // seqlock epoch around the refill: the word stores happen while
+        // the node is still dead (no write guard can exist), and the odd
+        // sequence keeps any reader that races the refill from
+        // validating a half-initialized row. `revive_with` refills the
+        // opt state in place and clears the dead flag last.
         self.serve_write_begin(node);
+        for t in 0..shards.len() {
+            self.shard_words[node][t].copy_from(&shards[t]);
+        }
         self.nodes[node].revive_with(|n| {
-            for t in 0..shards.len() {
-                n.shards[t].copy_from_slice(&shards[t]);
+            for t in 0..opt.len() {
                 n.opt_state[t].copy_from_slice(&opt[t]);
             }
         });
         self.serve_write_end(node);
-        self.serve[node].alive.store(true, Ordering::Release);
+        self.serve[node].set_alive(true);
     }
 
     /// Overwrite one node's full state (checkpoint restore path).
@@ -563,7 +522,7 @@ impl PsCluster {
         let mut g = self.node_write(node);
         self.serve_write_begin(node);
         for t in 0..self.tables.len() {
-            g.shards[t].copy_from_slice(&shards[t]);
+            self.shard_words[node][t].copy_from(&shards[t]);
             g.opt_state[t].copy_from_slice(&opt[t]);
         }
         self.serve_write_end(node);
@@ -573,7 +532,8 @@ impl PsCluster {
     /// under the node's read guard (checkpoint save path).
     pub(crate) fn snapshot_parts(&self, node: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
         let g = self.node_read(node);
-        (g.shards.clone(), g.opt_state.clone())
+        let shards = self.shard_words[node].iter().map(AtomicF32s::to_vec).collect();
+        (shards, g.opt_state.clone())
     }
 
     /// Export `local_rows` of `table` on `node` under a single node read
@@ -586,14 +546,13 @@ impl PsCluster {
     ) -> (Vec<f32>, Vec<f32>) {
         let dim = self.tables[table].dim;
         let g = self.node_read(node);
-        let shard = &g.shards[table];
+        let words = &self.shard_words[node][table];
         let acc = &g.opt_state[table];
         let mut data = vec![0.0f32; local_rows.len() * dim];
         let mut opt = vec![0.0f32; local_rows.len()];
         for (i, &lr) in local_rows.iter().enumerate() {
             let lr = lr as usize;
-            data[i * dim..(i + 1) * dim]
-                .copy_from_slice(&shard[lr * dim..(lr + 1) * dim]);
+            words.load_into(lr * dim, &mut data[i * dim..(i + 1) * dim]);
             opt[i] = acc[lr];
         }
         (data, opt)
@@ -604,10 +563,6 @@ impl PsCluster {
         self.tables.iter().map(|t| t.rows * t.dim).sum()
     }
 }
-
-struct SendPtr(*mut f32);
-unsafe impl Sync for SendPtr {}
-unsafe impl Send for SendPtr {}
 
 #[cfg(test)]
 mod tests {

@@ -17,6 +17,13 @@
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured results.
 
+// Every unsafe block/impl must carry a `// SAFETY:` contract; combined
+// with the `invariant-lint` workspace tool (which confines `unsafe` to an
+// allowlisted module set) and the Miri/TSan/loom CI lanes, this keeps the
+// crate's unsafe surface enumerable — see DESIGN.md "Concurrency model &
+// unsafe inventory".
+#![warn(clippy::undocumented_unsafe_blocks)]
+
 pub mod analysis;
 pub mod bench;
 pub mod checkpoint;

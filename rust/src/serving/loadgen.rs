@@ -15,6 +15,12 @@
 //! are merged once at [`LoadGen::stop`]. Per-request telemetry goes to
 //! the existing registry: `serve_gather{node=N}` latency histograms and
 //! the `serve_nodedown` counter (both no-ops when telemetry is off).
+//!
+//! Quiesce contract: the generator itself is strictly read-only
+//! (`serve_gather` only — lock-free, no [`crate::cluster::PsQuiesce`]
+//! needed); the one control-plane call in this module is a unit test
+//! killing a node to assert dead-node requests are classified as
+//! `NodeDown`, on a cluster that test owns exclusively.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;

@@ -4,6 +4,8 @@
 //! first failure it panics with the *case seed*, so `forall_case(seed, f)`
 //! reproduces it exactly. Generators are plain closures over [`Rng`].
 
+pub mod model;
+
 use crate::util::rng::Rng;
 
 /// Run `f` for `cases` randomized cases. `f` gets a per-case RNG and

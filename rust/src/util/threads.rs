@@ -39,6 +39,52 @@ where
     });
 }
 
+/// [`parallel_chunks`], but additionally hands every worker the
+/// **disjoint** `&mut` sub-slice of `data` its item range owns: `data`
+/// is `n` items of `per_item` elements each, and the worker for
+/// `[lo, hi)` receives `data[lo*per_item .. hi*per_item]`. This is the
+/// safe replacement for the old `SendPtr` raw-pointer fan-out in the
+/// gather path — `split_at_mut` proves disjointness to the compiler, so
+/// no `unsafe` is needed to write output chunks from scoped threads.
+pub fn parallel_chunks_mut<T, F>(
+    data: &mut [T],
+    n: usize,
+    per_item: usize,
+    max_threads: usize,
+    min_per_thread: usize,
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    assert_eq!(data.len(), n * per_item, "data is not n items of per_item");
+    if n == 0 {
+        return;
+    }
+    static HW: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    let hw = *HW.get_or_init(|| {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    });
+    let threads = max_threads.min(hw).min(n / min_per_thread.max(1)).max(1);
+    if threads == 1 {
+        f(0, n, data);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + chunk).min(n);
+            let (head, tail) = rest.split_at_mut((hi - lo) * per_item);
+            rest = tail;
+            let fref = &f;
+            scope.spawn(move || fref(lo, hi, head));
+            lo = hi;
+        }
+    });
+}
+
 /// Map `f(i)` over `[0, n)` in parallel, collecting results in order.
 pub fn parallel_map<T, F>(n: usize, max_threads: usize, f: F) -> Vec<T>
 where
@@ -88,6 +134,46 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn chunks_mut_partitions_exactly() {
+        let n = 5_000;
+        let per = 3;
+        let mut data = vec![0u32; n * per];
+        parallel_chunks_mut(&mut data, n, per, 8, 1, |lo, hi, chunk| {
+            assert_eq!(chunk.len(), (hi - lo) * per);
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v += (lo * per + k) as u32 + 1;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32 + 1, "element {i} written wrong or twice");
+        }
+    }
+
+    #[test]
+    fn chunks_mut_single_thread_fallback() {
+        let mut data = vec![0u8; 6];
+        let hits = AtomicUsize::new(0);
+        parallel_chunks_mut(&mut data, 3, 2, 8, 100, |lo, hi, chunk| {
+            assert_eq!((lo, hi, chunk.len()), (0, 3, 6));
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn chunks_mut_empty_ok() {
+        let mut data: Vec<u8> = vec![];
+        parallel_chunks_mut(&mut data, 0, 4, 4, 1, |_, _, _| panic!("must not run"));
+    }
+
+    #[test]
+    #[should_panic(expected = "per_item")]
+    fn chunks_mut_length_mismatch_panics() {
+        let mut data = vec![0u8; 5];
+        parallel_chunks_mut(&mut data, 3, 2, 4, 1, |_, _, _| {});
     }
 
     #[test]

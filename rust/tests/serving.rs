@@ -18,7 +18,7 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
-use cpr::cluster::{PsControlPlane, PsServePlane};
+use cpr::cluster::{PsControlPlane, PsDataPlane, PsServePlane, ServeError};
 use cpr::config::{preset, JobConfig, PsBackendKind, Strategy};
 use cpr::coordinator::{run_training, RunOptions, TrainReport};
 use cpr::embedding::{PsCluster, TableInfo};
@@ -142,6 +142,89 @@ fn serve_reads_are_never_torn_threaded() {
     let tables = vec![TableInfo { rows: ROWS, dim: DIM }];
     hammer(
         Arc::new(cpr::cluster::ThreadedCluster::new(tables, N_NODES, 5)),
+        "threaded",
+    );
+}
+
+// ---------------------------------------------------------------------------
+// poison path: a writer that panics mid-update must read as NodeDown
+// ---------------------------------------------------------------------------
+
+/// Drive one writer panic on `TARGET` and assert the serving plane
+/// converts it into `NodeDown` within its bounded spin budget, on
+/// whichever backend `cluster` is.
+///
+/// In-proc: the panic unwinds with the node write guard held and the
+/// seqlock epoch open — guard `Drop` poisons→kills the node, and the
+/// permanently-odd sequence pushes readers onto the dead-poll path.
+/// Threaded: the panic unwinds the worker thread itself; the spawn
+/// wrapper raises the node's crash flag, which serving checks before
+/// trusting the (stale) published view.
+fn writer_panic_yields_node_down<C>(cluster: &C, tag: &str)
+where
+    C: PsDataPlane + PsControlPlane + PsServePlane + Sync,
+{
+    // row 100_001 routes to node 1 (odd) at local 50_000 — far outside
+    // the 32-row shard, so the apply panics after the write began
+    assert_eq!(100_001 % N_NODES, TARGET);
+    let crashed = std::thread::scope(|s| {
+        s.spawn(|| {
+            cluster.apply_grads(
+                &[100_001u32],
+                1,
+                &[0.0f32; DIM],
+                1.0,
+                cpr::embedding::EmbOptimizer::Sgd,
+            )
+        })
+        .join()
+    });
+    assert!(crashed.is_err(), "{tag}: the poisoned apply must panic");
+    // the in-proc backend converts poison synchronously (guard Drop ran
+    // before join returned); the threaded worker raises its crash flag as
+    // the unwind escapes its loop, which can trail the router's own
+    // panic — bound the lag instead of assuming either ordering
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while PsControlPlane::alive(cluster, TARGET) {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "{tag}: writer panic never marked node {TARGET} dead"
+        );
+        std::thread::yield_now();
+    }
+    // victim reads fail fast (bounded spin, not a hang, never torn state)
+    let row = (N_NODES + TARGET) as u32; // in-range row owned by TARGET
+    let mut out = vec![0.0f32; DIM];
+    assert_eq!(
+        cluster.serve_gather(&[row], &mut out),
+        Err(ServeError::NodeDown { node: TARGET }),
+        "{tag}: victim must serve NodeDown"
+    );
+    // survivors are unaffected
+    cluster
+        .serve_gather(&[0u32], &mut out)
+        .unwrap_or_else(|e| panic!("{tag}: survivor refused to serve: {e:?}"));
+    // the standard recovery protocol restores service
+    cluster.kill_node(TARGET);
+    cluster.respawn_node(TARGET);
+    cluster
+        .serve_gather(&[row], &mut out)
+        .unwrap_or_else(|e| panic!("{tag}: respawned node refused to serve: {e:?}"));
+}
+
+#[test]
+fn writer_panic_serves_node_down_inproc() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let tables = vec![TableInfo { rows: ROWS, dim: DIM }];
+    writer_panic_yields_node_down(&PsCluster::new(tables, N_NODES, 5), "inproc");
+}
+
+#[test]
+fn writer_panic_serves_node_down_threaded() {
+    let _g = TEST_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let tables = vec![TableInfo { rows: ROWS, dim: DIM }];
+    writer_panic_yields_node_down(
+        &cpr::cluster::ThreadedCluster::new(tables, N_NODES, 5),
         "threaded",
     );
 }

@@ -1,0 +1,678 @@
+//! invariant-lint — the repo's concurrency-invariant build gate.
+//!
+//! `cargo run -p invariant-lint` scans the Rust tree (`rust/src`,
+//! `rust/tests`, `examples`, `benches`) and fails (exit 1) on violations
+//! of the four invariants that keep the unsafe surface enumerable and the
+//! lock protocols analyzable (DESIGN.md "Concurrency model & unsafe
+//! inventory"):
+//!
+//! * **R1 unsafe-confinement** — the `unsafe` keyword may appear only in
+//!   the allowlisted modules (`cluster/lock.rs`, whose blocks are covered
+//!   by the loom models + Miri/TSan lanes, and the benchmark's labeled
+//!   volatile baseline). New unsafe anywhere else fails the build rather
+//!   than slipping in unreviewed.
+//! * **R2 no raw-memory reinterpretation** — `read_volatile` /
+//!   `write_volatile` / `transmute` / `from_raw_parts[_mut]` / `data_ptr`
+//!   are banned outside the bench baseline: shard data moves through
+//!   `AtomicF32s` (atomic per-word bitcasts) and explicit little-endian
+//!   byte codecs, never through pointer casts (PR 9 removed the last of
+//!   them; this rule keeps them out).
+//! * **R3 quiesce discipline** — any `rust/src` file invoking PS
+//!   control-plane operations (`.kill_node(` / `.respawn_node(` /
+//!   `.load_node(` / `.reset_node_to_init(` / `.snapshot_node(`) must
+//!   state its quiesce contract: mention `PsQuiesce`/"quiesce" in the
+//!   file (doc comments count — the *written contract* is what the rule
+//!   enforces). Backend-mechanism modules that implement the control
+//!   plane itself are allowlisted.
+//! * **R4 lock-order tripwire** — per-node locks are only ever taken in
+//!   ascending node order (that is the deadlock-freedom argument of the
+//!   sharded data plane), so a `.rev(` adjacent to `node_read(` /
+//!   `node_write(` / `wait_for(` is flagged for human review.
+//!
+//! Tokens are matched on a comment- and string-stripped view of each
+//! file (a minimal Rust lexer below), so prose like "no `unsafe` here"
+//! never trips R1/R2 — except R3's quiesce mention, which is
+//! deliberately matched on the RAW source because documentation is
+//! exactly what it demands.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+// ---------------------------------------------------------------------------
+// configuration
+// ---------------------------------------------------------------------------
+
+/// Directories scanned, relative to the repo root.
+const SCAN_DIRS: &[&str] = &["rust/src", "rust/tests", "examples", "benches"];
+
+/// R1: the only files allowed to contain the `unsafe` keyword.
+const UNSAFE_ALLOWLIST: &[&str] = &[
+    // NodeLock's Send/Sync impls + UnsafeCell derefs: contracts documented
+    // per block, modeled in cluster/models.rs, exercised under Miri/TSan
+    "rust/src/cluster/lock.rs",
+    // the labeled `seqlock=volatile-baseline` comparison loop
+    "benches/cpr_bench.rs",
+];
+
+/// R2: banned raw-memory tokens and the files exempt from the ban.
+const RAW_MEMORY_TOKENS: &[&str] = &[
+    "read_volatile",
+    "write_volatile",
+    "transmute",
+    "from_raw_parts",
+    "from_raw_parts_mut",
+    "data_ptr",
+];
+const RAW_MEMORY_ALLOWLIST: &[&str] = &["benches/cpr_bench.rs"];
+
+/// R3: control-plane entry points and the mechanism modules exempt from
+/// the quiesce-mention requirement (they ARE the mechanism).
+const CONTROL_TOKENS: &[&str] = &[
+    ".kill_node(",
+    ".respawn_node(",
+    ".load_node(",
+    ".reset_node_to_init(",
+    ".snapshot_node(",
+];
+const CONTROL_MECHANISM_ALLOWLIST: &[&str] = &[
+    "rust/src/cluster/mod.rs",
+    "rust/src/cluster/sharded.rs",
+    "rust/src/cluster/threaded.rs",
+    "rust/src/embedding/mod.rs",
+];
+
+/// R4: per-node lock acquisition points that must never sit next to a
+/// descending iteration.
+const LOCK_ACQUIRE_TOKENS: &[&str] = &["node_read(", "node_write(", "wait_for("];
+/// Lines of context after a `.rev(` in which a lock acquisition trips R4.
+const LOCK_ORDER_WINDOW: usize = 2;
+
+// ---------------------------------------------------------------------------
+// minimal Rust lexer: blank out comments and string/char literals
+// ---------------------------------------------------------------------------
+
+/// Return `src` with comments (line, nested block) and string-ish
+/// literals (plain/byte/raw strings, char literals) replaced by spaces,
+/// preserving newlines so byte offsets still map to the same lines.
+/// Lifetimes (`'a`) pass through untouched.
+pub fn strip_code(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out: Vec<char> = Vec::with_capacity(n);
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        let prev_ident =
+            i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_');
+        // line comment (also covers //! and ///)
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // block comment, nested
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1;
+            out.push(' ');
+            out.push(' ');
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw / raw-byte string: r"..."  r#"..."#  br##"..."##
+        if !prev_ident && (c == 'r' || (c == 'b' && i + 1 < n && b[i + 1] == 'r'))
+        {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                for _ in i..=j {
+                    out.push(' ');
+                }
+                let mut k = j + 1;
+                while k < n {
+                    if b[k] == '"' {
+                        let mut m = 0usize;
+                        while m < hashes && k + 1 + m < n && b[k + 1 + m] == '#'
+                        {
+                            m += 1;
+                        }
+                        if m == hashes {
+                            for _ in 0..=hashes {
+                                out.push(' ');
+                            }
+                            k += 1 + hashes;
+                            break;
+                        }
+                    }
+                    out.push(blank(b[k]));
+                    k += 1;
+                }
+                i = k;
+                continue;
+            }
+            // `r` / `br` not followed by a string: plain identifier chars
+        }
+        // plain or byte string
+        if c == '"' || (c == 'b' && !prev_ident && i + 1 < n && b[i + 1] == '"')
+        {
+            let mut k = if c == 'b' {
+                out.push(' ');
+                i + 2
+            } else {
+                i + 1
+            };
+            out.push(' '); // opening quote
+            while k < n {
+                if b[k] == '\\' && k + 1 < n {
+                    out.push(' ');
+                    out.push(blank(b[k + 1]));
+                    k += 2;
+                    continue;
+                }
+                if b[k] == '"' {
+                    out.push(' ');
+                    k += 1;
+                    break;
+                }
+                out.push(blank(b[k]));
+                k += 1;
+            }
+            i = k;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            // escaped char literal: '\n' '\'' '\u{..}'
+            if i + 1 < n && b[i + 1] == '\\' {
+                out.push(' ');
+                let mut k = i + 1;
+                while k < n && b[k] != '\'' {
+                    if b[k] == '\\' && k + 1 < n {
+                        out.push(' ');
+                        out.push(blank(b[k + 1]));
+                        k += 2;
+                    } else {
+                        out.push(blank(b[k]));
+                        k += 1;
+                    }
+                }
+                if k < n {
+                    out.push(' ');
+                    k += 1;
+                }
+                i = k;
+                continue;
+            }
+            // simple char literal: 'x' (next-next is the closing quote)
+            if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                out.push(' ');
+                out.push(' ');
+                out.push(' ');
+                i += 3;
+                continue;
+            }
+            // lifetime / loop label: keep as-is
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out.into_iter().collect()
+}
+
+// ---------------------------------------------------------------------------
+// token search helpers
+// ---------------------------------------------------------------------------
+
+fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Byte offsets of identifier-boundary occurrences of `word` (so
+/// `undocumented_unsafe_blocks` does not count as `unsafe`).
+fn find_word(text: &str, word: &str) -> Vec<usize> {
+    let bytes = text.as_bytes();
+    let mut found = Vec::new();
+    let mut from = 0usize;
+    while let Some(pos) = text[from..].find(word) {
+        let at = from + pos;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            found.push(at);
+        }
+        from = end;
+    }
+    found
+}
+
+/// Byte offsets of exact (non-word-boundary) occurrences of `needle` —
+/// for method-call tokens like `.kill_node(`.
+fn find_exact(text: &str, needle: &str) -> Vec<usize> {
+    let mut found = Vec::new();
+    let mut from = 0usize;
+    while let Some(pos) = text[from..].find(needle) {
+        found.push(from + pos);
+        from += pos + needle.len();
+    }
+    found
+}
+
+fn line_of(text: &str, byte: usize) -> usize {
+    text.as_bytes()[..byte.min(text.len())]
+        .iter()
+        .filter(|&&b| b == b'\n')
+        .count()
+        + 1
+}
+
+// ---------------------------------------------------------------------------
+// rules
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+fn r1_unsafe_confined(rel: &str, stripped: &str, out: &mut Vec<Violation>) {
+    if UNSAFE_ALLOWLIST.contains(&rel) {
+        return;
+    }
+    for at in find_word(stripped, "unsafe") {
+        out.push(Violation {
+            file: rel.to_string(),
+            line: line_of(stripped, at),
+            rule: "R1-unsafe-confinement",
+            message: "`unsafe` outside the allowlisted modules — move the \
+                      code behind a safe primitive (cluster::seqlock, \
+                      cluster::lock) or extend the reviewed allowlist"
+                .to_string(),
+        });
+    }
+}
+
+fn r2_raw_memory(rel: &str, stripped: &str, out: &mut Vec<Violation>) {
+    if RAW_MEMORY_ALLOWLIST.contains(&rel) {
+        return;
+    }
+    for token in RAW_MEMORY_TOKENS {
+        for at in find_word(stripped, token) {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: line_of(stripped, at),
+                rule: "R2-raw-memory",
+                message: format!(
+                    "`{token}` on shard data is banned — use AtomicF32s \
+                     (atomic word bitcasts) or the explicit little-endian \
+                     byte codecs in checkpoint::{{wf32s,rf32s}}"
+                ),
+            });
+        }
+    }
+}
+
+fn r3_quiesce(rel: &str, raw: &str, stripped: &str, out: &mut Vec<Violation>) {
+    if !rel.starts_with("rust/src/") || CONTROL_MECHANISM_ALLOWLIST.contains(&rel)
+    {
+        return;
+    }
+    let mentions_quiesce = raw.to_ascii_lowercase().contains("quiesce");
+    if mentions_quiesce {
+        return;
+    }
+    for token in CONTROL_TOKENS {
+        if let Some(&at) = find_exact(stripped, token).first() {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: line_of(stripped, at),
+                rule: "R3-quiesce",
+                message: format!(
+                    "control-plane call `{token}..)` in a file that never \
+                     states its quiesce contract — document how callers are \
+                     serialized against trainers (mention PsQuiesce), or \
+                     route through a quiesce-holding coordinator"
+                ),
+            });
+        }
+    }
+}
+
+fn r4_lock_order(rel: &str, stripped: &str, out: &mut Vec<Violation>) {
+    if !rel.starts_with("rust/src/") {
+        return;
+    }
+    let lines: Vec<&str> = stripped.lines().collect();
+    for (idx, line) in lines.iter().enumerate() {
+        if !line.contains(".rev(") {
+            continue;
+        }
+        let window_end = (idx + LOCK_ORDER_WINDOW).min(lines.len());
+        let window = &lines[idx..window_end];
+        for token in LOCK_ACQUIRE_TOKENS {
+            if window.iter().any(|l| l.contains(token)) {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    rule: "R4-lock-order",
+                    message: format!(
+                        "`.rev(` next to `{token}..)` — per-node locks must \
+                         be acquired in ascending node order (the sharded \
+                         data plane's deadlock-freedom argument)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+pub fn lint_file(rel: &str, raw: &str) -> Vec<Violation> {
+    let stripped = strip_code(raw);
+    let mut out = Vec::new();
+    r1_unsafe_confined(rel, &stripped, &mut out);
+    r2_raw_memory(rel, &stripped, &mut out);
+    r3_quiesce(rel, raw, &stripped, &mut out);
+    r4_lock_order(rel, &stripped, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// tree walk + entry point
+// ---------------------------------------------------------------------------
+
+fn repo_root() -> PathBuf {
+    // tools/invariant-lint/ -> repo root
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../..")
+}
+
+fn walk(dir: &Path, files: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, files);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            files.push(path);
+        }
+    }
+}
+
+/// Scan the whole tree; returns every violation found.
+pub fn lint_tree(root: &Path) -> Vec<Violation> {
+    let mut violations = Vec::new();
+    let mut scanned = 0usize;
+    for dir in SCAN_DIRS {
+        let mut files = Vec::new();
+        walk(&root.join(dir), &mut files);
+        files.sort();
+        for path in files {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let Ok(raw) = std::fs::read_to_string(&path) else {
+                continue;
+            };
+            scanned += 1;
+            violations.extend(lint_file(&rel, &raw));
+        }
+    }
+    assert!(
+        scanned > 0,
+        "invariant-lint scanned no files under {} — wrong root?",
+        root.display()
+    );
+    violations
+}
+
+fn main() -> ExitCode {
+    let root = repo_root();
+    let violations = lint_tree(&root);
+    if violations.is_empty() {
+        println!("invariant-lint: ok (R1 unsafe-confinement, R2 raw-memory, R3 quiesce, R4 lock-order)");
+        return ExitCode::SUCCESS;
+    }
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    eprintln!("invariant-lint: {} violation(s)", violations.len());
+    ExitCode::FAILURE
+}
+
+// ---------------------------------------------------------------------------
+// self-tests: every rule must fire on a seeded violation and stay quiet
+// on clean code; the lexer must keep prose from tripping token rules
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(v: &[Violation]) -> Vec<&'static str> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    // ---- lexer ----
+
+    #[test]
+    fn lexer_blanks_comments_and_strings_preserving_lines() {
+        let src = "let a = 1; // unsafe comment\nlet s = \"unsafe\";\n/* unsafe\nblock */ let b = 2;\n";
+        let stripped = strip_code(src);
+        assert_eq!(
+            stripped.matches('\n').count(),
+            src.matches('\n').count(),
+            "newlines must survive stripping"
+        );
+        assert!(!stripped.contains("unsafe"));
+        assert!(stripped.contains("let a = 1;"));
+        assert!(stripped.contains("let b = 2;"));
+    }
+
+    #[test]
+    fn lexer_handles_raw_strings_escapes_and_chars() {
+        let src = r##"let r = r#"unsafe " transmute"#; let c = '\''; let q = "esc \" unsafe"; let lt: &'static str = x;"##;
+        let stripped = strip_code(src);
+        assert!(!stripped.contains("unsafe"));
+        assert!(!stripped.contains("transmute"));
+        assert!(stripped.contains("'static"), "lifetimes must pass through");
+        assert!(stripped.contains("let lt: &"));
+    }
+
+    #[test]
+    fn lexer_handles_nested_block_comments() {
+        let src = "/* outer /* inner unsafe */ still comment */ fn f() {}";
+        let stripped = strip_code(src);
+        assert!(!stripped.contains("unsafe"));
+        assert!(!stripped.contains("still comment"));
+        assert!(stripped.contains("fn f() {}"));
+    }
+
+    // ---- R1 ----
+
+    #[test]
+    fn r1_fires_on_unsafe_outside_allowlist() {
+        let v = lint_file(
+            "rust/src/embedding/mod.rs",
+            "fn f(p: *const f32) -> f32 { unsafe { *p } }",
+        );
+        assert!(rules_fired(&v).contains(&"R1-unsafe-confinement"), "{v:?}");
+        assert_eq!(v[0].line, 1);
+    }
+
+    #[test]
+    fn r1_spares_the_allowlist_and_prose() {
+        assert!(lint_file(
+            "rust/src/cluster/lock.rs",
+            "unsafe impl<T: Send> Sync for NodeLock<T> {}",
+        )
+        .is_empty());
+        // prose, string, and the clippy lint name must not count
+        assert!(lint_file(
+            "rust/src/lib.rs",
+            "#![warn(clippy::undocumented_unsafe_blocks)]\n// no unsafe here\nlet s = \"unsafe\";",
+        )
+        .is_empty());
+    }
+
+    // ---- R2 ----
+
+    #[test]
+    fn r2_fires_on_raw_memory_tokens() {
+        for token in RAW_MEMORY_TOKENS {
+            let src = format!("fn f() {{ let x = std::ptr::{token}(p); }}");
+            let v = lint_file("rust/src/cluster/seqlock.rs", &src);
+            assert!(
+                rules_fired(&v).contains(&"R2-raw-memory"),
+                "{token} escaped R2"
+            );
+        }
+    }
+
+    #[test]
+    fn r2_spares_the_bench_baseline_and_prose() {
+        assert!(lint_file(
+            "benches/cpr_bench.rs",
+            "let v = unsafe { std::ptr::read_volatile(p) };",
+        )
+        .is_empty());
+        assert!(lint_file(
+            "rust/src/checkpoint/mod.rs",
+            "// replaced a `from_raw_parts` cast with explicit LE bytes",
+        )
+        .is_empty());
+    }
+
+    // ---- R3 ----
+
+    #[test]
+    fn r3_fires_on_undocumented_control_plane_calls() {
+        let v = lint_file(
+            "rust/src/policy/save.rs",
+            "fn save(c: &dyn PsControlPlane) { let s = c.snapshot_node(0); }",
+        );
+        assert!(rules_fired(&v).contains(&"R3-quiesce"), "{v:?}");
+    }
+
+    #[test]
+    fn r3_satisfied_by_a_documented_contract_or_mechanism_file() {
+        // the quiesce mention may live in a comment — that IS the contract
+        assert!(lint_file(
+            "rust/src/policy/save.rs",
+            "//! Runs at the step barrier under the coordinator's PsQuiesce.\n\
+             fn save(c: &dyn PsControlPlane) { let s = c.snapshot_node(0); }",
+        )
+        .is_empty());
+        assert!(lint_file(
+            "rust/src/cluster/threaded.rs",
+            "fn t() { c.kill_node(1); }",
+        )
+        .is_empty());
+        // tests/examples are out of R3 scope
+        assert!(lint_file("rust/tests/serving.rs", "c.kill_node(1);").is_empty());
+    }
+
+    // ---- R4 ----
+
+    #[test]
+    fn r4_fires_on_descending_lock_acquisition() {
+        let v = lint_file(
+            "rust/src/trainer/mod.rs",
+            "for n in (0..k).rev() {\n    let g = self.node_write(n);\n}",
+        );
+        assert!(rules_fired(&v).contains(&"R4-lock-order"), "{v:?}");
+    }
+
+    #[test]
+    fn r4_spares_ascending_order_and_distant_rev() {
+        assert!(lint_file(
+            "rust/src/trainer/mod.rs",
+            "for n in 0..k {\n    let g = self.node_write(n);\n}",
+        )
+        .is_empty());
+        // a .rev( far from any lock acquisition (e.g. backprop layers)
+        assert!(lint_file(
+            "rust/src/runtime/native.rs",
+            "for l in (0..n_top).rev() {\n    let w = self.layer(l);\n}\nfn other() {\n    let g = self.node_read(0);\n}",
+        )
+        .is_empty());
+    }
+
+    // ---- the real tree must be clean (this is the CI gate's substance) ----
+
+    #[test]
+    fn real_tree_has_no_violations() {
+        let violations = lint_tree(&repo_root());
+        assert!(
+            violations.is_empty(),
+            "invariant violations in the tree:\n{}",
+            violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+
+    // ---- end-to-end: a seeded violation in a fake tree is caught ----
+
+    #[test]
+    fn seeded_violation_fails_a_tree_scan() {
+        let dir = std::env::temp_dir().join(format!(
+            "invariant-lint-selftest-{}",
+            std::process::id()
+        ));
+        let src_dir = dir.join("rust/src");
+        std::fs::create_dir_all(&src_dir).unwrap();
+        std::fs::write(
+            src_dir.join("bad.rs"),
+            "pub fn f(p: *const u8) -> u8 { unsafe { *p } }\n",
+        )
+        .unwrap();
+        let violations = lint_tree(&dir);
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(violations.len(), 1, "{violations:?}");
+        assert_eq!(violations[0].rule, "R1-unsafe-confinement");
+        assert_eq!(violations[0].file, "rust/src/bad.rs");
+    }
+}

@@ -39,6 +39,16 @@
 //!                       and `serve_contention[...,serving=off/on]` apply
 //!                       throughput rows quantifying what serving costs
 //!                       the training hot path
+//!   gather_plan[]     — route-once batch plans (ISSUE 10): planned
+//!                       (within-batch deduplicated, pooled-buffer) vs
+//!                       unplanned gather throughput at zipf_s =
+//!                       0.0/0.9/1.2 on both backends, plus
+//!                       `[...,alloc_per_step]` rows whose
+//!                       throughput_per_s carries the counted heap
+//!                       allocations per steady-state planned step
+//!                       (build + gather + per-node applies) — the CI
+//!                       gate reads inproc == 0 and threaded-on ≥
+//!                       1.3× threaded-off at zipf_s=1.2
 //!   pjrt_*            — L2 executables from Rust: train_step / predict
 //!                       latency, and the full e2e step
 //!
@@ -57,7 +67,8 @@ use cpr::checkpoint::v2::V2Engine;
 use cpr::checkpoint::writer_pool::WriterPool;
 use cpr::checkpoint::CheckpointStore;
 use cpr::cluster::{
-    PsBackend, PsControlPlane, PsDataPlane, PsServePlane, ShardedPs, ThreadedCluster,
+    PlanArena, PsBackend, PsControlPlane, PsDataPlane, PsServePlane, ShardedPs,
+    ThreadedCluster,
 };
 use cpr::config::{preset, CkptCodec, PsBackendKind};
 use cpr::coordinator::{run_training, RunOptions};
@@ -66,8 +77,17 @@ use cpr::embedding::{PsCluster, TableInfo};
 use cpr::metrics::auc;
 use cpr::policy::PriorityTracker;
 use cpr::runtime::Runtime;
+use cpr::testing::alloc;
 use cpr::util::dist::Zipf;
 use cpr::util::rng::Rng;
+
+// The whole bench binary runs under the counting allocator so the
+// `gather_plan[...,alloc_per_step]` rows can audit the planned hot path.
+// Counting is off unless a thread opts in via `alloc::count_allocs`, so
+// every other section pays one thread-local read per allocation, nothing
+// more.
+#[global_allocator]
+static ALLOC: alloc::CountingAlloc = alloc::CountingAlloc;
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -114,6 +134,9 @@ fn main() {
     }
     if want("serve_qps") {
         serve_qps(quick);
+    }
+    if want("gather_plan") {
+        gather_plan(quick);
     }
     if want("pjrt") {
         pjrt(quick);
@@ -576,6 +599,134 @@ fn serve_qps(quick: bool) {
                       &tables, ns, qpss, run_ms);
     serve_qps_backend("threaded", |n| ThreadedCluster::new(tables.clone(), n, 7),
                       &tables, ns, qpss, run_ms);
+}
+
+// ---------------------------------------------------------------------------
+// Batch plans — route-once deduplicated gathers + the zero-alloc contract
+// ---------------------------------------------------------------------------
+
+/// Planned vs unplanned gather throughput for one backend across the
+/// Zipf-skew grid. `dedup=off` times the unplanned `gather_pooled` scan;
+/// `dedup=on` times the full planned path (`PlanArena::build` + the
+/// plan-driven gather) — the plan build is deliberately *inside* the
+/// timed region, since the trainer rebuilds it every step.
+fn gather_plan_backend<B: PsDataPlane>(
+    kind: &str,
+    cluster: &B,
+    quick: bool,
+    rows: usize,
+    t: usize,
+    dim: usize,
+    n_nodes: usize,
+) {
+    let b_sz = if quick { 256usize } else { 2048 };
+    let n_slots = b_sz * t;
+    let mut rng = Rng::new(23);
+    let mut out = vec![0.0f32; n_slots * dim];
+    let mut arena = PlanArena::new();
+    for s in [0.0f64, 0.9, 1.2] {
+        // s = 0 would make Zipf's normalizer uniform anyway, but the
+        // implementation requires s > 0 — sample the uniform grid point
+        // directly instead
+        let indices: Vec<u32> = if s == 0.0 {
+            (0..n_slots).map(|_| rng.below(rows as u64) as u32).collect()
+        } else {
+            let z = Zipf::new(rows, s);
+            (0..n_slots).map(|_| z.sample(&mut rng) as u32).collect()
+        };
+        bench(&format!("gather_plan[{kind},zipf_s={s:.1},dedup=off]"), quick)
+            .throughput(n_slots as u64)
+            .run(|| cluster.gather_pooled(&indices, 1, &mut out));
+        bench(&format!("gather_plan[{kind},zipf_s={s:.1},dedup=on]"), quick)
+            .throughput(n_slots as u64)
+            .run(|| {
+                arena.build(&indices, 1, t, n_nodes);
+                let (plan, scratch) = arena.parts_mut();
+                cluster.gather_planned(plan, scratch, &mut out);
+            });
+        arena.build(&indices, 1, t, n_nodes);
+        let plan = arena.plan();
+        println!("  -> {kind},zipf_s={s:.1}: {} unique of {} slots \
+                  ({:.1}% deduplicated)",
+                 plan.n_unique(), plan.n_slots(),
+                 100.0 * plan.dedup_hits() as f64 / plan.n_slots() as f64);
+    }
+}
+
+/// The allocation audit as a JSON row: run `steps` steady-state planned
+/// steps (plan build + planned gather + per-touched-node planned applies)
+/// after a worst-case all-distinct warmup, count heap allocations on this
+/// thread under the installed [`CountingAlloc`], and record
+/// allocations-per-step with a 1-second denominator so the artifact's
+/// `throughput_per_s` IS the count. The CI gate asserts the inproc row
+/// is exactly 0; the threaded row bounds caller-side mpsc traffic only
+/// (PS workers allocate on their own, uncounted threads).
+fn gather_plan_alloc_row<B: PsDataPlane>(
+    kind: &str,
+    cluster: &B,
+    quick: bool,
+    rows: usize,
+    t: usize,
+    dim: usize,
+    n_nodes: usize,
+) {
+    let b_sz = if quick { 256usize } else { 2048 };
+    let n_slots = b_sz * t;
+    let steps = if quick { 8u64 } else { 64 };
+    let mut rng = Rng::new(29);
+    let z = Zipf::new(rows, 1.2);
+    let batches: Vec<Vec<u32>> = (0..steps)
+        .map(|_| (0..n_slots).map(|_| z.sample(&mut rng) as u32).collect())
+        .collect();
+    let mut out = vec![0.0f32; n_slots * dim];
+    let grads = vec![0.001f32; n_slots * dim];
+    let mut arena = PlanArena::new();
+    let mut planned_step = |indices: &[u32]| {
+        arena.build(indices, 1, t, n_nodes);
+        let (plan, scratch) = arena.parts_mut();
+        cluster.gather_planned(plan, scratch, &mut out);
+        for node in 0..n_nodes {
+            if plan.touched().get(node) {
+                cluster.apply_grads_planned_node(
+                    node, plan, scratch, &grads, 0.01,
+                    cpr::embedding::EmbOptimizer::Sgd);
+            }
+        }
+    };
+    // warmup: an all-distinct batch is the worst case for every pooled
+    // buffer (n_unique == n_slots), so after it the arena's high-water
+    // marks cover anything the audited Zipf batches can need
+    let distinct: Vec<u32> = (0..n_slots).map(|i| (i % rows) as u32).collect();
+    planned_step(&distinct);
+    planned_step(&batches[0]);
+    let (allocs, ()) = alloc::count_allocs(|| {
+        for idx in &batches {
+            planned_step(idx);
+        }
+    });
+    let per_step = allocs / steps;
+    record_external(&format!("gather_plan[{kind},alloc_per_step]"),
+                    1.0, per_step);
+    println!("  -> {kind}: {allocs} allocations over {steps} planned steps \
+              ({per_step}/step)");
+}
+
+/// Route-once batch plans (ISSUE 10): dedup-on vs dedup-off gather
+/// throughput across the skew grid on both backends, plus the
+/// per-step allocation audit rows the CI perf gate reads.
+fn gather_plan(quick: bool) {
+    println!("\n-- gather_plan: route-once plans, dedup on/off, alloc audit --");
+    let dim = 16usize;
+    let t = 4usize;
+    let rows = 100_000usize;
+    let n_nodes = 4usize;
+    let tables: Vec<TableInfo> = (0..t).map(|_| TableInfo { rows, dim }).collect();
+    let inproc = PsCluster::new(tables.clone(), n_nodes, 7);
+    gather_plan_backend("inproc", &inproc, quick, rows, t, dim, n_nodes);
+    gather_plan_alloc_row("inproc", &inproc, quick, rows, t, dim, n_nodes);
+    let threaded = ThreadedCluster::new(tables.clone(), n_nodes, 7);
+    gather_plan_backend("threaded", &threaded, quick, rows, t, dim, n_nodes);
+    gather_plan_alloc_row("threaded", &threaded, quick, rows, t, dim, n_nodes);
 }
 
 // ---------------------------------------------------------------------------

@@ -19,7 +19,7 @@
 
 use std::collections::HashSet;
 
-use crate::cluster::PsDataPlane;
+use crate::cluster::{PlanAccess, PsDataPlane};
 use crate::util::rng::Rng;
 
 /// Which tables a tracker prioritizes: the `priority_tables` largest ones
@@ -69,6 +69,21 @@ impl MfuTracker {
                 if self.mask[t] {
                     self.counters[t][row as usize] += 1;
                 }
+            }
+        }
+    }
+
+    /// Planned variant of [`MfuTracker::record_batch_hot`]: consume the
+    /// batch plan's deduplicated access list, bumping each row's counter
+    /// by its within-batch multiplicity. `counter += count` is bit-exact
+    /// against `count` repetitions of `counter += 1` (u32 addition), so
+    /// MFU selections under planned recording match the full scan — the
+    /// plan-equivalence suite pins this through a whole training run.
+    pub fn record_accesses(&mut self, accesses: &[PlanAccess]) {
+        for a in accesses {
+            let t = a.table as usize;
+            if self.mask[t] {
+                self.counters[t][a.row as usize] += a.count;
             }
         }
     }
@@ -317,6 +332,25 @@ mod tests {
         t.clear_rows(0, &[5]);
         assert_eq!(t.count(0, 5), 0);
         assert_eq!(t.top_k(0, 1), vec![9]);
+    }
+
+    #[test]
+    fn mfu_planned_recording_matches_the_full_scan() {
+        let mask = vec![true, false];
+        let mut scan = MfuTracker::new(&[100, 10], &mask);
+        let mut planned = MfuTracker::new(&[100, 10], &mask);
+        // 3 samples × 2 tables: table-0 rows {5:2, 9:1}, table-1 masked off
+        scan.record_batch(&[5, 0, 5, 1, 9, 2], 2);
+        planned.record_accesses(&[
+            PlanAccess { table: 0, row: 5, count: 2 },
+            PlanAccess { table: 0, row: 9, count: 1 },
+            PlanAccess { table: 1, row: 0, count: 1 },
+            PlanAccess { table: 1, row: 1, count: 1 },
+            PlanAccess { table: 1, row: 2, count: 1 },
+        ]);
+        for r in 0..100 {
+            assert_eq!(scan.count(0, r), planned.count(0, r), "row {r}");
+        }
     }
 
     #[test]

@@ -45,10 +45,12 @@
 pub mod lock;
 #[cfg(feature = "loom")]
 pub mod models;
+pub mod plan;
 pub mod seqlock;
 pub mod sharded;
 pub mod threaded;
 
+pub use plan::{BatchPlan, NodeSet, PlanAccess, PlanArena, PlanScratch};
 pub use seqlock::{AtomicF32s, SeqLock};
 pub use sharded::{PsQuiesce, ShardedPs, Turnstile};
 pub use threaded::ThreadedCluster;
@@ -82,6 +84,12 @@ pub struct BackendStats {
     /// the threaded backend's snapshot reads never retry, so it stays 0
     /// there.
     pub serve_retries: u64,
+    /// Distinct `(table, row)` pairs fetched by planned gathers.
+    pub unique_rows: u64,
+    /// Duplicate slots planned gathers did *not* re-fetch (slots − uniques);
+    /// `dedup_hits / (unique_rows + dedup_hits)` is the measured dedup
+    /// ratio of the workload. Unplanned gathers leave both at 0.
+    pub dedup_hits: u64,
 }
 
 /// The ONE routing definition: global row `r` of any table lives on node
@@ -113,6 +121,8 @@ pub struct StatCounters {
     respawns: AtomicU64,
     serve_reads: AtomicU64,
     serve_retries: AtomicU64,
+    unique_rows: AtomicU64,
+    dedup_hits: AtomicU64,
 }
 
 impl Clone for StatCounters {
@@ -126,6 +136,8 @@ impl Clone for StatCounters {
             respawns: AtomicU64::new(s.respawns),
             serve_reads: AtomicU64::new(s.serve_reads),
             serve_retries: AtomicU64::new(s.serve_retries),
+            unique_rows: AtomicU64::new(s.unique_rows),
+            dedup_hits: AtomicU64::new(s.dedup_hits),
         }
     }
 }
@@ -161,6 +173,18 @@ impl StatCounters {
         }
     }
 
+    pub fn add_unique_rows(&self, n: u64) {
+        if n > 0 {
+            self.unique_rows.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn add_dedup_hits(&self, n: u64) {
+        if n > 0 {
+            self.dedup_hits.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
     pub fn read(&self) -> BackendStats {
         BackendStats {
             gathers: self.gathers.load(Ordering::Relaxed),
@@ -170,6 +194,8 @@ impl StatCounters {
             respawns: self.respawns.load(Ordering::Relaxed),
             serve_reads: self.serve_reads.load(Ordering::Relaxed),
             serve_retries: self.serve_retries.load(Ordering::Relaxed),
+            unique_rows: self.unique_rows.load(Ordering::Relaxed),
+            dedup_hits: self.dedup_hits.load(Ordering::Relaxed),
         }
     }
 }
@@ -213,6 +239,40 @@ pub trait PsDataPlane: Send + Sync {
     /// Multi-hot gather with sum pooling: `indices` is [B, T, H] row-major,
     /// `out` is [B, T, dim] with out[b,t] = Σ_h row(idx_h).
     fn gather_pooled(&self, indices: &[u32], hotness: usize, out: &mut [f32]);
+
+    /// Plan-driven pooled gather: same result as
+    /// [`gather_pooled`](Self::gather_pooled) on `plan.indices()`,
+    /// **bit-identical** (the plan's slot-placement map reproduces the
+    /// exact reassembly float-op order), but backends that override it
+    /// fetch each distinct `(table, row)` once and use `scratch`'s pooled
+    /// buffers so the steady-state call allocates nothing (in-proc) or
+    /// only bounded mpsc queue blocks (threaded). The default delegates to
+    /// the unplanned path, so custom backends and the reference loop are
+    /// untouched.
+    fn gather_planned(&self, plan: &plan::BatchPlan, scratch: &mut plan::PlanScratch, out: &mut [f32]) {
+        let _ = scratch;
+        self.gather_pooled(plan.indices(), plan.hotness(), out);
+    }
+
+    /// Plan-driven sibling of [`apply_grads_node`](Self::apply_grads_node):
+    /// apply only the updates owned by `node`, visiting exactly the slots
+    /// the filtered full scan would, in the same ascending-slot (sample)
+    /// order — duplicates deliberately still accumulate one by one, so the
+    /// result is bit-identical. Overrides skip the full index scan by
+    /// walking the plan's per-node slot list. Does not bump the apply
+    /// counter (the composing caller does, once per logical batch).
+    fn apply_grads_planned_node(
+        &self,
+        node: usize,
+        plan: &plan::BatchPlan,
+        scratch: &mut plan::PlanScratch,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    ) {
+        let _ = scratch;
+        self.apply_grads_node(node, plan.indices(), plan.hotness(), grads, lr, opt);
+    }
 
     /// Sparse update; duplicate rows accumulate in sample order.
     fn apply_grads(
@@ -388,6 +448,30 @@ impl PsDataPlane for PsCluster {
     fn gather_pooled(&self, indices: &[u32], hotness: usize, out: &mut [f32]) {
         self.stats.bump_gather();
         PsCluster::gather_pooled(self, indices, hotness, out);
+    }
+
+    fn gather_planned(
+        &self,
+        plan: &plan::BatchPlan,
+        scratch: &mut plan::PlanScratch,
+        out: &mut [f32],
+    ) {
+        self.stats.bump_gather();
+        self.stats.add_unique_rows(plan.n_unique() as u64);
+        self.stats.add_dedup_hits(plan.dedup_hits() as u64);
+        PsCluster::gather_planned_impl(self, plan, scratch, out);
+    }
+
+    fn apply_grads_planned_node(
+        &self,
+        node: usize,
+        plan: &plan::BatchPlan,
+        scratch: &mut plan::PlanScratch,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    ) {
+        PsCluster::apply_grads_planned_node_impl(self, node, plan, scratch, grads, lr, opt);
     }
 
     fn apply_grads(
@@ -594,6 +678,49 @@ mod tests {
             let snap = PsControlPlane::snapshot_node(&c, node);
             assert_eq!(&data[..], &snap.shards[0][..local_rows.len() * 4],
                        "node {node}");
+        }
+    }
+
+    #[test]
+    fn planned_gather_and_apply_match_unplanned_and_count_dedup() {
+        let c = cluster();
+        let opt = EmbOptimizer::RowAdagrad { eps: 1e-8 };
+        // hotness 2, batch 2, tables 2 — with duplicates (row 4 twice in
+        // t0, row 2 across both tables).
+        let idx = vec![4u32, 4, 2, 5, 2, 7, 1, 2];
+        let mut arena = PlanArena::new();
+        arena.build(&idx, 2, 2, c.n_nodes);
+        let (plan, scratch) = arena.parts_mut();
+
+        let mut want = vec![0.0; 2 * 2 * 4];
+        PsDataPlane::gather_pooled(&c, &idx, 2, &mut want);
+        let mut got = vec![0.0; 2 * 2 * 4];
+        PsDataPlane::gather_planned(&c, plan, scratch, &mut got);
+        assert_eq!(want, got);
+        let s = PsControlPlane::stats(&c);
+        assert_eq!(s.unique_rows + s.dedup_hits, idx.len() as u64);
+        assert_eq!(s.unique_rows, plan.n_unique() as u64);
+        assert!(s.dedup_hits >= 2);
+
+        // Planned per-node applies ≡ full apply_grads on a twin cluster.
+        let twin = cluster();
+        let grads = vec![0.25f32; 2 * 2 * 4];
+        PsDataPlane::apply_grads(&twin, &idx, 2, &grads, 0.7, opt);
+        for node in 0..c.n_nodes {
+            if plan.touched().get(node) {
+                PsDataPlane::apply_grads_planned_node(&c, node, plan, scratch, &grads, 0.7, opt);
+            }
+        }
+        c.counters().bump_apply();
+        let mut a = vec![0.0; 4];
+        let mut b = vec![0.0; 4];
+        for t in 0..2 {
+            let rows = if t == 0 { 11 } else { 6 };
+            for r in 0..rows {
+                c.read_row(t, r, &mut a);
+                twin.read_row(t, r, &mut b);
+                assert_eq!(a, b, "table {t} row {r}");
+            }
         }
     }
 

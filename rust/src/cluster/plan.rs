@@ -1,0 +1,629 @@
+//! Route-once batch plans: per-batch dedup + routing computed a single time.
+//!
+//! CPR's thesis is Zipfian access skew: a skewed batch carries its hottest
+//! rows dozens of times. The unplanned hot path routes, fetches, and ships
+//! every duplicate slot independently, and re-scans the full index list up
+//! to four times per step (touched-node discovery in gather *and* apply,
+//! policy access recording, v2 dirty-row capture). A [`BatchPlan`] collapses
+//! all of that into one pass over the batch:
+//!
+//! - **dedup**: each distinct `(table, global_row)` pair becomes one *unique
+//!   entry*, grouped by owning node, with an access count;
+//! - **placement**: `slot_unique` maps every flat slot back to its unique
+//!   entry so reassembly can reproduce the *exact* float-op order of the
+//!   unplanned pooled gather (copy at `slot % hotness == 0`, add otherwise,
+//!   in ascending slot order) — bit-identical by construction;
+//! - **touched nodes**: a stack [`NodeSet`] bitset replaces the
+//!   `vec![false; n_nodes]` the unplanned path used to allocate per call;
+//! - **apply order**: per-node ascending flat-slot lists so a planned apply
+//!   visits exactly the slots the filtered full scan would, in the same
+//!   order. Applies deliberately do **not** dedup: duplicate rows must
+//!   accumulate their gradients in sample order to stay bit-identical.
+//!
+//! A [`PlanArena`] owns one plan plus a [`PlanScratch`] of pooled reply and
+//! message buffers, so the steady-state planned step performs zero heap
+//! allocations on the in-proc backend (the threaded backend is bounded by
+//! mpsc queue-block amortization; see DESIGN.md).
+//!
+//! All storage is `Vec`s that are cleared and refilled in place; after a
+//! few warmup steps every buffer has reached its high-water capacity and
+//! `build` allocates nothing.
+
+use std::ops::Range;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Duration;
+
+/// Sentinel for an empty hash bucket. Valid keys always have the table in
+/// the high 32 bits and a row index below `u32::MAX` in the low bits, so
+/// `u64::MAX` (table `u32::MAX`, row `u32::MAX`) never collides with a real
+/// key at realistic table counts.
+const EMPTY: u64 = u64::MAX;
+
+/// One deduplicated access: `count` slots of the batch hit `(table, row)`.
+///
+/// `row` is the *global* row id (pre-routing); consumers that need the
+/// node-local id derive it via `row / n_nodes` as usual.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanAccess {
+    pub table: u32,
+    pub row: u32,
+    pub count: u32,
+}
+
+/// Fixed-size touched-node bitset (up to 256 nodes — far beyond the
+/// emulated clusters this repo runs). Lives on the stack / inline in the
+/// plan; replaces the per-call `vec![false; n_nodes]` allocation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NodeSet {
+    words: [u64; 4],
+}
+
+impl NodeSet {
+    pub fn new() -> Self {
+        Self { words: [0; 4] }
+    }
+
+    pub fn clear(&mut self) {
+        self.words = [0; 4];
+    }
+
+    #[inline]
+    pub fn insert(&mut self, node: usize) {
+        assert!(node < 256, "NodeSet supports at most 256 nodes, got {node}");
+        self.words[node / 64] |= 1u64 << (node % 64);
+    }
+
+    #[inline]
+    pub fn get(&self, node: usize) -> bool {
+        node < 256 && self.words[node / 64] >> (node % 64) & 1 == 1
+    }
+
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+#[inline]
+fn mix(mut h: u64) -> u64 {
+    // splitmix64-style finalizer: cheap, good avalanche for packed keys.
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    h ^= h >> 33;
+    h
+}
+
+/// A batch plan: routing, dedup, and placement for one `(indices, hotness)`
+/// batch, built once and shared by the gather, the per-node applies, and
+/// policy access recording. All storage is pooled across `build` calls.
+#[derive(Debug, Default)]
+pub struct BatchPlan {
+    /// Pooled copy of the batch's flat index list (slot order).
+    indices: Vec<u32>,
+    hotness: usize,
+    num_tables: usize,
+    n_nodes: usize,
+    touched: NodeSet,
+    n_unique: usize,
+
+    // Open-addressing dedup hash: key = (table << 32) | global_row.
+    hash_keys: Vec<u64>,
+    hash_vals: Vec<u32>,
+
+    /// flat slot -> final (node-grouped) unique id.
+    slot_unique: Vec<u32>,
+    /// Packed key of each unique entry, grouped by owning node.
+    unique_key: Vec<u64>,
+    /// Number of slots referencing each unique entry.
+    access_count: Vec<u32>,
+    /// Per-node offsets into `unique_key`/`access_count` (len n_nodes + 1).
+    node_off: Vec<u32>,
+
+    /// Flat slot ids grouped by owning node, ascending within each node —
+    /// exactly the slots the filtered full scan of `apply_grads_node` would
+    /// visit, in the same order.
+    apply_slots: Vec<u32>,
+    apply_off: Vec<u32>,
+
+    // Build scratch (pooled).
+    remap: Vec<u32>,
+    prov_key: Vec<u64>,
+    prov_count: Vec<u32>,
+    node_unique_count: Vec<u32>,
+    node_slot_count: Vec<u32>,
+    cursor: Vec<u32>,
+}
+
+impl BatchPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build the plan for one batch. `indices` is the flat
+    /// `batch * num_tables * hotness` slot list produced by the dataset.
+    ///
+    /// Steady state (capacities warmed up): zero heap allocations.
+    pub fn build(&mut self, indices: &[u32], hotness: usize, num_tables: usize, n_nodes: usize) {
+        assert!(hotness > 0, "hotness must be positive");
+        assert!(num_tables > 0, "num_tables must be positive");
+        assert!(n_nodes > 0, "n_nodes must be positive");
+        let n_slots = indices.len();
+        assert!(
+            n_slots % (num_tables * hotness) == 0,
+            "index list length {n_slots} not a multiple of num_tables*hotness"
+        );
+
+        self.hotness = hotness;
+        self.num_tables = num_tables;
+        self.n_nodes = n_nodes;
+        self.touched.clear();
+        self.indices.clear();
+        self.indices.extend_from_slice(indices);
+
+        self.slot_unique.clear();
+        self.prov_key.clear();
+        self.prov_count.clear();
+
+        self.node_unique_count.clear();
+        self.node_unique_count.resize(n_nodes, 0);
+        self.node_slot_count.clear();
+        self.node_slot_count.resize(n_nodes, 0);
+
+        if n_slots == 0 {
+            self.n_unique = 0;
+            self.unique_key.clear();
+            self.access_count.clear();
+            self.apply_slots.clear();
+            self.node_off.clear();
+            self.node_off.resize(n_nodes + 1, 0);
+            self.apply_off.clear();
+            self.apply_off.resize(n_nodes + 1, 0);
+            return;
+        }
+
+        // Hash capacity: power of two >= 2 * n_slots keeps load factor <= 0.5.
+        let cap = (2 * n_slots).next_power_of_two();
+        if self.hash_keys.len() != cap {
+            self.hash_keys.clear();
+            self.hash_keys.resize(cap, EMPTY);
+            self.hash_vals.clear();
+            self.hash_vals.resize(cap, 0);
+        } else {
+            self.hash_keys.fill(EMPTY);
+        }
+        let mask = cap - 1;
+
+        // Pass 1: dedup into provisional ids (first-seen order), count
+        // per-node uniques and slots, record touched nodes.
+        for (slot, &row) in indices.iter().enumerate() {
+            let table = (slot / hotness) % num_tables;
+            let node = row as usize % n_nodes;
+            let key = ((table as u64) << 32) | row as u64;
+            let mut pos = mix(key) as usize & mask;
+            let uid = loop {
+                let k = self.hash_keys[pos];
+                if k == EMPTY {
+                    let uid = self.prov_key.len() as u32;
+                    self.hash_keys[pos] = key;
+                    self.hash_vals[pos] = uid;
+                    self.prov_key.push(key);
+                    self.prov_count.push(1);
+                    self.node_unique_count[node] += 1;
+                    self.touched.insert(node);
+                    break uid;
+                }
+                if k == key {
+                    let uid = self.hash_vals[pos];
+                    self.prov_count[uid as usize] += 1;
+                    break uid;
+                }
+                pos = (pos + 1) & mask;
+            };
+            self.slot_unique.push(uid);
+            self.node_slot_count[node] += 1;
+        }
+        let n_unique = self.prov_key.len();
+        self.n_unique = n_unique;
+
+        // Prefix sums: per-node unique and apply-slot ranges.
+        self.node_off.clear();
+        self.node_off.push(0);
+        let mut acc = 0u32;
+        for &c in &self.node_unique_count {
+            acc += c;
+            self.node_off.push(acc);
+        }
+        self.apply_off.clear();
+        self.apply_off.push(0);
+        let mut acc = 0u32;
+        for &c in &self.node_slot_count {
+            acc += c;
+            self.apply_off.push(acc);
+        }
+
+        // Remap provisional -> final node-grouped unique ids. Within a node,
+        // uniques stay in first-seen order (stable, deterministic).
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&self.node_off[..n_nodes]);
+        self.remap.clear();
+        self.remap.resize(n_unique, 0);
+        self.unique_key.clear();
+        self.unique_key.resize(n_unique, 0);
+        self.access_count.clear();
+        self.access_count.resize(n_unique, 0);
+        for uid in 0..n_unique {
+            let key = self.prov_key[uid];
+            let node = (key & 0xFFFF_FFFF) as usize % n_nodes;
+            let fin = self.cursor[node];
+            self.cursor[node] += 1;
+            self.remap[uid] = fin;
+            self.unique_key[fin as usize] = key;
+            self.access_count[fin as usize] = self.prov_count[uid];
+        }
+
+        // Pass 2: remap slot_unique in place and fill per-node apply-slot
+        // lists (ascending within each node because slots are visited in
+        // ascending order).
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&self.apply_off[..n_nodes]);
+        self.apply_slots.clear();
+        self.apply_slots.resize(n_slots, 0);
+        for slot in 0..n_slots {
+            let uid = self.slot_unique[slot] as usize;
+            self.slot_unique[slot] = self.remap[uid];
+            let node = self.indices[slot] as usize % n_nodes;
+            let c = self.cursor[node];
+            self.apply_slots[c as usize] = slot as u32;
+            self.cursor[node] = c + 1;
+        }
+    }
+
+    /// The flat slot index list the plan was built from.
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    pub fn hotness(&self) -> usize {
+        self.hotness
+    }
+
+    pub fn num_tables(&self) -> usize {
+        self.num_tables
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Number of distinct `(table, row)` pairs in the batch.
+    pub fn n_unique(&self) -> usize {
+        self.n_unique
+    }
+
+    /// Slots minus uniques: how many row fetches dedup saved this batch.
+    pub fn dedup_hits(&self) -> usize {
+        self.indices.len() - self.n_unique
+    }
+
+    pub fn touched(&self) -> &NodeSet {
+        &self.touched
+    }
+
+    /// Range of unique-entry ids owned by `node`.
+    pub fn unique_range(&self, node: usize) -> Range<usize> {
+        self.node_off[node] as usize..self.node_off[node + 1] as usize
+    }
+
+    /// Packed `(table << 32) | row` key of unique entry `u`.
+    #[inline]
+    pub fn unique_key(&self, u: usize) -> u64 {
+        self.unique_key[u]
+    }
+
+    #[inline]
+    pub fn unique_table(&self, u: usize) -> usize {
+        (self.unique_key[u] >> 32) as usize
+    }
+
+    /// Global row id of unique entry `u`.
+    #[inline]
+    pub fn unique_row(&self, u: usize) -> usize {
+        (self.unique_key[u] & 0xFFFF_FFFF) as usize
+    }
+
+    /// Node-local row id of unique entry `u`.
+    #[inline]
+    pub fn unique_local(&self, u: usize) -> usize {
+        self.unique_row(u) / self.n_nodes
+    }
+
+    /// flat slot -> final unique id, for bit-identical reassembly.
+    pub fn slot_unique(&self) -> &[u32] {
+        &self.slot_unique
+    }
+
+    /// Flat slot ids owned by `node`, ascending — the exact visit order of
+    /// the unplanned filtered scan in `apply_grads_node`.
+    pub fn apply_slots(&self, node: usize) -> &[u32] {
+        let r = self.apply_off[node] as usize..self.apply_off[node + 1] as usize;
+        &self.apply_slots[r]
+    }
+
+    /// Deduplicated access record for unique entry `u`.
+    #[inline]
+    pub fn access(&self, u: usize) -> PlanAccess {
+        PlanAccess {
+            table: (self.unique_key[u] >> 32) as u32,
+            row: (self.unique_key[u] & 0xFFFF_FFFF) as u32,
+            count: self.access_count[u],
+        }
+    }
+
+    /// Collect all accesses into a fresh Vec (for shipping across the
+    /// trainer reply channel; allocates, so not part of the zero-alloc
+    /// data-plane contract).
+    pub fn collect_accesses(&self) -> Vec<PlanAccess> {
+        (0..self.n_unique).map(|u| self.access(u)).collect()
+    }
+}
+
+/// Reply message for planned threaded-backend operations: `(node, reqs,
+/// vals)` — the request/value buffers travel back so the router can return
+/// them to the pool.
+pub type PlannedReply = (usize, Vec<u64>, Vec<f32>);
+
+/// Pooled scratch buffers for planned data-plane calls. One per trainer
+/// (or test/bench) handle; buffers grow to a high-water mark during warmup
+/// and are reused forever after.
+#[derive(Debug)]
+pub struct PlanScratch {
+    /// Dense unique-row value buffer: `n_unique * dim` floats, node-grouped.
+    pub unique_vals: Vec<f32>,
+    /// One-row working buffer (dim floats) for in-proc applies.
+    pub row_buf: Vec<f32>,
+
+    // Per-node pooled message buffers for the threaded backend.
+    gather_reqs: Vec<Vec<u64>>,
+    gather_vals: Vec<Vec<f32>>,
+    apply_reqs: Vec<u64>,
+    apply_grads: Vec<f32>,
+
+    // Persistent reply path: replaces the fresh mpsc::channel() per call.
+    reply_tx: Sender<PlannedReply>,
+    reply_rx: Receiver<PlannedReply>,
+}
+
+impl Default for PlanScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlanScratch {
+    pub fn new() -> Self {
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        Self {
+            unique_vals: Vec::new(),
+            row_buf: Vec::new(),
+            gather_reqs: Vec::new(),
+            gather_vals: Vec::new(),
+            apply_reqs: Vec::new(),
+            apply_grads: Vec::new(),
+            reply_tx,
+            reply_rx,
+        }
+    }
+
+    /// Ensure per-node buffer pools cover `n_nodes` nodes.
+    pub fn ensure_nodes(&mut self, n_nodes: usize) {
+        while self.gather_reqs.len() < n_nodes {
+            self.gather_reqs.push(Vec::new());
+            self.gather_vals.push(Vec::new());
+        }
+    }
+
+    /// Take node `node`'s pooled gather buffers (cleared).
+    pub fn take_gather_bufs(&mut self, node: usize) -> (Vec<u64>, Vec<f32>) {
+        let mut reqs = std::mem::take(&mut self.gather_reqs[node]);
+        let mut vals = std::mem::take(&mut self.gather_vals[node]);
+        reqs.clear();
+        vals.clear();
+        (reqs, vals)
+    }
+
+    /// Return node `node`'s gather buffers to the pool.
+    pub fn put_gather_bufs(&mut self, node: usize, reqs: Vec<u64>, vals: Vec<f32>) {
+        self.gather_reqs[node] = reqs;
+        self.gather_vals[node] = vals;
+    }
+
+    /// Take the pooled apply buffers (cleared).
+    pub fn take_apply_bufs(&mut self) -> (Vec<u64>, Vec<f32>) {
+        let mut reqs = std::mem::take(&mut self.apply_reqs);
+        let mut grads = std::mem::take(&mut self.apply_grads);
+        reqs.clear();
+        grads.clear();
+        (reqs, grads)
+    }
+
+    /// Return the apply buffers to the pool.
+    pub fn put_apply_bufs(&mut self, reqs: Vec<u64>, grads: Vec<f32>) {
+        self.apply_reqs = reqs;
+        self.apply_grads = grads;
+    }
+
+    /// Clone the persistent reply sender for attaching to a node message.
+    pub fn reply_sender(&self) -> Sender<PlannedReply> {
+        self.reply_tx.clone()
+    }
+
+    /// Receive one planned reply. The scratch itself holds a live sender,
+    /// so a plain `recv()` would hang forever if a worker died mid-op;
+    /// a generous timeout converts that hang into a diagnosable panic.
+    pub fn recv_reply(&self) -> PlannedReply {
+        match self.reply_rx.recv_timeout(Duration::from_secs(600)) {
+            Ok(r) => r,
+            Err(e) => panic!("planned reply lost — PS worker died mid-planned-op? ({e})"),
+        }
+    }
+}
+
+/// Owns one [`BatchPlan`] and its [`PlanScratch`]; the unit a trainer (or
+/// bench loop) keeps across steps so all plan storage is pooled.
+#[derive(Debug, Default)]
+pub struct PlanArena {
+    plan: BatchPlan,
+    scratch: PlanScratch,
+}
+
+impl PlanArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Rebuild the plan for a new batch (pooled; steady-state alloc-free).
+    pub fn build(&mut self, indices: &[u32], hotness: usize, num_tables: usize, n_nodes: usize) {
+        self.plan.build(indices, hotness, num_tables, n_nodes);
+        self.scratch.ensure_nodes(n_nodes);
+    }
+
+    pub fn plan(&self) -> &BatchPlan {
+        &self.plan
+    }
+
+    /// Split borrow: the plan (shared) and the scratch (mutable) at once.
+    pub fn parts_mut(&mut self) -> (&BatchPlan, &mut PlanScratch) {
+        (&self.plan, &mut self.scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nodeset_basics() {
+        let mut s = NodeSet::new();
+        assert!(!s.get(0));
+        s.insert(0);
+        s.insert(63);
+        s.insert(64);
+        s.insert(255);
+        assert!(s.get(0) && s.get(63) && s.get(64) && s.get(255));
+        assert!(!s.get(1) && !s.get(200));
+        assert_eq!(s.count(), 4);
+        s.clear();
+        assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at most 256 nodes")]
+    fn nodeset_overflow_panics() {
+        NodeSet::new().insert(256);
+    }
+
+    #[test]
+    fn plan_dedup_and_placement() {
+        // 2 tables, hotness 2, batch 2, 3 nodes.
+        // sample 0: t0 rows [5, 5], t1 rows [5, 7]
+        // sample 1: t0 rows [5, 9], t1 rows [7, 7]
+        let indices = [5u32, 5, 5, 7, 5, 9, 7, 7];
+        let mut plan = BatchPlan::new();
+        plan.build(&indices, 2, 2, 3);
+
+        assert_eq!(plan.n_slots(), 8);
+        // Uniques: (t0,5), (t1,5), (t1,7), (t0,9)  -> 4
+        assert_eq!(plan.n_unique(), 4);
+        assert_eq!(plan.dedup_hits(), 4);
+        // Nodes touched: 5%3=2, 7%3=1, 9%3=0.
+        assert!(plan.touched().get(0) && plan.touched().get(1) && plan.touched().get(2));
+        assert_eq!(plan.touched().count(), 3);
+
+        // Node-grouped uniques: node0 owns (t0,9); node1 owns (t1,7);
+        // node2 owns (t0,5),(t1,5) in first-seen order.
+        assert_eq!(plan.unique_range(0), 0..1);
+        assert_eq!(plan.unique_range(1), 1..2);
+        assert_eq!(plan.unique_range(2), 2..4);
+        assert_eq!((plan.unique_table(0), plan.unique_row(0)), (0, 9));
+        assert_eq!((plan.unique_table(1), plan.unique_row(1)), (1, 7));
+        assert_eq!((plan.unique_table(2), plan.unique_row(2)), (0, 5));
+        assert_eq!((plan.unique_table(3), plan.unique_row(3)), (1, 5));
+        assert_eq!(plan.unique_local(1), 2); // row 7 on 3 nodes -> local 2
+
+        // Access counts: (t0,5) hit 3x, (t1,7) hit 3x, others once.
+        assert_eq!(plan.access(2), PlanAccess { table: 0, row: 5, count: 3 });
+        assert_eq!(plan.access(1), PlanAccess { table: 1, row: 7, count: 3 });
+        assert_eq!(plan.access(0).count, 1);
+        assert_eq!(plan.access(3).count, 1);
+        let total: u32 = (0..plan.n_unique()).map(|u| plan.access(u).count).sum();
+        assert_eq!(total as usize, plan.n_slots());
+
+        // Placement: every slot maps to the unique entry with its key.
+        for (slot, &u) in plan.slot_unique().iter().enumerate() {
+            let table = (slot / 2) % 2;
+            let key = ((table as u64) << 32) | indices[slot] as u64;
+            assert_eq!(plan.unique_key(u as usize), key, "slot {slot}");
+        }
+
+        // Apply slots: grouped by node, ascending, covering all slots once.
+        assert_eq!(plan.apply_slots(0), &[5]); // row 9
+        assert_eq!(plan.apply_slots(1), &[3, 6, 7]); // row 7 slots
+        assert_eq!(plan.apply_slots(2), &[0, 1, 2, 4]); // row 5 slots
+    }
+
+    #[test]
+    fn plan_rebuild_is_alloc_stable_and_correct() {
+        let mut plan = BatchPlan::new();
+        plan.build(&[1, 2, 3, 4], 1, 4, 2);
+        assert_eq!(plan.n_unique(), 4);
+        // Rebuild with a different shape: state fully reset.
+        plan.build(&[6u32, 6, 6, 6, 6, 6], 3, 2, 4);
+        assert_eq!(plan.n_slots(), 6);
+        // (t0,6) and (t1,6) are distinct uniques (cross-table duplicate rows).
+        assert_eq!(plan.n_unique(), 2);
+        assert_eq!(plan.dedup_hits(), 4);
+        assert_eq!(plan.touched().count(), 1);
+        assert!(plan.touched().get(6 % 4));
+        assert_eq!(plan.apply_slots(2), &[0, 1, 2, 3, 4, 5]);
+        assert_eq!(plan.apply_slots(0).len(), 0);
+    }
+
+    #[test]
+    fn empty_batch_plan() {
+        let mut plan = BatchPlan::new();
+        plan.build(&[], 2, 3, 4);
+        assert_eq!(plan.n_slots(), 0);
+        assert_eq!(plan.n_unique(), 0);
+        assert_eq!(plan.touched().count(), 0);
+        for n in 0..4 {
+            assert!(plan.unique_range(n).is_empty());
+            assert!(plan.apply_slots(n).is_empty());
+        }
+    }
+
+    #[test]
+    fn arena_split_borrow() {
+        let mut arena = PlanArena::new();
+        arena.build(&[0u32, 1, 2, 3], 1, 2, 2);
+        let (plan, scratch) = arena.parts_mut();
+        assert_eq!(plan.n_unique(), 4);
+        scratch.unique_vals.resize(plan.n_unique() * 4, 0.0);
+        let (reqs, vals) = scratch.take_gather_bufs(0);
+        assert!(reqs.is_empty() && vals.is_empty());
+        scratch.put_gather_bufs(0, reqs, vals);
+    }
+
+    #[test]
+    fn scratch_reply_roundtrip() {
+        let scratch = PlanScratch::new();
+        let tx = scratch.reply_sender();
+        tx.send((3, vec![1u64], vec![2.0f32])).unwrap();
+        let (node, reqs, vals) = scratch.recv_reply();
+        assert_eq!(node, 3);
+        assert_eq!(reqs, vec![1u64]);
+        assert_eq!(vals, vec![2.0f32]);
+    }
+}

@@ -37,6 +37,7 @@ use std::sync::{
 use crate::embedding::{EmbOptimizer, TableInfo};
 use crate::telemetry;
 
+use super::plan::{BatchPlan, NodeSet, PlanScratch};
 use super::{PsBackend, PsDataPlane, PsServePlane, ServeError, StatCounters};
 
 /// A monotone ticket sequencer: thread `wait_for(t)` blocks until every
@@ -129,20 +130,53 @@ impl<B: PsBackend> ShardedPs<B> {
     ) {
         let _epoch = self.epoch_read();
         let n = self.inner.backend.n_nodes();
-        let mut touched = vec![false; n];
+        let mut touched = NodeSet::new();
         for &row in indices {
-            touched[row as usize % n] = true;
+            touched.insert(row as usize % n);
         }
-        for (node, &is_touched) in touched.iter().enumerate() {
+        for node in 0..n {
             {
                 let _t = telemetry::span_node("turnstile_wait", node);
                 self.inner.turnstiles[node].wait_for(ticket);
             }
-            if is_touched {
+            if touched.get(node) {
                 let _a = telemetry::span_node("apply_node", node);
                 self.inner
                     .backend
                     .apply_grads_node(node, indices, hotness, grads, lr, opt);
+            }
+            self.inner.turnstiles[node].advance();
+        }
+        self.inner.backend.counters().bump_apply();
+    }
+
+    /// Plan-driven sibling of [`ShardedPs::apply_grads_ordered`]: the
+    /// same per-node turnstile sequencing and telemetry, but the touched
+    /// set and each node's slot list come from the plan — no re-scan of
+    /// the index list and no per-call allocation. Bit-identical: each
+    /// node's planned apply visits the same slots in the same sample
+    /// order as the filtered full scan.
+    pub fn apply_grads_ordered_planned(
+        &self,
+        ticket: u64,
+        plan: &BatchPlan,
+        scratch: &mut PlanScratch,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    ) {
+        let _epoch = self.epoch_read();
+        let n = self.inner.backend.n_nodes();
+        for node in 0..n {
+            {
+                let _t = telemetry::span_node("turnstile_wait", node);
+                self.inner.turnstiles[node].wait_for(ticket);
+            }
+            if plan.touched().get(node) {
+                let _a = telemetry::span_node("apply_node", node);
+                self.inner
+                    .backend
+                    .apply_grads_planned_node(node, plan, scratch, grads, lr, opt);
             }
             self.inner.turnstiles[node].advance();
         }
@@ -228,6 +262,27 @@ impl<B: PsBackend> PsDataPlane for ShardedPs<B> {
         let _g = telemetry::span("gather");
         let _epoch = self.epoch_read();
         self.inner.backend.gather_pooled(indices, hotness, out);
+    }
+
+    fn gather_planned(&self, plan: &BatchPlan, scratch: &mut PlanScratch, out: &mut [f32]) {
+        let _g = telemetry::span("gather");
+        let _epoch = self.epoch_read();
+        self.inner.backend.gather_planned(plan, scratch, out);
+    }
+
+    fn apply_grads_planned_node(
+        &self,
+        node: usize,
+        plan: &BatchPlan,
+        scratch: &mut PlanScratch,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    ) {
+        let _epoch = self.epoch_read();
+        self.inner
+            .backend
+            .apply_grads_planned_node(node, plan, scratch, grads, lr, opt);
     }
 
     fn apply_grads(
@@ -471,6 +526,40 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn planned_ordered_apply_matches_unplanned() {
+        use crate::cluster::PlanArena;
+        let a = ShardedPs::new(PsCluster::new(TABLES.to_vec(), 3, 5));
+        let b = ShardedPs::new(PsCluster::new(TABLES.to_vec(), 3, 5));
+        let mut rng = Rng::new(6);
+        let mut arena = PlanArena::new();
+        let opt = EmbOptimizer::RowAdagrad { eps: 1e-8 };
+        for step in 0..3u64 {
+            let hotness = 1 + (step as usize) % 2;
+            let idx: Vec<u32> = (0..4 * 2 * hotness)
+                .enumerate()
+                .map(|(i, _)| {
+                    let t = (i / hotness) % 2;
+                    rng.below(TABLES[t].rows as u64) as u32
+                })
+                .collect();
+            let grads: Vec<f32> = (0..4 * 2 * 4).map(|_| rng.f32() - 0.5).collect();
+            a.apply_grads_ordered(step, &idx, hotness, &grads, 0.3, opt);
+            arena.build(&idx, hotness, 2, 3);
+            let (plan, scratch) = arena.parts_mut();
+            b.apply_grads_ordered_planned(step, plan, scratch, &grads, 0.3, opt);
+        }
+        assert_eq!(a.stats().applies, b.stats().applies);
+        let qa = a.quiesce();
+        let qb = b.quiesce();
+        for node in 0..3 {
+            let sa = qa.snapshot_node(node);
+            let sb = qb.snapshot_node(node);
+            assert_eq!(sa.shards, sb.shards, "node {node} shards diverged");
+            assert_eq!(sa.opt, sb.opt, "node {node} optimizer state diverged");
+        }
     }
 
     #[test]

@@ -34,6 +34,7 @@ use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex, PoisonError, RwLock};
 use std::thread::JoinHandle;
 
+use super::plan::{BatchPlan, PlanScratch, PlannedReply};
 use super::{
     init_node_state, route_row, NodeSnapshot, PsControlPlane, PsDataPlane,
     PsServePlane, ServeError, StatCounters,
@@ -61,6 +62,24 @@ enum NodeMsg {
         lr: f32,
         opt: EmbOptimizer,
         ack: Sender<usize>,
+    },
+    /// Plan-driven gather: `reqs` are packed `(table << 32) | local` keys,
+    /// each a *distinct* row (the plan deduplicated them), and `vals` is
+    /// the caller's pooled value buffer — both travel back in the reply so
+    /// the router returns them to its [`PlanScratch`] pool instead of
+    /// allocating per call.
+    GatherPlanned { reqs: Vec<u64>, vals: Vec<f32>, reply: Sender<PlannedReply> },
+    /// Plan-driven apply: grad slice `i` applies to packed req `i`, in
+    /// order (the router packed them in ascending flat-slot order, so
+    /// duplicates accumulate in sample order — bit-identical to the
+    /// filtered scan). Buffers travel back for pooling, doubling as the
+    /// completion ack.
+    ApplyPlanned {
+        reqs: Vec<u64>,
+        grads: Vec<f32>,
+        lr: f32,
+        opt: EmbOptimizer,
+        reply: Sender<PlannedReply>,
     },
     ReadRows { table: u32, locals: Vec<u32>, reply: Sender<(usize, Vec<f32>, Vec<f32>)> },
     Snapshot { reply: Sender<NodeSnapshot> },
@@ -135,6 +154,29 @@ fn worker_loop(
                     opt.apply(dst, g, &mut opt_state[t][local], lr);
                 }
                 let _ = ack.send(node_id);
+            }
+            NodeMsg::GatherPlanned { reqs, mut vals, reply } => {
+                let dim = tables[0].dim; // gather path: uniform dim
+                vals.clear();
+                vals.resize(reqs.len() * dim, 0.0);
+                for (i, &key) in reqs.iter().enumerate() {
+                    let t = (key >> 32) as usize;
+                    let local = (key & 0xFFFF_FFFF) as usize;
+                    vals[i * dim..(i + 1) * dim]
+                        .copy_from_slice(&shards[t][local * dim..(local + 1) * dim]);
+                }
+                let _ = reply.send((node_id, reqs, vals));
+            }
+            NodeMsg::ApplyPlanned { reqs, grads, lr, opt, reply } => {
+                let dim = tables[0].dim;
+                for (i, &key) in reqs.iter().enumerate() {
+                    let t = (key >> 32) as usize;
+                    let local = (key & 0xFFFF_FFFF) as usize;
+                    let g = &grads[i * dim..(i + 1) * dim];
+                    let dst = &mut shards[t][local * dim..(local + 1) * dim];
+                    opt.apply(dst, g, &mut opt_state[t][local], lr);
+                }
+                let _ = reply.send((node_id, reqs, grads));
             }
             NodeMsg::ReadRows { table, locals, reply } => {
                 let t = table as usize;
@@ -341,6 +383,61 @@ impl PsDataPlane for ThreadedCluster {
         }
     }
 
+    /// Plan-driven pooled gather: ship each touched node one compact,
+    /// *deduplicated* request message (packed `(table << 32) | local`
+    /// keys) through the scratch's persistent reply channel, landing the
+    /// replies directly in the pooled `unique_vals` buffer — no fresh
+    /// channel, no per-node reply `Vec`s, no duplicate row shipping.
+    /// Reassembly walks the plan's slot-placement map in ascending slot
+    /// order, the exact pooling order of the unplanned path, so the
+    /// output floats are bit-identical. Remaining steady-state
+    /// allocations are mpsc queue blocks only (bounded; see DESIGN.md).
+    fn gather_planned(&self, plan: &BatchPlan, scratch: &mut PlanScratch, out: &mut [f32]) {
+        self.stats.bump_gather();
+        self.stats.add_unique_rows(plan.n_unique() as u64);
+        self.stats.add_dedup_hits(plan.dedup_hits() as u64);
+        let dim = self.tables[0].dim;
+        debug_assert!(self.tables.iter().all(|i| i.dim == dim));
+        debug_assert_eq!(plan.n_nodes(), self.n_nodes);
+        let hotness = plan.hotness();
+        debug_assert_eq!(out.len() * hotness, plan.n_slots() * dim);
+        scratch.ensure_nodes(self.n_nodes);
+        scratch.unique_vals.resize(plan.n_unique() * dim, 0.0);
+        let mut expected = 0usize;
+        for node in 0..self.n_nodes {
+            let range = plan.unique_range(node);
+            if range.is_empty() {
+                continue;
+            }
+            let (mut reqs, vals) = scratch.take_gather_bufs(node);
+            for u in range {
+                reqs.push(((plan.unique_table(u) as u64) << 32) | plan.unique_local(u) as u64);
+            }
+            self.sender(node)
+                .send(NodeMsg::GatherPlanned { reqs, vals, reply: scratch.reply_sender() })
+                .expect("Emb PS worker hung up");
+            expected += 1;
+        }
+        for _ in 0..expected {
+            let (node, reqs, vals) = scratch.recv_reply();
+            let range = plan.unique_range(node);
+            scratch.unique_vals[range.start * dim..range.end * dim].copy_from_slice(&vals);
+            scratch.put_gather_bufs(node, reqs, vals);
+        }
+        for (slot, &u) in plan.slot_unique().iter().enumerate() {
+            let u = u as usize;
+            let src = &scratch.unique_vals[u * dim..(u + 1) * dim];
+            let dst = &mut out[(slot / hotness) * dim..(slot / hotness + 1) * dim];
+            if slot % hotness == 0 {
+                dst.copy_from_slice(src);
+            } else {
+                for (d, v) in dst.iter_mut().zip(src) {
+                    *d += v;
+                }
+            }
+        }
+    }
+
     fn apply_grads(
         &self,
         indices: &[u32],
@@ -432,6 +529,55 @@ impl PsDataPlane for ThreadedCluster {
             })
             .expect("Emb PS worker hung up");
         ack_rx.recv().expect("Emb PS worker died mid-update");
+    }
+
+    /// Plan-driven sibling of [`apply_grads_node`](Self::apply_grads_node):
+    /// walks the plan's per-node ascending flat-slot list (no full index
+    /// scan) into the scratch's pooled request/compact-gradient buffers and
+    /// ships them through the persistent reply channel; the returning
+    /// buffers double as the completion ack. Same per-slot arithmetic in
+    /// the same sample order — bit-identical.
+    fn apply_grads_planned_node(
+        &self,
+        node: usize,
+        plan: &BatchPlan,
+        scratch: &mut PlanScratch,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    ) {
+        let t = self.tables.len();
+        let dim = self.tables[0].dim;
+        let hotness = plan.hotness();
+        debug_assert_eq!(grads.len() * hotness, plan.n_slots() * dim);
+        let slots = plan.apply_slots(node);
+        if slots.is_empty() {
+            // same contract as the unplanned path: an untouched (possibly
+            // dead) node is never routed to
+            return;
+        }
+        let indices = plan.indices();
+        let n_nodes = self.n_nodes;
+        let (mut reqs, mut compact) = scratch.take_apply_bufs();
+        for &slot in slots {
+            let slot = slot as usize;
+            let local = indices[slot] as usize / n_nodes;
+            let src_slot = slot / hotness;
+            reqs.push((((src_slot % t) as u64) << 32) | local as u64);
+            compact.extend_from_slice(&grads[src_slot * dim..(src_slot + 1) * dim]);
+        }
+        self.sender(node)
+            .send(NodeMsg::ApplyPlanned {
+                reqs,
+                grads: compact,
+                lr,
+                opt,
+                reply: scratch.reply_sender(),
+            })
+            .expect("Emb PS worker hung up");
+        let (rnode, reqs, compact) = scratch.recv_reply();
+        debug_assert_eq!(rnode, node);
+        scratch.put_apply_bufs(reqs, compact);
     }
 
     fn read_row(&self, table: usize, global_row: usize, out: &mut [f32]) {
@@ -864,6 +1010,61 @@ mod tests {
         c.respawn_node(1);
         assert!(c.alive(1));
         c.serve_gather(&[1, 4], &mut out).unwrap();
+    }
+
+    #[test]
+    fn planned_paths_are_bit_identical_to_unplanned() {
+        use crate::cluster::PlanArena;
+        let (a, b) = both(3, 19);
+        let mut rng = Rng::new(5);
+        let mut arena = PlanArena::new();
+        let opt = EmbOptimizer::RowAdagrad { eps: 1e-8 };
+        for hotness in [1usize, 3] {
+            let idx = rand_indices(&mut rng, 12, hotness);
+            arena.build(&idx, hotness, 2, 3);
+            let (plan, scratch) = arena.parts_mut();
+            let mut want = vec![0.0f32; 12 * 2 * 4];
+            let mut got = vec![0.0f32; 12 * 2 * 4];
+            PsDataPlane::gather_pooled(&a, &idx, hotness, &mut want);
+            b.gather_planned(plan, scratch, &mut got);
+            assert_eq!(want, got, "hotness {hotness}");
+            let grads: Vec<f32> = (0..12 * 2 * 4).map(|_| rng.f32() - 0.5).collect();
+            PsDataPlane::apply_grads(&a, &idx, hotness, &grads, 0.7, opt);
+            for node in 0..3 {
+                if plan.touched().get(node) {
+                    b.apply_grads_planned_node(node, plan, scratch, &grads, 0.7, opt);
+                }
+            }
+        }
+        for node in 0..3 {
+            let sa = PsControlPlane::snapshot_node(&a, node);
+            let sb = b.snapshot_node(node);
+            assert_eq!(sa.shards, sb.shards, "node {node} shards diverged");
+            assert_eq!(sa.opt, sb.opt, "node {node} optimizer state diverged");
+        }
+        let s = b.stats();
+        assert!(s.unique_rows > 0);
+        assert_eq!(s.unique_rows + s.dedup_hits, (12 * 2 * 1 + 12 * 2 * 3) as u64);
+    }
+
+    #[test]
+    fn planned_gather_skips_dead_untouched_nodes() {
+        use crate::cluster::PlanArena;
+        let c = ThreadedCluster::new(TABLES.to_vec(), 3, 7);
+        c.kill_node(1);
+        // every row ≡ 0 mod 3 — dead node 1 is never routed to
+        let idx = vec![0u32, 3, 9, 6];
+        let mut arena = PlanArena::new();
+        arena.build(&idx, 1, 2, 3);
+        let (plan, scratch) = arena.parts_mut();
+        let mut out = vec![0.0f32; 2 * 2 * 4];
+        c.gather_planned(plan, scratch, &mut out); // must not panic or hang
+        let reference = PsCluster::new(TABLES.to_vec(), 3, 7);
+        let mut want = vec![0.0f32; 2 * 2 * 4];
+        PsDataPlane::gather_pooled(&reference, &idx, 1, &mut want);
+        assert_eq!(out, want);
+        // a planned apply to the dead, untouched node is a no-op
+        c.apply_grads_planned_node(1, plan, scratch, &[0.0f32; 16], 1.0, EmbOptimizer::Sgd);
     }
 
     #[test]

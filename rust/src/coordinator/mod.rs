@@ -93,7 +93,9 @@ use anyhow::{ensure, Result};
 use crate::checkpoint::async_pipeline::CheckpointPipeline;
 use crate::checkpoint::tracker::{priority_mask, MfuTracker};
 use crate::checkpoint::{CheckpointOptions, CheckpointStore};
-use crate::cluster::{PsBackend, PsDataPlane, PsServePlane, ShardedPs, ThreadedCluster};
+use crate::cluster::{
+    BackendStats, PsBackend, PsDataPlane, PsServePlane, ShardedPs, ThreadedCluster,
+};
 use crate::config::{JobConfig, PsBackendKind};
 use crate::data::{Batch, SyntheticDataset};
 use crate::embedding::{init_value, PsCluster, TableInfo};
@@ -143,6 +145,10 @@ pub struct TrainReport {
     /// bit-identical with serving on or off — asserted by
     /// tests/serving.rs)
     pub serving: Option<crate::serving::ServeReport>,
+    /// final backend operation counters — under the planned step path
+    /// `unique_rows`/`dedup_hits` carry the measured within-batch dedup
+    /// ratio of the workload (the CLI prints it)
+    pub ps_stats: BackendStats,
 }
 
 /// Options beyond the JobConfig.
@@ -350,11 +356,17 @@ fn run_training_core<B: PsBackend + 'static>(
         let mean_loss =
             results.iter().map(|t| t.loss as f64).sum::<f64>() / n_trainers as f64;
         // the save policy observes the concatenated access stream in rank
-        // order (its tracker records it; tracker-less policies ignore it)
+        // order (its tracker records it; tracker-less policies ignore it).
+        // Each trainer already deduplicated its batch into the step plan's
+        // access list, so weighted recorders (MFU, the delta-capture
+        // bitmaps, the Fig. 6 counters) consume the compact stream — one
+        // entry per distinct row — while order-sensitive recorders (SSU)
+        // fall back to the raw indices inside on_step_planned's default.
         for res in &results {
-            policies.save.on_step(&res.indices, m.num_sparse, hotness);
+            policies.save.on_step_planned(&res.indices, &res.accesses,
+                                          m.num_sparse, hotness);
             if let Some(t) = stat_counts.as_mut() {
-                t.record_batch_hot(&res.indices, m.num_sparse, hotness);
+                t.record_accesses(&res.accesses);
             }
         }
         host_params = allreduce_mean(results);
@@ -547,6 +559,7 @@ fn run_training_core<B: PsBackend + 'static>(
     });
 
     let backend = shared.name().to_string();
+    let ps_stats = shared.stats();
     Ok(TrainReport {
         strategy: cfg.checkpoint.strategy.name().to_string(),
         backend,
@@ -565,6 +578,7 @@ fn run_training_core<B: PsBackend + 'static>(
         wall_secs: wall_start.elapsed().as_secs_f64(),
         row_stats,
         serving,
+        ps_stats,
     })
 }
 

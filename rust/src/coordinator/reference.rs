@@ -334,6 +334,8 @@ fn run_reference_core<B: PsBackend>(
         RowStats { rows }
     });
 
+    // the reference loop never plans, so unique_rows/dedup_hits stay 0
+    let ps_stats = crate::cluster::PsControlPlane::stats(&cluster);
     Ok(TrainReport {
         strategy: strategy.name().to_string(),
         backend: cluster.name().to_string(),
@@ -352,5 +354,6 @@ fn run_reference_core<B: PsBackend>(
         wall_secs: wall_start.elapsed().as_secs_f64(),
         row_stats,
         serving: None,
+        ps_stats,
     })
 }

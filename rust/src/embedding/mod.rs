@@ -36,6 +36,7 @@ pub mod optim;
 pub use optim::EmbOptimizer;
 
 use crate::cluster::lock::{NodeLock, NodeReadGuard, NodeWriteGuard};
+use crate::cluster::plan::{BatchPlan, NodeSet, PlanScratch};
 use crate::cluster::seqlock::{AtomicF32s, SeqLock};
 use crate::cluster::{ServeError, StatCounters};
 use crate::util::rng::SplitMix64;
@@ -207,11 +208,14 @@ impl PsCluster {
             .map_err(|_| ServeError::NodeDown { node })
     }
 
-    /// Which nodes a routed index batch touches.
-    fn touched_nodes(&self, indices: &[u32]) -> Vec<bool> {
-        let mut touched = vec![false; self.n_nodes];
+    /// Which nodes a routed index batch touches. A stack bitset — the old
+    /// `vec![false; n_nodes]` allocated on every gather *and* apply of the
+    /// same batch; planned callers skip even this scan by reusing the
+    /// plan's bitset.
+    fn touched_nodes(&self, indices: &[u32]) -> NodeSet {
+        let mut touched = NodeSet::new();
         for &row in indices {
-            touched[row as usize % self.n_nodes] = true;
+            touched.insert(row as usize % self.n_nodes);
         }
         touched
     }
@@ -249,7 +253,7 @@ impl PsCluster {
         let mut opt = vec![0.0f32; rows.len()];
         let touched = self.touched_nodes(rows);
         let guards: Vec<Option<NodeReadGuard<'_, EmbPsNode>>> = (0..self.n_nodes)
-            .map(|n| touched[n].then(|| self.node_read(n)))
+            .map(|n| touched.get(n).then(|| self.node_read(n)))
             .collect();
         for (i, &row) in rows.iter().enumerate() {
             let (node, local) = self.route(row as usize);
@@ -288,7 +292,7 @@ impl PsCluster {
         debug_assert_eq!(out.len(), b * t * dim);
         let touched = self.touched_nodes(indices);
         let _guards: Vec<Option<NodeReadGuard<'_, EmbPsNode>>> = (0..self.n_nodes)
-            .map(|n| touched[n].then(|| self.node_read(n)))
+            .map(|n| touched.get(n).then(|| self.node_read(n)))
             .collect();
         // Thread spawn costs ~50 µs; below ~2k samples a serial gather is
         // faster than fanning out (measured: 18 µs serial vs 55 µs across
@@ -383,10 +387,10 @@ impl PsCluster {
         if b * t * hotness < 16_384 {
             let mut guards: Vec<Option<NodeWriteGuard<'_, EmbPsNode>>> =
                 (0..n_nodes)
-                    .map(|n| touched[n].then(|| self.node_write(n)))
+                    .map(|n| touched.get(n).then(|| self.node_write(n)))
                     .collect();
             for n in 0..n_nodes {
-                if touched[n] {
+                if touched.get(n) {
                     self.serve_write_begin(n);
                 }
             }
@@ -406,7 +410,7 @@ impl PsCluster {
                 }
             }
             for n in 0..n_nodes {
-                if touched[n] {
+                if touched.get(n) {
                     self.serve_write_end(n);
                 }
             }
@@ -415,7 +419,7 @@ impl PsCluster {
         // Each worker thread owns a disjoint set of nodes → disjoint locks.
         parallel_chunks(n_nodes, 8, 1, |nlo, nhi| {
             for node_id in nlo..nhi {
-                if touched[node_id] {
+                if touched.get(node_id) {
                     self.apply_grads_node(node_id, indices, hotness, grads, lr, opt);
                 }
             }
@@ -457,6 +461,101 @@ impl PsCluster {
                                     &mut buf);
                 }
             }
+        }
+        self.serve_write_end(node);
+    }
+
+    /// Plan-driven pooled gather: fetch each distinct `(table, row)` once
+    /// into `scratch.unique_vals`, then reassemble `out` by walking the
+    /// plan's slot-placement map in ascending flat-slot order — copy at
+    /// `slot % hotness == 0`, add otherwise — which is the *exact*
+    /// float-op sequence of [`PsCluster::gather_pooled`], so the result is
+    /// bit-identical while hot rows are read from the shard words only
+    /// once.
+    ///
+    /// Allocation discipline: deliberately sequential (the unplanned
+    /// path's `parallel_chunks_mut` spawns scoped threads, which
+    /// allocates); all storage is the caller's pooled scratch, so the
+    /// steady-state call performs zero heap allocations. Lock discipline:
+    /// one node read guard at a time, ascending node order, released
+    /// before reassembly (reassembly only touches the private scratch).
+    pub(crate) fn gather_planned_impl(
+        &self,
+        plan: &BatchPlan,
+        scratch: &mut PlanScratch,
+        out: &mut [f32],
+    ) {
+        let t = self.tables.len();
+        let dim = self.tables[0].dim;
+        debug_assert!(self.tables.iter().all(|i| i.dim == dim));
+        debug_assert_eq!(plan.num_tables(), t);
+        debug_assert_eq!(plan.n_nodes(), self.n_nodes);
+        let hotness = plan.hotness();
+        debug_assert_eq!(out.len() * hotness, plan.n_slots() * dim);
+        scratch.unique_vals.resize(plan.n_unique() * dim, 0.0);
+        for node in 0..self.n_nodes {
+            let range = plan.unique_range(node);
+            if range.is_empty() {
+                continue;
+            }
+            let _g = self.node_read(node);
+            for u in range {
+                let tab = plan.unique_table(u);
+                let local = plan.unique_local(u);
+                self.shard_words[node][tab]
+                    .load_into(local * dim, &mut scratch.unique_vals[u * dim..(u + 1) * dim]);
+            }
+        }
+        for (slot, &u) in plan.slot_unique().iter().enumerate() {
+            let src = &scratch.unique_vals[u as usize * dim..(u as usize + 1) * dim];
+            let dst = &mut out[(slot / hotness) * dim..][..dim];
+            if slot % hotness == 0 {
+                dst.copy_from_slice(src);
+            } else {
+                for (o, s) in dst.iter_mut().zip(src) {
+                    *o += s;
+                }
+            }
+        }
+    }
+
+    /// Plan-driven sibling of [`PsCluster::apply_grads_node`]: walk the
+    /// plan's per-node ascending flat-slot list instead of scanning and
+    /// filtering the whole index list. Visits exactly the same slots in
+    /// the same order with the same per-slot arithmetic — bit-identical —
+    /// and uses `scratch.row_buf` instead of allocating the per-call row
+    /// buffer. Applies deliberately do NOT dedup: duplicate rows must
+    /// accumulate their gradients slot by slot in sample order.
+    pub(crate) fn apply_grads_planned_node_impl(
+        &self,
+        node: usize,
+        plan: &BatchPlan,
+        scratch: &mut PlanScratch,
+        grads: &[f32],
+        lr: f32,
+        opt: EmbOptimizer,
+    ) {
+        let t = self.tables.len();
+        let dim = self.tables[0].dim;
+        let hotness = plan.hotness();
+        debug_assert_eq!(plan.num_tables(), t);
+        debug_assert_eq!(grads.len() * hotness, plan.n_slots() * dim);
+        let n_nodes = self.n_nodes;
+        let indices = plan.indices();
+        let mut g_node = self.node_write(node);
+        self.serve_write_begin(node);
+        scratch.row_buf.resize(dim, 0.0);
+        let buf = &mut scratch.row_buf;
+        for &slot in plan.apply_slots(node) {
+            let slot = slot as usize;
+            let row = indices[slot] as usize;
+            debug_assert_eq!(row % n_nodes, node);
+            let local = row / n_nodes;
+            let tab = (slot / hotness) % t;
+            let g = &grads[(slot / hotness) * dim..(slot / hotness + 1) * dim];
+            let n = &mut *g_node;
+            Self::apply_row(&self.shard_words[node][tab], local, g,
+                            &mut n.opt_state[tab][local], lr, opt, buf);
         }
         self.serve_write_end(node);
     }

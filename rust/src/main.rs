@@ -180,6 +180,12 @@ fn print_report(r: &TrainReport, t_total_h: f64) {
     println!("final test AUC      {:.5}", r.final_auc);
     println!("final test logloss  {:.5}", r.final_logloss);
     println!("steps executed      {}", r.steps_executed);
+    let planned_slots = r.ps_stats.unique_rows + r.ps_stats.dedup_hits;
+    if planned_slots > 0 {
+        println!("gather dedup        {:.1}% of batch slots ({} unique rows / {} slots)",
+                 100.0 * r.ps_stats.dedup_hits as f64 / planned_slots as f64,
+                 r.ps_stats.unique_rows, planned_slots);
+    }
     println!("overhead            {:.3}% of training time", 100.0 * r.overhead_frac);
     println!("  save              {:.3} h ({} saves)", r.ledger.save_h, r.ledger.n_saves);
     println!("  load              {:.3} h", r.ledger.load_h);

@@ -15,6 +15,7 @@
 
 use super::save::{full_content_capture, TouchedRows};
 use super::{PsView, SaveCtx, SaveMarker, SavePolicy};
+use crate::cluster::PlanAccess;
 use crate::checkpoint::async_pipeline::CheckpointPipeline;
 use crate::config::ClusterConfig;
 use crate::metrics::OverheadLedger;
@@ -92,6 +93,18 @@ impl SavePolicy for AdaptiveInterval {
     fn on_step(&mut self, indices: &[u32], num_tables: usize, hotness: usize) {
         if let Some(touched) = self.delta.as_mut() {
             touched.record(indices, num_tables, hotness);
+        }
+    }
+
+    fn on_step_planned(
+        &mut self,
+        _indices: &[u32],
+        accesses: &[PlanAccess],
+        _num_tables: usize,
+        _hotness: usize,
+    ) {
+        if let Some(touched) = self.delta.as_mut() {
+            touched.record_planned(accesses);
         }
     }
 

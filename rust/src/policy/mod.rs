@@ -54,7 +54,7 @@ pub use save::{CprVanilla, FullSave, Prioritized};
 pub use tracker::PriorityTracker;
 
 use crate::checkpoint::async_pipeline::CheckpointPipeline;
-use crate::cluster::{PsBackend, PsControlPlane, PsDataPlane};
+use crate::cluster::{PlanAccess, PsBackend, PsControlPlane, PsDataPlane};
 use crate::failure::FailureEvent;
 use crate::metrics::OverheadLedger;
 
@@ -153,6 +153,25 @@ pub trait SavePolicy {
     /// (`[B, num_tables, hotness]` row-major). The driver feeds every
     /// trainer's stream in rank order; tracker-less policies ignore it.
     fn on_step(&mut self, _indices: &[u32], _num_tables: usize, _hotness: usize) {}
+
+    /// Planned variant of [`SavePolicy::on_step`]: the trainer already
+    /// deduplicated the batch into `accesses` (one entry per distinct
+    /// `(table, row)` with its within-batch multiplicity), so policies
+    /// whose recording is multiplicity-weighted or set-based can consume
+    /// the compact stream instead of rescanning `indices`. The default
+    /// ignores `accesses` and falls back to the full-scan `on_step`, so
+    /// order-sensitive recorders (SSU's reservoir ticks over every slot)
+    /// stay bit-identical without opting in.
+    fn on_step_planned(
+        &mut self,
+        indices: &[u32],
+        accesses: &[PlanAccess],
+        num_tables: usize,
+        hotness: usize,
+    ) {
+        let _ = accesses;
+        self.on_step(indices, num_tables, hotness);
+    }
 
     /// Observe a failure event (any kind) at `clock_h`. Adaptive policies
     /// re-estimate the failure rate from these; everyone else ignores it.

@@ -20,6 +20,7 @@
 
 use super::tracker::PriorityTracker;
 use super::{PsView, SaveCtx, SaveMarker, SavePolicy};
+use crate::cluster::PlanAccess;
 use crate::checkpoint::async_pipeline::CheckpointPipeline;
 use crate::checkpoint::{full_content_io_bytes, mlp_io_bytes, rows_io_bytes};
 use crate::cluster::PsDataPlane;
@@ -62,6 +63,20 @@ impl TouchedRows {
                     *flag = true;
                     self.counts[t] += 1;
                 }
+            }
+        }
+    }
+
+    /// Observe one batch as a deduplicated access list. Set semantics
+    /// make this trivially equivalent to [`TouchedRows::record`] over the
+    /// raw stream: a flag ends up set iff the `(table, row)` pair appears
+    /// at least once, and multiplicity is irrelevant.
+    pub(super) fn record_planned(&mut self, accesses: &[PlanAccess]) {
+        for a in accesses {
+            let flag = &mut self.tables[a.table as usize][a.row as usize];
+            if !*flag {
+                *flag = true;
+                self.counts[a.table as usize] += 1;
             }
         }
     }
@@ -196,6 +211,18 @@ impl SavePolicy for FullSave {
         }
     }
 
+    fn on_step_planned(
+        &mut self,
+        _indices: &[u32],
+        accesses: &[PlanAccess],
+        _num_tables: usize,
+        _hotness: usize,
+    ) {
+        if let Some(touched) = self.delta.as_mut() {
+            touched.record_planned(accesses);
+        }
+    }
+
     fn capture(
         &mut self,
         ps: PsView<'_>,
@@ -250,6 +277,16 @@ impl SavePolicy for CprVanilla {
 
     fn on_step(&mut self, indices: &[u32], num_tables: usize, hotness: usize) {
         self.0.on_step(indices, num_tables, hotness);
+    }
+
+    fn on_step_planned(
+        &mut self,
+        indices: &[u32],
+        accesses: &[PlanAccess],
+        num_tables: usize,
+        hotness: usize,
+    ) {
+        self.0.on_step_planned(indices, accesses, num_tables, hotness);
     }
 
     fn capture(
@@ -322,6 +359,16 @@ impl<T: PriorityTracker> SavePolicy for Prioritized<T> {
 
     fn on_step(&mut self, indices: &[u32], num_tables: usize, hotness: usize) {
         self.tracker.record_batch(indices, num_tables, hotness);
+    }
+
+    fn on_step_planned(
+        &mut self,
+        indices: &[u32],
+        accesses: &[PlanAccess],
+        num_tables: usize,
+        hotness: usize,
+    ) {
+        self.tracker.record_batch_planned(indices, accesses, num_tables, hotness);
     }
 
     fn capture(

@@ -11,7 +11,7 @@
 //! runs all three through `Box<dyn PriorityTracker>`.
 
 use crate::checkpoint::tracker::{MfuTracker, ScarTracker, SsuTracker};
-use crate::cluster::PsDataPlane;
+use crate::cluster::{PlanAccess, PsDataPlane};
 
 /// One priority-row tracker behind a uniform, object-safe API.
 ///
@@ -30,6 +30,26 @@ pub trait PriorityTracker {
     /// Observe one minibatch of accesses: `indices` is
     /// `[B, num_tables, hotness]` row-major.
     fn record_batch(&mut self, indices: &[u32], num_tables: usize, hotness: usize);
+
+    /// Planned variant: the batch arrives pre-deduplicated as `accesses`
+    /// (one entry per distinct `(table, row)` with its multiplicity),
+    /// alongside the raw stream. Only trackers whose recording is a pure
+    /// per-row weighted count may consume the compact list (MFU does:
+    /// `+= count` is bit-exact vs `count` increments). The default falls
+    /// back to the full scan, which keeps order-sensitive recorders —
+    /// SSU's subsample tick and eviction RNG advance per *slot* in stream
+    /// order — bit-identical without opting in. SCAR's record is a no-op
+    /// either way.
+    fn record_batch_planned(
+        &mut self,
+        indices: &[u32],
+        accesses: &[PlanAccess],
+        num_tables: usize,
+        hotness: usize,
+    ) {
+        let _ = accesses;
+        self.record_batch(indices, num_tables, hotness);
+    }
 
     /// The (up to) `k` rows of `table` most deserving of checkpoint
     /// bandwidth. `ps` is the quiesced cluster data plane — only SCAR
@@ -52,6 +72,16 @@ impl PriorityTracker for MfuTracker {
 
     fn record_batch(&mut self, indices: &[u32], num_tables: usize, hotness: usize) {
         self.record_batch_hot(indices, num_tables, hotness);
+    }
+
+    fn record_batch_planned(
+        &mut self,
+        _indices: &[u32],
+        accesses: &[PlanAccess],
+        _num_tables: usize,
+        _hotness: usize,
+    ) {
+        self.record_accesses(accesses);
     }
 
     fn select(&mut self, _ps: &dyn PsDataPlane, table: usize, k: usize) -> Vec<u32> {
@@ -121,6 +151,16 @@ impl<T: PriorityTracker + ?Sized> PriorityTracker for Box<T> {
 
     fn record_batch(&mut self, indices: &[u32], num_tables: usize, hotness: usize) {
         (**self).record_batch(indices, num_tables, hotness);
+    }
+
+    fn record_batch_planned(
+        &mut self,
+        indices: &[u32],
+        accesses: &[PlanAccess],
+        num_tables: usize,
+        hotness: usize,
+    ) {
+        (**self).record_batch_planned(indices, accesses, num_tables, hotness);
     }
 
     fn select(&mut self, ps: &dyn PsDataPlane, table: usize, k: usize) -> Vec<u32> {

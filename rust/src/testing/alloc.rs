@@ -1,0 +1,141 @@
+//! [`CountingAlloc`] — a counting wrapper around the system allocator,
+//! for the zero-allocation contract on the planned data-plane hot path.
+//!
+//! The planned step promises: after warmup (one `PlanArena::build` at the
+//! batch's final shape), a steady-state in-process step — plan build,
+//! planned gather, turnstile-ordered planned applies, planned access
+//! recording — performs **zero heap allocations**. A promise like that
+//! rots silently unless a test counts, so the integration suite
+//! (`tests/plan_equiv.rs`) and the bench harness install this allocator
+//! via `#[global_allocator]` and read the counter around the audited
+//! region.
+//!
+//! Design constraints, in order:
+//! * **Never allocate while counting.** The counter is a `const`-init
+//!   thread-local `Cell` — no lazy init, no locks, no heap.
+//! * **Safe during thread teardown.** `LocalKey::try_with` is used
+//!   everywhere: allocations from TLS destructors (or before TLS init)
+//!   fall through to the raw system allocator uncounted rather than
+//!   aborting.
+//! * **Count per thread, not per process.** The audited region runs on
+//!   one thread; background threads (PS workers, checkpoint writer) may
+//!   allocate concurrently and must not pollute the audit. Threaded-
+//!   backend audits therefore bound only the *caller-side* allocations —
+//!   exactly the ones the plan's buffer pooling eliminates.
+//!
+//! This module is compiled into the library (so unit tests and benches
+//! share one definition) but changes nothing unless a binary opts in with
+//! `#[global_allocator] static A: CountingAlloc = CountingAlloc;` — the
+//! library itself never installs it.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    /// Audit switch for the current thread. `const` init: reading it can
+    /// never itself allocate.
+    static TRACK: Cell<bool> = const { Cell::new(false) };
+    /// Allocations (malloc + realloc) observed while `TRACK` was set.
+    static COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// A `#[global_allocator]` that delegates to [`System`] and counts
+/// allocations on threads that opted in via [`start_counting`].
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    #[inline]
+    fn note(&self) {
+        // try_with: never panic (and never allocate) if TLS is gone —
+        // e.g. allocations from other TLS destructors at thread exit
+        let _ = TRACK.try_with(|t| {
+            if t.get() {
+                let _ = COUNT.try_with(|c| c.set(c.get() + 1));
+            }
+        });
+    }
+}
+
+// SAFETY: every method delegates directly to `System`, which upholds the
+// GlobalAlloc contract; the counting side effect touches only plain
+// thread-local Cells (no allocation, no reentrancy into the allocator).
+unsafe impl GlobalAlloc for CountingAlloc {
+    #[inline]
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.note();
+        // SAFETY: forwarded verbatim; caller upholds the layout contract
+        unsafe { System.alloc(layout) }
+    }
+
+    #[inline]
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        // frees are not counted: the contract is "no new heap memory on
+        // the hot path", and a free implies a counted earlier alloc
+        // SAFETY: forwarded verbatim; caller upholds the ptr/layout pair
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    #[inline]
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // a grow-in-place is still a heap interaction the pooling is
+        // supposed to eliminate, so realloc counts like alloc
+        self.note();
+        // SAFETY: forwarded verbatim; caller upholds the realloc contract
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    #[inline]
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        self.note();
+        // SAFETY: forwarded verbatim; caller upholds the layout contract
+        unsafe { System.alloc_zeroed(layout) }
+    }
+}
+
+/// Zero the current thread's counter and start counting its allocations.
+pub fn start_counting() {
+    let _ = COUNT.try_with(|c| c.set(0));
+    let _ = TRACK.try_with(|t| t.set(true));
+}
+
+/// Stop counting on the current thread and return the number of
+/// allocations (alloc + realloc + alloc_zeroed) since [`start_counting`].
+pub fn stop_counting() -> u64 {
+    let _ = TRACK.try_with(|t| t.set(false));
+    COUNT.try_with(|c| c.get()).unwrap_or(0)
+}
+
+/// Count the allocations `f` performs on this thread. Only meaningful in
+/// a binary that installed [`CountingAlloc`] as its global allocator —
+/// otherwise it returns 0 (nothing notes into the counter), which is why
+/// the zero-alloc assertions live in `tests/plan_equiv.rs` (which
+/// installs it) and not in `cargo test --lib`.
+pub fn count_allocs<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    start_counting();
+    let out = f();
+    (stop_counting(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The lib-test binary does NOT install CountingAlloc, so the counter
+    // never increments here — these tests pin the harness mechanics
+    // (reset-on-start, off-by-default), not the counting itself, which
+    // tests/plan_equiv.rs exercises under the real #[global_allocator].
+
+    #[test]
+    fn counter_resets_on_start_and_reads_back() {
+        start_counting();
+        let n = stop_counting();
+        assert_eq!(n, 0, "no CountingAlloc installed → nothing counted");
+    }
+
+    #[test]
+    fn count_allocs_returns_closure_output() {
+        let (n, v) = count_allocs(|| vec![1u8; 64].len());
+        assert_eq!(v, 64);
+        assert_eq!(n, 0, "lib tests run on the plain system allocator");
+    }
+}

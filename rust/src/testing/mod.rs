@@ -4,6 +4,7 @@
 //! first failure it panics with the *case seed*, so `forall_case(seed, f)`
 //! reproduces it exactly. Generators are plain closures over [`Rng`].
 
+pub mod alloc;
 pub mod model;
 
 use crate::util::rng::Rng;

@@ -54,7 +54,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::cluster::{PsBackend, PsDataPlane, ShardedPs};
+use crate::cluster::{PlanAccess, PlanArena, PsBackend, PsDataPlane, ShardedPs};
 use crate::config::JobConfig;
 use crate::data::{Batch, SyntheticDataset};
 use crate::runtime::Runtime;
@@ -69,6 +69,11 @@ pub struct TrainerStep {
     /// the batch's embedding access stream [B, T, H] — the driver feeds it
     /// to the priority trackers in rank order
     pub indices: Vec<u32>,
+    /// the batch's *deduplicated* access list (one entry per distinct
+    /// `(table, row)` with its hit count), exported from the step's
+    /// [`PlanArena`] so the driver's policy/tracker recording and dirty-row
+    /// capture reuse the plan instead of re-scanning `indices`
+    pub accesses: Vec<PlanAccess>,
 }
 
 enum TrainerCmd {
@@ -115,7 +120,11 @@ fn worker_loop<B: PsBackend>(ctx: WorkerCtx<B>) {
             let batch_buf =
                 Batch::zeros_hot(m.batch, m.num_dense, m.num_sparse, hotness);
             let emb_buf = vec![0.0f32; m.batch * m.num_sparse * m.emb_dim];
-            Ok((model, dataset, batch_buf, emb_buf))
+            // route-once batch plan + pooled scratch, reused across steps:
+            // one index scan feeds the gather, the ordered applies, and the
+            // policy access stream
+            let arena = PlanArena::new();
+            Ok((model, dataset, batch_buf, emb_buf, arena))
         }
         Err(e) => Err(format!("trainer {rank}: loading model replica: {e:#}")),
     };
@@ -132,7 +141,7 @@ fn worker_loop<B: PsBackend>(ctx: WorkerCtx<B>) {
                 shared.skip_ordered(ticket);
                 Err(e.clone())
             }
-            Ok((model, dataset, batch_buf, emb_buf)) => {
+            Ok((model, dataset, batch_buf, emb_buf, arena)) => {
                 // Stateless-replica protocol: dense params arrive by
                 // broadcast and leave by reply every step. The two host
                 // conversions this costs (cheap next to the train step's
@@ -146,7 +155,25 @@ fn worker_loop<B: PsBackend>(ctx: WorkerCtx<B>) {
                     batch_buf,
                 );
                 crate::telemetry::observe("rows_per_step", batch_buf.indices.len() as u64);
-                shared.gather_pooled(&batch_buf.indices, hotness, emb_buf);
+                // build the step's route-once plan: dedup + routing +
+                // touched nodes, computed in ONE scan of the index list and
+                // shared by the gather, the ordered applies, and the access
+                // stream reply (the unplanned path scanned it four times)
+                {
+                    let _p = crate::telemetry::span("gather_plan");
+                    arena.build(
+                        &batch_buf.indices,
+                        hotness,
+                        model.manifest.num_sparse,
+                        shared.n_nodes(),
+                    );
+                }
+                crate::telemetry::observe(
+                    "unique_rows_per_step",
+                    arena.plan().n_unique() as u64,
+                );
+                let (plan, scratch) = arena.parts_mut();
+                shared.gather_planned(plan, scratch, emb_buf);
                 // every replica must observe the PRE-step PS state: nobody
                 // applies until everyone has gathered
                 {
@@ -167,10 +194,10 @@ fn worker_loop<B: PsBackend>(ctx: WorkerCtx<B>) {
                 // floats without a global lock: same-node updates apply in
                 // ticket order, node-disjoint updates in parallel
                 match &out {
-                    Ok(o) => shared.apply_grads_ordered(
+                    Ok(o) => shared.apply_grads_ordered_planned(
                         ticket,
-                        &batch_buf.indices,
-                        hotness,
+                        plan,
+                        scratch,
                         &o.emb_grad,
                         cfg.train.emb_lr,
                         cfg.train.emb_optimizer,
@@ -184,6 +211,7 @@ fn worker_loop<B: PsBackend>(ctx: WorkerCtx<B>) {
                             loss: o.loss,
                             params: host,
                             indices: batch_buf.indices.clone(),
+                            accesses: plan.collect_accesses(),
                         }),
                         Err(e) => Err(format!("trainer {rank}: params_to_host: {e:#}")),
                     },

@@ -1,0 +1,338 @@
+//! Route-once batch plans (ISSUE 10): planned ≡ unplanned, and the
+//! zero-allocation contract.
+//!
+//! * planned gather / planned per-node applies are **bit-identical** to
+//!   the unplanned pooled paths on random Zipf batches — hotness 1 and 4,
+//!   cross-table duplicate rows, both optimizers, dead-node edges — on
+//!   BOTH cluster backends;
+//! * a full `cpr-mfu` training run with PS failures through the planned
+//!   driver is bit-identical (AUC, logloss, PLS, ledger, loss curve) to
+//!   the unplanned reference loop;
+//! * the steady-state planned step on the in-proc backend performs ZERO
+//!   heap allocations after warmup, counted by the real global allocator
+//!   ([`cpr::testing::alloc::CountingAlloc`], installed below); the
+//!   threaded backend's caller-side allocations stay under a documented
+//!   budget (mpsc queue blocks are the only remaining source).
+
+use cpr::cluster::{PlanArena, PsDataPlane, ThreadedCluster};
+use cpr::config::{preset, JobConfig, PsBackendKind, Strategy};
+use cpr::coordinator::reference::run_training_reference;
+use cpr::coordinator::{run_training, RunOptions};
+use cpr::embedding::{EmbOptimizer, PsCluster, TableInfo};
+use cpr::failure::{uniform_schedule, FailureEvent};
+use cpr::prop_assert;
+use cpr::testing::alloc;
+use cpr::testing::{forall, gen};
+use cpr::util::dist::Zipf;
+use cpr::util::rng::Rng;
+
+// The audit only counts in a binary that installs the wrapper; this is
+// the binary the zero-alloc contract is asserted in.
+#[global_allocator]
+static ALLOC: alloc::CountingAlloc = alloc::CountingAlloc;
+
+// ---------------------------------------------------------------------------
+// planned ≡ unplanned property (both backends)
+// ---------------------------------------------------------------------------
+
+/// Drive one random batch through twin clusters — unplanned on `a`,
+/// planned on `b` — and require bit-identical gather output and
+/// bit-identical post-apply table/optimizer state.
+fn planned_matches_unplanned<B, F>(make: F, root_seed: u64)
+where
+    B: cpr::cluster::PsBackend,
+    F: Fn(Vec<TableInfo>, usize, u64) -> B,
+{
+    forall(root_seed, 10, |rng| {
+        let n_nodes = gen::usize_in(rng, 2, 5);
+        let dim = 4;
+        let rows0 = gen::usize_in(rng, 30, 150);
+        let rows1 = gen::usize_in(rng, 20, 80);
+        let tables =
+            vec![TableInfo { rows: rows0, dim }, TableInfo { rows: rows1, dim }];
+        for &hotness in &[1usize, 4] {
+            let batch = gen::usize_in(rng, 2, 16);
+            let n_slots = batch * 2 * hotness;
+            // Zipfian rows: both tables sample the same small ranks, so
+            // cross-table duplicate row ids occur constantly — the plan
+            // must keep them distinct (table is part of the dedup key).
+            let s = gen::f64_in(rng, 0.8, 1.5);
+            let z0 = Zipf::new(rows0, s);
+            let z1 = Zipf::new(rows1, s);
+            let indices: Vec<u32> = (0..n_slots)
+                .map(|slot| {
+                    let t = (slot / hotness) % 2;
+                    (if t == 0 { z0.sample(rng) } else { z1.sample(rng) }) as u32
+                })
+                .collect();
+            let cseed = rng.next_u64();
+            let a = make(tables.clone(), n_nodes, cseed);
+            let b = make(tables.clone(), n_nodes, cseed);
+
+            // gather: planned output must be bit-identical
+            let mut out_a = vec![0.0f32; batch * 2 * dim];
+            let mut out_b = vec![0.0f32; batch * 2 * dim];
+            a.gather_pooled(&indices, hotness, &mut out_a);
+            let mut arena = PlanArena::new();
+            arena.build(&indices, hotness, 2, n_nodes);
+            let (plan, scratch) = arena.parts_mut();
+            b.gather_planned(plan, scratch, &mut out_b);
+            prop_assert!(out_a == out_b,
+                         "gather diverged (hotness {hotness}, B {batch}, n {n_nodes})");
+
+            // apply: full scan vs plan-driven per-node slot lists
+            let grads = gen::f32_vec(rng, batch * 2 * dim);
+            let opt = if rng.f64() < 0.5 {
+                EmbOptimizer::Sgd
+            } else {
+                EmbOptimizer::RowAdagrad { eps: 1e-8 }
+            };
+            a.apply_grads(&indices, hotness, &grads, 0.3, opt);
+            for node in 0..n_nodes {
+                if plan.touched().get(node) {
+                    b.apply_grads_planned_node(node, plan, scratch, &grads, 0.3, opt);
+                }
+            }
+            for t in 0..2 {
+                let ids: Vec<u32> = (0..tables[t].rows as u32).collect();
+                let (va, oa) = a.read_rows(t, &ids);
+                let (vb, ob) = b.read_rows(t, &ids);
+                prop_assert!(va == vb, "table {t} weights diverged after apply");
+                prop_assert!(oa == ob, "table {t} optimizer state diverged");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn planned_matches_unplanned_inproc() {
+    planned_matches_unplanned(PsCluster::new, 0xA1);
+}
+
+#[test]
+fn planned_matches_unplanned_threaded() {
+    planned_matches_unplanned(ThreadedCluster::new, 0xA2);
+}
+
+/// Dead-node edge: with one node killed and every batch row routed away
+/// from it, planned gather/apply must behave exactly like the unplanned
+/// paths (which skip untouched nodes, dead or not).
+fn planned_skips_dead_nodes<B, F>(make: F, root_seed: u64)
+where
+    B: cpr::cluster::PsBackend,
+    F: Fn(Vec<TableInfo>, usize, u64) -> B,
+{
+    forall(root_seed, 8, |rng| {
+        let n_nodes = gen::usize_in(rng, 2, 4);
+        let dead = rng.usize_below(n_nodes);
+        let dim = 4;
+        let rows = gen::usize_in(rng, 40, 120);
+        let tables = vec![TableInfo { rows, dim }];
+        let hotness = gen::usize_in(rng, 1, 3);
+        let batch = gen::usize_in(rng, 2, 8);
+        let n_slots = batch * hotness;
+        let indices: Vec<u32> = (0..n_slots)
+            .map(|_| loop {
+                let r = rng.usize_below(rows);
+                if r % n_nodes != dead {
+                    break r as u32;
+                }
+            })
+            .collect();
+        let cseed = rng.next_u64();
+        let a = make(tables.clone(), n_nodes, cseed);
+        let b = make(tables.clone(), n_nodes, cseed);
+        a.kill_node(dead);
+        b.kill_node(dead);
+
+        let mut out_a = vec![0.0f32; batch * dim];
+        let mut out_b = vec![0.0f32; batch * dim];
+        a.gather_pooled(&indices, hotness, &mut out_a);
+        let mut arena = PlanArena::new();
+        arena.build(&indices, hotness, 1, n_nodes);
+        let (plan, scratch) = arena.parts_mut();
+        prop_assert!(!plan.touched().get(dead), "plan must not touch the dead node");
+        b.gather_planned(plan, scratch, &mut out_b);
+        prop_assert!(out_a == out_b, "gather diverged with node {dead} dead");
+
+        let grads = gen::f32_vec(rng, batch * dim);
+        a.apply_grads(&indices, hotness, &grads, 0.5, EmbOptimizer::Sgd);
+        for node in 0..n_nodes {
+            if plan.touched().get(node) {
+                b.apply_grads_planned_node(node, plan, scratch, &grads, 0.5,
+                                           EmbOptimizer::Sgd);
+            }
+        }
+        let ids: Vec<u32> = indices.clone();
+        let (va, _) = a.read_rows(0, &ids);
+        let (vb, _) = b.read_rows(0, &ids);
+        prop_assert!(va == vb, "applied rows diverged with node {dead} dead");
+        Ok(())
+    });
+}
+
+#[test]
+fn planned_skips_dead_nodes_inproc() {
+    planned_skips_dead_nodes(PsCluster::new, 0xB1);
+}
+
+#[test]
+fn planned_skips_dead_nodes_threaded() {
+    planned_skips_dead_nodes(ThreadedCluster::new, 0xB2);
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end golden: planned driver ≡ unplanned reference
+// ---------------------------------------------------------------------------
+
+/// The policy_golden cpr-mfu-with-failures scenario, now exercising the
+/// fully planned step path (plan-shared gather, turnstile applies, MFU
+/// weighted recording, delta capture): bit-identical to the preserved
+/// unplanned reference loop, and the report's dedup counters account for
+/// every training gather slot.
+#[test]
+fn planned_cpr_mfu_failure_run_matches_reference() {
+    let model = cpr::runtime::Runtime::cpu()
+        .expect("runtime")
+        .load_model("artifacts", "mini")
+        .expect("loading model");
+    for backend in [PsBackendKind::InProc, PsBackendKind::Threaded] {
+        let mut cfg: JobConfig = preset("mini").unwrap();
+        cfg.data.train_samples = 128 * 100;
+        cfg.data.eval_samples = 3_840;
+        cfg.checkpoint.strategy = Strategy::CprMfu;
+        cfg.cluster.backend = backend;
+        cfg.cluster.n_trainers = 1;
+        let schedule: Vec<FailureEvent> = {
+            let mut rng = Rng::new(17);
+            uniform_schedule(&mut rng, 3, cfg.cluster.t_total_h,
+                             cfg.cluster.n_emb_ps, 2)
+        };
+        let opts = RunOptions { schedule, ..Default::default() };
+        let a = run_training(&model, &cfg, &opts).expect("planned run");
+        let b = run_training_reference(&model, &cfg, &opts).expect("reference run");
+        let what = format!("cpr-mfu/{}", backend.name());
+        assert_eq!(a.final_auc, b.final_auc, "{what}: AUC diverged");
+        assert_eq!(a.final_logloss, b.final_logloss, "{what}: logloss diverged");
+        assert_eq!(a.pls, b.pls, "{what}: PLS diverged");
+        assert_eq!(a.steps_executed, b.steps_executed, "{what}: steps diverged");
+        assert_eq!(a.ledger, b.ledger, "{what}: ledger diverged");
+        assert_eq!(a.train_loss.points, b.train_loss.points,
+                   "{what}: loss curve diverged");
+        // dedup accounting: every planned training gather's slots are
+        // split exactly into uniques + hits; the reference never plans
+        let slots_per_step =
+            (cfg.model.batch * cfg.model.num_sparse * cfg.data.hotness) as u64;
+        assert_eq!(a.ps_stats.unique_rows + a.ps_stats.dedup_hits,
+                   a.steps_executed * slots_per_step,
+                   "{what}: dedup counters must cover every training slot");
+        assert!(a.ps_stats.dedup_hits > 0,
+                "{what}: a Zipfian batch must contain duplicate rows");
+        assert_eq!(b.ps_stats.unique_rows, 0, "{what}: reference must not plan");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the zero-allocation contract
+// ---------------------------------------------------------------------------
+
+/// One planned data-plane step: plan build, planned gather, per-node
+/// planned applies, and planned access recording into a preallocated
+/// counter table. Exactly the per-step work the trainer + coordinator hot
+/// path performs against the cluster (the trainer's reply channel and
+/// model math are outside the data-plane contract).
+#[allow(clippy::too_many_arguments)]
+fn planned_step<B: PsDataPlane>(
+    cluster: &B,
+    arena: &mut PlanArena,
+    indices: &[u32],
+    hotness: usize,
+    num_tables: usize,
+    n_nodes: usize,
+    grads: &[f32],
+    out: &mut [f32],
+    counts: &mut [u64],
+    rows_per_table: usize,
+) {
+    arena.build(indices, hotness, num_tables, n_nodes);
+    let (plan, scratch) = arena.parts_mut();
+    cluster.gather_planned(plan, scratch, out);
+    for node in 0..n_nodes {
+        if plan.touched().get(node) {
+            cluster.apply_grads_planned_node(node, plan, scratch, grads, 0.05,
+                                             EmbOptimizer::Sgd);
+        }
+    }
+    for u in 0..plan.n_unique() {
+        let a = plan.access(u);
+        counts[a.table as usize * rows_per_table + a.row as usize] += a.count as u64;
+    }
+}
+
+/// Shared harness: warm up (including one all-distinct worst-case batch so
+/// every pooled buffer reaches its high-water mark), then count this
+/// thread's allocations over `audit_steps` steady-state steps.
+fn count_steady_state_allocs<B: PsDataPlane>(cluster: &B, audit_steps: usize) -> u64 {
+    const ROWS: usize = 512;
+    const T: usize = 4;
+    const B_SZ: usize = 32;
+    const H: usize = 2;
+    const DIM: usize = 16;
+    let n_nodes = 4;
+    let n_slots = B_SZ * T * H;
+
+    // Everything allocated OUTSIDE the audited region.
+    let mut rng = Rng::new(7);
+    let zipf = Zipf::new(ROWS, 1.1);
+    let batches: Vec<Vec<u32>> = (0..audit_steps)
+        .map(|_| (0..n_slots).map(|_| zipf.sample(&mut rng) as u32).collect())
+        .collect();
+    // worst case: all slots distinct → n_unique == n_slots, the maximum
+    let distinct: Vec<u32> = (0..n_slots).map(|i| i as u32).collect();
+    let grads = vec![0.01f32; B_SZ * T * DIM];
+    let mut out = vec![0.0f32; B_SZ * T * DIM];
+    let mut counts = vec![0u64; T * ROWS];
+    let mut arena = PlanArena::new();
+
+    // warmup: worst-case shape first, then two real batches
+    for warm in [&distinct, &batches[0], &batches[1 % audit_steps]] {
+        planned_step(cluster, &mut arena, warm, H, T, n_nodes, &grads, &mut out,
+                     &mut counts, ROWS);
+    }
+
+    alloc::start_counting();
+    for batch in &batches {
+        planned_step(cluster, &mut arena, batch, H, T, n_nodes, &grads, &mut out,
+                     &mut counts, ROWS);
+    }
+    alloc::stop_counting()
+}
+
+#[test]
+fn inproc_planned_step_is_alloc_free_after_warmup() {
+    let tables = vec![TableInfo { rows: 512, dim: 16 }; 4];
+    let cluster = PsCluster::new(tables, 4, 9);
+    let n = count_steady_state_allocs(&cluster, 16);
+    assert_eq!(n, 0,
+               "in-proc planned steady-state step must not allocate, saw {n} \
+                allocations over 16 steps");
+}
+
+#[test]
+fn threaded_planned_step_allocs_stay_bounded() {
+    let tables = vec![TableInfo { rows: 512, dim: 16 }; 4];
+    let cluster = ThreadedCluster::new(tables, 4, 9);
+    let n_nodes = 4;
+    let steps = 64;
+    let n = count_steady_state_allocs(&cluster, steps);
+    // Caller-side budget: per step, at most n_nodes gather sends plus
+    // n_nodes apply sends; std mpsc allocates queue blocks amortized
+    // (< 1 per send), every other buffer is pooled. 4·n_nodes + 8 per
+    // step is a loose ceiling — the point is it does NOT scale with
+    // batch size or unique-row count.
+    let budget = (steps * (4 * n_nodes + 8)) as u64;
+    assert!(n <= budget,
+            "threaded caller-side allocations {n} exceed budget {budget} \
+             over {steps} steps");
+}
